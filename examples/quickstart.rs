@@ -1,0 +1,55 @@
+//! Quickstart: compose a trainer config, materialize it, and train the
+//! tiny model for a few steps on the CPU PJRT runtime.
+//!
+//! Run: `cargo run --release --example quickstart` (after `make artifacts`)
+
+use std::sync::Arc;
+
+use axlearn::composer::materialize;
+use axlearn::config::mesh_rules::paper_appendix_a_rules;
+use axlearn::config::registry::trainer_for_preset;
+use axlearn::runtime::{Manifest, RuntimeClient};
+use axlearn::trainer::{train, SyntheticCorpus, TrainerOptions};
+
+fn main() -> anyhow::Result<()> {
+    // 1. Compose a config (hierarchical, strictly encapsulated — §4.1).
+    let trainer_cfg = trainer_for_preset("tiny");
+    println!("-- golden serialization (first 12 lines) --");
+    for line in axlearn::config::to_golden_lines(&trainer_cfg).iter().take(12) {
+        println!("  {line}");
+    }
+
+    // 2. Materialize for this target (local CPU): artifact + plan.
+    let plan = materialize(&trainer_cfg, "cpu-local", 1, &paper_appendix_a_rules())?;
+    println!("\nplan: artifact={} kernel={}", plan.artifact, plan.kernel_backend);
+
+    // 3. Train on the AOT artifact — Python is NOT running.
+    let client = Arc::new(RuntimeClient::cpu()?);
+    let manifest = Manifest::load(&axlearn::artifacts_dir())?;
+    let art = manifest.get(&format!("{}_train_step", plan.artifact))?;
+    let mut corpus = SyntheticCorpus::new(
+        axlearn::trainer::input::CorpusKind::Markov,
+        art.hyper["vocab_size"] as usize,
+        art.batch,
+        art.seq,
+        0,
+    );
+    let out = train(
+        client,
+        &manifest,
+        &mut corpus,
+        &TrainerOptions {
+            artifact: plan.artifact.clone(),
+            max_steps: 30,
+            ..Default::default()
+        },
+    )?;
+    println!(
+        "\ntrained 30 steps: loss {:.3} -> {:.3} | {:.0} tok/s",
+        out.first_loss,
+        out.final_loss,
+        out.metrics.tokens_per_second()
+    );
+    println!("loss: {}", out.metrics.sparkline(40));
+    Ok(())
+}

@@ -1,0 +1,220 @@
+"""AOT lowering driver: jax functions -> HLO text artifacts + manifest.
+
+This is the single point where Python runs (``make artifacts``); afterwards
+the Rust binary is self-contained.  Interchange is HLO **text** — the
+image's xla_extension 0.5.1 rejects jax>=0.5 serialized protos (64-bit
+instruction ids), while the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Artifacts and a plain-text ``manifest.txt`` (parsed by
+``rust/src/runtime/manifest.rs``) land in ``artifacts/``:
+
+  artifact <name>
+  file <name>.hlo.txt
+  kind init|train_step|eval_loss|prefill|decode|insert
+  preset <preset>  moe <0|1>  rope <0|1>
+  hyper <k>=<v> ...
+  num_params <n>            # leading state leaves that are model params
+  input <name> <dtype> <d0,d1,...>
+  output <name> <dtype> <d0,d1,...>
+  end
+
+Usage:  python -m compile.aot --out-dir ../artifacts [--set default|all|tiny]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import ModelBundle
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _shape_str(s) -> str:
+    return ",".join(str(d) for d in s) if len(s) else "scalar"
+
+
+class ManifestWriter:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.entries: list[str] = []
+        os.makedirs(out_dir, exist_ok=True)
+
+    def lower(self, name: str, kind: str, fn, arg_specs, *, bundle: ModelBundle | None = None,
+              input_names=None, output_specs=None, extra=None):
+        """Lower ``fn`` at ``arg_specs`` (ShapeDtypeStructs), write HLO text,
+        record a manifest entry."""
+        lowered = jax.jit(fn).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        lines = [f"artifact {name}", f"file {fname}", f"kind {kind}"]
+        if bundle is not None:
+            lines.append(f"preset {bundle.preset}")
+            hyper = " ".join(f"{k}={v}" for k, v in bundle.hp.items())
+            lines.append(f"hyper {hyper}")
+            lines.append(f"num_params {len(bundle.param_specs)}")
+        if extra:
+            for k, v in extra.items():
+                lines.append(f"{k} {v}")
+        names = input_names or [f"arg{i}" for i in range(len(arg_specs))]
+        for n, spec in zip(names, arg_specs):
+            lines.append(f"input {n} {spec.dtype} {_shape_str(spec.shape)}")
+        # output specs via eval_shape
+        out = jax.eval_shape(fn, *arg_specs)
+        flat, _ = jax.tree_util.tree_flatten(out)
+        onames = output_specs or [f"out{i}" for i in range(len(flat))]
+        for n, spec in zip(onames, flat):
+            lines.append(f"output {n} {spec.dtype} {_shape_str(spec.shape)}")
+        lines.append("end")
+        self.entries.append("\n".join(lines))
+        print(f"  wrote {fname} ({len(text)/1e6:.2f} MB, {len(arg_specs)} inputs, {len(flat)} outputs)")
+
+    def finish(self):
+        with open(os.path.join(self.out_dir, "manifest.txt"), "w") as f:
+            f.write("\n\n".join(self.entries) + "\n")
+        print(f"  wrote manifest.txt ({len(self.entries)} artifacts)")
+
+
+def state_specs(bundle: ModelBundle):
+    """ShapeDtypeStructs for the flat train state."""
+    out = jax.eval_shape(bundle.init, jax.ShapeDtypeStruct((), jnp.int32))
+    return list(out)
+
+
+def lower_training(w: ManifestWriter, preset: str, *, moe=False, rope=True,
+                   batch: int, seq: int, with_eval=True, kernel="ref", tag=None):
+    # kernel="ref" is the CPU-backend dispatch (paper §4.2: FlashAttention
+    # implementations are selected per backend — cuDNN/NKI/Pallas; on the
+    # CPU PJRT substrate the XLA-fused reference path IS the fast kernel,
+    # while interpret-mode Pallas emulates TPU semantics ~20x slower; see
+    # EXPERIMENTS.md §Perf L2).  The Pallas path stays validated by
+    # python/tests AND by the `tiny_flash_eval_loss` artifact below.
+    tag = tag or (preset + ("_moe" if moe else "") + ("" if rope else "_nope"))
+    bundle = ModelBundle(preset, moe=moe, rope=rope, kernel=kernel)
+    print(f"[{tag}] params={bundle.param_count():,}")
+    st = state_specs(bundle)
+    state_names = (
+        [f"param/{n}" for n, _, _ in bundle.param_specs]
+        + [f"opt_m/{n}" for n, _, _ in bundle.param_specs]
+        + [f"opt_v/{n}" for n, _, _ in bundle.param_specs]
+        + ["step"]
+    )
+    extra = {"batch": batch, "seq": seq, "moe": int(moe), "rope": int(rope)}
+    w.lower(f"{tag}_init", "init", bundle.init, [jax.ShapeDtypeStruct((), jnp.int32)],
+            bundle=bundle, input_names=["seed"], output_specs=state_names, extra=extra)
+    tok = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    w.lower(
+        f"{tag}_train_step", "train_step", bundle.train_step, st + [tok, tok],
+        bundle=bundle, input_names=state_names + ["tokens", "targets"],
+        output_specs=state_names + ["loss"], extra=extra,
+    )
+    if with_eval:
+        n = len(bundle.param_specs)
+        w.lower(
+            f"{tag}_eval_loss", "eval_loss", bundle.eval_loss, st[:n] + [tok, tok],
+            bundle=bundle, input_names=state_names[:n] + ["tokens", "targets"],
+            output_specs=["loss"], extra=extra,
+        )
+    return bundle
+
+
+def lower_serving(w: ManifestWriter, preset="serve", *, prefill_batches=(1,),
+                  prefill_lens=(128, 256), decode_batches=(1, 8)):
+    bundle = ModelBundle(preset, kernel="ref")  # CPU-backend dispatch (see above)
+    hp = bundle.hp
+    L, H, dh, maxS = hp["num_layers"], hp["num_heads"], hp["head_dim"], hp["max_seq_len"]
+    n = len(bundle.param_specs)
+    pspecs = state_specs(bundle)[:n]
+    pnames = [f"param/{nm}" for nm, _, _ in bundle.param_specs]
+    # init (serving only needs params; reuse train init, Rust slices params)
+    w.lower(f"{preset}_init", "init", bundle.init, [jax.ShapeDtypeStruct((), jnp.int32)],
+            bundle=bundle, input_names=["seed"],
+            output_specs=pnames + [f"_opt{i}" for i in range(2 * n)] + ["step"])
+    for b in prefill_batches:
+        for s in prefill_lens:
+            tok = jax.ShapeDtypeStruct((b, s), jnp.int32)
+            plen = jax.ShapeDtypeStruct((b,), jnp.int32)
+            w.lower(
+                f"{preset}_prefill_b{b}_s{s}", "prefill", bundle.prefill, pspecs + [tok, plen],
+                bundle=bundle, input_names=pnames + ["tokens", "prompt_len"],
+                output_specs=["next_token", "k_cache", "v_cache"],
+                extra={"batch": b, "seq": s},
+            )
+    for b in decode_batches:
+        kc = jax.ShapeDtypeStruct((L, b, maxS, H, dh), jnp.float32)
+        pos = jax.ShapeDtypeStruct((b,), jnp.int32)
+        tokb = jax.ShapeDtypeStruct((b,), jnp.int32)
+        w.lower(
+            f"{preset}_decode_b{b}", "decode", bundle.decode, pspecs + [kc, kc, pos, tokb],
+            bundle=bundle, input_names=pnames + ["k_cache", "v_cache", "pos", "token"],
+            output_specs=["next_token", "k_cache", "v_cache"],
+            extra={"batch": b, "seq": maxS},
+        )
+    # continuous-batching admission op
+    full = jax.ShapeDtypeStruct((L, max(decode_batches), maxS, H, dh), jnp.float32)
+    one = jax.ShapeDtypeStruct((L, 1, maxS, H, dh), jnp.float32)
+    slot = jax.ShapeDtypeStruct((), jnp.int32)
+    w.lower(
+        f"{preset}_insert", "insert", ModelBundle.insert_slot, [full, full, one, one, slot],
+        bundle=bundle, input_names=["full_k", "full_v", "one_k", "one_v", "slot"],
+        output_specs=["full_k", "full_v"],
+        extra={"batch": max(decode_batches), "seq": maxS},
+    )
+    return bundle
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--set", default="default", choices=["default", "all", "tiny"])
+    args = ap.parse_args()
+    w = ManifestWriter(args.out_dir)
+
+    # Always: tiny variants (tests + quickstart run against these).
+    lower_training(w, "tiny", batch=2, seq=32)
+    lower_training(w, "tiny", moe=True, batch=2, seq=32, with_eval=False)
+    # Pallas-kernel validation artifact: same model, flash attention in the
+    # HLO.  rust/tests/runtime_smoke.rs checks its eval loss is identical
+    # to the ref-kernel artifact's through the PJRT path.
+    bundle_flash = ModelBundle("tiny", kernel="flash")
+    n = len(bundle_flash.param_specs)
+    st = state_specs(bundle_flash)
+    names = [f"param/{nm}" for nm, _, _ in bundle_flash.param_specs]
+    tok = jax.ShapeDtypeStruct((2, 32), jnp.int32)
+    w.lower(
+        "tiny_flash_eval_loss", "eval_loss", bundle_flash.eval_loss, st[:n] + [tok, tok],
+        bundle=bundle_flash, input_names=names + ["tokens", "targets"],
+        output_specs=["loss"], extra={"batch": 2, "seq": 32},
+    )
+
+    if args.set in ("default", "all"):
+        # e2e loss-curve model (~9M params) and its MoE twin
+        lower_training(w, "small", batch=4, seq=128)
+        lower_training(w, "small", moe=True, batch=4, seq=128, with_eval=False)
+        # serving graphs
+        lower_serving(w)
+        # ~100M smoke model
+        lower_training(w, "base100m", batch=4, seq=256, with_eval=False)
+    if args.set == "all":
+        lower_training(w, "small", rope=False, batch=4, seq=128, with_eval=False)
+
+    w.finish()
+
+
+if __name__ == "__main__":
+    main()

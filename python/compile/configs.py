@@ -1,0 +1,185 @@
+"""Hierarchical, strictly-encapsulated configs (python mirror of AXLearn §4.1).
+
+The Rust coordinator owns the *production* config system
+(``rust/src/config``); this module is its build-time mirror so that the
+Layer-2 model definition follows the same composition discipline the paper
+describes: every layer has a ``Config``, child configs are encapsulated,
+partially-specified configs propagate parent dims at instantiation time, and
+arbitrary tree rewrites (``replace_config``) implement the paper's 10-line
+MoE/RoPE swaps.
+"""
+
+from __future__ import annotations
+
+import copy
+from typing import Any, Callable, Optional
+
+
+class Config:
+    """A node in the config tree.
+
+    A ``Config`` pairs the class it instantiates (``klass``) with a dict of
+    fields.  Field values may themselves be ``Config`` objects, forming the
+    hierarchical tree of AXLearn §4.1.  Fields may be left ``None``
+    (partially specified) and filled in by the parent at instantiation time
+    — e.g. ``TransformerLayer`` propagates ``input_dim`` into its children.
+    """
+
+    def __init__(self, klass: type, **fields: Any):
+        self.klass = klass
+        self._fields: dict[str, Any] = dict(fields)
+
+    # -- field access ------------------------------------------------------
+    def __getattr__(self, name: str) -> Any:
+        if name.startswith("_") or name == "klass":
+            raise AttributeError(name)
+        try:
+            return self._fields[name]
+        except KeyError:
+            raise AttributeError(f"{self.klass.__name__}.Config has no field {name!r}")
+
+    def __setattr__(self, name: str, value: Any) -> None:
+        if name in ("klass", "_fields"):
+            object.__setattr__(self, name, value)
+        else:
+            self._fields[name] = value
+
+    def set(self, **kwargs: Any) -> "Config":
+        """Set fields, returning self (enables the fluent style of §4.1)."""
+        for k, v in kwargs.items():
+            if k not in self._fields:
+                raise KeyError(f"{self.klass.__name__}.Config has no field {k!r}")
+            self._fields[k] = v
+        return self
+
+    def fields(self) -> dict[str, Any]:
+        return dict(self._fields)
+
+    def clone(self) -> "Config":
+        return copy.deepcopy(self)
+
+    # -- instantiation -----------------------------------------------------
+    def instantiate(self) -> Any:
+        """Build the layer.  Validation of required fields happens in the
+        layer's ``__init__`` so errors carry layer context."""
+        return self.klass(self.clone())
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        inner = ", ".join(f"{k}={v!r}" for k, v in self._fields.items())
+        return f"{self.klass.__name__}.Config({inner})"
+
+
+def config_for_function(fn: Callable, **defaults: Any) -> Config:
+    """AXLearn's ``config_for_function``: wrap an arbitrary callable into a
+    config whose instantiation returns ``functools.partial``-like closure."""
+
+    class _FnLayer:
+        def __init__(self, cfg: Config):
+            self._fn = fn
+            self._kwargs = {k: v for k, v in cfg.fields().items() if v is not None}
+
+        def __call__(self, *args, **kw):
+            merged = dict(self._kwargs)
+            merged.update(kw)
+            return self._fn(*args, **merged)
+
+    _FnLayer.__name__ = f"FnLayer[{fn.__name__}]"
+    return Config(_FnLayer, **defaults)
+
+
+def replace_config(
+    cfg: Config,
+    target: type,
+    new_cfg_factory: Callable[[Config], Config],
+) -> Config:
+    """Recursively replace any sub-config whose klass is ``target``.
+
+    This is the python twin of the paper's §4.1 'Config traversal' snippet —
+    the mechanism behind the O(1) LoC-complexity claim.  ``new_cfg_factory``
+    receives the old config so the replacement can inherit propagated dims.
+    """
+    if isinstance(cfg, Config) and issubclass(cfg.klass, target):
+        return new_cfg_factory(cfg)
+    if isinstance(cfg, Config):
+        for name, value in cfg._fields.items():
+            if isinstance(value, Config):
+                cfg._fields[name] = replace_config(value, target, new_cfg_factory)
+            elif isinstance(value, (list, tuple)):
+                cfg._fields[name] = type(value)(
+                    replace_config(v, target, new_cfg_factory) if isinstance(v, Config) else v
+                    for v in value
+                )
+    return cfg
+
+
+def visit_configs(cfg: Config, fn: Callable[[Config], None]) -> None:
+    """Pre-order visit over the config tree."""
+    if not isinstance(cfg, Config):
+        return
+    fn(cfg)
+    for value in cfg._fields.values():
+        if isinstance(value, Config):
+            visit_configs(value, fn)
+        elif isinstance(value, (list, tuple)):
+            for v in value:
+                if isinstance(v, Config):
+                    visit_configs(v, fn)
+
+
+def config_to_lines(cfg: Config, prefix: str = "") -> list[str]:
+    """Serialize a config tree to the human-readable 'golden' format the
+    paper commits alongside code changes (§7.3).  Matches the Rust-side
+    format in ``rust/src/config/golden.rs``."""
+    lines = [f"{prefix or 'root'}: {cfg.klass.__name__}"]
+    for name in sorted(cfg._fields):
+        value = cfg._fields[name]
+        path = f"{prefix}.{name}" if prefix else name
+        if isinstance(value, Config):
+            lines.extend(config_to_lines(value, path))
+        elif isinstance(value, (list, tuple)) and any(isinstance(v, Config) for v in value):
+            for i, v in enumerate(value):
+                lines.extend(config_to_lines(v, f"{path}[{i}]"))
+        else:
+            lines.append(f"{path} = {value!r}")
+    return lines
+
+
+# ---------------------------------------------------------------------------
+# Model presets.  Mirrored by rust/src/composer presets; the names here are
+# what `aot.py --preset` and the artifact manifest use.
+# ---------------------------------------------------------------------------
+
+PRESETS: dict[str, dict[str, Any]] = {
+    # Unit-test scale: compiles in seconds, exercises every code path.
+    "tiny": dict(
+        vocab_size=256, model_dim=64, num_layers=2, num_heads=4, head_dim=16,
+        ffn_dim=192, max_seq_len=64, num_experts=4, moe_top_k=2,
+    ),
+    # E2E loss-curve scale (~8.9M params): hundreds of steps on 1 CPU core.
+    "small": dict(
+        vocab_size=2048, model_dim=256, num_layers=4, num_heads=4, head_dim=64,
+        ffn_dim=704, max_seq_len=256, num_experts=4, moe_top_k=2,
+    ),
+    # ~106M params: the mandated ~100M e2e smoke (a few steps on CPU).
+    "base100m": dict(
+        vocab_size=8192, model_dim=768, num_layers=12, num_heads=12, head_dim=64,
+        ffn_dim=2048, max_seq_len=512, num_experts=8, moe_top_k=2,
+    ),
+    # Serving scale: small model with the KV budget sized to the Table-4/
+    # Figure-5 workload (max input 256 + output 128; §Perf iteration 2 —
+    # the dense KV slab round-trips through host literals every decode
+    # step, so its size is the decode hot-path cost).
+    "serve": dict(
+        vocab_size=2048, model_dim=256, num_layers=4, num_heads=4, head_dim=64,
+        ffn_dim=704, max_seq_len=384, num_experts=4, moe_top_k=2,
+    ),
+}
+
+
+def param_count(p: dict[str, Any]) -> int:
+    """Approximate dense parameter count for a preset dict."""
+    d, L, f, v = p["model_dim"], p["num_layers"], p["ffn_dim"], p["vocab_size"]
+    attn = 4 * d * p["num_heads"] * p["head_dim"]
+    ffn = 3 * d * f  # SwiGLU: gate, up, down
+    norms = 2 * d
+    return v * d * 2 + L * (attn + ffn + norms) + d

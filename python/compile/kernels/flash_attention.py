@@ -1,0 +1,343 @@
+"""FlashAttention as a Pallas kernel (TPU-shaped, interpret-mode on CPU).
+
+This is the Layer-1 compute hot-spot of the stack.  The paper (AXLearn §4.2)
+dispatches FlashAttention implementations per backend — cuDNN on GPU, NKI on
+Trainium, SplashAttention/Pallas on TPU.  We implement the TPU-shaped Pallas
+variant:
+
+* CUDA threadblock tiling       -> Pallas grid over (batch*heads, q-blocks)
+* shared-memory staging         -> VMEM-sized blocks selected via BlockSpec
+* tensor-core WMMA              -> MXU-shaped ``jnp.dot`` on (block_q, d) tiles
+* online softmax (FA-2)         -> f32 running max / denominator carried in
+                                   the fori_loop over k-blocks
+
+The backward pass is the FlashAttention-2 backward: the forward saves only
+the per-row log-sum-exp (LSE); the backward recomputes attention
+probabilities block-by-block and accumulates dq (one kernel, grid over
+q-blocks) and dk/dv (a second kernel, grid over k-blocks).
+
+``interpret=True`` is mandatory here: the CPU PJRT plugin cannot execute the
+Mosaic custom-calls produced by real TPU lowering.  Correctness is checked
+against ``ref.py`` by ``python/tests/test_flash_attention.py``; TPU
+VMEM/MXU-utilization estimates live in ``rust/src/perfmodel/kernels.rs``.
+"""
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+# Default block sizes.  (128, 128) tiles the MXU (128x128 systolic array)
+# exactly; a (block_q=128, d<=128) q-tile plus (block_k=128, d) k/v-tiles and
+# the f32 accumulator fit comfortably in the ~16 MiB VMEM budget per core.
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+
+
+def _pick_block(n: int, preferred: int) -> int:
+    """Largest divisor of ``n`` that is <= preferred (kernels require exact
+    tiling; the wrapper pads first, so ``n`` is already a multiple of 8
+    whenever it exceeds 8)."""
+    b = min(preferred, n)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+def _fwd_kernel(
+    q_ref, k_ref, v_ref, o_ref, lse_ref, *, scale, causal, block_k, kv_len_actual, q_len_actual, q_offset
+):
+    """Forward kernel for one (batch*head, q-block) grid cell.
+
+    Refs (VMEM blocks):
+      q_ref:   [1, block_q, d]
+      k_ref:   [1, kv_len, d]   (streamed block_k at a time via pl.ds)
+      v_ref:   [1, kv_len, d]
+      o_ref:   [1, block_q, d]
+      lse_ref: [1, block_q]
+    """
+    block_q = q_ref.shape[1]
+    d = q_ref.shape[2]
+    kv_len = k_ref.shape[1]
+    qi = pl.program_id(1)
+
+    q = q_ref[0].astype(jnp.float32) * scale  # [block_q, d]
+    q_pos = qi * block_q + jax.lax.iota(jnp.int32, block_q) + q_offset
+    valid_q = q_pos < (q_len_actual + q_offset)
+
+    num_kb = kv_len // block_k
+
+    def body(j, carry):
+        acc, m_i, l_i = carry
+        k_blk = k_ref[0, pl.ds(j * block_k, block_k), :].astype(jnp.float32)
+        v_blk = v_ref[0, pl.ds(j * block_k, block_k), :].astype(jnp.float32)
+        s = jnp.dot(q, k_blk.T, preferred_element_type=jnp.float32)  # [bq, bk]
+        k_pos = j * block_k + jax.lax.iota(jnp.int32, block_k)
+        mask = k_pos[None, :] < kv_len_actual
+        if causal:
+            mask = mask & (k_pos[None, :] <= q_pos[:, None])
+        # Padded q rows attend to key 0 only: keeps the softmax finite; the
+        # wrapper slices these rows away.
+        mask = jnp.where(valid_q[:, None], mask, (k_pos == 0)[None, :])
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m_i, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_i - m_new)
+        l_new = l_i * alpha + p.sum(axis=-1)
+        acc = acc * alpha[:, None] + jnp.dot(p, v_blk, preferred_element_type=jnp.float32)
+        return acc, m_new, l_new
+
+    acc0 = jnp.zeros((block_q, d), jnp.float32)
+    m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc, m_i, l_i = jax.lax.fori_loop(0, num_kb, body, (acc0, m0, l0))
+    l_safe = jnp.maximum(l_i, 1e-30)
+    o_ref[0] = (acc / l_safe[:, None]).astype(o_ref.dtype)
+    lse_ref[0] = m_i + jnp.log(l_safe)
+
+
+def _dq_kernel(
+    q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref, *, scale, causal, block_k, kv_len_actual, q_offset
+):
+    """Backward dq for one (batch*head, q-block) grid cell (FA-2 eq. 4)."""
+    block_q = q_ref.shape[1]
+    d = q_ref.shape[2]
+    kv_len = k_ref.shape[1]
+    qi = pl.program_id(1)
+
+    q = q_ref[0].astype(jnp.float32)
+    do = do_ref[0].astype(jnp.float32)
+    lse = lse_ref[0]
+    delta = delta_ref[0]
+    q_pos = qi * block_q + jax.lax.iota(jnp.int32, block_q) + q_offset
+
+    num_kb = kv_len // block_k
+
+    def body(j, dq):
+        k_blk = k_ref[0, pl.ds(j * block_k, block_k), :].astype(jnp.float32)
+        v_blk = v_ref[0, pl.ds(j * block_k, block_k), :].astype(jnp.float32)
+        s = jnp.dot(q, k_blk.T, preferred_element_type=jnp.float32) * scale
+        k_pos = j * block_k + jax.lax.iota(jnp.int32, block_k)
+        mask = k_pos[None, :] < kv_len_actual
+        if causal:
+            mask = mask & (k_pos[None, :] <= q_pos[:, None])
+        # exp(NEG_INF - lse) underflows to 0 for masked entries; guard the
+        # wholly-masked (padded) rows where lse itself is degenerate.
+        p = jnp.where(mask, jnp.exp(s - lse[:, None]), 0.0)
+        dp = jnp.dot(do, v_blk.T, preferred_element_type=jnp.float32)
+        ds = p * (dp - delta[:, None]) * scale
+        return dq + jnp.dot(ds, k_blk, preferred_element_type=jnp.float32)
+
+    dq = jax.lax.fori_loop(0, num_kb, body, jnp.zeros((block_q, d), jnp.float32))
+    dq_ref[0] = dq.astype(dq_ref.dtype)
+
+
+def _dkv_kernel(
+    q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dk_ref, dv_ref, *, scale, causal, block_q, kv_len_actual, q_offset
+):
+    """Backward dk/dv for one (batch*head, k-block) grid cell."""
+    block_k = k_ref.shape[1]
+    d = k_ref.shape[2]
+    q_len = q_ref.shape[1]
+    ki = pl.program_id(1)
+
+    k_blk = k_ref[0].astype(jnp.float32)
+    v_blk = v_ref[0].astype(jnp.float32)
+    k_pos = ki * block_k + jax.lax.iota(jnp.int32, block_k)
+    k_valid = k_pos < kv_len_actual
+
+    num_qb = q_len // block_q
+
+    def body(i, carry):
+        dk, dv = carry
+        q = q_ref[0, pl.ds(i * block_q, block_q), :].astype(jnp.float32)
+        do = do_ref[0, pl.ds(i * block_q, block_q), :].astype(jnp.float32)
+        lse = lse_ref[0, pl.ds(i * block_q, block_q)]
+        delta = delta_ref[0, pl.ds(i * block_q, block_q)]
+        q_pos = i * block_q + jax.lax.iota(jnp.int32, block_q) + q_offset
+        s = jnp.dot(q, k_blk.T, preferred_element_type=jnp.float32) * scale
+        mask = k_valid[None, :]
+        if causal:
+            mask = mask & (k_pos[None, :] <= q_pos[:, None])
+        p = jnp.where(mask, jnp.exp(s - lse[:, None]), 0.0)
+        dv = dv + jnp.dot(p.T, do, preferred_element_type=jnp.float32)
+        dp = jnp.dot(do, v_blk.T, preferred_element_type=jnp.float32)
+        ds = p * (dp - delta[:, None]) * scale
+        dk = dk + jnp.dot(ds.T, q, preferred_element_type=jnp.float32)
+        return dk, dv
+
+    zeros = jnp.zeros((block_k, d), jnp.float32)
+    dk, dv = jax.lax.fori_loop(0, num_qb, body, (zeros, zeros))
+    dk_ref[0] = dk.astype(dk_ref.dtype)
+    dv_ref[0] = dv.astype(dv_ref.dtype)
+
+
+def _pad_to(x, axis, mult):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(
+    jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6)
+)
+def flash_attention(
+    q,
+    k,
+    v,
+    causal: bool = True,
+    scale: float | None = None,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+):
+    """FlashAttention over [batch, heads, seq, head_dim] tensors.
+
+    Matches :func:`ref.attention_ref` numerically (f32 accumulation) while
+    streaming K/V through VMEM-sized blocks.  Differentiable via the FA-2
+    backward kernels registered as its custom VJP.
+    """
+    out, _ = _flash_fwd_impl(q, k, v, causal, scale, block_q, block_k)
+    return out
+
+
+def _flash_fwd_impl(q, k, v, causal, scale, block_q, block_k):
+    b, h, q_len, d = q.shape
+    kv_len = k.shape[2]
+    if scale is None:
+        scale = 1.0 / math.sqrt(d)
+    q_offset = kv_len - q_len  # end-aligned causal masking
+
+    qf = q.reshape(b * h, q_len, d)
+    kf = k.reshape(b * h, kv_len, d)
+    vf = v.reshape(b * h, kv_len, d)
+
+    # Pad sequence dims to a multiple of 8 so block sizes can tile exactly.
+    qf = _pad_to(qf, 1, 8)
+    kf = _pad_to(kf, 1, 8)
+    vf = _pad_to(vf, 1, 8)
+    pq_len, pkv_len = qf.shape[1], kf.shape[1]
+    bq = _pick_block(pq_len, block_q)
+    bk = _pick_block(pkv_len, block_k)
+    num_q = pq_len // bq
+
+    kernel = functools.partial(
+        _fwd_kernel,
+        scale=scale,
+        causal=causal,
+        block_k=bk,
+        kv_len_actual=kv_len,
+        q_len_actual=q_len,
+        q_offset=q_offset,
+    )
+    out, lse = pl.pallas_call(
+        kernel,
+        grid=(b * h, num_q),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda bh, i: (bh, i, 0)),
+            pl.BlockSpec((1, pkv_len, d), lambda bh, i: (bh, 0, 0)),
+            pl.BlockSpec((1, pkv_len, d), lambda bh, i: (bh, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bq, d), lambda bh, i: (bh, i, 0)),
+            pl.BlockSpec((1, bq), lambda bh, i: (bh, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b * h, pq_len, d), q.dtype),
+            jax.ShapeDtypeStruct((b * h, pq_len), jnp.float32),
+        ],
+        interpret=True,
+    )(qf, kf, vf)
+    out = out[:, :q_len, :].reshape(b, h, q_len, d)
+    return out, lse
+
+
+def _flash_fwd_vjp(q, k, v, causal, scale, block_q, block_k):
+    out, lse = _flash_fwd_impl(q, k, v, causal, scale, block_q, block_k)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd_vjp(causal, scale, block_q, block_k, res, dout):
+    q, k, v, out, lse = res
+    b, h, q_len, d = q.shape
+    kv_len = k.shape[2]
+    if scale is None:
+        scale = 1.0 / math.sqrt(d)
+    q_offset = kv_len - q_len
+
+    # delta_i = rowsum(dO_i * O_i)   (FA-2 Alg. 2 line 4; elementwise, cheap)
+    delta = jnp.sum(dout.astype(jnp.float32) * out.astype(jnp.float32), axis=-1)
+
+    qf = _pad_to(q.reshape(b * h, q_len, d), 1, 8)
+    kf = _pad_to(k.reshape(b * h, kv_len, d), 1, 8)
+    vf = _pad_to(v.reshape(b * h, kv_len, d), 1, 8)
+    dof = _pad_to(dout.reshape(b * h, q_len, d), 1, 8)
+    deltaf = _pad_to(delta.reshape(b * h, q_len), 1, 8)
+    # lse is already padded to pq_len by the forward impl.
+    pq_len, pkv_len = qf.shape[1], kf.shape[1]
+    bq = _pick_block(pq_len, block_q)
+    bk = _pick_block(pkv_len, block_k)
+
+    dq = pl.pallas_call(
+        functools.partial(
+            _dq_kernel, scale=scale, causal=causal, block_k=bk, kv_len_actual=kv_len, q_offset=q_offset
+        ),
+        grid=(b * h, pq_len // bq),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda bh, i: (bh, i, 0)),
+            pl.BlockSpec((1, pkv_len, d), lambda bh, i: (bh, 0, 0)),
+            pl.BlockSpec((1, pkv_len, d), lambda bh, i: (bh, 0, 0)),
+            pl.BlockSpec((1, bq, d), lambda bh, i: (bh, i, 0)),
+            pl.BlockSpec((1, bq), lambda bh, i: (bh, i)),
+            pl.BlockSpec((1, bq), lambda bh, i: (bh, i)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda bh, i: (bh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, pq_len, d), q.dtype),
+        interpret=True,
+    )(qf, kf, vf, dof, lse, deltaf)
+
+    dk, dv = pl.pallas_call(
+        functools.partial(
+            _dkv_kernel, scale=scale, causal=causal, block_q=bq, kv_len_actual=kv_len, q_offset=q_offset
+        ),
+        grid=(b * h, pkv_len // bk),
+        in_specs=[
+            pl.BlockSpec((1, pq_len, d), lambda bh, j: (bh, 0, 0)),
+            pl.BlockSpec((1, bk, d), lambda bh, j: (bh, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda bh, j: (bh, j, 0)),
+            pl.BlockSpec((1, pq_len, d), lambda bh, j: (bh, 0, 0)),
+            pl.BlockSpec((1, pq_len), lambda bh, j: (bh, 0)),
+            pl.BlockSpec((1, pq_len), lambda bh, j: (bh, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bk, d), lambda bh, j: (bh, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda bh, j: (bh, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b * h, pkv_len, d), k.dtype),
+            jax.ShapeDtypeStruct((b * h, pkv_len, d), v.dtype),
+        ],
+        interpret=True,
+    )(qf, kf, vf, dof, lse, deltaf)
+
+    dq = dq[:, :q_len, :].reshape(b, h, q_len, d)
+    dk = dk[:, :kv_len, :].reshape(b, h, kv_len, d)
+    dv = dv[:, :kv_len, :].reshape(b, h, kv_len, d)
+    return dq, dk, dv
+
+
+flash_attention.defvjp(_flash_fwd_vjp, _flash_bwd_vjp)
+
+
+def flash_attention_with_lse(q, k, v, *, causal=True, scale=None):
+    """Forward-only variant that also returns the LSE (for tests)."""
+    out, lse = _flash_fwd_impl(q, k, v, causal, scale, DEFAULT_BLOCK_Q, DEFAULT_BLOCK_K)
+    b, h, q_len, _ = q.shape
+    return out, lse[:, :q_len].reshape(b, h, q_len)

@@ -1,0 +1,98 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the ground truth that ``pytest python/tests`` checks the Pallas
+kernels against.  They are deliberately written in the most direct way
+possible (no tiling, no online softmax) so that a bug in the kernel cannot
+be mirrored here.
+"""
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+) -> jnp.ndarray:
+    """Reference multi-head scaled dot-product attention.
+
+    Args:
+      q: [batch, heads, q_len, head_dim]
+      k: [batch, heads, kv_len, head_dim]
+      v: [batch, heads, kv_len, head_dim]
+      causal: apply a causal mask (q position i attends to kv positions <= i,
+        aligned at the end: query i corresponds to kv position
+        ``kv_len - q_len + i``).
+      scale: softmax scale; defaults to 1/sqrt(head_dim).
+
+    Returns:
+      [batch, heads, q_len, head_dim]
+    """
+    *_, q_len, head_dim = q.shape
+    kv_len = k.shape[-2]
+    if scale is None:
+        scale = 1.0 / (head_dim**0.5)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    if causal:
+        q_pos = jnp.arange(q_len)[:, None] + (kv_len - q_len)
+        k_pos = jnp.arange(kv_len)[None, :]
+        mask = k_pos <= q_pos
+        logits = jnp.where(mask[None, None], logits, NEG_INF)
+    probs = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs.astype(v.dtype), v)
+
+
+def attention_ref_lse(q, k, v, *, causal=True, scale=None):
+    """Like :func:`attention_ref` but also returns log-sum-exp per query.
+
+    Used to validate the residuals the flash kernel saves for its backward
+    pass.  Returns ``(out, lse)`` with ``lse: [batch, heads, q_len]``.
+    """
+    *_, q_len, head_dim = q.shape
+    kv_len = k.shape[-2]
+    if scale is None:
+        scale = 1.0 / (head_dim**0.5)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    if causal:
+        q_pos = jnp.arange(q_len)[:, None] + (kv_len - q_len)
+        k_pos = jnp.arange(kv_len)[None, :]
+        mask = k_pos <= q_pos
+        logits = jnp.where(mask[None, None], logits, NEG_INF)
+    m = logits.max(axis=-1, keepdims=True)
+    unnorm = jnp.exp(logits - m)
+    denom = unnorm.sum(axis=-1, keepdims=True)
+    lse = (m + jnp.log(denom)).squeeze(-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", (unnorm / denom).astype(v.dtype), v)
+    return out, lse
+
+
+def rmsnorm_ref(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    """Reference RMSNorm over the trailing dimension."""
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * (1.0 / jnp.sqrt(var + eps))).astype(x.dtype) * weight
+
+
+def rope_ref(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10000.0) -> jnp.ndarray:
+    """Reference rotary position embedding.
+
+    Args:
+      x: [..., seq, head_dim] with head_dim even.
+      positions: [seq] integer positions.
+    """
+    head_dim = x.shape[-1]
+    assert head_dim % 2 == 0
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    angles = positions.astype(jnp.float32)[:, None] * freqs[None, :]  # [seq, half]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    rot1 = x1 * cos - x2 * sin
+    rot2 = x2 * cos + x1 * sin
+    return jnp.concatenate([rot1, rot2], axis=-1).astype(x.dtype)

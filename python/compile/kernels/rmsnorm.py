@@ -1,0 +1,97 @@
+"""Fused RMSNorm as a Pallas kernel (secondary L1 kernel).
+
+§7.2 highlights that "memory bound operations such as RMSNorm and RoPE
+[are] fused without any hand-written kernels" by XLA on the AXLearn path —
+PyTorch FSDP pays extra HBM traffic for them.  This kernel exists to
+*quantify* that effect at the L1 level: one fused pass (read x, write y)
+versus the unfused reference's multiple round trips, and to exercise a
+second, memory-bound (non-MXU) kernel shape through the same
+Pallas-interpret → HLO-text → PJRT pipeline.
+
+Forward-only custom_vjp: the backward is expressed with jnp (norm backward
+is cheap and fuses well; the paper's claim concerns the forward traffic).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps):
+    """One block of rows: y = x / rms(x) * w, f32 accumulation."""
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps)
+    w = w_ref[...].astype(jnp.float32)
+    o_ref[...] = (x * inv * w).astype(o_ref.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def rmsnorm(x, weight, eps: float = 1e-6):
+    """Fused RMSNorm over the trailing dim.
+
+    x: [..., dim]; weight: [dim].  Matches ``ref.rmsnorm_ref``.
+    """
+    return _rmsnorm_fwd_impl(x, weight, eps)
+
+
+def _rmsnorm_fwd_impl(x, weight, eps):
+    orig_shape = x.shape
+    dim = orig_shape[-1]
+    rows = 1
+    for d in orig_shape[:-1]:
+        rows *= d
+    xf = x.reshape(rows, dim)
+    # block over rows; the whole feature dim stays resident (dim*4B << VMEM)
+    block_rows = min(256, rows)
+    while rows % block_rows != 0:
+        block_rows -= 1
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(rows // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, dim), lambda i: (i, 0)),
+            pl.BlockSpec((dim,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, dim), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, dim), x.dtype),
+        interpret=True,
+    )(xf, weight)
+    return out.reshape(orig_shape)
+
+
+def _rmsnorm_fwd(x, weight, eps):
+    return _rmsnorm_fwd_impl(x, weight, eps), (x, weight)
+
+
+def _rmsnorm_bwd(eps, res, g):
+    x, weight = res
+    x32 = x.astype(jnp.float32)
+    g32 = g.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps)
+    xhat = x32 * inv
+    gw = g32 * weight.astype(jnp.float32)
+    # d xhat/dx backward for rms normalization
+    dim = x.shape[-1]
+    dx = inv * (gw - xhat * jnp.mean(gw * xhat, axis=-1, keepdims=True))
+    dw = jnp.sum((g32 * xhat).reshape(-1, dim), axis=0).astype(weight.dtype)
+    return dx.astype(x.dtype), dw
+
+
+rmsnorm.defvjp(_rmsnorm_fwd, _rmsnorm_bwd)
+
+
+def hbm_traffic_model(rows: int, dim: int, elem_bytes: float, fused: bool) -> float:
+    """Bytes moved for RMSNorm over [rows, dim] — the §7.2 fusion claim.
+
+    Fused: read x once, read w, write y.  Unfused (separate square/mean/
+    rsqrt/mul/scale ops materialized): ~3 extra round trips of x-sized
+    intermediates.
+    """
+    base = rows * dim * elem_bytes * 2 + dim * elem_bytes
+    if fused:
+        return base
+    return base + 3.0 * 2.0 * rows * dim * elem_bytes

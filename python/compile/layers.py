@@ -1,0 +1,521 @@
+"""Layer-2 layer library: a modular transformer in AXLearn's style.
+
+Every layer:
+  * declares a ``Config`` via ``default_config()`` (hierarchical, child
+    configs encapsulated — §4.1 of the paper);
+  * is instantiated from its config, with the parent propagating shared
+    dims (``input_dim``) into partially-specified children;
+  * exposes pure functions ``init(key) -> params`` and
+    ``__call__(params, ...) -> out`` so the whole model stays functional
+    and can be lowered by ``jax.jit``.
+
+The FFN <-> MoE swap of Figure 1 works verbatim here: ``FeedForward`` and
+``MoE`` share the input/output interface, so ``replace_config`` (see
+``configs.py``) drops MoE into any model without touching other modules.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .configs import Config
+from .kernels.flash_attention import flash_attention
+from .kernels import ref as kref
+
+Params = dict
+
+
+class BaseLayer:
+    """Root of the layer library.  Children are added with ``_add_child``
+    which mirrors AXLearn's module-tree construction (§3)."""
+
+    @classmethod
+    def default_config(cls) -> Config:
+        raise NotImplementedError
+
+    def __init__(self, cfg: Config):
+        self.cfg = cfg
+        self._children: dict[str, "BaseLayer"] = {}
+
+    def _add_child(self, name: str, child_cfg: Config) -> "BaseLayer":
+        child = child_cfg.instantiate()
+        self._children[name] = child
+        return child
+
+    def init(self, key: jax.Array) -> Params:
+        """Initialize parameters for this layer and its children."""
+        params: Params = {}
+        for name, child in self._children.items():
+            key, sub = jax.random.split(key)
+            params[name] = child.init(sub)
+        return params
+
+
+def _topk_by_argmax(x: jnp.ndarray, k: int):
+    """Top-k over the last dim via k argmax passes (parser-safe lowering).
+
+    Equivalent to ``jax.lax.top_k`` up to tie-breaking.  x: [T, E].
+    """
+    t = x.shape[0]
+    rows = jnp.arange(t)
+    work = x
+    vals, idxs = [], []
+    for _ in range(k):
+        idx = jnp.argmax(work, axis=-1)
+        val = jnp.take_along_axis(work, idx[:, None], axis=-1)[:, 0]
+        vals.append(val)
+        idxs.append(idx)
+        work = work.at[rows, idx].set(-jnp.inf)
+    return jnp.stack(vals, axis=-1), jnp.stack(idxs, axis=-1)
+
+
+def _dense_init(key, shape, fan_in):
+    scale = 1.0 / math.sqrt(fan_in)
+    return jax.random.uniform(key, shape, jnp.float32, -scale, scale)
+
+
+class Linear(BaseLayer):
+    """Dense projection.  ``param_partition_spec`` mirrors the paper's
+    sharding-by-config: it is carried into the artifact manifest so the Rust
+    composer can reason about parameter placement."""
+
+    @classmethod
+    def default_config(cls) -> Config:
+        return Config(cls, input_dim=None, output_dim=None, use_bias=False,
+                      param_partition_spec=("fsdp", "model"))
+
+    def init(self, key: jax.Array) -> Params:
+        cfg = self.cfg
+        kw, kb = jax.random.split(key)
+        params = {"weight": _dense_init(kw, (cfg.input_dim, cfg.output_dim), cfg.input_dim)}
+        if cfg.use_bias:
+            params["bias"] = jnp.zeros((cfg.output_dim,), jnp.float32)
+        return params
+
+    def __call__(self, params: Params, x: jnp.ndarray) -> jnp.ndarray:
+        out = x @ params["weight"]
+        if self.cfg.use_bias:
+            out = out + params["bias"]
+        return out
+
+
+class Embedding(BaseLayer):
+    @classmethod
+    def default_config(cls) -> Config:
+        return Config(cls, num_embeddings=None, dim=None)
+
+    def init(self, key: jax.Array) -> Params:
+        cfg = self.cfg
+        return {"weight": jax.random.normal(key, (cfg.num_embeddings, cfg.dim), jnp.float32) * 0.02}
+
+    def __call__(self, params: Params, ids: jnp.ndarray) -> jnp.ndarray:
+        return params["weight"][ids]
+
+    def attend(self, params: Params, x: jnp.ndarray) -> jnp.ndarray:
+        """Tied-weight logits (used when the LM head is tied)."""
+        return x @ params["weight"].T
+
+
+class RMSNorm(BaseLayer):
+    @classmethod
+    def default_config(cls) -> Config:
+        return Config(cls, input_dim=None, eps=1e-6)
+
+    def init(self, key: jax.Array) -> Params:
+        return {"scale": jnp.ones((self.cfg.input_dim,), jnp.float32)}
+
+    def __call__(self, params: Params, x: jnp.ndarray) -> jnp.ndarray:
+        return kref.rmsnorm_ref(x, params["scale"], self.cfg.eps)
+
+
+# -- positional embeddings ---------------------------------------------------
+class NoPositionalEmbedding(BaseLayer):
+    """Identity rotary slot — the 'nope' variant."""
+
+    @classmethod
+    def default_config(cls) -> Config:
+        return Config(cls)
+
+    def apply_rotary(self, q: jnp.ndarray, k: jnp.ndarray, positions: jnp.ndarray):
+        return q, k
+
+
+class RotaryEmbedding(BaseLayer):
+    """RoPE, strictly encapsulated: attention only knows the
+    ``apply_rotary`` interface, never RoPE's own hyper-parameters.  This is
+    the encapsulation boundary whose absence costs other systems O(NM) LoC
+    (paper §7.1)."""
+
+    @classmethod
+    def default_config(cls) -> Config:
+        return Config(cls, theta=10000.0)
+
+    def apply_rotary(self, q: jnp.ndarray, k: jnp.ndarray, positions: jnp.ndarray):
+        """q, k: [batch, seq, heads, head_dim]; positions: [batch, seq]."""
+
+        def rot(x):
+            head_dim = x.shape[-1]
+            half = head_dim // 2
+            freqs = 1.0 / (self.cfg.theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+            angles = positions.astype(jnp.float32)[..., None] * freqs  # [b, s, half]
+            cos = jnp.cos(angles)[:, :, None, :]
+            sin = jnp.sin(angles)[:, :, None, :]
+            x1, x2 = x[..., :half], x[..., half:]
+            return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+        return rot(q), rot(k)
+
+
+# -- attention ---------------------------------------------------------------
+class AttentionLayer(BaseLayer):
+    """Multi-head attention with a pluggable kernel and pluggable positional
+    embedding.  KV-cache handling is encapsulated here (paper §6): the
+    prefill/decode entry points below are what the serving graphs use, and
+    swapping cache layout or kernel is a config change."""
+
+    @classmethod
+    def default_config(cls) -> Config:
+        return Config(
+            cls,
+            input_dim=None,
+            num_heads=None,
+            head_dim=None,
+            pos_emb=RotaryEmbedding.default_config(),
+            kernel="flash",  # "flash" (Pallas) | "ref" (pure jnp)
+            qkv_proj=Linear.default_config(),
+            out_proj=Linear.default_config(),
+        )
+
+    def __init__(self, cfg: Config):
+        super().__init__(cfg)
+        inner = cfg.num_heads * cfg.head_dim
+        self._add_child("q_proj", cfg.qkv_proj.clone().set(input_dim=cfg.input_dim, output_dim=inner))
+        self._add_child("k_proj", cfg.qkv_proj.clone().set(input_dim=cfg.input_dim, output_dim=inner))
+        self._add_child("v_proj", cfg.qkv_proj.clone().set(input_dim=cfg.input_dim, output_dim=inner))
+        self._add_child("o_proj", cfg.out_proj.clone().set(input_dim=inner, output_dim=cfg.input_dim))
+        self._add_child("pos_emb", cfg.pos_emb)
+
+    def _qkv(self, params: Params, x: jnp.ndarray, positions: jnp.ndarray):
+        cfg = self.cfg
+        b, s, _ = x.shape
+        shape = (b, s, cfg.num_heads, cfg.head_dim)
+        q = self._children["q_proj"](params["q_proj"], x).reshape(shape)
+        k = self._children["k_proj"](params["k_proj"], x).reshape(shape)
+        v = self._children["v_proj"](params["v_proj"], x).reshape(shape)
+        q, k = self._children["pos_emb"].apply_rotary(q, k, positions)
+        return q, k, v
+
+    def __call__(self, params: Params, x: jnp.ndarray, positions: jnp.ndarray) -> jnp.ndarray:
+        """Full causal self-attention (training / prefill-style)."""
+        cfg = self.cfg
+        b, s, _ = x.shape
+        q, k, v = self._qkv(params, x, positions)
+        qh = q.transpose(0, 2, 1, 3)  # [b, h, s, d]
+        kh = k.transpose(0, 2, 1, 3)
+        vh = v.transpose(0, 2, 1, 3)
+        if cfg.kernel == "flash":
+            ctx = flash_attention(qh, kh, vh, True)
+        else:
+            ctx = kref.attention_ref(qh, kh, vh, causal=True)
+        ctx = ctx.transpose(0, 2, 1, 3).reshape(b, s, cfg.num_heads * cfg.head_dim)
+        return self._children["o_proj"](params["o_proj"], ctx)
+
+    def prefill(self, params: Params, x: jnp.ndarray, positions: jnp.ndarray):
+        """Causal attention that also returns the KV cache slabs.
+
+        Returns ``(out, k_cache, v_cache)`` with caches shaped
+        [batch, seq, heads, head_dim] (post-RoPE keys, ready for decode).
+        """
+        cfg = self.cfg
+        b, s, _ = x.shape
+        q, k, v = self._qkv(params, x, positions)
+        qh, kh, vh = (t.transpose(0, 2, 1, 3) for t in (q, k, v))
+        if cfg.kernel == "flash":
+            ctx = flash_attention(qh, kh, vh, True)
+        else:
+            ctx = kref.attention_ref(qh, kh, vh, causal=True)
+        ctx = ctx.transpose(0, 2, 1, 3).reshape(b, s, cfg.num_heads * cfg.head_dim)
+        return self._children["o_proj"](params["o_proj"], ctx), k, v
+
+    def decode_step(
+        self,
+        params: Params,
+        x: jnp.ndarray,           # [batch, 1, dim] current-token activations
+        pos: jnp.ndarray,         # [batch] current position of each row
+        k_cache: jnp.ndarray,     # [batch, max_seq, heads, head_dim]
+        v_cache: jnp.ndarray,
+    ):
+        """Single-token decode with per-row positions (continuous batching:
+        rows of the same batch may be at different depths)."""
+        cfg = self.cfg
+        b = x.shape[0]
+        q, k, v = self._qkv(params, x, pos[:, None])  # each [b, 1, heads, head_dim]
+        # write this step's k/v into the cache at each row's position
+        idx = pos[:, None, None, None]
+        onehot = jnp.arange(k_cache.shape[1])[None, :, None, None] == idx  # [b, S, 1, 1]
+        k_cache = jnp.where(onehot, k, k_cache)
+        v_cache = jnp.where(onehot, v, v_cache)
+        # attend over positions <= pos (per row)
+        scale = 1.0 / math.sqrt(cfg.head_dim)
+        logits = jnp.einsum("bhd,bshd->bhs", q[:, 0], k_cache) * scale
+        k_pos = jnp.arange(k_cache.shape[1])[None, None, :]
+        mask = k_pos <= pos[:, None, None]
+        logits = jnp.where(mask, logits, kref.NEG_INF)
+        probs = jax.nn.softmax(logits, axis=-1)
+        ctx = jnp.einsum("bhs,bshd->bhd", probs, v_cache)
+        ctx = ctx.reshape(b, 1, cfg.num_heads * cfg.head_dim)
+        out = self._children["o_proj"](params["o_proj"], ctx)
+        return out, k_cache, v_cache
+
+
+# -- feed-forward variants ----------------------------------------------------
+class FeedForward(BaseLayer):
+    """SwiGLU FFN (paper §4.1 example)."""
+
+    @classmethod
+    def default_config(cls) -> Config:
+        return Config(
+            cls,
+            input_dim=None,
+            hidden_dim=None,
+            linear=Linear.default_config(),
+        )
+
+    def __init__(self, cfg: Config):
+        super().__init__(cfg)
+        self._add_child("gate", cfg.linear.clone().set(input_dim=cfg.input_dim, output_dim=cfg.hidden_dim))
+        self._add_child("up", cfg.linear.clone().set(input_dim=cfg.input_dim, output_dim=cfg.hidden_dim))
+        self._add_child("down", cfg.linear.clone().set(input_dim=cfg.hidden_dim, output_dim=cfg.input_dim))
+
+    def __call__(self, params: Params, x: jnp.ndarray) -> jnp.ndarray:
+        g = jax.nn.silu(self._children["gate"](params["gate"], x))
+        u = self._children["up"](params["up"], x)
+        return self._children["down"](params["down"], g * u)
+
+
+class MoE(BaseLayer):
+    """Top-k gated Mixture-of-Experts, interface-compatible with
+    ``FeedForward`` — the drop-in replacement of Figure 1.
+
+    Gating: softmax router, top-k selection with renormalized weights, and a
+    Switch-style load-balance auxiliary loss.  The aux loss is *collected
+    through the InvocationContext analogue* (an output side-channel), not
+    returned through the call signature, so no ancestor module changes when
+    MoE is swapped in (the paper's core claim).
+    """
+
+    # Side-channel for auxiliary losses (mirrors InvocationContext output
+    # collection; the jax graph stays functional because the trainer drains
+    # it within a single trace).
+    _aux_losses: list = []
+
+    @classmethod
+    def default_config(cls) -> Config:
+        return Config(
+            cls,
+            input_dim=None,
+            hidden_dim=None,
+            num_experts=8,
+            top_k=2,
+            aux_loss_weight=0.01,
+            linear=Linear.default_config(),
+        )
+
+    def init(self, key: jax.Array) -> Params:
+        cfg = self.cfg
+        keys = jax.random.split(key, 4)
+        e, d, h = cfg.num_experts, cfg.input_dim, cfg.hidden_dim
+        return {
+            "router": _dense_init(keys[0], (d, e), d),
+            "gate": _dense_init(keys[1], (e, d, h), d),
+            "up": _dense_init(keys[2], (e, d, h), d),
+            "down": _dense_init(keys[3], (e, h, d), h),
+        }
+
+    def __call__(self, params: Params, x: jnp.ndarray) -> jnp.ndarray:
+        cfg = self.cfg
+        b, s, d = x.shape
+        tokens = x.reshape(b * s, d)
+        router_logits = tokens @ params["router"]                  # [T, E]
+        router_probs = jax.nn.softmax(router_logits, axis=-1)
+        # iterative-argmax top-k: jax.lax.top_k lowers to an HLO `topk`
+        # instruction that xla_extension 0.5.1's text parser rejects
+        top_w, top_idx = _topk_by_argmax(router_probs, cfg.top_k)  # [T, k]
+        top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+        # Sparse combine weights as a dense [T, E] matrix (exact top-k MoE
+        # semantics; each expert computed densely — fine at repro scale, and
+        # the expert-parallel cost model prices the sparse dispatch).
+        combine = jnp.zeros_like(router_probs).at[
+            jnp.arange(tokens.shape[0])[:, None], top_idx
+        ].set(top_w)
+        # expert FFNs: [E, T, h]
+        g = jax.nn.silu(jnp.einsum("td,edh->eth", tokens, params["gate"]))
+        u = jnp.einsum("td,edh->eth", tokens, params["up"])
+        expert_out = jnp.einsum("eth,ehd->etd", g * u, params["down"])
+        out = jnp.einsum("te,etd->td", combine, expert_out)
+        # Switch-transformer load balance loss: E * sum_e f_e * P_e
+        f = (combine > 0).astype(jnp.float32).mean(axis=0)         # fraction routed
+        p = router_probs.mean(axis=0)
+        aux = cfg.num_experts * jnp.sum(f * p) * cfg.aux_loss_weight
+        MoE._aux_losses.append(aux)
+        return out.reshape(b, s, d)
+
+    @classmethod
+    def drain_aux_losses(cls) -> jnp.ndarray:
+        total = sum(cls._aux_losses) if cls._aux_losses else jnp.array(0.0)
+        cls._aux_losses = []
+        return total
+
+
+# -- transformer --------------------------------------------------------------
+class TransformerLayer(BaseLayer):
+    """Pre-norm transformer block.  Children (attention, FFN) are
+    encapsulated configs — §4.1's running example."""
+
+    @classmethod
+    def default_config(cls) -> Config:
+        return Config(
+            cls,
+            input_dim=None,
+            self_attention=AttentionLayer.default_config(),
+            feed_forward=FeedForward.default_config(),
+            norm=RMSNorm.default_config(),
+        )
+
+    def __init__(self, cfg: Config):
+        super().__init__(cfg)
+        cfg.self_attention.set(input_dim=cfg.input_dim)
+        # hidden_dim may be a callable of input_dim (scaled_hidden_dim style)
+        ff = cfg.feed_forward
+        ff.set(input_dim=cfg.input_dim)
+        if callable(ff.hidden_dim):
+            ff.set(hidden_dim=ff.hidden_dim(cfg.input_dim))
+        self._add_child("attn_norm", cfg.norm.clone().set(input_dim=cfg.input_dim))
+        self._add_child("ffn_norm", cfg.norm.clone().set(input_dim=cfg.input_dim))
+        self._add_child("self_attention", cfg.self_attention)
+        self._add_child("feed_forward", ff)
+
+    def __call__(self, params: Params, x: jnp.ndarray, positions: jnp.ndarray) -> jnp.ndarray:
+        h = self._children["attn_norm"](params["attn_norm"], x)
+        x = x + self._children["self_attention"](params["self_attention"], h, positions)
+        h = self._children["ffn_norm"](params["ffn_norm"], x)
+        x = x + self._children["feed_forward"](params["feed_forward"], h)
+        return x
+
+    def prefill(self, params: Params, x, positions):
+        h = self._children["attn_norm"](params["attn_norm"], x)
+        attn_out, k, v = self._children["self_attention"].prefill(params["self_attention"], h, positions)
+        x = x + attn_out
+        h = self._children["ffn_norm"](params["ffn_norm"], x)
+        x = x + self._children["feed_forward"](params["feed_forward"], h)
+        return x, k, v
+
+    def decode_step(self, params: Params, x, pos, k_cache, v_cache):
+        h = self._children["attn_norm"](params["attn_norm"], x)
+        attn_out, k_cache, v_cache = self._children["self_attention"].decode_step(
+            params["self_attention"], h, pos, k_cache, v_cache
+        )
+        x = x + attn_out
+        h = self._children["ffn_norm"](params["ffn_norm"], x)
+        x = x + self._children["feed_forward"](params["feed_forward"], h)
+        return x, k_cache, v_cache
+
+
+class Decoder(BaseLayer):
+    """Embedding + N transformer layers + final norm + (tied) LM head."""
+
+    @classmethod
+    def default_config(cls) -> Config:
+        return Config(
+            cls,
+            vocab_size=None,
+            model_dim=None,
+            num_layers=None,
+            emb=Embedding.default_config(),
+            layer=TransformerLayer.default_config(),
+            output_norm=RMSNorm.default_config(),
+            tied_lm_head=True,
+        )
+
+    def __init__(self, cfg: Config):
+        super().__init__(cfg)
+        self._add_child("emb", cfg.emb.clone().set(num_embeddings=cfg.vocab_size, dim=cfg.model_dim))
+        self.layers = []
+        for i in range(cfg.num_layers):
+            layer = self._add_child(f"layer{i}", cfg.layer.clone().set(input_dim=cfg.model_dim))
+            self.layers.append(layer)
+        self._add_child("output_norm", cfg.output_norm.clone().set(input_dim=cfg.model_dim))
+        if not cfg.tied_lm_head:
+            self._add_child(
+                "lm_head", Linear.default_config().set(input_dim=cfg.model_dim, output_dim=cfg.vocab_size)
+            )
+
+    def _logits(self, params: Params, x: jnp.ndarray) -> jnp.ndarray:
+        x = self._children["output_norm"](params["output_norm"], x)
+        if self.cfg.tied_lm_head:
+            return self._children["emb"].attend(params["emb"], x)
+        return self._children["lm_head"](params["lm_head"], x)
+
+    def __call__(self, params: Params, tokens: jnp.ndarray) -> jnp.ndarray:
+        """tokens: [batch, seq] -> logits [batch, seq, vocab]."""
+        b, s = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+        x = self._children["emb"](params["emb"], tokens)
+        for i, layer in enumerate(self.layers):
+            x = layer(params[f"layer{i}"], x, positions)
+        return self._logits(params, x)
+
+    def prefill(self, params: Params, tokens: jnp.ndarray):
+        """Returns (logits, k_caches, v_caches) with caches
+        [layers, batch, seq, heads, head_dim]."""
+        b, s = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+        x = self._children["emb"](params["emb"], tokens)
+        ks, vs = [], []
+        for i, layer in enumerate(self.layers):
+            x, k, v = layer.prefill(params[f"layer{i}"], x, positions)
+            ks.append(k)
+            vs.append(v)
+        return self._logits(params, x), jnp.stack(ks), jnp.stack(vs)
+
+    def decode_step(self, params: Params, token: jnp.ndarray, pos: jnp.ndarray, k_caches, v_caches):
+        """token: [batch] -> (logits [batch, vocab], new caches)."""
+        x = self._children["emb"](params["emb"], token[:, None])
+        new_k, new_v = [], []
+        for i, layer in enumerate(self.layers):
+            x, kc, vc = layer.decode_step(params[f"layer{i}"], x, pos, k_caches[i], v_caches[i])
+            new_k.append(kc)
+            new_v.append(vc)
+        logits = self._logits(params, x)[:, 0]
+        return logits, jnp.stack(new_k), jnp.stack(new_v)
+
+
+class CausalLM(BaseLayer):
+    """Next-token-prediction wrapper: cross-entropy + MoE aux losses."""
+
+    @classmethod
+    def default_config(cls) -> Config:
+        return Config(cls, decoder=Decoder.default_config(), z_loss_weight=0.0)
+
+    def __init__(self, cfg: Config):
+        super().__init__(cfg)
+        self._add_child("decoder", cfg.decoder)
+
+    def loss(self, params: Params, tokens: jnp.ndarray, targets: jnp.ndarray):
+        """tokens, targets: [batch, seq]; target < 0 positions are masked."""
+        logits = self._children["decoder"](params["decoder"], tokens)
+        logits = logits.astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.maximum(targets, 0)
+        gold = jnp.take_along_axis(logits, tgt[..., None], axis=-1)[..., 0]
+        nll = logz - gold
+        mask = (targets >= 0).astype(jnp.float32)
+        denom = jnp.maximum(mask.sum(), 1.0)
+        ce = (nll * mask).sum() / denom
+        aux = MoE.drain_aux_losses()
+        z_loss = self.cfg.z_loss_weight * ((logz * mask) ** 2).sum() / denom
+        return ce + aux + z_loss, {"ce": ce, "aux": aux}

@@ -1,0 +1,208 @@
+"""Layer-2 model assembly: config -> pure jax functions for AOT lowering.
+
+Builds the CausalLM from a preset (see ``configs.PRESETS``), plus the
+training and serving entry points that ``aot.py`` lowers to HLO:
+
+  * ``init(seed)``                         -> initial train state
+  * ``train_step(state, tokens, targets)`` -> (new state, loss)   [AdamW]
+  * ``prefill(params, tokens, prompt_len)``-> (next_token, k_cache, v_cache)
+  * ``decode(params, caches, pos, token)`` -> (next_token, logits_max, caches)
+  * ``insert_slot(full_cache, one_cache, slot)`` -> full_cache
+    (continuous batching: drop a freshly-prefilled request into a live
+    decode batch — paper §6)
+
+The train state is a flat list of arrays in a deterministic order; the
+flattening treedef is what the manifest (``aot.py``) records for the Rust
+runtime.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import configs
+from .configs import Config, replace_config
+from .layers import (
+    AttentionLayer,
+    CausalLM,
+    Decoder,
+    FeedForward,
+    MoE,
+    NoPositionalEmbedding,
+    RotaryEmbedding,
+    TransformerLayer,
+)
+
+
+def build_model_config(
+    preset: str,
+    *,
+    moe: bool = False,
+    rope: bool = True,
+    kernel: str = "flash",
+) -> Config:
+    """Compose the CausalLM config for a preset.
+
+    Note how the feature knobs are *config tree rewrites*, exactly the
+    paper's integration story: MoE replaces FeedForward via
+    ``replace_config`` (Figure 1), RoPE on/off swaps the pos_emb child.
+    """
+    p = configs.PRESETS[preset]
+    cfg = CausalLM.default_config()
+    dec = cfg.decoder
+    dec.set(vocab_size=p["vocab_size"], model_dim=p["model_dim"], num_layers=p["num_layers"])
+    dec.layer.self_attention.set(num_heads=p["num_heads"], head_dim=p["head_dim"], kernel=kernel)
+    dec.layer.feed_forward.set(hidden_dim=p["ffn_dim"])
+
+    if not rope:
+        replace_config(cfg, RotaryEmbedding, lambda old: NoPositionalEmbedding.default_config())
+    if moe:
+        # The paper's 10-line MoE swap (§4.1): any FeedForward -> MoE.
+        replace_config(
+            cfg,
+            FeedForward,
+            lambda old: MoE.default_config().set(
+                input_dim=old.input_dim,
+                hidden_dim=old.hidden_dim,
+                num_experts=p["num_experts"],
+                top_k=p["moe_top_k"],
+            ),
+        )
+    return cfg
+
+
+class ModelBundle:
+    """A built model plus its train/serving functions (pre-jit)."""
+
+    def __init__(self, preset: str, *, moe=False, rope=True, kernel="flash",
+                 learning_rate=None, weight_decay=0.01, grad_clip=1.0,
+                 warmup_steps=None):
+        if learning_rate is None:
+            # small models tolerate (and demos need) a hotter schedule
+            learning_rate = {"tiny": 2e-3, "small": 1e-3, "serve": 1e-3}.get(preset, 3e-4)
+        if warmup_steps is None:
+            warmup_steps = {"tiny": 10.0, "small": 20.0, "serve": 20.0}.get(preset, 100.0)
+        self.warmup_steps = warmup_steps
+        self.preset = preset
+        self.hp = configs.PRESETS[preset]
+        self.cfg = build_model_config(preset, moe=moe, rope=rope, kernel=kernel)
+        self.model: CausalLM = self.cfg.instantiate()
+        self.learning_rate = learning_rate
+        self.weight_decay = weight_decay
+        self.grad_clip = grad_clip
+        # Deterministic flattening order for the manifest.
+        example = jax.eval_shape(lambda: self.model.init(jax.random.PRNGKey(0)))
+        leaves, treedef = jax.tree_util.tree_flatten(example)
+        self.treedef = treedef
+        self.param_specs = [
+            ("/".join(str(k.key) for k in path), tuple(leaf.shape), str(leaf.dtype))
+            for path, leaf in jax.tree_util.tree_flatten_with_path(example)[0]
+        ]
+
+    # -- state layout: [params..., m..., v...] + step scalar -----------------
+    def init(self, seed: jnp.ndarray):
+        """seed: i32 scalar -> flat train state tuple."""
+        params = self.model.init(jax.random.PRNGKey(seed))
+        leaves = jax.tree_util.tree_leaves(params)
+        zeros = [jnp.zeros_like(l) for l in leaves]
+        step = jnp.zeros((), jnp.int32)
+        return tuple(leaves + zeros + [jnp.zeros_like(z) for z in zeros] + [step])
+
+    def _unflatten_state(self, state):
+        n = len(self.param_specs)
+        params = jax.tree_util.tree_unflatten(self.treedef, state[:n])
+        m = list(state[n : 2 * n])
+        v = list(state[2 * n : 3 * n])
+        step = state[3 * n]
+        return params, m, v, step
+
+    def loss_fn(self, params, tokens, targets):
+        loss, metrics = self.model.loss(params, tokens, targets)
+        return loss, metrics
+
+    def train_step(self, *args):
+        """(state..., tokens, targets) -> (new_state..., loss).
+
+        AdamW with linear warmup and gradient-norm clipping; fused into one
+        HLO program so the Rust hot loop is a single execute() per step.
+        """
+        state, tokens, targets = args[:-2], args[-2], args[-1]
+        params, m, v, step = self._unflatten_state(state)
+        (loss, _metrics), grads = jax.value_and_grad(self.loss_fn, has_aux=True)(
+            params, tokens, targets
+        )
+        g_leaves = jax.tree_util.tree_leaves(grads)
+        p_leaves = jax.tree_util.tree_leaves(params)
+        # global grad-norm clip
+        gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in g_leaves))
+        clip = jnp.minimum(1.0, self.grad_clip / jnp.maximum(gnorm, 1e-9))
+        step_f = step.astype(jnp.float32) + 1.0
+        warmup = jnp.minimum(1.0, step_f / self.warmup_steps)
+        lr = self.learning_rate * warmup
+        b1, b2, eps = 0.9, 0.95, 1e-8
+        new_p, new_m, new_v = [], [], []
+        for p, g, mi, vi in zip(p_leaves, g_leaves, m, v):
+            g = g * clip
+            mi = b1 * mi + (1 - b1) * g
+            vi = b2 * vi + (1 - b2) * g * g
+            mhat = mi / (1 - b1**step_f)
+            vhat = vi / (1 - b2**step_f)
+            upd = mhat / (jnp.sqrt(vhat) + eps) + self.weight_decay * p
+            new_p.append(p - lr * upd)
+            new_m.append(mi)
+            new_v.append(vi)
+        new_step = step + 1
+        return tuple(new_p + new_m + new_v + [new_step, loss])
+
+    def eval_loss(self, *args):
+        """(params..., tokens, targets) -> (loss,). Forward only."""
+        n = len(self.param_specs)
+        params = jax.tree_util.tree_unflatten(self.treedef, args[:n])
+        loss, _ = self.loss_fn(params, args[n], args[n + 1])
+        return (loss,)
+
+    # -- serving ------------------------------------------------------------
+    def prefill(self, *args):
+        """(params..., tokens [B,S], prompt_len [B]) ->
+        (next_token [B], k_cache, v_cache [L,B,maxS,H,dh])."""
+        n = len(self.param_specs)
+        params = jax.tree_util.tree_unflatten(self.treedef, args[:n])
+        tokens, prompt_len = args[n], args[n + 1]
+        b, s = tokens.shape
+        max_s = self.hp["max_seq_len"]
+        logits, k, v = self.model._children["decoder"].prefill(params["decoder"], tokens)
+        # gather logits at position prompt_len-1 per row
+        last = jnp.take_along_axis(logits, (prompt_len - 1)[:, None, None], axis=1)[:, 0]
+        next_token = jnp.argmax(last, axis=-1).astype(jnp.int32)
+        # pad caches out to max_seq_len
+        pad = max_s - s
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        return next_token, k, v
+
+    def decode(self, *args):
+        """(params..., k_cache, v_cache, pos [B], token [B]) ->
+        (next_token [B], k_cache, v_cache)."""
+        n = len(self.param_specs)
+        params = jax.tree_util.tree_unflatten(self.treedef, args[:n])
+        k_cache, v_cache, pos, token = args[n], args[n + 1], args[n + 2], args[n + 3]
+        logits, k_cache, v_cache = self.model._children["decoder"].decode_step(
+            params["decoder"], token, pos, k_cache, v_cache
+        )
+        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_token, k_cache, v_cache
+
+    @staticmethod
+    def insert_slot(full_k, full_v, one_k, one_v, slot):
+        """Write a single-request cache (batch=1) into batch slot ``slot`` of
+        a live decode cache — the continuous-batching admission op."""
+        fk = jax.lax.dynamic_update_slice(full_k, one_k, (0, slot, 0, 0, 0))
+        fv = jax.lax.dynamic_update_slice(full_v, one_v, (0, slot, 0, 0, 0))
+        return fk, fv
+
+    def param_count(self) -> int:
+        return sum(int(jnp.prod(jnp.array(s))) for _, s, _ in self.param_specs)

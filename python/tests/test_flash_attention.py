@@ -1,0 +1,149 @@
+"""L1 correctness: Pallas flash-attention kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes/dtypes per the repro harness contract; tolerances
+are per-dtype (f32 tight, bf16 loose).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.flash_attention import (
+    flash_attention,
+    flash_attention_with_lse,
+)
+from compile.kernels import ref
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+def _make_qkv(seed, b, h, q_len, kv_len, d, dtype):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return (
+        _rand(k1, (b, h, q_len, d), dtype),
+        _rand(k2, (b, h, kv_len, d), dtype),
+        _rand(k3, (b, h, kv_len, d), dtype),
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    h=st.integers(1, 4),
+    q_len=st.integers(1, 96),
+    extra_kv=st.integers(0, 64),
+    d=st.sampled_from([8, 16, 32, 64]),
+    causal=st.booleans(),
+    seed=st.integers(0, 2**16),
+)
+def test_matches_ref_f32(b, h, q_len, extra_kv, d, causal, seed):
+    kv_len = q_len + extra_kv
+    q, k, v = _make_qkv(seed, b, h, q_len, kv_len, d, jnp.float32)
+    out = flash_attention(q, k, v, causal)
+    expected = ref.attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(out, expected, atol=TOL[jnp.float32], rtol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    q_len=st.integers(4, 64),
+    d=st.sampled_from([16, 32]),
+    seed=st.integers(0, 2**16),
+)
+def test_matches_ref_bf16(q_len, d, seed):
+    q, k, v = _make_qkv(seed, 2, 2, q_len, q_len, d, jnp.bfloat16)
+    out = flash_attention(q, k, v, True)
+    expected = ref.attention_ref(
+        q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32), causal=True
+    )
+    np.testing.assert_allclose(
+        out.astype(jnp.float32), expected, atol=TOL[jnp.bfloat16], rtol=5e-2
+    )
+    assert out.dtype == jnp.bfloat16
+
+
+@pytest.mark.parametrize("block", [(16, 16), (32, 64), (128, 128)])
+def test_block_size_invariance(block):
+    """The result must not depend on the tiling."""
+    q, k, v = _make_qkv(7, 2, 2, 80, 80, 32, jnp.float32)
+    bq, bk = block
+    out = flash_attention(q, k, v, True, None, bq, bk)
+    expected = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(out, expected, atol=2e-5, rtol=1e-4)
+
+
+def test_lse_matches_ref():
+    q, k, v = _make_qkv(3, 2, 3, 48, 48, 16, jnp.float32)
+    out, lse = flash_attention_with_lse(q, k, v, causal=True)
+    ref_out, ref_lse = ref.attention_ref_lse(q, k, v, causal=True)
+    np.testing.assert_allclose(out, ref_out, atol=2e-5, rtol=1e-4)
+    np.testing.assert_allclose(lse, ref_lse, atol=1e-4, rtol=1e-4)
+
+
+def test_cross_attention_alignment():
+    """q_len < kv_len: causal mask must be end-aligned (decode semantics)."""
+    q, k, v = _make_qkv(11, 1, 2, 8, 40, 16, jnp.float32)
+    out = flash_attention(q, k, v, True)
+    expected = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(out, expected, atol=2e-5, rtol=1e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    q_len=st.integers(2, 40),
+    d=st.sampled_from([8, 16]),
+    causal=st.booleans(),
+    seed=st.integers(0, 2**16),
+)
+def test_gradients_match_ref(q_len, d, causal, seed):
+    """FA-2 backward kernels vs autodiff through the reference."""
+    q, k, v = _make_qkv(seed, 1, 2, q_len, q_len, d, jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(seed + 1), (1, 2, q_len, d))
+
+    def loss_flash(q, k, v):
+        return jnp.sum(flash_attention(q, k, v, causal) * w)
+
+    def loss_ref(q, k, v):
+        return jnp.sum(ref.attention_ref(q, k, v, causal=causal) * w)
+
+    g_flash = jax.grad(loss_flash, argnums=(0, 1, 2))(q, k, v)
+    g_ref = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for gf, gr, name in zip(g_flash, g_ref, "qkv"):
+        np.testing.assert_allclose(gf, gr, atol=5e-4, rtol=1e-3, err_msg=f"d{name}")
+
+
+def test_grad_under_jit():
+    """The custom VJP must survive jit + composition with other ops."""
+    q, k, v = _make_qkv(5, 1, 1, 16, 16, 8, jnp.float32)
+
+    @jax.jit
+    def f(q, k, v):
+        return jnp.mean(flash_attention(q, k, v, True) ** 2)
+
+    g = jax.grad(f)(q, k, v)
+    assert g.shape == q.shape
+    assert bool(jnp.all(jnp.isfinite(g)))
+
+
+def test_numerical_stability_large_logits():
+    """Online softmax must not overflow with large-magnitude scores."""
+    q, k, v = _make_qkv(9, 1, 1, 32, 32, 16, jnp.float32)
+    q = q * 100.0
+    out = flash_attention(q, k, v, True)
+    expected = ref.attention_ref(q, k, v, causal=True)
+    assert bool(jnp.all(jnp.isfinite(out)))
+    np.testing.assert_allclose(out, expected, atol=1e-4, rtol=1e-3)
+
+
+def test_single_token_decode_shape():
+    """q_len=1 against a long KV — the decode hot path."""
+    q, k, v = _make_qkv(13, 4, 2, 1, 129, 32, jnp.float32)
+    out = flash_attention(q, k, v, True)
+    expected = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(out, expected, atol=2e-5, rtol=1e-4)

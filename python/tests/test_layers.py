@@ -1,0 +1,258 @@
+"""L2 layer library tests: shapes, oracles, config-system semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.configs import Config, config_for_function, config_to_lines, replace_config
+from compile.kernels import ref
+from compile.layers import (
+    AttentionLayer,
+    CausalLM,
+    FeedForward,
+    Linear,
+    MoE,
+    NoPositionalEmbedding,
+    RMSNorm,
+    RotaryEmbedding,
+    TransformerLayer,
+)
+
+
+# ---------------------------------------------------------------------------
+# config system (python mirror of rust/src/config)
+# ---------------------------------------------------------------------------
+class TestConfigSystem:
+    def test_set_and_get(self):
+        cfg = Linear.default_config().set(input_dim=4, output_dim=8)
+        assert cfg.input_dim == 4 and cfg.output_dim == 8
+
+    def test_set_unknown_field_raises(self):
+        with pytest.raises(KeyError):
+            Linear.default_config().set(bogus=1)
+
+    def test_clone_is_deep(self):
+        cfg = TransformerLayer.default_config()
+        c2 = cfg.clone()
+        c2.self_attention.set(num_heads=7)
+        assert cfg.self_attention.num_heads is None
+
+    def test_partial_then_parent_propagates(self):
+        """§4.1: parent sets input_dim at instantiation time."""
+        cfg = TransformerLayer.default_config().set(input_dim=32)
+        cfg.self_attention.set(num_heads=4, head_dim=8)
+        cfg.feed_forward.set(hidden_dim=64)
+        layer = cfg.instantiate()
+        assert layer._children["self_attention"].cfg.input_dim == 32
+        assert layer._children["feed_forward"].cfg.input_dim == 32
+
+    def test_callable_hidden_dim(self):
+        """scaled_hidden_dim-style deferred configuration."""
+        cfg = TransformerLayer.default_config().set(input_dim=30)
+        cfg.self_attention.set(num_heads=2, head_dim=8)
+        cfg.feed_forward.set(hidden_dim=lambda d: int(d * 8 / 3))
+        layer = cfg.instantiate()
+        assert layer._children["feed_forward"].cfg.hidden_dim == 80
+
+    def test_replace_config_swaps_ffn_for_moe(self):
+        """Figure 1: the MoE drop-in replacement."""
+        cfg = TransformerLayer.default_config().set(input_dim=16)
+        cfg.self_attention.set(num_heads=2, head_dim=8)
+        cfg.feed_forward.set(hidden_dim=32)
+        replace_config(
+            cfg,
+            FeedForward,
+            lambda old: MoE.default_config().set(
+                input_dim=old.input_dim, hidden_dim=old.hidden_dim, num_experts=2, top_k=1
+            ),
+        )
+        assert cfg.feed_forward.klass is MoE
+        layer = cfg.instantiate()  # still instantiates: interface-compatible
+        assert isinstance(layer._children["feed_forward"], MoE)
+
+    def test_replace_config_preserves_untargeted_nodes(self):
+        cfg = TransformerLayer.default_config().set(input_dim=16)
+        before = cfg.self_attention
+        replace_config(cfg, MoE, lambda old: old)
+        assert cfg.self_attention is before
+
+    def test_config_for_function(self):
+        def scale(x, factor=2.0):
+            return x * factor
+
+        cfg = config_for_function(scale, factor=3.0)
+        f = cfg.instantiate()
+        assert f(2.0) == 6.0
+
+    def test_golden_lines_stable(self):
+        cfg = Linear.default_config().set(input_dim=4, output_dim=8)
+        lines = config_to_lines(cfg)
+        assert lines == config_to_lines(cfg.clone())
+        assert any("input_dim = 4" in l for l in lines)
+
+
+# ---------------------------------------------------------------------------
+# individual layers vs oracles
+# ---------------------------------------------------------------------------
+class TestLayers:
+    def test_linear_shapes_and_bias(self):
+        cfg = Linear.default_config().set(input_dim=6, output_dim=10, use_bias=True)
+        layer = cfg.instantiate()
+        params = layer.init(jax.random.PRNGKey(0))
+        x = jnp.ones((2, 3, 6))
+        out = layer(params, x)
+        assert out.shape == (2, 3, 10)
+        assert params["bias"].shape == (10,)
+
+    def test_rmsnorm_matches_ref(self):
+        layer = RMSNorm.default_config().set(input_dim=16).instantiate()
+        params = layer.init(jax.random.PRNGKey(0))
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 5, 16))
+        np.testing.assert_allclose(
+            layer(params, x), ref.rmsnorm_ref(x, params["scale"]), atol=1e-6
+        )
+
+    def test_rmsnorm_unit_scale_invariant(self):
+        layer = RMSNorm.default_config().set(input_dim=8).instantiate()
+        params = layer.init(jax.random.PRNGKey(0))
+        x = jax.random.normal(jax.random.PRNGKey(1), (4, 8))
+        out = layer(params, x)
+        rms = jnp.sqrt(jnp.mean(out**2, axis=-1))
+        np.testing.assert_allclose(rms, jnp.ones_like(rms), atol=1e-3)
+
+    @settings(max_examples=10, deadline=None)
+    @given(shift=st.integers(0, 64), seed=st.integers(0, 1000))
+    def test_rope_relative_position_property(self, shift, seed):
+        """RoPE scores depend only on relative positions: shifting q and k
+        positions by the same amount leaves q.k' inner products unchanged."""
+        rope = RotaryEmbedding.default_config().instantiate()
+        d = 16
+        kq, kk = jax.random.split(jax.random.PRNGKey(seed))
+        q = jax.random.normal(kq, (1, 6, 2, d))
+        k = jax.random.normal(kk, (1, 6, 2, d))
+        pos0 = jnp.arange(6)[None, :]
+        q0, k0 = rope.apply_rotary(q, k, pos0)
+        q1, k1 = rope.apply_rotary(q, k, pos0 + shift)
+        s0 = jnp.einsum("bqhd,bkhd->bhqk", q0, k0)
+        s1 = jnp.einsum("bqhd,bkhd->bhqk", q1, k1)
+        np.testing.assert_allclose(s0, s1, atol=1e-3)
+
+    def test_rope_matches_ref_kernel(self):
+        rope = RotaryEmbedding.default_config().instantiate()
+        x = jax.random.normal(jax.random.PRNGKey(0), (1, 10, 1, 32))
+        pos = jnp.arange(10)[None, :]
+        out, _ = rope.apply_rotary(x, x, pos)
+        expected = ref.rope_ref(x[:, :, 0, :], jnp.arange(10))
+        np.testing.assert_allclose(out[:, :, 0, :], expected, atol=1e-5)
+
+    def test_nope_is_identity(self):
+        nope = NoPositionalEmbedding.default_config().instantiate()
+        x = jnp.ones((1, 4, 2, 8))
+        q, k = nope.apply_rotary(x, x, jnp.zeros((1, 4), jnp.int32))
+        assert (q == x).all() and (k == x).all()
+
+    def test_attention_flash_vs_ref_kernel_config(self):
+        """Swapping kernel='flash' <-> 'ref' must not change results."""
+
+        def build(kernel):
+            cfg = AttentionLayer.default_config().set(
+                input_dim=32, num_heads=2, head_dim=16, kernel=kernel
+            )
+            return cfg.instantiate()
+
+        flash, refl = build("flash"), build("ref")
+        params = flash.init(jax.random.PRNGKey(0))
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 24, 32))
+        pos = jnp.broadcast_to(jnp.arange(24)[None], (2, 24))
+        np.testing.assert_allclose(
+            flash(params, x, pos), refl(params, x, pos), atol=2e-5, rtol=1e-4
+        )
+
+    def test_feedforward_swiglu_shape(self):
+        ffn = FeedForward.default_config().set(input_dim=8, hidden_dim=16).instantiate()
+        params = ffn.init(jax.random.PRNGKey(0))
+        out = ffn(params, jnp.ones((2, 3, 8)))
+        assert out.shape == (2, 3, 8)
+
+    def test_attention_decode_matches_full_forward(self):
+        """Per-row-position decode attention == full causal attention."""
+        cfg = AttentionLayer.default_config().set(input_dim=16, num_heads=2, head_dim=8, kernel="ref")
+        layer = cfg.instantiate()
+        params = layer.init(jax.random.PRNGKey(0))
+        b, s = 2, 8
+        x = jax.random.normal(jax.random.PRNGKey(1), (b, s, 16))
+        pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        full = layer(params, x, pos)
+        # run decode token-by-token
+        kc = jnp.zeros((b, s, 2, 8))
+        vc = jnp.zeros((b, s, 2, 8))
+        outs = []
+        for t in range(s):
+            o, kc, vc = layer.decode_step(params, x[:, t : t + 1], jnp.full((b,), t), kc, vc)
+            outs.append(o[:, 0])
+        dec = jnp.stack(outs, axis=1)
+        np.testing.assert_allclose(dec, full, atol=1e-4, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# MoE invariants
+# ---------------------------------------------------------------------------
+class TestMoE:
+    def _layer(self, e=4, k=2):
+        return (
+            MoE.default_config()
+            .set(input_dim=8, hidden_dim=16, num_experts=e, top_k=k)
+            .instantiate()
+        )
+
+    def test_output_shape(self):
+        layer = self._layer()
+        params = layer.init(jax.random.PRNGKey(0))
+        out = layer(params, jnp.ones((2, 5, 8)))
+        MoE.drain_aux_losses()
+        assert out.shape == (2, 5, 8)
+
+    def test_aux_loss_nonnegative_and_drained(self):
+        layer = self._layer()
+        params = layer.init(jax.random.PRNGKey(0))
+        layer(params, jax.random.normal(jax.random.PRNGKey(1), (2, 5, 8)))
+        aux = MoE.drain_aux_losses()
+        assert float(aux) >= 0.0
+        assert float(MoE.drain_aux_losses()) == 0.0  # drained
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 1000), k=st.integers(1, 3))
+    def test_topk_equals_dense_reference(self, seed, k):
+        """Kernel-style check: dense-dispatch MoE == explicit per-token loop."""
+        layer = self._layer(e=4, k=k)
+        params = layer.init(jax.random.PRNGKey(seed))
+        x = jax.random.normal(jax.random.PRNGKey(seed + 1), (1, 6, 8))
+        out = layer(params, x)
+        MoE.drain_aux_losses()
+        tokens = x.reshape(-1, 8)
+        probs = jax.nn.softmax(tokens @ params["router"], axis=-1)
+        expected = []
+        for t in range(tokens.shape[0]):
+            w, idx = jax.lax.top_k(probs[t], k)
+            w = w / w.sum()
+            acc = jnp.zeros(8)
+            for wi, ei in zip(w, idx):
+                g = jax.nn.silu(tokens[t] @ params["gate"][ei])
+                u = tokens[t] @ params["up"][ei]
+                acc = acc + wi * ((g * u) @ params["down"][ei])
+            expected.append(acc)
+        np.testing.assert_allclose(out.reshape(-1, 8), jnp.stack(expected), atol=1e-4, rtol=1e-3)
+
+    def test_single_expert_equals_ffn_semantics(self):
+        """E=1, k=1 MoE must reduce to a plain SwiGLU FFN."""
+        layer = self._layer(e=1, k=1)
+        params = layer.init(jax.random.PRNGKey(0))
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, 4, 8))
+        out = layer(params, x)
+        MoE.drain_aux_losses()
+        g = jax.nn.silu(x @ params["gate"][0])
+        u = x @ params["up"][0]
+        expected = (g * u) @ params["down"][0]
+        np.testing.assert_allclose(out, expected, atol=1e-5)

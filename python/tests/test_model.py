@@ -1,0 +1,220 @@
+"""End-to-end L2 tests: train step descends, serving graphs are consistent."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import ModelBundle, build_model_config
+from compile.layers import MoE, RotaryEmbedding, NoPositionalEmbedding
+
+
+def _batch(bundle, b=2, s=32, seed=0):
+    key = jax.random.PRNGKey(seed)
+    tokens = jax.random.randint(key, (b, s), 0, bundle.hp["vocab_size"], jnp.int32)
+    # next-token prediction targets with the final position masked
+    targets = jnp.concatenate([tokens[:, 1:], jnp.full((b, 1), -1, jnp.int32)], axis=1)
+    return tokens, targets
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    return ModelBundle("tiny", kernel="ref")
+
+
+@pytest.fixture(scope="module")
+def tiny_flash():
+    return ModelBundle("tiny", kernel="flash")
+
+
+class TestTrainStep:
+    def test_loss_decreases_on_fixed_batch(self, tiny):
+        state = tiny.init(jnp.int32(0))
+        tokens, targets = _batch(tiny)
+        step = jax.jit(tiny.train_step)
+        losses = []
+        for _ in range(8):
+            out = step(*state, tokens, targets)
+            state, loss = out[:-1], out[-1]
+            losses.append(float(loss))
+        assert losses[-1] < losses[0], losses
+        assert all(np.isfinite(losses))
+
+    def test_initial_loss_near_uniform(self, tiny):
+        """Random init => CE ~= log(vocab)."""
+        state = tiny.init(jnp.int32(1))
+        tokens, targets = _batch(tiny, seed=3)
+        out = tiny.train_step(*state, tokens, targets)
+        expected = np.log(tiny.hp["vocab_size"])
+        assert abs(float(out[-1]) - expected) < 1.0
+
+    def test_step_counter_increments(self, tiny):
+        state = tiny.init(jnp.int32(0))
+        n = len(tiny.param_specs)
+        assert int(state[3 * n]) == 0
+        out = tiny.train_step(*state, *_batch(tiny))
+        assert int(out[3 * n]) == 1
+
+    def test_masked_targets_ignored(self, tiny):
+        state = tiny.init(jnp.int32(0))
+        tokens, targets = _batch(tiny)
+        all_masked = jnp.full_like(targets, -1)
+        out = tiny.eval_loss(*state[: len(tiny.param_specs)], tokens, all_masked)
+        assert float(out[0]) == 0.0
+
+    def test_flash_and_ref_agree_on_loss(self, tiny, tiny_flash):
+        state = tiny.init(jnp.int32(0))
+        n = len(tiny.param_specs)
+        tokens, targets = _batch(tiny)
+        l_ref = tiny.eval_loss(*state[:n], tokens, targets)[0]
+        l_flash = tiny_flash.eval_loss(*state[:n], tokens, targets)[0]
+        np.testing.assert_allclose(float(l_ref), float(l_flash), atol=1e-3, rtol=1e-4)
+
+    def test_moe_train_step_descends(self):
+        bundle = ModelBundle("tiny", moe=True, kernel="ref")
+        state = bundle.init(jnp.int32(0))
+        tokens, targets = _batch(bundle)
+        step = jax.jit(bundle.train_step)
+        first = last = None
+        for _ in range(6):
+            out = step(*state, tokens, targets)
+            state, loss = out[:-1], out[-1]
+            first = first if first is not None else float(loss)
+            last = float(loss)
+        assert last < first
+
+    def test_grad_clip_keeps_params_finite(self, tiny):
+        state = tiny.init(jnp.int32(0))
+        tokens, targets = _batch(tiny)
+        # adversarial: repeat many steps on one batch at high LR
+        bundle = ModelBundle("tiny", kernel="ref", learning_rate=0.05)
+        step = jax.jit(bundle.train_step)
+        for _ in range(10):
+            out = step(*state, tokens, targets)
+            state = out[:-1]
+        assert all(bool(jnp.all(jnp.isfinite(s))) for s in state[: len(tiny.param_specs)])
+
+
+class TestConfigVariants:
+    def test_moe_swap_changes_only_ffn(self):
+        dense = build_model_config("tiny")
+        moe = build_model_config("tiny", moe=True)
+        assert dense.decoder.layer.feed_forward.klass.__name__ == "FeedForward"
+        assert moe.decoder.layer.feed_forward.klass is MoE
+        # attention untouched (strict encapsulation)
+        assert (
+            dense.decoder.layer.self_attention.klass
+            is moe.decoder.layer.self_attention.klass
+        )
+
+    def test_rope_toggle(self):
+        on = build_model_config("tiny", rope=True)
+        off = build_model_config("tiny", rope=False)
+        assert on.decoder.layer.self_attention.pos_emb.klass is RotaryEmbedding
+        assert off.decoder.layer.self_attention.pos_emb.klass is NoPositionalEmbedding
+
+    def test_rope_improves_over_nope_is_not_required_but_both_train(self):
+        for rope in (True, False):
+            bundle = ModelBundle("tiny", rope=rope, kernel="ref")
+            state = bundle.init(jnp.int32(0))
+            out = bundle.train_step(*state, *_batch(bundle))
+            assert np.isfinite(float(out[-1]))
+
+
+class TestServing:
+    @pytest.fixture(scope="class")
+    def setup(self):
+        bundle = ModelBundle("tiny", kernel="ref")
+        state = bundle.init(jnp.int32(7))
+        params = state[: len(bundle.param_specs)]
+        return bundle, params
+
+    def test_prefill_decode_matches_full_forward_greedy(self, setup):
+        """Greedy generation via prefill+decode == argmax over the full
+        forward pass run incrementally (the §6 unification check)."""
+        bundle, params = setup
+        b, s = 2, 10
+        tokens = jax.random.randint(jax.random.PRNGKey(5), (b, s), 0, 256, jnp.int32)
+        plen = jnp.array([6, 9], jnp.int32)
+        nt, kc, vc = bundle.prefill(*params, tokens, plen)
+        # Reference: full forward, take argmax at plen-1
+        n = len(bundle.param_specs)
+        tree = jax.tree_util.tree_unflatten(bundle.treedef, params)
+        logits = bundle.model._children["decoder"](tree["decoder"], tokens)
+        for i in range(b):
+            expected = int(jnp.argmax(logits[i, int(plen[i]) - 1]))
+            assert int(nt[i]) == expected
+
+    def test_decode_continues_consistently(self, setup):
+        """decode() after prefill == running the full forward over the
+        extended sequence (token-level equivalence, greedy)."""
+        bundle, params = setup
+        b, s = 1, 8
+        tokens = jax.random.randint(jax.random.PRNGKey(9), (b, s), 0, 256, jnp.int32)
+        plen = jnp.array([s], jnp.int32)
+        nt, kc, vc = bundle.prefill(*params, tokens, plen)
+        pos = plen.astype(jnp.int32)
+        generated = [int(nt[0])]
+        for _ in range(4):
+            nt, kc, vc = bundle.decode(*params, kc, vc, pos, nt)
+            generated.append(int(nt[0]))
+            pos = pos + 1
+        # reference: grow the sequence with the generated tokens
+        n = len(bundle.param_specs)
+        tree = jax.tree_util.tree_unflatten(bundle.treedef, params)
+        seq = list(map(int, tokens[0]))
+        for g_prev in generated[:-1]:
+            seq_arr = jnp.array([seq + [g_prev]], jnp.int32)
+            logits = bundle.model._children["decoder"](tree["decoder"], seq_arr)
+            seq.append(g_prev)
+        # last generated token from reference
+        logits = bundle.model._children["decoder"](tree["decoder"], jnp.array([seq], jnp.int32))
+        expected_last = int(jnp.argmax(logits[0, -1]))
+        assert generated[-1] == expected_last
+
+    def test_insert_slot(self, setup):
+        bundle, params = setup
+        hp = bundle.hp
+        L, H, dh, S = hp["num_layers"], hp["num_heads"], hp["head_dim"], hp["max_seq_len"]
+        full_k = jnp.zeros((L, 4, S, H, dh))
+        full_v = jnp.zeros((L, 4, S, H, dh))
+        one_k = jnp.ones((L, 1, S, H, dh))
+        one_v = jnp.ones((L, 1, S, H, dh)) * 2
+        fk, fv = bundle.insert_slot(full_k, full_v, one_k, one_v, jnp.int32(2))
+        assert float(fk[:, 2].min()) == 1.0
+        assert float(fv[:, 2].max()) == 2.0
+        assert float(fk[:, 0].max()) == 0.0
+        assert float(fk[:, 3].max()) == 0.0
+
+    def test_decode_rows_independent(self, setup):
+        """Continuous batching soundness: a row's decode output must not
+        depend on other rows in the batch."""
+        bundle, params = setup
+        b, s = 2, 8
+        tokens = jax.random.randint(jax.random.PRNGKey(2), (b, s), 0, 256, jnp.int32)
+        plen = jnp.array([8, 4], jnp.int32)
+        nt, kc, vc = bundle.prefill(*params, tokens, plen)
+        nt2, _, _ = bundle.decode(*params, kc, vc, plen, nt)
+        # same row 0 alone (batch of 1)
+        nt_solo, kc1, vc1 = bundle.prefill(*params, tokens[:1], plen[:1])
+        nt2_solo, _, _ = bundle.decode(*params, kc1, vc1, plen[:1], nt_solo)
+        assert int(nt[0]) == int(nt_solo[0])
+        assert int(nt2[0]) == int(nt2_solo[0])
+
+
+class TestParamAccounting:
+    def test_param_counts_match_presets(self):
+        from compile.configs import PRESETS, param_count
+
+        for preset in ("tiny", "small"):
+            bundle = ModelBundle(preset, kernel="ref")
+            approx = param_count(PRESETS[preset])
+            actual = bundle.param_count()
+            # tied embedding: approx counts it twice, allow slack
+            assert abs(actual - approx) / approx < 0.5, (preset, actual, approx)
+
+    def test_base100m_is_about_100m(self):
+        from compile.configs import PRESETS, param_count
+
+        approx = param_count(PRESETS["base100m"])
+        assert 80e6 < approx < 130e6

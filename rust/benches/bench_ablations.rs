@@ -1,0 +1,119 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!   1. remat policy  (memory <-> recompute tradeoff, 70B @ v5p)
+//!   2. quantization  (int8/fp8 step-time effect per platform)
+//!   3. checkpoint shard workers (data-sharded serialization, §5)
+//!   4. continuous-batcher slot count (occupancy vs queue delay)
+
+use axlearn::checkpoint::format::CheckpointData;
+use axlearn::checkpoint::saver::{Checkpointer, CheckpointerOptions};
+use axlearn::perfmodel::chips;
+use axlearn::perfmodel::estimator::{estimate_step, StepSpec, SystemProfile};
+use axlearn::perfmodel::{Strategy, TransformerShape};
+use axlearn::util::stats::time_it;
+
+fn main() {
+    println!("=== Ablation 1: remat policy (Llama2-70B, v5p-1024, AXLearn) ===");
+    println!("{:<14} {:>10} {:>8} {:>12}", "policy", "step(s)", "MFU", "HBM(GB)");
+    for policy in ["none", "save_linear", "save_qkvo", "offload_dots", "full"] {
+        let spec = StepSpec {
+            shape: TransformerShape::llama2_70b(),
+            strategy: Strategy::fsdp_only(512),
+            global_batch: 1024,
+            seq_len: 4096,
+            quantization: "none".into(),
+            remat_policy: policy.into(),
+        };
+        match estimate_step(&spec, &chips::tpu_v5p(), &SystemProfile::axlearn()) {
+            Ok(e) => println!(
+                "{:<14} {:>10.2} {:>7.1}% {:>12.1}",
+                policy, e.step_time_s, e.mfu * 100.0, e.hbm_used_bytes / 1e9
+            ),
+            Err(_) => println!("{:<14} {:>10} {:>8} {:>12}", policy, "OOM", "-", "-"),
+        }
+    }
+
+    println!("\n=== Ablation 2: quantization (Llama2-7B) ===");
+    for (chip, q) in [
+        (chips::h100(), "none"),
+        (chips::h100(), "fp8"),
+        (chips::tpu_v5e(), "none"),
+        (chips::tpu_v5e(), "int8"),
+    ] {
+        let chips_n = 256;
+        let spec = StepSpec {
+            shape: TransformerShape::llama2_7b(),
+            strategy: Strategy::fsdp_only(chips_n),
+            global_batch: 1024,
+            seq_len: 4096,
+            quantization: q.into(),
+            remat_policy: "auto".into(),
+        };
+        let e = estimate_step(&spec, &chip, &SystemProfile::axlearn()).unwrap();
+        println!(
+            "{:<8} quant={:<5} step {:>6.2}s  tokens/s {:>10.0}",
+            chip.name, q, e.step_time_s, e.tokens_per_s
+        );
+    }
+
+    println!("\n=== Ablation 3: checkpoint shard workers (64 MB state, real disk) ===");
+    let data = CheckpointData {
+        step: 1,
+        tensors: (0..64).map(|i| (format!("t{i}"), vec![1.0f32; 262_144])).collect(),
+    };
+    for workers in [1usize, 2, 4, 8] {
+        let dir = std::env::temp_dir().join(format!("axl_ablate_ckpt_{workers}"));
+        std::fs::remove_dir_all(&dir).ok();
+        let mut c = Checkpointer::new(CheckpointerOptions {
+            dir,
+            async_save: false,
+            num_workers: workers,
+            max_concurrent_shards: workers,
+            ..Default::default()
+        })
+        .unwrap();
+        let (_, dt) = time_it(|| c.save(data.clone()).unwrap());
+        println!("workers={workers}: save {:.1} ms", dt.as_secs_f64() * 1e3);
+    }
+
+    println!("\n=== Ablation 4: batcher slots (pure scheduling, synthetic 10ms decode) ===");
+    use axlearn::serving::{BatcherOptions, ContinuousBatcher, Workload, WorkloadOptions};
+    for slots in [1usize, 2, 4, 8, 16] {
+        let w = Workload::sharegpt_like(WorkloadOptions {
+            num_requests: 64,
+            request_rate: 50.0,
+            max_input_len: 64,
+            max_output_len: 16,
+            vocab: 1000,
+            seed: 1,
+        });
+        let mut b = ContinuousBatcher::new(BatcherOptions {
+            slots,
+            kv_pages: 4096,
+            page_tokens: 16,
+        });
+        for r in &w.requests {
+            b.enqueue(r.clone());
+        }
+        let mut clock = 0.0f64;
+        let mut rounds = 0u64;
+        while b.has_work() {
+            if b.active_slots() == 0 {
+                if let Some(t) = b.next_arrival() {
+                    clock = clock.max(t);
+                }
+            }
+            for (slot, _r) in b.admit(clock) {
+                clock += 0.02; // synthetic prefill
+                b.on_prefill(slot, 1, clock);
+            }
+            if b.active_slots() == 0 {
+                continue;
+            }
+            let toks = vec![1i32; slots];
+            clock += 0.010; // synthetic decode round
+            rounds += 1;
+            b.on_decode(&toks, clock).unwrap();
+        }
+        println!("slots={slots:>2}: makespan {clock:>7.2}s  decode rounds {rounds}");
+    }
+}

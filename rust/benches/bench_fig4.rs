@@ -1,0 +1,12 @@
+//! Bench: Figure 4 (weak scaling to 32,768 chips).
+
+use axlearn::experiments::{fig4, render_fig4};
+use axlearn::util::stats::bench;
+
+fn main() {
+    println!("=== Figure 4: weak scaling (simulated TPU v5p) ===\n");
+    println!("{}", render_fig4(&fig4()));
+    println!("{}", bench("fig4_sweep", 50, || {
+        let _ = fig4();
+    }).report());
+}

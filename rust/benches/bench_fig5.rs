@@ -1,0 +1,26 @@
+//! Bench: Figure 5 (throughput vs request rate) — real CPU PJRT runs.
+//! Requires `make artifacts`.
+
+use std::sync::Arc;
+
+use axlearn::experiments::{fig5_local, render_fig5};
+use axlearn::runtime::{Manifest, RuntimeClient};
+
+fn main() {
+    let client = Arc::new(RuntimeClient::cpu().expect("pjrt"));
+    let manifest = Manifest::load(&axlearn::artifacts_dir()).expect("make artifacts first");
+    println!("=== Figure 5: serving throughput vs request rate ===\n");
+    let pts = fig5_local(&manifest, client, &[0.5, 1.0, 2.0, 4.0], 10).expect("runs");
+    println!("{}", render_fig5(&pts));
+    // the Figure-5 claim is the gap, not the absolute numbers
+    for rate in [0.5, 1.0, 2.0, 4.0] {
+        let ax = pts.iter().find(|p| p.rate == rate && p.system == "AXLearn").unwrap();
+        let vl = pts.iter().find(|p| p.rate == rate && p.system == "vLLM-style").unwrap();
+        println!(
+            "rate {rate:>4}: AXLearn {:.0} tok/s vs static {:.0} tok/s (x{:.2})",
+            ax.throughput_tok_s,
+            vl.throughput_tok_s,
+            ax.throughput_tok_s / vl.throughput_tok_s
+        );
+    }
+}

@@ -1,0 +1,67 @@
+//! Bench: L3 runtime hot paths (§Perf): step execution breakdown, state
+//! host round-trip, checkpoint serialization, batcher admission, paged
+//! allocator, collective sim, config materialization.
+//! Requires `make artifacts` for the PJRT sections.
+
+use std::sync::Arc;
+
+use axlearn::checkpoint::format::{to_bytes, CheckpointData};
+use axlearn::runtime::{Manifest, RuntimeClient, TrainSession};
+use axlearn::serving::paged::PagedKvAllocator;
+use axlearn::util::stats::bench;
+
+fn main() {
+    // pure-rust hot paths
+    println!("{}", bench("config_materialize", 500, || {
+        let cfg = axlearn::config::registry::trainer_for_preset("small");
+        let _ = axlearn::composer::materialize(
+            &cfg,
+            "tpu-v5e-256-4",
+            1024,
+            &axlearn::config::mesh_rules::paper_appendix_a_rules(),
+        )
+        .unwrap();
+    }).report());
+
+    let data = CheckpointData {
+        step: 1,
+        tensors: (0..64).map(|i| (format!("t{i}"), vec![0.5f32; 65536])).collect(),
+    };
+    let bytes = to_bytes(&data).len();
+    let r = bench("checkpoint_serialize_16MB", 20, || {
+        let _ = to_bytes(&data);
+    });
+    println!("{}   ({:.0} MB/s)", r.report(), bytes as f64 / 1e6 / r.time.mean);
+
+    println!("{}", bench("paged_allocator_1k_ops", 200, || {
+        let mut a = PagedKvAllocator::new(1024, 16);
+        for i in 0..500u64 {
+            if a.can_admit(64, 16) {
+                a.admit(i, 64, 16).unwrap();
+            } else if i >= 10 {
+                let _ = a.release(i - 10);
+            }
+        }
+    }).report());
+
+    println!("{}", bench("collective_allreduce_1MB_x8", 100, || {
+        let shards = vec![vec![1.0f32; 262_144 / 8]; 8];
+        let mut c = axlearn::distributed::SimCollective::new();
+        let _ = c.all_reduce(&shards).unwrap();
+    }).report());
+
+    // PJRT paths
+    let client = Arc::new(RuntimeClient::cpu().expect("pjrt"));
+    let manifest = Manifest::load(&axlearn::artifacts_dir()).expect("make artifacts first");
+    let mut session = TrainSession::open(client, &manifest, "tiny").unwrap();
+    session.init(0).unwrap();
+    let n = session.batch * session.seq;
+    let tokens = vec![1i32; n];
+    let targets = vec![2i32; n];
+    println!("{}", bench("tiny_train_step_end_to_end", 30, || {
+        let _ = session.step(&tokens, &targets).unwrap();
+    }).report());
+    println!("{}", bench("tiny_state_to_host_snapshot", 30, || {
+        let _ = session.state_to_host().unwrap();
+    }).report());
+}

@@ -1,0 +1,20 @@
+//! Bench: Table 2 (LoC-complexity).  Regenerates the table and times the
+//! measurement harness itself (config traversal is a production hot path:
+//! it runs per experiment materialization).
+
+use axlearn::loc::harness::{render_table2, sweep_experiments, table2};
+use axlearn::util::stats::bench;
+
+fn main() {
+    println!("=== Table 2: LoC-complexity (measured) ===\n");
+    println!("{}", render_table2(&table2()));
+    let (swapped, changed) = sweep_experiments(1000);
+    println!("1000-experiment MoE sweep: {swapped} swaps, {changed} existing-module changes\n");
+
+    println!("{}", bench("table2_full_measurement", 10, || {
+        let _ = table2();
+    }).report());
+    println!("{}", bench("replace_config_per_experiment", 200, || {
+        let _ = sweep_experiments(10);
+    }).report());
+}

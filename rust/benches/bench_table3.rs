@@ -1,0 +1,14 @@
+//! Bench: Table 3 (training performance across heterogeneous hardware).
+//! Prints the paper's rows from the simulated testbeds and times the
+//! estimator (it runs inside every AOT check).
+
+use axlearn::experiments::{render_table3, table3};
+use axlearn::util::stats::bench;
+
+fn main() {
+    println!("=== Table 3: training performance (simulated; DESIGN.md §2) ===\n");
+    println!("{}", render_table3(&table3()));
+    println!("{}", bench("table3_all_rows", 20, || {
+        let _ = table3();
+    }).report());
+}

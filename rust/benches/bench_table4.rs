@@ -1,0 +1,22 @@
+//! Bench: Table 4 (inference latency) — real CPU PJRT runs of the
+//! continuous engine vs the static baseline, plus paper-scale projection.
+//! Requires `make artifacts`.
+
+use std::sync::Arc;
+
+use axlearn::experiments::{render_table4, table4_local, table4_projected};
+use axlearn::runtime::{Manifest, RuntimeClient};
+
+fn main() {
+    let client = Arc::new(RuntimeClient::cpu().expect("pjrt"));
+    let manifest = Manifest::load(&axlearn::artifacts_dir()).expect("make artifacts first");
+    println!("=== Table 4: inference latency ===\n-- measured (real CPU PJRT, small model):");
+    let (rows, ratios) = table4_local(&manifest, client, 16).expect("local run");
+    println!("{}", render_table4(&rows));
+    println!(
+        "measured scheduling ratios: TTFT x{:.2}, TPOT x{:.2}\n",
+        ratios.0, ratios.1
+    );
+    println!("-- projected at paper scale (analytic AXLearn + measured ratios):");
+    println!("{}", render_table4(&table4_projected(ratios)));
+}

@@ -1,0 +1,245 @@
+//! On-disk checkpoint format.
+//!
+//! Layout (little-endian):
+//! ```text
+//! magic   "AXCK"        4 bytes
+//! version u32           (currently 1)
+//! step    u64
+//! count   u32           number of tensors
+//! per tensor:
+//!   name_len u32, name utf-8 bytes
+//!   elem_count u64
+//!   f32 data (elem_count * 4 bytes)
+//! crc32   u32           over everything before it
+//! ```
+//! Shapes are not stored: the manifest is the source of truth for
+//! geometry (restore validates element counts against it), mirroring how
+//! the paper treats code, not checkpoints, as the schema.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+const MAGIC: &[u8; 4] = b"AXCK";
+const VERSION: u32 = 1;
+
+/// A checkpoint's payload: the step and named tensors, in state order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CheckpointData {
+    pub step: u64,
+    pub tensors: Vec<(String, Vec<f32>)>,
+}
+
+/// crc32 (IEEE), slicing-by-8 (offline: no crate).
+///
+/// §Perf: the original per-call, per-byte implementation measured
+/// 117 MB/s and dominated checkpoint serialization; the cached 8-way
+/// sliced table reaches >1 GB/s (see EXPERIMENTS.md §Perf).
+pub fn crc32(data: &[u8]) -> u32 {
+    use once_cell::sync::Lazy;
+    static TABLES: Lazy<[[u32; 256]; 8]> = Lazy::new(|| {
+        let mut t = [[0u32; 256]; 8];
+        for i in 0..256u32 {
+            let mut c = i;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB88320 ^ (c >> 1) } else { c >> 1 };
+            }
+            t[0][i as usize] = c;
+        }
+        for k in 1..8 {
+            for i in 0..256 {
+                let prev = t[k - 1][i];
+                t[k][i] = t[0][(prev & 0xFF) as usize] ^ (prev >> 8);
+            }
+        }
+        t
+    });
+    let t = &*TABLES;
+    let mut crc = 0xFFFFFFFFu32;
+    let mut chunks = data.chunks_exact(8);
+    for c in &mut chunks {
+        let lo = u32::from_le_bytes(c[0..4].try_into().unwrap()) ^ crc;
+        let hi = u32::from_le_bytes(c[4..8].try_into().unwrap());
+        crc = t[7][(lo & 0xFF) as usize]
+            ^ t[6][((lo >> 8) & 0xFF) as usize]
+            ^ t[5][((lo >> 16) & 0xFF) as usize]
+            ^ t[4][(lo >> 24) as usize]
+            ^ t[3][(hi & 0xFF) as usize]
+            ^ t[2][((hi >> 8) & 0xFF) as usize]
+            ^ t[1][((hi >> 16) & 0xFF) as usize]
+            ^ t[0][(hi >> 24) as usize];
+    }
+    for &b in chunks.remainder() {
+        crc = t[0][((crc ^ b as u32) & 0xFF) as usize] ^ (crc >> 8);
+    }
+    crc ^ 0xFFFFFFFF
+}
+
+/// Serialize a checkpoint into bytes.
+pub fn to_bytes(data: &CheckpointData) -> Vec<u8> {
+    let payload: usize = data
+        .tensors
+        .iter()
+        .map(|(n, d)| 4 + n.len() + 8 + d.len() * 4)
+        .sum();
+    let mut out = Vec::with_capacity(20 + payload + 4);
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.extend_from_slice(&data.step.to_le_bytes());
+    out.extend_from_slice(&(data.tensors.len() as u32).to_le_bytes());
+    for (name, values) in &data.tensors {
+        out.extend_from_slice(&(name.len() as u32).to_le_bytes());
+        out.extend_from_slice(name.as_bytes());
+        out.extend_from_slice(&(values.len() as u64).to_le_bytes());
+        // bulk-copy f32s
+        let bytes: &[u8] =
+            unsafe { std::slice::from_raw_parts(values.as_ptr() as *const u8, values.len() * 4) };
+        out.extend_from_slice(bytes);
+    }
+    let crc = crc32(&out);
+    out.extend_from_slice(&crc.to_le_bytes());
+    out
+}
+
+/// Parse checkpoint bytes (validating magic, version, CRC).
+pub fn from_bytes(buf: &[u8]) -> Result<CheckpointData> {
+    if buf.len() < 24 {
+        bail!("checkpoint truncated ({} bytes)", buf.len());
+    }
+    let (body, crc_bytes) = buf.split_at(buf.len() - 4);
+    let want = u32::from_le_bytes(crc_bytes.try_into().unwrap());
+    let got = crc32(body);
+    if want != got {
+        bail!("checkpoint CRC mismatch: stored {want:#x}, computed {got:#x} (corrupt file)");
+    }
+    let mut p = 0usize;
+    let take = |p: &mut usize, n: usize| -> Result<&[u8]> {
+        if *p + n > body.len() {
+            bail!("checkpoint truncated at offset {p}");
+        }
+        let s = &body[*p..*p + n];
+        *p += n;
+        Ok(s)
+    };
+    if take(&mut p, 4)? != MAGIC {
+        bail!("not a checkpoint file (bad magic)");
+    }
+    let version = u32::from_le_bytes(take(&mut p, 4)?.try_into().unwrap());
+    if version != VERSION {
+        bail!("unsupported checkpoint version {version}");
+    }
+    let step = u64::from_le_bytes(take(&mut p, 8)?.try_into().unwrap());
+    let count = u32::from_le_bytes(take(&mut p, 4)?.try_into().unwrap()) as usize;
+    let mut tensors = Vec::with_capacity(count);
+    for _ in 0..count {
+        let name_len = u32::from_le_bytes(take(&mut p, 4)?.try_into().unwrap()) as usize;
+        let name = String::from_utf8(take(&mut p, name_len)?.to_vec())?;
+        let elems = u64::from_le_bytes(take(&mut p, 8)?.try_into().unwrap()) as usize;
+        let raw = take(&mut p, elems * 4)?;
+        let mut values = vec![0f32; elems];
+        unsafe {
+            std::ptr::copy_nonoverlapping(raw.as_ptr(), values.as_mut_ptr() as *mut u8, elems * 4);
+        }
+        tensors.push((name, values));
+    }
+    Ok(CheckpointData { step, tensors })
+}
+
+/// Write a checkpoint file atomically (write temp + rename).
+pub fn write_checkpoint(path: &Path, data: &CheckpointData) -> Result<()> {
+    let bytes = to_bytes(data);
+    let tmp = path.with_extension("tmp");
+    {
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {tmp:?}"))?;
+        f.write_all(&bytes)?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, path).with_context(|| format!("renaming into {path:?}"))?;
+    Ok(())
+}
+
+/// Read a checkpoint file.
+pub fn read_checkpoint(path: &Path) -> Result<CheckpointData> {
+    let mut buf = Vec::new();
+    std::fs::File::open(path)
+        .with_context(|| format!("opening {path:?}"))?
+        .read_to_end(&mut buf)?;
+    from_bytes(&buf).with_context(|| format!("parsing {path:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> CheckpointData {
+        CheckpointData {
+            step: 42,
+            tensors: vec![
+                ("param/w".into(), vec![1.0, -2.5, 3.25]),
+                ("opt_m/w".into(), vec![0.0; 7]),
+                ("step".into(), vec![42.0]),
+            ],
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let d = sample();
+        assert_eq!(from_bytes(&to_bytes(&d)).unwrap(), d);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("axck_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("ckpt_42.axck");
+        write_checkpoint(&p, &sample()).unwrap();
+        assert_eq!(read_checkpoint(&p).unwrap(), sample());
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let mut bytes = to_bytes(&sample());
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        let err = from_bytes(&bytes).unwrap_err().to_string();
+        assert!(err.contains("CRC"), "{err}");
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let bytes = to_bytes(&sample());
+        assert!(from_bytes(&bytes[..bytes.len() - 9]).is_err());
+        assert!(from_bytes(&bytes[..10]).is_err());
+    }
+
+    #[test]
+    fn bad_magic_detected() {
+        let mut bytes = to_bytes(&sample());
+        bytes[0] = b'Z';
+        // CRC still matches body? No: crc covers magic, so CRC fails first;
+        // rebuild with fixed CRC to reach the magic check.
+        let body_len = bytes.len() - 4;
+        let crc = crc32(&bytes[..body_len]);
+        bytes[body_len..].copy_from_slice(&crc.to_le_bytes());
+        let err = from_bytes(&bytes).unwrap_err().to_string();
+        assert!(err.contains("magic"), "{err}");
+    }
+
+    #[test]
+    fn crc32_known_vector() {
+        // CRC-32/IEEE of "123456789" is 0xCBF43926
+        assert_eq!(crc32(b"123456789"), 0xCBF43926);
+    }
+
+    #[test]
+    fn empty_tensor_list_ok() {
+        let d = CheckpointData {
+            step: 0,
+            tensors: vec![],
+        };
+        assert_eq!(from_bytes(&to_bytes(&d)).unwrap(), d);
+    }
+}

@@ -1,0 +1,20 @@
+//! Checkpointing (§5): async saves, data-sharded serialization with a
+//! concurrency bound, background garbage collection, multi-tier
+//! (node-local + remote) storage, and in-cluster restore.
+//!
+//! * [`format`] — the on-disk tensor format (own binary format + CRC; no
+//!   serde offline).
+//! * [`saver`] — the checkpointer: async background writer, shard
+//!   assignment over data-parallel workers, concurrency-bounded
+//!   serialization, GC policy.
+//! * [`multi_tier`] — frequent node-local saves + periodic remote syncs,
+//!   restore-from-healthy-replica (the mechanism behind the <10-minute
+//!   32k-chip restart claim, reproduced in `distributed::recovery`).
+
+pub mod format;
+pub mod multi_tier;
+pub mod saver;
+
+pub use format::{read_checkpoint, write_checkpoint, CheckpointData};
+pub use multi_tier::MultiTierCheckpointer;
+pub use saver::{Checkpointer, CheckpointerOptions};

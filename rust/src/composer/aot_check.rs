@@ -1,0 +1,126 @@
+//! AOT compile-check (§4.2): "analyze the memory and FLOPS utilization of
+//! a training program without executing a single line of the program,
+//! including catching errors like OOMs that would otherwise result in
+//! wasted resources".
+//!
+//! Given a materialized [`Plan`] and a target chip, report the per-chip
+//! memory picture and predicted utilization — from a single (CPU-only)
+//! host, before any accelerator is provisioned.  Because the same plan
+//! drives the simulated run, "a program that AOT-compiles will run".
+
+use anyhow::Result;
+
+use crate::perfmodel::chips::ChipSpec;
+use crate::perfmodel::estimator::{estimate_step, StepSpec, SystemProfile};
+
+use super::plan::Plan;
+
+/// The AOT analysis report.
+#[derive(Clone, Debug)]
+pub struct AotReport {
+    pub fits: bool,
+    pub hbm_used_bytes: f64,
+    pub hbm_capacity: f64,
+    pub predicted_step_time_s: f64,
+    pub predicted_mfu: f64,
+    pub remat_policy: String,
+    pub flops_per_step: f64,
+    /// Human-readable outcome ("OK" or the OOM message).
+    pub message: String,
+}
+
+/// Run the AOT check for a plan against a chip, under a system profile
+/// (defaults to AXLearn's own).
+pub fn aot_compile_check(plan: &Plan, chip: &ChipSpec, profile: Option<&SystemProfile>) -> Result<AotReport> {
+    let default_profile = SystemProfile::axlearn();
+    let profile = profile.unwrap_or(&default_profile);
+    let spec = StepSpec {
+        shape: plan.shape.clone(),
+        strategy: plan.strategy.clone(),
+        global_batch: plan.global_batch.max(plan.strategy.total_chips()),
+        seq_len: plan.seq_len,
+        quantization: plan.quantization.clone(),
+        remat_policy: if plan.remat_policy == "none" {
+            "auto".into()
+        } else {
+            plan.remat_policy.clone()
+        },
+    };
+    let flops = (spec.global_batch * spec.seq_len) as f64
+        * plan.shape.train_flops_per_token(plan.seq_len as u64);
+    match estimate_step(&spec, chip, profile) {
+        Ok(e) => Ok(AotReport {
+            fits: true,
+            hbm_used_bytes: e.hbm_used_bytes,
+            hbm_capacity: e.hbm_capacity,
+            predicted_step_time_s: e.step_time_s,
+            predicted_mfu: e.mfu,
+            remat_policy: e.remat_policy,
+            flops_per_step: flops,
+            message: "OK".into(),
+        }),
+        Err(err) => {
+            let msg = format!("{err:#}");
+            if msg.contains("OOM") {
+                Ok(AotReport {
+                    fits: false,
+                    hbm_used_bytes: f64::NAN,
+                    hbm_capacity: chip.hbm_bytes,
+                    predicted_step_time_s: f64::NAN,
+                    predicted_mfu: 0.0,
+                    remat_policy: "-".into(),
+                    flops_per_step: flops,
+                    message: msg,
+                })
+            } else {
+                Err(err)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::composer::plan::materialize;
+    use crate::config::mesh_rules::paper_appendix_a_rules;
+    use crate::config::registry::trainer_for_preset;
+    use crate::config::Value;
+    use crate::perfmodel::chips;
+
+    #[test]
+    fn tiny_fits_everywhere() {
+        let t = trainer_for_preset("tiny");
+        let plan = materialize(&t, "tpu-v5p-32", 32, &paper_appendix_a_rules()).unwrap();
+        let r = aot_compile_check(&plan, &chips::tpu_v5p(), None).unwrap();
+        assert!(r.fits, "{}", r.message);
+        assert!(r.predicted_mfu > 0.0);
+        assert!(r.hbm_used_bytes < r.hbm_capacity);
+    }
+
+    #[test]
+    fn oom_caught_without_running() {
+        // a deliberately absurd plan: base100m replicated on one v5e chip
+        // with a big batch and remat disabled
+        let mut t = trainer_for_preset("base100m");
+        t.at_path_mut("input").unwrap().set("batch_size", Value::Int(4096)).unwrap();
+        t.at_path_mut("input").unwrap().set("seq_len", Value::Int(8192)).unwrap();
+        let plan = materialize(&t, "cpu-local", 1, &paper_appendix_a_rules()).unwrap();
+        let mut no_remat = crate::perfmodel::SystemProfile::axlearn();
+        no_remat.allowed_remat = vec!["none"];
+        let r = aot_compile_check(&plan, &chips::tpu_v5e(), Some(&no_remat)).unwrap();
+        assert!(!r.fits);
+        assert!(r.message.contains("OOM"));
+    }
+
+    #[test]
+    fn same_codepath_for_aot_and_run() {
+        // The §4.2 guarantee: the AOT report's step estimate equals the
+        // estimator's answer for the same plan (it IS the same call).
+        let t = trainer_for_preset("small");
+        let plan = materialize(&t, "gpu-H100-32", 256, &paper_appendix_a_rules()).unwrap();
+        let r1 = aot_compile_check(&plan, &chips::h100(), None).unwrap();
+        let r2 = aot_compile_check(&plan, &chips::h100(), None).unwrap();
+        assert_eq!(r1.predicted_step_time_s, r2.predicted_step_time_s);
+    }
+}

@@ -1,0 +1,19 @@
+//! The AXLearn composer (§4, Figure 2): materializes a user's hierarchical
+//! trainer config into a concrete execution plan for a target platform —
+//! "selecting the appropriate mesh shape for the desired accelerator
+//! instance, applying sharding annotations, ... selecting appropriate
+//! attention kernels for the backend, and applying appropriate
+//! rematerialization strategies based on tagged points in the module
+//! hierarchy".
+//!
+//! Local (CPU) execution consumes the plan's `artifact` field through
+//! [`crate::runtime`]; simulated-scale execution consumes `strategy` /
+//! `remat` / `quantization` through [`crate::perfmodel`].
+
+pub mod aot_check;
+pub mod plan;
+pub mod sharding;
+
+pub use aot_check::{aot_compile_check, AotReport};
+pub use plan::{materialize, Plan};
+pub use sharding::{infer_bias_spec, resolve_partition_spec, ShardingSpec};

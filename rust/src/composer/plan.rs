@@ -1,0 +1,254 @@
+//! Config -> Plan materialization.
+
+use anyhow::{Context, Result};
+
+use crate::config::{ConfigNode, MeshRules};
+use crate::perfmodel::model_shapes::TransformerShape;
+use crate::perfmodel::Strategy;
+
+use super::sharding::{collect_sharding, ShardingSpec};
+
+/// A materialized execution plan: everything the runtime (local or
+/// simulated) needs, fully resolved.
+#[derive(Clone, Debug)]
+pub struct Plan {
+    /// Artifact base name (e.g. "small_moe") selecting the AOT HLO variant.
+    pub artifact: String,
+    /// Which graph kinds this plan will execute.
+    pub preset: String,
+    pub moe: bool,
+    pub rope: bool,
+    /// Resolved parallelism strategy (wildcards filled in).
+    pub strategy: Strategy,
+    /// Per-layer remat policy (from tagged points), or the trainer-wide
+    /// default.
+    pub remat_policy: String,
+    pub quantization: String,
+    /// Attention kernel backend after mesh-rule dispatch.
+    pub kernel_backend: String,
+    /// Parameter sharding annotations gathered from the layer configs.
+    pub sharding: Vec<ShardingSpec>,
+    /// Transformer shape math for this model.
+    pub shape: TransformerShape,
+    /// Batch/seq from the input config.
+    pub global_batch: usize,
+    pub seq_len: usize,
+    pub max_steps: u64,
+    pub seed: u64,
+}
+
+/// Derive the model shape from the *config tree* (not from a preset
+/// lookup): the composer must work for arbitrary composed models.
+pub fn shape_from_config(trainer: &ConfigNode) -> Result<TransformerShape> {
+    let dec = trainer.at_path("model.decoder")?;
+    let attn = trainer.at_path("model.decoder.layer.self_attention")?;
+    let ffn = trainer.at_path("model.decoder.layer.feed_forward")?;
+    let moe = ffn.klass == "MoE";
+    let (experts, active) = if moe {
+        (ffn.get_int("num_experts")? as u64, ffn.get_int("top_k")? as u64)
+    } else {
+        (1, 1)
+    };
+    Ok(TransformerShape {
+        name: trainer.get_str("preset").unwrap_or_else(|_| "custom".into()),
+        vocab: dec.get_int("vocab_size").context("model.decoder.vocab_size unset")? as u64,
+        model_dim: dec.get_int("model_dim")? as u64,
+        num_layers: dec.get_int("num_layers")? as u64,
+        num_heads: attn.get_int("num_heads")? as u64,
+        head_dim: attn.get_int("head_dim")? as u64,
+        ffn_dim: ffn.get_int("hidden_dim")? as u64,
+        kv_heads: attn.get_int("num_heads")? as u64,
+        num_experts: experts,
+        active_experts: active,
+        tied_lm_head: dec.get_bool("tied_lm_head")?,
+    })
+}
+
+/// Materialize a trainer config for a target instance type.
+///
+/// Steps (paper §4/Figure 2): apply mesh rules for the target, resolve the
+/// mesh wildcards against the chip count, collect sharding annotations,
+/// resolve tagged remat points, pick the kernel backend, and select the
+/// AOT artifact variant.
+pub fn materialize(
+    trainer: &ConfigNode,
+    instance_type: &str,
+    total_chips: usize,
+    rules: &MeshRules,
+) -> Result<Plan> {
+    let mut cfg = trainer.clone();
+    let matched = rules.apply(instance_type, &mut cfg)?;
+    if let Some(pattern) = &matched {
+        // matched rules may be logged by callers; keep composer pure
+        let _ = pattern;
+    }
+
+    let mesh_shape = cfg.get_int_list("mesh_shape")?;
+    let mesh_names = cfg.get_str_list("mesh_axis_names")?;
+    let strategy = Strategy::from_mesh(&mesh_shape, &mesh_names, total_chips)
+        .with_context(|| format!("resolving mesh for {instance_type} ({total_chips} chips)"))?;
+
+    let shape = shape_from_config(&cfg)?;
+
+    // remat: tagged point on the transformer layer wins over trainer-wide
+    let layer = cfg.at_path("model.decoder.layer")?;
+    let tagged = layer.get_str("remat_spec").unwrap_or_else(|_| "none".into());
+    let remat_policy = if tagged != "none" {
+        tagged
+    } else {
+        cfg.get_str("remat_policy")?
+    };
+
+    let attn = cfg.at_path("model.decoder.layer.self_attention")?;
+    let kernel_backend = if attn.klass == "FlashAttentionLayer" {
+        let b = attn.get_str("backend")?;
+        if b == "auto" {
+            default_backend(instance_type)
+        } else {
+            b
+        }
+    } else {
+        match attn.get_str("kernel")?.as_str() {
+            "flash" => default_backend(instance_type),
+            other => other.to_string(),
+        }
+    };
+
+    let moe = cfg.at_path("model.decoder.layer.feed_forward")?.klass == "MoE";
+    let pos = cfg.at_path("model.decoder.layer.self_attention.pos_emb")?;
+    let rope = pos.klass == "RotaryEmbedding";
+
+    let preset = cfg.get_str("preset")?;
+    let mut artifact = preset.clone();
+    if moe {
+        artifact.push_str("_moe");
+    }
+    if !rope {
+        artifact.push_str("_nope");
+    }
+
+    let input = cfg.at_path("input")?;
+    let global_batch = input.get_int("batch_size")? as usize;
+    let seq_len = input.get_int("seq_len")? as usize;
+    strategy.validate(global_batch.max(strategy.total_chips()), shape.num_layers as usize)?;
+
+    Ok(Plan {
+        artifact,
+        preset,
+        moe,
+        rope,
+        strategy,
+        remat_policy,
+        quantization: cfg.get_str("quantization")?,
+        kernel_backend,
+        sharding: collect_sharding(&cfg),
+        shape,
+        global_batch,
+        seq_len,
+        max_steps: cfg.get_int("max_steps")? as u64,
+        seed: cfg.get_int("seed")? as u64,
+    })
+}
+
+/// Backend dispatch table of §4.2: cuDNN on GPU (pallas fallback), NKI on
+/// Trainium, SplashAttention-Pallas on TPU.
+pub fn default_backend(instance_type: &str) -> String {
+    let t = instance_type.to_ascii_lowercase();
+    if t.starts_with("gpu-") {
+        "cudnn".into()
+    } else if t.starts_with("trn") {
+        "nki".into()
+    } else if t.starts_with("tpu-") {
+        "pallas".into()
+    } else {
+        // local CPU: the interpret-mode pallas path baked into artifacts
+        "pallas-interpret".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::mesh_rules::paper_appendix_a_rules;
+    use crate::config::registry::{default_config, trainer_for_preset};
+    use crate::config::{replace_config, Value};
+
+    fn rules() -> MeshRules {
+        paper_appendix_a_rules()
+    }
+
+    #[test]
+    fn materialize_tiny_local() {
+        let t = trainer_for_preset("tiny");
+        let plan = materialize(&t, "cpu-local", 1, &rules()).unwrap();
+        assert_eq!(plan.artifact, "tiny");
+        assert_eq!(plan.strategy.total_chips(), 1);
+        assert_eq!(plan.kernel_backend, "pallas-interpret");
+        assert!(!plan.moe && plan.rope);
+    }
+
+    #[test]
+    fn moe_swap_changes_artifact_only() {
+        let mut t = trainer_for_preset("tiny");
+        replace_config(&mut t, "FeedForward", &|old| {
+            default_config("MoE")
+                .with("input_dim", old.get("input_dim").unwrap().clone())
+                .with("hidden_dim", old.get("hidden_dim").unwrap().clone())
+                .with("num_experts", Value::Int(4))
+        });
+        let plan = materialize(&t, "cpu-local", 1, &rules()).unwrap();
+        assert_eq!(plan.artifact, "tiny_moe");
+        assert!(plan.moe);
+        assert_eq!(plan.shape.num_experts, 4);
+    }
+
+    #[test]
+    fn mesh_rule_shapes_strategy_per_target() {
+        let t = trainer_for_preset("small");
+        let gpu = materialize(&t, "gpu-H100-32", 256, &rules()).unwrap();
+        assert_eq!(gpu.strategy.tensor, 8);
+        assert_eq!(gpu.strategy.fsdp, 32);
+        assert_eq!(gpu.quantization, "fp8");
+        assert_eq!(gpu.remat_policy, "save_qkvo");
+        let tpu = materialize(&t, "tpu-v5e-256-4", 1024, &rules()).unwrap();
+        assert_eq!(tpu.strategy.fsdp, 256);
+        assert_eq!(tpu.strategy.data, 4);
+        assert_eq!(tpu.quantization, "int8");
+        assert_eq!(tpu.remat_policy, "offload_dots");
+    }
+
+    #[test]
+    fn kernel_dispatch_per_backend() {
+        assert_eq!(default_backend("gpu-H100-8"), "cudnn");
+        assert_eq!(default_backend("trn2-x16"), "nki");
+        assert_eq!(default_backend("tpu-v5p-512"), "pallas");
+        let t = trainer_for_preset("small");
+        let plan = materialize(&t, "trn2-16", 64, &rules()).unwrap();
+        assert_eq!(plan.kernel_backend, "nki");
+    }
+
+    #[test]
+    fn shape_from_config_matches_preset_math() {
+        let t = trainer_for_preset("base100m");
+        let shape = shape_from_config(&t).unwrap();
+        let preset = TransformerShape::preset("base100m").unwrap();
+        assert_eq!(shape.params(), preset.params());
+    }
+
+    #[test]
+    fn bad_mesh_is_an_error() {
+        let mut t = trainer_for_preset("tiny");
+        t.set("mesh_shape", Value::IntList(vec![7, 3])).unwrap();
+        t.set("mesh_axis_names", Value::StrList(vec!["data".into(), "fsdp".into()]))
+            .unwrap();
+        assert!(materialize(&t, "cpu-local", 16, &rules()).is_err());
+    }
+
+    #[test]
+    fn unset_required_field_is_an_error() {
+        let mut t = trainer_for_preset("tiny");
+        t.at_path_mut("model.decoder").unwrap().set("vocab_size", Value::Null).unwrap();
+        let err = materialize(&t, "cpu-local", 1, &rules()).unwrap_err();
+        assert!(format!("{err:#}").contains("vocab_size"));
+    }
+}

@@ -1,0 +1,108 @@
+//! Sharding annotations (§4.2 "Config-based parallelism").
+//!
+//! Layers carry `param_partition_spec` fields; the composer collects them
+//! into a flat annotation table the runtime/perfmodel consume.  The bias
+//! spec is *inferred* from the weight spec (the paper calls this out:
+//! "AXLearn's Linear layer implementation automatically infers the bias
+//! sharding from the sharding of the model weights, which minimizes
+//! communication costs").
+
+use crate::config::{visit, ConfigNode, Value};
+
+/// One parameter's sharding annotation.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardingSpec {
+    /// Config path of the owning layer.
+    pub layer_path: String,
+    /// Parameter name within the layer ("weight", "bias").
+    pub param: String,
+    /// Mesh axis per tensor dim; "replicated" marks an unsharded dim.
+    pub axes: Vec<String>,
+}
+
+/// Resolve a partition spec against the mesh axis names: axes not present
+/// in the mesh degrade to replication (XLA semantics: missing axis =>
+/// replicated), preserving validity across targets.
+pub fn resolve_partition_spec(spec: &[String], mesh_axes: &[String]) -> Vec<String> {
+    spec.iter()
+        .map(|a| {
+            if mesh_axes.iter().any(|m| m == a) {
+                a.clone()
+            } else {
+                "replicated".to_string()
+            }
+        })
+        .collect()
+}
+
+/// Infer the bias spec from the weight spec: the bias is sharded like the
+/// weight's *output* dim (last axis), everything else replicated.
+pub fn infer_bias_spec(weight_axes: &[String]) -> Vec<String> {
+    match weight_axes.last() {
+        Some(last) => vec![last.clone()],
+        None => vec![],
+    }
+}
+
+/// Walk the config tree collecting every `param_partition_spec`.
+pub fn collect_sharding(trainer: &ConfigNode) -> Vec<ShardingSpec> {
+    let mut out = Vec::new();
+    visit(trainer, &mut |path, node| {
+        if let Ok(Value::StrList(axes)) = node.get("param_partition_spec") {
+            out.push(ShardingSpec {
+                layer_path: path.to_string(),
+                param: "weight".into(),
+                axes: axes.clone(),
+            });
+            if matches!(node.get("use_bias"), Ok(Value::Bool(true))) {
+                out.push(ShardingSpec {
+                    layer_path: path.to_string(),
+                    param: "bias".into(),
+                    axes: infer_bias_spec(axes),
+                });
+            }
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::registry::trainer_for_preset;
+
+    #[test]
+    fn resolve_degrades_missing_axes_to_replicated() {
+        let spec = vec!["fsdp".to_string(), "model".to_string()];
+        let mesh = vec!["data".to_string(), "fsdp".to_string()];
+        assert_eq!(
+            resolve_partition_spec(&spec, &mesh),
+            vec!["fsdp".to_string(), "replicated".to_string()]
+        );
+    }
+
+    #[test]
+    fn bias_inherits_output_axis() {
+        // ("fsdp", "model") weights => ("model",) bias — the paper's example.
+        let axes = vec!["fsdp".to_string(), "model".to_string()];
+        assert_eq!(infer_bias_spec(&axes), vec!["model".to_string()]);
+    }
+
+    #[test]
+    fn collect_finds_every_linear() {
+        let t = trainer_for_preset("small");
+        let specs = collect_sharding(&t);
+        // qkv_proj + out_proj templates + ffn linear template
+        assert!(specs.len() >= 3, "{specs:?}");
+        for s in &specs {
+            assert_eq!(s.axes, vec!["fsdp".to_string(), "model".to_string()]);
+        }
+    }
+
+    #[test]
+    fn bias_specs_only_when_bias_enabled() {
+        let t = trainer_for_preset("small");
+        let specs = collect_sharding(&t);
+        assert!(specs.iter().all(|s| s.param == "weight"));
+    }
+}

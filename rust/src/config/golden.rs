@@ -1,0 +1,142 @@
+//! Golden-configuration serialization (paper §7.3).
+//!
+//! "Key training configs are serialized into human readable format and
+//! committed along with code changes" — changes produce reviewable diffs,
+//! trigger code-owner review, and give experiments a traceable history.
+//!
+//! The format is line-oriented and canonical (sorted fields), so identical
+//! configs always serialize identically and `diff` output is meaningful.
+//! `rust/tests/golden_configs.rs` compares the presets against the files
+//! committed under `rust/golden/`.
+
+use super::node::{ConfigNode, Value};
+
+/// Serialize a config tree to canonical golden lines.
+pub fn to_golden_lines(cfg: &ConfigNode) -> Vec<String> {
+    let mut lines = Vec::new();
+    emit(cfg, "root", &mut lines);
+    lines
+}
+
+fn emit(node: &ConfigNode, path: &str, lines: &mut Vec<String>) {
+    lines.push(format!("{path}: {}", node.klass));
+    for (name, value) in node.fields_iter() {
+        let field_path = format!("{path}.{name}");
+        match value {
+            Value::Config(c) => emit(c, &field_path, lines),
+            Value::ConfigList(cs) => {
+                for (i, c) in cs.iter().enumerate() {
+                    emit(c, &format!("{field_path}[{i}]"), lines);
+                }
+            }
+            other => lines.push(format!("{field_path} = {other}")),
+        }
+    }
+}
+
+/// Serialize to a single string (with trailing newline, as committed).
+pub fn to_golden_string(cfg: &ConfigNode) -> String {
+    let mut s = to_golden_lines(cfg).join("\n");
+    s.push('\n');
+    s
+}
+
+/// Line-level diff between two golden serializations: returns
+/// (only_in_a, only_in_b) preserving order.  This is what a reviewer sees
+/// when an experiment config changes.
+pub fn config_diff(a: &ConfigNode, b: &ConfigNode) -> (Vec<String>, Vec<String>) {
+    let la = to_golden_lines(a);
+    let lb = to_golden_lines(b);
+    let sa: std::collections::HashSet<&String> = la.iter().collect();
+    let sb: std::collections::HashSet<&String> = lb.iter().collect();
+    let only_a = la.iter().filter(|l| !sb.contains(*l)).cloned().collect();
+    let only_b = lb.iter().filter(|l| !sa.contains(*l)).cloned().collect();
+    (only_a, only_b)
+}
+
+/// Parse golden lines back into (path, repr) pairs for structural checks.
+/// (Full deserialization is intentionally out of scope: goldens are a
+/// review artifact, the source of truth stays in code — as in the paper.)
+pub fn parse_golden(text: &str) -> Vec<(String, String)> {
+    text.lines()
+        .filter(|l| !l.trim().is_empty())
+        .map(|l| match l.split_once(" = ") {
+            Some((path, v)) => (path.trim().to_string(), v.trim().to_string()),
+            None => match l.split_once(": ") {
+                Some((path, klass)) => (path.trim().to_string(), format!("<{}>", klass.trim())),
+                None => (l.trim().to_string(), String::new()),
+            },
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::modifier::{ConfigModifier, QuantizationModifier};
+    use crate::config::registry::{default_config, trainer_for_preset};
+    use crate::config::traverse::replace_config;
+
+    #[test]
+    fn serialization_is_deterministic() {
+        let a = trainer_for_preset("small");
+        let b = trainer_for_preset("small");
+        assert_eq!(to_golden_string(&a), to_golden_string(&b));
+    }
+
+    #[test]
+    fn serialization_covers_nested_fields() {
+        let s = to_golden_string(&trainer_for_preset("tiny"));
+        assert!(s.contains("root: Trainer"));
+        assert!(s.contains("root.model.decoder.layer.self_attention: AttentionLayer"));
+        assert!(s.contains("root.model.decoder.layer.self_attention.pos_emb.theta = 10000"));
+    }
+
+    #[test]
+    fn clone_roundtrip_identical() {
+        let a = trainer_for_preset("base100m");
+        assert_eq!(to_golden_string(&a), to_golden_string(&a.clone()));
+    }
+
+    #[test]
+    fn diff_is_empty_for_identical() {
+        let a = trainer_for_preset("small");
+        let (oa, ob) = config_diff(&a, &a.clone());
+        assert!(oa.is_empty() && ob.is_empty());
+    }
+
+    #[test]
+    fn diff_localizes_a_change() {
+        // The review story: an MoE swap shows up ONLY as feed_forward lines.
+        let a = trainer_for_preset("small");
+        let mut b = a.clone();
+        replace_config(&mut b, "FeedForward", &|old| {
+            default_config("MoE").with("input_dim", old.get("input_dim").unwrap().clone())
+        });
+        let (only_a, only_b) = config_diff(&a, &b);
+        assert!(!only_a.is_empty() && !only_b.is_empty());
+        for line in only_a.iter().chain(only_b.iter()) {
+            assert!(
+                line.contains("feed_forward"),
+                "diff leaked outside feed_forward: {line}"
+            );
+        }
+    }
+
+    #[test]
+    fn diff_catches_quantization_change() {
+        let a = trainer_for_preset("small");
+        let mut b = a.clone();
+        QuantizationModifier::int8().apply(&mut b).unwrap();
+        let (_, only_b) = config_diff(&a, &b);
+        assert_eq!(only_b, vec!["root.quantization = \"int8\"".to_string()]);
+    }
+
+    #[test]
+    fn parse_golden_roundtrip_paths() {
+        let s = to_golden_string(&trainer_for_preset("tiny"));
+        let entries = parse_golden(&s);
+        assert!(entries.iter().any(|(p, v)| p == "root" && v == "<Trainer>"));
+        assert!(entries.iter().any(|(p, _)| p.ends_with(".learning_rate")));
+    }
+}

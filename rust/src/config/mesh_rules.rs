@@ -1,0 +1,211 @@
+//! Mesh rules (paper Appendix A): instance-type regex -> config modifiers.
+//!
+//! A [`MeshRules`] table lets one experiment config adapt to heterogeneous
+//! platforms: launching on `tpu-v5e-256-4` matches the `tpu-v5e-256-*`
+//! rule and applies FSDP-within-slice + INT8 + dot offload, while
+//! `gpu-H100-64` matches the H100 rule and applies 8-way TP + FP8.  No
+//! model code changes — the paper's core heterogeneity mechanism.
+
+use anyhow::Result;
+use regex::Regex;
+
+use super::modifier::{ConfigModifier, ModifierList};
+use super::node::ConfigNode;
+
+/// One rule: pattern over instance-type strings + ordered modifiers.
+pub struct MeshRule {
+    pub pattern: String,
+    regex: Regex,
+    pub modifiers: ModifierList,
+}
+
+impl MeshRule {
+    pub fn new(pattern: &str, modifiers: Vec<Box<dyn ConfigModifier>>) -> Result<Self> {
+        // Glob-flavored pattern as in the paper ("tpu-v5e-256-*"): translate
+        // `*` to `.*` and anchor.
+        let regex = Regex::new(&glob_to_regex(pattern))?;
+        Ok(MeshRule {
+            pattern: pattern.to_string(),
+            regex,
+            modifiers: ModifierList(modifiers),
+        })
+    }
+
+    pub fn matches(&self, instance_type: &str) -> bool {
+        self.regex.is_match(instance_type)
+    }
+}
+
+fn glob_to_regex(glob: &str) -> String {
+    let mut out = String::from("^");
+    for c in glob.chars() {
+        match c {
+            '*' => out.push_str(".*"),
+            c if "\\.+()[]{}^$|?".contains(c) => {
+                out.push('\\');
+                out.push(c);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('$');
+    out
+}
+
+/// Ordered rule table; first match wins (like the paper's list form).
+pub struct MeshRules {
+    pub rules: Vec<MeshRule>,
+}
+
+impl MeshRules {
+    pub fn new(rules: Vec<MeshRule>) -> Self {
+        MeshRules { rules }
+    }
+
+    /// Find the first rule matching `instance_type`.
+    pub fn find(&self, instance_type: &str) -> Option<&MeshRule> {
+        self.rules.iter().find(|r| r.matches(instance_type))
+    }
+
+    /// Apply the first matching rule's modifiers to `cfg`. Returns the
+    /// matched pattern, or None if nothing matched (config left unchanged
+    /// — XLA defaults, as the paper notes, are often reasonable).
+    pub fn apply(&self, instance_type: &str, cfg: &mut ConfigNode) -> Result<Option<String>> {
+        match self.find(instance_type) {
+            Some(rule) => {
+                rule.modifiers.apply(cfg)?;
+                Ok(Some(rule.pattern.clone()))
+            }
+            None => Ok(None),
+        }
+    }
+}
+
+/// The paper's Appendix-A rule table, expressed 1:1 in Rust.  Used by the
+/// `heterogeneous` example and the Table-3 composer plans.
+pub fn paper_appendix_a_rules() -> MeshRules {
+    use super::modifier::*;
+    MeshRules::new(vec![
+        MeshRule::new(
+            "tpu-v5e-256-*",
+            vec![
+                Box::new(MeshShapeModifier::new(&[-1, 256], &["data", "fsdp"])),
+                Box::new(RematSpecModifier::at("offload_dots", "model.decoder.layer")),
+                Box::new(QuantizationModifier::int8()),
+            ],
+        )
+        .unwrap(),
+        MeshRule::new(
+            "gpu-H100-*",
+            vec![
+                Box::new(MeshShapeModifier::new(&[-1, 8], &["fsdp", "model"])),
+                Box::new(RematSpecModifier::at("save_qkvo", "model.decoder.layer")),
+                Box::new(QuantizationModifier::fp8(128)),
+            ],
+        )
+        .unwrap(),
+        // Additions for the full Table-3 matrix:
+        MeshRule::new(
+            "tpu-v5p-*",
+            vec![
+                Box::new(MeshShapeModifier::new(&[-1, 16], &["data", "fsdp"])),
+                Box::new(RematSpecModifier::at("save_linear", "model.decoder.layer")),
+            ],
+        )
+        .unwrap(),
+        MeshRule::new(
+            "trn2-*",
+            vec![
+                Box::new(MeshShapeModifier::new(&[-1, 16], &["data", "fsdp"])),
+                Box::new(RematSpecModifier::at("save_qkvo", "model.decoder.layer")),
+                Box::new(KernelModifier::new("nki")),
+            ],
+        )
+        .unwrap(),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::registry::trainer_for_preset;
+
+    #[test]
+    fn glob_translation() {
+        assert_eq!(glob_to_regex("tpu-v5e-256-*"), "^tpu-v5e-256-.*$");
+        assert!(Regex::new(&glob_to_regex("a*b")).unwrap().is_match("aXYZb"));
+        assert!(!Regex::new(&glob_to_regex("a*b")).unwrap().is_match("aXYZc"));
+    }
+
+    #[test]
+    fn first_match_wins() {
+        let rules = MeshRules::new(vec![
+            MeshRule::new("tpu-*", vec![]).unwrap(),
+            MeshRule::new("tpu-v5e-*", vec![]).unwrap(),
+        ]);
+        assert_eq!(rules.find("tpu-v5e-256-4").unwrap().pattern, "tpu-*");
+    }
+
+    #[test]
+    fn no_match_leaves_config_unchanged() {
+        let rules = paper_appendix_a_rules();
+        let mut t = trainer_for_preset("tiny");
+        let before = t.clone();
+        let matched = rules.apply("cpu-local", &mut t).unwrap();
+        assert!(matched.is_none());
+        assert_eq!(t, before);
+    }
+
+    #[test]
+    fn appendix_a_tpu_v5e_rule() {
+        let rules = paper_appendix_a_rules();
+        let mut t = trainer_for_preset("small");
+        let matched = rules.apply("tpu-v5e-256-8", &mut t).unwrap();
+        assert_eq!(matched.as_deref(), Some("tpu-v5e-256-*"));
+        assert_eq!(t.get_int_list("mesh_shape").unwrap(), vec![-1, 256]);
+        assert_eq!(t.get_str("quantization").unwrap(), "int8");
+        assert_eq!(
+            t.at_path("model.decoder.layer").unwrap().get_str("remat_spec").unwrap(),
+            "offload_dots"
+        );
+    }
+
+    #[test]
+    fn appendix_a_h100_rule() {
+        let rules = paper_appendix_a_rules();
+        let mut t = trainer_for_preset("small");
+        rules.apply("gpu-H100-32", &mut t).unwrap();
+        assert_eq!(t.get_str_list("mesh_axis_names").unwrap(), vec!["fsdp", "model"]);
+        assert_eq!(t.get_str("quantization").unwrap(), "fp8");
+        assert_eq!(
+            t.at_path("model.decoder.layer").unwrap().get_str("remat_spec").unwrap(),
+            "save_qkvo"
+        );
+    }
+
+    #[test]
+    fn same_config_two_targets_differ_only_by_rules() {
+        // The heterogeneity claim: ONE experiment config, two platforms.
+        let rules = paper_appendix_a_rules();
+        let base = trainer_for_preset("small");
+        let mut tpu = base.clone();
+        let mut gpu = base.clone();
+        rules.apply("tpu-v5e-256-1", &mut tpu).unwrap();
+        rules.apply("gpu-H100-64", &mut gpu).unwrap();
+        // model architecture identical
+        assert_eq!(tpu.at_path("model").unwrap().child("decoder").unwrap().get_int("model_dim").unwrap(),
+                   gpu.at_path("model").unwrap().child("decoder").unwrap().get_int("model_dim").unwrap());
+        // runtime strategy differs
+        assert_ne!(tpu.get_str("quantization").unwrap(), gpu.get_str("quantization").unwrap());
+    }
+
+    #[test]
+    fn trn2_rule_swaps_kernel_backend() {
+        let rules = paper_appendix_a_rules();
+        let mut t = trainer_for_preset("small");
+        rules.apply("trn2-16xlarge", &mut t).unwrap();
+        let attn = t.at_path("model.decoder.layer.self_attention").unwrap();
+        assert_eq!(attn.klass, "FlashAttentionLayer");
+        assert_eq!(attn.get_str("backend").unwrap(), "nki");
+    }
+}

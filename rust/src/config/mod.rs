@@ -1,0 +1,38 @@
+//! The hierarchical, strictly-encapsulated configuration system
+//! (paper §4.1) — AXLearn's core contribution.
+//!
+//! Design notes, mirroring the paper:
+//!
+//! * **Hierarchical composition, not flattening.** A config is a tree of
+//!   [`ConfigNode`]s; a parent node holds child *configs*, never child
+//!   hyper-parameters. `TransformerLayer`'s config does not know RoPE's
+//!   `theta` — that is encapsulated inside the `pos_emb` child.
+//! * **Partial specification.** Fields may be unset ([`Value::Null`]) and
+//!   filled by the parent at instantiation time (e.g. `input_dim`
+//!   propagation), or defined as a deferred function of another field
+//!   (`Value::ScaledDim` — the `scaled_hidden_dim` idiom).
+//! * **Traversal-based re-parameterization.** [`traverse::replace_config`]
+//!   implements the 10-line MoE/RoPE swap of Figure 1: O(1)
+//!   LoC-complexity because no ancestor interface mentions the feature.
+//! * **Config modifiers & mesh rules** ([`modifier`], [`mesh_rules`]):
+//!   per-target-platform rewrites (Appendix A), applied by regex match on
+//!   the instance type.
+//! * **Golden serialization** ([`golden`]): canonical human-readable dumps
+//!   committed next to code, the paper's §7.3 testing practice.
+
+pub mod golden;
+pub mod mesh_rules;
+pub mod modifier;
+pub mod node;
+pub mod registry;
+pub mod traverse;
+
+pub use golden::{config_diff, to_golden_lines};
+pub use mesh_rules::{MeshRule, MeshRules};
+pub use modifier::{
+    ConfigModifier, KernelModifier, MeshShapeModifier, ModifierList, QuantizationModifier,
+    RematSpecModifier, SetFieldModifier,
+};
+pub use node::{ConfigError, ConfigNode, Value};
+pub use registry::{default_config, register_defaults};
+pub use traverse::{find_all, replace_config, visit, visit_mut};

@@ -1,0 +1,335 @@
+//! Config modifiers (paper §4.2 / Appendix A).
+//!
+//! A [`ConfigModifier`] is a self-contained rewrite of a trainer config:
+//! mesh shape, rematerialization policy, quantization, kernel selection,
+//! or an arbitrary path-addressed field set.  Mesh rules
+//! ([`super::mesh_rules`]) map accelerator types to ordered lists of
+//! modifiers, which is how one experiment config adapts to heterogeneous
+//! platforms with zero model-code changes.
+
+use anyhow::{bail, Result};
+
+use super::node::{ConfigNode, Value};
+use super::traverse::{replace_config, visit_mut};
+
+/// A rewrite applied to the (trainer) config tree.
+pub trait ConfigModifier: Send + Sync {
+    /// Human-readable name for logs and golden dumps.
+    fn name(&self) -> String;
+    /// Apply in place.
+    fn apply(&self, cfg: &mut ConfigNode) -> Result<()>;
+}
+
+/// Ordered list of modifiers.
+pub struct ModifierList(pub Vec<Box<dyn ConfigModifier>>);
+
+impl ModifierList {
+    pub fn apply(&self, cfg: &mut ConfigNode) -> Result<()> {
+        for m in &self.0 {
+            m.apply(cfg)?;
+        }
+        Ok(())
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.0.iter().map(|m| m.name()).collect()
+    }
+}
+
+/// Sets `mesh_shape` / `mesh_axis_names` on the trainer (Appendix A's
+/// `MeshShapeModifier`).  A `-1` dim means "fill with remaining devices",
+/// resolved by the composer against the target topology.
+pub struct MeshShapeModifier {
+    pub mesh_shape: Vec<i64>,
+    pub mesh_axis_names: Vec<String>,
+}
+
+impl MeshShapeModifier {
+    pub fn new(shape: &[i64], names: &[&str]) -> Self {
+        MeshShapeModifier {
+            mesh_shape: shape.to_vec(),
+            mesh_axis_names: names.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+}
+
+impl ConfigModifier for MeshShapeModifier {
+    fn name(&self) -> String {
+        format!("MeshShapeModifier{:?}/{:?}", self.mesh_shape, self.mesh_axis_names)
+    }
+
+    fn apply(&self, cfg: &mut ConfigNode) -> Result<()> {
+        if self.mesh_shape.len() != self.mesh_axis_names.len() {
+            bail!(
+                "mesh_shape {:?} and axis names {:?} must have equal rank",
+                self.mesh_shape,
+                self.mesh_axis_names
+            );
+        }
+        cfg.set("mesh_shape", Value::IntList(self.mesh_shape.clone()))?;
+        cfg.set("mesh_axis_names", Value::StrList(self.mesh_axis_names.clone()))?;
+        Ok(())
+    }
+}
+
+/// Sets the rematerialization policy, optionally targeting tagged remat
+/// points on specific layers (Appendix A's `RematSpecModifier`).
+///
+/// Policies (see `composer::remat` for cost semantics):
+///   "none" | "full" | "save_qkvo" | "save_linear" | "offload_dots"
+pub struct RematSpecModifier {
+    pub policy: String,
+    /// Config path of the layer(s) to tag; empty = trainer-wide.
+    pub target_path: Option<String>,
+}
+
+impl RematSpecModifier {
+    pub fn new(policy: &str) -> Self {
+        RematSpecModifier {
+            policy: policy.to_string(),
+            target_path: None,
+        }
+    }
+
+    pub fn at(policy: &str, path: &str) -> Self {
+        RematSpecModifier {
+            policy: policy.to_string(),
+            target_path: Some(path.to_string()),
+        }
+    }
+}
+
+pub const REMAT_POLICIES: &[&str] = &["none", "full", "save_qkvo", "save_linear", "offload_dots"];
+
+impl ConfigModifier for RematSpecModifier {
+    fn name(&self) -> String {
+        match &self.target_path {
+            Some(p) => format!("RematSpecModifier({} @ {p})", self.policy),
+            None => format!("RematSpecModifier({})", self.policy),
+        }
+    }
+
+    fn apply(&self, cfg: &mut ConfigNode) -> Result<()> {
+        if !REMAT_POLICIES.contains(&self.policy.as_str()) {
+            bail!("unknown remat policy {:?}; expected one of {REMAT_POLICIES:?}", self.policy);
+        }
+        match &self.target_path {
+            None => {
+                cfg.set("remat_policy", Value::Str(self.policy.clone()))?;
+            }
+            Some(path) => {
+                let node = cfg.at_path_mut(path)?;
+                if !node.has_field("remat_spec") {
+                    bail!("{path}: {} has no remat_spec tag point", node.klass);
+                }
+                node.set("remat_spec", Value::Str(self.policy.clone()))?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Enables INT8/FP8 quantized training (Appendix A's
+/// `INT8ConfigModifier` / `FP8ConfigModifier`).  Implemented as strict
+/// encapsulation demands: a *replacement of DotGeneral-bearing layers*
+/// is expressed as a trainer-level knob the composer maps onto the
+/// quantization-aware artifact/cost model, never as per-layer flags.
+pub struct QuantizationModifier {
+    pub mode: String, // "int8" | "fp8"
+    pub fp8_amax_history_length: i64,
+}
+
+impl QuantizationModifier {
+    pub fn int8() -> Self {
+        QuantizationModifier {
+            mode: "int8".into(),
+            fp8_amax_history_length: 0,
+        }
+    }
+
+    pub fn fp8(history: i64) -> Self {
+        QuantizationModifier {
+            mode: "fp8".into(),
+            fp8_amax_history_length: history,
+        }
+    }
+}
+
+impl ConfigModifier for QuantizationModifier {
+    fn name(&self) -> String {
+        format!("QuantizationModifier({})", self.mode)
+    }
+
+    fn apply(&self, cfg: &mut ConfigNode) -> Result<()> {
+        if !["int8", "fp8", "none"].contains(&self.mode.as_str()) {
+            bail!("unknown quantization mode {:?}", self.mode);
+        }
+        cfg.set("quantization", Value::Str(self.mode.clone()))?;
+        Ok(())
+    }
+}
+
+/// Swaps every `AttentionLayer` for `FlashAttentionLayer` with a given
+/// backend (paper §4.2: "enabling custom kernels only requires simple
+/// configuration changes").
+pub struct KernelModifier {
+    pub backend: String, // "cudnn" | "nki" | "pallas" | "auto"
+}
+
+impl KernelModifier {
+    pub fn new(backend: &str) -> Self {
+        KernelModifier {
+            backend: backend.to_string(),
+        }
+    }
+}
+
+impl ConfigModifier for KernelModifier {
+    fn name(&self) -> String {
+        format!("KernelModifier({})", self.backend)
+    }
+
+    fn apply(&self, cfg: &mut ConfigNode) -> Result<()> {
+        let backend = self.backend.clone();
+        let n = replace_config(cfg, "AttentionLayer", &move |old| {
+            let mut flash = super::registry::default_config("FlashAttentionLayer");
+            // carry over the interface fields (input dims etc.)
+            for f in old.field_names() {
+                let v = old.get(&f).unwrap().clone();
+                let _ = flash.set(&f, v);
+            }
+            flash.set("backend", Value::Str(backend.clone())).unwrap();
+            flash
+        });
+        if n == 0 {
+            // Already flash everywhere: just retarget the backend.
+            let mut count = 0;
+            visit_mut(cfg, &mut |_, node| {
+                if node.klass == "FlashAttentionLayer" {
+                    node.set("backend", Value::Str(self.backend.clone())).unwrap();
+                    count += 1;
+                }
+            });
+            if count == 0 {
+                bail!("KernelModifier: no attention layers found");
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Generic path-addressed field set — the escape hatch that keeps
+/// "arbitrary config modifications expressible as modifiers" (§4.2).
+pub struct SetFieldModifier {
+    pub path: String,
+    pub field: String,
+    pub value: Value,
+}
+
+impl SetFieldModifier {
+    pub fn new(path: &str, field: &str, value: Value) -> Self {
+        SetFieldModifier {
+            path: path.to_string(),
+            field: field.to_string(),
+            value,
+        }
+    }
+}
+
+impl ConfigModifier for SetFieldModifier {
+    fn name(&self) -> String {
+        format!("SetFieldModifier({}.{} = {})", self.path, self.field, self.value)
+    }
+
+    fn apply(&self, cfg: &mut ConfigNode) -> Result<()> {
+        let node = if self.path.is_empty() {
+            cfg
+        } else {
+            cfg.at_path_mut(&self.path)?
+        };
+        node.set(&self.field, self.value.clone())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::registry::trainer_for_preset;
+
+    #[test]
+    fn mesh_shape_modifier() {
+        let mut t = trainer_for_preset("tiny");
+        MeshShapeModifier::new(&[-1, 256], &["data", "fsdp"]).apply(&mut t).unwrap();
+        assert_eq!(t.get_int_list("mesh_shape").unwrap(), vec![-1, 256]);
+        assert_eq!(t.get_str_list("mesh_axis_names").unwrap(), vec!["data", "fsdp"]);
+    }
+
+    #[test]
+    fn mesh_rank_mismatch_rejected() {
+        let mut t = trainer_for_preset("tiny");
+        assert!(MeshShapeModifier::new(&[1, 2], &["data"]).apply(&mut t).is_err());
+    }
+
+    #[test]
+    fn remat_global_and_targeted() {
+        let mut t = trainer_for_preset("tiny");
+        RematSpecModifier::new("save_qkvo").apply(&mut t).unwrap();
+        assert_eq!(t.get_str("remat_policy").unwrap(), "save_qkvo");
+        RematSpecModifier::at("offload_dots", "model.decoder.layer").apply(&mut t).unwrap();
+        assert_eq!(
+            t.at_path("model.decoder.layer").unwrap().get_str("remat_spec").unwrap(),
+            "offload_dots"
+        );
+    }
+
+    #[test]
+    fn remat_unknown_policy_rejected() {
+        let mut t = trainer_for_preset("tiny");
+        assert!(RematSpecModifier::new("bogus").apply(&mut t).is_err());
+    }
+
+    #[test]
+    fn quantization_modifier() {
+        let mut t = trainer_for_preset("tiny");
+        QuantizationModifier::fp8(128).apply(&mut t).unwrap();
+        assert_eq!(t.get_str("quantization").unwrap(), "fp8");
+    }
+
+    #[test]
+    fn kernel_modifier_swaps_attention() {
+        let mut t = trainer_for_preset("tiny");
+        KernelModifier::new("pallas").apply(&mut t).unwrap();
+        let attn = t.at_path("model.decoder.layer.self_attention").unwrap();
+        assert_eq!(attn.klass, "FlashAttentionLayer");
+        assert_eq!(attn.get_str("backend").unwrap(), "pallas");
+        // interface fields preserved
+        assert!(attn.has_field("num_heads"));
+        // applying again just retargets
+        KernelModifier::new("cudnn").apply(&mut t).unwrap();
+        assert_eq!(
+            t.at_path("model.decoder.layer.self_attention").unwrap().get_str("backend").unwrap(),
+            "cudnn"
+        );
+    }
+
+    #[test]
+    fn set_field_modifier() {
+        let mut t = trainer_for_preset("tiny");
+        SetFieldModifier::new("learner", "learning_rate", Value::Float(1e-3)).apply(&mut t).unwrap();
+        assert_eq!(t.at_path("learner").unwrap().get_float("learning_rate").unwrap(), 1e-3);
+    }
+
+    #[test]
+    fn modifier_list_applies_in_order() {
+        let mut t = trainer_for_preset("tiny");
+        let list = ModifierList(vec![
+            Box::new(MeshShapeModifier::new(&[4, 2], &["fsdp", "model"])),
+            Box::new(SetFieldModifier::new("", "remat_policy", Value::Str("full".into()))),
+            Box::new(SetFieldModifier::new("", "remat_policy", Value::Str("save_linear".into()))),
+        ]);
+        list.apply(&mut t).unwrap();
+        assert_eq!(t.get_str("remat_policy").unwrap(), "save_linear"); // last wins
+        assert_eq!(list.names().len(), 3);
+    }
+}

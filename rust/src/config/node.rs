@@ -1,0 +1,404 @@
+//! Config tree nodes and values.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Errors raised by config operations.
+#[derive(Debug, thiserror::Error)]
+pub enum ConfigError {
+    #[error("{klass}: unknown field {field:?} (known: {known:?})")]
+    UnknownField {
+        klass: String,
+        field: String,
+        known: Vec<String>,
+    },
+    #[error("{klass}.{field}: required field is unset")]
+    RequiredUnset { klass: String, field: String },
+    #[error("{klass}.{field}: expected {expected}, got {got}")]
+    TypeMismatch {
+        klass: String,
+        field: String,
+        expected: &'static str,
+        got: String,
+    },
+    #[error("no config node at path {0:?}")]
+    BadPath(String),
+}
+
+/// A config field value.
+///
+/// `Config`/`ConfigList` make the tree hierarchical; `ScaledDim` is the
+/// deferred-dimension idiom (`scaled_hidden_dim(scale=8/3)` in the paper):
+/// it resolves to `round(multiplier * reference_dim)` when the parent
+/// propagates the reference dim.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    Int(i64),
+    Float(f64),
+    Str(String),
+    IntList(Vec<i64>),
+    StrList(Vec<String>),
+    Config(ConfigNode),
+    ConfigList(Vec<ConfigNode>),
+    /// Deferred dimension: multiplier on a not-yet-known reference dim.
+    ScaledDim(f64),
+}
+
+impl Value {
+    pub fn type_name(&self) -> &'static str {
+        match self {
+            Value::Null => "null",
+            Value::Bool(_) => "bool",
+            Value::Int(_) => "int",
+            Value::Float(_) => "float",
+            Value::Str(_) => "str",
+            Value::IntList(_) => "int_list",
+            Value::StrList(_) => "str_list",
+            Value::Config(_) => "config",
+            Value::ConfigList(_) => "config_list",
+            Value::ScaledDim(_) => "scaled_dim",
+        }
+    }
+
+    pub fn is_null(&self) -> bool {
+        matches!(self, Value::Null)
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Null => write!(f, "None"),
+            Value::Bool(b) => write!(f, "{b}"),
+            Value::Int(i) => write!(f, "{i}"),
+            Value::Float(x) => write!(f, "{x}"),
+            Value::Str(s) => write!(f, "{s:?}"),
+            Value::IntList(xs) => write!(f, "{xs:?}"),
+            Value::StrList(xs) => write!(f, "{xs:?}"),
+            Value::Config(c) => write!(f, "<{}>", c.klass),
+            Value::ConfigList(cs) => write!(f, "<{} configs>", cs.len()),
+            Value::ScaledDim(m) => write!(f, "scaled_dim({m})"),
+        }
+    }
+}
+
+macro_rules! typed_getter {
+    ($get:ident, $variant:ident, $ty:ty, $expected:expr) => {
+        pub fn $get(&self, field: &str) -> Result<$ty, ConfigError> {
+            match self.get(field)? {
+                Value::$variant(x) => Ok(x.clone()),
+                other => Err(ConfigError::TypeMismatch {
+                    klass: self.klass.clone(),
+                    field: field.to_string(),
+                    expected: $expected,
+                    got: other.type_name().to_string(),
+                }),
+            }
+        }
+    };
+}
+
+/// A node in the config tree: the class it configures plus its fields.
+///
+/// Field order is canonical (BTreeMap) so golden serialization is stable.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ConfigNode {
+    pub klass: String,
+    fields: BTreeMap<String, Value>,
+}
+
+impl ConfigNode {
+    pub fn new(klass: &str) -> Self {
+        ConfigNode {
+            klass: klass.to_string(),
+            fields: BTreeMap::new(),
+        }
+    }
+
+    /// Declare a field with its default value. Builder-style, used by
+    /// `default_config` constructors in [`super::registry`].
+    pub fn field(mut self, name: &str, value: Value) -> Self {
+        self.fields.insert(name.to_string(), value);
+        self
+    }
+
+    pub fn field_names(&self) -> Vec<String> {
+        self.fields.keys().cloned().collect()
+    }
+
+    pub fn has_field(&self, name: &str) -> bool {
+        self.fields.contains_key(name)
+    }
+
+    pub fn get(&self, field: &str) -> Result<&Value, ConfigError> {
+        self.fields.get(field).ok_or_else(|| ConfigError::UnknownField {
+            klass: self.klass.clone(),
+            field: field.to_string(),
+            known: self.field_names(),
+        })
+    }
+
+    /// Strict setter: the field must already exist (declared by
+    /// `default_config`). This is what makes encapsulation *strict*: you
+    /// cannot graft RoPE fields onto an attention config from outside.
+    pub fn set(&mut self, field: &str, value: Value) -> Result<&mut Self, ConfigError> {
+        if !self.fields.contains_key(field) {
+            return Err(ConfigError::UnknownField {
+                klass: self.klass.clone(),
+                field: field.to_string(),
+                known: self.field_names(),
+            });
+        }
+        self.fields.insert(field.to_string(), value);
+        Ok(self)
+    }
+
+    /// Chainable setter that panics on unknown fields — for preset
+    /// construction where the field set is static.
+    pub fn with(mut self, field: &str, value: Value) -> Self {
+        self.set(field, value)
+            .unwrap_or_else(|e| panic!("{e}"));
+        self
+    }
+
+    typed_getter!(get_bool, Bool, bool, "bool");
+    typed_getter!(get_int, Int, i64, "int");
+    typed_getter!(get_float, Float, f64, "float");
+    typed_getter!(get_str, Str, String, "str");
+    typed_getter!(get_int_list, IntList, Vec<i64>, "int_list");
+    typed_getter!(get_str_list, StrList, Vec<String>, "str_list");
+
+    /// Float getter that also accepts ints (mesh sizes etc.).
+    pub fn get_num(&self, field: &str) -> Result<f64, ConfigError> {
+        match self.get(field)? {
+            Value::Float(x) => Ok(*x),
+            Value::Int(i) => Ok(*i as f64),
+            other => Err(ConfigError::TypeMismatch {
+                klass: self.klass.clone(),
+                field: field.to_string(),
+                expected: "number",
+                got: other.type_name().to_string(),
+            }),
+        }
+    }
+
+    pub fn child(&self, field: &str) -> Result<&ConfigNode, ConfigError> {
+        match self.get(field)? {
+            Value::Config(c) => Ok(c),
+            other => Err(ConfigError::TypeMismatch {
+                klass: self.klass.clone(),
+                field: field.to_string(),
+                expected: "config",
+                got: other.type_name().to_string(),
+            }),
+        }
+    }
+
+    pub fn child_mut(&mut self, field: &str) -> Result<&mut ConfigNode, ConfigError> {
+        let klass = self.klass.clone();
+        let known = self.field_names();
+        match self.fields.get_mut(field) {
+            Some(Value::Config(c)) => Ok(c),
+            Some(other) => Err(ConfigError::TypeMismatch {
+                klass,
+                field: field.to_string(),
+                expected: "config",
+                got: other.type_name().to_string(),
+            }),
+            None => Err(ConfigError::UnknownField {
+                klass,
+                field: field.to_string(),
+                known,
+            }),
+        }
+    }
+
+    /// Required-field check used at instantiation/materialization time.
+    pub fn require(&self, field: &str) -> Result<&Value, ConfigError> {
+        let v = self.get(field)?;
+        if v.is_null() {
+            return Err(ConfigError::RequiredUnset {
+                klass: self.klass.clone(),
+                field: field.to_string(),
+            });
+        }
+        Ok(v)
+    }
+
+    /// Navigate a dotted path (`"decoder.layer.self_attention"`); list
+    /// elements addressed as `layers[3]`.
+    pub fn at_path(&self, path: &str) -> Result<&ConfigNode, ConfigError> {
+        let mut cur = self;
+        if path.is_empty() {
+            return Ok(cur);
+        }
+        for seg in path.split('.') {
+            let (name, idx) = parse_segment(seg).ok_or_else(|| ConfigError::BadPath(path.to_string()))?;
+            let v = cur.get(name).map_err(|_| ConfigError::BadPath(path.to_string()))?;
+            cur = match (v, idx) {
+                (Value::Config(c), None) => c,
+                (Value::ConfigList(cs), Some(i)) if i < cs.len() => &cs[i],
+                _ => return Err(ConfigError::BadPath(path.to_string())),
+            };
+        }
+        Ok(cur)
+    }
+
+    /// Mutable path navigation.
+    pub fn at_path_mut(&mut self, path: &str) -> Result<&mut ConfigNode, ConfigError> {
+        let mut cur = self;
+        if path.is_empty() {
+            return Ok(cur);
+        }
+        for seg in path.split('.') {
+            let (name, idx) = parse_segment(seg).ok_or_else(|| ConfigError::BadPath(path.to_string()))?;
+            let v = cur.fields.get_mut(name).ok_or_else(|| ConfigError::BadPath(path.to_string()))?;
+            cur = match (v, idx) {
+                (Value::Config(c), None) => c,
+                (Value::ConfigList(cs), Some(i)) if i < cs.len() => &mut cs[i],
+                _ => return Err(ConfigError::BadPath(path.to_string())),
+            };
+        }
+        Ok(cur)
+    }
+
+    /// Iterate child configs (name, node), including list elements as
+    /// `name[i]`.
+    pub fn children(&self) -> Vec<(String, &ConfigNode)> {
+        let mut out = Vec::new();
+        for (name, v) in &self.fields {
+            match v {
+                Value::Config(c) => out.push((name.clone(), c)),
+                Value::ConfigList(cs) => {
+                    for (i, c) in cs.iter().enumerate() {
+                        out.push((format!("{name}[{i}]"), c));
+                    }
+                }
+                _ => {}
+            }
+        }
+        out
+    }
+
+    pub(crate) fn fields_iter(&self) -> impl Iterator<Item = (&String, &Value)> {
+        self.fields.iter()
+    }
+
+    pub(crate) fn fields_iter_mut(&mut self) -> impl Iterator<Item = (&String, &mut Value)> {
+        self.fields.iter_mut()
+    }
+
+    /// Resolve a `ScaledDim` field against a reference dim (parent
+    /// propagation, the `scaled_hidden_dim` idiom).
+    pub fn resolve_scaled(&mut self, field: &str, reference_dim: i64) -> Result<(), ConfigError> {
+        if let Value::ScaledDim(m) = self.get(field)? {
+            let resolved = (m * reference_dim as f64).round() as i64;
+            self.set(field, Value::Int(resolved))?;
+        }
+        Ok(())
+    }
+}
+
+fn parse_segment(seg: &str) -> Option<(&str, Option<usize>)> {
+    if let Some(open) = seg.find('[') {
+        let close = seg.rfind(']')?;
+        let idx = seg[open + 1..close].parse().ok()?;
+        Some((&seg[..open], Some(idx)))
+    } else {
+        Some((seg, None))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn linear() -> ConfigNode {
+        ConfigNode::new("Linear")
+            .field("input_dim", Value::Null)
+            .field("output_dim", Value::Null)
+            .field("use_bias", Value::Bool(false))
+    }
+
+    #[test]
+    fn set_get_roundtrip() {
+        let mut c = linear();
+        c.set("input_dim", Value::Int(4)).unwrap();
+        assert_eq!(c.get_int("input_dim").unwrap(), 4);
+    }
+
+    #[test]
+    fn strict_unknown_field_rejected() {
+        let mut c = linear();
+        let err = c.set("rope_theta", Value::Float(1e4)).unwrap_err();
+        assert!(matches!(err, ConfigError::UnknownField { .. }));
+        assert!(err.to_string().contains("rope_theta"));
+    }
+
+    #[test]
+    fn type_mismatch_reported() {
+        let mut c = linear();
+        c.set("use_bias", Value::Bool(true)).unwrap();
+        let err = c.get_int("use_bias").unwrap_err();
+        assert!(matches!(err, ConfigError::TypeMismatch { .. }));
+    }
+
+    #[test]
+    fn require_unset_fails() {
+        let c = linear();
+        assert!(matches!(
+            c.require("input_dim").unwrap_err(),
+            ConfigError::RequiredUnset { .. }
+        ));
+    }
+
+    #[test]
+    fn path_navigation() {
+        let layer = ConfigNode::new("TransformerLayer")
+            .field("self_attention", Value::Config(ConfigNode::new("Attention").field("num_heads", Value::Int(8))))
+            .field("feed_forward", Value::Config(linear()));
+        let root = ConfigNode::new("Decoder").field("layer", Value::Config(layer));
+        assert_eq!(root.at_path("layer.self_attention").unwrap().klass, "Attention");
+        assert_eq!(
+            root.at_path("layer.self_attention").unwrap().get_int("num_heads").unwrap(),
+            8
+        );
+        assert!(root.at_path("layer.bogus").is_err());
+    }
+
+    #[test]
+    fn path_list_indexing() {
+        let layers = vec![ConfigNode::new("L0"), ConfigNode::new("L1")];
+        let root = ConfigNode::new("Stack").field("layers", Value::ConfigList(layers));
+        assert_eq!(root.at_path("layers[1]").unwrap().klass, "L1");
+        assert!(root.at_path("layers[2]").is_err());
+    }
+
+    #[test]
+    fn scaled_dim_resolution() {
+        let mut c = linear();
+        c.set("output_dim", Value::ScaledDim(8.0 / 3.0)).unwrap();
+        c.resolve_scaled("output_dim", 768).unwrap();
+        assert_eq!(c.get_int("output_dim").unwrap(), 2048);
+    }
+
+    #[test]
+    fn children_enumeration() {
+        let root = ConfigNode::new("P")
+            .field("a", Value::Config(ConfigNode::new("A")))
+            .field("xs", Value::ConfigList(vec![ConfigNode::new("X")]))
+            .field("n", Value::Int(1));
+        let kids = root.children();
+        let names: Vec<_> = kids.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, vec!["a", "xs[0]"]);
+    }
+
+    #[test]
+    fn mutation_through_path() {
+        let mut root = ConfigNode::new("P").field("a", Value::Config(linear()));
+        root.at_path_mut("a").unwrap().set("input_dim", Value::Int(3)).unwrap();
+        assert_eq!(root.at_path("a").unwrap().get_int("input_dim").unwrap(), 3);
+    }
+}

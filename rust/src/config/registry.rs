@@ -1,0 +1,298 @@
+//! Component registry: `default_config(klass)` constructors for every
+//! module in the system — the Rust twin of each layer's
+//! `default_config()` classmethod.
+//!
+//! The Layer-2 model classes are mirrored here 1:1 (same class names, same
+//! child structure as `python/compile/layers.py`) so that the Rust
+//! coordinator can compose, rewrite, and golden-test the *same* config
+//! trees whose compute lives in the AOT artifacts.  Trainer-side modules
+//! (input pipeline, checkpointer, watchdog, …) exist only here.
+
+use std::collections::BTreeMap;
+
+use once_cell::sync::Lazy;
+
+use super::node::{ConfigNode, Value};
+
+type Ctor = fn() -> ConfigNode;
+
+static REGISTRY: Lazy<BTreeMap<&'static str, Ctor>> = Lazy::new(register_defaults);
+
+/// Build the default config for a registered class. Panics on unknown
+/// class names (a config referencing an unregistered class is a
+/// programming error, caught in tests).
+pub fn default_config(klass: &str) -> ConfigNode {
+    match REGISTRY.get(klass) {
+        Some(ctor) => ctor(),
+        None => panic!(
+            "default_config: unknown class {klass:?}; registered: {:?}",
+            REGISTRY.keys().collect::<Vec<_>>()
+        ),
+    }
+}
+
+pub fn is_registered(klass: &str) -> bool {
+    REGISTRY.contains_key(klass)
+}
+
+pub fn registered_classes() -> Vec<&'static str> {
+    REGISTRY.keys().copied().collect()
+}
+
+/// The full default-config table.
+pub fn register_defaults() -> BTreeMap<&'static str, Ctor> {
+    let mut m: BTreeMap<&'static str, Ctor> = BTreeMap::new();
+
+    // ---- layer library (mirrors python/compile/layers.py) ----
+    m.insert("Linear", || {
+        ConfigNode::new("Linear")
+            .field("input_dim", Value::Null)
+            .field("output_dim", Value::Null)
+            .field("use_bias", Value::Bool(false))
+            .field(
+                "param_partition_spec",
+                Value::StrList(vec!["fsdp".into(), "model".into()]),
+            )
+    });
+    m.insert("Embedding", || {
+        ConfigNode::new("Embedding")
+            .field("num_embeddings", Value::Null)
+            .field("dim", Value::Null)
+    });
+    m.insert("RMSNorm", || {
+        ConfigNode::new("RMSNorm")
+            .field("input_dim", Value::Null)
+            .field("eps", Value::Float(1e-6))
+    });
+    m.insert("RotaryEmbedding", || {
+        ConfigNode::new("RotaryEmbedding").field("theta", Value::Float(10000.0))
+    });
+    m.insert("NoPositionalEmbedding", || ConfigNode::new("NoPositionalEmbedding"));
+    m.insert("AttentionLayer", || {
+        ConfigNode::new("AttentionLayer")
+            .field("input_dim", Value::Null)
+            .field("num_heads", Value::Null)
+            .field("head_dim", Value::Null)
+            .field("pos_emb", Value::Config(default_config("RotaryEmbedding")))
+            .field("kernel", Value::Str("flash".into()))
+            .field("qkv_proj", Value::Config(default_config("Linear")))
+            .field("out_proj", Value::Config(default_config("Linear")))
+    });
+    m.insert("FlashAttentionLayer", || {
+        // Drop-in replacement for AttentionLayer with backend dispatch
+        // (paper §4.2): the `backend` field selects cudnn/nki/pallas.
+        let mut c = default_config("AttentionLayer");
+        c.klass = "FlashAttentionLayer".into();
+        c.field("backend", Value::Str("auto".into()))
+            .field("block_q", Value::Int(128))
+            .field("block_k", Value::Int(128))
+    });
+    m.insert("FeedForward", || {
+        ConfigNode::new("FeedForward")
+            .field("input_dim", Value::Null)
+            .field("hidden_dim", Value::Null)
+            .field("activation", Value::StrList(vec!["linear".into(), "nn.silu".into()]))
+            .field("linear", Value::Config(default_config("Linear")))
+    });
+    m.insert("MoE", || {
+        ConfigNode::new("MoE")
+            .field("input_dim", Value::Null)
+            .field("hidden_dim", Value::Null)
+            .field("num_experts", Value::Int(8))
+            .field("top_k", Value::Int(2))
+            .field("aux_loss_weight", Value::Float(0.01))
+            .field("linear", Value::Config(default_config("Linear")))
+    });
+    m.insert("TransformerLayer", || {
+        ConfigNode::new("TransformerLayer")
+            .field("input_dim", Value::Null)
+            .field("self_attention", Value::Config(default_config("AttentionLayer")))
+            .field("feed_forward", Value::Config(default_config("FeedForward")))
+            .field("norm", Value::Config(default_config("RMSNorm")))
+            .field("remat_spec", Value::Str("none".into()))
+    });
+    m.insert("Decoder", || {
+        ConfigNode::new("Decoder")
+            .field("vocab_size", Value::Null)
+            .field("model_dim", Value::Null)
+            .field("num_layers", Value::Null)
+            .field("emb", Value::Config(default_config("Embedding")))
+            .field("layer", Value::Config(default_config("TransformerLayer")))
+            .field("output_norm", Value::Config(default_config("RMSNorm")))
+            .field("tied_lm_head", Value::Bool(true))
+    });
+    m.insert("CausalLM", || {
+        ConfigNode::new("CausalLM")
+            .field("decoder", Value::Config(default_config("Decoder")))
+            .field("z_loss_weight", Value::Float(0.0))
+            .field("seq_len", Value::Null)
+    });
+
+    // ---- learner ----
+    m.insert("AdamW", || {
+        ConfigNode::new("AdamW")
+            .field("learning_rate", Value::Float(3e-4))
+            .field("beta1", Value::Float(0.9))
+            .field("beta2", Value::Float(0.95))
+            .field("weight_decay", Value::Float(0.01))
+            .field("grad_clip", Value::Float(1.0))
+            .field("warmup_steps", Value::Int(100))
+    });
+
+    // ---- input pipeline ----
+    m.insert("SyntheticLmInput", || {
+        ConfigNode::new("SyntheticLmInput")
+            .field("batch_size", Value::Null)
+            .field("seq_len", Value::Null)
+            .field("vocab_size", Value::Null)
+            .field("seed", Value::Int(0))
+            .field("corpus", Value::Str("markov".into())) // markov | uniform | text
+    });
+
+    // ---- checkpointer ----
+    m.insert("Checkpointer", || {
+        ConfigNode::new("Checkpointer")
+            .field("dir", Value::Str("checkpoints".into()))
+            .field("every_n_steps", Value::Int(100))
+            .field("keep_last", Value::Int(3))
+            .field("async_save", Value::Bool(true))
+            .field("max_concurrent_shards", Value::Int(4))
+            .field("data_sharded", Value::Bool(true))
+            .field("storage", Value::Config(default_config("LocalStorage")))
+    });
+    m.insert("LocalStorage", || {
+        ConfigNode::new("LocalStorage").field("root", Value::Str(".".into()))
+    });
+    m.insert("MultiTierCheckpointer", || {
+        let mut c = default_config("Checkpointer");
+        c.klass = "MultiTierCheckpointer".into();
+        c.field("local_every_n_steps", Value::Int(10))
+            .field("remote_every_n_steps", Value::Int(100))
+            .field("local_dir", Value::Str("local_ckpt".into()))
+    });
+
+    // ---- runtime / resiliency ----
+    m.insert("Watchdog", || {
+        ConfigNode::new("Watchdog")
+            .field("max_step_seconds", Value::Float(60.0))
+            .field("min_utilization", Value::Float(0.05))
+            .field("check_every_n_steps", Value::Int(10))
+            .field("action", Value::Str("restart".into())) // restart | alert | dump
+    });
+    m.insert("SdcChecker", || {
+        ConfigNode::new("SdcChecker")
+            .field("every_n_steps", Value::Int(500))
+            .field("repeat_collectives", Value::Int(3))
+            .field("alternate_cores", Value::Bool(true))
+    });
+
+    // ---- trainer (root module) ----
+    m.insert("Trainer", || {
+        ConfigNode::new("Trainer")
+            .field("model", Value::Config(default_config("CausalLM")))
+            .field("learner", Value::Config(default_config("AdamW")))
+            .field("input", Value::Config(default_config("SyntheticLmInput")))
+            .field("checkpointer", Value::Config(default_config("Checkpointer")))
+            .field("watchdog", Value::Config(default_config("Watchdog")))
+            .field("sdc_checker", Value::Config(default_config("SdcChecker")))
+            .field("max_steps", Value::Int(100))
+            .field("seed", Value::Int(0))
+            .field("mesh_shape", Value::IntList(vec![1, 1]))
+            .field("mesh_axis_names", Value::StrList(vec!["data".into(), "model".into()]))
+            .field("remat_policy", Value::Str("none".into()))
+            .field("quantization", Value::Str("none".into())) // none | int8 | fp8
+            .field("preset", Value::Str("tiny".into()))
+            .field("moe", Value::Bool(false))
+            .field("rope", Value::Bool(true))
+            .field("log_every_n_steps", Value::Int(10))
+    });
+
+    m
+}
+
+// ---------------------------------------------------------------------------
+// Preset experiment configs (the "experiments" of §7.1).
+// ---------------------------------------------------------------------------
+
+/// Build a trainer config for a model preset.  Mirrors
+/// `python/compile/configs.PRESETS`, which defines the artifact shapes.
+pub fn trainer_for_preset(preset: &str) -> ConfigNode {
+    let (vocab, dim, layers, heads, head_dim, ffn, seq, batch) = match preset {
+        "tiny" => (256, 64, 2, 4, 16, 192, 32, 2),
+        "small" => (2048, 256, 4, 4, 64, 704, 128, 4),
+        "base100m" => (8192, 768, 12, 12, 64, 2048, 256, 4),
+        "serve" => (2048, 256, 4, 4, 64, 704, 384, 8),
+        other => panic!("unknown preset {other:?}"),
+    };
+    let mut t = default_config("Trainer");
+    t.set("preset", Value::Str(preset.into())).unwrap();
+    {
+        let dec = t.at_path_mut("model.decoder").unwrap();
+        dec.set("vocab_size", Value::Int(vocab)).unwrap();
+        dec.set("model_dim", Value::Int(dim)).unwrap();
+        dec.set("num_layers", Value::Int(layers)).unwrap();
+    }
+    {
+        let attn = t.at_path_mut("model.decoder.layer.self_attention").unwrap();
+        attn.set("num_heads", Value::Int(heads)).unwrap();
+        attn.set("head_dim", Value::Int(head_dim)).unwrap();
+    }
+    {
+        let ff = t.at_path_mut("model.decoder.layer.feed_forward").unwrap();
+        ff.set("hidden_dim", Value::Int(ffn)).unwrap();
+    }
+    t.at_path_mut("model").unwrap().set("seq_len", Value::Int(seq)).unwrap();
+    {
+        let input = t.at_path_mut("input").unwrap();
+        input.set("batch_size", Value::Int(batch)).unwrap();
+        input.set("seq_len", Value::Int(seq)).unwrap();
+        input.set("vocab_size", Value::Int(vocab)).unwrap();
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_classes_constructible() {
+        for klass in registered_classes() {
+            let cfg = default_config(klass);
+            assert_eq!(cfg.klass, klass);
+        }
+    }
+
+    #[test]
+    fn trainer_tree_is_hierarchical() {
+        let t = default_config("Trainer");
+        assert_eq!(t.at_path("model.decoder.layer.self_attention.pos_emb").unwrap().klass, "RotaryEmbedding");
+        // strict encapsulation: the trainer has no flattened RoPE field
+        assert!(!t.has_field("rope_theta"));
+        assert!(!t.child("model").unwrap().has_field("rope_theta"));
+    }
+
+    #[test]
+    fn presets_build() {
+        for p in ["tiny", "small", "base100m", "serve"] {
+            let t = trainer_for_preset(p);
+            assert!(t.at_path("model.decoder").unwrap().get_int("vocab_size").unwrap() > 0);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown class")]
+    fn unknown_class_panics() {
+        default_config("Bogus");
+    }
+
+    #[test]
+    fn flash_attention_is_dropin_for_attention() {
+        // same field superset => interface-compatible (§4.2 custom kernels)
+        let base = default_config("AttentionLayer");
+        let flash = default_config("FlashAttentionLayer");
+        for f in base.field_names() {
+            assert!(flash.has_field(&f), "FlashAttentionLayer missing {f}");
+        }
+    }
+}

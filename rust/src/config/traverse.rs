@@ -1,0 +1,227 @@
+//! Config-tree traversal: the mechanism behind the paper's O(1)
+//! LoC-complexity claim (§2.1, §4.1).
+//!
+//! `replace_config` is the Rust twin of the 10-line python snippet used to
+//! apply MoE to 1,000+ experiment configs: it rewrites every sub-config of
+//! a target class without any ancestor module knowing.
+
+use super::node::{ConfigNode, Value};
+
+/// Pre-order immutable visit. `f` receives (path, node).
+pub fn visit<F: FnMut(&str, &ConfigNode)>(root: &ConfigNode, f: &mut F) {
+    fn go<F: FnMut(&str, &ConfigNode)>(path: &str, node: &ConfigNode, f: &mut F) {
+        f(path, node);
+        for (name, child) in node.children() {
+            let child_path = if path.is_empty() {
+                name.clone()
+            } else {
+                format!("{path}.{name}")
+            };
+            go(&child_path, child, f);
+        }
+    }
+    go("", root, f);
+}
+
+/// Pre-order mutable visit.
+pub fn visit_mut<F: FnMut(&str, &mut ConfigNode)>(root: &mut ConfigNode, f: &mut F) {
+    fn go<F: FnMut(&str, &mut ConfigNode)>(path: String, node: &mut ConfigNode, f: &mut F) {
+        f(&path, node);
+        let prefix = if path.is_empty() { String::new() } else { format!("{path}.") };
+        for (name, value) in node.fields_iter_mut() {
+            match value {
+                Value::Config(c) => go(format!("{prefix}{name}"), c, f),
+                Value::ConfigList(cs) => {
+                    for (i, c) in cs.iter_mut().enumerate() {
+                        go(format!("{prefix}{name}[{i}]"), c, f);
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    go(String::new(), root, f);
+}
+
+/// Paths of every sub-config whose klass equals `target`.
+pub fn find_all(root: &ConfigNode, target: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    visit(root, &mut |path, node| {
+        if node.klass == target {
+            out.push(path.to_string());
+        }
+    });
+    out
+}
+
+/// Recursively replace any sub-config whose klass is `target` with the
+/// config produced by `factory(old)`. Returns the number of replacements.
+///
+/// This is Figure 1's drop-in MoE swap: so long as the replacement honors
+/// the same input/output interface, *no other module changes*.
+pub fn replace_config<F>(root: &mut ConfigNode, target: &str, factory: &F) -> usize
+where
+    F: Fn(&ConfigNode) -> ConfigNode,
+{
+    let mut count = 0;
+    // Root itself (callers normally target interior nodes, but be total).
+    if root.klass == target {
+        *root = factory(root);
+        return 1;
+    }
+    fn go<F: Fn(&ConfigNode) -> ConfigNode>(node: &mut ConfigNode, target: &str, factory: &F, count: &mut usize) {
+        for (_name, value) in node.fields_iter_mut() {
+            match value {
+                Value::Config(c) => {
+                    if c.klass == target {
+                        *c = factory(c);
+                        *count += 1;
+                    } else {
+                        go(c, target, factory, count);
+                    }
+                }
+                Value::ConfigList(cs) => {
+                    for c in cs.iter_mut() {
+                        if c.klass == target {
+                            *c = factory(c);
+                            *count += 1;
+                        } else {
+                            go(c, target, factory, count);
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    go(root, target, factory, &mut count);
+    count
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::registry;
+    use crate::util::rng::Rng;
+
+    fn model() -> ConfigNode {
+        registry::default_config("CausalLM")
+    }
+
+    #[test]
+    fn visit_covers_all_nodes() {
+        let root = model();
+        let mut paths = Vec::new();
+        visit(&root, &mut |p, _| paths.push(p.to_string()));
+        assert!(paths.contains(&"".to_string()));
+        assert!(paths.iter().any(|p| p.contains("feed_forward")));
+        assert!(paths.iter().any(|p| p.contains("pos_emb")));
+    }
+
+    #[test]
+    fn find_all_locates_ffn() {
+        let root = model();
+        let found = find_all(&root, "FeedForward");
+        assert_eq!(found.len(), 1);
+        assert!(found[0].ends_with("feed_forward"));
+    }
+
+    #[test]
+    fn replace_ffn_with_moe_is_ten_lines() {
+        // The paper's snippet, verbatim shape: traverse + swap. Nothing
+        // else in the tree changes.
+        let mut root = model();
+        let before_attn = root.at_path("decoder.layer.self_attention").unwrap().clone();
+        let n = replace_config(&mut root, "FeedForward", &|old| {
+            registry::default_config("MoE")
+                .with("input_dim", old.get("input_dim").unwrap().clone())
+                .with("num_experts", Value::Int(8))
+                .with("top_k", Value::Int(2))
+        });
+        assert_eq!(n, 1);
+        assert_eq!(root.at_path("decoder.layer.feed_forward").unwrap().klass, "MoE");
+        // strict encapsulation: attention untouched
+        assert_eq!(
+            root.at_path("decoder.layer.self_attention").unwrap(),
+            &before_attn
+        );
+    }
+
+    #[test]
+    fn replace_rope_with_nope() {
+        let mut root = model();
+        let n = replace_config(&mut root, "RotaryEmbedding", &|_| {
+            registry::default_config("NoPositionalEmbedding")
+        });
+        assert_eq!(n, 1);
+        assert_eq!(
+            root.at_path("decoder.layer.self_attention.pos_emb").unwrap().klass,
+            "NoPositionalEmbedding"
+        );
+    }
+
+    #[test]
+    fn replace_counts_multiple_targets() {
+        let mut root = ConfigNode::new("Stack").field(
+            "layers",
+            Value::ConfigList(vec![
+                ConfigNode::new("FeedForward").field("input_dim", Value::Int(1)),
+                ConfigNode::new("FeedForward").field("input_dim", Value::Int(2)),
+                ConfigNode::new("Attention"),
+            ]),
+        );
+        let n = replace_config(&mut root, "FeedForward", &|old| {
+            ConfigNode::new("MoE").field("input_dim", old.get("input_dim").unwrap().clone())
+        });
+        assert_eq!(n, 2);
+        assert_eq!(root.at_path("layers[0]").unwrap().klass, "MoE");
+        assert_eq!(root.at_path("layers[1]").unwrap().get_int("input_dim").unwrap(), 2);
+        assert_eq!(root.at_path("layers[2]").unwrap().klass, "Attention");
+    }
+
+    #[test]
+    fn replace_preserves_tree_shape_property() {
+        // Property (hand-rolled): replacing X->X' leaves every non-target
+        // path identical, for randomized trees.
+        let mut rng = Rng::new(99);
+        for _ in 0..25 {
+            let mut root = random_tree(&mut rng, 3);
+            let before: Vec<String> = {
+                let mut v = Vec::new();
+                visit(&root, &mut |p, n| v.push(format!("{p}:{}", n.klass)));
+                v
+            };
+            let n_targets = before.iter().filter(|s| s.ends_with(":Target")).count();
+            let n = replace_config(&mut root, "Target", &|_| ConfigNode::new("Replaced"));
+            assert_eq!(n, n_targets);
+            let mut after = Vec::new();
+            visit(&root, &mut |p, n| after.push(format!("{p}:{}", n.klass)));
+            assert_eq!(before.len(), after.len());
+            for (b, a) in before.iter().zip(&after) {
+                if b.ends_with(":Target") {
+                    assert!(a.ends_with(":Replaced"), "{b} -> {a}");
+                } else {
+                    assert_eq!(b, a);
+                }
+            }
+        }
+    }
+
+    fn random_tree(rng: &mut Rng, depth: usize) -> ConfigNode {
+        // "Target" nodes only at the leaves so the replacement (which has
+        // no children) preserves the overall path set.
+        let klass = if depth == 0 {
+            *rng.choose(&["A", "Target", "Target", "C"])
+        } else {
+            *rng.choose(&["A", "B", "C"])
+        };
+        let mut node = ConfigNode::new(klass).field("x", Value::Int(rng.gen_range(0, 100) as i64));
+        if depth > 0 {
+            let n_children = rng.gen_range(1, 4);
+            for i in 0..n_children {
+                node = node.field(&format!("c{i}"), Value::Config(random_tree(rng, depth - 1)));
+            }
+        }
+        node
+    }
+}

@@ -1,0 +1,243 @@
+//! Virtual-time cluster simulation: data-parallel replicas advancing a
+//! shared step clock under failure injection, checkpoint cadence, and a
+//! recovery strategy.  Produces the goodput numbers of §5.
+
+use anyhow::Result;
+
+use crate::monitor::goodput::{EventKind, GoodputTracker};
+
+use super::failure::{FailureInjector, FailureKind};
+use super::recovery::RecoveryStrategy;
+use super::scheduler::HotSwapScheduler;
+
+#[derive(Clone, Debug)]
+pub struct ClusterOptions {
+    /// Data-parallel replicas (slices).
+    pub replicas: usize,
+    /// Hosts per replica (for the failure-rate scaling).
+    pub hosts_per_replica: usize,
+    /// Spare replicas for hot-swap.
+    pub spares: usize,
+    /// Seconds per training step.
+    pub step_time_s: f64,
+    /// Checkpoint cadence (steps) for the *remote* tier.
+    pub remote_ckpt_every: u64,
+    /// Checkpoint cadence (steps) for the local tier (multi-tier only).
+    pub local_ckpt_every: u64,
+    /// Per-host failure rate (failures/host/hour).
+    pub failure_rate: f64,
+    pub recovery: RecoveryStrategy,
+    pub seed: u64,
+}
+
+impl Default for ClusterOptions {
+    fn default() -> Self {
+        ClusterOptions {
+            replicas: 8,
+            hosts_per_replica: 16,
+            spares: 1,
+            step_time_s: 10.0,
+            remote_ckpt_every: 100,
+            local_ckpt_every: 10,
+            failure_rate: 0.0003,
+            recovery: RecoveryStrategy::baseline_remote_only(),
+            seed: 0,
+        }
+    }
+}
+
+/// Simulation outcome.
+#[derive(Debug)]
+pub struct SimOutcome {
+    pub steps_completed: u64,
+    pub wall_time_s: f64,
+    pub goodput: f64,
+    pub failures: usize,
+    pub restarts: usize,
+    pub total_restart_time_s: f64,
+    pub mean_restart_time_s: f64,
+    pub hot_swaps: u64,
+}
+
+/// The cluster simulator.
+pub struct Cluster {
+    pub opts: ClusterOptions,
+}
+
+impl Cluster {
+    pub fn new(opts: ClusterOptions) -> Self {
+        Cluster { opts }
+    }
+
+    /// Run until `target_steps` durable steps have been completed.
+    pub fn run(&self, target_steps: u64) -> Result<SimOutcome> {
+        let o = &self.opts;
+        let total_hosts = o.replicas * o.hosts_per_replica;
+        let mut injector = FailureInjector::new(o.seed, o.failure_rate, total_hosts, o.replicas);
+        let mut scheduler = HotSwapScheduler::new(o.replicas, o.spares);
+        let mut goodput = GoodputTracker::new();
+        let mut t = 0.0f64;
+        let mut step: u64 = 0;
+        let mut last_local_ckpt: u64 = 0;
+        let mut last_remote_ckpt: u64 = 0;
+        let mut failures = 0usize;
+        let mut restarts = 0usize;
+        let mut restart_time_total = 0.0f64;
+
+        goodput.record(EventKind::JobStart, t, 0);
+        // initial provisioning + compile (cached per strategy)
+        t += o.recovery.provisioning_s;
+        goodput.record(EventKind::ProvisioningDone, t, 0);
+        t += o.recovery.initial_compile_s;
+        goodput.record(EventKind::CompilationDone, t, 0);
+        goodput.record(EventKind::RestartDone, t, 0);
+
+        while step < target_steps {
+            let step_end = t + o.step_time_s;
+            let events = injector.drain(t, step_end);
+            // only failures that actually break the job interrupt the step
+            if let Some(ev) = events.iter().find(|e| {
+                matches!(
+                    e.kind,
+                    FailureKind::HostCrash | FailureKind::Hang | FailureKind::IciFailure | FailureKind::Sdc
+                )
+            }) {
+                failures += 1;
+                t = ev.t;
+                goodput.record(EventKind::FailureDetected, t, step);
+                // detection latency (watchdog/SDC sweep)
+                t += o.recovery.detection_s;
+                goodput.record(EventKind::RestartBegin, t, step);
+                let swap = if ev.kind == FailureKind::HostCrash {
+                    scheduler.handle_failure(ev.replica % o.replicas)
+                } else {
+                    Some(ev.replica) // non-crash failures restart in place
+                };
+                let restart = o.recovery.restart_time_s(swap.is_some());
+                t += restart;
+                restart_time_total += restart;
+                restarts += 1;
+                // roll back to the last durable checkpoint
+                let resume_from = if o.recovery.multi_tier {
+                    last_local_ckpt.max(last_remote_ckpt)
+                } else {
+                    last_remote_ckpt
+                };
+                step = resume_from;
+                goodput.record(EventKind::RestartDone, t, step);
+                scheduler.handle_repair(ev.replica % o.replicas);
+                continue;
+            }
+            // step completes
+            t = step_end;
+            step += 1;
+            goodput.record(EventKind::StepDone, t, step);
+            if o.recovery.multi_tier && o.local_ckpt_every > 0 && step % o.local_ckpt_every == 0 {
+                t += o.recovery.local_ckpt_save_s;
+                last_local_ckpt = step;
+                goodput.record(EventKind::CheckpointDurable, t, step);
+            }
+            if o.remote_ckpt_every > 0 && step % o.remote_ckpt_every == 0 {
+                // async: only the blocking fraction is charged
+                t += o.recovery.remote_ckpt_block_s;
+                last_remote_ckpt = step;
+                if !o.recovery.multi_tier {
+                    goodput.record(EventKind::CheckpointDurable, t, step);
+                }
+            }
+        }
+        goodput.record(EventKind::JobEnd, t, step);
+
+        Ok(SimOutcome {
+            steps_completed: step,
+            wall_time_s: t,
+            goodput: goodput.goodput(),
+            failures,
+            restarts,
+            total_restart_time_s: restart_time_total,
+            mean_restart_time_s: if restarts > 0 {
+                restart_time_total / restarts as f64
+            } else {
+                0.0
+            },
+            hot_swaps: scheduler.swaps,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distributed::recovery::RecoveryStrategy;
+
+    #[test]
+    fn no_failures_full_goodput() {
+        let c = Cluster::new(ClusterOptions {
+            failure_rate: 0.0,
+            ..Default::default()
+        });
+        // long enough that startup provisioning/compile amortizes
+        let out = c.run(2000).unwrap();
+        assert_eq!(out.failures, 0);
+        assert!(out.goodput > 0.9, "{}", out.goodput);
+        assert_eq!(out.steps_completed, 2000);
+    }
+
+    #[test]
+    fn failures_cost_goodput() {
+        let mk = |rate| {
+            Cluster::new(ClusterOptions {
+                failure_rate: rate,
+                seed: 3,
+                ..Default::default()
+            })
+            .run(300)
+            .unwrap()
+        };
+        let clean = mk(0.0);
+        let dirty = mk(0.05);
+        assert!(dirty.failures > 0);
+        assert!(dirty.goodput < clean.goodput);
+        assert!(dirty.wall_time_s > clean.wall_time_s);
+    }
+
+    #[test]
+    fn multi_tier_beats_remote_only_under_failures() {
+        let mk = |strategy: RecoveryStrategy| {
+            Cluster::new(ClusterOptions {
+                failure_rate: 0.02,
+                seed: 11,
+                recovery: strategy,
+                ..Default::default()
+            })
+            .run(300)
+            .unwrap()
+        };
+        let remote = mk(RecoveryStrategy::baseline_remote_only());
+        let mt = mk(RecoveryStrategy::axlearn_full());
+        assert!(
+            mt.goodput > remote.goodput,
+            "multi-tier {} vs remote {}",
+            mt.goodput,
+            remote.goodput
+        );
+        assert!(mt.mean_restart_time_s < remote.mean_restart_time_s);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mk = || {
+            Cluster::new(ClusterOptions {
+                failure_rate: 0.02,
+                seed: 5,
+                ..Default::default()
+            })
+            .run(100)
+            .unwrap()
+        };
+        let a = mk();
+        let b = mk();
+        assert_eq!(a.wall_time_s.to_bits(), b.wall_time_s.to_bits());
+        assert_eq!(a.failures, b.failures);
+    }
+}

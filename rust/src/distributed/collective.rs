@@ -1,0 +1,212 @@
+//! Simulated collectives over replica state vectors.
+//!
+//! The data plane of the cluster simulator: all-reduce/all-gather/
+//! broadcast implemented over plain host vectors, with an injectable
+//! fault hook so the SDC detector and failure-injection tests can
+//! exercise real corruption paths (a bit flip inside a collective is the
+//! canonical interconnect SDC of §5).
+
+use anyhow::{bail, Result};
+
+/// A fault hook: (replica, element_index, value) -> corrupted value.
+pub type FaultHook = Box<dyn Fn(usize, usize, f32) -> f32 + Send>;
+
+/// Simulated collective engine.
+#[derive(Default)]
+pub struct SimCollective {
+    fault: Option<FaultHook>,
+    pub ops_run: u64,
+}
+
+impl SimCollective {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Install a fault hook (e.g. flip a bit on one replica's contribution).
+    pub fn with_fault(mut self, hook: FaultHook) -> Self {
+        self.fault = Some(hook);
+        self
+    }
+
+    fn apply_fault(&self, replica: usize, data: &[f32]) -> Vec<f32> {
+        match &self.fault {
+            None => data.to_vec(),
+            Some(hook) => data
+                .iter()
+                .enumerate()
+                .map(|(i, &x)| hook(replica, i, x))
+                .collect(),
+        }
+    }
+
+    /// Sum all-reduce: every replica ends with the elementwise sum.
+    pub fn all_reduce(&mut self, shards: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        self.ops_run += 1;
+        let n = shards.len();
+        if n == 0 {
+            bail!("all_reduce over zero replicas");
+        }
+        let len = shards[0].len();
+        if shards.iter().any(|s| s.len() != len) {
+            bail!("all_reduce shard length mismatch");
+        }
+        let mut sum = vec![0f32; len];
+        for (r, shard) in shards.iter().enumerate() {
+            let contrib = self.apply_fault(r, shard);
+            for (acc, x) in sum.iter_mut().zip(&contrib) {
+                *acc += x;
+            }
+        }
+        Ok(vec![sum; n])
+    }
+
+    /// All-gather: every replica ends with the concatenation.
+    pub fn all_gather(&mut self, shards: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        self.ops_run += 1;
+        if shards.is_empty() {
+            bail!("all_gather over zero replicas");
+        }
+        let mut full = Vec::new();
+        for (r, shard) in shards.iter().enumerate() {
+            full.extend(self.apply_fault(r, shard));
+        }
+        Ok(vec![full; shards.len()])
+    }
+
+    /// Broadcast from `root` to all replicas.
+    pub fn broadcast(&mut self, shards: &mut [Vec<f32>], root: usize) -> Result<()> {
+        self.ops_run += 1;
+        if root >= shards.len() {
+            bail!("broadcast root {root} out of range");
+        }
+        let src = self.apply_fault(root, &shards[root]);
+        for (r, s) in shards.iter_mut().enumerate() {
+            if r != root {
+                *s = src.clone();
+            }
+        }
+        Ok(())
+    }
+
+    /// Reduce-scatter: replica r ends with the r-th chunk of the sum.
+    pub fn reduce_scatter(&mut self, shards: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        self.ops_run += 1;
+        let n = shards.len();
+        if n == 0 {
+            bail!("reduce_scatter over zero replicas");
+        }
+        let len = shards[0].len();
+        if len % n != 0 {
+            bail!("reduce_scatter: {len} elements not divisible by {n} replicas");
+        }
+        let summed = self.all_reduce(shards)?; // sums include fault hook
+        self.ops_run -= 1; // the inner op isn't a separate collective
+        let chunk = len / n;
+        Ok((0..n)
+            .map(|r| summed[0][r * chunk..(r + 1) * chunk].to_vec())
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn all_reduce_equals_sequential_sum() {
+        // property over random topologies/sizes
+        let mut rng = Rng::new(5);
+        for _ in 0..20 {
+            let n = rng.gen_range(1, 9) as usize;
+            let len = rng.gen_range(1, 64) as usize;
+            let shards: Vec<Vec<f32>> = (0..n)
+                .map(|_| (0..len).map(|_| rng.normal() as f32).collect())
+                .collect();
+            let mut c = SimCollective::new();
+            let out = c.all_reduce(&shards).unwrap();
+            for i in 0..len {
+                let want: f32 = shards.iter().map(|s| s[i]).sum();
+                assert!((out[0][i] - want).abs() < 1e-4);
+            }
+            // every replica identical
+            for r in 1..n {
+                assert_eq!(out[0], out[r]);
+            }
+        }
+    }
+
+    #[test]
+    fn all_gather_concatenates_in_order() {
+        let mut c = SimCollective::new();
+        let out = c
+            .all_gather(&[vec![1.0], vec![2.0], vec![3.0]])
+            .unwrap();
+        assert_eq!(out[1], vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn broadcast_from_root() {
+        let mut c = SimCollective::new();
+        let mut shards = vec![vec![0.0; 2], vec![7.0, 8.0], vec![0.0; 2]];
+        c.broadcast(&mut shards, 1).unwrap();
+        assert_eq!(shards[0], vec![7.0, 8.0]);
+        assert_eq!(shards[2], vec![7.0, 8.0]);
+    }
+
+    #[test]
+    fn reduce_scatter_chunks() {
+        let mut c = SimCollective::new();
+        let shards = vec![vec![1.0, 2.0, 3.0, 4.0], vec![10.0, 20.0, 30.0, 40.0]];
+        let out = c.reduce_scatter(&shards).unwrap();
+        assert_eq!(out[0], vec![11.0, 22.0]);
+        assert_eq!(out[1], vec![33.0, 44.0]);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let mut c = SimCollective::new();
+        assert!(c.all_reduce(&[vec![1.0], vec![1.0, 2.0]]).is_err());
+        assert!(c.reduce_scatter(&[vec![1.0, 2.0, 3.0], vec![1.0, 2.0, 3.0]]).is_err());
+    }
+
+    #[test]
+    fn fault_hook_corrupts_exactly_one_replica() {
+        let mut c = SimCollective::new().with_fault(Box::new(|r, i, x| {
+            if r == 1 && i == 0 {
+                f32::from_bits(x.to_bits() ^ 0x1)
+            } else {
+                x
+            }
+        }));
+        let clean = vec![vec![1.0f32, 2.0], vec![3.0, 4.0]];
+        let out = c.all_reduce(&clean).unwrap();
+        let want0: f32 = 1.0 + f32::from_bits(3.0f32.to_bits() ^ 0x1);
+        assert_eq!(out[0][0], want0);
+        assert_eq!(out[0][1], 6.0);
+    }
+
+    #[test]
+    fn repeated_collective_detects_intermittent_fault() {
+        // the §5 SDC strategy: run the same collective repeatedly and
+        // compare — an intermittent interconnect fault shows up as a diff.
+        let toggle = std::sync::atomic::AtomicUsize::new(0);
+        let mut c = SimCollective::new().with_fault(Box::new(move |r, i, x| {
+            if r == 0 && i == 0 {
+                let n = toggle.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+                if n == 3 {
+                    return x + 1.0; // corrupt on one specific invocation
+                }
+            }
+            x
+        }));
+        let shards = vec![vec![1.0f32, 2.0], vec![3.0, 4.0]];
+        let mut results = Vec::new();
+        for _ in 0..4 {
+            results.push(c.all_reduce(&shards).unwrap()[0].clone());
+        }
+        let all_same = results.windows(2).all(|w| w[0] == w[1]);
+        assert!(!all_same, "intermittent corruption must be visible");
+    }
+}

@@ -1,0 +1,145 @@
+//! Failure injection: the opaque-failure menagerie of §5/§7.3
+//! ("hardware failures, ICI failures, SDCs, kernel panics, file system
+//! throttling, and more"), drawn from an exponential inter-arrival model
+//! scaled by fleet size — "a large fleet is expected to encounter
+//! hardware failures several times a day".
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FailureKind {
+    /// A host dies; its replica must be rescheduled/hot-swapped.
+    HostCrash,
+    /// A step hangs (watchdog territory).
+    Hang,
+    /// Silent data corruption on a collective.
+    Sdc,
+    /// Inter-chip interconnect degradation.
+    IciFailure,
+    /// Storage backend throttling (checkpoint saves slow down).
+    StorageThrottle,
+}
+
+pub const ALL_KINDS: [FailureKind; 5] = [
+    FailureKind::HostCrash,
+    FailureKind::Hang,
+    FailureKind::Sdc,
+    FailureKind::IciFailure,
+    FailureKind::StorageThrottle,
+];
+
+/// A scheduled failure event in virtual time.
+#[derive(Clone, Debug)]
+pub struct FailureEvent {
+    pub t: f64,
+    pub kind: FailureKind,
+    pub replica: usize,
+}
+
+/// Poisson failure injector.
+pub struct FailureInjector {
+    rng: Rng,
+    /// Mean failures per host per hour.
+    pub rate_per_host_hour: f64,
+    pub hosts: usize,
+    pub replicas: usize,
+    next_t: f64,
+}
+
+impl FailureInjector {
+    pub fn new(seed: u64, rate_per_host_hour: f64, hosts: usize, replicas: usize) -> Self {
+        let mut inj = FailureInjector {
+            rng: Rng::new(seed),
+            rate_per_host_hour,
+            hosts,
+            replicas,
+            next_t: 0.0,
+        };
+        inj.next_t = inj.sample_gap(0.0);
+        inj
+    }
+
+    fn fleet_rate_per_sec(&self) -> f64 {
+        self.rate_per_host_hour * self.hosts as f64 / 3600.0
+    }
+
+    fn sample_gap(&mut self, from: f64) -> f64 {
+        from + self.rng.exponential(self.fleet_rate_per_sec().max(1e-12))
+    }
+
+    /// Failures occurring in (t0, t1].
+    pub fn drain(&mut self, t0: f64, t1: f64) -> Vec<FailureEvent> {
+        let mut out = Vec::new();
+        while self.next_t <= t1 {
+            if self.next_t > t0 {
+                let kind = *self.rng.choose(&ALL_KINDS);
+                let replica = self.rng.gen_range(0, self.replicas.max(1) as u64) as usize;
+                out.push(FailureEvent {
+                    t: self.next_t,
+                    kind,
+                    replica,
+                });
+            }
+            let t = self.next_t;
+            self.next_t = self.sample_gap(t);
+        }
+        out
+    }
+
+    /// Expected failures over a window (for tests / capacity planning).
+    pub fn expected_failures(&self, seconds: f64) -> f64 {
+        self.fleet_rate_per_sec() * seconds
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rate_scales_with_fleet() {
+        // "several times a day" at 4096 hosts with a per-host MTBF of ~4
+        // months (0.0003 failures/host/hour).
+        let inj = FailureInjector::new(0, 0.0003, 4096, 32);
+        let per_day = inj.expected_failures(86400.0);
+        assert!(per_day > 2.0 && per_day < 60.0, "{per_day}");
+    }
+
+    #[test]
+    fn drain_is_ordered_and_windowed() {
+        let mut inj = FailureInjector::new(1, 1.0, 100, 8);
+        let events = inj.drain(0.0, 3600.0);
+        assert!(!events.is_empty());
+        for w in events.windows(2) {
+            assert!(w[0].t <= w[1].t);
+        }
+        assert!(events.iter().all(|e| e.t > 0.0 && e.t <= 3600.0));
+        assert!(events.iter().all(|e| e.replica < 8));
+    }
+
+    #[test]
+    fn empirical_rate_matches_poisson() {
+        let mut inj = FailureInjector::new(2, 0.01, 1000, 4);
+        // expected 10/hour; count over 10 hours
+        let n = inj.drain(0.0, 36000.0).len() as f64;
+        assert!((n - 100.0).abs() < 35.0, "{n}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = FailureInjector::new(7, 0.5, 64, 4);
+        let mut b = FailureInjector::new(7, 0.5, 64, 4);
+        let ea: Vec<_> = a.drain(0.0, 7200.0).iter().map(|e| (e.t.to_bits(), e.kind, e.replica)).collect();
+        let eb: Vec<_> = b.drain(0.0, 7200.0).iter().map(|e| (e.t.to_bits(), e.kind, e.replica)).collect();
+        assert_eq!(ea, eb);
+    }
+
+    #[test]
+    fn all_kinds_eventually_injected() {
+        let mut inj = FailureInjector::new(3, 5.0, 1000, 4);
+        let events = inj.drain(0.0, 36000.0);
+        for kind in ALL_KINDS {
+            assert!(events.iter().any(|e| e.kind == kind), "{kind:?} never seen");
+        }
+    }
+}

@@ -1,0 +1,24 @@
+//! The simulated heterogeneous cluster: the substrate substituting for
+//! the paper's fleets (DESIGN.md §2).
+//!
+//! A [`cluster::Cluster`] is a set of data-parallel replicas (each a
+//! group of simulated hosts/chips) advancing a virtual clock.  On top of
+//! it: collectives with injectable faults ([`collective`]), failure
+//! injection ([`failure`]), the recovery machinery — multi-tier restore,
+//! in-cluster broadcast from a healthy replica, slice hot-swap
+//! ([`recovery`], [`scheduler`]) — and the goodput accounting that
+//! reproduces the §5 "hours → <10 minutes" restart claim.
+
+pub mod cluster;
+pub mod collective;
+pub mod data_parallel;
+pub mod failure;
+pub mod recovery;
+pub mod scheduler;
+
+pub use cluster::{Cluster, ClusterOptions};
+pub use data_parallel::{train_data_parallel, DataParallelOptions};
+pub use collective::SimCollective;
+pub use failure::{FailureInjector, FailureKind};
+pub use recovery::{recovery_experiment, RecoveryOutcome, RecoveryStrategy};
+pub use scheduler::{HotSwapScheduler, SliceState};

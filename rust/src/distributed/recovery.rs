@@ -1,0 +1,209 @@
+//! Failure-recovery strategies and the §5 restart-time experiment:
+//! "Combining the above strategies allows us to reduce the restart time
+//! of a 32,768 chip job from hours to less than ten minutes."
+//!
+//! The strategy costs are derived from first principles (checkpoint
+//! bytes / available bandwidth), not fitted to the claim:
+//!
+//! * **remote-only**: every host re-reads its state shard from remote
+//!   object storage; the job-wide aggregate bandwidth cap dominates.
+//! * **multi-tier**: restore from node-local disk/memory; a failed
+//!   replica's state is re-broadcast from a healthy data-parallel
+//!   replica over the fast interconnect (§5).
+//! * **hot-swap** removes re-provisioning waits; **compile cache**
+//!   removes recompilation.
+
+use anyhow::Result;
+
+use crate::perfmodel::model_shapes::TransformerShape;
+
+/// A recovery strategy with its time components (seconds).
+#[derive(Clone, Debug)]
+pub struct RecoveryStrategy {
+    pub name: &'static str,
+    /// Initial cluster provisioning.
+    pub provisioning_s: f64,
+    /// Cold-compile time; with a persistent compile cache this is ~0.
+    pub initial_compile_s: f64,
+    /// Failure detection latency (watchdog interval + confirmation).
+    pub detection_s: f64,
+    /// Re-provisioning wait when a node dies (0 with hot spares).
+    pub reprovision_s: f64,
+    /// State-restore time on restart.
+    pub restore_s: f64,
+    /// Recompile time on restart (0 with compile cache).
+    pub recompile_s: f64,
+    /// Blocking cost of a remote checkpoint save (async => small).
+    pub remote_ckpt_block_s: f64,
+    /// Blocking cost of a local-tier save.
+    pub local_ckpt_save_s: f64,
+    pub multi_tier: bool,
+}
+
+impl RecoveryStrategy {
+    /// Restart time after a failure (hot_swapped: a spare absorbed the
+    /// dead node, so no reprovisioning wait).
+    pub fn restart_time_s(&self, hot_swapped: bool) -> f64 {
+        let reprov = if hot_swapped { 0.0 } else { self.reprovision_s };
+        reprov + self.restore_s + self.recompile_s
+    }
+
+    /// The pre-AXLearn baseline: remote-only checkpoints, no spares, no
+    /// compile cache.
+    pub fn baseline_remote_only() -> Self {
+        RecoveryStrategy {
+            name: "remote-only",
+            provisioning_s: 600.0,
+            initial_compile_s: 900.0,
+            detection_s: 120.0,
+            reprovision_s: 900.0,
+            restore_s: 1800.0, // placeholder; derive_restore_times overrides
+            recompile_s: 900.0,
+            remote_ckpt_block_s: 5.0,
+            local_ckpt_save_s: 0.0,
+            multi_tier: false,
+        }
+    }
+
+    /// AXLearn's full stack: multi-tier + in-cluster broadcast + hot
+    /// spares + persistent compile cache.
+    pub fn axlearn_full() -> Self {
+        RecoveryStrategy {
+            name: "axlearn-full",
+            provisioning_s: 600.0,
+            initial_compile_s: 900.0,
+            detection_s: 30.0, // watchdog at tight cadence
+            reprovision_s: 900.0, // only hit when spares exhausted
+            restore_s: 60.0,   // derive_restore_times overrides
+            recompile_s: 0.0,  // persistent compile cache
+            remote_ckpt_block_s: 1.0,
+            local_ckpt_save_s: 2.0,
+            multi_tier: true,
+        }
+    }
+}
+
+/// Derive restore times from checkpoint size and bandwidths.
+///
+/// * remote-only: `state_bytes` streamed from object storage under a
+///   job-wide aggregate bandwidth cap (cloud egress quotas make this
+///   nearly independent of chip count).
+/// * multi-tier: each host reads its shard from local disk, and a failed
+///   replica receives its shard over ICI from a healthy replica.
+pub fn derive_restore_times(
+    shape: &TransformerShape,
+    chips: usize,
+    dp_replicas: usize, // data-parallel replicas, each holding a full copy
+    remote_agg_bw: f64, // bytes/s for the whole job
+    local_disk_bw: f64, // bytes/s per host
+    ici_bw: f64,        // bytes/s per chip
+    hosts: usize,
+) -> (f64, f64) {
+    // full train state: f32 master + adam m/v + bf16 params
+    let state_bytes = shape.params() as f64 * 14.0;
+    // remote-only: EVERY data-parallel replica re-reads the full state
+    // from object storage, all contending for the same job quota
+    let remote = state_bytes * dp_replicas as f64 / remote_agg_bw;
+    let per_host_shard = state_bytes / hosts as f64;
+    let local_read = per_host_shard / local_disk_bw;
+    // failed replica's shard over ICI (replica = chips / dp ways; approximate
+    // with per-chip shard broadcast)
+    let per_chip_shard = state_bytes / chips as f64;
+    let broadcast = per_chip_shard / ici_bw * 2.0;
+    (remote, local_read.max(broadcast))
+}
+
+/// Outcome of the restart-time experiment.
+#[derive(Debug)]
+pub struct RecoveryOutcome {
+    pub strategy: &'static str,
+    pub chips: usize,
+    pub restart_minutes: f64,
+    pub detection_minutes: f64,
+    pub restore_minutes: f64,
+    pub recompile_minutes: f64,
+    pub reprovision_minutes: f64,
+}
+
+/// Reproduce the §5 claim at a given scale: restart time after a host
+/// crash under each strategy.
+pub fn recovery_experiment(chips: usize) -> Result<Vec<RecoveryOutcome>> {
+    // Model B-scale job (the paper's 32k-chip example trains ~150B).
+    let shape = TransformerShape::model_b_150b();
+    let hosts = chips / 4; // TPU: 4 chips/host
+    let dp_replicas = (chips / 1024).max(1); // 1024-chip model shards
+    let (remote_restore, local_restore) = derive_restore_times(
+        &shape,
+        chips,
+        dp_replicas,
+        10e9,  // 10 GB/s aggregate object-store quota
+        1e9,   // 1 GB/s local NVMe per host
+        100e9, // ICI share for broadcast
+        hosts,
+    );
+
+    let mut base = RecoveryStrategy::baseline_remote_only();
+    base.restore_s = remote_restore;
+    let mut full = RecoveryStrategy::axlearn_full();
+    full.restore_s = local_restore;
+
+    let outcomes = [(base, false), (full, true)]
+        .into_iter()
+        .map(|(s, hot_swapped)| {
+            let reprov = if hot_swapped { 0.0 } else { s.reprovision_s };
+            RecoveryOutcome {
+                strategy: s.name,
+                chips,
+                restart_minutes: (s.detection_s + s.restart_time_s(hot_swapped)) / 60.0,
+                detection_minutes: s.detection_s / 60.0,
+                restore_minutes: s.restore_s / 60.0,
+                recompile_minutes: s.recompile_s / 60.0,
+                reprovision_minutes: reprov / 60.0,
+            }
+        })
+        .collect();
+    Ok(outcomes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_claim_hours_to_under_ten_minutes() {
+        // the headline §5 number at 32,768 chips
+        let out = recovery_experiment(32_768).unwrap();
+        let base = &out[0];
+        let full = &out[1];
+        assert!(base.restart_minutes > 60.0, "baseline {} min", base.restart_minutes);
+        assert!(full.restart_minutes < 10.0, "axlearn {} min", full.restart_minutes);
+    }
+
+    #[test]
+    fn restore_times_scale_sanely() {
+        let shape = TransformerShape::model_b_150b();
+        let (r32k, l32k) = derive_restore_times(&shape, 32768, 32, 10e9, 1e9, 100e9, 8192);
+        let (r256, l256) = derive_restore_times(&shape, 256, 1, 10e9, 1e9, 100e9, 64);
+        // remote restore *grows* with replica count (quota contention)
+        assert!(r32k > r256 * 10.0);
+        // local restore *shrinks* with scale (smaller per-host shards)
+        assert!(l32k < l256);
+    }
+
+    #[test]
+    fn hot_swap_eliminates_reprovision() {
+        let s = RecoveryStrategy::baseline_remote_only();
+        assert!(s.restart_time_s(false) > s.restart_time_s(true));
+        assert_eq!(
+            s.restart_time_s(false) - s.restart_time_s(true),
+            s.reprovision_s
+        );
+    }
+
+    #[test]
+    fn compile_cache_component_visible() {
+        let out = recovery_experiment(32_768).unwrap();
+        assert!(out[0].recompile_minutes > 10.0);
+        assert_eq!(out[1].recompile_minutes, 0.0);
+    }
+}

@@ -1,0 +1,172 @@
+//! Slice-level hot-swap scheduling (§5): "the AXLearn scheduler
+//! over-provisions spare replicas within the same cluster, allowing
+//! failed nodes in an ongoing training job to be rapidly substituted with
+//! healthy nodes.  In the meantime, the over-provisioned hardware can
+//! still run low-priority jobs".
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SliceState {
+    /// Serving the training job.
+    Active,
+    /// Healthy spare (may run low-priority work).
+    Spare { running_low_prio: bool },
+    /// Failed; awaiting repair.
+    Failed,
+}
+
+/// The hot-swap scheduler over a pool of slices.
+pub struct HotSwapScheduler {
+    slices: BTreeMap<usize, SliceState>,
+    pub swaps: u64,
+    pub low_prio_preemptions: u64,
+}
+
+impl HotSwapScheduler {
+    /// `active` training slices + `spares` over-provisioned ones.
+    pub fn new(active: usize, spares: usize) -> Self {
+        let mut slices = BTreeMap::new();
+        for i in 0..active {
+            slices.insert(i, SliceState::Active);
+        }
+        for i in active..active + spares {
+            slices.insert(
+                i,
+                SliceState::Spare {
+                    running_low_prio: true,
+                },
+            );
+        }
+        HotSwapScheduler {
+            slices,
+            swaps: 0,
+            low_prio_preemptions: 0,
+        }
+    }
+
+    pub fn state(&self, slice: usize) -> Option<SliceState> {
+        self.slices.get(&slice).copied()
+    }
+
+    pub fn active_count(&self) -> usize {
+        self.slices
+            .values()
+            .filter(|s| matches!(s, SliceState::Active))
+            .count()
+    }
+
+    pub fn spare_count(&self) -> usize {
+        self.slices
+            .values()
+            .filter(|s| matches!(s, SliceState::Spare { .. }))
+            .count()
+    }
+
+    /// A slice failed.  Promote a spare if available; returns the id of
+    /// the replacement slice (None = job must wait for repair/quota).
+    pub fn handle_failure(&mut self, failed: usize) -> Option<usize> {
+        if let Some(s) = self.slices.get_mut(&failed) {
+            *s = SliceState::Failed;
+        }
+        let spare = self
+            .slices
+            .iter()
+            .find(|(_, s)| matches!(s, SliceState::Spare { .. }))
+            .map(|(id, s)| (*id, *s));
+        match spare {
+            Some((id, SliceState::Spare { running_low_prio })) => {
+                if running_low_prio {
+                    self.low_prio_preemptions += 1;
+                }
+                self.slices.insert(id, SliceState::Active);
+                self.swaps += 1;
+                Some(id)
+            }
+            _ => None,
+        }
+    }
+
+    /// A failed slice came back from repair: it becomes a spare.
+    pub fn handle_repair(&mut self, slice: usize) {
+        if let Some(s) = self.slices.get_mut(&slice) {
+            if *s == SliceState::Failed {
+                *s = SliceState::Spare {
+                    running_low_prio: false,
+                };
+            }
+        }
+    }
+
+    /// Resource-waste accounting: fraction of the pool doing neither
+    /// training nor low-priority work.
+    pub fn idle_fraction(&self) -> f64 {
+        let idle = self
+            .slices
+            .values()
+            .filter(|s| matches!(s, SliceState::Spare { running_low_prio: false } | SliceState::Failed))
+            .count();
+        idle as f64 / self.slices.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn swap_promotes_spare_and_preempts_low_prio() {
+        let mut s = HotSwapScheduler::new(4, 2);
+        assert_eq!(s.active_count(), 4);
+        let replacement = s.handle_failure(1).unwrap();
+        assert!(replacement >= 4);
+        assert_eq!(s.active_count(), 4); // capacity restored instantly
+        assert_eq!(s.spare_count(), 1);
+        assert_eq!(s.low_prio_preemptions, 1);
+        assert_eq!(s.state(1), Some(SliceState::Failed));
+    }
+
+    #[test]
+    fn exhausted_spares_leave_job_degraded() {
+        let mut s = HotSwapScheduler::new(2, 1);
+        assert!(s.handle_failure(0).is_some());
+        assert!(s.handle_failure(1).is_none());
+        assert_eq!(s.active_count(), 1);
+    }
+
+    #[test]
+    fn repair_returns_slice_as_spare() {
+        let mut s = HotSwapScheduler::new(2, 1);
+        s.handle_failure(0);
+        s.handle_repair(0);
+        assert_eq!(
+            s.state(0),
+            Some(SliceState::Spare {
+                running_low_prio: false
+            })
+        );
+        // and it can absorb the next failure
+        assert!(s.handle_failure(1).is_some());
+        assert_eq!(s.active_count(), 2);
+    }
+
+    #[test]
+    fn spares_running_low_prio_are_not_waste() {
+        let s = HotSwapScheduler::new(4, 2);
+        assert_eq!(s.idle_fraction(), 0.0);
+        let mut s2 = HotSwapScheduler::new(4, 2);
+        s2.handle_failure(0);
+        // failed slice is idle until repaired
+        assert!(s2.idle_fraction() > 0.0);
+    }
+
+    #[test]
+    fn survives_failure_storm_with_enough_spares() {
+        let mut s = HotSwapScheduler::new(8, 4);
+        for i in 0..4 {
+            assert!(s.handle_failure(i).is_some());
+        }
+        assert_eq!(s.active_count(), 8);
+        assert_eq!(s.swaps, 4);
+    }
+}

@@ -1,0 +1,458 @@
+//! Experiment harnesses: one function per paper table/figure.
+//! Shared by the `repro` CLI, `cargo bench` targets, and examples.
+
+use anyhow::Result;
+
+use crate::baselines;
+use crate::perfmodel::chips::{self, ChipSpec};
+use crate::perfmodel::estimator::{estimate_step, StepSpec, SystemProfile};
+use crate::perfmodel::{Strategy, TransformerShape};
+
+// ---------------------------------------------------------------------------
+// Table 3: training performance across heterogeneous hardware
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+pub struct Table3Row {
+    pub model: String,
+    pub hardware: String,
+    pub system: &'static str,
+    /// None = OOM (the paper's empty row).
+    pub iter_time_s: Option<f64>,
+    pub mfu: Option<f64>,
+    pub tokens_per_s: Option<f64>,
+    pub remat: String,
+}
+
+/// The preferred strategy each system would pick for (model, chips) — the
+/// configurations the respective papers/docs recommend.
+fn strategy_for(system: &str, chip: &ChipSpec, chips_n: usize, is_70b: bool) -> Strategy {
+    match (system, chip.name, is_70b) {
+        // Megatron on GPU: TP within the node + DP/PP across
+        ("Megatron-LM", "H100", false) => Strategy {
+            data: chips_n / 8,
+            tensor: 8,
+            ..Default::default()
+        },
+        ("Megatron-LM", "H100", true) => Strategy {
+            data: chips_n / 32,
+            tensor: 8,
+            pipeline: 4,
+            microbatches: 32,
+            ..Default::default()
+        },
+        // AXLearn/MaxText on GPU (Appendix A): fsdp across, TP in node
+        (_, "H100", true) => Strategy {
+            fsdp: chips_n / 8,
+            tensor: 8,
+            ..Default::default()
+        },
+        // TPU/Trainium: FSDP-dominant
+        _ => Strategy::fsdp_only(chips_n),
+    }
+}
+
+pub fn table3() -> Vec<Table3Row> {
+    let mut rows = Vec::new();
+    let models = [
+        ("Llama2-7B", TransformerShape::llama2_7b(), false),
+        ("Llama2-70B", TransformerShape::llama2_70b(), true),
+    ];
+    for (mname, shape, is_70b) in models {
+        let chips_n_gpu = if is_70b { 512 } else { 256 };
+        let chips_n_tpu = if is_70b { 512 } else { 256 }; // v5p-1024/512 = 512/256 chips
+        let hardware: Vec<(String, ChipSpec, usize, Vec<SystemProfile>)> = vec![
+            (
+                format!("{} x H100-8", chips_n_gpu / 8),
+                chips::h100(),
+                chips_n_gpu,
+                vec![
+                    baselines::pytorch_fsdp(),
+                    baselines::megatron_lm(),
+                    baselines::maxtext(),
+                    baselines::axlearn(),
+                ],
+            ),
+            (
+                format!("tpu-v5p-{}", chips_n_tpu * 2),
+                chips::tpu_v5p(),
+                chips_n_tpu,
+                vec![
+                    baselines::pytorch_xla_fsdp(),
+                    baselines::maxtext(),
+                    baselines::axlearn(),
+                ],
+            ),
+            (
+                "64 x Trainium2-16".to_string(),
+                chips::trainium2(),
+                1024,
+                vec![baselines::axlearn()],
+            ),
+        ];
+        for (hw_name, chip, chips_n, systems) in hardware {
+            for profile in systems {
+                let spec = StepSpec {
+                    shape: shape.clone(),
+                    strategy: strategy_for(profile.name, &chip, chips_n, is_70b),
+                    global_batch: 1024,
+                    seq_len: 4096,
+                    quantization: "none".into(),
+                    remat_policy: "auto".into(),
+                };
+                match estimate_step(&spec, &chip, &profile) {
+                    Ok(e) => rows.push(Table3Row {
+                        model: mname.into(),
+                        hardware: hw_name.clone(),
+                        system: profile.name,
+                        iter_time_s: Some(e.step_time_s),
+                        mfu: Some(e.mfu),
+                        tokens_per_s: Some(e.tokens_per_s),
+                        remat: e.remat_policy,
+                    }),
+                    Err(err) if format!("{err:#}").contains("OOM") => rows.push(Table3Row {
+                        model: mname.into(),
+                        hardware: hw_name.clone(),
+                        system: profile.name,
+                        iter_time_s: None,
+                        mfu: None,
+                        tokens_per_s: None,
+                        remat: "OOM".into(),
+                    }),
+                    Err(err) => panic!("table3 {mname}/{hw_name}/{}: {err:#}", profile.name),
+                }
+            }
+        }
+    }
+    rows
+}
+
+pub fn render_table3(rows: &[Table3Row]) -> String {
+    let mut out = format!(
+        "{:<11} {:<18} {:<18} {:>10} {:>7} {:>14} {:>12}\n",
+        "Model", "Hardware", "System", "Iter(s)", "MFU", "Tokens/s", "remat"
+    );
+    for r in rows {
+        out.push_str(&format!(
+            "{:<11} {:<18} {:<18} {:>10} {:>7} {:>14} {:>12}\n",
+            r.model,
+            r.hardware,
+            r.system,
+            r.iter_time_s.map(|t| format!("{t:.1}")).unwrap_or_else(|| "OOM".into()),
+            r.mfu.map(|m| format!("{:.1}%", m * 100.0)).unwrap_or_default(),
+            r.tokens_per_s
+                .map(|t| {
+                    if t > 1e6 {
+                        format!("{:.1}M", t / 1e6)
+                    } else {
+                        format!("{:.0}K", t / 1e3)
+                    }
+                })
+                .unwrap_or_default(),
+            r.remat,
+        ));
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Figure 4: weak scaling
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+pub struct Fig4Point {
+    pub model: &'static str,
+    pub chips: usize,
+    pub mfu: f64,
+    pub tokens_per_s: f64,
+}
+
+pub fn fig4() -> Vec<Fig4Point> {
+    let ax = baselines::axlearn();
+    let mut pts = Vec::new();
+    // Model A: 70B / 4k ctx, 256 -> 4096 chips, fixed per-device batch
+    for chips_n in [256usize, 512, 1024, 2048, 4096] {
+        let spec = StepSpec {
+            shape: TransformerShape::model_a_70b(),
+            strategy: Strategy {
+                data: chips_n / 256,
+                fsdp: 256,
+                ..Default::default()
+            },
+            global_batch: chips_n, // 1 seq per chip
+            seq_len: 4096,
+            quantization: "none".into(),
+            remat_policy: "auto".into(),
+        };
+        let e = estimate_step(&spec, &chips::tpu_v5p(), &ax).expect("fig4 A");
+        pts.push(Fig4Point {
+            model: "ModelA-70B",
+            chips: chips_n,
+            mfu: e.mfu,
+            tokens_per_s: e.tokens_per_s,
+        });
+    }
+    // Model B: 150B / 8k ctx, 8192 -> 32768 chips; per-chip sequence count
+    // 1/16 of Model A's (the paper's batch-size cap for convergence).
+    for chips_n in [8192usize, 16384, 32768] {
+        let spec = StepSpec {
+            shape: TransformerShape::model_b_150b(),
+            strategy: Strategy {
+                data: chips_n / 2048,
+                fsdp: 2048,
+                ..Default::default()
+            },
+            global_batch: (chips_n / 16).max(2048 * 2),
+            seq_len: 8192,
+            quantization: "none".into(),
+            remat_policy: "auto".into(),
+        };
+        let e = estimate_step(&spec, &chips::tpu_v5p(), &ax).expect("fig4 B");
+        pts.push(Fig4Point {
+            model: "ModelB-150B",
+            chips: chips_n,
+            mfu: e.mfu,
+            tokens_per_s: e.tokens_per_s,
+        });
+    }
+    pts
+}
+
+pub fn render_fig4(pts: &[Fig4Point]) -> String {
+    let mut out = format!("{:<12} {:>8} {:>8} {:>14}\n", "Model", "Chips", "MFU", "Tokens/s");
+    for p in pts {
+        out.push_str(&format!(
+            "{:<12} {:>8} {:>7.1}% {:>14.2e}\n",
+            p.model, p.chips, p.mfu * 100.0, p.tokens_per_s
+        ));
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Table 4 / Figure 5: inference (local measured + projected)
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+pub struct Table4Row {
+    pub model: String,
+    pub system: String,
+    pub ttft_ms: f64,
+    pub tpot_ms: f64,
+}
+
+/// Local (real CPU PJRT) engine-vs-baseline run; returns the rows plus the
+/// measured (ttft_ratio, tpot_ratio, extra_ttft) for projection.
+pub fn table4_local(
+    manifest: &crate::runtime::Manifest,
+    client: std::sync::Arc<crate::runtime::RuntimeClient>,
+    num_requests: usize,
+) -> Result<(Vec<Table4Row>, (f64, f64, f64))> {
+    use crate::serving::baseline::{StaticBatchEngine, StaticBatchOptions};
+    use crate::serving::{BatcherOptions, Engine, Workload, WorkloadOptions};
+
+    let wopts = WorkloadOptions {
+        num_requests,
+        request_rate: 2.0,
+        max_input_len: 120,
+        max_output_len: 24,
+        vocab: 2048,
+        seed: 7,
+    };
+    let workload = Workload::sharegpt_like(wopts);
+
+    let session = crate::runtime::ServeSession::open(client.clone(), manifest, "serve")?;
+    let engine = Engine::new(
+        session,
+        BatcherOptions {
+            slots: 8,
+            kv_pages: 2048,
+            page_tokens: 16,
+        },
+    );
+    let ax = engine.run(&workload)?;
+
+    let session2 = crate::runtime::ServeSession::open(client, manifest, "serve")?;
+    let baseline = StaticBatchEngine::new(session2, StaticBatchOptions::default());
+    let vl = baseline.run(&workload)?;
+
+    let rows = vec![
+        Table4Row {
+            model: "small(local CPU)".into(),
+            system: "vLLM-style static".into(),
+            ttft_ms: vl.stats.mean_ttft_s * 1e3,
+            tpot_ms: vl.stats.mean_tpot_s * 1e3,
+        },
+        Table4Row {
+            model: "small(local CPU)".into(),
+            system: "AXLearn".into(),
+            ttft_ms: ax.stats.mean_ttft_s * 1e3,
+            tpot_ms: ax.stats.mean_tpot_s * 1e3,
+        },
+    ];
+    let ttft_ratio = vl.stats.mean_ttft_s / ax.stats.mean_ttft_s.max(1e-9);
+    let tpot_ratio = vl.stats.mean_tpot_s / ax.stats.mean_tpot_s.max(1e-9);
+    // compile stalls are a fixed, non-scaling TTFT component
+    let extra = StaticBatchOptions::default().compile_stall_s * vl.compile_stalls as f64
+        / num_requests.max(1) as f64;
+    Ok((rows, (ttft_ratio, tpot_ratio, extra)))
+}
+
+/// Projected Table 4 at paper scale (7B @ v5p-8, 70B @ v6e-8) from the
+/// analytic AXLearn model + measured scheduling ratios.
+pub fn table4_projected(ratios: (f64, f64, f64)) -> Vec<Table4Row> {
+    use crate::serving::analytic::{estimate_axlearn, table4_setups, transfer_ratios};
+    let (ttft_r, tpot_r, extra) = ratios;
+    let mut rows = Vec::new();
+    for (label, shape, chip, n_chips, prompt) in table4_setups() {
+        let ax = estimate_axlearn(&shape, &chip, n_chips, prompt, 8, 2.0);
+        let vl = transfer_ratios(&ax, ttft_r, tpot_r, extra * 20.0);
+        rows.push(Table4Row {
+            model: label.into(),
+            system: "vLLM (projected)".into(),
+            ttft_ms: vl.ttft_s * 1e3,
+            tpot_ms: vl.tpot_s * 1e3,
+        });
+        rows.push(Table4Row {
+            model: label.into(),
+            system: "AXLearn (analytic)".into(),
+            ttft_ms: ax.ttft_s * 1e3,
+            tpot_ms: ax.tpot_s * 1e3,
+        });
+    }
+    rows
+}
+
+pub fn render_table4(rows: &[Table4Row]) -> String {
+    let mut out = format!("{:<18} {:<20} {:>12} {:>12}\n", "Model", "System", "TTFT(ms)", "TPOT(ms)");
+    for r in rows {
+        out.push_str(&format!(
+            "{:<18} {:<20} {:>12.1} {:>12.2}\n",
+            r.model, r.system, r.ttft_ms, r.tpot_ms
+        ));
+    }
+    out
+}
+
+/// Figure 5: throughput vs request rate, engine vs baseline (local).
+#[derive(Clone, Debug)]
+pub struct Fig5Point {
+    pub rate: f64,
+    pub system: &'static str,
+    pub throughput_tok_s: f64,
+}
+
+pub fn fig5_local(
+    manifest: &crate::runtime::Manifest,
+    client: std::sync::Arc<crate::runtime::RuntimeClient>,
+    rates: &[f64],
+    num_requests: usize,
+) -> Result<Vec<Fig5Point>> {
+    use crate::serving::baseline::{StaticBatchEngine, StaticBatchOptions};
+    use crate::serving::{BatcherOptions, Engine, Workload, WorkloadOptions};
+    let mut pts = Vec::new();
+    for &rate in rates {
+        let workload = Workload::sharegpt_like(WorkloadOptions {
+            num_requests,
+            request_rate: rate,
+            max_input_len: 120,
+            max_output_len: 24,
+            vocab: 2048,
+            seed: 11,
+        });
+        let session = crate::runtime::ServeSession::open(client.clone(), manifest, "serve")?;
+        let ax = Engine::new(
+            session,
+            BatcherOptions {
+                slots: 8,
+                kv_pages: 2048,
+                page_tokens: 16,
+            },
+        )
+        .run(&workload)?;
+        pts.push(Fig5Point {
+            rate,
+            system: "AXLearn",
+            throughput_tok_s: ax.stats.throughput_tok_s,
+        });
+        let session2 = crate::runtime::ServeSession::open(client.clone(), manifest, "serve")?;
+        let vl = StaticBatchEngine::new(session2, StaticBatchOptions::default()).run(&workload)?;
+        pts.push(Fig5Point {
+            rate,
+            system: "vLLM-style",
+            throughput_tok_s: vl.stats.throughput_tok_s,
+        });
+    }
+    Ok(pts)
+}
+
+pub fn render_fig5(pts: &[Fig5Point]) -> String {
+    let mut out = format!("{:>8} {:<12} {:>16}\n", "Rate", "System", "Tokens/s");
+    for p in pts {
+        out.push_str(&format!(
+            "{:>8.2} {:<12} {:>16.1}\n",
+            p.rate, p.system, p.throughput_tok_s
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_reproduces_paper_orderings() {
+        let rows = table3();
+        let find = |m: &str, hw_prefix: &str, sys: &str| {
+            rows.iter()
+                .find(|r| r.model == m && r.hardware.contains(hw_prefix) && r.system == sys)
+                .unwrap_or_else(|| panic!("row {m}/{hw_prefix}/{sys}"))
+                .clone()
+        };
+        // GPU 7B: Megatron ~ MaxText ~ AXLearn >> PyTorch FSDP
+        let meg = find("Llama2-7B", "H100", "Megatron-LM");
+        let ax = find("Llama2-7B", "H100", "AXLearn");
+        let fsdp = find("Llama2-7B", "H100", "PyTorch FSDP");
+        assert!(ax.mfu.unwrap() > fsdp.mfu.unwrap() * 1.4);
+        assert!((ax.mfu.unwrap() / meg.mfu.unwrap()) > 0.85);
+        // TPU 7B: AXLearn > MaxText > XLA FSDP
+        let ax_t = find("Llama2-7B", "tpu", "AXLearn");
+        let mt_t = find("Llama2-7B", "tpu", "MaxText");
+        let xf_t = find("Llama2-7B", "tpu", "PyTorch XLA FSDP");
+        assert!(ax_t.mfu.unwrap() >= mt_t.mfu.unwrap());
+        assert!(mt_t.mfu.unwrap() > xf_t.mfu.unwrap());
+        // TPU 70B: XLA FSDP OOMs
+        let oom = find("Llama2-70B", "tpu", "PyTorch XLA FSDP");
+        assert!(oom.iter_time_s.is_none(), "{oom:?}");
+        // Trainium runs (AXLearn only) at low-maturity MFU
+        let trn = find("Llama2-7B", "Trainium", "AXLearn");
+        assert!(trn.mfu.unwrap() < 0.40);
+    }
+
+    #[test]
+    fn fig4_near_linear_scaling() {
+        let pts = fig4();
+        let a: Vec<_> = pts.iter().filter(|p| p.model == "ModelA-70B").collect();
+        assert!(a.first().unwrap().mfu > a.last().unwrap().mfu);
+        // paper: 63.0% -> 52.4% (a ~17% relative drop); require the same
+        // gentle-decline shape (less than 35% relative drop over 16x)
+        let rel = a.last().unwrap().mfu / a.first().unwrap().mfu;
+        assert!(rel > 0.65 && rel < 0.98, "{rel}");
+        // throughput still scales up near-linearly
+        assert!(a.last().unwrap().tokens_per_s > a.first().unwrap().tokens_per_s * 8.0);
+        // Model B at lower MFU than Model A (batch-size cap)
+        let b: Vec<_> = pts.iter().filter(|p| p.model == "ModelB-150B").collect();
+        assert!(b[0].mfu < a[0].mfu);
+    }
+
+    #[test]
+    fn table4_projection_shape() {
+        // with any ratio > 1 the vLLM rows must dominate latency
+        let rows = table4_projected((5.0, 2.0, 0.05));
+        for pair in rows.chunks(2) {
+            assert!(pair[0].ttft_ms > pair[1].ttft_ms);
+            assert!(pair[0].tpot_ms > pair[1].tpot_ms);
+        }
+    }
+}

@@ -1,0 +1,54 @@
+//! `axlearn-rs` — a Rust + JAX + Pallas reproduction of
+//! *AXLearn: Modular Large Model Training on Heterogeneous Infrastructure*
+//! (Lee et al., 2025).
+//!
+//! The crate is the Layer-3 coordinator of a three-layer stack:
+//!
+//! * **Layer 1** (`python/compile/kernels/`): FlashAttention as a Pallas
+//!   kernel, lowered in interpret mode.
+//! * **Layer 2** (`python/compile/`): a modular JAX transformer (RoPE/MoE
+//!   composable by config) lowered ahead-of-time to HLO text artifacts.
+//! * **Layer 3** (this crate): AXLearn's system contribution — the
+//!   strictly-encapsulated hierarchical config system, the composer, the
+//!   training runtime (checkpointing, monitoring, failure detection and
+//!   recovery over a simulated heterogeneous cluster), the hardware
+//!   performance model that reproduces the paper's evaluation, and the
+//!   unified inference engine.
+//!
+//! Python never runs on the request path: `make artifacts` is build-time
+//! only; everything here executes AOT-compiled HLO through PJRT
+//! ([`runtime`]).
+
+pub mod baselines;
+pub mod checkpoint;
+pub mod composer;
+pub mod config;
+pub mod distributed;
+pub mod experiments;
+pub mod loc;
+pub mod module;
+pub mod monitor;
+pub mod perfmodel;
+pub mod runtime;
+pub mod serving;
+pub mod trainer;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Returns the repository root (directory containing `Cargo.toml`),
+/// resolved from the compiled crate location. Used by tests/examples to
+/// locate `artifacts/`.
+pub fn repo_root() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}
+
+/// Default artifacts directory (`<repo>/artifacts`), overridable with the
+/// `AXLEARN_ARTIFACTS` environment variable.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    match std::env::var("AXLEARN_ARTIFACTS") {
+        Ok(p) => std::path::PathBuf::from(p),
+        Err(_) => repo_root().join("artifacts"),
+    }
+}

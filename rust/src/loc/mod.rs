@@ -1,0 +1,24 @@
+//! LoC-complexity analysis (paper §2.1, §7.1, Appendix B; Table 2).
+//!
+//! The paper's framework: measure the LoC changes *to existing modules*
+//! required to integrate a feature (RoPE, MoE), as the number of modules
+//! N and feature variants M scale.  We make the framework **executable**:
+//! each system's integration style (Appendix B) is implemented as a code
+//! generator that synthesizes a codebase with N model variants and A
+//! attention variants, plus an `integrate_*` transformation that performs
+//! the edits that style requires.  Counting is a mechanical line diff —
+//! no judgment calls — and the asymptotic class is *measured* by scaling
+//! N and M and fitting growth ratios.
+//!
+//! * [`codebase`] — synthetic codebases + diffs.
+//! * [`styles`] — the seven integration styles (AXLearn, Megatron-LM,
+//!   DeepSpeed, TorchTitan, Flax, Praxis, MaxText), each following its
+//!   Appendix-B description.
+//! * [`harness`] — Table 2 generation + asymptotic classification.
+
+pub mod codebase;
+pub mod harness;
+pub mod styles;
+
+pub use codebase::{diff_loc, Codebase};
+pub use harness::{classify_growth, table2, Table2Row};

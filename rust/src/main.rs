@@ -1,0 +1,346 @@
+//! `repro` — the axlearn-rs leader binary.
+//!
+//! Subcommands map 1:1 to the paper's experiments (see DESIGN.md §5).
+//! (clap is unavailable offline; flags are parsed by hand.)
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use axlearn::composer::{aot_compile_check, materialize};
+use axlearn::config::mesh_rules::paper_appendix_a_rules;
+use axlearn::config::registry::trainer_for_preset;
+use axlearn::experiments;
+use axlearn::runtime::{Manifest, RuntimeClient};
+use axlearn::trainer::{train, SyntheticCorpus, TrainerOptions};
+
+struct Args {
+    positional: Vec<String>,
+    flags: std::collections::BTreeMap<String, String>,
+}
+
+impl Args {
+    fn parse() -> Args {
+        let mut positional = Vec::new();
+        let mut flags = std::collections::BTreeMap::new();
+        let mut it = std::env::args().skip(1).peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                let value = match it.peek() {
+                    Some(v) if !v.starts_with("--") => it.next().unwrap(),
+                    _ => "true".to_string(),
+                };
+                flags.insert(name.to_string(), value);
+            } else {
+                positional.push(a);
+            }
+        }
+        Args { positional, flags }
+    }
+
+    fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "train" => cmd_train(&args),
+        "serve" => cmd_serve(&args),
+        "aot-check" => cmd_aot_check(&args),
+        "table2" => cmd_table2(&args),
+        "table3" => {
+            println!("Table 3 — training performance (simulated testbeds; see DESIGN.md §2)\n");
+            println!("{}", experiments::render_table3(&experiments::table3()));
+            Ok(())
+        }
+        "table4" => cmd_table4(&args),
+        "fig4" => {
+            println!("Figure 4 — weak scaling on TPU v5p (simulated)\n");
+            println!("{}", experiments::render_fig4(&experiments::fig4()));
+            Ok(())
+        }
+        "fig5" => cmd_fig5(&args),
+        "recovery" => cmd_recovery(&args),
+        "goodput" => cmd_goodput(&args),
+        "kernels" => cmd_kernels(),
+        _ => {
+            println!("{}", HELP);
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = "repro — axlearn-rs experiment driver
+  train --preset tiny|small|base100m [--moe] [--steps N] [--seed S]
+        [--checkpoint-every N] [--resume] [--csv FILE] [--eval-every N]
+        [--profile] [--corpus markov|uniform|text] [--replicas N]
+  serve [--requests N] [--rate R]
+  aot-check --preset P --target INSTANCE --chips N
+  table2 [--sweep1000]     table3     table4 [--requests N]
+  fig4     fig5 [--requests N]     recovery [--chips N]
+  goodput [--rate F] [--steps N]     kernels";
+
+fn open_runtime() -> Result<(Arc<RuntimeClient>, Manifest)> {
+    let client = Arc::new(RuntimeClient::cpu()?);
+    let manifest = Manifest::load(&axlearn::artifacts_dir())?;
+    Ok((client, manifest))
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let preset = args.get("preset").unwrap_or("tiny").to_string();
+    let artifact = if args.has("moe") {
+        format!("{preset}_moe")
+    } else {
+        preset.clone()
+    };
+    let (client, manifest) = open_runtime()?;
+    let art = manifest.get(&format!("{artifact}_train_step"))?;
+    let vocab = art.hyper["vocab_size"] as usize;
+    let (batch, seq) = (art.batch, art.seq);
+
+    // multi-replica data parallelism (real sessions + collective sync)
+    let replicas = args.get_u64("replicas", 1) as usize;
+    if replicas > 1 {
+        let out = axlearn::distributed::train_data_parallel(
+            client,
+            &manifest,
+            &axlearn::distributed::DataParallelOptions {
+                artifact: artifact.clone(),
+                replicas,
+                steps: args.get_u64("steps", 50),
+                sync_every: args.get_u64("sync-every", 10),
+                seed: args.get_u64("seed", 0) as i32,
+            },
+        )?;
+        println!(
+            "data-parallel x{replicas}: losses {:?} | divergence after sync {:.2e} | {} syncs",
+            out.final_losses, out.replica_divergence, out.syncs
+        );
+        return Ok(());
+    }
+
+    let corpus_kind = match args.get("corpus").unwrap_or("markov") {
+        "uniform" => axlearn::trainer::input::CorpusKind::Uniform,
+        "text" => axlearn::trainer::input::CorpusKind::Text,
+        _ => axlearn::trainer::input::CorpusKind::Markov,
+    };
+    let mut corpus = SyntheticCorpus::new(
+        corpus_kind,
+        vocab,
+        batch,
+        seq,
+        args.get_u64("seed", 0),
+    );
+    let opts = TrainerOptions {
+        artifact: artifact.clone(),
+        max_steps: args.get_u64("steps", 50),
+        seed: args.get_u64("seed", 0) as i32,
+        log_every: args.get_u64("log-every", 10),
+        checkpoint_every: args.get_u64("checkpoint-every", 0),
+        checkpoint: axlearn::checkpoint::CheckpointerOptions {
+            dir: std::path::PathBuf::from(
+                args.get("checkpoint-dir").unwrap_or("checkpoints").to_string(),
+            ),
+            ..Default::default()
+        },
+        sdc_every: args.get_u64("sdc-every", 0),
+        eval_every: args.get_u64("eval-every", 0),
+        resume: args.has("resume"),
+        profile: args.has("profile"),
+    };
+    eprintln!(
+        "training {} for {} steps (batch {batch} x seq {seq}, vocab {vocab})",
+        artifact, opts.max_steps
+    );
+    let outcome = train(client, &manifest, &mut corpus, &opts)?;
+    for r in outcome.metrics.records.iter().step_by(opts.log_every.max(1) as usize) {
+        println!("step {:>5}  loss {:.4}  ({:.2}s)", r.step, r.loss, r.step_time_s);
+    }
+    println!(
+        "\nloss {:.4} -> {:.4} over {} steps | {:.0} tokens/s | corpus floor ~{:.2} nats",
+        outcome.first_loss,
+        outcome.final_loss,
+        outcome.final_step,
+        outcome.metrics.tokens_per_second(),
+        corpus.entropy_floor(),
+    );
+    println!("loss curve: {}", outcome.metrics.sparkline(60));
+    if let Some(csv) = args.get("csv") {
+        outcome.metrics.write_csv(std::path::Path::new(csv))?;
+        println!("wrote {csv}");
+    }
+    if let Some(step) = outcome.resumed_from {
+        println!("(resumed from checkpoint at step {step})");
+    }
+    for e in &outcome.evals {
+        println!("eval @ step {:>5}: loss {:.4}", e.step, e.eval_loss);
+    }
+    if let Some(report) = &outcome.profile_report {
+        println!("
+profile:
+{report}");
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let (client, manifest) = open_runtime()?;
+    let n = args.get_u64("requests", 16) as usize;
+    let (rows, ratios) = experiments::table4_local(&manifest, client, n)?;
+    println!("{}", experiments::render_table4(&rows));
+    println!(
+        "measured scheduling ratios: TTFT x{:.2}, TPOT x{:.2}",
+        ratios.0, ratios.1
+    );
+    Ok(())
+}
+
+fn cmd_aot_check(args: &Args) -> Result<()> {
+    let preset = args.get("preset").unwrap_or("small");
+    let target = args.get("target").unwrap_or("tpu-v5e-256-4");
+    let chips = args.get_u64("chips", 1024) as usize;
+    let trainer_cfg = trainer_for_preset(preset);
+    let rules = paper_appendix_a_rules();
+    let plan = materialize(&trainer_cfg, target, chips, &rules)?;
+    println!(
+        "plan: artifact={} strategy={:?} remat={} quant={} kernel={}",
+        plan.artifact, plan.strategy, plan.remat_policy, plan.quantization, plan.kernel_backend
+    );
+    let chip = axlearn::perfmodel::chips::by_instance_type(target)
+        .context("unknown instance type for AOT check")?;
+    let report = aot_compile_check(&plan, &chip, None)?;
+    println!(
+        "AOT check: {} | HBM {:.2}/{:.0} GB | step {:.3}s | MFU {:.1}% | remat {}",
+        report.message,
+        report.hbm_used_bytes / 1e9,
+        report.hbm_capacity / 1e9,
+        report.predicted_step_time_s,
+        report.predicted_mfu * 100.0,
+        report.remat_policy
+    );
+    if !report.fits {
+        bail!("AOT compile check failed (OOM) — caught before any accelerator was provisioned");
+    }
+    Ok(())
+}
+
+fn cmd_table2(args: &Args) -> Result<()> {
+    println!("Table 2 — LoC-complexity (measured on executable integration models)\n");
+    println!("{}", axlearn::loc::harness::render_table2(&axlearn::loc::table2()));
+    if args.has("sweep1000") {
+        let (swapped, changed) = axlearn::loc::harness::sweep_experiments(1000);
+        println!("MoE swap over 1000 experiment configs: {swapped} swaps, {changed} existing-module changes");
+    }
+    Ok(())
+}
+
+fn cmd_table4(args: &Args) -> Result<()> {
+    let (client, manifest) = open_runtime()?;
+    let n = args.get_u64("requests", 16) as usize;
+    println!("Table 4 — inference latency\n-- local measured (real CPU PJRT, small model):");
+    let (rows, ratios) = experiments::table4_local(&manifest, client, n)?;
+    println!("{}", experiments::render_table4(&rows));
+    println!("-- projected at paper scale (analytic + measured scheduling ratios):");
+    println!("{}", experiments::render_table4(&experiments::table4_projected(ratios)));
+    Ok(())
+}
+
+fn cmd_fig5(args: &Args) -> Result<()> {
+    let (client, manifest) = open_runtime()?;
+    let n = args.get_u64("requests", 12) as usize;
+    let rates = [0.5, 1.0, 2.0, 4.0, 8.0];
+    println!("Figure 5 — throughput vs request rate (local, real CPU PJRT)\n");
+    let pts = experiments::fig5_local(&manifest, client, &rates, n)?;
+    println!("{}", experiments::render_fig5(&pts));
+    Ok(())
+}
+
+fn cmd_recovery(args: &Args) -> Result<()> {
+    let chips = args.get_u64("chips", 32_768) as usize;
+    println!("§5 restart-time experiment at {chips} chips\n");
+    for o in axlearn::distributed::recovery_experiment(chips)? {
+        println!(
+            "{:<14} restart {:>7.1} min  (detect {:.1} + reprovision {:.1} + restore {:.1} + recompile {:.1})",
+            o.strategy,
+            o.restart_minutes,
+            o.detection_minutes,
+            o.reprovision_minutes,
+            o.restore_minutes,
+            o.recompile_minutes
+        );
+    }
+    Ok(())
+}
+
+fn cmd_goodput(args: &Args) -> Result<()> {
+    use axlearn::distributed::{Cluster, ClusterOptions};
+    use axlearn::distributed::recovery::RecoveryStrategy;
+    let rate = args.get_f64("rate", 0.01);
+    let steps = args.get_u64("steps", 2000);
+    for (name, strategy) in [
+        ("remote-only", RecoveryStrategy::baseline_remote_only()),
+        ("axlearn-full", RecoveryStrategy::axlearn_full()),
+    ] {
+        let out = Cluster::new(ClusterOptions {
+            failure_rate: rate,
+            recovery: strategy,
+            seed: 42,
+            ..Default::default()
+        })
+        .run(steps)?;
+        println!(
+            "{:<14} goodput {:.1}%  failures {}  mean restart {:.1} min  wall {:.1} h",
+            name,
+            out.goodput * 100.0,
+            out.failures,
+            out.mean_restart_time_s / 60.0,
+            out.wall_time_s / 3600.0
+        );
+    }
+    Ok(())
+}
+
+fn cmd_kernels() -> Result<()> {
+    use axlearn::perfmodel::kernels::{best_blocks, FlashConfig};
+    println!("L1 flash-attention structural analysis (TPU v5p core model)\n");
+    for (q, kv, d) in [(4096u64, 4096u64, 128u64), (8192, 8192, 128), (65536, 65536, 128)] {
+        let (bq, bk, a) = best_blocks(q, kv, d);
+        println!(
+            "seq {q:>6} d {d}: best blocks ({bq},{bk})  VMEM {:.2} MiB  MXU {:.0}%  AI {:.0} flops/B  roofline {:.0}%",
+            a.vmem_bytes / 1048576.0,
+            a.mxu_utilization * 100.0,
+            a.arithmetic_intensity,
+            a.roofline_efficiency * 100.0
+        );
+        let default = FlashConfig {
+            block_q: 128,
+            block_k: 128,
+            head_dim: d,
+            q_len: q,
+            kv_len: kv,
+            elem_bytes: 2.0,
+        }
+        .analyze();
+        println!(
+            "             default (128,128): VMEM {:.2} MiB  roofline {:.0}%",
+            default.vmem_bytes / 1048576.0,
+            default.roofline_efficiency * 100.0
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,233 @@
+//! The InvocationContext stack (paper §4.3, Figure 3).
+//!
+//! `InvocationContext::scope("child", |...| ...)` pushes a child context
+//! (splitting the PRNG key, opening a fresh output collection), runs the
+//! closure, then pops — merging the child's summaries into the parent
+//! under `child/`.  A thread-local ambient pointer lets *any* code record
+//! summaries without holding a module reference ("contexts contain
+//! references to modules, but not vice-versa").
+
+use std::cell::RefCell;
+
+use crate::util::rng::Rng;
+
+use super::summary::{OutputCollection, SummaryValue};
+
+/// One frame of the invocation stack.
+struct Frame {
+    name: String,
+    rng: Rng,
+    outputs: OutputCollection,
+}
+
+/// The invocation context: a stack of frames rooted at a named root
+/// module (typically "trainer").
+pub struct InvocationContext {
+    frames: Vec<Frame>,
+}
+
+thread_local! {
+    static AMBIENT: RefCell<Option<*mut InvocationContext>> = const { RefCell::new(None) };
+}
+
+impl InvocationContext {
+    pub fn new(root: &str, seed: u64) -> Self {
+        InvocationContext {
+            frames: vec![Frame {
+                name: root.to_string(),
+                rng: Rng::new(seed),
+                outputs: OutputCollection::new(),
+            }],
+        }
+    }
+
+    /// Dotted path of the current frame (e.g. `trainer.model.decoder`).
+    pub fn path(&self) -> String {
+        self.frames
+            .iter()
+            .map(|f| f.name.as_str())
+            .collect::<Vec<_>>()
+            .join(".")
+    }
+
+    pub fn depth(&self) -> usize {
+        self.frames.len()
+    }
+
+    /// Split an independent PRNG off the current frame (Figure 3's
+    /// "split PRNG key").
+    pub fn prng(&mut self) -> Rng {
+        self.frames.last_mut().expect("context has a root").rng.split()
+    }
+
+    /// Record a scalar summary in the current frame.
+    pub fn scalar(&mut self, key: &str, value: f64) {
+        self.frames.last_mut().unwrap().outputs.scalar(key, value);
+    }
+
+    /// Record an accumulating counter in the current frame.
+    pub fn counter(&mut self, key: &str, value: f64) {
+        self.frames.last_mut().unwrap().outputs.counter(key, value);
+    }
+
+    pub fn add(&mut self, key: &str, value: SummaryValue) {
+        self.frames.last_mut().unwrap().outputs.add(key, value);
+    }
+
+    /// Push a child frame, run `f`, pop and merge outputs into the parent
+    /// under `name/` — the core Figure-3 mechanic.
+    pub fn scope<T, F: FnOnce(&mut InvocationContext) -> T>(&mut self, name: &str, f: F) -> T {
+        let child_rng = self.prng();
+        self.frames.push(Frame {
+            name: name.to_string(),
+            rng: child_rng,
+            outputs: OutputCollection::new(),
+        });
+        let result = f(self);
+        let frame = self.frames.pop().expect("scope pushed a frame");
+        self.frames
+            .last_mut()
+            .unwrap()
+            .outputs
+            .merge_child(&frame.name, frame.outputs);
+        result
+    }
+
+    /// Root output collection (drained by the trainer's summary writer).
+    pub fn outputs(&self) -> &OutputCollection {
+        &self.frames[0].outputs
+    }
+
+    pub fn outputs_mut(&mut self) -> &mut OutputCollection {
+        &mut self.frames[0].outputs
+    }
+
+    /// Traverse the context stack looking for a summary already recorded
+    /// by an ancestor — the "retrieve shared state" path of Figure 3 that
+    /// features like tied weights use while preserving encapsulation.
+    pub fn lookup_up_stack(&self, key: &str) -> Option<&SummaryValue> {
+        self.frames.iter().rev().find_map(|f| f.outputs.get(key))
+    }
+
+    /// Install this context as the thread-ambient one for the duration of
+    /// `f` — so free functions ([`in_context`]) can reach it without a
+    /// module reference (the optax/custom_vjp integration point of §4.3).
+    pub fn enter<T, F: FnOnce() -> T>(&mut self, f: F) -> T {
+        let ptr = self as *mut InvocationContext;
+        AMBIENT.with(|a| {
+            let prev = a.replace(Some(ptr));
+            let result = f();
+            a.replace(prev);
+            result
+        })
+    }
+}
+
+/// Run `f` with the current ambient context, if any.  Free functions use
+/// this to record summaries without any module reference.
+pub fn in_context<T, F: FnOnce(&mut InvocationContext) -> T>(f: F) -> Option<T> {
+    AMBIENT.with(|a| {
+        let ptr = (*a.borrow())?;
+        // Safety: the pointer is valid for the dynamic extent of `enter`,
+        // and contexts are thread-local (never shared across threads).
+        let ctx = unsafe { &mut *ptr };
+        Some(f(ctx))
+    })
+}
+
+/// Path of the ambient context, if inside one.
+pub fn current_context_path() -> Option<String> {
+    in_context(|ctx| ctx.path())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scope_merges_with_prefix() {
+        let mut ctx = InvocationContext::new("trainer", 0);
+        ctx.scope("model", |ctx| {
+            ctx.scalar("loss", 3.0);
+            ctx.scope("decoder", |ctx| {
+                ctx.scalar("norm", 1.5);
+            });
+        });
+        assert_eq!(ctx.outputs().get("model/loss"), Some(&SummaryValue::Scalar(3.0)));
+        assert_eq!(
+            ctx.outputs().get("model/decoder/norm"),
+            Some(&SummaryValue::Scalar(1.5))
+        );
+    }
+
+    #[test]
+    fn path_tracks_stack() {
+        let mut ctx = InvocationContext::new("trainer", 0);
+        assert_eq!(ctx.path(), "trainer");
+        ctx.scope("model", |ctx| {
+            ctx.scope("layer0", |ctx| {
+                assert_eq!(ctx.path(), "trainer.model.layer0");
+                assert_eq!(ctx.depth(), 3);
+            });
+        });
+        assert_eq!(ctx.depth(), 1);
+    }
+
+    #[test]
+    fn prng_splits_deterministic_and_independent() {
+        let mut c1 = InvocationContext::new("t", 7);
+        let mut c2 = InvocationContext::new("t", 7);
+        let a = c1.scope("m", |c| c.prng().next_u64());
+        let b = c2.scope("m", |c| c.prng().next_u64());
+        assert_eq!(a, b); // same seed, same path => same stream
+        let c = c1.scope("m", |c| c.prng().next_u64());
+        assert_ne!(a, c); // parent stream advanced => different child key
+    }
+
+    #[test]
+    fn ambient_context_reachable_from_free_function() {
+        fn free_function_records_summary() {
+            in_context(|ctx| ctx.counter("free_calls", 1.0));
+        }
+        let mut ctx = InvocationContext::new("trainer", 0);
+        ctx.enter(|| {
+            free_function_records_summary();
+            free_function_records_summary();
+        });
+        assert_eq!(
+            ctx.outputs().get("free_calls"),
+            Some(&SummaryValue::Counter(2.0))
+        );
+    }
+
+    #[test]
+    fn ambient_absent_outside_enter() {
+        assert!(current_context_path().is_none());
+        let mut ctx = InvocationContext::new("root", 0);
+        let path = ctx.enter(current_context_path);
+        assert_eq!(path.as_deref(), Some("root"));
+        assert!(current_context_path().is_none());
+    }
+
+    #[test]
+    fn lookup_up_stack_finds_ancestor_state() {
+        let mut ctx = InvocationContext::new("trainer", 0);
+        ctx.scalar("shared/emb_scale", 0.125);
+        let found = ctx.scope("model", |ctx| {
+            ctx.scope("lm_head", |ctx| ctx.lookup_up_stack("shared/emb_scale").cloned())
+        });
+        assert_eq!(found, Some(SummaryValue::Scalar(0.125)));
+    }
+
+    #[test]
+    fn counters_accumulate_across_scopes() {
+        let mut ctx = InvocationContext::new("t", 0);
+        for _ in 0..3 {
+            ctx.scope("step", |ctx| ctx.counter("tokens", 128.0));
+        }
+        assert_eq!(
+            ctx.outputs().get("step/tokens"),
+            Some(&SummaryValue::Counter(384.0))
+        );
+    }
+}

@@ -1,0 +1,19 @@
+//! Module tree + InvocationContext (paper §4.3).
+//!
+//! JAX demands pure functions; training is stateful.  AXLearn resolves the
+//! tension with an *InvocationContext*: a stack pushed/popped around every
+//! child-module invocation that transparently splits PRNG keys, scopes
+//! summaries/outputs, and lets code *anywhere* (even code with no module
+//! reference — optax-style) reach the current context.
+//!
+//! On the Rust side the same abstraction organizes the coordinator: the
+//! trainer, checkpointer, watchdog, serving engine, and cluster simulator
+//! all record summaries through the ambient context, so none of them needs
+//! to thread a metrics sink through its signature — the exact
+//! encapsulation argument of §4.3.
+
+pub mod context;
+pub mod summary;
+
+pub use context::{current_context_path, in_context, InvocationContext};
+pub use summary::{OutputCollection, SummaryValue};

@@ -1,0 +1,129 @@
+//! Output/summary collections gathered through the InvocationContext.
+
+use std::collections::BTreeMap;
+
+/// A summary value recorded by a module.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SummaryValue {
+    Scalar(f64),
+    Int(i64),
+    Text(String),
+    /// Accumulating counter (merged by addition).
+    Counter(f64),
+}
+
+impl SummaryValue {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            SummaryValue::Scalar(x) | SummaryValue::Counter(x) => Some(*x),
+            SummaryValue::Int(i) => Some(*i as f64),
+            SummaryValue::Text(_) => None,
+        }
+    }
+}
+
+/// A path-keyed collection of summaries.  Child collections merge into the
+/// parent when a context pops, path-prefixed by the child's name — exactly
+/// the data store semantics of Figure 3.
+#[derive(Clone, Debug, Default)]
+pub struct OutputCollection {
+    entries: BTreeMap<String, SummaryValue>,
+}
+
+impl OutputCollection {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, key: &str, value: SummaryValue) {
+        match (self.entries.get_mut(key), &value) {
+            (Some(SummaryValue::Counter(acc)), SummaryValue::Counter(x)) => *acc += x,
+            _ => {
+                self.entries.insert(key.to_string(), value);
+            }
+        }
+    }
+
+    pub fn scalar(&mut self, key: &str, value: f64) {
+        self.add(key, SummaryValue::Scalar(value));
+    }
+
+    pub fn counter(&mut self, key: &str, value: f64) {
+        self.add(key, SummaryValue::Counter(value));
+    }
+
+    pub fn get(&self, key: &str) -> Option<&SummaryValue> {
+        self.entries.get(key)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&String, &SummaryValue)> {
+        self.entries.iter()
+    }
+
+    /// Merge `child` into self with `prefix/` prepended to every key
+    /// (context pop).
+    pub fn merge_child(&mut self, prefix: &str, child: OutputCollection) {
+        for (k, v) in child.entries {
+            let key = if prefix.is_empty() { k } else { format!("{prefix}/{k}") };
+            self.add(&key, v);
+        }
+    }
+
+    pub fn drain(&mut self) -> BTreeMap<String, SummaryValue> {
+        std::mem::take(&mut self.entries)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_overwrites() {
+        let mut c = OutputCollection::new();
+        c.scalar("loss", 2.0);
+        c.scalar("loss", 1.0);
+        assert_eq!(c.get("loss"), Some(&SummaryValue::Scalar(1.0)));
+    }
+
+    #[test]
+    fn counters_accumulate() {
+        let mut c = OutputCollection::new();
+        c.counter("tokens", 10.0);
+        c.counter("tokens", 5.0);
+        assert_eq!(c.get("tokens"), Some(&SummaryValue::Counter(15.0)));
+    }
+
+    #[test]
+    fn merge_child_prefixes() {
+        let mut parent = OutputCollection::new();
+        parent.scalar("loss", 1.0);
+        let mut child = OutputCollection::new();
+        child.scalar("aux", 0.5);
+        child.counter("tokens", 3.0);
+        parent.merge_child("moe", child);
+        assert_eq!(parent.get("moe/aux"), Some(&SummaryValue::Scalar(0.5)));
+        assert_eq!(parent.get("moe/tokens"), Some(&SummaryValue::Counter(3.0)));
+        assert_eq!(parent.len(), 3);
+    }
+
+    #[test]
+    fn merge_counters_across_children() {
+        // two children reporting the same counter accumulate in the parent
+        let mut parent = OutputCollection::new();
+        for _ in 0..2 {
+            let mut child = OutputCollection::new();
+            child.counter("drops", 1.0);
+            parent.merge_child("", child);
+        }
+        assert_eq!(parent.get("drops"), Some(&SummaryValue::Counter(2.0)));
+    }
+}

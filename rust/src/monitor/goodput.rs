@@ -1,0 +1,225 @@
+//! The generic measurement interface + goodput accounting (§5):
+//! "AXLearn supports a generic measurement interface that can be used to
+//! record arbitrary events such as the start of training or the start of
+//! a step.  These events can be used to measure end-to-end inefficiencies
+//! ... captured via metrics like overall job goodput."
+//!
+//! Goodput = time spent making *durable* forward progress / total
+//! wall-clock time.  Work after the last checkpoint that is lost to a
+//! failure counts as badput, as do provisioning, compilation, restarts,
+//! and checkpoint-restore time.
+
+use std::collections::BTreeMap;
+
+/// Event kinds on the measurement interface.  Times are in seconds on a
+/// caller-supplied clock (the cluster simulator uses virtual time; the
+/// real trainer uses `Instant`-derived seconds).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum EventKind {
+    JobStart,
+    ProvisioningDone,
+    CompilationDone,
+    StepDone,
+    CheckpointDurable,
+    FailureDetected,
+    RestartBegin,
+    RestartDone,
+    JobEnd,
+}
+
+#[derive(Clone, Debug)]
+pub struct Event {
+    pub kind: EventKind,
+    pub t: f64,
+    /// Step number for StepDone/CheckpointDurable.
+    pub step: u64,
+}
+
+/// Records events; computes goodput and a time breakdown.
+#[derive(Default)]
+pub struct GoodputTracker {
+    events: Vec<Event>,
+}
+
+impl GoodputTracker {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, kind: EventKind, t: f64, step: u64) {
+        self.events.push(Event { kind, t, step });
+    }
+
+    pub fn events(&self) -> &[Event] {
+        &self.events
+    }
+
+    /// Total wall time between JobStart and JobEnd (or the last event).
+    pub fn wall_time(&self) -> f64 {
+        let start = self
+            .events
+            .iter()
+            .find(|e| e.kind == EventKind::JobStart)
+            .map(|e| e.t)
+            .unwrap_or(0.0);
+        let end = self
+            .events
+            .iter()
+            .rev()
+            .find(|e| e.kind == EventKind::JobEnd)
+            .map(|e| e.t)
+            .or_else(|| self.events.last().map(|e| e.t))
+            .unwrap_or(start);
+        end - start
+    }
+
+    /// Step-time spent on steps whose progress survived (i.e. steps at or
+    /// below a checkpoint that became durable before the next failure).
+    pub fn goodput(&self) -> f64 {
+        let wall = self.wall_time();
+        if wall <= 0.0 {
+            return 0.0;
+        }
+        // Walk events; accumulate step intervals, crediting them only up
+        // to the last durable checkpoint when a failure intervenes.
+        let mut credited = 0.0;
+        let mut pending: Vec<(u64, f64)> = Vec::new(); // (step, duration)
+        let mut last_t: Option<f64> = None;
+        let mut durable_step = 0u64;
+        for e in &self.events {
+            match e.kind {
+                EventKind::StepDone => {
+                    if let Some(prev) = last_t {
+                        pending.push((e.step, e.t - prev));
+                    }
+                    last_t = Some(e.t);
+                }
+                EventKind::CheckpointDurable => {
+                    durable_step = durable_step.max(e.step);
+                    // credit all pending steps <= durable step
+                    let (keep, credit): (Vec<_>, Vec<_>) =
+                        pending.drain(..).partition(|(s, _)| *s > durable_step);
+                    credited += credit.iter().map(|(_, d)| d).sum::<f64>();
+                    pending = keep;
+                }
+                EventKind::FailureDetected => {
+                    // uncheckpointed progress is lost
+                    pending.clear();
+                    last_t = None;
+                }
+                EventKind::JobEnd => {
+                    // surviving uncheckpointed work at job end still counts
+                    credited += pending.drain(..).map(|(_, d)| d).sum::<f64>();
+                }
+                EventKind::RestartDone => {
+                    last_t = Some(e.t);
+                }
+                _ => {}
+            }
+        }
+        credited += pending.iter().map(|(_, d)| d).sum::<f64>();
+        (credited / wall).clamp(0.0, 1.0)
+    }
+
+    /// Seconds per phase (provisioning, compilation, restarts, …).
+    pub fn breakdown(&self) -> BTreeMap<&'static str, f64> {
+        let mut out = BTreeMap::new();
+        let mut job_start = None;
+        let mut prov_done = None;
+        let mut restart_begin = None;
+        let mut restart_total = 0.0;
+        for e in &self.events {
+            match e.kind {
+                EventKind::JobStart => job_start = Some(e.t),
+                EventKind::ProvisioningDone => prov_done = Some(e.t),
+                EventKind::CompilationDone => {
+                    if let Some(p) = prov_done {
+                        out.insert("compilation", e.t - p);
+                    }
+                }
+                EventKind::RestartBegin => restart_begin = Some(e.t),
+                EventKind::RestartDone => {
+                    if let Some(b) = restart_begin.take() {
+                        restart_total += e.t - b;
+                    }
+                }
+                _ => {}
+            }
+        }
+        if let (Some(j), Some(p)) = (job_start, prov_done) {
+            out.insert("provisioning", p - j);
+        }
+        out.insert("restarts", restart_total);
+        out.insert("wall", self.wall_time());
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_run_goodput_near_one() {
+        let mut g = GoodputTracker::new();
+        g.record(EventKind::JobStart, 0.0, 0);
+        g.record(EventKind::RestartDone, 0.0, 0); // marks step clock start
+        for s in 1..=10 {
+            g.record(EventKind::StepDone, s as f64, s);
+        }
+        g.record(EventKind::CheckpointDurable, 10.0, 10);
+        g.record(EventKind::JobEnd, 10.0, 10);
+        assert!(g.goodput() > 0.99, "{}", g.goodput());
+    }
+
+    #[test]
+    fn failure_without_checkpoint_is_badput() {
+        let mut g = GoodputTracker::new();
+        g.record(EventKind::JobStart, 0.0, 0);
+        g.record(EventKind::RestartDone, 0.0, 0);
+        for s in 1..=5 {
+            g.record(EventKind::StepDone, s as f64, s);
+        }
+        g.record(EventKind::FailureDetected, 5.0, 5);
+        g.record(EventKind::RestartDone, 8.0, 0);
+        for s in 1..=2 {
+            g.record(EventKind::StepDone, 8.0 + s as f64, s);
+        }
+        g.record(EventKind::CheckpointDurable, 10.0, 2);
+        g.record(EventKind::JobEnd, 10.0, 2);
+        // only the 2 post-restart steps count out of 10s wall
+        assert!((g.goodput() - 0.2).abs() < 0.05, "{}", g.goodput());
+    }
+
+    #[test]
+    fn checkpoint_preserves_credit_across_failure() {
+        let mut g = GoodputTracker::new();
+        g.record(EventKind::JobStart, 0.0, 0);
+        g.record(EventKind::RestartDone, 0.0, 0);
+        for s in 1..=4 {
+            g.record(EventKind::StepDone, s as f64, s);
+        }
+        g.record(EventKind::CheckpointDurable, 4.0, 4);
+        g.record(EventKind::StepDone, 5.0, 5); // will be lost
+        g.record(EventKind::FailureDetected, 5.5, 5);
+        g.record(EventKind::JobEnd, 6.0, 4);
+        let gp = g.goodput();
+        assert!((gp - 4.0 / 6.0).abs() < 0.05, "{gp}");
+    }
+
+    #[test]
+    fn breakdown_accounts_phases() {
+        let mut g = GoodputTracker::new();
+        g.record(EventKind::JobStart, 0.0, 0);
+        g.record(EventKind::ProvisioningDone, 3.0, 0);
+        g.record(EventKind::CompilationDone, 5.0, 0);
+        g.record(EventKind::RestartBegin, 10.0, 0);
+        g.record(EventKind::RestartDone, 12.0, 0);
+        g.record(EventKind::JobEnd, 20.0, 0);
+        let b = g.breakdown();
+        assert_eq!(b["provisioning"], 3.0);
+        assert_eq!(b["compilation"], 2.0);
+        assert_eq!(b["restarts"], 2.0);
+        assert_eq!(b["wall"], 20.0);
+    }
+}

@@ -1,0 +1,11 @@
+//! Monitoring, failure detection, and goodput accounting (§5).
+
+pub mod goodput;
+pub mod profiler;
+pub mod sdc;
+pub mod watchdog;
+
+pub use goodput::{EventKind, GoodputTracker};
+pub use profiler::Profiler;
+pub use sdc::{SdcChecker, SdcReport};
+pub use watchdog::{Watchdog, WatchdogAction, WatchdogOptions};

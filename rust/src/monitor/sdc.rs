@@ -1,0 +1,159 @@
+//! Silent-data-corruption (SDC) checks (§5): "repeating a single
+//! communication multiple times to check for interconnect problems, and
+//! alternating kernel execution on devices with multiple cores to check
+//! result consistency".
+//!
+//! The checker is generic over an executor function so it runs both
+//! against the real PJRT session (re-executing a step on identical inputs
+//! must be bit-identical on a healthy host) and against the cluster
+//! simulator (where failure injection flips bits to validate detection).
+
+use anyhow::Result;
+
+/// Outcome of one SDC sweep.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SdcReport {
+    pub repeats: usize,
+    pub mismatches: usize,
+    /// Index of first mismatching repeat, if any.
+    pub first_bad: Option<usize>,
+}
+
+impl SdcReport {
+    pub fn healthy(&self) -> bool {
+        self.mismatches == 0
+    }
+}
+
+/// Configuration for the checker.
+pub struct SdcChecker {
+    pub repeats: usize,
+    /// Compare across "cores" by asking the executor to run on alternate
+    /// core ids (0/1); executors that have one core ignore the id.
+    pub alternate_cores: bool,
+    pub sweeps_run: u64,
+    pub corruption_detected: u64,
+}
+
+impl SdcChecker {
+    pub fn new(repeats: usize, alternate_cores: bool) -> Self {
+        SdcChecker {
+            repeats: repeats.max(2),
+            alternate_cores,
+            sweeps_run: 0,
+            corruption_detected: 0,
+        }
+    }
+
+    /// Run one sweep: `exec(core_id)` must be a deterministic computation
+    /// (e.g. re-running a collective, or a step on frozen inputs).
+    /// Results are compared bit-exactly.
+    pub fn sweep<F>(&mut self, mut exec: F) -> Result<SdcReport>
+    where
+        F: FnMut(usize) -> Result<Vec<f32>>,
+    {
+        self.sweeps_run += 1;
+        let reference = exec(0)?;
+        let mut mismatches = 0;
+        let mut first_bad = None;
+        for i in 1..self.repeats {
+            let core = if self.alternate_cores { i % 2 } else { 0 };
+            let out = exec(core)?;
+            let same = out.len() == reference.len()
+                && out
+                    .iter()
+                    .zip(&reference)
+                    .all(|(a, b)| a.to_bits() == b.to_bits());
+            if !same {
+                mismatches += 1;
+                first_bad.get_or_insert(i);
+            }
+        }
+        if mismatches > 0 {
+            self.corruption_detected += 1;
+        }
+        Ok(SdcReport {
+            repeats: self.repeats,
+            mismatches,
+            first_bad,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn healthy_executor_passes() {
+        let mut c = SdcChecker::new(4, true);
+        let r = c.sweep(|_| Ok(vec![1.0, 2.0, 3.0])).unwrap();
+        assert!(r.healthy());
+        assert_eq!(c.corruption_detected, 0);
+    }
+
+    #[test]
+    fn flipped_bit_detected() {
+        let mut c = SdcChecker::new(3, false);
+        let mut call = 0;
+        let r = c
+            .sweep(|_| {
+                call += 1;
+                let mut v = vec![1.0f32, 2.0, 3.0];
+                if call == 3 {
+                    // single-bit flip in one repeat — the classic SDC
+                    v[1] = f32::from_bits(v[1].to_bits() ^ 1);
+                }
+                Ok(v)
+            })
+            .unwrap();
+        assert!(!r.healthy());
+        assert_eq!(r.first_bad, Some(2));
+        assert_eq!(c.corruption_detected, 1);
+    }
+
+    #[test]
+    fn core_dependent_fault_found_by_alternation() {
+        // a fault on core 1 only: alternate_cores finds it, single-core miss
+        let faulty = |core: usize| -> Result<Vec<f32>> {
+            Ok(if core == 1 { vec![9.0] } else { vec![1.0] })
+        };
+        let mut with = SdcChecker::new(4, true);
+        assert!(!with.sweep(faulty).unwrap().healthy());
+        let mut without = SdcChecker::new(4, false);
+        assert!(without.sweep(faulty).unwrap().healthy());
+    }
+
+    #[test]
+    fn detection_probability_scales_with_repeats() {
+        // property: an intermittent fault with p=0.5 per call is detected
+        // far more often with 6 repeats than with 2.
+        let mut detect = |repeats: usize, seed: u64| -> bool {
+            let mut rng = Rng::new(seed);
+            let mut c = SdcChecker::new(repeats, false);
+            !c.sweep(|_| {
+                Ok(vec![if rng.gen_bool(0.5) { 1.0 } else { 2.0 }])
+            })
+            .unwrap()
+            .healthy()
+        };
+        let trials = 200;
+        let hits2 = (0..trials).filter(|&s| detect(2, s)).count();
+        let hits6 = (0..trials).filter(|&s| detect(6, 10_000 + s)).count();
+        assert!(hits6 > hits2, "{hits6} vs {hits2}");
+    }
+
+    #[test]
+    fn nan_differs_from_number() {
+        let mut c = SdcChecker::new(2, false);
+        let mut call = 0;
+        let r = c
+            .sweep(|_| {
+                call += 1;
+                Ok(vec![if call == 2 { f32::NAN } else { 1.0 }])
+            })
+            .unwrap();
+        assert!(!r.healthy());
+    }
+}

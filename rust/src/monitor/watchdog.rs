@@ -1,0 +1,178 @@
+//! The watchdog (§5): monitors step time and hardware utilization; on
+//! anomaly, forces a restart, alerts an on-call, or dumps stack traces.
+//! ("a large fleet is expected to encounter hardware failures several
+//! times a day, which can surface in surprising, opaque ways")
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WatchdogAction {
+    /// Everything nominal.
+    Ok,
+    /// Force a host restart.
+    Restart,
+    /// Page the on-call.
+    Alert,
+    /// Dump stack traces for debugging.
+    DumpStacks,
+}
+
+#[derive(Clone, Debug)]
+pub struct WatchdogOptions {
+    /// A step taking longer than `max_step_factor` x the rolling median is
+    /// a hang.
+    pub max_step_factor: f64,
+    /// Absolute ceiling regardless of history (catches first-step hangs).
+    pub max_step_seconds: f64,
+    /// Utilization below this fraction is "low utilization".
+    pub min_utilization: f64,
+    /// Rolling window length.
+    pub window: usize,
+    /// Action taken on detection.
+    pub action: WatchdogAction,
+}
+
+impl Default for WatchdogOptions {
+    fn default() -> Self {
+        WatchdogOptions {
+            max_step_factor: 5.0,
+            max_step_seconds: 60.0,
+            min_utilization: 0.05,
+            window: 32,
+            action: WatchdogAction::Restart,
+        }
+    }
+}
+
+/// Step-time/utilization watchdog with a rolling-median baseline.
+pub struct Watchdog {
+    opts: WatchdogOptions,
+    history: Vec<f64>,
+    pub trips: u64,
+}
+
+impl Watchdog {
+    pub fn new(opts: WatchdogOptions) -> Self {
+        Watchdog {
+            opts,
+            history: Vec::new(),
+            trips: 0,
+        }
+    }
+
+    fn median(&self) -> Option<f64> {
+        if self.history.is_empty() {
+            return None;
+        }
+        let mut h = self.history.clone();
+        h.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Some(h[h.len() / 2])
+    }
+
+    /// Observe one step; returns the action to take.
+    pub fn observe_step(&mut self, step_time_s: f64, utilization: f64) -> WatchdogAction {
+        let hang = step_time_s > self.opts.max_step_seconds
+            || self
+                .median()
+                .map(|m| step_time_s > m * self.opts.max_step_factor)
+                .unwrap_or(false);
+        let starved = utilization < self.opts.min_utilization;
+        self.history.push(step_time_s);
+        if self.history.len() > self.opts.window {
+            self.history.remove(0);
+        }
+        if hang || starved {
+            self.trips += 1;
+            self.opts.action
+        } else {
+            WatchdogAction::Ok
+        }
+    }
+
+    /// Observe a *missing* step (no progress since `elapsed` seconds) —
+    /// the hang-detection path for steps that never complete.
+    pub fn observe_stall(&mut self, elapsed_s: f64) -> WatchdogAction {
+        let limit = self
+            .median()
+            .map(|m| m * self.opts.max_step_factor)
+            .unwrap_or(self.opts.max_step_seconds)
+            .min(self.opts.max_step_seconds);
+        if elapsed_s > limit {
+            self.trips += 1;
+            self.opts.action
+        } else {
+            WatchdogAction::Ok
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn wd() -> Watchdog {
+        Watchdog::new(WatchdogOptions::default())
+    }
+
+    #[test]
+    fn nominal_steps_pass() {
+        let mut w = wd();
+        for _ in 0..50 {
+            assert_eq!(w.observe_step(1.0, 0.6), WatchdogAction::Ok);
+        }
+        assert_eq!(w.trips, 0);
+    }
+
+    #[test]
+    fn hang_relative_to_median_trips() {
+        let mut w = wd();
+        for _ in 0..10 {
+            w.observe_step(1.0, 0.6);
+        }
+        assert_eq!(w.observe_step(8.0, 0.6), WatchdogAction::Restart);
+        assert_eq!(w.trips, 1);
+    }
+
+    #[test]
+    fn absolute_ceiling_catches_first_step_hang() {
+        let mut w = wd();
+        assert_eq!(w.observe_step(120.0, 0.6), WatchdogAction::Restart);
+    }
+
+    #[test]
+    fn low_utilization_trips() {
+        let mut w = wd();
+        for _ in 0..5 {
+            w.observe_step(1.0, 0.6);
+        }
+        assert_eq!(w.observe_step(1.0, 0.01), WatchdogAction::Restart);
+    }
+
+    #[test]
+    fn stall_detection() {
+        let mut w = wd();
+        for _ in 0..5 {
+            w.observe_step(2.0, 0.5);
+        }
+        assert_eq!(w.observe_stall(5.0), WatchdogAction::Ok);
+        assert_eq!(w.observe_stall(30.0), WatchdogAction::Restart);
+    }
+
+    #[test]
+    fn configurable_action() {
+        let mut w = Watchdog::new(WatchdogOptions {
+            action: WatchdogAction::Alert,
+            ..Default::default()
+        });
+        assert_eq!(w.observe_step(1000.0, 0.5), WatchdogAction::Alert);
+    }
+
+    #[test]
+    fn slow_drift_does_not_trip() {
+        // gradually slowing steps move the median with them
+        let mut w = wd();
+        let mut t = 1.0;
+        for _ in 0..100 {
+            assert_eq!(w.observe_step(t, 0.5), WatchdogAction::Ok);
+            t *= 1.02;
+        }
+    }
+}

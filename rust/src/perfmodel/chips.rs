@@ -1,0 +1,190 @@
+//! Accelerator spec sheets.  All figures are public vendor numbers; where
+//! ranges exist we note the choice.  The estimator only ever uses *ratios*
+//! of these numbers (MFU, comm/compute balance), which is what makes the
+//! simulation credible for reproducing the paper's orderings.
+
+/// Interconnect description: a fast intra-domain fabric (NVLink island /
+/// ICI slice / NeuronLink) and a slower inter-domain network (IB/EFA/DCN).
+#[derive(Clone, Debug)]
+pub struct Interconnect {
+    /// Chips per fast domain (NVLink island = 8, v5p slice <= 8960, ...).
+    pub domain_size: usize,
+    /// Per-chip bidirectional bandwidth within the fast domain (bytes/s).
+    pub intra_bw: f64,
+    /// Per-chip bandwidth across domains (bytes/s).
+    pub inter_bw: f64,
+    /// Per-collective base latency within a domain (seconds).
+    pub intra_latency: f64,
+    /// Per-collective base latency across domains (seconds).
+    pub inter_latency: f64,
+}
+
+/// One accelerator chip.
+#[derive(Clone, Debug)]
+pub struct ChipSpec {
+    pub name: &'static str,
+    /// Dense BF16 peak (FLOP/s).
+    pub peak_flops_bf16: f64,
+    /// Peak with INT8/FP8 quantized matmuls (FLOP/s).
+    pub peak_flops_8bit: f64,
+    /// HBM capacity (bytes).
+    pub hbm_bytes: f64,
+    /// HBM bandwidth (bytes/s).
+    pub hbm_bw: f64,
+    /// Host-offload (PCIe/DMA) bandwidth (bytes/s) for activation/optimizer
+    /// offload; 0 when the platform does not support it well.
+    pub host_bw: f64,
+    pub interconnect: Interconnect,
+}
+
+/// NVIDIA H100 SXM (DGX/P5): 989 TFLOPs dense BF16, 80 GB HBM3 @ 3.35
+/// TB/s, NVLink4 900 GB/s, inter-node 8x400 Gbps EFA/IB per 8-GPU node.
+pub fn h100() -> ChipSpec {
+    ChipSpec {
+        name: "H100",
+        peak_flops_bf16: 989e12,
+        peak_flops_8bit: 1979e12,
+        hbm_bytes: 80e9,
+        hbm_bw: 3.35e12,
+        host_bw: 55e9, // PCIe gen5 x16 effective
+        interconnect: Interconnect {
+            domain_size: 8,
+            intra_bw: 900e9,
+            inter_bw: 50e9, // 400 Gb/s per GPU on P5
+            intra_latency: 5e-6,
+            inter_latency: 20e-6,
+        },
+    }
+}
+
+/// Google TPU v5p: 459 TFLOPs BF16, 95 GB HBM @ 2.77 TB/s, ICI ~600 GB/s
+/// per chip (3D torus, 4800 Gbps aggregate), slices to 8960 chips; DCN
+/// across slices.
+pub fn tpu_v5p() -> ChipSpec {
+    ChipSpec {
+        name: "TPUv5p",
+        peak_flops_bf16: 459e12,
+        peak_flops_8bit: 918e12,
+        hbm_bytes: 95e9,
+        hbm_bw: 2.77e12,
+        host_bw: 40e9,
+        interconnect: Interconnect {
+            domain_size: 8960,
+            intra_bw: 600e9,
+            inter_bw: 25e9, // DCN
+            intra_latency: 2e-6,
+            inter_latency: 50e-6,
+        },
+    }
+}
+
+/// Google TPU v5e: 197 TFLOPs BF16, 16 GB HBM @ 819 GB/s, ICI 400 GB/s,
+/// slices of 256; DCN across slices.  (Appendix A target.)
+pub fn tpu_v5e() -> ChipSpec {
+    ChipSpec {
+        name: "TPUv5e",
+        peak_flops_bf16: 197e12,
+        peak_flops_8bit: 394e12,
+        hbm_bytes: 16e9,
+        hbm_bw: 819e9,
+        host_bw: 30e9,
+        interconnect: Interconnect {
+            domain_size: 256,
+            intra_bw: 400e9,
+            inter_bw: 12.5e9,
+            intra_latency: 2e-6,
+            inter_latency: 50e-6,
+        },
+    }
+}
+
+/// Google TPU v6e (Trillium): ~918 TFLOPs BF16, 32 GB HBM @ 1.64 TB/s.
+/// (Table 4's 70B inference host.)
+pub fn tpu_v6e() -> ChipSpec {
+    ChipSpec {
+        name: "TPUv6e",
+        peak_flops_bf16: 918e12,
+        peak_flops_8bit: 1836e12,
+        hbm_bytes: 32e9,
+        hbm_bw: 1.64e12,
+        host_bw: 40e9,
+        interconnect: Interconnect {
+            domain_size: 256,
+            intra_bw: 800e9,
+            inter_bw: 25e9,
+            intra_latency: 2e-6,
+            inter_latency: 50e-6,
+        },
+    }
+}
+
+/// AWS Trainium2: ~650 TFLOPs dense BF16 (1.3 PFLOPs FP8), 96 GB HBM3 @
+/// ~2.9 TB/s, NeuronLink within a 16-chip trn2 instance, EFA across.
+pub fn trainium2() -> ChipSpec {
+    ChipSpec {
+        name: "Trainium2",
+        peak_flops_bf16: 650e12,
+        peak_flops_8bit: 1300e12,
+        hbm_bytes: 96e9,
+        hbm_bw: 2.9e12,
+        host_bw: 30e9,
+        interconnect: Interconnect {
+            domain_size: 16,
+            intra_bw: 185e9, // NeuronLink-v3 per chip
+            inter_bw: 25e9,  // EFA
+            intra_latency: 5e-6,
+            inter_latency: 30e-6,
+        },
+    }
+}
+
+/// Lookup by the instance-type prefixes used in mesh rules.
+pub fn by_instance_type(instance_type: &str) -> Option<ChipSpec> {
+    let t = instance_type.to_ascii_lowercase();
+    if t.starts_with("gpu-h100") {
+        Some(h100())
+    } else if t.starts_with("tpu-v5p") {
+        Some(tpu_v5p())
+    } else if t.starts_with("tpu-v5e") {
+        Some(tpu_v5e())
+    } else if t.starts_with("tpu-v6e") {
+        Some(tpu_v6e())
+    } else if t.starts_with("trn2") {
+        Some(trainium2())
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_by_instance_type() {
+        assert_eq!(by_instance_type("gpu-H100-32").unwrap().name, "H100");
+        assert_eq!(by_instance_type("tpu-v5p-512").unwrap().name, "TPUv5p");
+        assert_eq!(by_instance_type("trn2-16xlarge").unwrap().name, "Trainium2");
+        assert!(by_instance_type("cpu-local").is_none());
+    }
+
+    #[test]
+    fn specs_are_sane() {
+        for chip in [h100(), tpu_v5p(), tpu_v5e(), tpu_v6e(), trainium2()] {
+            assert!(chip.peak_flops_bf16 > 1e14, "{}", chip.name);
+            assert!(chip.peak_flops_8bit >= chip.peak_flops_bf16);
+            assert!(chip.hbm_bytes > 1e10);
+            assert!(chip.hbm_bw > 1e11);
+            assert!(chip.interconnect.intra_bw > chip.interconnect.inter_bw);
+            assert!(chip.interconnect.domain_size >= 8);
+        }
+    }
+
+    #[test]
+    fn h100_arithmetic_intensity_exceeds_tpu_v5e() {
+        // sanity of relative spec sheet: flops/byte ordering
+        let h = h100();
+        let e = tpu_v5e();
+        assert!(h.peak_flops_bf16 / h.hbm_bw > e.peak_flops_bf16 / e.hbm_bw * 0.5);
+    }
+}

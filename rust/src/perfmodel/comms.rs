@@ -1,0 +1,130 @@
+//! Collective communication cost model over hierarchical interconnects.
+//!
+//! Standard ring/bidirectional-ring costs: for `n` participants moving
+//! `bytes` of payload over per-chip bandwidth `bw`:
+//!   all-reduce      2·bytes·(n-1)/n / bw
+//!   all-gather      bytes·(n-1)/n / bw
+//!   reduce-scatter  bytes·(n-1)/n / bw
+//! plus a per-hop latency term.  When a collective spans both the fast
+//! domain and the slow network, the slow phase dominates (hierarchical
+//! reduction: intra-domain reduce, inter-domain exchange, intra-domain
+//! broadcast).
+
+use super::chips::Interconnect;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Collective {
+    AllReduce,
+    AllGather,
+    ReduceScatter,
+    AllToAll,
+    Broadcast,
+    P2P,
+}
+
+fn payload_factor(c: Collective, n: f64) -> f64 {
+    match c {
+        Collective::AllReduce => 2.0 * (n - 1.0) / n,
+        Collective::AllGather | Collective::ReduceScatter => (n - 1.0) / n,
+        Collective::AllToAll => (n - 1.0) / n,
+        Collective::Broadcast => 1.0,
+        Collective::P2P => 1.0,
+    }
+}
+
+/// Time for a collective among `n` chips all within one fast domain.
+pub fn intra_domain(c: Collective, bytes: f64, n: usize, ic: &Interconnect) -> f64 {
+    if n <= 1 {
+        return 0.0;
+    }
+    let nf = n as f64;
+    bytes * payload_factor(c, nf) / ic.intra_bw + ic.intra_latency * nf.log2().ceil()
+}
+
+/// Time for a collective among `n_domains` groups over the slow network
+/// (per-chip payload `bytes`).
+pub fn inter_domain(c: Collective, bytes: f64, n_domains: usize, ic: &Interconnect) -> f64 {
+    if n_domains <= 1 {
+        return 0.0;
+    }
+    let nf = n_domains as f64;
+    bytes * payload_factor(c, nf) / ic.inter_bw + ic.inter_latency * nf.log2().ceil()
+}
+
+/// Hierarchical collective: `n` chips spread over domains of
+/// `domain_size`.  Cost = intra phase + inter phase (+ intra broadcast for
+/// all-reduce, folded into the payload factors).
+pub fn hierarchical(c: Collective, bytes: f64, n: usize, ic: &Interconnect) -> f64 {
+    if n <= 1 {
+        return 0.0;
+    }
+    let within = n.min(ic.domain_size);
+    let across = n.div_ceil(ic.domain_size);
+    match c {
+        Collective::AllReduce => {
+            // reduce-scatter intra + all-reduce inter (on 1/within shard) +
+            // all-gather intra
+            let rs = intra_domain(Collective::ReduceScatter, bytes, within, ic);
+            let ar = inter_domain(Collective::AllReduce, bytes / within as f64, across, ic);
+            let ag = intra_domain(Collective::AllGather, bytes, within, ic);
+            rs + ar + ag
+        }
+        _ => intra_domain(c, bytes, within, ic) + inter_domain(c, bytes / within as f64, across, ic),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perfmodel::chips;
+
+    fn ic() -> Interconnect {
+        chips::h100().interconnect
+    }
+
+    #[test]
+    fn single_chip_is_free() {
+        assert_eq!(intra_domain(Collective::AllReduce, 1e9, 1, &ic()), 0.0);
+        assert_eq!(hierarchical(Collective::AllReduce, 1e9, 1, &ic()), 0.0);
+    }
+
+    #[test]
+    fn allreduce_is_twice_allgather_payload() {
+        let n = 8;
+        let ar = intra_domain(Collective::AllReduce, 1e9, n, &ic());
+        let ag = intra_domain(Collective::AllGather, 1e9, n, &ic());
+        assert!((ar / ag - 2.0).abs() < 0.05, "{ar} vs {ag}");
+    }
+
+    #[test]
+    fn cost_scales_with_bytes() {
+        let a = intra_domain(Collective::AllReduce, 1e9, 8, &ic());
+        let b = intra_domain(Collective::AllReduce, 2e9, 8, &ic());
+        assert!(b > a * 1.9 && b < a * 2.1);
+    }
+
+    #[test]
+    fn crossing_domains_is_much_slower() {
+        let ic = ic();
+        let within = hierarchical(Collective::AllReduce, 1e9, 8, &ic);
+        let across = hierarchical(Collective::AllReduce, 1e9, 64, &ic);
+        assert!(
+            across > within * 3.0,
+            "within {within} across {across}"
+        );
+    }
+
+    #[test]
+    fn payload_factor_saturates() {
+        // (n-1)/n -> 1: doubling n at large n barely changes payload time
+        let a = intra_domain(Collective::AllGather, 1e9, 512, &chips::tpu_v5p().interconnect);
+        let b = intra_domain(Collective::AllGather, 1e9, 1024, &chips::tpu_v5p().interconnect);
+        assert!((b - a) / a < 0.02);
+    }
+
+    #[test]
+    fn latency_term_present_for_tiny_payloads() {
+        let t = intra_domain(Collective::AllReduce, 8.0, 8, &ic());
+        assert!(t >= ic().intra_latency * 3.0);
+    }
+}

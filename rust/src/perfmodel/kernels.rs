@@ -1,0 +1,231 @@
+//! Structural analysis of the L1 Pallas kernel (VMEM footprint, MXU
+//! utilization estimate).
+//!
+//! `interpret=True` gives CPU-numpy timings which say nothing about TPU
+//! performance, so — per the repro harness contract — the kernel's TPU
+//! efficiency is estimated *structurally* from its BlockSpec: how much
+//! VMEM each grid cell touches, how many MXU passes its dots make, and
+//! the HBM↔VMEM traffic the schedule implies.  Results are recorded in
+//! EXPERIMENTS.md §Perf and drive block-size selection.
+
+/// TPU core model constants (v5p-class core).
+pub const VMEM_BYTES: f64 = 16.0 * 1024.0 * 1024.0; // ~16 MiB/core usable
+pub const MXU_DIM: u64 = 128; // 128x128 systolic array
+pub const HBM_BW: f64 = 2.77e12; // bytes/s (v5p)
+pub const MXU_FLOPS: f64 = 459e12; // bf16 peak (v5p)
+
+/// One flash-attention kernel configuration.
+#[derive(Clone, Debug)]
+pub struct FlashConfig {
+    pub block_q: u64,
+    pub block_k: u64,
+    pub head_dim: u64,
+    pub q_len: u64,
+    pub kv_len: u64,
+    /// bytes per element of q/k/v (2 = bf16)
+    pub elem_bytes: f64,
+}
+
+/// Structural analysis result for one grid cell and the whole kernel.
+#[derive(Clone, Debug)]
+pub struct KernelAnalysis {
+    /// VMEM resident bytes per grid cell (q block + k/v blocks + acc).
+    pub vmem_bytes: f64,
+    pub fits_vmem: bool,
+    /// Fraction of each MXU pass that does useful work (padding waste).
+    pub mxu_utilization: f64,
+    /// HBM bytes moved per (batch*head) row of the grid.
+    pub hbm_bytes_per_row: f64,
+    /// Arithmetic intensity (flops / HBM byte).
+    pub arithmetic_intensity: f64,
+    /// Roofline-limited efficiency (min(1, AI / machine balance)).
+    pub roofline_efficiency: f64,
+}
+
+impl FlashConfig {
+    pub fn analyze(&self) -> KernelAnalysis {
+        let d = self.head_dim as f64;
+        let bq = self.block_q as f64;
+        let bk = self.block_k as f64;
+
+        // VMEM per grid cell: q block, K/V, f32 accumulator + m/l carries,
+        // out block.  When the whole K/V for the (batch,head) row fits in
+        // VMEM (which is what the kernel's BlockSpec requests), keep it
+        // resident and read it from HBM once; otherwise stream
+        // double-buffered block_k tiles and re-read per q-block.
+        let q_bytes = bq * d * self.elem_bytes;
+        let kv_resident_bytes = 2.0 * self.kv_len as f64 * d * self.elem_bytes;
+        let acc_bytes = bq * d * 4.0 + 2.0 * bq * 4.0;
+        let out_bytes = bq * d * self.elem_bytes;
+        let fixed = q_bytes + acc_bytes + out_bytes;
+        let kv_fits = fixed + kv_resident_bytes <= VMEM_BYTES;
+        let kv_bytes = if kv_fits {
+            kv_resident_bytes
+        } else {
+            2.0 * bk * d * self.elem_bytes * 2.0 // double-buffered tiles
+        };
+        let vmem = fixed + kv_bytes;
+
+        // MXU utilization: each dot is (bq x d) @ (d x bk); the systolic
+        // array processes MXU_DIM-sized tiles, so partial tiles waste
+        // cycles on padding.
+        let util_dim = |n: u64| {
+            let tiles = n.div_ceil(MXU_DIM);
+            n as f64 / (tiles * MXU_DIM) as f64
+        };
+        let mxu_util = util_dim(self.block_q) * util_dim(self.head_dim).max(util_dim(self.block_k));
+
+        // HBM traffic per (batch*head): Q and O once; K/V once when
+        // VMEM-resident, once per q-block pass when streamed.
+        let n_qblocks = (self.q_len as f64 / bq).ceil();
+        let q_traffic = self.q_len as f64 * d * self.elem_bytes;
+        let kv_passes = if kv_fits { 1.0 } else { n_qblocks };
+        let kv_traffic = kv_passes * self.kv_len as f64 * d * self.elem_bytes * 2.0;
+        let o_traffic = self.q_len as f64 * d * self.elem_bytes;
+        let hbm = q_traffic + kv_traffic + o_traffic;
+
+        // flops per row: 2 dots of 2*bq*bk*d per (q,k) block pair, causal
+        // halves the pairs.
+        let flops = 2.0 * 2.0 * self.q_len as f64 * self.kv_len as f64 * d * 0.5;
+        let ai = flops / hbm;
+        let machine_balance = MXU_FLOPS / HBM_BW;
+        let roofline = (ai / machine_balance).min(1.0);
+
+        KernelAnalysis {
+            vmem_bytes: vmem,
+            fits_vmem: vmem <= VMEM_BYTES,
+            mxu_utilization: mxu_util,
+            hbm_bytes_per_row: hbm,
+            arithmetic_intensity: ai,
+            roofline_efficiency: roofline,
+        }
+    }
+}
+
+/// Sweep block sizes and return (block_q, block_k) maximizing estimated
+/// efficiency subject to the VMEM budget — the §Perf L1 tuning loop.
+pub fn best_blocks(q_len: u64, kv_len: u64, head_dim: u64) -> (u64, u64, KernelAnalysis) {
+    let candidates = [64u64, 128, 256, 512];
+    let mut best = None;
+    for &bq in &candidates {
+        for &bk in &candidates {
+            if bq > q_len.max(64) || bk > kv_len.max(64) {
+                continue;
+            }
+            let cfg = FlashConfig {
+                block_q: bq,
+                block_k: bk,
+                head_dim,
+                q_len,
+                kv_len,
+                elem_bytes: 2.0,
+            };
+            let a = cfg.analyze();
+            if !a.fits_vmem {
+                continue;
+            }
+            let score = a.mxu_utilization * a.roofline_efficiency
+                / (1.0 + a.hbm_bytes_per_row / 1e9);
+            match &best {
+                None => best = Some((bq, bk, a, score)),
+                Some((_, _, _, s)) if score > *s => best = Some((bq, bk, a, score)),
+                _ => {}
+            }
+        }
+    }
+    let (bq, bk, a, _) = best.expect("some block configuration fits VMEM");
+    (bq, bk, a)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(bq: u64, bk: u64) -> FlashConfig {
+        FlashConfig {
+            block_q: bq,
+            block_k: bk,
+            head_dim: 128,
+            q_len: 4096,
+            kv_len: 4096,
+            elem_bytes: 2.0,
+        }
+    }
+
+    #[test]
+    fn default_blocks_fit_vmem() {
+        let a = cfg(128, 128).analyze();
+        assert!(a.fits_vmem, "vmem = {:.2} MiB", a.vmem_bytes / 1048576.0);
+        assert!(a.vmem_bytes > 0.0);
+    }
+
+    #[test]
+    fn huge_blocks_blow_vmem() {
+        let a = FlashConfig {
+            block_q: 8192,
+            block_k: 8192,
+            head_dim: 256,
+            q_len: 8192,
+            kv_len: 8192,
+            elem_bytes: 4.0,
+        }
+        .analyze();
+        assert!(!a.fits_vmem);
+    }
+
+    #[test]
+    fn mxu_aligned_blocks_have_full_utilization() {
+        let a = cfg(128, 128).analyze();
+        assert!((a.mxu_utilization - 1.0).abs() < 1e-9);
+        let b = cfg(96, 128).analyze();
+        assert!(b.mxu_utilization < 1.0);
+    }
+
+    #[test]
+    fn bigger_q_blocks_reduce_kv_traffic_when_streaming() {
+        // 64k context: K/V (32 MiB) cannot stay VMEM-resident, so traffic
+        // scales with the number of q-block passes.
+        let mk = |bq| FlashConfig {
+            block_q: bq,
+            block_k: 128,
+            head_dim: 128,
+            q_len: 65536,
+            kv_len: 65536,
+            elem_bytes: 2.0,
+        };
+        let small = mk(64).analyze();
+        let big = mk(256).analyze();
+        assert!(big.hbm_bytes_per_row < small.hbm_bytes_per_row);
+        assert!(big.arithmetic_intensity > small.arithmetic_intensity);
+    }
+
+    #[test]
+    fn short_context_keeps_kv_resident() {
+        let a = cfg(128, 128).analyze();
+        // K+V at 4k/d128/bf16 = 4 MiB: resident, so HBM traffic is ~one
+        // pass over Q,K,V,O.
+        let one_pass = (4096.0 * 128.0 * 2.0) * 4.0;
+        assert!(a.hbm_bytes_per_row < one_pass * 1.01);
+    }
+
+    #[test]
+    fn best_blocks_is_mxu_aligned_and_fits() {
+        let (bq, bk, a) = best_blocks(4096, 4096, 128);
+        assert_eq!(bq % 128, 0);
+        assert_eq!(bk % 64, 0);
+        assert!(a.fits_vmem);
+        assert!(a.roofline_efficiency > 0.5, "{}", a.roofline_efficiency);
+    }
+
+    #[test]
+    fn long_context_stays_compute_bound() {
+        let a = cfg(128, 128).analyze();
+        // flash attention at 4k context should beat machine balance
+        assert!(
+            a.roofline_efficiency > 0.8,
+            "AI {} roofline {}",
+            a.arithmetic_intensity,
+            a.roofline_efficiency
+        );
+    }
+}

@@ -1,0 +1,33 @@
+//! Analytical hardware performance model — the simulated substitute for
+//! the paper's physical testbeds (DESIGN.md §2).
+//!
+//! The paper evaluates on 256–512 H100s, TPU v5p-512/1024, 1024 Trainium2
+//! (Table 3) and up to 32,768 TPU chips (Figure 4).  None of that hardware
+//! exists here, so scale experiments run on this model: a roofline +
+//! communication cost estimator over the *real parallelism plans* the
+//! composer emits.  What the paper's numbers actually measure — remat
+//! granularity, sharding strategy, compute/comm overlap, kernel fusion
+//! quality — are exactly the inputs here, so orderings and ratios are
+//! preserved even though absolute seconds are synthetic.
+//!
+//! Modules:
+//! * [`chips`] — accelerator spec sheets (public figures, cited inline).
+//! * [`model_shapes`] — FLOPs/bytes/param math for transformer shapes.
+//! * [`comms`] — collective cost model over hierarchical interconnects.
+//! * [`parallelism`] — strategy validation and per-axis communication.
+//! * [`remat`] — rematerialization policy cost semantics.
+//! * [`estimator`] — step-time / MFU / HBM estimates (Table 3, Figure 4).
+//! * [`kernels`] — L1 kernel VMEM/MXU structural analysis (§Perf).
+
+pub mod chips;
+pub mod comms;
+pub mod estimator;
+pub mod kernels;
+pub mod model_shapes;
+pub mod parallelism;
+pub mod remat;
+
+pub use chips::ChipSpec;
+pub use estimator::{estimate_step, Estimate, SystemProfile};
+pub use model_shapes::TransformerShape;
+pub use parallelism::Strategy;

@@ -1,0 +1,239 @@
+//! Transformer shape math: parameters, FLOPs, activation/KV bytes.
+//!
+//! Conventions follow the standard accounting (Kaplan et al. / PaLM
+//! appendix): train FLOPs/token ~= 6N + 12·L·s·d_attn, forward-only ~= 2N +
+//! 4·L·s·d_attn (score+value terms with causal halving applied).
+
+/// Dense transformer shape (Llama-style: SwiGLU FFN, tied or untied head).
+#[derive(Clone, Debug)]
+pub struct TransformerShape {
+    pub name: String,
+    pub vocab: u64,
+    pub model_dim: u64,
+    pub num_layers: u64,
+    pub num_heads: u64,
+    pub head_dim: u64,
+    /// FFN hidden dim (per expert when MoE).
+    pub ffn_dim: u64,
+    /// KV heads (GQA); == num_heads when MHA.
+    pub kv_heads: u64,
+    /// MoE experts (1 = dense) and active experts per token.
+    pub num_experts: u64,
+    pub active_experts: u64,
+    pub tied_lm_head: bool,
+}
+
+impl TransformerShape {
+    /// Llama2-7B (Table 3 row 1): d=4096, L=32, 32 heads, ffn 11008.
+    pub fn llama2_7b() -> Self {
+        TransformerShape {
+            name: "Llama2-7B".into(),
+            vocab: 32000,
+            model_dim: 4096,
+            num_layers: 32,
+            num_heads: 32,
+            head_dim: 128,
+            ffn_dim: 11008,
+            kv_heads: 32,
+            num_experts: 1,
+            active_experts: 1,
+            tied_lm_head: false,
+        }
+    }
+
+    /// Llama2-70B (Table 3 row 2): d=8192, L=80, 64 heads GQA-8, ffn 28672.
+    pub fn llama2_70b() -> Self {
+        TransformerShape {
+            name: "Llama2-70B".into(),
+            vocab: 32000,
+            model_dim: 8192,
+            num_layers: 80,
+            num_heads: 64,
+            head_dim: 128,
+            ffn_dim: 28672,
+            kv_heads: 8,
+            num_experts: 1,
+            active_experts: 1,
+            tied_lm_head: false,
+        }
+    }
+
+    /// Figure 4 "Model A": 70B-class dense, 4k context.
+    pub fn model_a_70b() -> Self {
+        let mut s = Self::llama2_70b();
+        s.name = "ModelA-70B".into();
+        s
+    }
+
+    /// Figure 4 "Model B": 150B-class dense, 8k context.
+    pub fn model_b_150b() -> Self {
+        TransformerShape {
+            name: "ModelB-150B".into(),
+            vocab: 100_000,
+            model_dim: 10240,
+            num_layers: 100,
+            num_heads: 80,
+            head_dim: 128,
+            ffn_dim: 35840,
+            kv_heads: 8,
+            num_experts: 1,
+            active_experts: 1,
+            tied_lm_head: false,
+        }
+    }
+
+    /// Our local presets (mirrors python/compile/configs.PRESETS).
+    pub fn preset(name: &str) -> Option<Self> {
+        let (vocab, d, l, h, hd, f) = match name {
+            "tiny" => (256, 64, 2, 4, 16, 192),
+            "small" | "serve" => (2048, 256, 4, 4, 64, 704),
+            "base100m" => (8192, 768, 12, 12, 64, 2048),
+            _ => return None,
+        };
+        Some(TransformerShape {
+            name: name.into(),
+            vocab,
+            model_dim: d,
+            num_layers: l,
+            num_heads: h,
+            head_dim: hd,
+            ffn_dim: f,
+            kv_heads: h,
+            num_experts: 1,
+            active_experts: 1,
+            tied_lm_head: true,
+        })
+    }
+
+    pub fn attn_inner(&self) -> u64 {
+        self.num_heads * self.head_dim
+    }
+
+    /// Total parameter count.
+    pub fn params(&self) -> u64 {
+        let d = self.model_dim;
+        let inner = self.attn_inner();
+        let kv_inner = self.kv_heads * self.head_dim;
+        let attn = d * inner + 2 * d * kv_inner + inner * d; // q,k,v,o
+        let ffn = 3 * d * self.ffn_dim * self.num_experts; // swiglu x experts
+        let router = if self.num_experts > 1 { d * self.num_experts } else { 0 };
+        let norms = 2 * d;
+        let emb = self.vocab * d;
+        let head = if self.tied_lm_head { 0 } else { self.vocab * d };
+        emb + head + self.num_layers * (attn + ffn + router + norms) + d
+    }
+
+    /// Parameters active per token (MoE: only top-k experts count).
+    pub fn active_params(&self) -> u64 {
+        if self.num_experts <= 1 {
+            return self.params();
+        }
+        let dense_ffn = 3 * self.model_dim * self.ffn_dim;
+        self.params() - self.num_layers * dense_ffn * (self.num_experts - self.active_experts)
+    }
+
+    /// Training FLOPs per token at sequence length `seq` (6N + attention).
+    pub fn train_flops_per_token(&self, seq: u64) -> f64 {
+        let n = self.active_params() as f64;
+        // causal attention: 12·L·s·(heads·head_dim) with the 1/2 causal
+        // factor already applied (6·L·s·inner fwd+bwd)
+        let attn = 6.0 * self.num_layers as f64 * seq as f64 * self.attn_inner() as f64;
+        6.0 * n + attn
+    }
+
+    /// Forward-only FLOPs per token (serving).
+    pub fn fwd_flops_per_token(&self, context: u64) -> f64 {
+        let n = self.active_params() as f64;
+        let attn = 2.0 * self.num_layers as f64 * context as f64 * self.attn_inner() as f64;
+        2.0 * n + attn
+    }
+
+    /// Bytes of parameters at a given dtype width.
+    pub fn param_bytes(&self, bytes_per_param: f64) -> f64 {
+        self.params() as f64 * bytes_per_param
+    }
+
+    /// Optimizer state bytes (AdamW: m+v in f32, master weights f32).
+    pub fn optimizer_bytes(&self) -> f64 {
+        self.params() as f64 * 12.0
+    }
+
+    /// Activation bytes per token per layer with NO remat (bf16), the
+    /// standard ~34·d + 5·s·heads estimate reduced to its dominant terms.
+    pub fn act_bytes_per_token_layer(&self, seq: u64) -> f64 {
+        let d = self.model_dim as f64;
+        // qkv+attn-out+2 norms+ffn intermediates (swiglu: 3 tensors of
+        // ffn_dim) in bf16 + attention probabilities term (flash removes
+        // the s^2 term; we charge the flash streaming footprint instead).
+        let dense = (10.0 * d + 3.0 * self.ffn_dim as f64) * 2.0;
+        let flash_lse = self.num_heads as f64 * 4.0; // lse per token
+        let _ = seq;
+        dense + flash_lse
+    }
+
+    /// KV-cache bytes per token (bf16 K+V across layers).
+    pub fn kv_bytes_per_token(&self) -> f64 {
+        (2 * self.num_layers * self.kv_heads * self.head_dim) as f64 * 2.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn llama2_7b_param_count() {
+        let p = TransformerShape::llama2_7b().params();
+        assert!(
+            (6.5e9..7.3e9).contains(&(p as f64)),
+            "7B params = {p}"
+        );
+    }
+
+    #[test]
+    fn llama2_70b_param_count() {
+        let p = TransformerShape::llama2_70b().params();
+        assert!(
+            (6.6e10..7.2e10).contains(&(p as f64)),
+            "70B params = {p}"
+        );
+    }
+
+    #[test]
+    fn model_b_is_about_150b() {
+        let p = TransformerShape::model_b_150b().params();
+        assert!((1.3e11..1.7e11).contains(&(p as f64)), "150B params = {p}");
+    }
+
+    #[test]
+    fn presets_match_python_scale() {
+        assert!((TransformerShape::preset("base100m").unwrap().params() as f64 - 1.0e8).abs() < 3e7);
+        let tiny = TransformerShape::preset("tiny").unwrap().params();
+        assert!((1e5..2e5).contains(&(tiny as f64)), "tiny = {tiny}");
+    }
+
+    #[test]
+    fn train_flops_dominated_by_6n() {
+        let s = TransformerShape::llama2_7b();
+        let f = s.train_flops_per_token(4096);
+        let six_n = 6.0 * s.params() as f64;
+        assert!(f > six_n && f < 1.5 * six_n);
+    }
+
+    #[test]
+    fn moe_active_params_lower() {
+        let mut s = TransformerShape::preset("small").unwrap();
+        s.num_experts = 8;
+        s.active_experts = 2;
+        assert!(s.active_params() < s.params());
+        assert!(s.active_params() > s.params() / 8);
+    }
+
+    #[test]
+    fn kv_bytes_gqa_smaller_than_mha() {
+        let mha = TransformerShape::llama2_7b().kv_bytes_per_token();
+        let gqa = TransformerShape::llama2_70b().kv_bytes_per_token();
+        // 70B has 2.5x layers but 1/8 kv heads at same head_dim
+        assert!(gqa < mha * 2.0);
+    }
+}

@@ -1,0 +1,147 @@
+//! Rematerialization (activation checkpointing) cost semantics.
+//!
+//! The paper repeatedly hinges on remat *granularity* (§7.2: "PyTorch FSDP
+//! ... checkpoints occur at the decoder block level, meaning that
+//! activations within a decoder layer must be either fully recomputed or
+//! fully saved.  On the other hand, AXLearn can save only the most
+//! expensive operations").  This module prices that difference: each
+//! policy keeps a fraction of activation bytes resident and pays a
+//! fraction of the forward FLOPs again in the backward pass.
+
+/// A remat policy with its cost coefficients.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RematCost {
+    pub policy: &'static str,
+    /// Fraction of per-layer activation bytes kept in HBM.
+    pub act_bytes_kept: f64,
+    /// Fraction of forward FLOPs recomputed during backward.
+    pub recompute_frac: f64,
+    /// Bytes offloaded to host per activation byte (0 unless offloading).
+    pub offload_frac: f64,
+}
+
+/// Policy table.  `save_qkvo` and `save_linear` are the fine-grained
+/// "tagged remat point" policies only AXLearn-style systems can express;
+/// `full`/`none` is all a block-granularity system offers.
+pub fn cost(policy: &str) -> RematCost {
+    match policy {
+        // keep everything: no recompute, full activation residency
+        "none" => RematCost {
+            policy: "none",
+            act_bytes_kept: 1.0,
+            recompute_frac: 0.0,
+            offload_frac: 0.0,
+        },
+        // checkpoint whole blocks: only block inputs kept, ~full fwd replay
+        "full" => RematCost {
+            policy: "full",
+            act_bytes_kept: 0.08,
+            recompute_frac: 1.0,
+            offload_frac: 0.0,
+        },
+        // save q/k/v/o projections + block inputs; recompute the cheap rest
+        "save_qkvo" => RematCost {
+            policy: "save_qkvo",
+            act_bytes_kept: 0.45,
+            recompute_frac: 0.35,
+            offload_frac: 0.0,
+        },
+        // save every linear-layer output (the most expensive ops), cheap
+        // elementwise/norm recompute only
+        "save_linear" => RematCost {
+            policy: "save_linear",
+            act_bytes_kept: 0.60,
+            recompute_frac: 0.15,
+            offload_frac: 0.0,
+        },
+        // offload dot-product activations to host memory (v5e rule in
+        // Appendix A): low residency, low recompute, but host-DMA traffic
+        "offload_dots" => RematCost {
+            policy: "offload_dots",
+            act_bytes_kept: 0.15,
+            recompute_frac: 0.10,
+            offload_frac: 0.55,
+        },
+        other => panic!("unknown remat policy {other:?}"),
+    }
+}
+
+/// Approximate runtime penalty of a policy: recompute plus the
+/// (partially hidden) host-DMA cost of offloading.  Used to order
+/// candidates in [`best_fitting_policy`].
+pub fn cost_key(c: &RematCost) -> f64 {
+    c.recompute_frac + 0.5 * c.offload_frac
+}
+
+/// Pick the cheapest policy that fits an HBM budget, given per-layer
+/// activation bytes and total layers.  This is the tuning loop an AXLearn
+/// user does by hand via mesh rules, automated for the Table-3 harness.
+pub fn best_fitting_policy(
+    allowed: &[&str],
+    act_bytes_full: f64,
+    other_bytes: f64,
+    hbm_budget: f64,
+) -> Option<RematCost> {
+    let mut candidates: Vec<RematCost> = allowed.iter().map(|p| cost(p)).collect();
+    // prefer the least runtime penalty (recompute + exposed offload DMA)
+    candidates.sort_by(|a, b| cost_key(a).partial_cmp(&cost_key(b)).unwrap());
+    candidates
+        .into_iter()
+        .find(|c| other_bytes + act_bytes_full * c.act_bytes_kept <= hbm_budget)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_is_total_over_registry_policies() {
+        for p in crate::config::modifier::REMAT_POLICIES {
+            let c = cost(p);
+            assert!((0.0..=1.0).contains(&c.act_bytes_kept));
+            assert!((0.0..=1.0).contains(&c.recompute_frac));
+        }
+    }
+
+    #[test]
+    fn finer_granularity_means_less_recompute_than_full() {
+        assert!(cost("save_linear").recompute_frac < cost("full").recompute_frac);
+        assert!(cost("save_qkvo").recompute_frac < cost("full").recompute_frac);
+    }
+
+    #[test]
+    fn memory_compute_tradeoff_is_monotone() {
+        // more bytes kept => less recompute, across the non-offload policies
+        let mut cs: Vec<_> = ["none", "save_linear", "save_qkvo", "full"]
+            .iter()
+            .map(|p| cost(p))
+            .collect();
+        cs.sort_by(|a, b| a.act_bytes_kept.partial_cmp(&b.act_bytes_kept).unwrap());
+        for w in cs.windows(2) {
+            assert!(w[0].recompute_frac >= w[1].recompute_frac, "{w:?}");
+        }
+    }
+
+    #[test]
+    fn best_fitting_prefers_no_recompute_when_memory_allows() {
+        let c = best_fitting_policy(&["none", "full"], 1e9, 1e9, 10e9).unwrap();
+        assert_eq!(c.policy, "none");
+    }
+
+    #[test]
+    fn best_fitting_falls_back_under_pressure() {
+        let c = best_fitting_policy(&["none", "save_linear", "full"], 10e9, 5e9, 7e9).unwrap();
+        assert_eq!(c.policy, "full");
+    }
+
+    #[test]
+    fn best_fitting_none_when_nothing_fits() {
+        assert!(best_fitting_policy(&["none"], 10e9, 50e9, 7e9).is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown remat policy")]
+    fn unknown_policy_panics() {
+        cost("bogus");
+    }
+}

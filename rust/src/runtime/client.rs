@@ -1,0 +1,73 @@
+//! PJRT client wrapper + executable cache.
+//!
+//! Compilation of an HLO-text artifact is expensive (seconds for the
+//! larger models), so compiled executables are cached by artifact name —
+//! the in-process analogue of the paper's persistent compilation cache
+//! ("compilation artifacts can be entirely reused across restarts").
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use super::manifest::Artifact;
+
+/// Wraps the PJRT CPU client with a compile cache.
+pub struct RuntimeClient {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl RuntimeClient {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(RuntimeClient {
+            client,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Load + compile an artifact (cached).
+    pub fn load(&self, artifact: &Artifact, dir: &Path) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(&artifact.name) {
+            return Ok(exe.clone());
+        }
+        let path = artifact.path(dir);
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().context("non-utf8 path")?)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("XLA compile of {}", artifact.name))?;
+        let exe = std::sync::Arc::new(exe);
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(artifact.name.clone(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Upload an f32 host tensor.
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .context("uploading f32 buffer")
+    }
+
+    /// Upload an i32 host tensor.
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .context("uploading i32 buffer")
+    }
+}

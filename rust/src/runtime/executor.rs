@@ -1,0 +1,372 @@
+//! Train/serve sessions over AOT artifacts.
+//!
+//! PJRT (through the `xla` crate's C wrapper) returns the whole output
+//! tuple as a single buffer, so session state lives as host `Literal`s
+//! between steps: each step executes, syncs the tuple once, and
+//! decomposes it back into the state vector.  At repro scale the copy is
+//! a few % of step time (measured in EXPERIMENTS.md §Perf); the paper's
+//! real runtime keeps state device-resident via donated buffers.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use super::client::RuntimeClient;
+use super::manifest::{Artifact, Manifest};
+
+/// A training session: init + train_step (+ optional eval_loss) over one
+/// artifact family (e.g. "small" or "small_moe").
+pub struct TrainSession {
+    init_exe: Arc<xla::PjRtLoadedExecutable>,
+    step_exe: Arc<xla::PjRtLoadedExecutable>,
+    eval_exe: Option<Arc<xla::PjRtLoadedExecutable>>,
+    pub artifact: Artifact,
+    /// Flat train state (params, opt_m, opt_v, step) as host literals.
+    state: Vec<xla::Literal>,
+    pub steps_done: u64,
+    pub batch: usize,
+    pub seq: usize,
+}
+
+impl TrainSession {
+    /// Open a session for artifact family `base` ("tiny", "small_moe", …).
+    pub fn open(client: Arc<RuntimeClient>, manifest: &Manifest, base: &str) -> Result<Self> {
+        let init_art = manifest.get(&format!("{base}_init"))?;
+        let step_art = manifest.get(&format!("{base}_train_step"))?;
+        let eval_art = manifest.artifacts.get(&format!("{base}_eval_loss"));
+        let init_exe = client.load(init_art, &manifest.dir)?;
+        let step_exe = client.load(step_art, &manifest.dir)?;
+        let eval_exe = eval_art.map(|a| client.load(a, &manifest.dir)).transpose()?;
+        Ok(TrainSession {
+            init_exe,
+            step_exe,
+            eval_exe,
+            artifact: step_art.clone(),
+            state: Vec::new(),
+            steps_done: 0,
+            batch: step_art.batch,
+            seq: step_art.seq,
+        })
+    }
+
+    /// Number of leading state tensors that are model parameters.
+    pub fn num_params(&self) -> usize {
+        self.artifact.num_params
+    }
+
+    /// Total state tensors (params + opt m + opt v + step counter).
+    pub fn state_len(&self) -> usize {
+        3 * self.artifact.num_params + 1
+    }
+
+    /// Initialize the train state from a seed (runs the `init` artifact —
+    /// parameter initialization itself is part of the AOT graph, so Rust
+    /// never materializes Python-side weights).
+    pub fn init(&mut self, seed: i32) -> Result<()> {
+        let out = self
+            .init_exe
+            .execute::<xla::Literal>(&[xla::Literal::scalar(seed)])
+            .context("running init artifact")?;
+        let tuple = out[0][0].to_literal_sync()?;
+        self.state = tuple.to_tuple()?;
+        if self.state.len() != self.state_len() {
+            bail!(
+                "init returned {} tensors, manifest says {}",
+                self.state.len(),
+                self.state_len()
+            );
+        }
+        self.steps_done = 0;
+        Ok(())
+    }
+
+    /// One training step. `tokens`/`targets` are row-major [batch, seq].
+    /// Returns the scalar loss.
+    pub fn step(&mut self, tokens: &[i32], targets: &[i32]) -> Result<f32> {
+        if self.state.is_empty() {
+            bail!("TrainSession::step before init/restore");
+        }
+        let expect = self.batch * self.seq;
+        if tokens.len() != expect || targets.len() != expect {
+            bail!(
+                "batch shape mismatch: got {}/{} tokens/targets, artifact wants {} ({}x{})",
+                tokens.len(),
+                targets.len(),
+                expect,
+                self.batch,
+                self.seq
+            );
+        }
+        let tok = xla::Literal::vec1(tokens).reshape(&[self.batch as i64, self.seq as i64])?;
+        let tgt = xla::Literal::vec1(targets).reshape(&[self.batch as i64, self.seq as i64])?;
+        let mut args: Vec<&xla::Literal> = self.state.iter().collect();
+        args.push(&tok);
+        args.push(&tgt);
+        let out = self.step_exe.execute::<&xla::Literal>(&args)?;
+        let tuple = out[0][0].to_literal_sync()?;
+        let mut outputs = tuple.to_tuple()?;
+        let loss = outputs
+            .pop()
+            .context("train_step returned no outputs")?
+            .to_vec::<f32>()?[0];
+        self.state = outputs;
+        self.steps_done += 1;
+        Ok(loss)
+    }
+
+    /// Forward-only loss on a batch (no state update).
+    pub fn eval_loss(&self, tokens: &[i32], targets: &[i32]) -> Result<f32> {
+        let exe = self
+            .eval_exe
+            .as_ref()
+            .context("no eval_loss artifact for this family")?;
+        let tok = xla::Literal::vec1(tokens).reshape(&[self.batch as i64, self.seq as i64])?;
+        let tgt = xla::Literal::vec1(targets).reshape(&[self.batch as i64, self.seq as i64])?;
+        let n = self.num_params();
+        let mut args: Vec<&xla::Literal> = self.state[..n].iter().collect();
+        args.push(&tok);
+        args.push(&tgt);
+        let out = exe.execute::<&xla::Literal>(&args)?;
+        let tuple = out[0][0].to_literal_sync()?;
+        Ok(tuple.to_tuple()?[0].to_vec::<f32>()?[0])
+    }
+
+    /// Snapshot the full train state to host vectors (for checkpointing).
+    /// Returns (name, data) in manifest order; the i32 step counter is
+    /// widened to f32 (lossless for any practical step count).
+    pub fn state_to_host(&self) -> Result<Vec<(String, Vec<f32>)>> {
+        let mut out = Vec::with_capacity(self.state.len());
+        for (spec, lit) in self.artifact.outputs.iter().zip(&self.state) {
+            let data = match spec.dtype {
+                super::manifest::DType::F32 => lit.to_vec::<f32>()?,
+                super::manifest::DType::I32 => {
+                    lit.to_vec::<i32>()?.into_iter().map(|x| x as f32).collect()
+                }
+            };
+            out.push((spec.name.clone(), data));
+        }
+        Ok(out)
+    }
+
+    /// Restore the full train state from host vectors.
+    pub fn restore_from_host(&mut self, tensors: &[(String, Vec<f32>)], step: u64) -> Result<()> {
+        if tensors.len() != self.state_len() {
+            bail!(
+                "restore: got {} tensors, expected {}",
+                tensors.len(),
+                self.state_len()
+            );
+        }
+        let mut state = Vec::with_capacity(tensors.len());
+        for (spec, (name, data)) in self.artifact.outputs.iter().zip(tensors) {
+            if &spec.name != name {
+                bail!("restore: tensor order mismatch: {} vs {}", spec.name, name);
+            }
+            if spec.elems() != data.len() {
+                bail!(
+                    "restore: {} has {} elems, expected {}",
+                    name,
+                    data.len(),
+                    spec.elems()
+                );
+            }
+            let dims: Vec<i64> = spec.shape.iter().map(|d| *d as i64).collect();
+            let lit = match spec.dtype {
+                super::manifest::DType::F32 => xla::Literal::vec1(data).reshape(&dims)?,
+                super::manifest::DType::I32 => {
+                    let ints: Vec<i32> = data.iter().map(|x| *x as i32).collect();
+                    xla::Literal::vec1(&ints).reshape(&dims)?
+                }
+            };
+            state.push(lit);
+        }
+        self.state = state;
+        self.steps_done = step;
+        Ok(())
+    }
+
+    /// Snapshot only the model parameters (serving handoff / golden tests).
+    pub fn params_to_host(&self) -> Result<Vec<(String, Vec<f32>)>> {
+        Ok(self.state_to_host()?.into_iter().take(self.num_params()).collect())
+    }
+}
+
+/// A decode-batch KV cache held as two literals (K and V slabs).
+pub struct KvCache {
+    pub k: xla::Literal,
+    pub v: xla::Literal,
+    pub batch: usize,
+}
+
+/// A serving session: prefill/decode/insert executables + params.
+pub struct ServeSession {
+    client: Arc<RuntimeClient>,
+    manifest_dir: PathBuf,
+    pub preset: String,
+    params: Vec<xla::Literal>,
+    prefill_exes: Vec<(usize, usize, Arc<xla::PjRtLoadedExecutable>)>, // (batch, seq, exe)
+    decode_exes: Vec<(usize, Arc<xla::PjRtLoadedExecutable>)>,         // (batch, exe)
+    insert_exe: Option<Arc<xla::PjRtLoadedExecutable>>,
+    /// KV-cache geometry [layers, batch, max_seq, heads, head_dim].
+    pub num_layers: usize,
+    pub num_heads: usize,
+    pub head_dim: usize,
+    pub max_seq: usize,
+    pub vocab: usize,
+}
+
+impl ServeSession {
+    pub fn open(client: Arc<RuntimeClient>, manifest: &Manifest, preset: &str) -> Result<Self> {
+        let init_art = manifest.get(&format!("{preset}_init"))?;
+        let hyper = &init_art.hyper;
+        let mut s = ServeSession {
+            client: client.clone(),
+            manifest_dir: manifest.dir.clone(),
+            preset: preset.to_string(),
+            params: Vec::new(),
+            prefill_exes: Vec::new(),
+            decode_exes: Vec::new(),
+            insert_exe: None,
+            num_layers: hyper["num_layers"] as usize,
+            num_heads: hyper["num_heads"] as usize,
+            head_dim: hyper["head_dim"] as usize,
+            max_seq: hyper["max_seq_len"] as usize,
+            vocab: hyper["vocab_size"] as usize,
+        };
+        s.load_params(manifest, 0)?;
+        for a in manifest.by_kind("prefill") {
+            if a.preset == preset {
+                s.prefill_exes
+                    .push((a.batch, a.seq, client.load(a, &manifest.dir)?));
+            }
+        }
+        s.prefill_exes.sort_by_key(|(b, l, _)| (*b, *l));
+        for a in manifest.by_kind("decode") {
+            if a.preset == preset {
+                s.decode_exes.push((a.batch, client.load(a, &manifest.dir)?));
+            }
+        }
+        s.decode_exes.sort_by_key(|(b, _)| *b);
+        if let Some(a) = manifest.artifacts.get(&format!("{preset}_insert")) {
+            s.insert_exe = Some(client.load(a, &manifest.dir)?);
+        }
+        if s.prefill_exes.is_empty() || s.decode_exes.is_empty() {
+            bail!("no prefill/decode artifacts for preset {preset:?} — run `make artifacts`");
+        }
+        Ok(s)
+    }
+
+    /// (Re-)initialize parameters from a seed via the init artifact.
+    pub fn load_params(&mut self, manifest: &Manifest, seed: i32) -> Result<()> {
+        let init_art = manifest.get(&format!("{}_init", self.preset))?;
+        let init_exe = self.client.load(init_art, &manifest.dir)?;
+        let out = init_exe.execute::<xla::Literal>(&[xla::Literal::scalar(seed)])?;
+        let state = out[0][0].to_literal_sync()?.to_tuple()?;
+        self.params = state.into_iter().take(init_art.num_params).collect();
+        Ok(())
+    }
+
+    /// Available prefill bucket lengths for a batch size (ascending).
+    pub fn prefill_buckets(&self, batch: usize) -> Vec<usize> {
+        self.prefill_exes
+            .iter()
+            .filter(|(b, _, _)| *b == batch)
+            .map(|(_, s, _)| *s)
+            .collect()
+    }
+
+    pub fn decode_batches(&self) -> Vec<usize> {
+        self.decode_exes.iter().map(|(b, _)| *b).collect()
+    }
+
+    /// Prefill a batch of prompts (caller pads tokens to the bucket).
+    /// Returns (next tokens, KV cache sized to max_seq).
+    pub fn prefill(
+        &self,
+        tokens: &[i32],
+        batch: usize,
+        bucket: usize,
+        prompt_len: &[i32],
+    ) -> Result<(Vec<i32>, KvCache)> {
+        let exe = self
+            .prefill_exes
+            .iter()
+            .find(|(b, s, _)| *b == batch && *s == bucket)
+            .map(|(_, _, e)| e)
+            .with_context(|| format!("no prefill artifact for batch={batch} bucket={bucket}"))?;
+        let tok = xla::Literal::vec1(tokens).reshape(&[batch as i64, bucket as i64])?;
+        let plen = xla::Literal::vec1(prompt_len);
+        let mut args: Vec<&xla::Literal> = self.params.iter().collect();
+        args.push(&tok);
+        args.push(&plen);
+        let out = exe.execute::<&xla::Literal>(&args)?;
+        let mut parts = out[0][0].to_literal_sync()?.to_tuple()?;
+        let v = parts.pop().context("prefill outputs")?;
+        let k = parts.pop().context("prefill outputs")?;
+        let next = parts.pop().context("prefill outputs")?.to_vec::<i32>()?;
+        Ok((next, KvCache { k, v, batch }))
+    }
+
+    /// One decode step for the whole slot batch.  `pos[b]` is each row's
+    /// current position; rows may differ (continuous batching).
+    pub fn decode(&self, cache: KvCache, pos: &[i32], token: &[i32]) -> Result<(Vec<i32>, KvCache)> {
+        let batch = cache.batch;
+        let exe = self
+            .decode_exes
+            .iter()
+            .find(|(b, _)| *b == batch)
+            .map(|(_, e)| e)
+            .with_context(|| format!("no decode artifact for batch={batch}"))?;
+        let p = xla::Literal::vec1(pos);
+        let t = xla::Literal::vec1(token);
+        let mut args: Vec<&xla::Literal> = self.params.iter().collect();
+        args.push(&cache.k);
+        args.push(&cache.v);
+        args.push(&p);
+        args.push(&t);
+        let out = exe.execute::<&xla::Literal>(&args)?;
+        let mut parts = out[0][0].to_literal_sync()?.to_tuple()?;
+        let v = parts.pop().context("decode outputs")?;
+        let k = parts.pop().context("decode outputs")?;
+        let next = parts.pop().context("decode outputs")?.to_vec::<i32>()?;
+        Ok((next, KvCache { k, v, batch }))
+    }
+
+    /// Insert a freshly-prefilled single-request cache into `slot` of the
+    /// live decode cache (continuous-batching admission, §6).
+    pub fn insert(&self, full: KvCache, one: &KvCache, slot: usize) -> Result<KvCache> {
+        let exe = self.insert_exe.as_ref().context("no insert artifact")?;
+        let s = xla::Literal::scalar(slot as i32);
+        let args: Vec<&xla::Literal> = vec![&full.k, &full.v, &one.k, &one.v, &s];
+        let out = exe.execute::<&xla::Literal>(&args)?;
+        let mut parts = out[0][0].to_literal_sync()?.to_tuple()?;
+        let v = parts.pop().context("insert outputs")?;
+        let k = parts.pop().context("insert outputs")?;
+        Ok(KvCache {
+            k,
+            v,
+            batch: full.batch,
+        })
+    }
+
+    /// An empty (zeroed) decode cache for `batch` slots.
+    pub fn empty_cache(&self, batch: usize) -> Result<KvCache> {
+        let dims = [
+            self.num_layers as i64,
+            batch as i64,
+            self.max_seq as i64,
+            self.num_heads as i64,
+            self.head_dim as i64,
+        ];
+        let n: usize = dims.iter().product::<i64>() as usize;
+        let zeros = vec![0f32; n];
+        let k = xla::Literal::vec1(&zeros).reshape(&dims)?;
+        let v = xla::Literal::vec1(&zeros).reshape(&dims)?;
+        Ok(KvCache { k, v, batch })
+    }
+
+    pub fn artifacts_dir(&self) -> &PathBuf {
+        &self.manifest_dir
+    }
+}

@@ -1,0 +1,287 @@
+//! Artifact manifest parsing.
+//!
+//! `python/compile/aot.py` writes a line-oriented manifest (chosen over
+//! JSON so the offline Rust side needs no parser dependency):
+//!
+//! ```text
+//! artifact tiny_train_step
+//! file tiny_train_step.hlo.txt
+//! kind train_step
+//! preset tiny
+//! hyper vocab_size=256 model_dim=64 ...
+//! num_params 20
+//! batch 2
+//! seq 32
+//! input param/decoder/emb/weight float32 256,64
+//! ...
+//! output loss float32 scalar
+//! end
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// Supported element dtypes on the artifact boundary.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        match s {
+            "float32" => Ok(DType::F32),
+            "int32" => Ok(DType::I32),
+            other => bail!("unsupported dtype {other:?} on artifact boundary"),
+        }
+    }
+
+    pub fn bytes(&self) -> usize {
+        4
+    }
+}
+
+/// A named tensor on the artifact boundary.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT artifact.
+#[derive(Clone, Debug)]
+pub struct Artifact {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    pub preset: String,
+    /// Hyper-parameters recorded by the lowering (vocab_size etc.).
+    pub hyper: BTreeMap<String, i64>,
+    /// Leading state tensors that are model parameters (vs optimizer).
+    pub num_params: usize,
+    pub batch: usize,
+    pub seq: usize,
+    pub moe: bool,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl Artifact {
+    pub fn path(&self, dir: &Path) -> PathBuf {
+        dir.join(&self.file)
+    }
+}
+
+/// The parsed manifest: artifacts by name.
+#[derive(Debug, Default)]
+pub struct Manifest {
+    pub artifacts: BTreeMap<String, Artifact>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let mut m = Manifest::parse(&text)?;
+        m.dir = dir.to_path_buf();
+        Ok(m)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let mut artifacts = BTreeMap::new();
+        let mut cur: Option<Artifact> = None;
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (key, rest) = line.split_once(' ').unwrap_or((line, ""));
+            match (key, &mut cur) {
+                ("artifact", slot @ None) => {
+                    *slot = Some(Artifact {
+                        name: rest.to_string(),
+                        file: String::new(),
+                        kind: String::new(),
+                        preset: String::new(),
+                        hyper: BTreeMap::new(),
+                        num_params: 0,
+                        batch: 0,
+                        seq: 0,
+                        moe: false,
+                        inputs: vec![],
+                        outputs: vec![],
+                    });
+                }
+                ("artifact", Some(_)) => bail!("line {}: nested artifact", lineno + 1),
+                ("end", slot @ Some(_)) => {
+                    let a = slot.take().unwrap();
+                    if a.file.is_empty() || a.kind.is_empty() {
+                        bail!("artifact {} missing file/kind", a.name);
+                    }
+                    artifacts.insert(a.name.clone(), a);
+                }
+                (_, None) => bail!("line {}: {line:?} outside artifact block", lineno + 1),
+                (key, Some(a)) => match key {
+                    "file" => a.file = rest.to_string(),
+                    "kind" => a.kind = rest.to_string(),
+                    "preset" => a.preset = rest.to_string(),
+                    "num_params" => a.num_params = rest.parse()?,
+                    "batch" => a.batch = rest.parse()?,
+                    "seq" => a.seq = rest.parse()?,
+                    "moe" => a.moe = rest == "1",
+                    "rope" => {}
+                    "hyper" => {
+                        for kv in rest.split_whitespace() {
+                            if let Some((k, v)) = kv.split_once('=') {
+                                if let Ok(n) = v.parse::<i64>() {
+                                    a.hyper.insert(k.to_string(), n);
+                                }
+                            }
+                        }
+                    }
+                    "input" | "output" => {
+                        let parts: Vec<&str> = rest.split_whitespace().collect();
+                        if parts.len() != 3 {
+                            bail!("line {}: bad tensor spec {rest:?}", lineno + 1);
+                        }
+                        let shape = if parts[2] == "scalar" {
+                            vec![]
+                        } else {
+                            parts[2]
+                                .split(',')
+                                .map(|d| d.parse::<usize>().map_err(Into::into))
+                                .collect::<Result<Vec<_>>>()?
+                        };
+                        let spec = TensorSpec {
+                            name: parts[0].to_string(),
+                            dtype: DType::parse(parts[1])?,
+                            shape,
+                        };
+                        if key == "input" {
+                            a.inputs.push(spec);
+                        } else {
+                            a.outputs.push(spec);
+                        }
+                    }
+                    other => bail!("line {}: unknown manifest key {other:?}", lineno + 1),
+                },
+            }
+        }
+        if cur.is_some() {
+            bail!("manifest truncated: artifact block not closed with `end`");
+        }
+        Ok(Manifest {
+            artifacts,
+            dir: PathBuf::new(),
+        })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Artifact> {
+        self.artifacts.get(name).with_context(|| {
+            format!(
+                "artifact {name:?} not in manifest (have: {:?}) — run `make artifacts`",
+                self.artifacts.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    /// All artifacts of a given kind.
+    pub fn by_kind(&self, kind: &str) -> Vec<&Artifact> {
+        self.artifacts.values().filter(|a| a.kind == kind).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+artifact t_step
+file t_step.hlo.txt
+kind train_step
+preset tiny
+hyper vocab_size=256 model_dim=64
+num_params 2
+batch 2
+seq 32
+moe 0
+input param/w float32 256,64
+input tokens int32 2,32
+output param/w float32 256,64
+output loss float32 scalar
+end
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let a = m.get("t_step").unwrap();
+        assert_eq!(a.kind, "train_step");
+        assert_eq!(a.hyper["vocab_size"], 256);
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.inputs[0].shape, vec![256, 64]);
+        assert_eq!(a.inputs[1].dtype, DType::I32);
+        assert_eq!(a.outputs[1].shape, Vec::<usize>::new());
+        assert_eq!(a.num_params, 2);
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let text = SAMPLE.replace("end\n", "");
+        assert!(Manifest::parse(&text).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_key() {
+        let text = SAMPLE.replace("moe 0", "bogus 1");
+        assert!(Manifest::parse(&text).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_dtype() {
+        let text = SAMPLE.replace("float32 256,64\ninput", "float64 256,64\ninput");
+        assert!(Manifest::parse(&text).is_err());
+    }
+
+    #[test]
+    fn missing_artifact_error_is_actionable() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let err = m.get("nope").unwrap_err().to_string();
+        assert!(err.contains("make artifacts"));
+    }
+
+    #[test]
+    fn by_kind_filters() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.by_kind("train_step").len(), 1);
+        assert!(m.by_kind("decode").is_empty());
+    }
+
+    #[test]
+    fn elems_product() {
+        let t = TensorSpec {
+            name: "x".into(),
+            dtype: DType::F32,
+            shape: vec![3, 4, 5],
+        };
+        assert_eq!(t.elems(), 60);
+        let s = TensorSpec {
+            name: "s".into(),
+            dtype: DType::F32,
+            shape: vec![],
+        };
+        assert_eq!(s.elems(), 1);
+    }
+}

@@ -1,0 +1,17 @@
+//! The PJRT runtime: loads AOT artifacts (HLO text) and executes them on
+//! the request path with **no Python anywhere**.
+//!
+//! * [`manifest`] — parses `artifacts/manifest.txt` (shapes, dtypes,
+//!   parameter ordering) written by `python/compile/aot.py`.
+//! * [`client`] — PJRT CPU client wrapper + HLO-text compilation cache.
+//! * [`executor`] — train/serve sessions keeping model state
+//!   **device-resident** (`execute_b` over `PjRtBuffer`s) so the hot loop
+//!   never round-trips tensors through host literals.
+
+pub mod client;
+pub mod executor;
+pub mod manifest;
+
+pub use client::RuntimeClient;
+pub use executor::{ServeSession, TrainSession};
+pub use manifest::{Artifact, Manifest, TensorSpec};

@@ -1,0 +1,136 @@
+//! Analytic inference-latency model at Table-4 scale (Llama2 7B on
+//! TPU v5p-8, 70B on v6e-8 — hardware we do not have).
+//!
+//! AXLearn-side numbers are first-principles:
+//! * TTFT ≈ prefill compute (forward FLOPs over the prompt at matmul
+//!   efficiency) + one dispatch overhead.
+//! * TPOT ≈ max(weight-streaming time = param bytes / aggregate HBM BW,
+//!   decode compute) + dispatch overhead — decode is memory-bound.
+//!
+//! vLLM-side numbers are produced by *ratio transfer*: the baseline and
+//! real engines both run on the local CPU substrate (`engine` vs
+//! `baseline` over identical artifacts); the measured TTFT/TPOT ratios —
+//! which capture scheduling, padding and compile-stall effects, not
+//! hardware — scale the analytic AXLearn numbers.  EXPERIMENTS.md Table 4
+//! reports both the ratios and the transferred values.
+
+use crate::perfmodel::chips::ChipSpec;
+use crate::perfmodel::estimator::base_efficiency;
+use crate::perfmodel::model_shapes::TransformerShape;
+
+/// Per-call runtime dispatch overhead on a TPU VM host (s).  Public
+/// figure for a single-program PJRT dispatch round-trip.
+pub const DISPATCH_OVERHEAD_S: f64 = 0.004;
+
+#[derive(Clone, Debug)]
+pub struct InferenceEstimate {
+    pub ttft_s: f64,
+    pub tpot_s: f64,
+    /// tokens/s at full decode batch.
+    pub throughput_tok_s: f64,
+}
+
+/// First-principles estimate for one model on one host type.
+pub fn estimate_axlearn(
+    shape: &TransformerShape,
+    chip: &ChipSpec,
+    chips: usize,
+    prompt_len: usize,
+    batch: usize,
+    weight_bytes_per_param: f64, // 2.0 = bf16
+) -> InferenceEstimate {
+    let eff = base_efficiency(chip);
+    let peak = chip.peak_flops_bf16 * chips as f64 * eff;
+    // prefill: forward FLOPs over the prompt
+    let prefill_flops = prompt_len as f64 * shape.fwd_flops_per_token(prompt_len as u64);
+    let ttft = prefill_flops / peak + DISPATCH_OVERHEAD_S;
+    // decode: weight streaming dominates at small batch
+    let weight_stream = shape.params() as f64 * weight_bytes_per_param
+        / (chip.hbm_bw * chips as f64);
+    let kv_stream = (prompt_len as f64 * shape.kv_bytes_per_token() * batch as f64)
+        / (chip.hbm_bw * chips as f64);
+    let decode_flops = batch as f64 * shape.fwd_flops_per_token(prompt_len as u64);
+    let tpot = (weight_stream + kv_stream).max(decode_flops / peak) + DISPATCH_OVERHEAD_S;
+    InferenceEstimate {
+        ttft_s: ttft,
+        tpot_s: tpot,
+        throughput_tok_s: batch as f64 / tpot,
+    }
+}
+
+/// Apply measured baseline/engine ratios (from the local CPU runs) to an
+/// analytic AXLearn estimate to get the comparator's projected numbers.
+pub fn transfer_ratios(
+    ax: &InferenceEstimate,
+    ttft_ratio: f64,
+    tpot_ratio: f64,
+    extra_ttft_s: f64, // non-scaling component (compile stalls)
+) -> InferenceEstimate {
+    InferenceEstimate {
+        ttft_s: ax.ttft_s * ttft_ratio + extra_ttft_s,
+        tpot_s: ax.tpot_s * tpot_ratio,
+        throughput_tok_s: ax.throughput_tok_s / tpot_ratio,
+    }
+}
+
+/// The two Table-4 rows' setups.
+pub fn table4_setups() -> Vec<(&'static str, TransformerShape, ChipSpec, usize, usize)> {
+    use crate::perfmodel::chips;
+    vec![
+        // (label, shape, chip, chips, median prompt)
+        ("7B@v5p-8", TransformerShape::llama2_7b(), chips::tpu_v5p(), 8, 256),
+        ("70B@v6e-8", TransformerShape::llama2_70b(), chips::tpu_v6e(), 8, 450),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perfmodel::chips;
+
+    #[test]
+    fn ttft_milliseconds_at_7b_scale() {
+        let e = estimate_axlearn(
+            &TransformerShape::llama2_7b(),
+            &chips::tpu_v5p(),
+            8,
+            256,
+            8,
+            2.0,
+        );
+        // paper: 40.1 ms TTFT, 9.1 ms TPOT (max input 1024, batched)
+        assert!(e.ttft_s > 0.005 && e.ttft_s < 0.2, "ttft {}", e.ttft_s);
+        assert!(e.tpot_s > 0.0005 && e.tpot_s < 0.05, "tpot {}", e.tpot_s);
+    }
+
+    #[test]
+    fn decode_is_memory_bound_at_small_batch() {
+        let shape = TransformerShape::llama2_70b();
+        let chip = chips::tpu_v6e();
+        let e1 = estimate_axlearn(&shape, &chip, 8, 450, 1, 2.0);
+        let e8 = estimate_axlearn(&shape, &chip, 8, 450, 8, 2.0);
+        // weight streaming dominates: TPOT ~flat in batch, throughput ~8x
+        assert!(e8.tpot_s < e1.tpot_s * 2.0);
+        assert!(e8.throughput_tok_s > e1.throughput_tok_s * 4.0);
+    }
+
+    #[test]
+    fn bigger_model_slower_tpot() {
+        let a = estimate_axlearn(&TransformerShape::llama2_7b(), &chips::tpu_v5p(), 8, 256, 8, 2.0);
+        let b = estimate_axlearn(&TransformerShape::llama2_70b(), &chips::tpu_v6e(), 8, 450, 8, 2.0);
+        assert!(b.tpot_s > a.tpot_s);
+    }
+
+    #[test]
+    fn ratio_transfer_composes() {
+        let ax = InferenceEstimate {
+            ttft_s: 0.04,
+            tpot_s: 0.009,
+            throughput_tok_s: 800.0,
+        };
+        let v = transfer_ratios(&ax, 3.0, 2.5, 0.5);
+        assert!((v.ttft_s - 0.62).abs() < 1e-9);
+        assert!((v.tpot_s - 0.0225).abs() < 1e-9);
+        assert!((v.throughput_tok_s - 320.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,169 @@
+//! The "vLLM-on-TPU (experimental)" baseline engine (Table 4 / Figure 5
+//! comparator).
+//!
+//! The paper attributes vLLM's poor TPU showing to implementation issues
+//! in the then-experimental TPU backend.  The documented mechanisms we
+//! model (each is a real, cited behavior of early vllm-tpu):
+//!
+//! 1. **Static batching**: requests are grouped into fixed batches; a
+//!    batch decodes until *every* member finishes before the next batch
+//!    is admitted (no continuous batching on the TPU path at the time).
+//! 2. **Shape-bucket recompilation stalls**: XLA recompiles on each new
+//!    (batch, padded-length) shape; the first request hitting a bucket
+//!    pays seconds of compile, which is what blows up TTFT (the paper's
+//!    80-second 70B TTFT is compile-dominated).
+//! 3. **Bucket padding waste**: prompts pad to the largest bucket,
+//!    decode always runs the full batch width.
+//!
+//! The engine runs the *same* PJRT artifacts as the real engine, so every
+//! difference in the report comes from scheduling, not the substrate.
+
+use std::collections::HashSet;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::ServeSession;
+
+use super::workload::{aggregate, LatencyStats, RequestOutcome, Workload};
+
+#[derive(Clone, Debug)]
+pub struct StaticBatchOptions {
+    pub batch_size: usize,
+    /// Simulated XLA compile stall on first use of a shape bucket (s).
+    pub compile_stall_s: f64,
+}
+
+impl Default for StaticBatchOptions {
+    fn default() -> Self {
+        StaticBatchOptions {
+            batch_size: 8,
+            compile_stall_s: 2.0,
+        }
+    }
+}
+
+pub struct StaticBatchEngine {
+    session: ServeSession,
+    opts: StaticBatchOptions,
+}
+
+#[derive(Debug)]
+pub struct BaselineReport {
+    pub outcomes: Vec<RequestOutcome>,
+    pub stats: LatencyStats,
+    pub compile_stalls: u64,
+    pub wasted_decode_rows: u64,
+}
+
+impl StaticBatchEngine {
+    pub fn new(session: ServeSession, opts: StaticBatchOptions) -> Self {
+        StaticBatchEngine { session, opts }
+    }
+
+    pub fn run(&self, workload: &Workload) -> Result<BaselineReport> {
+        let b = self.opts.batch_size;
+        anyhow::ensure!(
+            self.session.decode_batches().contains(&b),
+            "no decode artifact for batch={b}"
+        );
+        let buckets = self.session.prefill_buckets(1);
+        let max_bucket = *buckets.last().context("no prefill buckets")?;
+
+        let mut clock = 0.0f64;
+        let mut outcomes = Vec::new();
+        let mut compiled: HashSet<(usize, usize)> = HashSet::new();
+        let mut compile_stalls = 0u64;
+        let mut wasted_rows = 0u64;
+        let mut pending: Vec<_> = workload.requests.clone();
+        pending.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+
+        while !pending.is_empty() {
+            // static batching: wait until a full batch has arrived (or the
+            // tail of the workload)
+            let take = b.min(pending.len());
+            let batch: Vec<_> = pending.drain(..take).collect();
+            let batch_ready = batch
+                .iter()
+                .map(|r| r.arrival_s)
+                .fold(0.0f64, f64::max);
+            clock = clock.max(batch_ready);
+
+            // prefill each request, padded to the LARGEST bucket
+            let mut cache = self.session.empty_cache(b)?;
+            let mut first_token = vec![0i32; b];
+            for (slot, r) in batch.iter().enumerate() {
+                if compiled.insert((1, max_bucket)) {
+                    clock += self.opts.compile_stall_s;
+                    compile_stalls += 1;
+                }
+                let plen = r.prompt.len().min(max_bucket);
+                let mut tokens = vec![0i32; max_bucket];
+                tokens[..plen].copy_from_slice(&r.prompt[..plen]);
+                let t0 = Instant::now();
+                let (next, one) = self.session.prefill(&tokens, 1, max_bucket, &[plen as i32])?;
+                cache = self.session.insert(cache, &one, slot)?;
+                clock += t0.elapsed().as_secs_f64();
+                first_token[slot] = next[0];
+            }
+            let prefill_done = clock;
+
+            // decode until ALL members finish
+            if compiled.insert((b, 0)) {
+                clock += self.opts.compile_stall_s;
+                compile_stalls += 1;
+            }
+            let max_new = batch.iter().map(|r| r.max_new_tokens).max().unwrap_or(1);
+            let mut pos: Vec<i32> = (0..b)
+                .map(|i| batch.get(i).map(|r| r.prompt.len() as i32).unwrap_or(0))
+                .collect();
+            let mut tok = first_token.clone();
+            let mut decode_time = 0.0f64;
+            let mut rounds = 0usize;
+            while rounds + 1 < max_new {
+                let t0 = Instant::now();
+                let (next, new_cache) = self.session.decode(cache, &pos, &tok)?;
+                cache = new_cache;
+                let dt = t0.elapsed().as_secs_f64();
+                clock += dt;
+                decode_time += dt;
+                rounds += 1;
+                for i in 0..b {
+                    pos[i] += 1;
+                    // rows whose request finished keep decoding: waste
+                    if let Some(r) = batch.get(i) {
+                        if rounds >= r.max_new_tokens {
+                            wasted_rows += 1;
+                        }
+                    } else {
+                        wasted_rows += 1;
+                    }
+                }
+                tok = next;
+            }
+
+            for (slot, r) in batch.iter().enumerate() {
+                let _ = slot;
+                let out_toks = r.max_new_tokens;
+                let decode_tokens = out_toks.saturating_sub(1).max(1);
+                outcomes.push(RequestOutcome {
+                    id: r.id,
+                    arrival_s: r.arrival_s,
+                    // every member waits for the whole batch's prefill
+                    ttft_s: prefill_done - r.arrival_s,
+                    tpot_s: decode_time / rounds.max(1) as f64 * (rounds as f64 / decode_tokens as f64).max(1.0),
+                    output_tokens: out_toks,
+                    finish_s: clock,
+                });
+            }
+        }
+        outcomes.sort_by_key(|o| o.id);
+        let stats = aggregate(&outcomes);
+        Ok(BaselineReport {
+            outcomes,
+            stats,
+            compile_stalls,
+            wasted_decode_rows: wasted_rows,
+        })
+    }
+}

@@ -1,0 +1,137 @@
+//! The real inference engine: continuous batcher + PJRT serve session.
+//!
+//! Time model: arrivals follow the workload's virtual clock, compute
+//! advances it by the *measured* wall time of each XLA call — so latency
+//! numbers combine a real compute substrate with a controlled arrival
+//! process (the standard serving-simulation methodology).
+
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::ServeSession;
+
+use super::batcher::{BatcherOptions, ContinuousBatcher};
+use super::workload::{aggregate, LatencyStats, RequestOutcome, Workload};
+
+/// Engine report: per-request outcomes + aggregates + counters.
+#[derive(Debug)]
+pub struct EngineReport {
+    pub outcomes: Vec<RequestOutcome>,
+    pub stats: LatencyStats,
+    pub decode_rounds: u64,
+    pub prefills: u64,
+    pub mean_batch_occupancy: f64,
+}
+
+/// The continuous-batching engine.
+pub struct Engine {
+    session: ServeSession,
+    opts: BatcherOptions,
+}
+
+impl Engine {
+    pub fn new(session: ServeSession, opts: BatcherOptions) -> Self {
+        Engine { session, opts }
+    }
+
+    /// Serve a whole workload to completion.
+    pub fn run(&self, workload: &Workload) -> Result<EngineReport> {
+        let slots = self.opts.slots;
+        anyhow::ensure!(
+            self.session.decode_batches().contains(&slots),
+            "no decode artifact for batch={slots}"
+        );
+        let buckets = self.session.prefill_buckets(1);
+        anyhow::ensure!(!buckets.is_empty(), "no batch-1 prefill artifacts");
+
+        let mut batcher = ContinuousBatcher::new(self.opts.clone());
+        for r in &workload.requests {
+            batcher.enqueue(r.clone());
+        }
+
+        let mut cache = self.session.empty_cache(slots)?;
+        let mut clock = 0.0f64;
+        let mut outcomes: Vec<RequestOutcome> = Vec::new();
+        let mut decode_rounds = 0u64;
+        let mut prefills = 0u64;
+        let mut occupancy_sum = 0usize;
+        // per-slot running TPOT accumulators
+        let mut slot_decode_time = vec![0.0f64; slots];
+
+        while batcher.has_work() {
+            // idle? jump to the next arrival
+            if batcher.active_slots() == 0 {
+                if let Some(t) = batcher.next_arrival() {
+                    if t > clock {
+                        clock = t;
+                    }
+                }
+            }
+            // admissions: prefill each into its slot
+            for (slot, req) in batcher.admit(clock) {
+                let bucket = buckets
+                    .iter()
+                    .copied()
+                    .find(|b| *b >= req.prompt.len())
+                    .unwrap_or(*buckets.last().unwrap());
+                let plen = req.prompt.len().min(bucket);
+                let mut tokens = vec![0i32; bucket];
+                tokens[..plen].copy_from_slice(&req.prompt[..plen]);
+                let t0 = Instant::now();
+                let (next, one_cache) = self
+                    .session
+                    .prefill(&tokens, 1, bucket, &[plen as i32])
+                    .context("prefill")?;
+                let new_cache = self.session.insert(cache, &one_cache, slot)?;
+                cache = new_cache;
+                clock += t0.elapsed().as_secs_f64();
+                prefills += 1;
+                batcher.on_prefill(slot, next[0], clock);
+                slot_decode_time[slot] = 0.0;
+            }
+            if batcher.active_slots() == 0 {
+                continue;
+            }
+            // one decode round for all slots
+            let (pos, tok) = batcher.decode_inputs();
+            let t0 = Instant::now();
+            let (next, new_cache) = self.session.decode(cache, &pos, &tok)?;
+            cache = new_cache;
+            let dt = t0.elapsed().as_secs_f64();
+            clock += dt;
+            decode_rounds += 1;
+            occupancy_sum += batcher.active_slots();
+            for (i, s) in batcher.slots.iter().enumerate() {
+                if s.is_some() {
+                    slot_decode_time[i] += dt;
+                }
+            }
+            for (slot, done) in batcher.on_decode(&next, clock)? {
+                let decode_tokens = done.generated.saturating_sub(1).max(1);
+                outcomes.push(RequestOutcome {
+                    id: done.request_id,
+                    arrival_s: done.arrival_s,
+                    ttft_s: done.first_token_s - done.arrival_s,
+                    tpot_s: slot_decode_time[slot] / decode_tokens as f64,
+                    output_tokens: done.generated,
+                    finish_s: clock,
+                });
+            }
+        }
+        outcomes.sort_by_key(|o| o.id);
+        let stats = aggregate(&outcomes);
+        Ok(EngineReport {
+            outcomes,
+            stats,
+            decode_rounds,
+            prefills,
+            mean_batch_occupancy: if decode_rounds > 0 {
+                occupancy_sum as f64 / decode_rounds as f64
+            } else {
+                0.0
+            },
+        })
+    }
+
+}

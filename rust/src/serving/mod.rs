@@ -1,0 +1,26 @@
+//! The unified inference engine (§6): continuous batching, paged KV-cache
+//! management, prefill/decode scheduling — reusing the training stack's
+//! artifacts, exactly the paper's "surprising discovery" that a training
+//! system yields an efficient inference engine.
+//!
+//! * [`workload`] — ShareGPT-like request generator (prompt/output length
+//!   distributions + Poisson arrivals).
+//! * [`paged`] — paged KV allocator (page tables, free lists, admission).
+//! * [`batcher`] — slot-based continuous batcher.
+//! * [`engine`] — the real engine over [`crate::runtime::ServeSession`].
+//! * [`baseline`] — the "vLLM-on-TPU (experimental)" behavioral baseline:
+//!   static batching, bucket-padding, shape-recompilation stalls.
+//! * [`analytic`] — Table-4-scale analytic latency model (7B/70B on
+//!   v5p/v6e, where the real hardware is unavailable).
+
+pub mod analytic;
+pub mod baseline;
+pub mod batcher;
+pub mod engine;
+pub mod paged;
+pub mod workload;
+
+pub use batcher::{BatcherOptions, ContinuousBatcher};
+pub use engine::{Engine, EngineReport};
+pub use paged::PagedKvAllocator;
+pub use workload::{Request, RequestOutcome, Workload, WorkloadOptions};

@@ -1,0 +1,184 @@
+//! Paged KV-cache allocator (vLLM-style PagedAttention accounting, §6).
+//!
+//! The KV tensor memory itself lives inside the XLA decode buffers; this
+//! allocator is the *management* layer: fixed-size pages, per-request
+//! page tables, a free list, and admission control (a request is admitted
+//! only if its worst-case page demand fits).  The same accounting drives
+//! the analytic Table-4 model at 7B/70B scale.
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// Paged allocator over a fixed pool.
+pub struct PagedKvAllocator {
+    pub page_tokens: usize,
+    pub total_pages: usize,
+    free: Vec<usize>,
+    tables: BTreeMap<u64, Vec<usize>>,
+    /// High-water mark for reporting.
+    pub peak_used: usize,
+}
+
+impl PagedKvAllocator {
+    pub fn new(total_pages: usize, page_tokens: usize) -> Self {
+        PagedKvAllocator {
+            page_tokens,
+            total_pages,
+            free: (0..total_pages).rev().collect(),
+            tables: BTreeMap::new(),
+            peak_used: 0,
+        }
+    }
+
+    pub fn pages_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.page_tokens)
+    }
+
+    pub fn free_pages(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn used_pages(&self) -> usize {
+        self.total_pages - self.free.len()
+    }
+
+    /// Can a request with `prompt_tokens` + `max_new` be admitted now?
+    pub fn can_admit(&self, prompt_tokens: usize, max_new: usize) -> bool {
+        self.pages_for(prompt_tokens + max_new) <= self.free.len()
+    }
+
+    /// Admit a request, reserving pages for its worst-case length.
+    pub fn admit(&mut self, id: u64, prompt_tokens: usize, max_new: usize) -> Result<()> {
+        if self.tables.contains_key(&id) {
+            bail!("request {id} already admitted");
+        }
+        let need = self.pages_for(prompt_tokens + max_new);
+        if need > self.free.len() {
+            bail!(
+                "admission rejected: request {id} needs {need} pages, {} free",
+                self.free.len()
+            );
+        }
+        let pages: Vec<usize> = (0..need).map(|_| self.free.pop().unwrap()).collect();
+        self.tables.insert(id, pages);
+        self.peak_used = self.peak_used.max(self.used_pages());
+        Ok(())
+    }
+
+    /// Release a finished request's pages.
+    pub fn release(&mut self, id: u64) -> Result<usize> {
+        match self.tables.remove(&id) {
+            None => bail!("release of unknown request {id}"),
+            Some(pages) => {
+                let n = pages.len();
+                self.free.extend(pages);
+                Ok(n)
+            }
+        }
+    }
+
+    pub fn page_table(&self, id: u64) -> Option<&[usize]> {
+        self.tables.get(&id).map(|v| v.as_slice())
+    }
+
+    pub fn active_requests(&self) -> usize {
+        self.tables.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use std::collections::HashSet;
+
+    #[test]
+    fn admit_release_roundtrip() {
+        let mut a = PagedKvAllocator::new(16, 16);
+        a.admit(1, 100, 28).unwrap(); // 128 tokens -> 8 pages
+        assert_eq!(a.used_pages(), 8);
+        assert_eq!(a.page_table(1).unwrap().len(), 8);
+        assert_eq!(a.release(1).unwrap(), 8);
+        assert_eq!(a.used_pages(), 0);
+    }
+
+    #[test]
+    fn admission_control_rejects_when_full() {
+        let mut a = PagedKvAllocator::new(4, 16);
+        a.admit(1, 48, 16).unwrap(); // 4 pages
+        assert!(!a.can_admit(1, 1));
+        assert!(a.admit(2, 1, 1).is_err());
+        a.release(1).unwrap();
+        assert!(a.can_admit(1, 1));
+    }
+
+    #[test]
+    fn double_admit_and_unknown_release_rejected() {
+        let mut a = PagedKvAllocator::new(8, 16);
+        a.admit(5, 10, 10).unwrap();
+        assert!(a.admit(5, 10, 10).is_err());
+        assert!(a.release(99).is_err());
+    }
+
+    #[test]
+    fn never_double_allocates_property() {
+        // random admit/release storm: at all times, pages across tables
+        // are disjoint and free+used == total
+        let mut rng = Rng::new(17);
+        let mut a = PagedKvAllocator::new(64, 8);
+        let mut live: Vec<u64> = Vec::new();
+        for i in 0..500u64 {
+            if !live.is_empty() && rng.gen_bool(0.45) {
+                let idx = rng.gen_range(0, live.len() as u64) as usize;
+                let id = live.swap_remove(idx);
+                a.release(id).unwrap();
+            } else {
+                let toks = rng.gen_range(1, 100) as usize;
+                if a.can_admit(toks, 8) {
+                    a.admit(i, toks, 8).unwrap();
+                    live.push(i);
+                }
+            }
+            // invariants
+            let mut seen = HashSet::new();
+            for id in &live {
+                for p in a.page_table(*id).unwrap() {
+                    assert!(seen.insert(*p), "page {p} double-allocated");
+                    assert!(*p < 64);
+                }
+            }
+            assert_eq!(seen.len() + a.free_pages(), 64);
+        }
+    }
+
+    #[test]
+    fn frees_are_complete_after_storm() {
+        let mut rng = Rng::new(23);
+        let mut a = PagedKvAllocator::new(32, 16);
+        let mut live = Vec::new();
+        for i in 0..200u64 {
+            let toks = rng.gen_range(1, 64) as usize;
+            if a.can_admit(toks, 4) {
+                a.admit(i, toks, 4).unwrap();
+                live.push(i);
+            }
+            if live.len() > 3 {
+                a.release(live.remove(0)).unwrap();
+            }
+        }
+        for id in live {
+            a.release(id).unwrap();
+        }
+        assert_eq!(a.free_pages(), 32);
+        assert_eq!(a.active_requests(), 0);
+    }
+
+    #[test]
+    fn peak_tracking() {
+        let mut a = PagedKvAllocator::new(8, 16);
+        a.admit(1, 64, 0).unwrap(); // 4 pages
+        a.admit(2, 32, 0).unwrap(); // 2 pages
+        a.release(1).unwrap();
+        assert_eq!(a.peak_used, 6);
+    }
+}

@@ -1,0 +1,217 @@
+//! ShareGPT-like serving workload (Table 4 / Figure 5 setup).
+//!
+//! The paper uses ShareGPT prompts with max input 1024 (7B) / 1800 (70B)
+//! and max output 256.  ShareGPT's published length statistics are
+//! roughly lognormal; we match that shape, clipped to the paper's maxima,
+//! with Poisson arrivals at a configurable request rate.
+
+use crate::util::rng::Rng;
+
+/// One inference request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    /// Arrival time (seconds since workload start).
+    pub arrival_s: f64,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+}
+
+/// Completion record with the latency metrics of Table 4.
+#[derive(Clone, Debug)]
+pub struct RequestOutcome {
+    pub id: u64,
+    pub arrival_s: f64,
+    /// Time to first token (seconds).
+    pub ttft_s: f64,
+    /// Mean time per output token after the first (seconds).
+    pub tpot_s: f64,
+    pub output_tokens: usize,
+    pub finish_s: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct WorkloadOptions {
+    pub num_requests: usize,
+    /// Mean requests/second (Poisson arrivals); f64::INFINITY = all at t=0.
+    pub request_rate: f64,
+    pub max_input_len: usize,
+    pub max_output_len: usize,
+    pub vocab: usize,
+    pub seed: u64,
+}
+
+impl Default for WorkloadOptions {
+    fn default() -> Self {
+        WorkloadOptions {
+            num_requests: 32,
+            request_rate: 4.0,
+            max_input_len: 120,
+            max_output_len: 32,
+            vocab: 2048,
+            seed: 0,
+        }
+    }
+}
+
+/// The generated workload.
+pub struct Workload {
+    pub requests: Vec<Request>,
+    pub opts: WorkloadOptions,
+}
+
+impl Workload {
+    pub fn sharegpt_like(opts: WorkloadOptions) -> Self {
+        let mut rng = Rng::new(opts.seed ^ 0x5EA6);
+        let mut t = 0.0f64;
+        let requests = (0..opts.num_requests)
+            .map(|i| {
+                if opts.request_rate.is_finite() {
+                    t += rng.exponential(opts.request_rate);
+                }
+                // ShareGPT-ish: lognormal prompt lengths (median ~ 25% of
+                // max), clipped to [4, max_input]
+                let mu = (opts.max_input_len as f64 * 0.25).ln();
+                let len = (rng.lognormal(mu, 0.8) as usize).clamp(4, opts.max_input_len);
+                let out_mu = (opts.max_output_len as f64 * 0.5).ln();
+                let out = (rng.lognormal(out_mu, 0.6) as usize).clamp(1, opts.max_output_len);
+                let prompt = (0..len)
+                    .map(|_| rng.gen_range(0, opts.vocab as u64) as i32)
+                    .collect();
+                Request {
+                    id: i as u64,
+                    arrival_s: if opts.request_rate.is_finite() { t } else { 0.0 },
+                    prompt,
+                    max_new_tokens: out,
+                }
+            })
+            .collect();
+        Workload { requests, opts }
+    }
+}
+
+/// Aggregate a set of outcomes into the Table-4 / Figure-5 metrics.
+#[derive(Clone, Debug)]
+pub struct LatencyStats {
+    pub n: usize,
+    pub mean_ttft_s: f64,
+    pub p99_ttft_s: f64,
+    pub mean_tpot_s: f64,
+    pub throughput_tok_s: f64,
+    pub makespan_s: f64,
+}
+
+pub fn aggregate(outcomes: &[RequestOutcome]) -> LatencyStats {
+    use crate::util::stats::percentile;
+    if outcomes.is_empty() {
+        return LatencyStats {
+            n: 0,
+            mean_ttft_s: f64::NAN,
+            p99_ttft_s: f64::NAN,
+            mean_tpot_s: f64::NAN,
+            throughput_tok_s: 0.0,
+            makespan_s: 0.0,
+        };
+    }
+    let ttfts: Vec<f64> = outcomes.iter().map(|o| o.ttft_s).collect();
+    let tpots: Vec<f64> = outcomes.iter().filter(|o| o.output_tokens > 1).map(|o| o.tpot_s).collect();
+    let total_tokens: usize = outcomes.iter().map(|o| o.output_tokens).sum();
+    let t0 = outcomes.iter().map(|o| o.arrival_s).fold(f64::INFINITY, f64::min);
+    let t1 = outcomes.iter().map(|o| o.finish_s).fold(0.0, f64::max);
+    LatencyStats {
+        n: outcomes.len(),
+        mean_ttft_s: ttfts.iter().sum::<f64>() / ttfts.len() as f64,
+        p99_ttft_s: percentile(&ttfts, 0.99),
+        mean_tpot_s: if tpots.is_empty() {
+            f64::NAN
+        } else {
+            tpots.iter().sum::<f64>() / tpots.len() as f64
+        },
+        throughput_tok_s: total_tokens as f64 / (t1 - t0).max(1e-9),
+        makespan_s: t1 - t0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lengths_respect_clips() {
+        let w = Workload::sharegpt_like(WorkloadOptions {
+            num_requests: 200,
+            max_input_len: 100,
+            max_output_len: 20,
+            ..Default::default()
+        });
+        for r in &w.requests {
+            assert!((4..=100).contains(&r.prompt.len()));
+            assert!((1..=20).contains(&r.max_new_tokens));
+        }
+    }
+
+    #[test]
+    fn arrivals_monotone_and_rate_matches() {
+        let w = Workload::sharegpt_like(WorkloadOptions {
+            num_requests: 500,
+            request_rate: 10.0,
+            ..Default::default()
+        });
+        for pair in w.requests.windows(2) {
+            assert!(pair[0].arrival_s <= pair[1].arrival_s);
+        }
+        let span = w.requests.last().unwrap().arrival_s;
+        let rate = 500.0 / span;
+        assert!((rate - 10.0).abs() < 2.5, "empirical rate {rate}");
+    }
+
+    #[test]
+    fn infinite_rate_means_burst() {
+        let w = Workload::sharegpt_like(WorkloadOptions {
+            request_rate: f64::INFINITY,
+            ..Default::default()
+        });
+        assert!(w.requests.iter().all(|r| r.arrival_s == 0.0));
+    }
+
+    #[test]
+    fn length_distribution_is_skewed() {
+        // lognormal: mean > median (right skew), like real prompt data
+        let w = Workload::sharegpt_like(WorkloadOptions {
+            num_requests: 2000,
+            max_input_len: 1024,
+            ..Default::default()
+        });
+        let mut lens: Vec<usize> = w.requests.iter().map(|r| r.prompt.len()).collect();
+        lens.sort_unstable();
+        let median = lens[lens.len() / 2] as f64;
+        let mean = lens.iter().sum::<usize>() as f64 / lens.len() as f64;
+        assert!(mean > median, "mean {mean} median {median}");
+    }
+
+    #[test]
+    fn aggregate_computes_throughput() {
+        let outcomes = vec![
+            RequestOutcome {
+                id: 0,
+                arrival_s: 0.0,
+                ttft_s: 0.1,
+                tpot_s: 0.01,
+                output_tokens: 10,
+                finish_s: 1.0,
+            },
+            RequestOutcome {
+                id: 1,
+                arrival_s: 0.0,
+                ttft_s: 0.3,
+                tpot_s: 0.02,
+                output_tokens: 10,
+                finish_s: 2.0,
+            },
+        ];
+        let s = aggregate(&outcomes);
+        assert_eq!(s.n, 2);
+        assert!((s.mean_ttft_s - 0.2).abs() < 1e-9);
+        assert!((s.throughput_tok_s - 10.0).abs() < 1e-9);
+    }
+}

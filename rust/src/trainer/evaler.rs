@@ -1,0 +1,98 @@
+//! The evaler: periodic held-out evaluation during training.
+//!
+//! AXLearn's trainer composes child modules including evalers (§3's
+//! module tree); like everything else it is swappable by config.  Ours
+//! evaluates the forward-only `eval_loss` artifact on a held-out stream
+//! of the input pipeline (a different seed of the same corpus), so
+//! train/eval divergence — the classic overfitting probe — is observable
+//! from the Rust side with no Python.
+
+use anyhow::Result;
+
+use crate::runtime::TrainSession;
+
+use super::input::InputPipeline;
+
+/// One evaluation record.
+#[derive(Clone, Debug)]
+pub struct EvalRecord {
+    pub step: u64,
+    pub eval_loss: f64,
+    pub batches: usize,
+}
+
+/// Periodic evaluator over a held-out pipeline.
+pub struct Evaler {
+    pub every_n_steps: u64,
+    pub num_batches: usize,
+    pub records: Vec<EvalRecord>,
+}
+
+impl Evaler {
+    pub fn new(every_n_steps: u64, num_batches: usize) -> Self {
+        Evaler {
+            every_n_steps,
+            num_batches: num_batches.max(1),
+            records: Vec::new(),
+        }
+    }
+
+    /// Run an eval sweep if the step is on the cadence. Returns the eval
+    /// loss when one ran.
+    pub fn maybe_eval(
+        &mut self,
+        step: u64,
+        session: &TrainSession,
+        heldout: &mut dyn InputPipeline,
+    ) -> Result<Option<f64>> {
+        if self.every_n_steps == 0 || step == 0 || step % self.every_n_steps != 0 {
+            return Ok(None);
+        }
+        let mut total = 0.0f64;
+        for _ in 0..self.num_batches {
+            let (tok, tgt) = heldout.next_batch();
+            total += session.eval_loss(&tok, &tgt)? as f64;
+        }
+        let mean = total / self.num_batches as f64;
+        self.records.push(EvalRecord {
+            step,
+            eval_loss: mean,
+            batches: self.num_batches,
+        });
+        Ok(Some(mean))
+    }
+
+    pub fn best(&self) -> Option<&EvalRecord> {
+        self.records
+            .iter()
+            .min_by(|a, b| a.eval_loss.partial_cmp(&b.eval_loss).unwrap())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cadence_gating_without_session() {
+        // cadence logic is session-independent: verify the gate directly
+        let e = Evaler::new(10, 2);
+        for step in [1u64, 5, 9, 11, 15] {
+            assert_ne!(step % e.every_n_steps, 0);
+        }
+        assert_eq!(20 % e.every_n_steps, 0);
+    }
+
+    #[test]
+    fn best_picks_minimum() {
+        let mut e = Evaler::new(1, 1);
+        for (s, l) in [(1u64, 3.0f64), (2, 2.1), (3, 2.7)] {
+            e.records.push(EvalRecord {
+                step: s,
+                eval_loss: l,
+                batches: 1,
+            });
+        }
+        assert_eq!(e.best().unwrap().step, 2);
+    }
+}

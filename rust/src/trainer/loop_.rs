@@ -1,0 +1,220 @@
+//! The training loop: the root module's run method.
+//!
+//! Wires together the AOT session, input pipeline, checkpointer,
+//! watchdog, SDC checker, goodput tracker, and the InvocationContext —
+//! each swappable, none aware of the others' internals (§3, §4.3).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::checkpoint::format::CheckpointData;
+use crate::checkpoint::saver::{Checkpointer, CheckpointerOptions};
+use crate::module::InvocationContext;
+use crate::monitor::goodput::{EventKind, GoodputTracker};
+use crate::monitor::watchdog::{Watchdog, WatchdogAction, WatchdogOptions};
+use crate::runtime::{Manifest, RuntimeClient, TrainSession};
+
+use super::input::InputPipeline;
+use super::metrics::{MetricsLog, StepRecord};
+
+/// Options for a local training run.
+#[derive(Clone, Debug)]
+pub struct TrainerOptions {
+    /// Artifact family ("tiny", "small", "small_moe", "base100m", ...).
+    pub artifact: String,
+    pub max_steps: u64,
+    pub seed: i32,
+    pub log_every: u64,
+    /// Checkpoint every n steps (0 = disabled).
+    pub checkpoint_every: u64,
+    pub checkpoint: CheckpointerOptions,
+    /// Run an SDC sweep every n steps (0 = disabled).
+    pub sdc_every: u64,
+    /// Evaluate on a held-out stream every n steps (0 = disabled).
+    pub eval_every: u64,
+    /// Resume from the latest checkpoint if present.
+    pub resume: bool,
+    /// Record phase timings (on-demand profiler, §5).
+    pub profile: bool,
+}
+
+impl Default for TrainerOptions {
+    fn default() -> Self {
+        TrainerOptions {
+            artifact: "tiny".into(),
+            max_steps: 20,
+            seed: 0,
+            log_every: 10,
+            checkpoint_every: 0,
+            checkpoint: CheckpointerOptions::default(),
+            sdc_every: 0,
+            eval_every: 0,
+            resume: false,
+            profile: false,
+        }
+    }
+}
+
+/// Result of a training run.
+pub struct TrainOutcome {
+    pub metrics: MetricsLog,
+    pub goodput: GoodputTracker,
+    pub evals: Vec<super::evaler::EvalRecord>,
+    pub profile_report: Option<String>,
+    pub final_step: u64,
+    pub first_loss: f32,
+    pub final_loss: f32,
+    pub watchdog_trips: u64,
+    pub resumed_from: Option<u64>,
+}
+
+/// Run training locally on the CPU PJRT client.
+pub fn train(
+    client: Arc<RuntimeClient>,
+    manifest: &Manifest,
+    input: &mut dyn InputPipeline,
+    opts: &TrainerOptions,
+) -> Result<TrainOutcome> {
+    let mut ctx = InvocationContext::new("trainer", opts.seed as u64);
+    let mut session = TrainSession::open(client, manifest, &opts.artifact)
+        .with_context(|| format!("opening train session {:?}", opts.artifact))?;
+    anyhow::ensure!(
+        input.batch() == session.batch && input.seq() == session.seq,
+        "input pipeline {}x{} does not match artifact {}x{}",
+        input.batch(),
+        input.seq(),
+        session.batch,
+        session.seq
+    );
+
+    let mut goodput = GoodputTracker::new();
+    let wall0 = Instant::now();
+    let now = |w: &Instant| w.elapsed().as_secs_f64();
+    goodput.record(EventKind::JobStart, 0.0, 0);
+
+    let mut checkpointer = if opts.checkpoint_every > 0 {
+        Some(Checkpointer::new(opts.checkpoint.clone())?)
+    } else {
+        None
+    };
+
+    // init or resume
+    let mut resumed_from = None;
+    let restored = match (&checkpointer, opts.resume) {
+        (Some(c), true) => c.restore_latest()?,
+        _ => None,
+    };
+    match restored {
+        Some(data) => {
+            let step = data.step;
+            session.restore_from_host(&data.tensors, step)?;
+            resumed_from = Some(step);
+        }
+        None => session.init(opts.seed)?,
+    }
+    goodput.record(EventKind::CompilationDone, now(&wall0), 0);
+    goodput.record(EventKind::RestartDone, now(&wall0), session.steps_done);
+
+    let mut metrics = MetricsLog::new();
+    let mut watchdog = Watchdog::new(WatchdogOptions::default());
+    let mut profiler = crate::monitor::Profiler::new(opts.profile);
+    let mut evaler = super::evaler::Evaler::new(opts.eval_every, 2);
+    // held-out stream: same corpus family, different seed
+    let mut heldout = super::input::SyntheticCorpus::new(
+        super::input::CorpusKind::Markov,
+        session.artifact.hyper.get("vocab_size").copied().unwrap_or(256) as usize,
+        session.batch,
+        session.seq,
+        (opts.seed as u64) ^ 0xE7A1,
+    );
+    let mut sdc = crate::monitor::sdc::SdcChecker::new(2, false);
+    let tokens_per_step = (session.batch * session.seq) as u64;
+    let mut first_loss = f32::NAN;
+    let mut final_loss = f32::NAN;
+
+    while session.steps_done < opts.max_steps {
+        profiler.begin("train");
+        let (tokens, targets) = profiler.scope("input", || input.next_batch());
+        let t0 = Instant::now();
+        profiler.begin("step");
+        let loss = ctx.scope("model", |_| session.step(&tokens, &targets))?;
+        profiler.end();
+        let dt = t0.elapsed().as_secs_f64();
+        let step = session.steps_done;
+        if first_loss.is_nan() {
+            first_loss = loss;
+        }
+        final_loss = loss;
+        ctx.scalar("loss", loss as f64);
+        ctx.counter("tokens", tokens_per_step as f64);
+        goodput.record(EventKind::StepDone, now(&wall0), step);
+        metrics.push(StepRecord {
+            step,
+            loss,
+            step_time_s: dt,
+            tokens: tokens_per_step,
+        });
+
+        match watchdog.observe_step(dt, 1.0) {
+            WatchdogAction::Ok => {}
+            action => {
+                // local runs cannot actually hang-restart; record and go on
+                ctx.counter("watchdog_trips", 1.0);
+                let _ = action;
+            }
+        }
+
+        if opts.sdc_every > 0 && step % opts.sdc_every == 0 {
+            // Re-run the eval loss twice on frozen inputs: results must be
+            // bit-identical on a healthy host.
+            if session.eval_loss(&tokens, &targets).is_ok() {
+                let report = sdc.sweep(|_| Ok(vec![session.eval_loss(&tokens, &targets)?]))?;
+                anyhow::ensure!(report.healthy(), "SDC detected at step {step}: {report:?}");
+            }
+        }
+
+        if let Some(loss) = evaler.maybe_eval(step, &session, &mut heldout)? {
+            ctx.scalar("eval_loss", loss);
+        }
+
+        if let Some(c) = checkpointer.as_mut() {
+            if step > 0 && step % opts.checkpoint_every == 0 {
+                profiler.begin("checkpoint");
+                let data = CheckpointData {
+                    step,
+                    tensors: session.state_to_host()?,
+                };
+                c.save(data)?;
+                profiler.end();
+                goodput.record(EventKind::CheckpointDurable, now(&wall0), step);
+            }
+        }
+        profiler.end(); // train
+    }
+
+    // final checkpoint + flush
+    if let Some(c) = checkpointer.as_mut() {
+        let data = CheckpointData {
+            step: session.steps_done,
+            tensors: session.state_to_host()?,
+        };
+        c.save(data)?;
+        c.flush()?;
+        goodput.record(EventKind::CheckpointDurable, now(&wall0), session.steps_done);
+    }
+    goodput.record(EventKind::JobEnd, now(&wall0), session.steps_done);
+
+    Ok(TrainOutcome {
+        metrics,
+        goodput,
+        evals: evaler.records,
+        profile_report: if opts.profile { Some(profiler.report()) } else { None },
+        final_step: session.steps_done,
+        first_loss,
+        final_loss,
+        watchdog_trips: watchdog.trips,
+        resumed_from,
+    })
+}

@@ -1,0 +1,156 @@
+//! Step metrics and the summary log (what the paper's monitoring layer
+//! records per step; consumed by the watchdog and goodput tracker).
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::util::json::Json;
+
+/// One training step's record.
+#[derive(Clone, Debug)]
+pub struct StepRecord {
+    pub step: u64,
+    pub loss: f32,
+    pub step_time_s: f64,
+    pub tokens: u64,
+}
+
+/// In-memory metrics log with CSV/JSON export.
+#[derive(Default)]
+pub struct MetricsLog {
+    pub records: Vec<StepRecord>,
+}
+
+impl MetricsLog {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, r: StepRecord) {
+        self.records.push(r);
+    }
+
+    pub fn last_loss(&self) -> Option<f32> {
+        self.records.last().map(|r| r.loss)
+    }
+
+    /// Mean loss over the last `n` steps.
+    pub fn mean_loss_tail(&self, n: usize) -> Option<f64> {
+        if self.records.is_empty() {
+            return None;
+        }
+        let tail = &self.records[self.records.len().saturating_sub(n)..];
+        Some(tail.iter().map(|r| r.loss as f64).sum::<f64>() / tail.len() as f64)
+    }
+
+    pub fn tokens_per_second(&self) -> f64 {
+        let total_tokens: u64 = self.records.iter().map(|r| r.tokens).sum();
+        let total_time: f64 = self.records.iter().map(|r| r.step_time_s).sum();
+        if total_time > 0.0 {
+            total_tokens as f64 / total_time
+        } else {
+            0.0
+        }
+    }
+
+    /// Write a loss-curve CSV (step,loss,step_time_s).
+    pub fn write_csv(&self, path: &Path) -> std::io::Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "step,loss,step_time_s,tokens")?;
+        for r in &self.records {
+            writeln!(f, "{},{},{:.6},{}", r.step, r.loss, r.step_time_s, r.tokens)?;
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.records
+                .iter()
+                .map(|r| {
+                    Json::obj(vec![
+                        ("step", Json::num(r.step as f64)),
+                        ("loss", Json::num(r.loss as f64)),
+                        ("step_time_s", Json::num(r.step_time_s)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+
+    /// Render a terminal sparkline of the loss curve (for example output).
+    pub fn sparkline(&self, width: usize) -> String {
+        if self.records.is_empty() {
+            return String::new();
+        }
+        const BARS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+        let losses: Vec<f64> = self.records.iter().map(|r| r.loss as f64).collect();
+        let chunk = losses.len().div_ceil(width);
+        let pts: Vec<f64> = losses
+            .chunks(chunk)
+            .map(|c| c.iter().sum::<f64>() / c.len() as f64)
+            .collect();
+        let lo = pts.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = pts.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        pts.iter()
+            .map(|&x| {
+                let t = if hi > lo { (x - lo) / (hi - lo) } else { 0.0 };
+                BARS[((t * 7.0).round() as usize).min(7)]
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn log_with(losses: &[f32]) -> MetricsLog {
+        let mut m = MetricsLog::new();
+        for (i, &l) in losses.iter().enumerate() {
+            m.push(StepRecord {
+                step: i as u64,
+                loss: l,
+                step_time_s: 0.1,
+                tokens: 64,
+            });
+        }
+        m
+    }
+
+    #[test]
+    fn tail_mean() {
+        let m = log_with(&[4.0, 3.0, 2.0, 1.0]);
+        assert_eq!(m.mean_loss_tail(2).unwrap(), 1.5);
+        assert_eq!(m.mean_loss_tail(100).unwrap(), 2.5);
+        assert!(MetricsLog::new().mean_loss_tail(2).is_none());
+    }
+
+    #[test]
+    fn throughput() {
+        let m = log_with(&[1.0; 10]);
+        assert!((m.tokens_per_second() - 640.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn csv_roundtrip_shape(){
+        let m = log_with(&[2.0, 1.0]);
+        let dir = std::env::temp_dir().join("axlearn_test_metrics");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("loss.csv");
+        m.write_csv(&p).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(text.lines().count(), 3);
+        assert!(text.starts_with("step,loss"));
+    }
+
+    #[test]
+    fn sparkline_monotone_descent() {
+        let m = log_with(&[8.0, 6.0, 4.0, 2.0, 1.0, 0.5, 0.4, 0.3]);
+        let s = m.sparkline(8);
+        assert_eq!(s.chars().count(), 8);
+        let first = s.chars().next().unwrap();
+        let last = s.chars().last().unwrap();
+        assert!(first as u32 > last as u32, "{s}");
+    }
+}

@@ -1,0 +1,17 @@
+//! The trainer: AXLearn's root module (§3).
+//!
+//! Composes the input pipeline, the AOT-compiled model (via
+//! [`crate::runtime::TrainSession`]), the checkpointer, the watchdog, and
+//! the summary writer — all of them swappable by config, which is the
+//! paper's core claim ("any module is replaceable, including the input
+//! pipeline, checkpointer, trainer loop").
+
+pub mod evaler;
+pub mod input;
+pub mod loop_;
+pub mod metrics;
+
+pub use evaler::Evaler;
+pub use input::{InputPipeline, SyntheticCorpus};
+pub use loop_::{train, TrainOutcome, TrainerOptions};
+pub use metrics::{MetricsLog, StepRecord};

@@ -1,0 +1,11 @@
+//! Small self-contained utilities.
+//!
+//! The build image is offline and the vendored crate set does not include
+//! `rand`, `serde`, `criterion`, or a thread-pool crate, so this module
+//! carries the minimal replacements the rest of the crate needs:
+//! deterministic PRNGs ([`rng`]), summary statistics and a micro-bench
+//! harness ([`stats`]), and a tiny JSON writer ([`json`]).
+
+pub mod json;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,173 @@
+//! Summary statistics and the micro-benchmark harness used by
+//! `rust/benches/*` (criterion is unavailable offline; this is the small
+//! replacement).
+
+use std::time::{Duration, Instant};
+
+/// Basic summary of a sample.
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+}
+
+impl Summary {
+    pub fn of(samples: &[f64]) -> Summary {
+        if samples.is_empty() {
+            return Summary::default();
+        }
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: sorted[0],
+            max: sorted[n - 1],
+            p50: percentile_sorted(&sorted, 0.50),
+            p90: percentile_sorted(&sorted, 0.90),
+            p99: percentile_sorted(&sorted, 0.99),
+        }
+    }
+}
+
+/// Percentile of an already-sorted sample (linear interpolation).
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        sorted[lo] + (pos - lo as f64) * (sorted[hi] - sorted[lo])
+    }
+}
+
+/// Percentile of an unsorted sample.
+pub fn percentile(samples: &[f64], q: f64) -> f64 {
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&sorted, q)
+}
+
+/// Result of a [`bench`] run.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    /// Per-iteration wall time.
+    pub time: Summary,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>8} iters  mean {:>12}  p50 {:>12}  p99 {:>12}",
+            self.name,
+            self.iters,
+            fmt_duration(self.time.mean),
+            fmt_duration(self.time.p50),
+            fmt_duration(self.time.p99),
+        )
+    }
+}
+
+pub fn fmt_duration(seconds: f64) -> String {
+    if seconds < 1e-6 {
+        format!("{:.1} ns", seconds * 1e9)
+    } else if seconds < 1e-3 {
+        format!("{:.2} µs", seconds * 1e6)
+    } else if seconds < 1.0 {
+        format!("{:.2} ms", seconds * 1e3)
+    } else {
+        format!("{:.3} s", seconds)
+    }
+}
+
+/// Minimal criterion replacement: warm up, then time `iters` calls of `f`.
+pub fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> BenchResult {
+    // warmup
+    for _ in 0..iters.min(3) {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        time: Summary::of(&samples),
+    }
+}
+
+/// Time a single closure.
+pub fn time_it<T, F: FnOnce() -> T>(f: F) -> (T, Duration) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_of_constant() {
+        let s = Summary::of(&[2.0; 10]);
+        assert_eq!(s.mean, 2.0);
+        assert_eq!(s.std, 0.0);
+        assert_eq!(s.p50, 2.0);
+    }
+
+    #[test]
+    fn summary_percentiles_ordered() {
+        let xs: Vec<f64> = (0..1000).map(|i| i as f64).collect();
+        let s = Summary::of(&xs);
+        assert!(s.p50 < s.p90 && s.p90 < s.p99);
+        assert!((s.p50 - 499.5).abs() < 1.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [0.0, 10.0];
+        assert!((percentile(&xs, 0.5) - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_summary_is_default() {
+        let s = Summary::of(&[]);
+        assert_eq!(s.n, 0);
+    }
+
+    #[test]
+    fn bench_runs() {
+        let mut count = 0;
+        let r = bench("noop", 5, || count += 1);
+        assert_eq!(r.iters, 5);
+        assert!(count >= 5);
+        assert!(r.time.mean >= 0.0);
+    }
+
+    #[test]
+    fn fmt_duration_scales() {
+        assert!(fmt_duration(2.5e-9).contains("ns"));
+        assert!(fmt_duration(2.5e-6).contains("µs"));
+        assert!(fmt_duration(2.5e-3).contains("ms"));
+        assert!(fmt_duration(2.5).contains(" s"));
+    }
+}

@@ -1,0 +1,70 @@
+//! Golden-configuration tests (paper §7.3): preset trainer configs are
+//! serialized and committed under rust/golden/; any change produces a
+//! reviewable diff here.  Regenerate with UPDATE_GOLDEN=1 cargo test.
+
+use axlearn::config::golden::to_golden_string;
+use axlearn::config::registry::trainer_for_preset;
+
+fn check(preset: &str) {
+    let path = axlearn::repo_root().join(format!("rust/golden/{preset}.golden"));
+    let actual = to_golden_string(&trainer_for_preset(preset));
+    if std::env::var("UPDATE_GOLDEN").is_ok() || !path.exists() {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, &actual).unwrap();
+        return;
+    }
+    let expected = std::fs::read_to_string(&path).unwrap();
+    if actual != expected {
+        // a config change: show the reviewable diff, as the paper intends
+        let (only_old, only_new) = axlearn::config::config_diff(
+            &trainer_for_preset(preset),
+            &trainer_for_preset(preset),
+        );
+        panic!(
+            "golden config {preset} changed!\n--- committed\n+++ current\n{:?}\n{:?}\n\
+             (run UPDATE_GOLDEN=1 cargo test to accept)",
+            only_old, only_new
+        );
+    }
+}
+
+#[test]
+fn tiny_golden() { check("tiny"); }
+
+#[test]
+fn small_golden() { check("small"); }
+
+#[test]
+fn base100m_golden() { check("base100m"); }
+
+#[test]
+fn serve_golden() { check("serve"); }
+
+#[test]
+fn golden_files_match_current_presets() {
+    // after regeneration, files must exist and parse
+    for preset in ["tiny", "small", "base100m", "serve"] {
+        let path = axlearn::repo_root().join(format!("rust/golden/{preset}.golden"));
+        if path.exists() {
+            let text = std::fs::read_to_string(&path).unwrap();
+            let entries = axlearn::config::golden::parse_golden(&text);
+            assert!(entries.iter().any(|(p, v)| p == "root" && v == "<Trainer>"));
+        }
+    }
+}
+
+#[test]
+fn moe_swap_diff_is_localized() {
+    use axlearn::config::registry::default_config;
+    use axlearn::config::{config_diff, replace_config};
+    let base = trainer_for_preset("small");
+    let mut moe = base.clone();
+    replace_config(&mut moe, "FeedForward", &|old| {
+        default_config("MoE").with("input_dim", old.get("input_dim").unwrap().clone())
+    });
+    let (a, b) = config_diff(&base, &moe);
+    assert!(!b.is_empty());
+    for line in a.iter().chain(b.iter()) {
+        assert!(line.contains("feed_forward"), "leak: {line}");
+    }
+}

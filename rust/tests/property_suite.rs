@@ -1,0 +1,101 @@
+//! Cross-module property tests (hand-rolled generators over util::rng —
+//! proptest is unavailable offline).
+
+use axlearn::perfmodel::chips;
+use axlearn::perfmodel::estimator::{estimate_step, StepSpec, SystemProfile};
+use axlearn::perfmodel::{Strategy, TransformerShape};
+use axlearn::runtime::Manifest;
+use axlearn::util::rng::Rng;
+
+fn spec(chips_n: usize, batch: usize, seq: usize) -> StepSpec {
+    StepSpec {
+        shape: TransformerShape::llama2_7b(),
+        strategy: Strategy::fsdp_only(chips_n),
+        global_batch: batch,
+        seq_len: seq,
+        quantization: "none".into(),
+        remat_policy: "auto".into(),
+    }
+}
+
+#[test]
+fn estimator_monotone_in_chips() {
+    // more chips never slows the step down (same workload)
+    let prof = SystemProfile::axlearn();
+    for chip in [chips::h100(), chips::tpu_v5p()] {
+        let mut prev = f64::INFINITY;
+        for n in [64usize, 128, 256, 512, 1024] {
+            let e = estimate_step(&spec(n, 1024, 4096), &chip, &prof).unwrap();
+            assert!(
+                e.step_time_s <= prev * 1.001,
+                "{}: {n} chips regressed: {} > {prev}",
+                chip.name,
+                e.step_time_s
+            );
+            prev = e.step_time_s;
+        }
+    }
+}
+
+#[test]
+fn estimator_monotone_in_batch() {
+    let prof = SystemProfile::axlearn();
+    let mut prev = 0.0f64;
+    for batch in [256usize, 512, 1024, 2048] {
+        let e = estimate_step(&spec(256, batch, 4096), &chips::tpu_v5p(), &prof).unwrap();
+        assert!(e.step_time_s >= prev, "batch {batch}");
+        prev = e.step_time_s;
+    }
+}
+
+#[test]
+fn estimator_mfu_bounded_random_configs() {
+    let mut rng = Rng::new(31);
+    let prof = SystemProfile::axlearn();
+    let mut checked = 0;
+    for _ in 0..60 {
+        let chips_n = 1usize << rng.gen_range(6, 12); // 64..2048
+        let batch = (chips_n * rng.gen_range(1, 5) as usize).max(256);
+        let seq = [2048usize, 4096, 8192][rng.gen_range(0, 3) as usize];
+        let chip = [chips::h100(), chips::tpu_v5p(), chips::trainium2()]
+            [rng.gen_range(0, 3) as usize]
+            .clone();
+        if let Ok(e) = estimate_step(&spec(chips_n, batch, seq), &chip, &prof) {
+            assert!(e.mfu > 0.0 && e.mfu < 1.0, "mfu {} out of physical range", e.mfu);
+            assert!(e.hbm_used_bytes <= chip.hbm_bytes, "memory check must hold");
+            checked += 1;
+        }
+    }
+    assert!(checked > 20, "too few feasible random configs ({checked})");
+}
+
+#[test]
+fn manifest_parser_never_panics_on_corrupted_input() {
+    // fuzz: random mutations of a valid manifest must error, not panic
+    let valid = std::fs::read_to_string(axlearn::artifacts_dir().join("manifest.txt")).unwrap();
+    let mut rng = Rng::new(7);
+    let bytes: Vec<u8> = valid.bytes().collect();
+    for _ in 0..200 {
+        let mut corrupted = bytes.clone();
+        for _ in 0..rng.gen_range(1, 20) {
+            let i = rng.gen_range(0, corrupted.len() as u64) as usize;
+            corrupted[i] = rng.gen_range(32, 127) as u8;
+        }
+        if let Ok(text) = String::from_utf8(corrupted) {
+            let _ = Manifest::parse(&text); // Ok or Err — never panic
+        }
+    }
+}
+
+#[test]
+fn golden_serialization_is_injective_over_presets() {
+    use axlearn::config::golden::to_golden_string;
+    use axlearn::config::registry::trainer_for_preset;
+    let mut seen = std::collections::HashSet::new();
+    for p in ["tiny", "small", "base100m", "serve"] {
+        assert!(
+            seen.insert(to_golden_string(&trainer_for_preset(p))),
+            "{p} collided with another preset's golden form"
+        );
+    }
+}

@@ -1,0 +1,84 @@
+//! End-to-end smoke: AOT artifacts -> PJRT -> train/serve sessions.
+use std::sync::Arc;
+
+use axlearn::runtime::{Manifest, RuntimeClient, ServeSession, TrainSession};
+
+fn setup() -> (Arc<RuntimeClient>, Manifest) {
+    let client = Arc::new(RuntimeClient::cpu().unwrap());
+    let manifest = Manifest::load(&axlearn::artifacts_dir()).unwrap();
+    (client, manifest)
+}
+
+#[test]
+fn tiny_train_loss_decreases() {
+    let (client, manifest) = setup();
+    let mut s = TrainSession::open(client, &manifest, "tiny").unwrap();
+    s.init(0).unwrap();
+    let mut corpus = axlearn::trainer::SyntheticCorpus::new(
+        axlearn::trainer::input::CorpusKind::Markov, 256, s.batch, s.seq, 0);
+    use axlearn::trainer::InputPipeline;
+    // fixed batch: the loss must descend steadily if fwd+bwd+AdamW are
+    // all correct through the artifact path
+    let (tok, tgt) = corpus.next_batch();
+    let mut first = None;
+    let mut last = 0f32;
+    for _ in 0..25 {
+        last = s.step(&tok, &tgt).unwrap();
+        first.get_or_insert(last);
+    }
+    let first = first.unwrap();
+    assert!(last < first - 0.05, "loss {first} -> {last}");
+    assert!(first < 7.0 && first > 3.0, "init loss ~ln(256): {first}");
+}
+
+#[test]
+fn serve_prefill_decode_roundtrip() {
+    let (client, manifest) = setup();
+    let s = ServeSession::open(client, &manifest, "serve").unwrap();
+    let bucket = 128usize;
+    let mut tokens = vec![0i32; bucket];
+    for (i, t) in tokens.iter_mut().enumerate().take(10) { *t = (i as i32 * 37) % 2048; }
+    let (next, cache) = s.prefill(&tokens, 1, bucket, &[10]).unwrap();
+    assert_eq!(next.len(), 1);
+    assert!((0..2048).contains(&next[0]));
+    let (next2, _cache) = s.decode(cache, &[10], &next).unwrap();
+    assert!((0..2048).contains(&next2[0]));
+}
+
+#[test]
+fn pallas_flash_artifact_matches_ref_through_pjrt() {
+    // The CPU train/serve artifacts use the XLA-fused attention (backend
+    // dispatch); this artifact carries the interpret-mode Pallas flash
+    // kernel in its HLO.  Same params + batch must give the same loss —
+    // validating the L1 kernel through the full PJRT path, not just jax.
+    let (client, manifest) = setup();
+    let mut s = TrainSession::open(client.clone(), &manifest, "tiny").unwrap();
+    s.init(3).unwrap();
+    let mut corpus = axlearn::trainer::SyntheticCorpus::new(
+        axlearn::trainer::input::CorpusKind::Markov, 256, s.batch, s.seq, 5);
+    use axlearn::trainer::InputPipeline;
+    let (tok, tgt) = corpus.next_batch();
+    let ref_loss = s.eval_loss(&tok, &tgt).unwrap();
+
+    // run the flash artifact on the same params
+    let art = manifest.get("tiny_flash_eval_loss").unwrap();
+    let exe = client.load(art, &manifest.dir).unwrap();
+    let state = s.state_to_host().unwrap();
+    let n = art.inputs.len() - 2; // params..., tokens, targets
+    let mut args: Vec<xla::Literal> = Vec::new();
+    for ((_, data), spec) in state.iter().take(n).zip(&art.inputs) {
+        let dims: Vec<i64> = spec.shape.iter().map(|d| *d as i64).collect();
+        args.push(xla::Literal::vec1(data).reshape(&dims).unwrap());
+    }
+    args.push(xla::Literal::vec1(&tok).reshape(&[s.batch as i64, s.seq as i64]).unwrap());
+    args.push(xla::Literal::vec1(&tgt).reshape(&[s.batch as i64, s.seq as i64]).unwrap());
+    let refs: Vec<&xla::Literal> = args.iter().collect();
+    let out = exe.execute::<&xla::Literal>(&refs).unwrap();
+    let flash_loss = out[0][0].to_literal_sync().unwrap().to_tuple().unwrap()[0]
+        .to_vec::<f32>()
+        .unwrap()[0];
+    assert!(
+        (flash_loss - ref_loss).abs() < 2e-3,
+        "flash {flash_loss} vs ref {ref_loss}"
+    );
+}

@@ -1,0 +1,97 @@
+//! Serving integration: the continuous-batching engine vs the static
+//! baseline over real artifacts — the Table-4/Figure-5 mechanism checks.
+
+use std::sync::Arc;
+
+use axlearn::runtime::{Manifest, RuntimeClient, ServeSession};
+use axlearn::serving::baseline::{StaticBatchEngine, StaticBatchOptions};
+use axlearn::serving::{BatcherOptions, Engine, Workload, WorkloadOptions};
+
+fn setup() -> (Arc<RuntimeClient>, Manifest) {
+    let client = Arc::new(RuntimeClient::cpu().unwrap());
+    let manifest = Manifest::load(&axlearn::artifacts_dir()).unwrap();
+    (client, manifest)
+}
+
+fn workload(n: usize, rate: f64) -> Workload {
+    Workload::sharegpt_like(WorkloadOptions {
+        num_requests: n,
+        request_rate: rate,
+        max_input_len: 100,
+        max_output_len: 12,
+        vocab: 2048,
+        seed: 3,
+    })
+}
+
+#[test]
+fn engine_serves_all_requests() {
+    let (client, manifest) = setup();
+    let session = ServeSession::open(client, &manifest, "serve").unwrap();
+    let engine = Engine::new(session, BatcherOptions::default());
+    let w = workload(10, 4.0);
+    let report = engine.run(&w).unwrap();
+    assert_eq!(report.outcomes.len(), 10);
+    for o in &report.outcomes {
+        assert!(o.ttft_s > 0.0, "{o:?}");
+        assert!(o.output_tokens >= 1);
+        assert!(o.finish_s >= o.arrival_s);
+    }
+    assert!(report.mean_batch_occupancy > 0.0);
+}
+
+#[test]
+fn greedy_decode_is_deterministic_across_engines() {
+    // same params, same prompt => the baseline and the continuous engine
+    // must emit identical first tokens (they share the artifacts)
+    let (client, manifest) = setup();
+    let s1 = ServeSession::open(client.clone(), &manifest, "serve").unwrap();
+    let s2 = ServeSession::open(client, &manifest, "serve").unwrap();
+    let prompt: Vec<i32> = (0..40).map(|i| (i * 13) % 2048).collect();
+    let mut padded = vec![0i32; 128];
+    padded[..40].copy_from_slice(&prompt);
+    let (t1, _) = s1.prefill(&padded, 1, 128, &[40]).unwrap();
+    let (t2, _) = s2.prefill(&padded, 1, 128, &[40]).unwrap();
+    assert_eq!(t1, t2);
+}
+
+#[test]
+fn continuous_beats_static_on_ttft() {
+    // the §6/Table-4 mechanism: static batching waits for batchmates and
+    // pays compile stalls, so its TTFT must be worse
+    let (client, manifest) = setup();
+    let w = workload(12, 2.0);
+    let s1 = ServeSession::open(client.clone(), &manifest, "serve").unwrap();
+    let ax = Engine::new(
+        s1,
+        BatcherOptions {
+            slots: 8,
+            kv_pages: 2048,
+            page_tokens: 16,
+        },
+    )
+    .run(&w)
+    .unwrap();
+    let s2 = ServeSession::open(client, &manifest, "serve").unwrap();
+    let vl = StaticBatchEngine::new(s2, StaticBatchOptions::default())
+        .run(&w)
+        .unwrap();
+    assert_eq!(vl.outcomes.len(), ax.outcomes.len());
+    assert!(
+        vl.stats.mean_ttft_s > ax.stats.mean_ttft_s * 1.5,
+        "static {} vs continuous {}",
+        vl.stats.mean_ttft_s,
+        ax.stats.mean_ttft_s
+    );
+    assert!(vl.compile_stalls > 0);
+    assert!(vl.wasted_decode_rows > 0);
+}
+
+#[test]
+fn prefill_bucket_selection() {
+    let (client, manifest) = setup();
+    let s = ServeSession::open(client, &manifest, "serve").unwrap();
+    let buckets = s.prefill_buckets(1);
+    assert!(buckets.contains(&128) && buckets.contains(&256));
+    assert_eq!(s.decode_batches(), vec![1, 8]);
+}

@@ -1,0 +1,174 @@
+//! Trainer integration: real artifacts through the full loop —
+//! checkpoint/resume equivalence, MoE variant, watchdog/goodput wiring.
+
+use std::sync::Arc;
+
+use axlearn::checkpoint::CheckpointerOptions;
+use axlearn::runtime::{Manifest, RuntimeClient};
+use axlearn::trainer::input::CorpusKind;
+use axlearn::trainer::{train, SyntheticCorpus, TrainerOptions};
+
+fn setup() -> (Arc<RuntimeClient>, Manifest) {
+    let client = Arc::new(RuntimeClient::cpu().unwrap());
+    let manifest = Manifest::load(&axlearn::artifacts_dir()).unwrap();
+    (client, manifest)
+}
+
+fn corpus(manifest: &Manifest, artifact: &str, seed: u64) -> SyntheticCorpus {
+    let art = manifest.get(&format!("{artifact}_train_step")).unwrap();
+    SyntheticCorpus::new(
+        CorpusKind::Markov,
+        art.hyper["vocab_size"] as usize,
+        art.batch,
+        art.seq,
+        seed,
+    )
+}
+
+fn tmpdir(name: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("axl_itest_{name}_{}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    d
+}
+
+#[test]
+fn train_descends_and_reports_goodput() {
+    let (client, manifest) = setup();
+    let mut input = corpus(&manifest, "tiny", 0);
+    let opts = TrainerOptions {
+        artifact: "tiny".into(),
+        max_steps: 40,
+        ..Default::default()
+    };
+    let out = train(client, &manifest, &mut input, &opts).unwrap();
+    assert_eq!(out.final_step, 40);
+    // fresh batches + LR warmup: compare head/tail means, not endpoints
+    let head: f32 = out.metrics.records[..5].iter().map(|r| r.loss).sum::<f32>() / 5.0;
+    let tail: f32 = out.metrics.records[35..].iter().map(|r| r.loss).sum::<f32>() / 5.0;
+    assert!(tail < head, "head {head} tail {tail}");
+    assert!(out.goodput.wall_time() > 0.0);
+    assert_eq!(out.watchdog_trips, 0);
+}
+
+#[test]
+fn checkpoint_resume_is_bit_identical() {
+    let (client, manifest) = setup();
+    let ckpt_dir = tmpdir("resume");
+    let base = TrainerOptions {
+        artifact: "tiny".into(),
+        max_steps: 6,
+        checkpoint_every: 3,
+        checkpoint: CheckpointerOptions {
+            dir: ckpt_dir.clone(),
+            async_save: false,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    // run 1: 6 steps straight
+    let mut in1 = corpus(&manifest, "tiny", 0);
+    let full = train(client.clone(), &manifest, &mut in1, &base).unwrap();
+
+    // run 2: 3 steps, then resume for 3 more.  The input pipeline is
+    // deterministic, so we replay it to the checkpoint boundary.
+    let ckpt_dir2 = tmpdir("resume2");
+    let mut in2 = corpus(&manifest, "tiny", 0);
+    let first_half = TrainerOptions {
+        max_steps: 3,
+        checkpoint: CheckpointerOptions {
+            dir: ckpt_dir2.clone(),
+            async_save: false,
+            ..Default::default()
+        },
+        ..base.clone()
+    };
+    let h1 = train(client.clone(), &manifest, &mut in2, &first_half).unwrap();
+    assert_eq!(h1.final_step, 3);
+    let mut in3 = corpus(&manifest, "tiny", 0);
+    for _ in 0..3 {
+        use axlearn::trainer::InputPipeline;
+        in3.next_batch(); // replay consumed batches
+    }
+    let second_half = TrainerOptions {
+        max_steps: 6,
+        resume: true,
+        ..first_half
+    };
+    let h2 = train(client, &manifest, &mut in3, &second_half).unwrap();
+    assert_eq!(h2.resumed_from, Some(3));
+    assert_eq!(h2.final_step, 6);
+    // identical final loss (bit-exact state restore + same batches)
+    assert_eq!(full.final_loss, h2.final_loss, "resume diverged");
+    let _ = std::fs::remove_dir_all(ckpt_dir);
+    let _ = std::fs::remove_dir_all(ckpt_dir2);
+}
+
+#[test]
+fn moe_artifact_trains() {
+    let (client, manifest) = setup();
+    let mut input = corpus(&manifest, "tiny_moe", 1);
+    let opts = TrainerOptions {
+        artifact: "tiny_moe".into(),
+        max_steps: 30,
+        ..Default::default()
+    };
+    let out = train(client, &manifest, &mut input, &opts).unwrap();
+    let head: f32 = out.metrics.records[..5].iter().map(|r| r.loss).sum::<f32>() / 5.0;
+    let tail: f32 = out.metrics.records[25..].iter().map(|r| r.loss).sum::<f32>() / 5.0;
+    assert!(tail < head, "head {head} tail {tail}");
+    assert!(out.final_loss.is_finite());
+}
+
+#[test]
+fn sdc_sweep_passes_on_healthy_host() {
+    let (client, manifest) = setup();
+    let mut input = corpus(&manifest, "tiny", 2);
+    let opts = TrainerOptions {
+        artifact: "tiny".into(),
+        max_steps: 4,
+        sdc_every: 2,
+        ..Default::default()
+    };
+    // would Err if any eval_loss replay were not bit-identical
+    let out = train(client, &manifest, &mut input, &opts).unwrap();
+    assert_eq!(out.final_step, 4);
+}
+
+#[test]
+fn mismatched_input_shape_rejected() {
+    let (client, manifest) = setup();
+    let mut wrong = SyntheticCorpus::new(CorpusKind::Markov, 256, 1, 16, 0);
+    let opts = TrainerOptions {
+        artifact: "tiny".into(),
+        max_steps: 1,
+        ..Default::default()
+    };
+    let err = match train(client, &manifest, &mut wrong, &opts) {
+        Ok(_) => panic!("mismatched input accepted"),
+        Err(e) => e,
+    };
+    assert!(format!("{err:#}").contains("does not match"));
+}
+
+#[test]
+fn evaler_and_profiler_integration() {
+    let (client, manifest) = setup();
+    let mut input = corpus(&manifest, "tiny", 4);
+    let opts = TrainerOptions {
+        artifact: "tiny".into(),
+        max_steps: 12,
+        eval_every: 4,
+        profile: true,
+        ..Default::default()
+    };
+    let out = train(client, &manifest, &mut input, &opts).unwrap();
+    // eval ran at steps 4, 8, 12
+    assert_eq!(out.evals.len(), 3);
+    for e in &out.evals {
+        assert!(e.eval_loss.is_finite() && e.eval_loss > 0.0);
+    }
+    // profiler captured the phase hierarchy
+    let report = out.profile_report.unwrap();
+    assert!(report.contains("train/step"), "{report}");
+    assert!(report.contains("train/input"), "{report}");
+}
