@@ -9,7 +9,7 @@ use axlearn::config::registry::trainer_for_preset;
 use axlearn::perfmodel::chips;
 
 fn main() -> anyhow::Result<()> {
-    let cfg = trainer_for_preset("small"); // ONE experiment config
+    let cfg = trainer_for_preset("small")?; // ONE experiment config
     let rules = paper_appendix_a_rules();
     let targets = [
         ("tpu-v5e-256-4", 1024usize),

@@ -14,12 +14,12 @@ use axlearn::runtime::{Manifest, RuntimeClient};
 use axlearn::trainer::{train, SyntheticCorpus, TrainerOptions};
 
 fn main() -> anyhow::Result<()> {
-    let dense_cfg = trainer_for_preset("tiny");
+    let dense_cfg = trainer_for_preset("tiny")?;
 
     // ---- the paper's 10-line snippet, verbatim shape -------------------
     let mut moe_cfg = dense_cfg.clone();
     let n = replace_config(&mut moe_cfg, "FeedForward", &|old| {
-        default_config("MoE")
+        default_config("MoE").unwrap()
             .with("input_dim", old.get("input_dim").unwrap().clone())
             .with("hidden_dim", old.get("hidden_dim").unwrap().clone())
             .with("num_experts", Value::Int(4))

@@ -13,7 +13,7 @@ use axlearn::trainer::{train, SyntheticCorpus, TrainerOptions};
 
 fn main() -> anyhow::Result<()> {
     // 1. Compose a config (hierarchical, strictly encapsulated — §4.1).
-    let trainer_cfg = trainer_for_preset("tiny");
+    let trainer_cfg = trainer_for_preset("tiny")?;
     println!("-- golden serialization (first 12 lines) --");
     for line in axlearn::config::to_golden_lines(&trainer_cfg).iter().take(12) {
         println!("  {line}");

@@ -1,17 +1,17 @@
-//! Serving demo (§6 / Table 4 / Figure 5 mechanism): load the `serve`
-//! artifacts, run a ShareGPT-like workload through BOTH the continuous-
-//! batching engine and the vLLM-style static baseline, and report
-//! TTFT/TPOT/throughput side by side.
+//! Serving demo (§6 / Table 4 / Figure 5 mechanism): run a ShareGPT-like
+//! workload through BOTH the continuous-batching engine and the
+//! vLLM-style static baseline over the same `ComputeBackend` artifacts,
+//! then scale out to a routed multi-replica fleet with hot-swap.
 
 use std::sync::Arc;
 
-use axlearn::runtime::{Manifest, RuntimeClient, ServeSession};
+use axlearn::runtime::{ComputeBackend, Manifest, MockBackend, RuntimeClient, ServeSession};
 use axlearn::serving::baseline::{StaticBatchEngine, StaticBatchOptions};
-use axlearn::serving::{BatcherOptions, Engine, Workload, WorkloadOptions};
+use axlearn::serving::{
+    BatcherOptions, Engine, FailureEvent, ReplicaRouter, RouterOptions, Workload, WorkloadOptions,
+};
 
 fn main() -> anyhow::Result<()> {
-    let client = Arc::new(RuntimeClient::cpu()?);
-    let manifest = Manifest::load(&axlearn::artifacts_dir())?;
     let workload = Workload::sharegpt_like(WorkloadOptions {
         num_requests: 16,
         request_rate: 2.0,
@@ -25,15 +25,53 @@ fn main() -> anyhow::Result<()> {
         workload.requests.len()
     );
 
+    // ---- fleet demo (mock backend: no artifacts needed) ----------------
+    let fleet_workload = Workload::sharegpt_like(WorkloadOptions {
+        num_requests: 64,
+        request_rate: f64::INFINITY,
+        max_input_len: 120,
+        max_output_len: 24,
+        vocab: 2048,
+        seed: 7,
+    });
+    for replicas in [1usize, 2, 4] {
+        let backends: Vec<Box<dyn ComputeBackend>> = (0..replicas + 1)
+            .map(|_| Box::new(MockBackend::default()) as Box<dyn ComputeBackend>)
+            .collect();
+        let mut router = ReplicaRouter::new(
+            backends,
+            RouterOptions {
+                replicas,
+                spares: 1,
+                batcher: BatcherOptions::default(),
+            },
+        )?;
+        let report = router.run(
+            &fleet_workload,
+            &[FailureEvent {
+                replica: 0,
+                at_s: 0.05,
+            }],
+        )?;
+        println!(
+            "fleet x{replicas} (+1 spare, replica 0 fails at 50ms): {:>7.0} tok/s | {} rerouted | {} swap(s)",
+            report.stats.throughput_tok_s, report.reroutes, report.swaps
+        );
+    }
+    println!();
+
+    // ---- real-substrate comparison (needs `make artifacts`) ------------
+    let client = Arc::new(RuntimeClient::cpu()?);
+    let manifest = Manifest::load(&axlearn::artifacts_dir())?;
     let session = ServeSession::open(client.clone(), &manifest, "serve")?;
-    let engine = Engine::new(
+    let mut engine = Engine::from_session(
         session,
         BatcherOptions {
             slots: 8,
             kv_pages: 2048,
             page_tokens: 16,
         },
-    );
+    )?;
     let ax = engine.run(&workload)?;
     println!(
         "AXLearn continuous batching: TTFT {:.0} ms | TPOT {:.1} ms | {:.0} tok/s | occupancy {:.1}/8",
@@ -44,7 +82,7 @@ fn main() -> anyhow::Result<()> {
     );
 
     let session2 = ServeSession::open(client, &manifest, "serve")?;
-    let baseline = StaticBatchEngine::new(session2, StaticBatchOptions::default());
+    let mut baseline = StaticBatchEngine::from_session(session2, StaticBatchOptions::default())?;
     let vl = baseline.run(&workload)?;
     println!(
         "vLLM-style static batching: TTFT {:.0} ms | TPOT {:.1} ms | {:.0} tok/s | {} compile stalls, {} wasted rows",

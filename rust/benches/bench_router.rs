@@ -1,0 +1,67 @@
+//! Bench: fleet throughput vs replica count (1/2/4/8) under Poisson
+//! arrivals on the mock backend — the router's scaling trajectory.
+//! Pure virtual time (no artifacts needed); emits JSON for tracking.
+
+use axlearn::runtime::backend::{ComputeBackend, MockBackend};
+use axlearn::serving::{BatcherOptions, ReplicaRouter, RouterOptions, Workload, WorkloadOptions};
+use axlearn::util::json::Json;
+
+fn main() {
+    let w = Workload::sharegpt_like(WorkloadOptions {
+        num_requests: 512,
+        request_rate: 2000.0, // saturating Poisson arrivals
+        max_input_len: 120,
+        max_output_len: 24,
+        vocab: 2048,
+        seed: 17,
+    });
+    println!("=== Router: fleet throughput vs replica count (mock backend) ===\n");
+    println!(
+        "{:>9} {:>14} {:>12} {:>12}",
+        "Replicas", "Tokens/s", "TTFT(ms)", "Makespan(s)"
+    );
+    let mut points = Vec::new();
+    let mut prev = 0.0f64;
+    for replicas in [1usize, 2, 4, 8] {
+        let backends: Vec<Box<dyn ComputeBackend>> = (0..replicas)
+            .map(|_| Box::new(MockBackend::default()) as Box<dyn ComputeBackend>)
+            .collect();
+        let mut router = ReplicaRouter::new(
+            backends,
+            RouterOptions {
+                replicas,
+                spares: 0,
+                batcher: BatcherOptions::default(),
+            },
+        )
+        .expect("fleet construction");
+        let report = router.run(&w, &[]).expect("fleet run");
+        assert_eq!(report.outcomes.len(), 512, "requests lost");
+        assert!(
+            report.stats.throughput_tok_s > prev,
+            "throughput must grow with replica count"
+        );
+        prev = report.stats.throughput_tok_s;
+        println!(
+            "{:>9} {:>14.0} {:>12.1} {:>12.2}",
+            replicas,
+            report.stats.throughput_tok_s,
+            report.stats.mean_ttft_s * 1e3,
+            report.stats.makespan_s
+        );
+        points.push(Json::obj(vec![
+            ("replicas", Json::num(replicas as f64)),
+            ("throughput_tok_s", Json::num(report.stats.throughput_tok_s)),
+            ("mean_ttft_s", Json::num(report.stats.mean_ttft_s)),
+            ("p99_ttft_s", Json::num(report.stats.p99_ttft_s)),
+            ("makespan_s", Json::num(report.stats.makespan_s)),
+        ]));
+    }
+    let doc = Json::obj(vec![
+        ("bench", Json::str("router_fleet")),
+        ("backend", Json::str("mock")),
+        ("num_requests", Json::num(512.0)),
+        ("points", Json::Arr(points)),
+    ]);
+    println!("\nJSON: {}", doc.to_string());
+}

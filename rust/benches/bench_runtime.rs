@@ -13,7 +13,7 @@ use axlearn::util::stats::bench;
 fn main() {
     // pure-rust hot paths
     println!("{}", bench("config_materialize", 500, || {
-        let cfg = axlearn::config::registry::trainer_for_preset("small");
+        let cfg = axlearn::config::registry::trainer_for_preset("small").unwrap();
         let _ = axlearn::composer::materialize(
             &cfg,
             "tpu-v5e-256-4",

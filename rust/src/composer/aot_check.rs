@@ -90,7 +90,7 @@ mod tests {
 
     #[test]
     fn tiny_fits_everywhere() {
-        let t = trainer_for_preset("tiny");
+        let t = trainer_for_preset("tiny").unwrap();
         let plan = materialize(&t, "tpu-v5p-32", 32, &paper_appendix_a_rules()).unwrap();
         let r = aot_compile_check(&plan, &chips::tpu_v5p(), None).unwrap();
         assert!(r.fits, "{}", r.message);
@@ -102,7 +102,7 @@ mod tests {
     fn oom_caught_without_running() {
         // a deliberately absurd plan: base100m replicated on one v5e chip
         // with a big batch and remat disabled
-        let mut t = trainer_for_preset("base100m");
+        let mut t = trainer_for_preset("base100m").unwrap();
         t.at_path_mut("input").unwrap().set("batch_size", Value::Int(4096)).unwrap();
         t.at_path_mut("input").unwrap().set("seq_len", Value::Int(8192)).unwrap();
         let plan = materialize(&t, "cpu-local", 1, &paper_appendix_a_rules()).unwrap();
@@ -117,7 +117,7 @@ mod tests {
     fn same_codepath_for_aot_and_run() {
         // The §4.2 guarantee: the AOT report's step estimate equals the
         // estimator's answer for the same plan (it IS the same call).
-        let t = trainer_for_preset("small");
+        let t = trainer_for_preset("small").unwrap();
         let plan = materialize(&t, "gpu-H100-32", 256, &paper_appendix_a_rules()).unwrap();
         let r1 = aot_compile_check(&plan, &chips::h100(), None).unwrap();
         let r2 = aot_compile_check(&plan, &chips::h100(), None).unwrap();

@@ -179,7 +179,7 @@ mod tests {
 
     #[test]
     fn materialize_tiny_local() {
-        let t = trainer_for_preset("tiny");
+        let t = trainer_for_preset("tiny").unwrap();
         let plan = materialize(&t, "cpu-local", 1, &rules()).unwrap();
         assert_eq!(plan.artifact, "tiny");
         assert_eq!(plan.strategy.total_chips(), 1);
@@ -189,9 +189,9 @@ mod tests {
 
     #[test]
     fn moe_swap_changes_artifact_only() {
-        let mut t = trainer_for_preset("tiny");
+        let mut t = trainer_for_preset("tiny").unwrap();
         replace_config(&mut t, "FeedForward", &|old| {
-            default_config("MoE")
+            default_config("MoE").unwrap()
                 .with("input_dim", old.get("input_dim").unwrap().clone())
                 .with("hidden_dim", old.get("hidden_dim").unwrap().clone())
                 .with("num_experts", Value::Int(4))
@@ -204,7 +204,7 @@ mod tests {
 
     #[test]
     fn mesh_rule_shapes_strategy_per_target() {
-        let t = trainer_for_preset("small");
+        let t = trainer_for_preset("small").unwrap();
         let gpu = materialize(&t, "gpu-H100-32", 256, &rules()).unwrap();
         assert_eq!(gpu.strategy.tensor, 8);
         assert_eq!(gpu.strategy.fsdp, 32);
@@ -222,14 +222,14 @@ mod tests {
         assert_eq!(default_backend("gpu-H100-8"), "cudnn");
         assert_eq!(default_backend("trn2-x16"), "nki");
         assert_eq!(default_backend("tpu-v5p-512"), "pallas");
-        let t = trainer_for_preset("small");
+        let t = trainer_for_preset("small").unwrap();
         let plan = materialize(&t, "trn2-16", 64, &rules()).unwrap();
         assert_eq!(plan.kernel_backend, "nki");
     }
 
     #[test]
     fn shape_from_config_matches_preset_math() {
-        let t = trainer_for_preset("base100m");
+        let t = trainer_for_preset("base100m").unwrap();
         let shape = shape_from_config(&t).unwrap();
         let preset = TransformerShape::preset("base100m").unwrap();
         assert_eq!(shape.params(), preset.params());
@@ -237,7 +237,7 @@ mod tests {
 
     #[test]
     fn bad_mesh_is_an_error() {
-        let mut t = trainer_for_preset("tiny");
+        let mut t = trainer_for_preset("tiny").unwrap();
         t.set("mesh_shape", Value::IntList(vec![7, 3])).unwrap();
         t.set("mesh_axis_names", Value::StrList(vec!["data".into(), "fsdp".into()]))
             .unwrap();
@@ -246,7 +246,7 @@ mod tests {
 
     #[test]
     fn unset_required_field_is_an_error() {
-        let mut t = trainer_for_preset("tiny");
+        let mut t = trainer_for_preset("tiny").unwrap();
         t.at_path_mut("model.decoder").unwrap().set("vocab_size", Value::Null).unwrap();
         let err = materialize(&t, "cpu-local", 1, &rules()).unwrap_err();
         assert!(format!("{err:#}").contains("vocab_size"));

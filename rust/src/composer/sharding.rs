@@ -90,7 +90,7 @@ mod tests {
 
     #[test]
     fn collect_finds_every_linear() {
-        let t = trainer_for_preset("small");
+        let t = trainer_for_preset("small").unwrap();
         let specs = collect_sharding(&t);
         // qkv_proj + out_proj templates + ffn linear template
         assert!(specs.len() >= 3, "{specs:?}");
@@ -101,7 +101,7 @@ mod tests {
 
     #[test]
     fn bias_specs_only_when_bias_enabled() {
-        let t = trainer_for_preset("small");
+        let t = trainer_for_preset("small").unwrap();
         let specs = collect_sharding(&t);
         assert!(specs.iter().all(|s| s.param == "weight"));
     }

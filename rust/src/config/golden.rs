@@ -79,14 +79,14 @@ mod tests {
 
     #[test]
     fn serialization_is_deterministic() {
-        let a = trainer_for_preset("small");
-        let b = trainer_for_preset("small");
+        let a = trainer_for_preset("small").unwrap();
+        let b = trainer_for_preset("small").unwrap();
         assert_eq!(to_golden_string(&a), to_golden_string(&b));
     }
 
     #[test]
     fn serialization_covers_nested_fields() {
-        let s = to_golden_string(&trainer_for_preset("tiny"));
+        let s = to_golden_string(&trainer_for_preset("tiny").unwrap());
         assert!(s.contains("root: Trainer"));
         assert!(s.contains("root.model.decoder.layer.self_attention: AttentionLayer"));
         assert!(s.contains("root.model.decoder.layer.self_attention.pos_emb.theta = 10000"));
@@ -94,13 +94,13 @@ mod tests {
 
     #[test]
     fn clone_roundtrip_identical() {
-        let a = trainer_for_preset("base100m");
+        let a = trainer_for_preset("base100m").unwrap();
         assert_eq!(to_golden_string(&a), to_golden_string(&a.clone()));
     }
 
     #[test]
     fn diff_is_empty_for_identical() {
-        let a = trainer_for_preset("small");
+        let a = trainer_for_preset("small").unwrap();
         let (oa, ob) = config_diff(&a, &a.clone());
         assert!(oa.is_empty() && ob.is_empty());
     }
@@ -108,10 +108,10 @@ mod tests {
     #[test]
     fn diff_localizes_a_change() {
         // The review story: an MoE swap shows up ONLY as feed_forward lines.
-        let a = trainer_for_preset("small");
+        let a = trainer_for_preset("small").unwrap();
         let mut b = a.clone();
         replace_config(&mut b, "FeedForward", &|old| {
-            default_config("MoE").with("input_dim", old.get("input_dim").unwrap().clone())
+            default_config("MoE").unwrap().with("input_dim", old.get("input_dim").unwrap().clone())
         });
         let (only_a, only_b) = config_diff(&a, &b);
         assert!(!only_a.is_empty() && !only_b.is_empty());
@@ -125,7 +125,7 @@ mod tests {
 
     #[test]
     fn diff_catches_quantization_change() {
-        let a = trainer_for_preset("small");
+        let a = trainer_for_preset("small").unwrap();
         let mut b = a.clone();
         QuantizationModifier::int8().apply(&mut b).unwrap();
         let (_, only_b) = config_diff(&a, &b);
@@ -134,7 +134,7 @@ mod tests {
 
     #[test]
     fn parse_golden_roundtrip_paths() {
-        let s = to_golden_string(&trainer_for_preset("tiny"));
+        let s = to_golden_string(&trainer_for_preset("tiny").unwrap());
         let entries = parse_golden(&s);
         assert!(entries.iter().any(|(p, v)| p == "root" && v == "<Trainer>"));
         assert!(entries.iter().any(|(p, _)| p.ends_with(".learning_rate")));

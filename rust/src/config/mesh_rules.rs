@@ -149,7 +149,7 @@ mod tests {
     #[test]
     fn no_match_leaves_config_unchanged() {
         let rules = paper_appendix_a_rules();
-        let mut t = trainer_for_preset("tiny");
+        let mut t = trainer_for_preset("tiny").unwrap();
         let before = t.clone();
         let matched = rules.apply("cpu-local", &mut t).unwrap();
         assert!(matched.is_none());
@@ -159,7 +159,7 @@ mod tests {
     #[test]
     fn appendix_a_tpu_v5e_rule() {
         let rules = paper_appendix_a_rules();
-        let mut t = trainer_for_preset("small");
+        let mut t = trainer_for_preset("small").unwrap();
         let matched = rules.apply("tpu-v5e-256-8", &mut t).unwrap();
         assert_eq!(matched.as_deref(), Some("tpu-v5e-256-*"));
         assert_eq!(t.get_int_list("mesh_shape").unwrap(), vec![-1, 256]);
@@ -173,7 +173,7 @@ mod tests {
     #[test]
     fn appendix_a_h100_rule() {
         let rules = paper_appendix_a_rules();
-        let mut t = trainer_for_preset("small");
+        let mut t = trainer_for_preset("small").unwrap();
         rules.apply("gpu-H100-32", &mut t).unwrap();
         assert_eq!(t.get_str_list("mesh_axis_names").unwrap(), vec!["fsdp", "model"]);
         assert_eq!(t.get_str("quantization").unwrap(), "fp8");
@@ -187,7 +187,7 @@ mod tests {
     fn same_config_two_targets_differ_only_by_rules() {
         // The heterogeneity claim: ONE experiment config, two platforms.
         let rules = paper_appendix_a_rules();
-        let base = trainer_for_preset("small");
+        let base = trainer_for_preset("small").unwrap();
         let mut tpu = base.clone();
         let mut gpu = base.clone();
         rules.apply("tpu-v5e-256-1", &mut tpu).unwrap();
@@ -202,7 +202,7 @@ mod tests {
     #[test]
     fn trn2_rule_swaps_kernel_backend() {
         let rules = paper_appendix_a_rules();
-        let mut t = trainer_for_preset("small");
+        let mut t = trainer_for_preset("small").unwrap();
         rules.apply("trn2-16xlarge", &mut t).unwrap();
         let attn = t.at_path("model.decoder.layer.self_attention").unwrap();
         assert_eq!(attn.klass, "FlashAttentionLayer");

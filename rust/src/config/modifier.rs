@@ -192,7 +192,8 @@ impl ConfigModifier for KernelModifier {
     fn apply(&self, cfg: &mut ConfigNode) -> Result<()> {
         let backend = self.backend.clone();
         let n = replace_config(cfg, "AttentionLayer", &move |old| {
-            let mut flash = super::registry::default_config("FlashAttentionLayer");
+            let mut flash = super::registry::default_config("FlashAttentionLayer")
+                .expect("FlashAttentionLayer is registered");
             // carry over the interface fields (input dims etc.)
             for f in old.field_names() {
                 let v = old.get(&f).unwrap().clone();
@@ -259,7 +260,7 @@ mod tests {
 
     #[test]
     fn mesh_shape_modifier() {
-        let mut t = trainer_for_preset("tiny");
+        let mut t = trainer_for_preset("tiny").unwrap();
         MeshShapeModifier::new(&[-1, 256], &["data", "fsdp"]).apply(&mut t).unwrap();
         assert_eq!(t.get_int_list("mesh_shape").unwrap(), vec![-1, 256]);
         assert_eq!(t.get_str_list("mesh_axis_names").unwrap(), vec!["data", "fsdp"]);
@@ -267,13 +268,13 @@ mod tests {
 
     #[test]
     fn mesh_rank_mismatch_rejected() {
-        let mut t = trainer_for_preset("tiny");
+        let mut t = trainer_for_preset("tiny").unwrap();
         assert!(MeshShapeModifier::new(&[1, 2], &["data"]).apply(&mut t).is_err());
     }
 
     #[test]
     fn remat_global_and_targeted() {
-        let mut t = trainer_for_preset("tiny");
+        let mut t = trainer_for_preset("tiny").unwrap();
         RematSpecModifier::new("save_qkvo").apply(&mut t).unwrap();
         assert_eq!(t.get_str("remat_policy").unwrap(), "save_qkvo");
         RematSpecModifier::at("offload_dots", "model.decoder.layer").apply(&mut t).unwrap();
@@ -285,20 +286,20 @@ mod tests {
 
     #[test]
     fn remat_unknown_policy_rejected() {
-        let mut t = trainer_for_preset("tiny");
+        let mut t = trainer_for_preset("tiny").unwrap();
         assert!(RematSpecModifier::new("bogus").apply(&mut t).is_err());
     }
 
     #[test]
     fn quantization_modifier() {
-        let mut t = trainer_for_preset("tiny");
+        let mut t = trainer_for_preset("tiny").unwrap();
         QuantizationModifier::fp8(128).apply(&mut t).unwrap();
         assert_eq!(t.get_str("quantization").unwrap(), "fp8");
     }
 
     #[test]
     fn kernel_modifier_swaps_attention() {
-        let mut t = trainer_for_preset("tiny");
+        let mut t = trainer_for_preset("tiny").unwrap();
         KernelModifier::new("pallas").apply(&mut t).unwrap();
         let attn = t.at_path("model.decoder.layer.self_attention").unwrap();
         assert_eq!(attn.klass, "FlashAttentionLayer");
@@ -315,14 +316,14 @@ mod tests {
 
     #[test]
     fn set_field_modifier() {
-        let mut t = trainer_for_preset("tiny");
+        let mut t = trainer_for_preset("tiny").unwrap();
         SetFieldModifier::new("learner", "learning_rate", Value::Float(1e-3)).apply(&mut t).unwrap();
         assert_eq!(t.at_path("learner").unwrap().get_float("learning_rate").unwrap(), 1e-3);
     }
 
     #[test]
     fn modifier_list_applies_in_order() {
-        let mut t = trainer_for_preset("tiny");
+        let mut t = trainer_for_preset("tiny").unwrap();
         let list = ModifierList(vec![
             Box::new(MeshShapeModifier::new(&[4, 2], &["fsdp", "model"])),
             Box::new(SetFieldModifier::new("", "remat_policy", Value::Str("full".into()))),

@@ -23,6 +23,13 @@ pub enum ConfigError {
     },
     #[error("no config node at path {0:?}")]
     BadPath(String),
+    #[error("unknown class {klass:?} (registered: {registered:?})")]
+    UnknownClass {
+        klass: String,
+        registered: Vec<String>,
+    },
+    #[error("unknown preset {preset:?} (known: {known:?})")]
+    UnknownPreset { preset: String, known: Vec<String> },
 }
 
 /// A config field value.

@@ -6,28 +6,29 @@
 //! child structure as `python/compile/layers.py`) so that the Rust
 //! coordinator can compose, rewrite, and golden-test the *same* config
 //! trees whose compute lives in the AOT artifacts.  Trainer-side modules
-//! (input pipeline, checkpointer, watchdog, …) exist only here.
+//! (input pipeline, checkpointer, watchdog, …) and the serving stack
+//! (compute backends, batching policies, the replica router) exist only
+//! here.
 
 use std::collections::BTreeMap;
 
 use once_cell::sync::Lazy;
 
-use super::node::{ConfigNode, Value};
+use super::node::{ConfigError, ConfigNode, Value};
 
 type Ctor = fn() -> ConfigNode;
 
 static REGISTRY: Lazy<BTreeMap<&'static str, Ctor>> = Lazy::new(register_defaults);
 
-/// Build the default config for a registered class. Panics on unknown
-/// class names (a config referencing an unregistered class is a
-/// programming error, caught in tests).
-pub fn default_config(klass: &str) -> ConfigNode {
+/// Build the default config for a registered class.  Unknown class names
+/// are a composition error reported to the caller, not a panic.
+pub fn default_config(klass: &str) -> Result<ConfigNode, ConfigError> {
     match REGISTRY.get(klass) {
-        Some(ctor) => ctor(),
-        None => panic!(
-            "default_config: unknown class {klass:?}; registered: {:?}",
-            REGISTRY.keys().collect::<Vec<_>>()
-        ),
+        Some(ctor) => Ok(ctor()),
+        None => Err(ConfigError::UnknownClass {
+            klass: klass.to_string(),
+            registered: registered_classes().iter().map(|s| s.to_string()).collect(),
+        }),
     }
 }
 
@@ -37,6 +38,12 @@ pub fn is_registered(klass: &str) -> bool {
 
 pub fn registered_classes() -> Vec<&'static str> {
     REGISTRY.keys().copied().collect()
+}
+
+/// Constructor-internal lookup: the classes referenced by `register_defaults`
+/// are statically known, so a miss is a registration-table bug.
+fn builtin(klass: &str) -> ConfigNode {
+    default_config(klass).expect("builtin class is registered")
 }
 
 /// The full default-config table.
@@ -73,15 +80,15 @@ pub fn register_defaults() -> BTreeMap<&'static str, Ctor> {
             .field("input_dim", Value::Null)
             .field("num_heads", Value::Null)
             .field("head_dim", Value::Null)
-            .field("pos_emb", Value::Config(default_config("RotaryEmbedding")))
+            .field("pos_emb", Value::Config(builtin("RotaryEmbedding")))
             .field("kernel", Value::Str("flash".into()))
-            .field("qkv_proj", Value::Config(default_config("Linear")))
-            .field("out_proj", Value::Config(default_config("Linear")))
+            .field("qkv_proj", Value::Config(builtin("Linear")))
+            .field("out_proj", Value::Config(builtin("Linear")))
     });
     m.insert("FlashAttentionLayer", || {
         // Drop-in replacement for AttentionLayer with backend dispatch
         // (paper §4.2): the `backend` field selects cudnn/nki/pallas.
-        let mut c = default_config("AttentionLayer");
+        let mut c = builtin("AttentionLayer");
         c.klass = "FlashAttentionLayer".into();
         c.field("backend", Value::Str("auto".into()))
             .field("block_q", Value::Int(128))
@@ -92,7 +99,7 @@ pub fn register_defaults() -> BTreeMap<&'static str, Ctor> {
             .field("input_dim", Value::Null)
             .field("hidden_dim", Value::Null)
             .field("activation", Value::StrList(vec!["linear".into(), "nn.silu".into()]))
-            .field("linear", Value::Config(default_config("Linear")))
+            .field("linear", Value::Config(builtin("Linear")))
     });
     m.insert("MoE", || {
         ConfigNode::new("MoE")
@@ -101,14 +108,14 @@ pub fn register_defaults() -> BTreeMap<&'static str, Ctor> {
             .field("num_experts", Value::Int(8))
             .field("top_k", Value::Int(2))
             .field("aux_loss_weight", Value::Float(0.01))
-            .field("linear", Value::Config(default_config("Linear")))
+            .field("linear", Value::Config(builtin("Linear")))
     });
     m.insert("TransformerLayer", || {
         ConfigNode::new("TransformerLayer")
             .field("input_dim", Value::Null)
-            .field("self_attention", Value::Config(default_config("AttentionLayer")))
-            .field("feed_forward", Value::Config(default_config("FeedForward")))
-            .field("norm", Value::Config(default_config("RMSNorm")))
+            .field("self_attention", Value::Config(builtin("AttentionLayer")))
+            .field("feed_forward", Value::Config(builtin("FeedForward")))
+            .field("norm", Value::Config(builtin("RMSNorm")))
             .field("remat_spec", Value::Str("none".into()))
     });
     m.insert("Decoder", || {
@@ -116,14 +123,14 @@ pub fn register_defaults() -> BTreeMap<&'static str, Ctor> {
             .field("vocab_size", Value::Null)
             .field("model_dim", Value::Null)
             .field("num_layers", Value::Null)
-            .field("emb", Value::Config(default_config("Embedding")))
-            .field("layer", Value::Config(default_config("TransformerLayer")))
-            .field("output_norm", Value::Config(default_config("RMSNorm")))
+            .field("emb", Value::Config(builtin("Embedding")))
+            .field("layer", Value::Config(builtin("TransformerLayer")))
+            .field("output_norm", Value::Config(builtin("RMSNorm")))
             .field("tied_lm_head", Value::Bool(true))
     });
     m.insert("CausalLM", || {
         ConfigNode::new("CausalLM")
-            .field("decoder", Value::Config(default_config("Decoder")))
+            .field("decoder", Value::Config(builtin("Decoder")))
             .field("z_loss_weight", Value::Float(0.0))
             .field("seq_len", Value::Null)
     });
@@ -158,13 +165,13 @@ pub fn register_defaults() -> BTreeMap<&'static str, Ctor> {
             .field("async_save", Value::Bool(true))
             .field("max_concurrent_shards", Value::Int(4))
             .field("data_sharded", Value::Bool(true))
-            .field("storage", Value::Config(default_config("LocalStorage")))
+            .field("storage", Value::Config(builtin("LocalStorage")))
     });
     m.insert("LocalStorage", || {
         ConfigNode::new("LocalStorage").field("root", Value::Str(".".into()))
     });
     m.insert("MultiTierCheckpointer", || {
-        let mut c = default_config("Checkpointer");
+        let mut c = builtin("Checkpointer");
         c.klass = "MultiTierCheckpointer".into();
         c.field("local_every_n_steps", Value::Int(10))
             .field("remote_every_n_steps", Value::Int(100))
@@ -186,15 +193,56 @@ pub fn register_defaults() -> BTreeMap<&'static str, Ctor> {
             .field("alternate_cores", Value::Bool(true))
     });
 
+    // ---- serving: compute backends (ComputeBackend implementations) ----
+    m.insert("PjrtBackend", || {
+        ConfigNode::new("PjrtBackend").field("preset", Value::Str("serve".into()))
+    });
+    m.insert("AnalyticBackend", || {
+        ConfigNode::new("AnalyticBackend")
+            .field("chip", Value::Str("tpu-v5p-8".into())) // instance-type prefix
+            .field("chips", Value::Int(8))
+            .field("model", Value::Str("llama2_7b".into()))
+            .field("weight_bytes_per_param", Value::Float(2.0))
+    });
+    m.insert("MockBackend", || {
+        ConfigNode::new("MockBackend")
+            .field("prefill_base_s", Value::Float(2e-3))
+            .field("prefill_per_token_s", Value::Float(1e-5))
+            .field("decode_round_s", Value::Float(4e-3))
+            .field("vocab", Value::Int(2048))
+    });
+
+    // ---- serving: scheduling policies ----
+    m.insert("ContinuousBatchingPolicy", || {
+        ConfigNode::new("ContinuousBatchingPolicy")
+            .field("slots", Value::Int(8))
+            .field("kv_pages", Value::Int(1024))
+            .field("page_tokens", Value::Int(16))
+    });
+    m.insert("StaticBatchingPolicy", || {
+        ConfigNode::new("StaticBatchingPolicy")
+            .field("batch_size", Value::Int(8))
+            .field("compile_stall_s", Value::Float(2.0))
+    });
+
+    // ---- serving: the multi-replica router (root serve module) ----
+    m.insert("ServeRouter", || {
+        ConfigNode::new("ServeRouter")
+            .field("replicas", Value::Int(2))
+            .field("spares", Value::Int(1))
+            .field("backend", Value::Config(builtin("MockBackend")))
+            .field("policy", Value::Config(builtin("ContinuousBatchingPolicy")))
+    });
+
     // ---- trainer (root module) ----
     m.insert("Trainer", || {
         ConfigNode::new("Trainer")
-            .field("model", Value::Config(default_config("CausalLM")))
-            .field("learner", Value::Config(default_config("AdamW")))
-            .field("input", Value::Config(default_config("SyntheticLmInput")))
-            .field("checkpointer", Value::Config(default_config("Checkpointer")))
-            .field("watchdog", Value::Config(default_config("Watchdog")))
-            .field("sdc_checker", Value::Config(default_config("SdcChecker")))
+            .field("model", Value::Config(builtin("CausalLM")))
+            .field("learner", Value::Config(builtin("AdamW")))
+            .field("input", Value::Config(builtin("SyntheticLmInput")))
+            .field("checkpointer", Value::Config(builtin("Checkpointer")))
+            .field("watchdog", Value::Config(builtin("Watchdog")))
+            .field("sdc_checker", Value::Config(builtin("SdcChecker")))
             .field("max_steps", Value::Int(100))
             .field("seed", Value::Int(0))
             .field("mesh_shape", Value::IntList(vec![1, 1]))
@@ -214,41 +262,49 @@ pub fn register_defaults() -> BTreeMap<&'static str, Ctor> {
 // Preset experiment configs (the "experiments" of §7.1).
 // ---------------------------------------------------------------------------
 
+const PRESETS: [&str; 4] = ["tiny", "small", "base100m", "serve"];
+
 /// Build a trainer config for a model preset.  Mirrors
 /// `python/compile/configs.PRESETS`, which defines the artifact shapes.
-pub fn trainer_for_preset(preset: &str) -> ConfigNode {
+/// Unknown presets are reported as [`ConfigError::UnknownPreset`].
+pub fn trainer_for_preset(preset: &str) -> Result<ConfigNode, ConfigError> {
     let (vocab, dim, layers, heads, head_dim, ffn, seq, batch) = match preset {
         "tiny" => (256, 64, 2, 4, 16, 192, 32, 2),
         "small" => (2048, 256, 4, 4, 64, 704, 128, 4),
         "base100m" => (8192, 768, 12, 12, 64, 2048, 256, 4),
         "serve" => (2048, 256, 4, 4, 64, 704, 384, 8),
-        other => panic!("unknown preset {other:?}"),
+        other => {
+            return Err(ConfigError::UnknownPreset {
+                preset: other.to_string(),
+                known: PRESETS.iter().map(|s| s.to_string()).collect(),
+            })
+        }
     };
-    let mut t = default_config("Trainer");
-    t.set("preset", Value::Str(preset.into())).unwrap();
+    let mut t = default_config("Trainer")?;
+    t.set("preset", Value::Str(preset.into()))?;
     {
-        let dec = t.at_path_mut("model.decoder").unwrap();
-        dec.set("vocab_size", Value::Int(vocab)).unwrap();
-        dec.set("model_dim", Value::Int(dim)).unwrap();
-        dec.set("num_layers", Value::Int(layers)).unwrap();
+        let dec = t.at_path_mut("model.decoder")?;
+        dec.set("vocab_size", Value::Int(vocab))?;
+        dec.set("model_dim", Value::Int(dim))?;
+        dec.set("num_layers", Value::Int(layers))?;
     }
     {
-        let attn = t.at_path_mut("model.decoder.layer.self_attention").unwrap();
-        attn.set("num_heads", Value::Int(heads)).unwrap();
-        attn.set("head_dim", Value::Int(head_dim)).unwrap();
+        let attn = t.at_path_mut("model.decoder.layer.self_attention")?;
+        attn.set("num_heads", Value::Int(heads))?;
+        attn.set("head_dim", Value::Int(head_dim))?;
     }
     {
-        let ff = t.at_path_mut("model.decoder.layer.feed_forward").unwrap();
-        ff.set("hidden_dim", Value::Int(ffn)).unwrap();
+        let ff = t.at_path_mut("model.decoder.layer.feed_forward")?;
+        ff.set("hidden_dim", Value::Int(ffn))?;
     }
-    t.at_path_mut("model").unwrap().set("seq_len", Value::Int(seq)).unwrap();
+    t.at_path_mut("model")?.set("seq_len", Value::Int(seq))?;
     {
-        let input = t.at_path_mut("input").unwrap();
-        input.set("batch_size", Value::Int(batch)).unwrap();
-        input.set("seq_len", Value::Int(seq)).unwrap();
-        input.set("vocab_size", Value::Int(vocab)).unwrap();
+        let input = t.at_path_mut("input")?;
+        input.set("batch_size", Value::Int(batch))?;
+        input.set("seq_len", Value::Int(seq))?;
+        input.set("vocab_size", Value::Int(vocab))?;
     }
-    t
+    Ok(t)
 }
 
 #[cfg(test)]
@@ -258,14 +314,14 @@ mod tests {
     #[test]
     fn all_classes_constructible() {
         for klass in registered_classes() {
-            let cfg = default_config(klass);
+            let cfg = default_config(klass).unwrap();
             assert_eq!(cfg.klass, klass);
         }
     }
 
     #[test]
     fn trainer_tree_is_hierarchical() {
-        let t = default_config("Trainer");
+        let t = default_config("Trainer").unwrap();
         assert_eq!(t.at_path("model.decoder.layer.self_attention.pos_emb").unwrap().klass, "RotaryEmbedding");
         // strict encapsulation: the trainer has no flattened RoPE field
         assert!(!t.has_field("rope_theta"));
@@ -274,25 +330,51 @@ mod tests {
 
     #[test]
     fn presets_build() {
-        for p in ["tiny", "small", "base100m", "serve"] {
-            let t = trainer_for_preset(p);
+        for p in PRESETS {
+            let t = trainer_for_preset(p).unwrap();
             assert!(t.at_path("model.decoder").unwrap().get_int("vocab_size").unwrap() > 0);
         }
     }
 
     #[test]
-    #[should_panic(expected = "unknown class")]
-    fn unknown_class_panics() {
-        default_config("Bogus");
+    fn unknown_class_is_an_error_not_a_panic() {
+        let err = default_config("Bogus").unwrap_err();
+        assert!(matches!(err, ConfigError::UnknownClass { .. }));
+        assert!(err.to_string().contains("Bogus"));
+        assert!(err.to_string().contains("Trainer")); // lists what IS registered
+    }
+
+    #[test]
+    fn unknown_preset_is_an_error_not_a_panic() {
+        let err = trainer_for_preset("llama9000").unwrap_err();
+        assert!(matches!(err, ConfigError::UnknownPreset { .. }));
+        assert!(err.to_string().contains("llama9000"));
+        assert!(err.to_string().contains("base100m"));
     }
 
     #[test]
     fn flash_attention_is_dropin_for_attention() {
         // same field superset => interface-compatible (§4.2 custom kernels)
-        let base = default_config("AttentionLayer");
-        let flash = default_config("FlashAttentionLayer");
+        let base = default_config("AttentionLayer").unwrap();
+        let flash = default_config("FlashAttentionLayer").unwrap();
         for f in base.field_names() {
             assert!(flash.has_field(&f), "FlashAttentionLayer missing {f}");
         }
+    }
+
+    #[test]
+    fn serve_router_tree_is_hierarchical() {
+        // backend × policy × replica-count compose like trainer configs:
+        // the router never sees backend internals (strict encapsulation)
+        let r = default_config("ServeRouter").unwrap();
+        assert_eq!(r.child("backend").unwrap().klass, "MockBackend");
+        assert_eq!(r.child("policy").unwrap().klass, "ContinuousBatchingPolicy");
+        assert!(!r.has_field("decode_round_s"));
+        assert!(!r.has_field("slots"));
+        // swapping the backend is a one-field config change
+        let mut r2 = r.clone();
+        r2.set("backend", Value::Config(default_config("AnalyticBackend").unwrap()))
+            .unwrap();
+        assert_eq!(r2.child("backend").unwrap().klass, "AnalyticBackend");
     }
 }

@@ -105,7 +105,7 @@ mod tests {
     use crate::util::rng::Rng;
 
     fn model() -> ConfigNode {
-        registry::default_config("CausalLM")
+        registry::default_config("CausalLM").unwrap()
     }
 
     #[test]
@@ -133,7 +133,7 @@ mod tests {
         let mut root = model();
         let before_attn = root.at_path("decoder.layer.self_attention").unwrap().clone();
         let n = replace_config(&mut root, "FeedForward", &|old| {
-            registry::default_config("MoE")
+            registry::default_config("MoE").unwrap()
                 .with("input_dim", old.get("input_dim").unwrap().clone())
                 .with("num_experts", Value::Int(8))
                 .with("top_k", Value::Int(2))
@@ -151,7 +151,7 @@ mod tests {
     fn replace_rope_with_nope() {
         let mut root = model();
         let n = replace_config(&mut root, "RotaryEmbedding", &|_| {
-            registry::default_config("NoPositionalEmbedding")
+            registry::default_config("NoPositionalEmbedding").unwrap()
         });
         assert_eq!(n, 1);
         assert_eq!(

@@ -262,18 +262,18 @@ pub fn table4_local(
     let workload = Workload::sharegpt_like(wopts);
 
     let session = crate::runtime::ServeSession::open(client.clone(), manifest, "serve")?;
-    let engine = Engine::new(
+    let mut engine = Engine::from_session(
         session,
         BatcherOptions {
             slots: 8,
             kv_pages: 2048,
             page_tokens: 16,
         },
-    );
+    )?;
     let ax = engine.run(&workload)?;
 
     let session2 = crate::runtime::ServeSession::open(client, manifest, "serve")?;
-    let baseline = StaticBatchEngine::new(session2, StaticBatchOptions::default());
+    let mut baseline = StaticBatchEngine::from_session(session2, StaticBatchOptions::default())?;
     let vl = baseline.run(&workload)?;
 
     let rows = vec![
@@ -361,14 +361,14 @@ pub fn fig5_local(
             seed: 11,
         });
         let session = crate::runtime::ServeSession::open(client.clone(), manifest, "serve")?;
-        let ax = Engine::new(
+        let ax = Engine::from_session(
             session,
             BatcherOptions {
                 slots: 8,
                 kv_pages: 2048,
                 page_tokens: 16,
             },
-        )
+        )?
         .run(&workload)?;
         pts.push(Fig5Point {
             rate,
@@ -376,7 +376,8 @@ pub fn fig5_local(
             throughput_tok_s: ax.stats.throughput_tok_s,
         });
         let session2 = crate::runtime::ServeSession::open(client.clone(), manifest, "serve")?;
-        let vl = StaticBatchEngine::new(session2, StaticBatchOptions::default()).run(&workload)?;
+        let vl = StaticBatchEngine::from_session(session2, StaticBatchOptions::default())?
+            .run(&workload)?;
         pts.push(Fig5Point {
             rate,
             system: "vLLM-style",

@@ -9,11 +9,25 @@
 //! * **Layer 2** (`python/compile/`): a modular JAX transformer (RoPE/MoE
 //!   composable by config) lowered ahead-of-time to HLO text artifacts.
 //! * **Layer 3** (this crate): AXLearn's system contribution — the
-//!   strictly-encapsulated hierarchical config system, the composer, the
-//!   training runtime (checkpointing, monitoring, failure detection and
-//!   recovery over a simulated heterogeneous cluster), the hardware
-//!   performance model that reproduces the paper's evaluation, and the
-//!   unified inference engine.
+//!   strictly-encapsulated hierarchical config system ([`config`]), the
+//!   composer ([`composer`]), the training runtime (checkpointing,
+//!   monitoring, failure detection and recovery over a simulated
+//!   heterogeneous cluster — [`checkpoint`], [`monitor`],
+//!   [`distributed`]), the hardware performance model that reproduces
+//!   the paper's evaluation ([`perfmodel`]), and the serving stack.
+//!
+//! Serving applies the same encapsulation discipline vertically:
+//!
+//! * [`runtime::backend::ComputeBackend`] is the hardware boundary —
+//!   prefill/decode/cache ops plus discovered capabilities.  Three
+//!   substrates implement it: real PJRT over AOT artifacts, an analytic
+//!   model driven by `perfmodel` chip specs (Table-4-scale hardware in
+//!   simulation), and a deterministic mock.
+//! * [`serving`]'s schedulers — the continuous batcher, the vLLM-style
+//!   static baseline, and the multi-replica [`serving::router`] with
+//!   hot-swap spare promotion — are pure policies over that trait, so
+//!   backend × policy × replica-count compose through the config
+//!   registry exactly like trainer configs (see `docs/serving.md`).
 //!
 //! Python never runs on the request path: `make artifacts` is build-time
 //! only; everything here executes AOT-compiled HLO through PJRT

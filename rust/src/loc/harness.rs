@@ -109,7 +109,7 @@ pub fn sweep_experiments(n: usize) -> (usize, usize) {
     let mut swapped = 0;
     for i in 0..n {
         let preset = ["tiny", "small", "base100m"][i % 3];
-        let mut cfg = trainer_for_preset(preset);
+        let mut cfg = trainer_for_preset(preset).expect("sweep preset is registered");
         // vary the experiment a bit (like real hyperparameter sweeps)
         cfg.at_path_mut("learner")
             .unwrap()
@@ -117,7 +117,7 @@ pub fn sweep_experiments(n: usize) -> (usize, usize) {
             .unwrap();
         let before_attn = cfg.at_path("model.decoder.layer.self_attention").unwrap().clone();
         swapped += replace_config(&mut cfg, "FeedForward", &|old| {
-            default_config("MoE").with("input_dim", old.get("input_dim").unwrap().clone())
+            default_config("MoE").expect("MoE is registered").with("input_dim", old.get("input_dim").unwrap().clone())
         });
         if cfg.at_path("model.decoder.layer.self_attention").unwrap() != &before_attn {
             changed_modules += 1;

@@ -214,7 +214,7 @@ fn cmd_aot_check(args: &Args) -> Result<()> {
     let preset = args.get("preset").unwrap_or("small");
     let target = args.get("target").unwrap_or("tpu-v5e-256-4");
     let chips = args.get_u64("chips", 1024) as usize;
-    let trainer_cfg = trainer_for_preset(preset);
+    let trainer_cfg = trainer_for_preset(preset)?;
     let rules = paper_appendix_a_rules();
     let plan = materialize(&trainer_cfg, target, chips, &rules)?;
     println!(

@@ -1,0 +1,593 @@
+//! The hardware-agnostic compute boundary (paper §4.2 applied to
+//! serving): schedulers above this line never touch PJRT, chip specs, or
+//! mock state — they see prefill/decode/cache ops plus discovered
+//! capabilities, so backends and scheduling policies compose freely.
+//!
+//! Three implementations ship with the crate:
+//!
+//! * [`PjrtBackend`] — the real substrate: wraps
+//!   [`super::executor::ServeSession`] (AOT artifacts through PJRT) and
+//!   reports *measured* wall time per call.
+//! * [`AnalyticBackend`] — Table-4-scale hardware we do not have (7B on
+//!   v5p-8, 70B on v6e-8, ...), driven by `perfmodel` chip specs through
+//!   the same first-principles formulas as `serving::analytic`; returns
+//!   *virtual* time per call so whole fleets are servable in simulation.
+//! * [`MockBackend`] — deterministic fixed-cost backend for tests and
+//!   benches: identical token function to the analytic backend, so on
+//!   burst (all-at-t=0) workloads — where admission order cannot depend
+//!   on per-call costs — the two produce identical scheduling traces.
+//!
+//! A new backend is ~10 lines of mechanism (the paper's RoPE
+//! constant-complexity claim, restated for serving): implement the three
+//! ops, return capabilities, and every scheduler — the continuous
+//! batcher, the static-batching baseline, the multi-replica router —
+//! works unchanged. See `docs/serving.md`.
+
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::config::ConfigNode;
+use crate::perfmodel::chips::{self, ChipSpec};
+use crate::perfmodel::model_shapes::TransformerShape;
+
+use super::executor::{KvCache, ServeSession};
+
+/// What a backend can do — discovered at runtime, never assumed by the
+/// scheduling layer.
+#[derive(Clone, Debug)]
+pub struct BackendCapabilities {
+    pub name: String,
+    /// Decode-graph batch widths available (ascending).
+    pub decode_batches: Vec<usize>,
+    /// Prefill bucket lengths available at batch 1 (ascending).
+    pub prefill_buckets: Vec<usize>,
+    pub max_seq: usize,
+    pub vocab: usize,
+    /// True when `cost_s` is measured wall time (PJRT); false when the
+    /// backend advances a virtual clock (mock / analytic).
+    pub measured_time: bool,
+}
+
+/// Result of prefilling one request into a decode slot.
+#[derive(Clone, Debug)]
+pub struct PrefillResult {
+    /// The request's first generated token.
+    pub token: i32,
+    /// Compute cost of the call (measured or virtual seconds).
+    pub cost_s: f64,
+    /// Bucket length the prompt was padded to.
+    pub bucket: usize,
+}
+
+/// Result of one decode round over all slots.
+#[derive(Clone, Debug)]
+pub struct DecodeResult {
+    /// Next token per slot (inactive slots carry garbage, ignored).
+    pub tokens: Vec<i32>,
+    /// Compute cost of the round (measured or virtual seconds).
+    pub cost_s: f64,
+}
+
+/// The trait boundary between serving schedulers and compute substrates.
+///
+/// The contract mirrors the fixed-shape AOT serving graphs: a live decode
+/// cache with `slots` rows, single-request prefill + insert-into-slot,
+/// and full-width decode rounds. Time is *returned*, not measured by the
+/// caller, so real and simulated substrates drive one scheduling clock.
+pub trait ComputeBackend {
+    fn capabilities(&self) -> &BackendCapabilities;
+
+    /// (Re-)allocate the live decode cache with `slots` rows, dropping
+    /// any previous state. Must be called before prefill/decode.
+    fn reset(&mut self, slots: usize) -> Result<()>;
+
+    /// Prefill `prompt` padded to `bucket` tokens and insert the
+    /// resulting KV rows into `slot` of the live decode cache.
+    fn prefill(&mut self, slot: usize, prompt: &[i32], bucket: usize) -> Result<PrefillResult>;
+
+    /// One decode round over all slots. `pos[i]`/`tokens[i]` are slot
+    /// `i`'s current position and last emitted token.
+    fn decode(&mut self, pos: &[i32], tokens: &[i32]) -> Result<DecodeResult>;
+
+    /// Tightest available prefill bucket that fits `len` tokens (falls
+    /// back to the largest bucket; the caller truncates).
+    fn bucket_for(&self, len: usize) -> Result<usize> {
+        let caps = self.capabilities();
+        caps.prefill_buckets
+            .iter()
+            .copied()
+            .find(|b| *b >= len)
+            .or_else(|| caps.prefill_buckets.last().copied())
+            .with_context(|| format!("backend {:?} has no prefill buckets", caps.name))
+    }
+}
+
+/// Deterministic pseudo-token shared by the simulated backends: mock and
+/// analytic emit identical streams, which makes their scheduling traces
+/// comparable in tests (on burst workloads, where the differing per-call
+/// costs cannot shift admission timing).
+fn synth_token(a: i64, b: i64, vocab: usize) -> i32 {
+    let mut z = (a as u64)
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add((b as u64).wrapping_mul(0xBF58_476D_1CE4_E5B9));
+    z ^= z >> 29;
+    (z % vocab.max(1) as u64) as i32
+}
+
+fn prompt_digest(prompt: &[i32]) -> i64 {
+    prompt
+        .iter()
+        .fold(0i64, |acc, t| acc.wrapping_mul(31).wrapping_add(*t as i64))
+}
+
+// ---------------------------------------------------------------------------
+// PJRT (the real substrate)
+// ---------------------------------------------------------------------------
+
+/// The real backend: AOT artifacts executed through PJRT. Costs are
+/// measured wall time of each XLA call.
+pub struct PjrtBackend {
+    session: ServeSession,
+    caps: BackendCapabilities,
+    cache: Option<KvCache>,
+    slots: usize,
+}
+
+impl PjrtBackend {
+    pub fn new(session: ServeSession) -> Self {
+        let caps = BackendCapabilities {
+            name: format!("pjrt:{}", session.preset),
+            decode_batches: session.decode_batches(),
+            prefill_buckets: session.prefill_buckets(1),
+            max_seq: session.max_seq,
+            vocab: session.vocab,
+            measured_time: true,
+        };
+        PjrtBackend {
+            session,
+            caps,
+            cache: None,
+            slots: 0,
+        }
+    }
+}
+
+impl ComputeBackend for PjrtBackend {
+    fn capabilities(&self) -> &BackendCapabilities {
+        &self.caps
+    }
+
+    fn reset(&mut self, slots: usize) -> Result<()> {
+        anyhow::ensure!(
+            self.caps.decode_batches.contains(&slots),
+            "{}: no decode artifact for batch={slots}",
+            self.caps.name
+        );
+        self.cache = Some(self.session.empty_cache(slots)?);
+        self.slots = slots;
+        Ok(())
+    }
+
+    fn prefill(&mut self, slot: usize, prompt: &[i32], bucket: usize) -> Result<PrefillResult> {
+        anyhow::ensure!(slot < self.slots, "prefill into slot {slot} of {}", self.slots);
+        anyhow::ensure!(
+            self.cache.is_some(),
+            "PjrtBackend: no live cache (reset() not called, or lost to a prior error)"
+        );
+        let plen = prompt.len().min(bucket);
+        let mut tokens = vec![0i32; bucket];
+        tokens[..plen].copy_from_slice(&prompt[..plen]);
+        // run the fallible prefill BEFORE taking the live cache: a prefill
+        // error (the common case — e.g. no artifact for this bucket) leaves
+        // the cache intact.  An insert/decode error invalidates it (the XLA
+        // call consumes the buffers); callers must reset() before reuse.
+        let t0 = Instant::now();
+        let (next, one) = self
+            .session
+            .prefill(&tokens, 1, bucket, &[plen as i32])
+            .context("prefill")?;
+        let cache = self.cache.take().expect("checked above");
+        self.cache = Some(self.session.insert(cache, &one, slot)?);
+        Ok(PrefillResult {
+            token: next[0],
+            cost_s: t0.elapsed().as_secs_f64(),
+            bucket,
+        })
+    }
+
+    fn decode(&mut self, pos: &[i32], tokens: &[i32]) -> Result<DecodeResult> {
+        let cache = self.cache.take().context(
+            "PjrtBackend: no live cache (reset() not called, or lost to a prior error)",
+        )?;
+        let t0 = Instant::now();
+        let (next, new_cache) = self.session.decode(cache, pos, tokens)?;
+        self.cache = Some(new_cache);
+        Ok(DecodeResult {
+            tokens: next,
+            cost_s: t0.elapsed().as_secs_f64(),
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Analytic (Table-4-scale hardware in simulation)
+// ---------------------------------------------------------------------------
+
+/// Options for [`AnalyticBackend`].
+#[derive(Clone, Debug)]
+pub struct AnalyticBackendOptions {
+    pub shape: TransformerShape,
+    pub chip: ChipSpec,
+    pub chips: usize,
+    /// 2.0 = bf16 weights.
+    pub weight_bytes_per_param: f64,
+    pub decode_batches: Vec<usize>,
+    pub prefill_buckets: Vec<usize>,
+    pub max_seq: usize,
+}
+
+impl Default for AnalyticBackendOptions {
+    fn default() -> Self {
+        AnalyticBackendOptions {
+            shape: TransformerShape::llama2_7b(),
+            chip: chips::tpu_v5p(),
+            chips: 8,
+            weight_bytes_per_param: 2.0,
+            decode_batches: vec![1, 2, 4, 8, 16],
+            prefill_buckets: vec![32, 64, 128, 256, 512, 1024],
+            max_seq: 4096,
+        }
+    }
+}
+
+/// Virtual-time backend: per-call costs come from the same
+/// first-principles model as `serving::analytic::estimate_axlearn`, so
+/// the analytic latency path and the engine path are one formula.
+pub struct AnalyticBackend {
+    opts: AnalyticBackendOptions,
+    caps: BackendCapabilities,
+    slots: usize,
+}
+
+impl AnalyticBackend {
+    pub fn new(opts: AnalyticBackendOptions) -> Self {
+        let caps = BackendCapabilities {
+            name: format!(
+                "analytic:{}x{}@{}",
+                opts.shape.name, opts.chips, opts.chip.name
+            ),
+            decode_batches: opts.decode_batches.clone(),
+            prefill_buckets: opts.prefill_buckets.clone(),
+            max_seq: opts.max_seq,
+            vocab: opts.shape.vocab as usize,
+            measured_time: false,
+        };
+        AnalyticBackend {
+            opts,
+            caps,
+            slots: 0,
+        }
+    }
+}
+
+impl ComputeBackend for AnalyticBackend {
+    fn capabilities(&self) -> &BackendCapabilities {
+        &self.caps
+    }
+
+    fn reset(&mut self, slots: usize) -> Result<()> {
+        anyhow::ensure!(
+            self.caps.decode_batches.contains(&slots),
+            "{}: no decode width {slots}",
+            self.caps.name
+        );
+        self.slots = slots;
+        Ok(())
+    }
+
+    fn prefill(&mut self, slot: usize, prompt: &[i32], bucket: usize) -> Result<PrefillResult> {
+        anyhow::ensure!(slot < self.slots, "prefill into slot {slot} of {}", self.slots);
+        let est = crate::serving::analytic::estimate_axlearn(
+            &self.opts.shape,
+            &self.opts.chip,
+            self.opts.chips,
+            bucket,
+            1,
+            self.opts.weight_bytes_per_param,
+        );
+        Ok(PrefillResult {
+            token: synth_token(prompt_digest(prompt), 0, self.caps.vocab),
+            cost_s: est.ttft_s,
+            bucket,
+        })
+    }
+
+    fn decode(&mut self, pos: &[i32], tokens: &[i32]) -> Result<DecodeResult> {
+        anyhow::ensure!(
+            pos.len() == self.slots && tokens.len() == self.slots,
+            "decode width mismatch"
+        );
+        // context length for the KV-streaming term: mean active position
+        let active: Vec<i32> = pos.iter().copied().filter(|p| *p > 0).collect();
+        let ctx = if active.is_empty() {
+            1
+        } else {
+            (active.iter().map(|p| *p as usize).sum::<usize>() / active.len()).max(1)
+        };
+        let est = crate::serving::analytic::estimate_axlearn(
+            &self.opts.shape,
+            &self.opts.chip,
+            self.opts.chips,
+            ctx,
+            self.slots,
+            self.opts.weight_bytes_per_param,
+        );
+        let out = pos
+            .iter()
+            .zip(tokens)
+            .map(|(p, t)| synth_token(*p as i64, *t as i64, self.caps.vocab))
+            .collect();
+        Ok(DecodeResult {
+            tokens: out,
+            cost_s: est.tpot_s,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Mock (deterministic tests / benches)
+// ---------------------------------------------------------------------------
+
+/// Options for [`MockBackend`].
+#[derive(Clone, Debug)]
+pub struct MockBackendOptions {
+    pub prefill_base_s: f64,
+    pub prefill_per_token_s: f64,
+    pub decode_round_s: f64,
+    pub decode_batches: Vec<usize>,
+    pub prefill_buckets: Vec<usize>,
+    pub max_seq: usize,
+    pub vocab: usize,
+}
+
+impl Default for MockBackendOptions {
+    fn default() -> Self {
+        MockBackendOptions {
+            prefill_base_s: 2e-3,
+            prefill_per_token_s: 1e-5,
+            decode_round_s: 4e-3,
+            decode_batches: vec![1, 2, 4, 8, 16],
+            prefill_buckets: vec![32, 64, 128, 256, 512, 1024],
+            max_seq: 4096,
+            vocab: 2048,
+        }
+    }
+}
+
+/// Fixed-cost, fully deterministic backend: virtual time, synthetic
+/// tokens. The workhorse of scheduler unit tests and the router bench.
+pub struct MockBackend {
+    opts: MockBackendOptions,
+    caps: BackendCapabilities,
+    slots: usize,
+    pub prefill_calls: u64,
+    pub decode_calls: u64,
+}
+
+impl MockBackend {
+    pub fn new(opts: MockBackendOptions) -> Self {
+        let caps = BackendCapabilities {
+            name: "mock".into(),
+            decode_batches: opts.decode_batches.clone(),
+            prefill_buckets: opts.prefill_buckets.clone(),
+            max_seq: opts.max_seq,
+            vocab: opts.vocab,
+            measured_time: false,
+        };
+        MockBackend {
+            opts,
+            caps,
+            slots: 0,
+            prefill_calls: 0,
+            decode_calls: 0,
+        }
+    }
+}
+
+impl Default for MockBackend {
+    fn default() -> Self {
+        MockBackend::new(MockBackendOptions::default())
+    }
+}
+
+impl ComputeBackend for MockBackend {
+    fn capabilities(&self) -> &BackendCapabilities {
+        &self.caps
+    }
+
+    fn reset(&mut self, slots: usize) -> Result<()> {
+        anyhow::ensure!(
+            self.caps.decode_batches.contains(&slots),
+            "mock: no decode width {slots}"
+        );
+        self.slots = slots;
+        Ok(())
+    }
+
+    fn prefill(&mut self, slot: usize, prompt: &[i32], bucket: usize) -> Result<PrefillResult> {
+        anyhow::ensure!(slot < self.slots, "prefill into slot {slot} of {}", self.slots);
+        anyhow::ensure!(
+            self.caps.prefill_buckets.contains(&bucket),
+            "mock: no prefill bucket {bucket}"
+        );
+        self.prefill_calls += 1;
+        Ok(PrefillResult {
+            token: synth_token(prompt_digest(prompt), 0, self.caps.vocab),
+            cost_s: self.opts.prefill_base_s + self.opts.prefill_per_token_s * bucket as f64,
+            bucket,
+        })
+    }
+
+    fn decode(&mut self, pos: &[i32], tokens: &[i32]) -> Result<DecodeResult> {
+        anyhow::ensure!(
+            pos.len() == self.slots && tokens.len() == self.slots,
+            "decode width mismatch"
+        );
+        self.decode_calls += 1;
+        let out = pos
+            .iter()
+            .zip(tokens)
+            .map(|(p, t)| synth_token(*p as i64, *t as i64, self.caps.vocab))
+            .collect();
+        Ok(DecodeResult {
+            tokens: out,
+            cost_s: self.opts.decode_round_s,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Config-driven construction
+// ---------------------------------------------------------------------------
+
+fn shape_by_name(name: &str) -> Option<TransformerShape> {
+    match name {
+        "llama2_7b" => Some(TransformerShape::llama2_7b()),
+        "llama2_70b" => Some(TransformerShape::llama2_70b()),
+        other => TransformerShape::preset(other),
+    }
+}
+
+/// Build a backend from its registered config (`MockBackend` /
+/// `AnalyticBackend`). `PjrtBackend` configs carry only the preset name —
+/// the session needs a live PJRT client, so construct those with
+/// [`PjrtBackend::new`] and an opened [`ServeSession`].
+pub fn backend_from_config(cfg: &ConfigNode) -> Result<Box<dyn ComputeBackend>> {
+    match cfg.klass.as_str() {
+        "MockBackend" => {
+            let opts = MockBackendOptions {
+                prefill_base_s: cfg.get_float("prefill_base_s")?,
+                prefill_per_token_s: cfg.get_float("prefill_per_token_s")?,
+                decode_round_s: cfg.get_float("decode_round_s")?,
+                vocab: cfg.get_int("vocab")? as usize,
+                ..Default::default()
+            };
+            Ok(Box::new(MockBackend::new(opts)))
+        }
+        "AnalyticBackend" => {
+            let chip_name = cfg.get_str("chip")?;
+            let chip = chips::by_instance_type(&chip_name)
+                .with_context(|| format!("AnalyticBackend: unknown chip {chip_name:?}"))?;
+            let model = cfg.get_str("model")?;
+            let shape = shape_by_name(&model)
+                .with_context(|| format!("AnalyticBackend: unknown model {model:?}"))?;
+            let opts = AnalyticBackendOptions {
+                shape,
+                chip,
+                chips: cfg.get_int("chips")? as usize,
+                weight_bytes_per_param: cfg.get_float("weight_bytes_per_param")?,
+                ..Default::default()
+            };
+            Ok(Box::new(AnalyticBackend::new(opts)))
+        }
+        "PjrtBackend" => anyhow::bail!(
+            "PjrtBackend config (preset {:?}) needs a live runtime: open a ServeSession and use PjrtBackend::new",
+            cfg.get_str("preset").unwrap_or_default()
+        ),
+        other => anyhow::bail!("not a ComputeBackend config: {other:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mock_is_deterministic() {
+        let mut a = MockBackend::default();
+        let mut b = MockBackend::default();
+        a.reset(4).unwrap();
+        b.reset(4).unwrap();
+        let prompt: Vec<i32> = (0..20).collect();
+        let pa = a.prefill(0, &prompt, 32).unwrap();
+        let pb = b.prefill(0, &prompt, 32).unwrap();
+        assert_eq!(pa.token, pb.token);
+        assert_eq!(pa.cost_s, pb.cost_s);
+        let da = a.decode(&[20, 0, 0, 0], &[pa.token, 0, 0, 0]).unwrap();
+        let db = b.decode(&[20, 0, 0, 0], &[pb.token, 0, 0, 0]).unwrap();
+        assert_eq!(da.tokens, db.tokens);
+    }
+
+    #[test]
+    fn mock_and_analytic_emit_identical_tokens() {
+        // same synth_token function + same vocab => same streams, so
+        // scheduling traces are comparable across the two substrates
+        let mut m = MockBackend::default();
+        let mut a = AnalyticBackend::new(AnalyticBackendOptions {
+            shape: TransformerShape::preset("small").unwrap(),
+            ..Default::default()
+        });
+        assert_eq!(m.capabilities().vocab, a.capabilities().vocab);
+        m.reset(2).unwrap();
+        a.reset(2).unwrap();
+        let prompt = vec![7i32; 16];
+        assert_eq!(
+            m.prefill(0, &prompt, 32).unwrap().token,
+            a.prefill(0, &prompt, 32).unwrap().token
+        );
+        assert_eq!(
+            m.decode(&[16, 0], &[3, 0]).unwrap().tokens,
+            a.decode(&[16, 0], &[3, 0]).unwrap().tokens
+        );
+    }
+
+    #[test]
+    fn analytic_costs_track_hardware() {
+        // decode on v6e at 70B must be slower than v5p at 7B (weight
+        // streaming dominates) — the Table-4 ordering
+        let mut small = AnalyticBackend::new(AnalyticBackendOptions::default());
+        let mut big = AnalyticBackend::new(AnalyticBackendOptions {
+            shape: TransformerShape::llama2_70b(),
+            chip: chips::tpu_v6e(),
+            ..Default::default()
+        });
+        small.reset(8).unwrap();
+        big.reset(8).unwrap();
+        let pos = vec![256i32; 8];
+        let tok = vec![1i32; 8];
+        let ds = small.decode(&pos, &tok).unwrap();
+        let db = big.decode(&pos, &tok).unwrap();
+        assert!(db.cost_s > ds.cost_s, "70B {} vs 7B {}", db.cost_s, ds.cost_s);
+        assert!(ds.cost_s > 0.0);
+    }
+
+    #[test]
+    fn bucket_selection_tightest_fit() {
+        let m = MockBackend::default();
+        assert_eq!(m.bucket_for(1).unwrap(), 32);
+        assert_eq!(m.bucket_for(32).unwrap(), 32);
+        assert_eq!(m.bucket_for(33).unwrap(), 64);
+        // longer than every bucket: largest, caller truncates
+        assert_eq!(m.bucket_for(100_000).unwrap(), 1024);
+    }
+
+    #[test]
+    fn reset_validates_decode_width() {
+        let mut m = MockBackend::default();
+        assert!(m.reset(3).is_err());
+        assert!(m.reset(8).is_ok());
+    }
+
+    #[test]
+    fn backend_from_config_builds_mock_and_analytic() {
+        use crate::config::registry::default_config;
+        let mock = backend_from_config(&default_config("MockBackend").unwrap()).unwrap();
+        assert_eq!(mock.capabilities().name, "mock");
+        let ana = backend_from_config(&default_config("AnalyticBackend").unwrap()).unwrap();
+        assert!(ana.capabilities().name.starts_with("analytic:"));
+        assert!(!ana.capabilities().measured_time);
+        // pjrt configs compose, but construction needs a live session
+        assert!(backend_from_config(&default_config("PjrtBackend").unwrap()).is_err());
+    }
+}

@@ -7,11 +7,19 @@
 //! * [`executor`] — train/serve sessions keeping model state
 //!   **device-resident** (`execute_b` over `PjRtBuffer`s) so the hot loop
 //!   never round-trips tensors through host literals.
+//! * [`backend`] — the [`backend::ComputeBackend`] trait: the
+//!   hardware-agnostic boundary serving schedulers run against, with
+//!   PJRT, analytic (perfmodel-driven), and mock implementations.
 
+pub mod backend;
 pub mod client;
 pub mod executor;
 pub mod manifest;
 
+pub use backend::{
+    backend_from_config, AnalyticBackend, AnalyticBackendOptions, BackendCapabilities,
+    ComputeBackend, DecodeResult, MockBackend, MockBackendOptions, PjrtBackend, PrefillResult,
+};
 pub use client::RuntimeClient;
 pub use executor::{ServeSession, TrainSession};
 pub use manifest::{Artifact, Manifest, TensorSpec};

@@ -145,6 +145,25 @@ impl ContinuousBatcher {
         (pos, tok)
     }
 
+    /// Remove everything still queued (router re-routing on replica
+    /// failure).
+    pub fn drain_queue(&mut self) -> Vec<Request> {
+        self.queue.drain(..).collect()
+    }
+
+    /// Evict an active slot without completing it: frees the slot and
+    /// releases its KV pages. Returns the evicted request id, or `None`
+    /// if the slot was already empty.
+    pub fn evict(&mut self, slot: usize) -> Result<Option<u64>> {
+        match self.slots[slot].take() {
+            None => Ok(None),
+            Some(s) => {
+                self.alloc.release(s.request_id)?;
+                Ok(Some(s.request_id))
+            }
+        }
+    }
+
     /// Apply one decode round's outputs; returns (slot index, state) for
     /// every request that finished this round.
     pub fn on_decode(&mut self, tokens: &[i32], now: f64) -> Result<Vec<(usize, SlotState)>> {
@@ -276,6 +295,23 @@ mod tests {
         assert_eq!(finished[1].1.request_id, 1);
         assert_eq!(finished[1].1.pos, 20 + 4); // prompt + (max_new - 1 from prefill)
         assert_eq!(b.alloc.used_pages(), 0);
+    }
+
+    #[test]
+    fn evict_and_drain_release_everything() {
+        let mut b = batcher(2);
+        for i in 0..4 {
+            b.enqueue(req(i, 0.0, 16, 4));
+        }
+        let a = b.admit(0.0);
+        assert_eq!(a.len(), 2);
+        assert!(b.alloc.used_pages() > 0);
+        assert_eq!(b.evict(a[0].0).unwrap(), Some(a[0].1.id));
+        assert_eq!(b.evict(a[0].0).unwrap(), None); // already empty
+        assert_eq!(b.evict(a[1].0).unwrap(), Some(a[1].1.id));
+        assert_eq!(b.alloc.used_pages(), 0);
+        assert_eq!(b.drain_queue().len(), 2);
+        assert!(!b.has_work());
     }
 
     #[test]

@@ -1,22 +1,27 @@
-//! The real inference engine: continuous batcher + PJRT serve session.
+//! The continuous-batching engine over the [`ComputeBackend`] boundary.
 //!
-//! Time model: arrivals follow the workload's virtual clock, compute
-//! advances it by the *measured* wall time of each XLA call — so latency
-//! numbers combine a real compute substrate with a controlled arrival
-//! process (the standard serving-simulation methodology).
-
-use std::time::Instant;
+//! Time model: arrivals follow the workload's virtual clock; compute
+//! advances it by the *cost returned by the backend* — measured wall
+//! time on PJRT, modeled time on the analytic/mock substrates — so one
+//! scheduling loop serves real hardware and simulated fleets alike (the
+//! standard serving-simulation methodology).
+//!
+//! [`EngineCore`] is the steppable form: the multi-replica router drives
+//! many cores in interleaved virtual time and drains in-flight requests
+//! out of a failed replica. [`Engine`] is the run-to-completion façade.
 
 use anyhow::{Context, Result};
 
+use crate::runtime::backend::ComputeBackend;
 use crate::runtime::ServeSession;
 
 use super::batcher::{BatcherOptions, ContinuousBatcher};
-use super::workload::{aggregate, LatencyStats, RequestOutcome, Workload};
+use super::workload::{aggregate, LatencyStats, Request, RequestOutcome, Workload};
 
 /// Engine report: per-request outcomes + aggregates + counters.
 #[derive(Debug)]
 pub struct EngineReport {
+    pub backend: String,
     pub outcomes: Vec<RequestOutcome>,
     pub stats: LatencyStats,
     pub decode_rounds: u64,
@@ -24,114 +29,359 @@ pub struct EngineReport {
     pub mean_batch_occupancy: f64,
 }
 
-/// The continuous-batching engine.
-pub struct Engine {
-    session: ServeSession,
-    opts: BatcherOptions,
+/// What one scheduling iteration did — the engine's observable
+/// scheduling decisions, used to prove backend-independence in tests.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct StepEvents {
+    /// (slot, request id) pairs admitted + prefilled this step.
+    pub admitted: Vec<(usize, u64)>,
+    /// Request ids that finished this step.
+    pub finished: Vec<u64>,
+    /// Whether a decode round ran, and over how many active slots.
+    pub decode_round: bool,
+    pub occupancy: usize,
 }
 
-impl Engine {
-    pub fn new(session: ServeSession, opts: BatcherOptions) -> Self {
-        Engine { session, opts }
-    }
+/// The steppable continuous-batching core: one replica's scheduler state
+/// over one backend.
+pub struct EngineCore {
+    backend: Box<dyn ComputeBackend>,
+    batcher: ContinuousBatcher,
+    /// Originals of in-flight requests, kept for hot-swap re-routing.
+    slot_requests: Vec<Option<Request>>,
+    clock: f64,
+    outcomes: Vec<RequestOutcome>,
+    decode_rounds: u64,
+    prefills: u64,
+    occupancy_sum: usize,
+    slot_decode_time: Vec<f64>,
+}
 
-    /// Serve a whole workload to completion.
-    pub fn run(&self, workload: &Workload) -> Result<EngineReport> {
-        let slots = self.opts.slots;
-        anyhow::ensure!(
-            self.session.decode_batches().contains(&slots),
-            "no decode artifact for batch={slots}"
-        );
-        let buckets = self.session.prefill_buckets(1);
-        anyhow::ensure!(!buckets.is_empty(), "no batch-1 prefill artifacts");
-
-        let mut batcher = ContinuousBatcher::new(self.opts.clone());
-        for r in &workload.requests {
-            batcher.enqueue(r.clone());
+impl EngineCore {
+    pub fn new(mut backend: Box<dyn ComputeBackend>, opts: BatcherOptions) -> Result<Self> {
+        {
+            let caps = backend.capabilities();
+            anyhow::ensure!(
+                caps.decode_batches.contains(&opts.slots),
+                "{}: no decode graph for batch={}",
+                caps.name,
+                opts.slots
+            );
+            anyhow::ensure!(!caps.prefill_buckets.is_empty(), "{}: no prefill buckets", caps.name);
         }
-
-        let mut cache = self.session.empty_cache(slots)?;
-        let mut clock = 0.0f64;
-        let mut outcomes: Vec<RequestOutcome> = Vec::new();
-        let mut decode_rounds = 0u64;
-        let mut prefills = 0u64;
-        let mut occupancy_sum = 0usize;
-        // per-slot running TPOT accumulators
-        let mut slot_decode_time = vec![0.0f64; slots];
-
-        while batcher.has_work() {
-            // idle? jump to the next arrival
-            if batcher.active_slots() == 0 {
-                if let Some(t) = batcher.next_arrival() {
-                    if t > clock {
-                        clock = t;
-                    }
-                }
-            }
-            // admissions: prefill each into its slot
-            for (slot, req) in batcher.admit(clock) {
-                let bucket = buckets
-                    .iter()
-                    .copied()
-                    .find(|b| *b >= req.prompt.len())
-                    .unwrap_or(*buckets.last().unwrap());
-                let plen = req.prompt.len().min(bucket);
-                let mut tokens = vec![0i32; bucket];
-                tokens[..plen].copy_from_slice(&req.prompt[..plen]);
-                let t0 = Instant::now();
-                let (next, one_cache) = self
-                    .session
-                    .prefill(&tokens, 1, bucket, &[plen as i32])
-                    .context("prefill")?;
-                let new_cache = self.session.insert(cache, &one_cache, slot)?;
-                cache = new_cache;
-                clock += t0.elapsed().as_secs_f64();
-                prefills += 1;
-                batcher.on_prefill(slot, next[0], clock);
-                slot_decode_time[slot] = 0.0;
-            }
-            if batcher.active_slots() == 0 {
-                continue;
-            }
-            // one decode round for all slots
-            let (pos, tok) = batcher.decode_inputs();
-            let t0 = Instant::now();
-            let (next, new_cache) = self.session.decode(cache, &pos, &tok)?;
-            cache = new_cache;
-            let dt = t0.elapsed().as_secs_f64();
-            clock += dt;
-            decode_rounds += 1;
-            occupancy_sum += batcher.active_slots();
-            for (i, s) in batcher.slots.iter().enumerate() {
-                if s.is_some() {
-                    slot_decode_time[i] += dt;
-                }
-            }
-            for (slot, done) in batcher.on_decode(&next, clock)? {
-                let decode_tokens = done.generated.saturating_sub(1).max(1);
-                outcomes.push(RequestOutcome {
-                    id: done.request_id,
-                    arrival_s: done.arrival_s,
-                    ttft_s: done.first_token_s - done.arrival_s,
-                    tpot_s: slot_decode_time[slot] / decode_tokens as f64,
-                    output_tokens: done.generated,
-                    finish_s: clock,
-                });
-            }
-        }
-        outcomes.sort_by_key(|o| o.id);
-        let stats = aggregate(&outcomes);
-        Ok(EngineReport {
-            outcomes,
-            stats,
-            decode_rounds,
-            prefills,
-            mean_batch_occupancy: if decode_rounds > 0 {
-                occupancy_sum as f64 / decode_rounds as f64
-            } else {
-                0.0
-            },
+        backend.reset(opts.slots)?;
+        Ok(EngineCore {
+            backend,
+            batcher: ContinuousBatcher::new(opts.clone()),
+            slot_requests: vec![None; opts.slots],
+            slot_decode_time: vec![0.0; opts.slots],
+            clock: 0.0,
+            outcomes: Vec::new(),
+            decode_rounds: 0,
+            prefills: 0,
+            occupancy_sum: 0,
         })
     }
 
+    pub fn backend_name(&self) -> String {
+        self.backend.capabilities().name.clone()
+    }
+
+    pub fn enqueue(&mut self, r: Request) {
+        self.batcher.enqueue(r);
+    }
+
+    pub fn has_work(&self) -> bool {
+        self.batcher.has_work()
+    }
+
+    pub fn clock(&self) -> f64 {
+        self.clock
+    }
+
+    /// Load metric for least-loaded routing: in-flight + queued requests.
+    pub fn outstanding(&self) -> usize {
+        self.batcher.active_slots() + self.batcher.queue_len()
+    }
+
+    pub fn outcomes(&self) -> &[RequestOutcome] {
+        &self.outcomes
+    }
+
+    pub fn decode_rounds(&self) -> u64 {
+        self.decode_rounds
+    }
+
+    /// Jump the virtual clock forward (router promotion of a cold spare:
+    /// the replacement cannot serve traffic before the failure happened).
+    pub fn advance_clock_to(&mut self, t: f64) {
+        if t > self.clock {
+            self.clock = t;
+        }
+    }
+
+    /// One scheduling iteration: idle-jump, admissions (each prefilled
+    /// into its slot), then one decode round over all active slots.
+    pub fn step(&mut self) -> Result<StepEvents> {
+        let mut ev = StepEvents::default();
+        if !self.batcher.has_work() {
+            return Ok(ev);
+        }
+        // idle? jump to the next arrival
+        if self.batcher.active_slots() == 0 {
+            if let Some(t) = self.batcher.next_arrival() {
+                if t > self.clock {
+                    self.clock = t;
+                }
+            }
+        }
+        // admissions: prefill each into its slot
+        for (slot, req) in self.batcher.admit(self.clock) {
+            let bucket = self.backend.bucket_for(req.prompt.len())?;
+            let pr = self.backend.prefill(slot, &req.prompt, bucket).context("prefill")?;
+            self.clock += pr.cost_s;
+            self.prefills += 1;
+            self.batcher.on_prefill(slot, pr.token, self.clock);
+            self.slot_decode_time[slot] = 0.0;
+            ev.admitted.push((slot, req.id));
+            self.slot_requests[slot] = Some(req);
+        }
+        if self.batcher.active_slots() == 0 {
+            // nothing admitted: either future arrivals (fine) or a head
+            // request that can never fit the KV pool (fail loudly rather
+            // than spin forever)
+            if let Some(t) = self.batcher.next_arrival() {
+                anyhow::ensure!(
+                    t > self.clock,
+                    "head-of-line request cannot be admitted: demand exceeds the KV page pool"
+                );
+            }
+            return Ok(ev);
+        }
+        // one decode round for all slots
+        let (pos, tok) = self.batcher.decode_inputs();
+        let dr = self.backend.decode(&pos, &tok)?;
+        self.clock += dr.cost_s;
+        self.decode_rounds += 1;
+        ev.decode_round = true;
+        ev.occupancy = self.batcher.active_slots();
+        self.occupancy_sum += ev.occupancy;
+        for (i, s) in self.batcher.slots.iter().enumerate() {
+            if s.is_some() {
+                self.slot_decode_time[i] += dr.cost_s;
+            }
+        }
+        for (slot, done) in self.batcher.on_decode(&dr.tokens, self.clock)? {
+            let decode_tokens = done.generated.saturating_sub(1).max(1);
+            self.outcomes.push(RequestOutcome {
+                id: done.request_id,
+                arrival_s: done.arrival_s,
+                ttft_s: done.first_token_s - done.arrival_s,
+                tpot_s: self.slot_decode_time[slot] / decode_tokens as f64,
+                output_tokens: done.generated,
+                finish_s: self.clock,
+            });
+            ev.finished.push(done.request_id);
+            self.slot_requests[slot] = None;
+        }
+        Ok(ev)
+    }
+
+    /// Pull every unfinished request out of this replica — queued ones
+    /// plus in-flight ones (evicted from their slots, KV pages released;
+    /// they restart from scratch on whichever replica they land on).
+    /// Used by the router when a replica fails.
+    pub fn drain(&mut self) -> Result<Vec<Request>> {
+        let mut out = Vec::new();
+        for slot in 0..self.slot_requests.len() {
+            if let Some(r) = self.slot_requests[slot].take() {
+                self.batcher.evict(slot)?;
+                out.push(r);
+            }
+        }
+        out.extend(self.batcher.drain_queue());
+        Ok(out)
+    }
+
+    /// Snapshot the report for everything completed so far.
+    pub fn report(&self) -> EngineReport {
+        let mut outcomes = self.outcomes.clone();
+        outcomes.sort_by_key(|o| o.id);
+        let stats = aggregate(&outcomes);
+        EngineReport {
+            backend: self.backend_name(),
+            outcomes,
+            stats,
+            decode_rounds: self.decode_rounds,
+            prefills: self.prefills,
+            // guard: an empty workload has zero decode rounds; 0/0 would
+            // silently poison downstream aggregation with NaN
+            mean_batch_occupancy: if self.decode_rounds > 0 {
+                self.occupancy_sum as f64 / self.decode_rounds as f64
+            } else {
+                0.0
+            },
+        }
+    }
+}
+
+/// The run-to-completion continuous-batching engine over any backend.
+pub struct Engine {
+    core: EngineCore,
+}
+
+impl Engine {
+    pub fn new(backend: Box<dyn ComputeBackend>, opts: BatcherOptions) -> Result<Self> {
+        Ok(Engine {
+            core: EngineCore::new(backend, opts)?,
+        })
+    }
+
+    /// Convenience: wrap an opened PJRT serve session.
+    pub fn from_session(session: ServeSession, opts: BatcherOptions) -> Result<Self> {
+        Engine::new(Box::new(crate::runtime::PjrtBackend::new(session)), opts)
+    }
+
+    /// Serve a whole workload to completion.
+    pub fn run(&mut self, workload: &Workload) -> Result<EngineReport> {
+        for r in &workload.requests {
+            self.core.enqueue(r.clone());
+        }
+        while self.core.has_work() {
+            self.core.step()?;
+        }
+        Ok(self.core.report())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::backend::MockBackend;
+    use crate::serving::workload::WorkloadOptions;
+
+    fn mock_engine(slots: usize) -> Engine {
+        Engine::new(
+            Box::new(MockBackend::default()),
+            BatcherOptions {
+                slots,
+                kv_pages: 1024,
+                page_tokens: 16,
+            },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn empty_workload_yields_finite_report() {
+        // regression: mean_batch_occupancy must be 0.0, never NaN, when
+        // no decode round ever runs
+        let mut e = mock_engine(4);
+        let w = Workload {
+            requests: Vec::new(),
+            opts: WorkloadOptions::default(),
+        };
+        let report = e.run(&w).unwrap();
+        assert_eq!(report.outcomes.len(), 0);
+        assert_eq!(report.decode_rounds, 0);
+        assert_eq!(report.mean_batch_occupancy, 0.0);
+        assert!(!report.mean_batch_occupancy.is_nan());
+    }
+
+    #[test]
+    fn mock_engine_serves_all_requests() {
+        let mut e = mock_engine(4);
+        let w = Workload::sharegpt_like(WorkloadOptions {
+            num_requests: 20,
+            request_rate: 50.0,
+            max_input_len: 64,
+            max_output_len: 8,
+            vocab: 2048,
+            seed: 5,
+        });
+        let report = e.run(&w).unwrap();
+        assert_eq!(report.outcomes.len(), 20);
+        for o in &report.outcomes {
+            assert!(o.ttft_s > 0.0);
+            assert!(o.finish_s >= o.arrival_s);
+            assert!(o.output_tokens >= 1);
+        }
+        assert!(report.mean_batch_occupancy > 0.0);
+        assert!(report.prefills == 20);
+    }
+
+    #[test]
+    fn runs_are_deterministic_on_mock() {
+        let w = Workload::sharegpt_like(WorkloadOptions {
+            num_requests: 12,
+            request_rate: 20.0,
+            max_input_len: 48,
+            max_output_len: 6,
+            vocab: 2048,
+            seed: 9,
+        });
+        let a = mock_engine(2).run(&w).unwrap();
+        let b = mock_engine(2).run(&w).unwrap();
+        assert_eq!(a.decode_rounds, b.decode_rounds);
+        assert_eq!(a.outcomes.len(), b.outcomes.len());
+        for (x, y) in a.outcomes.iter().zip(&b.outcomes) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.output_tokens, y.output_tokens);
+            assert_eq!(x.finish_s, y.finish_s);
+        }
+    }
+
+    #[test]
+    fn oversized_head_request_errors_instead_of_spinning() {
+        let mut e = Engine::new(
+            Box::new(MockBackend::default()),
+            BatcherOptions {
+                slots: 2,
+                kv_pages: 2,
+                page_tokens: 16,
+            },
+        )
+        .unwrap();
+        let w = Workload {
+            requests: vec![Request {
+                id: 0,
+                arrival_s: 0.0,
+                prompt: vec![1; 100], // 100+8 tokens > 2 pages * 16
+                max_new_tokens: 8,
+            }],
+            opts: WorkloadOptions::default(),
+        };
+        assert!(e.run(&w).is_err());
+    }
+
+    #[test]
+    fn drain_returns_inflight_and_queued() {
+        let mut core = EngineCore::new(
+            Box::new(MockBackend::default()),
+            BatcherOptions {
+                slots: 2,
+                kv_pages: 1024,
+                page_tokens: 16,
+            },
+        )
+        .unwrap();
+        for id in 0..5u64 {
+            core.enqueue(Request {
+                id,
+                arrival_s: 0.0,
+                prompt: vec![3; 16],
+                max_new_tokens: 10,
+            });
+        }
+        // admit 2 into slots, decode once; 3 remain queued
+        core.step().unwrap();
+        assert_eq!(core.outstanding(), 5);
+        let drained = core.drain().unwrap();
+        assert_eq!(drained.len(), 5);
+        assert!(!core.has_work());
+        assert_eq!(core.outstanding(), 0);
+        let mut ids: Vec<u64> = drained.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4]);
+    }
 }

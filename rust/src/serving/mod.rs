@@ -3,24 +3,35 @@
 //! artifacts, exactly the paper's "surprising discovery" that a training
 //! system yields an efficient inference engine.
 //!
+//! Every scheduler here runs against the hardware-agnostic
+//! [`crate::runtime::backend::ComputeBackend`] boundary, so policies and
+//! substrates (PJRT, analytic, mock) compose freely:
+//!
 //! * [`workload`] — ShareGPT-like request generator (prompt/output length
-//!   distributions + Poisson arrivals).
-//! * [`paged`] — paged KV allocator (page tables, free lists, admission).
-//! * [`batcher`] — slot-based continuous batcher.
-//! * [`engine`] — the real engine over [`crate::runtime::ServeSession`].
+//!   distributions + Poisson arrivals) and fleet-level aggregation.
+//! * [`paged`] — paged KV allocator: page tables, free lists, worst-case
+//!   admission (plus an `extend` primitive for incremental policies).
+//! * [`batcher`] — slot-based continuous batcher (pure scheduling).
+//! * [`engine`] — the continuous-batching engine; [`engine::EngineCore`]
+//!   is its steppable form, driven replica-by-replica by the router.
 //! * [`baseline`] — the "vLLM-on-TPU (experimental)" behavioral baseline:
-//!   static batching, bucket-padding, shape-recompilation stalls.
-//! * [`analytic`] — Table-4-scale analytic latency model (7B/70B on
-//!   v5p/v6e, where the real hardware is unavailable).
+//!   static batching, bucket-padding, shape-recompilation stalls — a
+//!   scheduling-policy variant over the *same* backend.
+//! * [`router`] — multi-replica router: least-loaded admission over N
+//!   per-replica batchers, hot-swap spare promotion on replica failure.
+//! * [`analytic`] — Table-4-scale analytic latency formulas (shared by
+//!   the analytic backend, so simulation and estimation stay one model).
 
 pub mod analytic;
 pub mod baseline;
 pub mod batcher;
 pub mod engine;
 pub mod paged;
+pub mod router;
 pub mod workload;
 
 pub use batcher::{BatcherOptions, ContinuousBatcher};
-pub use engine::{Engine, EngineReport};
+pub use engine::{Engine, EngineCore, EngineReport, StepEvents};
 pub use paged::PagedKvAllocator;
+pub use router::{router_from_config, FailureEvent, ReplicaRouter, RouterOptions, RouterReport};
 pub use workload::{Request, RequestOutcome, Workload, WorkloadOptions};

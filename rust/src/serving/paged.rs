@@ -65,6 +65,43 @@ impl PagedKvAllocator {
         Ok(())
     }
 
+    /// Can request `id`'s reservation grow to cover `total_tokens`?
+    pub fn can_extend(&self, id: u64, total_tokens: usize) -> bool {
+        match self.tables.get(&id) {
+            None => false,
+            Some(pages) => self.pages_for(total_tokens).saturating_sub(pages.len()) <= self.free.len(),
+        }
+    }
+
+    /// Grow request `id`'s reservation to cover `total_tokens` in total.
+    /// This is the primitive for incremental-allocation policies (admit
+    /// with the prompt, extend page by page as decode proceeds); the
+    /// shipped continuous batcher still reserves worst-case upfront in
+    /// [`Self::admit`].  Returns the number of pages newly allocated;
+    /// shrinking never happens here — pages are returned only by
+    /// [`Self::release`].
+    pub fn extend(&mut self, id: u64, total_tokens: usize) -> Result<usize> {
+        let need = self.pages_for(total_tokens);
+        let have = match self.tables.get(&id) {
+            None => bail!("extend of unknown request {id}"),
+            Some(pages) => pages.len(),
+        };
+        if need <= have {
+            return Ok(0);
+        }
+        let extra = need - have;
+        if extra > self.free.len() {
+            bail!(
+                "extend rejected: request {id} needs {extra} more pages, {} free",
+                self.free.len()
+            );
+        }
+        let mut newly: Vec<usize> = (0..extra).map(|_| self.free.pop().unwrap()).collect();
+        self.tables.get_mut(&id).unwrap().append(&mut newly);
+        self.peak_used = self.peak_used.max(self.used_pages());
+        Ok(extra)
+    }
+
     /// Release a finished request's pages.
     pub fn release(&mut self, id: u64) -> Result<usize> {
         match self.tables.remove(&id) {
@@ -171,6 +208,32 @@ mod tests {
         }
         assert_eq!(a.free_pages(), 32);
         assert_eq!(a.active_requests(), 0);
+    }
+
+    #[test]
+    fn extend_allocates_only_the_difference() {
+        let mut a = PagedKvAllocator::new(8, 16);
+        a.admit(1, 20, 0).unwrap(); // 2 pages for 20 tokens
+        assert_eq!(a.used_pages(), 2);
+        assert_eq!(a.extend(1, 30).unwrap(), 0); // still fits in 2 pages
+        assert_eq!(a.extend(1, 33).unwrap(), 1); // 3rd page
+        assert_eq!(a.extend(1, 100).unwrap(), 4); // up to 7 pages
+        assert_eq!(a.used_pages(), 7);
+        assert_eq!(a.page_table(1).unwrap().len(), 7);
+        assert_eq!(a.release(1).unwrap(), 7);
+        assert_eq!(a.free_pages(), 8);
+    }
+
+    #[test]
+    fn extend_rejects_over_capacity_and_unknown() {
+        let mut a = PagedKvAllocator::new(4, 16);
+        a.admit(1, 16, 0).unwrap(); // 1 page
+        assert!(a.can_extend(1, 64));
+        assert!(!a.can_extend(1, 65)); // would need a 5th page
+        assert!(a.extend(1, 1000).is_err());
+        assert_eq!(a.used_pages(), 1, "failed extend must not partially allocate");
+        assert!(a.extend(99, 16).is_err());
+        assert!(!a.can_extend(99, 16));
     }
 
     #[test]

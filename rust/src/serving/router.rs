@@ -1,0 +1,469 @@
+//! Multi-replica serving router (ROADMAP north-star: heavy traffic, as
+//! fast as the hardware allows).
+//!
+//! Topology: one router in front of N per-replica continuous batchers
+//! ([`crate::serving::engine::EngineCore`]), each with its own
+//! [`ComputeBackend`] and paged KV pool.  Admission is least-loaded
+//! (outstanding = in-flight + queued, lowest replica id breaks ties).
+//! Replicas advance independent virtual clocks; the router interleaves
+//! them event-by-event, always stepping the laggard, so fleet-level
+//! latency numbers are causally consistent.
+//!
+//! Resilience reuses §5's slice machinery: the fleet is
+//! `replicas` active + `spares` over-provisioned workers under a
+//! [`HotSwapScheduler`].  When a replica fails, its in-flight and queued
+//! requests are drained ([`EngineCore::drain`]) and re-routed; a spare
+//! (if any) is promoted with its clock advanced to the failure time —
+//! restart semantics, exactly like training recovery.  Failure injection
+//! is step-granular: the event takes effect at the next scheduling-step
+//! boundary, so work a replica completes inside the step that overshoots
+//! `at_s` stands (the overshoot is bounded by one admission+decode
+//! round).
+//!
+//! Fleet metrics go through the existing [`super::workload::aggregate`],
+//! so Table-4-style stats read identically for one engine or a fleet.
+
+use anyhow::{Context, Result};
+
+use crate::config::ConfigNode;
+use crate::distributed::scheduler::{HotSwapScheduler, SliceState};
+use crate::runtime::backend::{backend_from_config, ComputeBackend};
+
+use super::batcher::BatcherOptions;
+use super::engine::EngineCore;
+use super::workload::{aggregate, LatencyStats, Request, RequestOutcome, Workload};
+
+#[derive(Clone, Debug)]
+pub struct RouterOptions {
+    /// Active replicas serving traffic.
+    pub replicas: usize,
+    /// Over-provisioned spares for hot swap.
+    pub spares: usize,
+    /// Per-replica continuous-batcher options.
+    pub batcher: BatcherOptions,
+}
+
+impl Default for RouterOptions {
+    fn default() -> Self {
+        RouterOptions {
+            replicas: 2,
+            spares: 0,
+            batcher: BatcherOptions::default(),
+        }
+    }
+}
+
+/// An injected replica failure at a fleet-virtual time.
+#[derive(Clone, Copy, Debug)]
+pub struct FailureEvent {
+    pub replica: usize,
+    pub at_s: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct ReplicaStats {
+    pub id: usize,
+    pub backend: String,
+    pub state: SliceState,
+    pub served: usize,
+    pub routed: u64,
+    pub decode_rounds: u64,
+    pub finish_clock_s: f64,
+}
+
+#[derive(Debug)]
+pub struct RouterReport {
+    pub outcomes: Vec<RequestOutcome>,
+    pub stats: LatencyStats,
+    pub per_replica: Vec<ReplicaStats>,
+    /// Requests pulled out of a failed replica and re-admitted elsewhere.
+    pub reroutes: u64,
+    /// Spare promotions performed by the hot-swap scheduler.
+    pub swaps: u64,
+}
+
+/// The multi-replica router.
+pub struct ReplicaRouter {
+    workers: Vec<EngineCore>,
+    routed: Vec<u64>,
+    scheduler: HotSwapScheduler,
+    reroutes: u64,
+}
+
+impl ReplicaRouter {
+    /// One backend per worker: the first `opts.replicas` start active,
+    /// the rest are spares awaiting promotion.
+    pub fn new(backends: Vec<Box<dyn ComputeBackend>>, opts: RouterOptions) -> Result<Self> {
+        anyhow::ensure!(opts.replicas > 0, "router needs at least one active replica");
+        anyhow::ensure!(
+            backends.len() == opts.replicas + opts.spares,
+            "router needs {} backends (replicas + spares), got {}",
+            opts.replicas + opts.spares,
+            backends.len()
+        );
+        let workers = backends
+            .into_iter()
+            .map(|b| EngineCore::new(b, opts.batcher.clone()))
+            .collect::<Result<Vec<_>>>()?;
+        let routed = vec![0; workers.len()];
+        Ok(ReplicaRouter {
+            workers,
+            routed,
+            scheduler: HotSwapScheduler::new(opts.replicas, opts.spares),
+            reroutes: 0,
+        })
+    }
+
+    fn is_active(&self, id: usize) -> bool {
+        self.scheduler.state(id) == Some(SliceState::Active)
+    }
+
+    /// Least-loaded admission over the active set.
+    fn route(&mut self, r: Request) -> Result<()> {
+        let target = (0..self.workers.len())
+            .filter(|i| self.is_active(*i))
+            .min_by_key(|i| (self.workers[*i].outstanding(), *i))
+            .context("no active replicas left to route to")?;
+        self.routed[target] += 1;
+        self.workers[target].enqueue(r);
+        Ok(())
+    }
+
+    /// Fail a replica at fleet time `at_s`: drain its unfinished
+    /// requests, promote a spare if available (clock advanced to the
+    /// failure time), and re-route the drained requests.
+    fn fail_replica(&mut self, id: usize, at_s: f64) -> Result<()> {
+        if id >= self.workers.len() || !self.is_active(id) {
+            return Ok(()); // already failed / a spare / out of range
+        }
+        let drained = self.workers[id].drain()?;
+        let _promoted = self.scheduler.handle_failure(id);
+        // Causality: a drained request must not be re-served before the
+        // failure that evicted it.  Busy survivors already have
+        // clock >= at_s (the event loop fires the failure only once the
+        // laggard reaches it); idle survivors and the promoted spare sat
+        // idle in wall time, so jump them to the failure instant.
+        for i in 0..self.workers.len() {
+            if self.is_active(i) {
+                self.workers[i].advance_clock_to(at_s);
+            }
+        }
+        self.reroutes += drained.len() as u64;
+        for r in drained {
+            self.route(r)?;
+        }
+        Ok(())
+    }
+
+    /// Serve a workload across the fleet, injecting `failures` at their
+    /// scheduled fleet times. Runs to completion.
+    pub fn run(&mut self, workload: &Workload, failures: &[FailureEvent]) -> Result<RouterReport> {
+        let mut arrivals: Vec<Request> = workload.requests.clone();
+        arrivals.sort_by(|a, b| {
+            a.arrival_s
+                .partial_cmp(&b.arrival_s)
+                .unwrap()
+                .then(a.id.cmp(&b.id))
+        });
+        let mut fails: Vec<FailureEvent> = failures.to_vec();
+        fails.sort_by(|a, b| a.at_s.partial_cmp(&b.at_s).unwrap());
+        let mut ai = 0usize;
+        let mut fi = 0usize;
+
+        loop {
+            // next decode event: the laggard active worker with work
+            let step_target = (0..self.workers.len())
+                .filter(|i| self.is_active(*i) && self.workers[*i].has_work())
+                .min_by(|a, b| {
+                    self.workers[*a]
+                        .clock()
+                        .partial_cmp(&self.workers[*b].clock())
+                        .unwrap()
+                });
+            let t_step = step_target
+                .map(|i| self.workers[i].clock())
+                .unwrap_or(f64::INFINITY);
+            let t_arr = arrivals
+                .get(ai)
+                .map(|r| r.arrival_s)
+                .unwrap_or(f64::INFINITY);
+            let t_fail = fails.get(fi).map(|f| f.at_s).unwrap_or(f64::INFINITY);
+
+            if step_target.is_none() && t_arr.is_infinite() && t_fail.is_infinite() {
+                break;
+            }
+            if t_fail <= t_arr && t_fail <= t_step {
+                let ev = fails[fi];
+                fi += 1;
+                self.fail_replica(ev.replica, ev.at_s)?;
+            } else if t_arr <= t_step {
+                let r = arrivals[ai].clone();
+                ai += 1;
+                self.route(r)?;
+            } else {
+                self.workers[step_target.unwrap()].step()?;
+            }
+        }
+        Ok(self.report())
+    }
+
+    /// Fleet-level report over everything completed so far.
+    pub fn report(&self) -> RouterReport {
+        let mut outcomes: Vec<RequestOutcome> = self
+            .workers
+            .iter()
+            .flat_map(|w| w.outcomes().iter().cloned())
+            .collect();
+        outcomes.sort_by_key(|o| o.id);
+        let stats = aggregate(&outcomes);
+        let per_replica = self
+            .workers
+            .iter()
+            .enumerate()
+            .map(|(i, w)| ReplicaStats {
+                id: i,
+                backend: w.backend_name(),
+                state: self.scheduler.state(i).unwrap_or(SliceState::Failed),
+                served: w.outcomes().len(),
+                routed: self.routed[i],
+                decode_rounds: w.decode_rounds(),
+                finish_clock_s: w.clock(),
+            })
+            .collect();
+        RouterReport {
+            outcomes,
+            stats,
+            per_replica,
+            reroutes: self.reroutes,
+            swaps: self.scheduler.swaps,
+        }
+    }
+}
+
+/// Build a router from a registered `ServeRouter` config: backend ×
+/// policy × replica-count compose exactly like trainer configs.
+pub fn router_from_config(cfg: &ConfigNode) -> Result<ReplicaRouter> {
+    anyhow::ensure!(
+        cfg.klass == "ServeRouter",
+        "expected a ServeRouter config, got {:?}",
+        cfg.klass
+    );
+    let replicas = cfg.get_int("replicas")? as usize;
+    let spares = cfg.get_int("spares")? as usize;
+    let policy = cfg.child("policy")?;
+    anyhow::ensure!(
+        policy.klass == "ContinuousBatchingPolicy",
+        "router policy must be ContinuousBatchingPolicy, got {:?}",
+        policy.klass
+    );
+    let batcher = BatcherOptions {
+        slots: policy.get_int("slots")? as usize,
+        kv_pages: policy.get_int("kv_pages")? as usize,
+        page_tokens: policy.get_int("page_tokens")? as usize,
+    };
+    let backend_cfg = cfg.child("backend")?;
+    let backends = (0..replicas + spares)
+        .map(|_| backend_from_config(backend_cfg))
+        .collect::<Result<Vec<_>>>()?;
+    ReplicaRouter::new(
+        backends,
+        RouterOptions {
+            replicas,
+            spares,
+            batcher,
+        },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::backend::MockBackend;
+    use crate::serving::workload::WorkloadOptions;
+
+    fn fleet(replicas: usize, spares: usize) -> ReplicaRouter {
+        let backends: Vec<Box<dyn ComputeBackend>> = (0..replicas + spares)
+            .map(|_| Box::new(MockBackend::default()) as Box<dyn ComputeBackend>)
+            .collect();
+        ReplicaRouter::new(
+            backends,
+            RouterOptions {
+                replicas,
+                spares,
+                batcher: BatcherOptions {
+                    slots: 4,
+                    kv_pages: 1024,
+                    page_tokens: 16,
+                },
+            },
+        )
+        .unwrap()
+    }
+
+    fn workload(n: usize, rate: f64, seed: u64) -> Workload {
+        Workload::sharegpt_like(WorkloadOptions {
+            num_requests: n,
+            request_rate: rate,
+            max_input_len: 64,
+            max_output_len: 10,
+            vocab: 2048,
+            seed,
+        })
+    }
+
+    #[test]
+    fn fleet_serves_every_request_exactly_once() {
+        let mut router = fleet(3, 0);
+        let w = workload(30, 40.0, 1);
+        let report = router.run(&w, &[]).unwrap();
+        assert_eq!(report.outcomes.len(), 30);
+        let ids: Vec<u64> = report.outcomes.iter().map(|o| o.id).collect();
+        assert_eq!(ids, (0..30).collect::<Vec<u64>>());
+        assert_eq!(report.reroutes, 0);
+        assert_eq!(report.swaps, 0);
+        // least-loaded admission actually spreads the load
+        let routed: Vec<u64> = report.per_replica.iter().map(|r| r.routed).collect();
+        assert!(routed.iter().all(|&n| n > 0), "{routed:?}");
+    }
+
+    #[test]
+    fn single_replica_matches_plain_engine() {
+        use crate::serving::Engine;
+        let w = workload(12, 30.0, 3);
+        let mut router = fleet(1, 0);
+        let fleet_report = router.run(&w, &[]).unwrap();
+        let engine_report = Engine::new(
+            Box::new(MockBackend::default()),
+            BatcherOptions {
+                slots: 4,
+                kv_pages: 1024,
+                page_tokens: 16,
+            },
+        )
+        .unwrap()
+        .run(&w)
+        .unwrap();
+        assert_eq!(fleet_report.outcomes.len(), engine_report.outcomes.len());
+        for (a, b) in fleet_report.outcomes.iter().zip(&engine_report.outcomes) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.output_tokens, b.output_tokens);
+            assert!((a.finish_s - b.finish_s).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn throughput_scales_with_replicas() {
+        // saturating burst: more replicas must increase fleet throughput
+        let w = workload(64, f64::INFINITY, 5);
+        let mut prev = 0.0;
+        for n in [1usize, 2, 4] {
+            let report = fleet(n, 0).run(&w, &[]).unwrap();
+            assert_eq!(report.outcomes.len(), 64);
+            assert!(
+                report.stats.throughput_tok_s > prev,
+                "{n} replicas: {} <= {prev}",
+                report.stats.throughput_tok_s
+            );
+            prev = report.stats.throughput_tok_s;
+        }
+    }
+
+    #[test]
+    fn failure_drains_and_hot_swaps() {
+        let mut router = fleet(2, 1);
+        // burst: both replicas are saturated when the failure lands
+        let w = workload(40, f64::INFINITY, 7);
+        let report = router
+            .run(&w, &[FailureEvent { replica: 0, at_s: 0.05 }])
+            .unwrap();
+        // every request still completes exactly once
+        assert_eq!(report.outcomes.len(), 40);
+        assert_eq!(report.swaps, 1);
+        assert!(report.reroutes > 0, "failure at t=0.05 should catch in-flight work");
+        // the promoted spare (id 2) served traffic
+        assert_eq!(report.per_replica[2].state, SliceState::Active);
+        assert!(report.per_replica[2].served > 0);
+        assert_eq!(report.per_replica[0].state, SliceState::Failed);
+        // promoted spare cannot have served anything before the failure
+        for o in &report.outcomes {
+            assert!(o.finish_s >= o.arrival_s);
+        }
+    }
+
+    #[test]
+    fn failure_without_spare_degrades_but_completes() {
+        let mut router = fleet(2, 0);
+        let w = workload(20, 50.0, 9);
+        let report = router
+            .run(&w, &[FailureEvent { replica: 1, at_s: 0.04 }])
+            .unwrap();
+        assert_eq!(report.outcomes.len(), 20);
+        assert_eq!(report.swaps, 0);
+        // all remaining traffic lands on replica 0
+        assert_eq!(report.per_replica[1].state, SliceState::Failed);
+    }
+
+    #[test]
+    fn rerouted_requests_cannot_finish_before_the_failure() {
+        // causality regression: an idle survivor must not serve a drained
+        // request at its own (lagging) clock, i.e. "before" the failure
+        let mut router = fleet(2, 0);
+        let w = Workload {
+            requests: vec![
+                Request {
+                    id: 0,
+                    arrival_s: 0.0,
+                    prompt: vec![1; 16],
+                    max_new_tokens: 2, // replica 0 goes idle almost immediately
+                },
+                Request {
+                    id: 1,
+                    arrival_s: 0.0,
+                    prompt: vec![2; 16],
+                    max_new_tokens: 200, // still in flight on replica 1 at t=0.5
+                },
+            ],
+            opts: WorkloadOptions::default(),
+        };
+        let report = router
+            .run(&w, &[FailureEvent { replica: 1, at_s: 0.5 }])
+            .unwrap();
+        assert_eq!(report.outcomes.len(), 2);
+        assert_eq!(report.reroutes, 1);
+        let r1 = report.outcomes.iter().find(|o| o.id == 1).unwrap();
+        assert!(
+            r1.ttft_s >= 0.5,
+            "rerouted request got its first token at {} — before the failure",
+            r1.ttft_s
+        );
+        assert!(r1.finish_s >= 0.5);
+    }
+
+    #[test]
+    fn duplicate_failure_events_are_idempotent() {
+        let mut router = fleet(2, 1);
+        let w = workload(16, 80.0, 11);
+        let report = router
+            .run(
+                &w,
+                &[
+                    FailureEvent { replica: 0, at_s: 0.03 },
+                    FailureEvent { replica: 0, at_s: 0.06 },
+                ],
+            )
+            .unwrap();
+        assert_eq!(report.outcomes.len(), 16);
+        assert_eq!(report.swaps, 1);
+    }
+
+    #[test]
+    fn router_composes_from_config() {
+        use crate::config::registry::default_config;
+        let cfg = default_config("ServeRouter").unwrap();
+        let mut router = router_from_config(&cfg).unwrap();
+        let w = workload(10, 30.0, 13);
+        let report = router.run(&w, &[]).unwrap();
+        assert_eq!(report.outcomes.len(), 10);
+        assert_eq!(report.per_replica.len(), 3); // 2 active + 1 spare
+    }
+}

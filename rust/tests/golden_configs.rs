@@ -7,7 +7,7 @@ use axlearn::config::registry::trainer_for_preset;
 
 fn check(preset: &str) {
     let path = axlearn::repo_root().join(format!("rust/golden/{preset}.golden"));
-    let actual = to_golden_string(&trainer_for_preset(preset));
+    let actual = to_golden_string(&trainer_for_preset(preset).unwrap());
     if std::env::var("UPDATE_GOLDEN").is_ok() || !path.exists() {
         std::fs::create_dir_all(path.parent().unwrap()).unwrap();
         std::fs::write(&path, &actual).unwrap();
@@ -17,8 +17,8 @@ fn check(preset: &str) {
     if actual != expected {
         // a config change: show the reviewable diff, as the paper intends
         let (only_old, only_new) = axlearn::config::config_diff(
-            &trainer_for_preset(preset),
-            &trainer_for_preset(preset),
+            &trainer_for_preset(preset).unwrap(),
+            &trainer_for_preset(preset).unwrap(),
         );
         panic!(
             "golden config {preset} changed!\n--- committed\n+++ current\n{:?}\n{:?}\n\
@@ -57,10 +57,10 @@ fn golden_files_match_current_presets() {
 fn moe_swap_diff_is_localized() {
     use axlearn::config::registry::default_config;
     use axlearn::config::{config_diff, replace_config};
-    let base = trainer_for_preset("small");
+    let base = trainer_for_preset("small").unwrap();
     let mut moe = base.clone();
     replace_config(&mut moe, "FeedForward", &|old| {
-        default_config("MoE").with("input_dim", old.get("input_dim").unwrap().clone())
+        default_config("MoE").unwrap().with("input_dim", old.get("input_dim").unwrap().clone())
     });
     let (a, b) = config_diff(&base, &moe);
     assert!(!b.is_empty());

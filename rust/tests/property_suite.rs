@@ -88,13 +88,92 @@ fn manifest_parser_never_panics_on_corrupted_input() {
 }
 
 #[test]
+fn paged_allocator_exact_accounting_under_admit_extend_release() {
+    // randomized admit/extend/release storm with a shadow model: at every
+    // step the allocator's page accounting must match the model exactly,
+    // pages across live requests must be disjoint, and nothing may leak.
+    use axlearn::serving::PagedKvAllocator;
+    use std::collections::{BTreeMap, HashSet};
+    for seed in [101u64, 202, 303] {
+        let mut rng = Rng::new(seed);
+        let total_pages = 48;
+        let page_tokens = 8;
+        let mut a = PagedKvAllocator::new(total_pages, page_tokens);
+        // shadow model: id -> total tokens reserved so far
+        let mut model: BTreeMap<u64, usize> = BTreeMap::new();
+        for i in 0..600u64 {
+            match rng.gen_range(0, 3) {
+                0 => {
+                    // admit a fresh request with a prompt-only reservation
+                    let toks = rng.gen_range(1, 60) as usize;
+                    if a.can_admit(toks, 0) {
+                        a.admit(i, toks, 0).unwrap();
+                        model.insert(i, toks);
+                    } else {
+                        assert!(a.admit(i, toks, 0).is_err());
+                    }
+                }
+                1 => {
+                    // extend a random live request (decode grew)
+                    if !model.is_empty() {
+                        let idx = rng.gen_range(0, model.len() as u64) as usize;
+                        let (&id, &toks) = model.iter().nth(idx).unwrap();
+                        let grown = toks + rng.gen_range(1, 24) as usize;
+                        if a.can_extend(id, grown) {
+                            a.extend(id, grown).unwrap();
+                            model.insert(id, grown);
+                        } else {
+                            let before = a.used_pages();
+                            assert!(a.extend(id, grown).is_err());
+                            // a rejected extend must not partially allocate
+                            assert_eq!(a.used_pages(), before);
+                        }
+                    }
+                }
+                _ => {
+                    // release a random live request
+                    if !model.is_empty() {
+                        let idx = rng.gen_range(0, model.len() as u64) as usize;
+                        let id = *model.keys().nth(idx).unwrap();
+                        let toks = model.remove(&id).unwrap();
+                        let freed = a.release(id).unwrap();
+                        assert_eq!(freed, toks.div_ceil(page_tokens), "release returned wrong page count");
+                    }
+                }
+            }
+            // exact accounting vs the shadow model
+            let expected_used: usize = model.values().map(|t| t.div_ceil(page_tokens)).sum();
+            assert_eq!(a.used_pages(), expected_used);
+            assert_eq!(a.free_pages(), total_pages - expected_used);
+            assert_eq!(a.active_requests(), model.len());
+            // disjointness: no page belongs to two live requests
+            let mut seen = HashSet::new();
+            for id in model.keys() {
+                let table = a.page_table(*id).unwrap();
+                assert_eq!(table.len(), model[id].div_ceil(page_tokens));
+                for p in table {
+                    assert!(seen.insert(*p), "page {p} double-allocated");
+                    assert!(*p < total_pages);
+                }
+            }
+        }
+        // drain: everything must come back
+        for id in model.keys().copied().collect::<Vec<_>>() {
+            a.release(id).unwrap();
+        }
+        assert_eq!(a.free_pages(), total_pages, "pages leaked (seed {seed})");
+        assert_eq!(a.active_requests(), 0);
+    }
+}
+
+#[test]
 fn golden_serialization_is_injective_over_presets() {
     use axlearn::config::golden::to_golden_string;
     use axlearn::config::registry::trainer_for_preset;
     let mut seen = std::collections::HashSet::new();
     for p in ["tiny", "small", "base100m", "serve"] {
         assert!(
-            seen.insert(to_golden_string(&trainer_for_preset(p))),
+            seen.insert(to_golden_string(&trainer_for_preset(p).unwrap())),
             "{p} collided with another preset's golden form"
         );
     }

@@ -28,7 +28,7 @@ fn workload(n: usize, rate: f64) -> Workload {
 fn engine_serves_all_requests() {
     let (client, manifest) = setup();
     let session = ServeSession::open(client, &manifest, "serve").unwrap();
-    let engine = Engine::new(session, BatcherOptions::default());
+    let mut engine = Engine::from_session(session, BatcherOptions::default()).unwrap();
     let w = workload(10, 4.0);
     let report = engine.run(&w).unwrap();
     assert_eq!(report.outcomes.len(), 10);
@@ -62,7 +62,7 @@ fn continuous_beats_static_on_ttft() {
     let (client, manifest) = setup();
     let w = workload(12, 2.0);
     let s1 = ServeSession::open(client.clone(), &manifest, "serve").unwrap();
-    let ax = Engine::new(
+    let ax = Engine::from_session(
         s1,
         BatcherOptions {
             slots: 8,
@@ -70,10 +70,12 @@ fn continuous_beats_static_on_ttft() {
             page_tokens: 16,
         },
     )
+    .unwrap()
     .run(&w)
     .unwrap();
     let s2 = ServeSession::open(client, &manifest, "serve").unwrap();
-    let vl = StaticBatchEngine::new(s2, StaticBatchOptions::default())
+    let vl = StaticBatchEngine::from_session(s2, StaticBatchOptions::default())
+        .unwrap()
         .run(&w)
         .unwrap();
     assert_eq!(vl.outcomes.len(), ax.outcomes.len());
