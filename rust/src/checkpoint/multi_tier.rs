@@ -153,6 +153,23 @@ mod tests {
     }
 
     #[test]
+    fn restore_prefers_fresher_remote_tier() {
+        // remote_every (6) deliberately not a multiple of local_every
+        // (4): at step 6 the remote tier is *fresher* than local, and
+        // restore must pick it instead of assuming local always wins
+        let base = std::env::temp_dir().join(format!("axck_mt_fresher_{}", std::process::id()));
+        std::fs::remove_dir_all(&base).ok();
+        let mut mt = MultiTierCheckpointer::new(base.join("local"), base.join("remote"), 4, 6).unwrap();
+        for s in 1..=6 {
+            mt.maybe_save(s, || Ok(data(s))).unwrap();
+        }
+        let (d, tier) = mt.restore().unwrap().unwrap();
+        assert_eq!(d.step, 6);
+        assert_eq!(tier, Tier::Remote);
+        assert_eq!(d, data(6));
+    }
+
+    #[test]
     fn local_cadence_bounds_progress_loss() {
         // the §5 claim in miniature: with local_every=5 the worst-case loss
         // after a process failure is < 5 steps; with remote-only it is <20.

@@ -47,6 +47,8 @@ impl Default for CheckpointerOptions {
 
 enum Job {
     Save(CheckpointData),
+    /// Drain barrier: ack once every job queued before it is durable.
+    Flush(mpsc::SyncSender<()>),
     Stop,
 }
 
@@ -69,9 +71,19 @@ impl Checkpointer {
             let handle = std::thread::Builder::new()
                 .name("checkpointer".into())
                 .spawn(move || -> Result<()> {
-                    while let Ok(Job::Save(data)) = rx.recv() {
-                        save_now(&o, &data)?;
-                        gc(&o)?;
+                    while let Ok(job) = rx.recv() {
+                        match job {
+                            Job::Save(data) => {
+                                save_now(&o, &data)?;
+                                gc(&o)?;
+                            }
+                            // jobs queued before the barrier are durable;
+                            // the receiver may have given up — ignore
+                            Job::Flush(ack) => {
+                                let _ = ack.send(());
+                            }
+                            Job::Stop => break,
+                        }
                     }
                     Ok(())
                 })?;
@@ -102,20 +114,28 @@ impl Checkpointer {
         }
     }
 
-    /// Block until all queued saves are durable.
+    /// Block until all queued saves are durable.  The worker thread
+    /// stays alive (draining via a barrier job, not a stop/respawn —
+    /// respawning on every flush leaked a never-joined thread per drop).
     pub fn flush(&mut self) -> Result<()> {
-        if let Some(tx) = self.tx.take() {
-            tx.send(Job::Stop).ok();
-            drop(tx);
-            if let Some(h) = self.worker.take() {
-                h.join().map_err(|_| anyhow::anyhow!("checkpointer panicked"))??;
-            }
-            // restart the worker for further saves
-            let mut fresh = Checkpointer::new(self.opts.clone())?;
-            self.tx = fresh.tx.take();
-            self.worker = fresh.worker.take();
+        let Some(tx) = self.tx.as_ref() else {
+            return Ok(()); // sync mode: every save is already durable
+        };
+        let (ack_tx, ack_rx) = mpsc::sync_channel(1);
+        if tx.send(Job::Flush(ack_tx)).is_ok() && ack_rx.recv().is_ok() {
+            return Ok(());
         }
-        Ok(())
+        // The worker exited early (a save failed or it panicked): join it
+        // to surface the underlying error.  Further saves fall back to
+        // the synchronous path.
+        self.tx = None;
+        match self.worker.take() {
+            Some(h) => {
+                h.join().map_err(|_| anyhow::anyhow!("checkpointer panicked"))??;
+                bail!("checkpointer worker stopped unexpectedly")
+            }
+            None => bail!("checkpointer worker already joined"),
+        }
     }
 
     pub fn dir(&self) -> &Path {
@@ -138,7 +158,15 @@ impl Checkpointer {
 
 impl Drop for Checkpointer {
     fn drop(&mut self) {
-        let _ = self.flush();
+        // Drain queued saves and join the worker deterministically: the
+        // receive loop processes everything queued before Stop, and the
+        // join guarantees no thread outlives its checkpointer.
+        if let Some(tx) = self.tx.take() {
+            let _ = tx.send(Job::Stop);
+        }
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
     }
 }
 
@@ -164,18 +192,17 @@ fn save_now(opts: &CheckpointerOptions, data: &CheckpointData) -> Result<()> {
     let workers = if opts.data_sharded { opts.num_workers.max(1) } else { 1 };
     let shards = shard_assignment(data.tensors.len(), workers);
     // concurrency bound: process shards in waves of max_concurrent_shards
-    for wave in shards.chunks(opts.max_concurrent_shards.max(1)) {
+    let wave_size = opts.max_concurrent_shards.max(1);
+    for (wave_idx, wave) in shards.chunks(wave_size).enumerate() {
         let mut handles = Vec::new();
         for (i, shard) in wave.iter().enumerate() {
-            let base = shards
-                .iter()
-                .position(|s| std::ptr::eq(s, &wave[i]))
-                .unwrap_or(i);
+            // global shard index: wave offset + within-wave position
+            let shard_idx = wave_idx * wave_size + i;
             let tensors: Vec<(String, Vec<f32>)> = shard
                 .iter()
                 .map(|&t| data.tensors[t].clone()) // the bounded in-host-memory copy
                 .collect();
-            let path = tmp.join(format!("shard_{base:04}_of_{workers:04}.axck"));
+            let path = tmp.join(format!("shard_{shard_idx:04}_of_{workers:04}.axck"));
             let step = data.step;
             handles.push(std::thread::spawn(move || {
                 write_checkpoint(&path, &CheckpointData { step, tensors })
@@ -307,7 +334,7 @@ mod tests {
         c.save(data(1, 4)).unwrap();
         c.flush().unwrap();
         assert_eq!(c.latest_step(), Some(1));
-        // saver still works after flush (worker restarted)
+        // saver still works after flush (same worker, drained not respawned)
         c.save(data(2, 4)).unwrap();
         c.flush().unwrap();
         assert_eq!(c.latest_step(), Some(2));
@@ -365,6 +392,70 @@ mod tests {
         let sdir = dir.join("step_0000000003");
         let n = std::fs::read_dir(sdir).unwrap().count();
         assert_eq!(n, 4);
+    }
+
+    #[test]
+    fn multi_wave_shard_numbering_roundtrip() {
+        // num_workers > max_concurrent_shards: shard files span several
+        // waves and indices must be globally unique (regression for the
+        // within-wave `unwrap_or(i)` fallback that reset every wave and
+        // would have collided filenames)
+        let dir = tmpdir("waves");
+        let mut c = Checkpointer::new(CheckpointerOptions {
+            dir: dir.clone(),
+            async_save: false,
+            data_sharded: true,
+            num_workers: 6,
+            max_concurrent_shards: 2,
+            ..Default::default()
+        })
+        .unwrap();
+        let d = data(5, 13);
+        c.save(d.clone()).unwrap();
+        let sdir = dir.join("step_0000000005");
+        let mut names: Vec<String> = std::fs::read_dir(&sdir)
+            .unwrap()
+            .flatten()
+            .map(|e| e.file_name().to_string_lossy().to_string())
+            .collect();
+        names.sort();
+        let want: Vec<String> = (0..6).map(|i| format!("shard_{i:04}_of_0006.axck")).collect();
+        assert_eq!(names, want);
+        assert_eq!(c.restore_latest().unwrap().unwrap(), d);
+    }
+
+    #[test]
+    fn drop_drains_pending_saves_and_joins_worker() {
+        let dir = tmpdir("dropdrain");
+        {
+            let mut c = Checkpointer::new(CheckpointerOptions {
+                dir: dir.clone(),
+                async_save: true,
+                ..Default::default()
+            })
+            .unwrap();
+            c.save(data(9, 4)).unwrap();
+            // dropped here: the queued save must land before the worker
+            // is joined — no flush call, no leaked thread
+        }
+        assert_eq!(latest_step_in(&dir), Some(9));
+    }
+
+    #[test]
+    fn repeated_flush_is_idempotent_and_cheap() {
+        let dir = tmpdir("reflush");
+        let mut c = Checkpointer::new(CheckpointerOptions {
+            dir,
+            async_save: true,
+            ..Default::default()
+        })
+        .unwrap();
+        for round in 1..=3u64 {
+            c.save(data(round, 2)).unwrap();
+            c.flush().unwrap();
+            c.flush().unwrap(); // barrier with empty queue returns at once
+            assert_eq!(c.latest_step(), Some(round));
+        }
     }
 
     #[test]

@@ -234,6 +234,46 @@ pub fn register_defaults() -> BTreeMap<&'static str, Ctor> {
             .field("policy", Value::Config(builtin("ContinuousBatchingPolicy")))
     });
 
+    // ---- training: compute backends (TrainBackend implementations) ----
+    m.insert("PjrtTrainBackend", || {
+        ConfigNode::new("PjrtTrainBackend").field("artifact", Value::Str("tiny".into()))
+    });
+    m.insert("MockTrainBackend", || {
+        ConfigNode::new("MockTrainBackend")
+            .field("dim", Value::Int(64))
+            .field("batch", Value::Int(2))
+            .field("seq", Value::Int(32))
+            .field("vocab", Value::Int(256))
+            .field("lr", Value::Float(0.2))
+    });
+
+    // ---- training: fleet recovery strategy ----
+    m.insert("FleetRecovery", || {
+        ConfigNode::new("FleetRecovery")
+            .field("spares", Value::Int(1))
+            .field("local_every_n_steps", Value::Int(4))
+            .field("remote_every_n_steps", Value::Int(8))
+            .field("local_dir", Value::Str("fleet_ckpt/local".into()))
+            .field("remote_dir", Value::Str("fleet_ckpt/remote".into()))
+            .field("restart_overhead_s", Value::Float(5.0))
+            .field("reprovision_s", Value::Float(60.0))
+    });
+
+    // ---- training: the fault-tolerant fleet trainer (root module) ----
+    m.insert("FleetTrainer", || {
+        ConfigNode::new("FleetTrainer")
+            .field("replicas", Value::Int(2))
+            .field("steps", Value::Int(16))
+            .field("sync_every", Value::Int(4))
+            .field("seed", Value::Int(0))
+            .field("step_time_s", Value::Float(1.0))
+            .field("backend", Value::Config(builtin("MockTrainBackend")))
+            .field("recovery", Value::Config(builtin("FleetRecovery")))
+            .field("failure_rate_per_host_hour", Value::Float(0.0))
+            .field("hosts_per_replica", Value::Int(8))
+            .field("failure_seed", Value::Int(0))
+    });
+
     // ---- trainer (root module) ----
     m.insert("Trainer", || {
         ConfigNode::new("Trainer")
@@ -360,6 +400,25 @@ mod tests {
         for f in base.field_names() {
             assert!(flash.has_field(&f), "FlashAttentionLayer missing {f}");
         }
+    }
+
+    #[test]
+    fn fleet_trainer_tree_is_hierarchical() {
+        // backend × replica-count × recovery-strategy compose like trainer
+        // configs: the fleet never sees backend or tier internals
+        let f = default_config("FleetTrainer").unwrap();
+        assert_eq!(f.child("backend").unwrap().klass, "MockTrainBackend");
+        assert_eq!(f.child("recovery").unwrap().klass, "FleetRecovery");
+        assert!(!f.has_field("dim")); // strict encapsulation
+        assert!(!f.has_field("local_every_n_steps"));
+        // swapping the train backend is a one-field config change
+        let mut f2 = f.clone();
+        f2.set(
+            "backend",
+            Value::Config(default_config("PjrtTrainBackend").unwrap()),
+        )
+        .unwrap();
+        assert_eq!(f2.child("backend").unwrap().klass, "PjrtTrainBackend");
     }
 
     #[test]

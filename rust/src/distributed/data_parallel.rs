@@ -1,25 +1,32 @@
 //! Real (in-process) data-parallel training: N replicas, each with its own
-//! PJRT session and data shard, synchronized through the collective engine.
+//! train backend and data shard, synchronized through the collective
+//! engine.
 //!
 //! The cluster simulator ([`super::cluster`]) models scale; this module
 //! runs the *actual numerics* of multi-replica training on the local
-//! substrate: every replica executes the same AOT train-step artifact on
+//! substrate: every replica executes the same train-step program on
 //! disjoint data shards, and parameters are periodically synchronized by
 //! an all-reduce average (local-SGD style synchronization — exact
 //! per-step gradient all-reduce is not expressible through the artifact
 //! boundary, which returns updated state, not gradients; DESIGN.md
 //! records the substitution).
 //!
-//! Replicas run on OS threads; each owns its session (PJRT CPU client is
-//! shared).  On one core this is concurrency, not speedup — the point is
-//! the *correctness* of the synchronization path (tested: replicas end
-//! bit-identical and training still descends).
+//! Replicas are [`TrainBackend`] trait objects, so the identical
+//! synchronization path runs over PJRT sessions and over the
+//! deterministic mock ([`train_data_parallel`] is the PJRT-opening
+//! wrapper; [`train_data_parallel_backends`] is substrate-agnostic).
+//! Replicas execute round-robin on one thread (the PJRT wrapper's raw
+//! pointers are !Send, and the substrate has one core anyway); the
+//! synchronization semantics are identical to concurrent execution.
+//! The point is the *correctness* of the synchronization path (tested:
+//! replicas end bit-identical and training still descends).
 
 use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
-use crate::runtime::{Manifest, RuntimeClient, TrainSession};
+use crate::runtime::{Manifest, RuntimeClient};
+use crate::trainer::backend::{PjrtTrainBackend, TrainBackend};
 use crate::trainer::input::{CorpusKind, SyntheticCorpus};
 use crate::trainer::InputPipeline;
 
@@ -56,111 +63,213 @@ pub struct DataParallelOutcome {
     pub syncs: u64,
 }
 
-/// Run synchronous data-parallel training.
+/// Run synchronous data-parallel training on the PJRT substrate.
 pub fn train_data_parallel(
     client: Arc<RuntimeClient>,
     manifest: &Manifest,
     opts: &DataParallelOptions,
 ) -> Result<DataParallelOutcome> {
     anyhow::ensure!(opts.replicas >= 1, "need at least one replica");
-    let art = manifest.get(&format!("{}_train_step", opts.artifact))?;
-    let vocab = art.hyper.get("vocab_size").copied().unwrap_or(256) as usize;
-
-    // open + init every replica identically (same seed => same init)
-    let mut sessions: Vec<TrainSession> = (0..opts.replicas)
-        .map(|_| TrainSession::open(client.clone(), manifest, &opts.artifact))
+    let workers: Vec<Box<dyn TrainBackend>> = (0..opts.replicas)
+        .map(|_| {
+            PjrtTrainBackend::open(client.clone(), manifest, &opts.artifact)
+                .map(|b| Box::new(b) as Box<dyn TrainBackend>)
+        })
         .collect::<Result<_>>()?;
-    for s in sessions.iter_mut() {
-        s.init(opts.seed)?;
+    train_data_parallel_backends(workers, opts)
+}
+
+/// Run synchronous data-parallel training over any set of backends.
+pub fn train_data_parallel_backends(
+    mut workers: Vec<Box<dyn TrainBackend>>,
+    opts: &DataParallelOptions,
+) -> Result<DataParallelOutcome> {
+    anyhow::ensure!(!workers.is_empty(), "need at least one replica");
+    anyhow::ensure!(
+        workers.len() == opts.replicas,
+        "opts.replicas ({}) does not match the {} workers provided",
+        opts.replicas,
+        workers.len()
+    );
+    let n = workers.len();
+
+    // init every replica identically (same seed => same init)
+    for w in workers.iter_mut() {
+        w.init(opts.seed)?;
     }
     // disjoint data shards: per-replica corpus seeds
-    let mut shards: Vec<SyntheticCorpus> = (0..opts.replicas)
-        .map(|r| {
-            SyntheticCorpus::new(
-                CorpusKind::Markov,
-                vocab,
-                sessions[0].batch,
-                sessions[0].seq,
-                opts.seed as u64 * 1000 + r as u64,
-            )
-        })
+    let desc = workers[0].descriptor().clone();
+    let mut shards: Vec<SyntheticCorpus> = (0..n)
+        .map(|r| replica_corpus(desc.vocab, desc.batch, desc.seq, opts.seed, r))
         .collect();
 
     let mut collective = SimCollective::new();
-    let mut final_losses = vec![f32::NAN; opts.replicas];
+    let mut final_losses = vec![f32::NAN; n];
     let mut syncs = 0u64;
+    let roles: Vec<usize> = (0..n).collect();
 
     for step in 1..=opts.steps {
-        // local step on each replica's shard.  (The PJRT wrapper's raw
-        // pointers are !Send, and the substrate has one core anyway, so
-        // replicas execute round-robin; the synchronization semantics are
-        // identical to concurrent execution.)
-        for (r, (s, shard)) in sessions.iter_mut().zip(shards.iter_mut()).enumerate() {
+        // local step on each replica's shard
+        for (r, (w, shard)) in workers.iter_mut().zip(shards.iter_mut()).enumerate() {
             let (tok, tgt) = shard.next_batch();
-            final_losses[r] = s
+            final_losses[r] = w
                 .step(&tok, &tgt)
                 .with_context(|| format!("replica {r} step {step}"))?;
         }
 
         if step % opts.sync_every == 0 || step == opts.steps {
-            sync_parameters(&mut sessions, &mut collective)?;
+            sync_replicas(&mut workers, &roles, &mut collective)?;
             syncs += 1;
         }
     }
 
-    // divergence check: replicas must agree bit-wise after the final sync
-    let divergence = if opts.replicas > 1 {
-        let a = sessions[0].state_to_host()?;
-        let b = sessions[1].state_to_host()?;
-        a.iter()
-            .zip(&b)
-            .take(sessions[0].num_params())
-            .map(|((_, x), (_, y))| {
-                x.iter().zip(y).map(|(u, v)| ((u - v) as f64).powi(2)).sum::<f64>()
-            })
-            .sum::<f64>()
-            .sqrt()
-    } else {
-        0.0
-    };
-
     Ok(DataParallelOutcome {
         final_losses,
-        replica_divergence: divergence,
+        replica_divergence: replica_divergence(&workers[..n.min(2)])?,
         syncs,
     })
 }
 
-/// All-reduce average of the full train state across replicas.
-fn sync_parameters(sessions: &mut [TrainSession], collective: &mut SimCollective) -> Result<()> {
-    if sessions.len() < 2 {
+/// Per-replica deterministic corpus: same recipe for the data-parallel
+/// trainer and the fleet orchestrator, so a fleet that recovers from a
+/// failure replays exactly the batches a failure-free run would see.
+pub fn replica_corpus(
+    vocab: usize,
+    batch: usize,
+    seq: usize,
+    seed: i32,
+    replica: usize,
+) -> SyntheticCorpus {
+    SyntheticCorpus::new(
+        CorpusKind::Markov,
+        vocab,
+        batch,
+        seq,
+        seed as u64 * 1000 + replica as u64,
+    )
+}
+
+/// Parameter L2 distance between two backends (the numeric definition of
+/// replica divergence, shared by the DP trainer and the fleet).
+pub fn divergence_between(a: &dyn TrainBackend, b: &dyn TrainBackend) -> Result<f64> {
+    let sa = a.state_to_host()?;
+    let sb = b.state_to_host()?;
+    Ok(sa
+        .iter()
+        .zip(&sb)
+        .take(a.num_params())
+        .map(|((_, x), (_, y))| {
+            x.iter().zip(y).map(|(u, v)| ((u - v) as f64).powi(2)).sum::<f64>()
+        })
+        .sum::<f64>()
+        .sqrt())
+}
+
+/// Parameter L2 distance between the first two replicas (0 for one).
+pub fn replica_divergence(workers: &[Box<dyn TrainBackend>]) -> Result<f64> {
+    if workers.len() < 2 {
+        return Ok(0.0);
+    }
+    divergence_between(&*workers[0], &*workers[1])
+}
+
+/// All-reduce average of the full train state across the replicas at
+/// `roles` (indices into `workers`) — the DP synchronization primitive,
+/// shared by [`train_data_parallel_backends`] and the fleet orchestrator
+/// (whose active set is non-contiguous once spares are promoted).
+pub fn sync_replicas(
+    workers: &mut [Box<dyn TrainBackend>],
+    roles: &[usize],
+    collective: &mut SimCollective,
+) -> Result<()> {
+    if roles.len() < 2 {
         return Ok(());
     }
-    let n = sessions.len() as f32;
-    let states: Vec<Vec<(String, Vec<f32>)>> = sessions
+    let n = roles.len() as f32;
+    let states: Vec<Vec<(String, Vec<f32>)>> = roles
         .iter()
-        .map(|s| s.state_to_host())
+        .map(|&w| workers[w].state_to_host())
         .collect::<Result<_>>()?;
     let num_tensors = states[0].len();
-    let step = sessions[0].steps_done;
+    let step = workers[roles[0]].steps_done();
     let mut merged: Vec<(String, Vec<f32>)> = Vec::with_capacity(num_tensors);
     for t in 0..num_tensors {
         let shards: Vec<Vec<f32>> = states.iter().map(|s| s[t].1.clone()).collect();
         let mut summed = collective.all_reduce(&shards)?.swap_remove(0);
-        // average everything except the integer step counter (last tensor)
-        if t != num_tensors - 1 {
-            for x in summed.iter_mut() {
-                *x /= n;
-            }
-        } else {
-            for x in summed.iter_mut() {
-                *x /= n; // step counters are equal; mean == value
-            }
+        // average everything, including the trailing step counter
+        // (counters are equal across replicas; mean == value)
+        for x in summed.iter_mut() {
+            *x /= n;
         }
         merged.push((states[0][t].0.clone(), summed));
     }
-    for s in sessions.iter_mut() {
-        s.restore_from_host(&merged, step)?;
+    for &w in roles {
+        workers[w].restore_from_host(&merged, step)?;
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trainer::backend::{MockTrainBackend, MockTrainBackendOptions};
+
+    fn mock_workers(n: usize) -> Vec<Box<dyn TrainBackend>> {
+        (0..n)
+            .map(|_| {
+                Box::new(MockTrainBackend::new(MockTrainBackendOptions::default()))
+                    as Box<dyn TrainBackend>
+            })
+            .collect()
+    }
+
+    #[test]
+    fn mock_replicas_sync_bitwise_and_descend() {
+        let out = train_data_parallel_backends(
+            mock_workers(3),
+            &DataParallelOptions {
+                replicas: 3,
+                steps: 12,
+                sync_every: 4,
+                seed: 0,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(out.final_losses.len(), 3);
+        assert!(out.final_losses.iter().all(|l| l.is_finite()));
+        assert_eq!(out.replica_divergence, 0.0, "post-sync replicas must agree bit-wise");
+        assert_eq!(out.syncs, 3);
+    }
+
+    #[test]
+    fn single_replica_needs_no_sync_machinery() {
+        let out = train_data_parallel_backends(
+            mock_workers(1),
+            &DataParallelOptions {
+                replicas: 1,
+                steps: 5,
+                sync_every: 2,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(out.final_losses.len(), 1);
+        assert_eq!(out.replica_divergence, 0.0);
+    }
+
+    #[test]
+    fn sync_over_non_contiguous_roles() {
+        // the fleet case: active set {0, 2} after a spare promotion
+        let mut workers = mock_workers(3);
+        for (i, w) in workers.iter_mut().enumerate() {
+            w.init(i as i32).unwrap(); // deliberately different states
+        }
+        let mut collective = SimCollective::new();
+        sync_replicas(&mut workers, &[0, 2], &mut collective).unwrap();
+        assert!(replica_divergence(&workers[..2]).unwrap() > 0.0);
+        let s0 = workers[0].state_to_host().unwrap();
+        let s2 = workers[2].state_to_host().unwrap();
+        assert_eq!(s0, s2, "synced roles must agree");
+    }
 }

@@ -1,0 +1,510 @@
+//! The fault-tolerant fleet trainer (§5 composed end-to-end): N real
+//! data-parallel replica workers behind the [`TrainBackend`] boundary,
+//! with in-process failure injection, hot-swap spare promotion,
+//! multi-tier checkpoint restore, and goodput accounting — the
+//! restart-time machinery that `distributed::recovery` models
+//! analytically, exercised here by actual numerics.
+//!
+//! One fleet step = every active replica steps on its disjoint data
+//! shard; at the sync cadence parameters are all-reduce-averaged through
+//! [`SimCollective`] and the *post-sync* state is routed to the
+//! [`MultiTierCheckpointer`] (checkpoint cadences are multiples of the
+//! sync cadence, so a restored checkpoint is exactly the state a
+//! failure-free run holds at that step — recovery is bit-reproducible,
+//! and the integration test asserts it).
+//!
+//! Failure semantics (virtual time; the [`FailureInjector`] draws from
+//! the same Poisson model as the cluster simulator):
+//!
+//! * `HostCrash` — the replica's node dies, **taking its local
+//!   checkpoint tier with it** ([`MultiTierCheckpointer::drop_local_tier`]),
+//!   so recovery exercises the remote path.  A spare is promoted by the
+//!   [`HotSwapScheduler`]; with none left the fleet waits a reprovision
+//!   delay and repairs the node in place.  All replicas restore from the
+//!   freshest surviving tier and replay their shards from the restored
+//!   step (or restart from scratch when nothing is durable yet).
+//! * `Hang` / `IciFailure` / `StorageThrottle` — absorbed as virtual
+//!   stalls and counted (watchdog territory; no state is lost).
+//! * `Sdc` — an SDC sweep re-runs the forward loss on a frozen probe
+//!   batch and compares bit-exactly (always healthy on the deterministic
+//!   substrates; the hook is where a corrupting backend would be caught).
+//!
+//! Goodput accounting note: local-tier saves are recorded as
+//! `CheckpointDurable` when written — accurate for process-level
+//! failures, a small over-credit when a `HostCrash` destroys the local
+//! tier between a local save and the next remote sync.
+
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use crate::checkpoint::format::CheckpointData;
+use crate::checkpoint::multi_tier::{MultiTierCheckpointer, SaveAction, Tier};
+use crate::config::ConfigNode;
+use crate::monitor::goodput::{EventKind, GoodputTracker};
+use crate::monitor::sdc::SdcChecker;
+use crate::trainer::backend::{train_backend_from_config, TrainBackend};
+use crate::trainer::input::SyntheticCorpus;
+use crate::trainer::InputPipeline;
+
+use super::collective::SimCollective;
+use super::data_parallel::{divergence_between, replica_corpus, sync_replicas};
+use super::failure::{FailureInjector, FailureKind};
+use super::scheduler::HotSwapScheduler;
+
+/// Poisson failure injection for a fleet run.
+#[derive(Clone, Copy, Debug)]
+pub struct FleetFailureOptions {
+    pub seed: u64,
+    /// Mean failures per host per hour (virtual time).
+    pub rate_per_host_hour: f64,
+    pub hosts_per_replica: usize,
+}
+
+/// A deterministic failure for tests: fires right after `at_step`.
+#[derive(Clone, Copy, Debug)]
+pub struct InjectedFailure {
+    pub at_step: u64,
+    pub replica: usize,
+    pub kind: FailureKind,
+}
+
+#[derive(Clone, Debug)]
+pub struct FleetOptions {
+    /// Active data-parallel replicas.
+    pub replicas: usize,
+    /// Over-provisioned spare workers for hot swap.
+    pub spares: usize,
+    pub steps: u64,
+    /// All-reduce parameter sync every n steps.
+    pub sync_every: u64,
+    /// Local-tier checkpoint cadence (steps; multiple of `sync_every`).
+    pub local_every: u64,
+    /// Remote-tier checkpoint cadence (steps; multiple of `sync_every`).
+    pub remote_every: u64,
+    pub local_dir: PathBuf,
+    pub remote_dir: PathBuf,
+    pub seed: i32,
+    /// Virtual seconds one fleet-parallel step takes.
+    pub step_time_s: f64,
+    /// Virtual cost charged on every recovery (detection + restore read).
+    pub restart_overhead_s: f64,
+    /// Virtual wait when a replica dies with no spare left.
+    pub reprovision_s: f64,
+    /// Virtual stall charged per Hang/ICI/storage event.
+    pub stall_s: f64,
+    /// Poisson failure injection (None = only `injected` events fire).
+    pub failure: Option<FleetFailureOptions>,
+    /// Deterministic failures for tests.
+    pub injected: Vec<InjectedFailure>,
+    /// Restore from the freshest durable tier before training.
+    pub resume: bool,
+}
+
+impl Default for FleetOptions {
+    fn default() -> Self {
+        FleetOptions {
+            replicas: 2,
+            spares: 1,
+            steps: 16,
+            sync_every: 4,
+            local_every: 4,
+            remote_every: 8,
+            local_dir: PathBuf::from("fleet_ckpt/local"),
+            remote_dir: PathBuf::from("fleet_ckpt/remote"),
+            seed: 0,
+            step_time_s: 1.0,
+            restart_overhead_s: 5.0,
+            reprovision_s: 60.0,
+            stall_s: 2.0,
+            failure: None,
+            injected: Vec::new(),
+            resume: false,
+        }
+    }
+}
+
+/// Result of a fleet run.
+pub struct FleetOutcome {
+    /// Per-role final training loss.
+    pub final_losses: Vec<f32>,
+    /// Parameter L2 distance between roles after the final sync (0).
+    pub replica_divergence: f64,
+    pub final_step: u64,
+    pub syncs: u64,
+    /// Spare promotions that absorbed a crash instantly.
+    pub hot_swaps: u64,
+    /// Crashes that had to wait for an in-place reprovision.
+    pub reprovisions: u64,
+    /// (restored-to step, tier) for every mid-run recovery.
+    pub restores: Vec<(u64, Tier)>,
+    pub failures_seen: Vec<FailureKind>,
+    /// Hang/ICI/storage events absorbed as virtual stalls.
+    pub stalls: u64,
+    pub sdc_sweeps: u64,
+    pub goodput: GoodputTracker,
+    /// Post-final-sync state of role 0 (all roles are bit-identical).
+    pub final_state: Vec<(String, Vec<f32>)>,
+    pub resumed_from: Option<u64>,
+}
+
+/// The fleet orchestrator: `replicas` active workers + `spares`, a
+/// multi-tier checkpointer, a hot-swap scheduler, and failure injection,
+/// all over the [`TrainBackend`] boundary.
+pub struct FleetTrainer {
+    workers: Vec<Box<dyn TrainBackend>>,
+    opts: FleetOptions,
+}
+
+impl FleetTrainer {
+    /// One backend per worker: the first `opts.replicas` start active,
+    /// the rest are spares awaiting promotion.
+    pub fn new(workers: Vec<Box<dyn TrainBackend>>, opts: FleetOptions) -> Result<Self> {
+        anyhow::ensure!(opts.replicas >= 1, "fleet needs at least one active replica");
+        anyhow::ensure!(
+            workers.len() == opts.replicas + opts.spares,
+            "fleet needs {} workers (replicas + spares), got {}",
+            opts.replicas + opts.spares,
+            workers.len()
+        );
+        anyhow::ensure!(opts.sync_every >= 1, "sync_every must be >= 1");
+        for (name, every) in [("local_every", opts.local_every), ("remote_every", opts.remote_every)] {
+            anyhow::ensure!(
+                every >= 1 && every % opts.sync_every == 0,
+                "{name} ({every}) must be a nonzero multiple of sync_every ({}) so \
+                 checkpoints capture the post-sync state",
+                opts.sync_every
+            );
+        }
+        let d0 = workers[0].descriptor().clone();
+        for w in &workers[1..] {
+            let d = w.descriptor();
+            anyhow::ensure!(
+                d.batch == d0.batch && d.seq == d0.seq && d.vocab == d0.vocab,
+                "fleet workers disagree on shapes: {} {}x{} vocab {} vs {} {}x{} vocab {}",
+                d0.name,
+                d0.batch,
+                d0.seq,
+                d0.vocab,
+                d.name,
+                d.batch,
+                d.seq,
+                d.vocab
+            );
+        }
+        Ok(FleetTrainer { workers, opts })
+    }
+
+    /// Run to `opts.steps`, recovering from every injected failure.
+    pub fn run(&mut self) -> Result<FleetOutcome> {
+        let n = self.opts.replicas;
+        let desc = self.workers[0].descriptor().clone();
+        let mut scheduler = HotSwapScheduler::new(n, self.opts.spares);
+        // role -> worker id; rewritten when a spare absorbs a crash
+        let mut assignment: Vec<usize> = (0..n).collect();
+        let mut mt = MultiTierCheckpointer::new(
+            self.opts.local_dir.clone(),
+            self.opts.remote_dir.clone(),
+            self.opts.local_every,
+            self.opts.remote_every,
+        )?;
+        let mut injector = self.opts.failure.map(|f| {
+            FailureInjector::new(
+                f.seed,
+                f.rate_per_host_hour,
+                f.hosts_per_replica.max(1) * n,
+                n,
+            )
+        });
+
+        let mut goodput = GoodputTracker::new();
+        let mut clock = 0.0f64;
+        goodput.record(EventKind::JobStart, clock, 0);
+
+        // init or resume
+        let mut resumed_from = None;
+        let mut restores: Vec<(u64, Tier)> = Vec::new();
+        if !self.opts.resume {
+            // a fresh run must not see a previous run's checkpoints: a
+            // crash before the first save would otherwise "restore" a
+            // stale trajectory from reused directories
+            for dir in [mt.local.dir().to_path_buf(), mt.remote.dir().to_path_buf()] {
+                for step in crate::checkpoint::saver::list_steps(&dir) {
+                    std::fs::remove_dir_all(dir.join(format!("step_{step:010}"))).ok();
+                }
+            }
+        }
+        let restored = if self.opts.resume { mt.restore()? } else { None };
+        let start_step = match restored {
+            Some((data, _tier)) => {
+                for &w in &assignment {
+                    self.workers[w].restore_from_host(&data.tensors, data.step)?;
+                }
+                resumed_from = Some(data.step);
+                data.step
+            }
+            None => {
+                for &w in &assignment {
+                    self.workers[w].init(self.opts.seed)?;
+                }
+                0
+            }
+        };
+        goodput.record(EventKind::CompilationDone, clock, 0);
+        goodput.record(EventKind::RestartDone, clock, start_step);
+
+        // per-role shards, replayed to the starting step
+        let mut shards = self.make_shards(&desc, start_step);
+
+        let mut collective = SimCollective::new();
+        let mut sdc = SdcChecker::new(2, false);
+        let mut final_losses = vec![f32::NAN; n];
+        let mut syncs = 0u64;
+        let mut hot_swaps = 0u64;
+        let mut reprovisions = 0u64;
+        let mut failures_seen = Vec::new();
+        let mut stalls = 0u64;
+        let mut sdc_sweeps = 0u64;
+        let mut last_drain_t = clock;
+        // each injected failure fires once — the step it is keyed on is
+        // re-executed after the rollback the failure itself causes
+        let mut injected_fired = vec![false; self.opts.injected.len()];
+
+        let mut s = start_step + 1;
+        while s <= self.opts.steps {
+            // one fleet step: every active replica, disjoint shards
+            for role in 0..n {
+                let w = assignment[role];
+                let (tok, tgt) = shards[role].next_batch();
+                final_losses[role] = self.workers[w]
+                    .step(&tok, &tgt)
+                    .with_context(|| format!("role {role} (worker {w}) step {s}"))?;
+            }
+            clock += self.opts.step_time_s;
+            goodput.record(EventKind::StepDone, clock, s);
+
+            // sync + checkpoint at cadence (post-sync state is saved)
+            if s % self.opts.sync_every == 0 || s == self.opts.steps {
+                sync_replicas(&mut self.workers, &assignment, &mut collective)?;
+                syncs += 1;
+                let lead = assignment[0];
+                let workers_ref = &self.workers;
+                let action = mt.maybe_save(s, || {
+                    Ok(CheckpointData {
+                        step: s,
+                        tensors: workers_ref[lead].state_to_host()?,
+                    })
+                })?;
+                if action != SaveAction::None {
+                    goodput.record(EventKind::CheckpointDurable, clock, s);
+                }
+            }
+
+            // failures scheduled in (last_drain_t, clock] + injected at s
+            let mut events: Vec<(usize, FailureKind)> = injector
+                .as_mut()
+                .map(|inj| {
+                    inj.drain(last_drain_t, clock)
+                        .into_iter()
+                        .map(|e| (e.replica, e.kind))
+                        .collect()
+                })
+                .unwrap_or_default();
+            last_drain_t = clock;
+            for (idx, f) in self.opts.injected.iter().enumerate() {
+                if f.at_step == s && !injected_fired[idx] {
+                    injected_fired[idx] = true;
+                    events.push((f.replica.min(n - 1), f.kind));
+                }
+            }
+
+            let mut crashed_role = None;
+            for (role, kind) in events {
+                failures_seen.push(kind);
+                match kind {
+                    FailureKind::HostCrash => {
+                        // handle the first crash per window; later ones land
+                        // during the restart and are coalesced into it
+                        if crashed_role.is_none() {
+                            crashed_role = Some(role);
+                        }
+                    }
+                    FailureKind::Hang | FailureKind::IciFailure | FailureKind::StorageThrottle => {
+                        stalls += 1;
+                        clock += self.opts.stall_s;
+                    }
+                    FailureKind::Sdc => {
+                        sdc_sweeps += 1;
+                        let w = assignment[role];
+                        if self.workers[w].supports_eval() {
+                            // frozen probe batch, independent of the data
+                            // shards so replay determinism is untouched
+                            let mut probe = SyntheticCorpus::new(
+                                crate::trainer::input::CorpusKind::Markov,
+                                desc.vocab,
+                                desc.batch,
+                                desc.seq,
+                                0x5DC0 ^ s,
+                            );
+                            let (tok, tgt) = probe.next_batch();
+                            let worker = &self.workers[w];
+                            let report =
+                                sdc.sweep(|_| Ok(vec![worker.eval_loss(&tok, &tgt)?]))?;
+                            anyhow::ensure!(
+                                report.healthy(),
+                                "SDC detected on worker {w} at step {s}: {report:?}"
+                            );
+                        }
+                    }
+                }
+            }
+
+            if let Some(role) = crashed_role {
+                goodput.record(EventKind::FailureDetected, clock, s);
+                goodput.record(EventKind::RestartBegin, clock, s);
+                let dead = assignment[role];
+                let replacement = match scheduler.handle_failure(dead) {
+                    Some(spare) => {
+                        hot_swaps += 1;
+                        spare
+                    }
+                    None => {
+                        // spares exhausted: wait out a reprovision and
+                        // bring the node back in place
+                        reprovisions += 1;
+                        clock += self.opts.reprovision_s;
+                        scheduler.handle_repair(dead);
+                        scheduler
+                            .promote_spare()
+                            .context("repaired worker must be promotable")?
+                    }
+                };
+                assignment[role] = replacement;
+                // the node died with its local disk: only remote survives
+                mt.drop_local_tier()?;
+                clock += self.opts.restart_overhead_s;
+                match mt.restore()? {
+                    Some((data, tier)) => {
+                        restores.push((data.step, tier));
+                        for &w in &assignment {
+                            self.workers[w].restore_from_host(&data.tensors, data.step)?;
+                        }
+                        shards = self.make_shards(&desc, data.step);
+                        goodput.record(EventKind::RestartDone, clock, data.step);
+                        s = data.step + 1;
+                    }
+                    None => {
+                        // nothing durable yet: restart from scratch
+                        for &w in &assignment {
+                            self.workers[w].init(self.opts.seed)?;
+                        }
+                        shards = self.make_shards(&desc, 0);
+                        goodput.record(EventKind::RestartDone, clock, 0);
+                        s = 1;
+                    }
+                }
+                last_drain_t = clock;
+                continue;
+            }
+            s += 1;
+        }
+
+        // make queued async remote saves durable before closing the books
+        mt.remote.flush()?;
+        goodput.record(EventKind::JobEnd, clock, self.opts.steps);
+
+        let lead = assignment[0];
+        let divergence = if n > 1 {
+            divergence_between(&*self.workers[assignment[0]], &*self.workers[assignment[1]])?
+        } else {
+            0.0
+        };
+
+        Ok(FleetOutcome {
+            final_losses,
+            replica_divergence: divergence,
+            final_step: self.opts.steps,
+            syncs,
+            hot_swaps,
+            reprovisions,
+            restores,
+            failures_seen,
+            stalls,
+            sdc_sweeps,
+            goodput,
+            final_state: self.workers[lead].state_to_host()?,
+            resumed_from,
+        })
+    }
+
+    /// Per-role corpora, fast-forwarded past `consumed` steps — the
+    /// replay that makes recovery bit-reproducible.
+    fn make_shards(
+        &self,
+        desc: &crate::trainer::TrainBackendDescriptor,
+        consumed: u64,
+    ) -> Vec<SyntheticCorpus> {
+        (0..self.opts.replicas)
+            .map(|r| {
+                let mut c = replica_corpus(desc.vocab, desc.batch, desc.seq, self.opts.seed, r);
+                for _ in 0..consumed {
+                    c.next_batch();
+                }
+                c
+            })
+            .collect()
+    }
+}
+
+/// Build a fleet from a registered `FleetTrainer` config: backend ×
+/// replica-count × recovery-strategy compose exactly like trainer
+/// configs.  PJRT backends need a live client — open those with
+/// [`crate::trainer::PjrtTrainBackend::open`] and use [`FleetTrainer::new`].
+pub fn fleet_from_config(cfg: &ConfigNode) -> Result<FleetTrainer> {
+    anyhow::ensure!(
+        cfg.klass == "FleetTrainer",
+        "expected a FleetTrainer config, got {:?}",
+        cfg.klass
+    );
+    let recovery = cfg.child("recovery")?;
+    anyhow::ensure!(
+        recovery.klass == "FleetRecovery",
+        "fleet recovery must be FleetRecovery, got {:?}",
+        recovery.klass
+    );
+    let replicas = cfg.get_int("replicas")? as usize;
+    let spares = recovery.get_int("spares")? as usize;
+    let backend_cfg = cfg.child("backend")?;
+    let workers = (0..replicas + spares)
+        .map(|_| train_backend_from_config(backend_cfg))
+        .collect::<Result<Vec<_>>>()?;
+    let rate = cfg.get_float("failure_rate_per_host_hour")?;
+    let failure = if rate > 0.0 {
+        Some(FleetFailureOptions {
+            seed: cfg.get_int("failure_seed")? as u64,
+            rate_per_host_hour: rate,
+            hosts_per_replica: cfg.get_int("hosts_per_replica")? as usize,
+        })
+    } else {
+        None
+    };
+    let opts = FleetOptions {
+        replicas,
+        spares,
+        steps: cfg.get_int("steps")? as u64,
+        sync_every: cfg.get_int("sync_every")? as u64,
+        local_every: recovery.get_int("local_every_n_steps")? as u64,
+        remote_every: recovery.get_int("remote_every_n_steps")? as u64,
+        local_dir: PathBuf::from(recovery.get_str("local_dir")?),
+        remote_dir: PathBuf::from(recovery.get_str("remote_dir")?),
+        seed: cfg.get_int("seed")? as i32,
+        step_time_s: cfg.get_float("step_time_s")?,
+        restart_overhead_s: recovery.get_float("restart_overhead_s")?,
+        reprovision_s: recovery.get_float("reprovision_s")?,
+        stall_s: FleetOptions::default().stall_s,
+        failure,
+        injected: Vec::new(),
+        resume: false,
+    };
+    FleetTrainer::new(workers, opts)
+}

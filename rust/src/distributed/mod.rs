@@ -8,17 +8,30 @@
 //! in-cluster broadcast from a healthy replica, slice hot-swap
 //! ([`recovery`], [`scheduler`]) — and the goodput accounting that
 //! reproduces the §5 "hours → <10 minutes" restart claim.
+//!
+//! Where the cluster simulator *models* failure recovery analytically,
+//! the fleet trainer ([`fleet`]) *runs* it: real data-parallel replicas
+//! behind the [`crate::trainer::TrainBackend`] boundary with in-process
+//! failure injection, hot-swap spare promotion, and multi-tier restore
+//! exercised by actual numerics.
 
 pub mod cluster;
 pub mod collective;
 pub mod data_parallel;
 pub mod failure;
+pub mod fleet;
 pub mod recovery;
 pub mod scheduler;
 
 pub use cluster::{Cluster, ClusterOptions};
-pub use data_parallel::{train_data_parallel, DataParallelOptions};
 pub use collective::SimCollective;
+pub use data_parallel::{
+    train_data_parallel, train_data_parallel_backends, DataParallelOptions, DataParallelOutcome,
+};
 pub use failure::{FailureInjector, FailureKind};
+pub use fleet::{
+    fleet_from_config, FleetFailureOptions, FleetOptions, FleetOutcome, FleetTrainer,
+    InjectedFailure,
+};
 pub use recovery::{recovery_experiment, RecoveryOutcome, RecoveryStrategy};
 pub use scheduler::{HotSwapScheduler, SliceState};

@@ -69,6 +69,13 @@ impl HotSwapScheduler {
         if let Some(s) = self.slices.get_mut(&failed) {
             *s = SliceState::Failed;
         }
+        self.promote_spare()
+    }
+
+    /// Promote any available spare to Active (preempting its low-priority
+    /// work); returns the promoted slice id.  Used by failure handling
+    /// and by the fleet trainer after an in-place reprovision/repair.
+    pub fn promote_spare(&mut self) -> Option<usize> {
         let spare = self
             .slices
             .iter()

@@ -16,18 +16,25 @@
 //!   [`distributed`]), the hardware performance model that reproduces
 //!   the paper's evaluation ([`perfmodel`]), and the serving stack.
 //!
-//! Serving applies the same encapsulation discipline vertically:
+//! Serving and training both apply the same encapsulation discipline
+//! vertically:
 //!
-//! * [`runtime::backend::ComputeBackend`] is the hardware boundary —
-//!   prefill/decode/cache ops plus discovered capabilities.  Three
-//!   substrates implement it: real PJRT over AOT artifacts, an analytic
-//!   model driven by `perfmodel` chip specs (Table-4-scale hardware in
-//!   simulation), and a deterministic mock.
+//! * [`runtime::backend::ComputeBackend`] is the serving hardware
+//!   boundary — prefill/decode/cache ops plus discovered capabilities.
+//!   Three substrates implement it: real PJRT over AOT artifacts, an
+//!   analytic model driven by `perfmodel` chip specs (Table-4-scale
+//!   hardware in simulation), and a deterministic mock.
 //! * [`serving`]'s schedulers — the continuous batcher, the vLLM-style
 //!   static baseline, and the multi-replica [`serving::router`] with
 //!   hot-swap spare promotion — are pure policies over that trait, so
 //!   backend × policy × replica-count compose through the config
 //!   registry exactly like trainer configs (see `docs/serving.md`).
+//! * [`trainer::backend::TrainBackend`] is the training twin —
+//!   init/step/eval/state ops over PJRT sessions or a deterministic
+//!   mock.  The trainer loop, the data-parallel trainer, and the
+//!   fault-tolerant [`distributed::fleet::FleetTrainer`] (failure
+//!   injection, hot-swap spare promotion, multi-tier restore, goodput
+//!   accounting) are policies over it (see `docs/training.md`).
 //!
 //! Python never runs on the request path: `make artifacts` is build-time
 //! only; everything here executes AOT-compiled HLO through PJRT

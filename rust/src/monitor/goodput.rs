@@ -208,6 +208,44 @@ mod tests {
     }
 
     #[test]
+    fn durable_event_after_failure_does_not_credit_lost_steps() {
+        // an async checkpoint that reaches durability only after the
+        // failure cannot resurrect the steps the failure already lost
+        let mut g = GoodputTracker::new();
+        g.record(EventKind::JobStart, 0.0, 0);
+        g.record(EventKind::RestartDone, 0.0, 0);
+        for s in 1..=4 {
+            g.record(EventKind::StepDone, s as f64, s);
+        }
+        g.record(EventKind::FailureDetected, 4.5, 4);
+        // the in-flight save of step 4 lands mid-restart
+        g.record(EventKind::CheckpointDurable, 5.0, 4);
+        g.record(EventKind::RestartDone, 6.0, 4);
+        g.record(EventKind::StepDone, 7.0, 5);
+        g.record(EventKind::StepDone, 8.0, 6);
+        g.record(EventKind::CheckpointDurable, 8.0, 6);
+        g.record(EventKind::JobEnd, 8.0, 6);
+        // only the two post-restart steps are credited: 2s of 8s wall
+        let gp = g.goodput();
+        assert!((gp - 0.25).abs() < 0.01, "{gp}");
+    }
+
+    #[test]
+    fn goodput_without_job_end_uses_last_event() {
+        // a tracker snapshotted mid-run (no JobEnd yet, e.g. a crash
+        // before the books close) still reports a sane goodput
+        let mut g = GoodputTracker::new();
+        g.record(EventKind::JobStart, 0.0, 0);
+        g.record(EventKind::RestartDone, 0.0, 0);
+        for s in 1..=5 {
+            g.record(EventKind::StepDone, s as f64, s);
+        }
+        assert_eq!(g.wall_time(), 5.0);
+        // surviving uncheckpointed work still counts as credited progress
+        assert!(g.goodput() > 0.99, "{}", g.goodput());
+    }
+
+    #[test]
     fn breakdown_accounts_phases() {
         let mut g = GoodputTracker::new();
         g.record(EventKind::JobStart, 0.0, 0);

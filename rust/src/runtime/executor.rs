@@ -115,6 +115,13 @@ impl TrainSession {
         Ok(loss)
     }
 
+    /// Whether this artifact family ships a forward-only `eval_loss`
+    /// graph (callers gate eval/SDC sweeps on this instead of probing
+    /// with a throwaway call).
+    pub fn has_eval(&self) -> bool {
+        self.eval_exe.is_some()
+    }
+
     /// Forward-only loss on a batch (no state update).
     pub fn eval_loss(&self, tokens: &[i32], targets: &[i32]) -> Result<f32> {
         let exe = self

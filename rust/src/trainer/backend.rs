@@ -1,0 +1,501 @@
+//! The hardware-agnostic training boundary (paper §4.2 applied to
+//! training, mirroring [`crate::runtime::backend::ComputeBackend`] for
+//! serving): the trainer loop, the data-parallel trainer, and the fleet
+//! orchestrator never touch PJRT, artifacts, or mock state — they see
+//! init/step/eval/state ops plus a discovered descriptor, so training
+//! substrates and orchestration policies compose freely.
+//!
+//! Two implementations ship with the crate:
+//!
+//! * [`PjrtTrainBackend`] — the real substrate: wraps
+//!   [`crate::runtime::TrainSession`] (AOT train-step artifacts through
+//!   PJRT); step time is measured wall time.
+//! * [`MockTrainBackend`] — a deterministic pure-Rust optimizer over a
+//!   small parameter vector: same state layout as the real session
+//!   (params + adam moments + step counter), bit-exact save/restore,
+//!   loss that genuinely descends.  The workhorse of fleet/recovery
+//!   tests and benches — whole failure storms replay in microseconds
+//!   with no artifacts on disk.
+//!
+//! A new backend is ~10 lines of mechanism: implement the ops, return a
+//! descriptor, and the trainer loop, `train_data_parallel`, and
+//! [`crate::distributed::fleet::FleetTrainer`] work unchanged.  See
+//! `docs/training.md`.
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::config::ConfigNode;
+use crate::runtime::{Manifest, RuntimeClient, TrainSession};
+
+/// What a training substrate looks like from above — discovered at
+/// runtime, never assumed by the orchestration layer.
+#[derive(Clone, Debug)]
+pub struct TrainBackendDescriptor {
+    pub name: String,
+    pub batch: usize,
+    pub seq: usize,
+    pub vocab: usize,
+    /// True when step costs are measured wall time (PJRT); false when
+    /// the backend is virtual (mock).
+    pub measured_time: bool,
+}
+
+/// The trait boundary between training orchestration and compute
+/// substrates.
+///
+/// The contract mirrors the AOT train-step artifacts: seeded in-graph
+/// init, a step that consumes a [batch, seq] token/target pair and
+/// returns the scalar loss, forward-only eval, and a host-roundtrippable
+/// flat state vector (params, opt moments, step counter) — the unit of
+/// checkpointing, parameter synchronization, and failure recovery.
+pub trait TrainBackend {
+    fn descriptor(&self) -> &TrainBackendDescriptor;
+
+    /// Initialize the train state from a seed (same seed ⇒ bit-identical
+    /// state, the property data-parallel replication relies on).
+    fn init(&mut self, seed: i32) -> Result<()>;
+
+    /// One training step; returns the scalar loss.
+    fn step(&mut self, tokens: &[i32], targets: &[i32]) -> Result<f32>;
+
+    /// Forward-only loss on a batch (no state update). Deterministic on
+    /// a healthy host: re-running on frozen inputs must be bit-identical
+    /// (the SDC sweep depends on this).
+    fn eval_loss(&self, tokens: &[i32], targets: &[i32]) -> Result<f32>;
+
+    /// Whether [`TrainBackend::eval_loss`] is available (some artifact
+    /// families ship without a forward-only graph).
+    fn supports_eval(&self) -> bool {
+        true
+    }
+
+    /// Snapshot the full train state to host vectors (checkpointing,
+    /// parameter sync). (name, data) pairs in canonical order.
+    fn state_to_host(&self) -> Result<Vec<(String, Vec<f32>)>>;
+
+    /// Restore the full train state from host vectors.
+    fn restore_from_host(&mut self, tensors: &[(String, Vec<f32>)], step: u64) -> Result<()>;
+
+    fn steps_done(&self) -> u64;
+
+    /// Number of leading state tensors that are model parameters.
+    fn num_params(&self) -> usize;
+}
+
+// ---------------------------------------------------------------------------
+// PJRT (the real substrate)
+// ---------------------------------------------------------------------------
+
+/// The real backend: AOT train-step artifacts executed through PJRT.
+pub struct PjrtTrainBackend {
+    session: TrainSession,
+    desc: TrainBackendDescriptor,
+}
+
+impl PjrtTrainBackend {
+    /// Open a session for artifact family `base` ("tiny", "small_moe", …).
+    pub fn open(client: Arc<RuntimeClient>, manifest: &Manifest, base: &str) -> Result<Self> {
+        let session = TrainSession::open(client, manifest, base)
+            .with_context(|| format!("opening train session {base:?}"))?;
+        Ok(PjrtTrainBackend::from_session(session, base))
+    }
+
+    /// Wrap an already-open session.
+    pub fn from_session(session: TrainSession, base: &str) -> Self {
+        let desc = TrainBackendDescriptor {
+            name: format!("pjrt:{base}"),
+            batch: session.batch,
+            seq: session.seq,
+            vocab: session.artifact.hyper.get("vocab_size").copied().unwrap_or(256) as usize,
+            measured_time: true,
+        };
+        PjrtTrainBackend { session, desc }
+    }
+}
+
+impl TrainBackend for PjrtTrainBackend {
+    fn descriptor(&self) -> &TrainBackendDescriptor {
+        &self.desc
+    }
+
+    fn init(&mut self, seed: i32) -> Result<()> {
+        self.session.init(seed)
+    }
+
+    fn step(&mut self, tokens: &[i32], targets: &[i32]) -> Result<f32> {
+        self.session.step(tokens, targets)
+    }
+
+    fn eval_loss(&self, tokens: &[i32], targets: &[i32]) -> Result<f32> {
+        self.session.eval_loss(tokens, targets)
+    }
+
+    fn supports_eval(&self) -> bool {
+        self.session.has_eval()
+    }
+
+    fn state_to_host(&self) -> Result<Vec<(String, Vec<f32>)>> {
+        self.session.state_to_host()
+    }
+
+    fn restore_from_host(&mut self, tensors: &[(String, Vec<f32>)], step: u64) -> Result<()> {
+        self.session.restore_from_host(tensors, step)
+    }
+
+    fn steps_done(&self) -> u64 {
+        self.session.steps_done
+    }
+
+    fn num_params(&self) -> usize {
+        self.session.num_params()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Mock (deterministic fleet tests / benches)
+// ---------------------------------------------------------------------------
+
+/// Options for [`MockTrainBackend`].
+#[derive(Clone, Debug)]
+pub struct MockTrainBackendOptions {
+    /// Parameter-vector length.
+    pub dim: usize,
+    pub batch: usize,
+    pub seq: usize,
+    pub vocab: usize,
+    pub lr: f32,
+}
+
+impl Default for MockTrainBackendOptions {
+    fn default() -> Self {
+        MockTrainBackendOptions {
+            dim: 64,
+            batch: 2,
+            seq: 32,
+            vocab: 256,
+            lr: 0.2,
+        }
+    }
+}
+
+/// Deterministic pure-Rust training substrate.
+///
+/// State mirrors the real session layout — `params`, `opt_m`, `opt_v`,
+/// and a trailing step counter — so the checkpointer, the all-reduce
+/// parameter sync, and multi-tier restore exercise the same code paths
+/// as PJRT training.  The "gradient" pulls parameters toward zero with a
+/// data-dependent perturbation, so the loss (a quadratic in the
+/// parameters) genuinely descends, and every step is a pure function of
+/// (state, batch): replaying from a restored checkpoint is bit-identical
+/// to never having failed.
+pub struct MockTrainBackend {
+    opts: MockTrainBackendOptions,
+    desc: TrainBackendDescriptor,
+    params: Vec<f32>,
+    opt_m: Vec<f32>,
+    opt_v: Vec<f32>,
+    step: u64,
+    initialized: bool,
+}
+
+/// SplitMix64-style mixer shared by the mock's init and gradient noise.
+fn mix(a: u64, b: u64) -> u64 {
+    let mut z = a
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add(b.wrapping_mul(0xBF58_476D_1CE4_E5B9));
+    z ^= z >> 30;
+    z = z.wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Deterministic value in [-1, 1).
+fn unit(h: u64) -> f32 {
+    ((h % 2048) as f32 / 1024.0) - 1.0
+}
+
+fn digest(tokens: &[i32]) -> u64 {
+    tokens
+        .iter()
+        .fold(0u64, |acc, t| acc.wrapping_mul(31).wrapping_add(*t as u32 as u64))
+}
+
+impl MockTrainBackend {
+    pub fn new(opts: MockTrainBackendOptions) -> Self {
+        let desc = TrainBackendDescriptor {
+            name: "mock-train".into(),
+            batch: opts.batch,
+            seq: opts.seq,
+            vocab: opts.vocab,
+            measured_time: false,
+        };
+        let dim = opts.dim;
+        MockTrainBackend {
+            opts,
+            desc,
+            params: vec![0.0; dim],
+            opt_m: vec![0.0; dim],
+            opt_v: vec![0.0; dim],
+            step: 0,
+            initialized: false,
+        }
+    }
+
+    fn check_batch(&self, tokens: &[i32], targets: &[i32]) -> Result<()> {
+        let expect = self.desc.batch * self.desc.seq;
+        anyhow::ensure!(
+            tokens.len() == expect && targets.len() == expect,
+            "batch shape mismatch: got {}/{} tokens/targets, backend wants {} ({}x{})",
+            tokens.len(),
+            targets.len(),
+            expect,
+            self.desc.batch,
+            self.desc.seq
+        );
+        Ok(())
+    }
+
+    fn loss(&self, batch_digest: u64) -> f32 {
+        let mean_sq =
+            self.params.iter().map(|p| p * p).sum::<f32>() / self.opts.dim.max(1) as f32;
+        // quadratic bowl over the parameters + a small data term, so the
+        // curve descends toward a floor instead of collapsing to zero
+        0.69 + 4.0 * mean_sq + 1e-3 * unit(batch_digest).abs()
+    }
+}
+
+impl TrainBackend for MockTrainBackend {
+    fn descriptor(&self) -> &TrainBackendDescriptor {
+        &self.desc
+    }
+
+    fn init(&mut self, seed: i32) -> Result<()> {
+        for (i, p) in self.params.iter_mut().enumerate() {
+            *p = 0.5 * unit(mix(seed as u32 as u64, i as u64));
+        }
+        self.opt_m.iter_mut().for_each(|x| *x = 0.0);
+        self.opt_v.iter_mut().for_each(|x| *x = 0.0);
+        self.step = 0;
+        self.initialized = true;
+        Ok(())
+    }
+
+    fn step(&mut self, tokens: &[i32], targets: &[i32]) -> Result<f32> {
+        anyhow::ensure!(self.initialized, "MockTrainBackend::step before init/restore");
+        self.check_batch(tokens, targets)?;
+        let d = mix(digest(tokens), digest(targets));
+        for i in 0..self.opts.dim {
+            let noise = unit(mix(d, i as u64));
+            // gradient of 0.5·p² plus a data-dependent perturbation
+            let g = self.params[i] + 0.05 * noise;
+            self.opt_m[i] = 0.9 * self.opt_m[i] + 0.1 * g;
+            self.opt_v[i] = 0.99 * self.opt_v[i] + 0.01 * g * g;
+            self.params[i] -= self.opts.lr * g;
+        }
+        self.step += 1;
+        Ok(self.loss(d))
+    }
+
+    fn eval_loss(&self, tokens: &[i32], targets: &[i32]) -> Result<f32> {
+        anyhow::ensure!(self.initialized, "MockTrainBackend::eval_loss before init/restore");
+        self.check_batch(tokens, targets)?;
+        Ok(self.loss(mix(digest(tokens), digest(targets))))
+    }
+
+    fn state_to_host(&self) -> Result<Vec<(String, Vec<f32>)>> {
+        anyhow::ensure!(self.initialized, "MockTrainBackend: no state to snapshot");
+        Ok(vec![
+            ("params".into(), self.params.clone()),
+            ("opt_m".into(), self.opt_m.clone()),
+            ("opt_v".into(), self.opt_v.clone()),
+            ("step".into(), vec![self.step as f32]),
+        ])
+    }
+
+    fn restore_from_host(&mut self, tensors: &[(String, Vec<f32>)], step: u64) -> Result<()> {
+        anyhow::ensure!(
+            tensors.len() == 4,
+            "restore: got {} tensors, expected 4",
+            tensors.len()
+        );
+        for (got, want) in tensors.iter().zip(["params", "opt_m", "opt_v", "step"]) {
+            anyhow::ensure!(
+                got.0 == want,
+                "restore: tensor order mismatch: {} vs {}",
+                got.0,
+                want
+            );
+        }
+        for t in &tensors[..3] {
+            anyhow::ensure!(
+                t.1.len() == self.opts.dim,
+                "restore: {} has {} elems, expected {}",
+                t.0,
+                t.1.len(),
+                self.opts.dim
+            );
+        }
+        self.params = tensors[0].1.clone();
+        self.opt_m = tensors[1].1.clone();
+        self.opt_v = tensors[2].1.clone();
+        self.step = step;
+        self.initialized = true;
+        Ok(())
+    }
+
+    fn steps_done(&self) -> u64 {
+        self.step
+    }
+
+    fn num_params(&self) -> usize {
+        1 // one "params" tensor leads the state vector
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Config-driven construction
+// ---------------------------------------------------------------------------
+
+/// Build a train backend from its registered config (`MockTrainBackend`).
+/// `PjrtTrainBackend` configs carry only the artifact family — the
+/// session needs a live PJRT client, so construct those with
+/// [`PjrtTrainBackend::open`].
+pub fn train_backend_from_config(cfg: &ConfigNode) -> Result<Box<dyn TrainBackend>> {
+    match cfg.klass.as_str() {
+        "MockTrainBackend" => {
+            let opts = MockTrainBackendOptions {
+                dim: cfg.get_int("dim")? as usize,
+                batch: cfg.get_int("batch")? as usize,
+                seq: cfg.get_int("seq")? as usize,
+                vocab: cfg.get_int("vocab")? as usize,
+                lr: cfg.get_float("lr")? as f32,
+            };
+            Ok(Box::new(MockTrainBackend::new(opts)))
+        }
+        "PjrtTrainBackend" => anyhow::bail!(
+            "PjrtTrainBackend config (artifact {:?}) needs a live runtime: use PjrtTrainBackend::open",
+            cfg.get_str("artifact").unwrap_or_default()
+        ),
+        other => anyhow::bail!("not a TrainBackend config: {other:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trainer::input::{CorpusKind, SyntheticCorpus};
+    use crate::trainer::InputPipeline;
+
+    fn mock() -> MockTrainBackend {
+        MockTrainBackend::new(MockTrainBackendOptions::default())
+    }
+
+    fn corpus_for(b: &dyn TrainBackend, seed: u64) -> SyntheticCorpus {
+        let d = b.descriptor();
+        SyntheticCorpus::new(CorpusKind::Markov, d.vocab, d.batch, d.seq, seed)
+    }
+
+    fn state_bits(b: &dyn TrainBackend) -> Vec<(String, Vec<u32>)> {
+        b.state_to_host()
+            .unwrap()
+            .into_iter()
+            .map(|(n, v)| (n, v.iter().map(|x| x.to_bits()).collect()))
+            .collect()
+    }
+
+    #[test]
+    fn mock_is_deterministic() {
+        let (mut a, mut b) = (mock(), mock());
+        a.init(7).unwrap();
+        b.init(7).unwrap();
+        let mut ca = corpus_for(&a, 1);
+        let mut cb = corpus_for(&b, 1);
+        for _ in 0..5 {
+            let (ta, ga) = ca.next_batch();
+            let (tb, gb) = cb.next_batch();
+            assert_eq!(
+                a.step(&ta, &ga).unwrap().to_bits(),
+                b.step(&tb, &gb).unwrap().to_bits()
+            );
+        }
+        assert_eq!(state_bits(&a), state_bits(&b));
+    }
+
+    #[test]
+    fn mock_loss_descends() {
+        let mut b = mock();
+        b.init(0).unwrap();
+        let mut c = corpus_for(&b, 0);
+        let mut losses = Vec::new();
+        for _ in 0..30 {
+            let (t, g) = c.next_batch();
+            losses.push(b.step(&t, &g).unwrap());
+        }
+        let head: f32 = losses[..5].iter().sum::<f32>() / 5.0;
+        let tail: f32 = losses[25..].iter().sum::<f32>() / 5.0;
+        assert!(tail < head, "head {head} tail {tail}");
+        assert_eq!(b.steps_done(), 30);
+    }
+
+    #[test]
+    fn restore_then_replay_is_bit_identical() {
+        // the property fleet recovery rests on: resuming from a snapshot
+        // and replaying the same batches reproduces the exact trajectory
+        let mut full = mock();
+        full.init(3).unwrap();
+        let mut c = corpus_for(&full, 9);
+        let mut snapshot = None;
+        for s in 1..=8 {
+            let (t, g) = c.next_batch();
+            full.step(&t, &g).unwrap();
+            if s == 5 {
+                snapshot = Some(full.state_to_host().unwrap());
+            }
+        }
+        let mut resumed = mock();
+        resumed.restore_from_host(&snapshot.unwrap(), 5).unwrap();
+        assert_eq!(resumed.steps_done(), 5);
+        let mut c2 = corpus_for(&resumed, 9);
+        for _ in 0..5 {
+            c2.next_batch(); // replay consumed batches
+        }
+        for _ in 6..=8 {
+            let (t, g) = c2.next_batch();
+            resumed.step(&t, &g).unwrap();
+        }
+        assert_eq!(state_bits(&full), state_bits(&resumed));
+    }
+
+    #[test]
+    fn eval_is_pure_and_bit_stable() {
+        let mut b = mock();
+        b.init(1).unwrap();
+        let mut c = corpus_for(&b, 2);
+        let (t, g) = c.next_batch();
+        let before = state_bits(&b);
+        let e1 = b.eval_loss(&t, &g).unwrap();
+        let e2 = b.eval_loss(&t, &g).unwrap();
+        assert_eq!(e1.to_bits(), e2.to_bits());
+        assert_eq!(before, state_bits(&b), "eval must not mutate state");
+        assert!(b.supports_eval());
+    }
+
+    #[test]
+    fn step_before_init_rejected() {
+        let mut b = mock();
+        let t = vec![0i32; 64];
+        assert!(b.step(&t, &t).is_err());
+        assert!(b.state_to_host().is_err());
+    }
+
+    #[test]
+    fn backend_from_config_builds_mock_not_pjrt() {
+        use crate::config::registry::default_config;
+        let mock = train_backend_from_config(&default_config("MockTrainBackend").unwrap()).unwrap();
+        assert_eq!(mock.descriptor().name, "mock-train");
+        assert!(!mock.descriptor().measured_time);
+        // pjrt configs compose, but construction needs a live session
+        assert!(train_backend_from_config(&default_config("PjrtTrainBackend").unwrap()).is_err());
+    }
+}

@@ -9,8 +9,7 @@
 
 use anyhow::Result;
 
-use crate::runtime::TrainSession;
-
+use super::backend::TrainBackend;
 use super::input::InputPipeline;
 
 /// One evaluation record.
@@ -42,7 +41,7 @@ impl Evaler {
     pub fn maybe_eval(
         &mut self,
         step: u64,
-        session: &TrainSession,
+        backend: &dyn TrainBackend,
         heldout: &mut dyn InputPipeline,
     ) -> Result<Option<f64>> {
         if self.every_n_steps == 0 || step == 0 || step % self.every_n_steps != 0 {
@@ -51,7 +50,7 @@ impl Evaler {
         let mut total = 0.0f64;
         for _ in 0..self.num_batches {
             let (tok, tgt) = heldout.next_batch();
-            total += session.eval_loss(&tok, &tgt)? as f64;
+            total += backend.eval_loss(&tok, &tgt)? as f64;
         }
         let mean = total / self.num_batches as f64;
         self.records.push(EvalRecord {

@@ -1,21 +1,27 @@
 //! The training loop: the root module's run method.
 //!
-//! Wires together the AOT session, input pipeline, checkpointer,
+//! Wires together the train backend, input pipeline, checkpointer,
 //! watchdog, SDC checker, goodput tracker, and the InvocationContext —
 //! each swappable, none aware of the others' internals (§3, §4.3).
+//!
+//! The loop is written against the [`TrainBackend`] boundary: PJRT
+//! sessions and the deterministic mock run through the identical code
+//! path ([`train`] is a thin wrapper that opens the PJRT backend;
+//! [`train_backend`] is the loop itself).
 
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use crate::checkpoint::format::CheckpointData;
 use crate::checkpoint::saver::{Checkpointer, CheckpointerOptions};
 use crate::module::InvocationContext;
 use crate::monitor::goodput::{EventKind, GoodputTracker};
 use crate::monitor::watchdog::{Watchdog, WatchdogAction, WatchdogOptions};
-use crate::runtime::{Manifest, RuntimeClient, TrainSession};
+use crate::runtime::{Manifest, RuntimeClient};
 
+use super::backend::{PjrtTrainBackend, TrainBackend};
 use super::input::InputPipeline;
 use super::metrics::{MetricsLog, StepRecord};
 
@@ -68,6 +74,9 @@ pub struct TrainOutcome {
     pub final_loss: f32,
     pub watchdog_trips: u64,
     pub resumed_from: Option<u64>,
+    /// Checkpoint saves started (the duplicate-final-save regression
+    /// guard: a step already durable is never saved twice).
+    pub checkpoint_saves: u64,
 }
 
 /// Run training locally on the CPU PJRT client.
@@ -77,16 +86,26 @@ pub fn train(
     input: &mut dyn InputPipeline,
     opts: &TrainerOptions,
 ) -> Result<TrainOutcome> {
+    let mut backend = PjrtTrainBackend::open(client, manifest, &opts.artifact)?;
+    train_backend(&mut backend, input, opts)
+}
+
+/// Run training over any [`TrainBackend`].
+pub fn train_backend(
+    backend: &mut dyn TrainBackend,
+    input: &mut dyn InputPipeline,
+    opts: &TrainerOptions,
+) -> Result<TrainOutcome> {
     let mut ctx = InvocationContext::new("trainer", opts.seed as u64);
-    let mut session = TrainSession::open(client, manifest, &opts.artifact)
-        .with_context(|| format!("opening train session {:?}", opts.artifact))?;
+    let desc = backend.descriptor().clone();
     anyhow::ensure!(
-        input.batch() == session.batch && input.seq() == session.seq,
-        "input pipeline {}x{} does not match artifact {}x{}",
+        input.batch() == desc.batch && input.seq() == desc.seq,
+        "input pipeline {}x{} does not match backend {} {}x{}",
         input.batch(),
         input.seq(),
-        session.batch,
-        session.seq
+        desc.name,
+        desc.batch,
+        desc.seq
     );
 
     let mut goodput = GoodputTracker::new();
@@ -109,13 +128,13 @@ pub fn train(
     match restored {
         Some(data) => {
             let step = data.step;
-            session.restore_from_host(&data.tensors, step)?;
+            backend.restore_from_host(&data.tensors, step)?;
             resumed_from = Some(step);
         }
-        None => session.init(opts.seed)?,
+        None => backend.init(opts.seed)?,
     }
     goodput.record(EventKind::CompilationDone, now(&wall0), 0);
-    goodput.record(EventKind::RestartDone, now(&wall0), session.steps_done);
+    goodput.record(EventKind::RestartDone, now(&wall0), backend.steps_done());
 
     let mut metrics = MetricsLog::new();
     let mut watchdog = Watchdog::new(WatchdogOptions::default());
@@ -124,25 +143,29 @@ pub fn train(
     // held-out stream: same corpus family, different seed
     let mut heldout = super::input::SyntheticCorpus::new(
         super::input::CorpusKind::Markov,
-        session.artifact.hyper.get("vocab_size").copied().unwrap_or(256) as usize,
-        session.batch,
-        session.seq,
+        desc.vocab,
+        desc.batch,
+        desc.seq,
         (opts.seed as u64) ^ 0xE7A1,
     );
     let mut sdc = crate::monitor::sdc::SdcChecker::new(2, false);
-    let tokens_per_step = (session.batch * session.seq) as u64;
+    let tokens_per_step = (desc.batch * desc.seq) as u64;
     let mut first_loss = f32::NAN;
     let mut final_loss = f32::NAN;
+    let mut checkpoint_saves = 0u64;
+    // last step known durable: the in-loop cadence save, or the restored
+    // checkpoint itself (resuming a finished run must not re-save it)
+    let mut last_saved_step = resumed_from;
 
-    while session.steps_done < opts.max_steps {
+    while backend.steps_done() < opts.max_steps {
         profiler.begin("train");
         let (tokens, targets) = profiler.scope("input", || input.next_batch());
         let t0 = Instant::now();
         profiler.begin("step");
-        let loss = ctx.scope("model", |_| session.step(&tokens, &targets))?;
+        let loss = ctx.scope("model", |_| backend.step(&tokens, &targets))?;
         profiler.end();
         let dt = t0.elapsed().as_secs_f64();
-        let step = session.steps_done;
+        let step = backend.steps_done();
         if first_loss.is_nan() {
             first_loss = loss;
         }
@@ -166,16 +189,20 @@ pub fn train(
             }
         }
 
-        if opts.sdc_every > 0 && step % opts.sdc_every == 0 {
-            // Re-run the eval loss twice on frozen inputs: results must be
-            // bit-identical on a healthy host.
-            if session.eval_loss(&tokens, &targets).is_ok() {
-                let report = sdc.sweep(|_| Ok(vec![session.eval_loss(&tokens, &targets)?]))?;
-                anyhow::ensure!(report.healthy(), "SDC detected at step {step}: {report:?}");
-            }
+        if opts.sdc_every > 0 && step % opts.sdc_every == 0 && backend.supports_eval() {
+            // Re-run the eval loss on frozen inputs: results must be
+            // bit-identical on a healthy host.  The first execution seeds
+            // the sweep as its reference (no discarded run), and eval
+            // errors propagate instead of silently skipping the check.
+            let mut first = Some(backend.eval_loss(&tokens, &targets)?);
+            let report = sdc.sweep(|_| match first.take() {
+                Some(reference) => Ok(vec![reference]),
+                None => Ok(vec![backend.eval_loss(&tokens, &targets)?]),
+            })?;
+            anyhow::ensure!(report.healthy(), "SDC detected at step {step}: {report:?}");
         }
 
-        if let Some(loss) = evaler.maybe_eval(step, &session, &mut heldout)? {
+        if let Some(loss) = evaler.maybe_eval(step, &*backend, &mut heldout)? {
             ctx.scalar("eval_loss", loss);
         }
 
@@ -184,9 +211,11 @@ pub fn train(
                 profiler.begin("checkpoint");
                 let data = CheckpointData {
                     step,
-                    tensors: session.state_to_host()?,
+                    tensors: backend.state_to_host()?,
                 };
                 c.save(data)?;
+                checkpoint_saves += 1;
+                last_saved_step = Some(step);
                 profiler.end();
                 goodput.record(EventKind::CheckpointDurable, now(&wall0), step);
             }
@@ -194,27 +223,34 @@ pub fn train(
         profiler.end(); // train
     }
 
-    // final checkpoint + flush
+    // final checkpoint + flush — skipped when the last loop iteration
+    // already saved this step (max_steps % checkpoint_every == 0 used to
+    // trigger a redundant blocking save on the async saver)
     if let Some(c) = checkpointer.as_mut() {
-        let data = CheckpointData {
-            step: session.steps_done,
-            tensors: session.state_to_host()?,
-        };
-        c.save(data)?;
+        let final_step = backend.steps_done();
+        if last_saved_step != Some(final_step) {
+            let data = CheckpointData {
+                step: final_step,
+                tensors: backend.state_to_host()?,
+            };
+            c.save(data)?;
+            checkpoint_saves += 1;
+            goodput.record(EventKind::CheckpointDurable, now(&wall0), final_step);
+        }
         c.flush()?;
-        goodput.record(EventKind::CheckpointDurable, now(&wall0), session.steps_done);
     }
-    goodput.record(EventKind::JobEnd, now(&wall0), session.steps_done);
+    goodput.record(EventKind::JobEnd, now(&wall0), backend.steps_done());
 
     Ok(TrainOutcome {
         metrics,
         goodput,
         evals: evaler.records,
         profile_report: if opts.profile { Some(profiler.report()) } else { None },
-        final_step: session.steps_done,
+        final_step: backend.steps_done(),
         first_loss,
         final_loss,
         watchdog_trips: watchdog.trips,
         resumed_from,
+        checkpoint_saves,
     })
 }

@@ -5,13 +5,24 @@
 //! the summary writer — all of them swappable by config, which is the
 //! paper's core claim ("any module is replaceable, including the input
 //! pipeline, checkpointer, trainer loop").
+//!
+//! The compute substrate itself is swappable through the [`TrainBackend`]
+//! boundary ([`backend`]): the loop, the data-parallel trainer, and the
+//! fleet orchestrator ([`crate::distributed::fleet`]) are policies over
+//! that trait, exactly as serving schedulers are policies over
+//! [`crate::runtime::backend::ComputeBackend`].
 
+pub mod backend;
 pub mod evaler;
 pub mod input;
 pub mod loop_;
 pub mod metrics;
 
+pub use backend::{
+    train_backend_from_config, MockTrainBackend, MockTrainBackendOptions, PjrtTrainBackend,
+    TrainBackend, TrainBackendDescriptor,
+};
 pub use evaler::Evaler;
 pub use input::{InputPipeline, SyntheticCorpus};
-pub use loop_::{train, TrainOutcome, TrainerOptions};
+pub use loop_::{train, train_backend, TrainOutcome, TrainerOptions};
 pub use metrics::{MetricsLog, StepRecord};

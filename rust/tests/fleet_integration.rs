@@ -1,0 +1,320 @@
+//! Fleet-trainer integration: real data-parallel numerics (on the
+//! deterministic mock substrate — no artifacts needed) composed with
+//! failure injection, hot-swap spare promotion, and multi-tier restore.
+//!
+//! The headline assertion: a fleet that loses a replica mid-run —
+//! dropping its node-local checkpoint tier with it — hot-swaps a spare,
+//! restores from the surviving remote tier, and finishes **bit-identical**
+//! to a failure-free run resumed from the same durable step.
+
+use std::path::PathBuf;
+
+use axlearn::checkpoint::multi_tier::Tier;
+use axlearn::checkpoint::saver::list_steps;
+use axlearn::checkpoint::CheckpointerOptions;
+use axlearn::distributed::failure::FailureKind;
+use axlearn::distributed::fleet::{FleetOptions, FleetTrainer, InjectedFailure};
+use axlearn::monitor::goodput::EventKind;
+use axlearn::trainer::backend::{MockTrainBackend, MockTrainBackendOptions, TrainBackend};
+use axlearn::trainer::input::{CorpusKind, SyntheticCorpus};
+use axlearn::trainer::{train_backend, TrainerOptions};
+
+fn mock_workers(n: usize) -> Vec<Box<dyn TrainBackend>> {
+    (0..n)
+        .map(|_| {
+            Box::new(MockTrainBackend::new(MockTrainBackendOptions::default()))
+                as Box<dyn TrainBackend>
+        })
+        .collect()
+}
+
+fn dirs(name: &str) -> (PathBuf, PathBuf) {
+    let base = std::env::temp_dir().join(format!("axl_fleet_{name}_{}", std::process::id()));
+    std::fs::remove_dir_all(&base).ok();
+    (base.join("local"), base.join("remote"))
+}
+
+fn opts(local: PathBuf, remote: PathBuf) -> FleetOptions {
+    FleetOptions {
+        replicas: 2,
+        spares: 1,
+        steps: 24,
+        sync_every: 4,
+        local_every: 4,
+        remote_every: 8,
+        local_dir: local,
+        remote_dir: remote,
+        seed: 0,
+        step_time_s: 1.0,
+        restart_overhead_s: 5.0,
+        reprovision_s: 30.0,
+        ..Default::default()
+    }
+}
+
+fn state_bits(state: &[(String, Vec<f32>)]) -> Vec<(String, Vec<u32>)> {
+    state
+        .iter()
+        .map(|(n, v)| (n.clone(), v.iter().map(|x| x.to_bits()).collect()))
+        .collect()
+}
+
+#[test]
+fn crash_hot_swaps_restores_remote_and_matches_resumed_run() {
+    // run A: replica 1's host dies right after step 18 (local tier lost)
+    let (la, ra) = dirs("a");
+    let mut a = FleetTrainer::new(
+        mock_workers(3),
+        FleetOptions {
+            injected: vec![InjectedFailure {
+                at_step: 18,
+                replica: 1,
+                kind: FailureKind::HostCrash,
+            }],
+            ..opts(la, ra)
+        },
+    )
+    .unwrap();
+    let out_a = a.run().unwrap();
+    assert_eq!(out_a.final_step, 24);
+    assert_eq!(out_a.hot_swaps, 1);
+    assert_eq!(out_a.reprovisions, 0);
+    assert_eq!(out_a.failures_seen, vec![FailureKind::HostCrash]);
+    // the local tier died with the node: restore came from remote, at
+    // the last remote-durable step (16)
+    assert_eq!(out_a.restores, vec![(16, Tier::Remote)]);
+    assert_eq!(out_a.replica_divergence, 0.0);
+    assert!(out_a
+        .goodput
+        .events()
+        .iter()
+        .any(|e| e.kind == EventKind::FailureDetected));
+
+    // run P: failure-free to the durable step, producing the checkpoint…
+    let (lp, rp) = dirs("p");
+    let mut p = FleetTrainer::new(
+        mock_workers(3),
+        FleetOptions {
+            steps: 16,
+            ..opts(lp.clone(), rp.clone())
+        },
+    )
+    .unwrap();
+    p.run().unwrap();
+    // …and run B: a failure-free run *resumed from that durable step*
+    let mut b = FleetTrainer::new(
+        mock_workers(3),
+        FleetOptions {
+            resume: true,
+            ..opts(lp, rp)
+        },
+    )
+    .unwrap();
+    let out_b = b.run().unwrap();
+    assert_eq!(out_b.resumed_from, Some(16));
+    assert_eq!(out_b.final_step, 24);
+
+    // the acceptance bar: bit-identical post-restore convergence
+    assert_eq!(
+        state_bits(&out_a.final_state),
+        state_bits(&out_b.final_state),
+        "recovered fleet diverged from the failure-free resumed run"
+    );
+    let bits = |xs: &[f32]| xs.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+    assert_eq!(bits(&out_a.final_losses), bits(&out_b.final_losses));
+
+    // and the failure shows up in the books: a failure-free full run has
+    // strictly better goodput
+    let (lc, rc) = dirs("c");
+    let out_c = FleetTrainer::new(mock_workers(3), opts(lc, rc))
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(
+        state_bits(&out_c.final_state),
+        state_bits(&out_a.final_state),
+        "recovery must replay onto the failure-free trajectory"
+    );
+    assert!(out_c.goodput.goodput() > 0.95, "{}", out_c.goodput.goodput());
+    assert!(
+        out_a.goodput.goodput() < out_c.goodput.goodput() - 0.05,
+        "failure run {} vs clean run {}",
+        out_a.goodput.goodput(),
+        out_c.goodput.goodput()
+    );
+}
+
+#[test]
+fn crash_before_first_checkpoint_restarts_from_scratch() {
+    let (l, r) = dirs("scratch");
+    let mut fleet = FleetTrainer::new(
+        mock_workers(3),
+        FleetOptions {
+            steps: 8,
+            injected: vec![InjectedFailure {
+                at_step: 2,
+                replica: 0,
+                kind: FailureKind::HostCrash,
+            }],
+            ..opts(l, r)
+        },
+    )
+    .unwrap();
+    let out = fleet.run().unwrap();
+    assert_eq!(out.final_step, 8);
+    assert_eq!(out.hot_swaps, 1);
+    assert!(out.restores.is_empty(), "nothing durable: re-init, not restore");
+    // a from-scratch restart replays the identical trajectory
+    let (lc, rc) = dirs("scratch_clean");
+    let clean = FleetTrainer::new(
+        mock_workers(3),
+        FleetOptions {
+            steps: 8,
+            ..opts(lc, rc)
+        },
+    )
+    .unwrap()
+    .run()
+    .unwrap();
+    assert_eq!(state_bits(&out.final_state), state_bits(&clean.final_state));
+}
+
+#[test]
+fn crash_with_no_spare_reprovisions_in_place() {
+    let (l, r) = dirs("nospare");
+    let mut fleet = FleetTrainer::new(
+        mock_workers(2),
+        FleetOptions {
+            spares: 0,
+            injected: vec![InjectedFailure {
+                at_step: 18,
+                replica: 1,
+                kind: FailureKind::HostCrash,
+            }],
+            ..opts(l, r)
+        },
+    )
+    .unwrap();
+    let out = fleet.run().unwrap();
+    assert_eq!(out.final_step, 24);
+    assert_eq!(out.hot_swaps, 0);
+    assert_eq!(out.reprovisions, 1);
+    assert_eq!(out.restores, vec![(16, Tier::Remote)]);
+    assert_eq!(out.replica_divergence, 0.0);
+}
+
+#[test]
+fn soft_failures_stall_but_lose_no_state() {
+    let (l, r) = dirs("soft");
+    let mut fleet = FleetTrainer::new(
+        mock_workers(3),
+        FleetOptions {
+            injected: vec![
+                InjectedFailure { at_step: 5, replica: 0, kind: FailureKind::Hang },
+                InjectedFailure { at_step: 9, replica: 1, kind: FailureKind::Sdc },
+                InjectedFailure { at_step: 13, replica: 0, kind: FailureKind::StorageThrottle },
+            ],
+            ..opts(l, r)
+        },
+    )
+    .unwrap();
+    let out = fleet.run().unwrap();
+    assert_eq!(out.final_step, 24);
+    assert_eq!(out.stalls, 2);
+    assert_eq!(out.sdc_sweeps, 1);
+    assert!(out.restores.is_empty());
+    // soft failures never perturb the numerics
+    let (lc, rc) = dirs("soft_clean");
+    let clean = FleetTrainer::new(mock_workers(3), opts(lc, rc)).unwrap().run().unwrap();
+    assert_eq!(state_bits(&out.final_state), state_bits(&clean.final_state));
+}
+
+#[test]
+fn fleet_composes_from_config() {
+    use axlearn::config::registry::default_config;
+    use axlearn::config::{ConfigNode, Value};
+    let mut cfg: ConfigNode = default_config("FleetTrainer").unwrap();
+    let (l, r) = dirs("config");
+    {
+        let rec = cfg.at_path_mut("recovery").unwrap();
+        rec.set("local_dir", Value::Str(l.to_string_lossy().into_owned()))
+            .unwrap();
+        rec.set("remote_dir", Value::Str(r.to_string_lossy().into_owned()))
+            .unwrap();
+    }
+    let mut fleet = axlearn::distributed::fleet_from_config(&cfg).unwrap();
+    let out = fleet.run().unwrap();
+    assert_eq!(out.final_step, 16); // registry default
+    assert!(out.final_losses.iter().all(|l| l.is_finite()));
+    assert_eq!(out.replica_divergence, 0.0);
+}
+
+#[test]
+fn trainer_loop_runs_on_mock_backend_without_artifacts() {
+    // the TrainBackend boundary makes the full trainer loop (checkpoint
+    // cadence, SDC sweep, evaler) runnable with zero artifacts on disk
+    let mut backend = MockTrainBackend::new(MockTrainBackendOptions::default());
+    let d = backend.descriptor().clone();
+    let mut input = SyntheticCorpus::new(CorpusKind::Markov, d.vocab, d.batch, d.seq, 0);
+    let ckpt = std::env::temp_dir().join(format!("axl_fleet_looptest_{}", std::process::id()));
+    std::fs::remove_dir_all(&ckpt).ok();
+    let out = train_backend(
+        &mut backend,
+        &mut input,
+        &TrainerOptions {
+            artifact: "mock".into(),
+            max_steps: 6,
+            checkpoint_every: 3,
+            checkpoint: CheckpointerOptions {
+                dir: ckpt.clone(),
+                async_save: false,
+                ..Default::default()
+            },
+            sdc_every: 2,
+            eval_every: 3,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(out.final_step, 6);
+    assert_eq!(out.evals.len(), 2);
+    // duplicate-final-save regression: step 6 is saved once, in the loop
+    // (max_steps % checkpoint_every == 0), never again after it
+    assert_eq!(out.checkpoint_saves, 2);
+    let mut steps = list_steps(&ckpt);
+    steps.sort_unstable();
+    assert_eq!(steps, vec![3, 6]);
+    let _ = std::fs::remove_dir_all(&ckpt);
+}
+
+#[test]
+fn trainer_loop_saves_off_cadence_final_step() {
+    // max_steps (7) not on the cadence (3): the post-loop save must
+    // still make the final step durable
+    let mut backend = MockTrainBackend::new(MockTrainBackendOptions::default());
+    let d = backend.descriptor().clone();
+    let mut input = SyntheticCorpus::new(CorpusKind::Markov, d.vocab, d.batch, d.seq, 1);
+    let ckpt = std::env::temp_dir().join(format!("axl_fleet_offcad_{}", std::process::id()));
+    std::fs::remove_dir_all(&ckpt).ok();
+    let out = train_backend(
+        &mut backend,
+        &mut input,
+        &TrainerOptions {
+            artifact: "mock".into(),
+            max_steps: 7,
+            checkpoint_every: 3,
+            checkpoint: CheckpointerOptions {
+                dir: ckpt.clone(),
+                async_save: false,
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(out.checkpoint_saves, 3); // steps 3, 6 in-loop + 7 post-loop
+    let mut steps = list_steps(&ckpt);
+    steps.sort_unstable();
+    assert_eq!(steps, vec![3, 6, 7]);
+    let _ = std::fs::remove_dir_all(&ckpt);
+}
