@@ -18,12 +18,19 @@ use super::plan::Plan;
 /// The AOT analysis report.
 #[derive(Clone, Debug)]
 pub struct AotReport {
+    /// Whether the plan fits in the target chip's HBM.
     pub fits: bool,
+    /// Predicted per-chip HBM footprint (NaN when the plan OOMs).
     pub hbm_used_bytes: f64,
+    /// The target chip's HBM capacity.
     pub hbm_capacity: f64,
+    /// Predicted step time (NaN when the plan OOMs).
     pub predicted_step_time_s: f64,
+    /// Predicted model FLOPS utilization (0 when the plan OOMs).
     pub predicted_mfu: f64,
+    /// The remat policy the estimator settled on ("-" when it OOMs).
     pub remat_policy: String,
+    /// Model FLOPs of one training step (defined even on OOM).
     pub flops_per_step: f64,
     /// Human-readable outcome ("OK" or the OOM message).
     pub message: String,

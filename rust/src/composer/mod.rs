@@ -6,14 +6,36 @@
 //! rematerialization strategies based on tagged points in the module
 //! hierarchy".
 //!
+//! The pipeline, end to end (`docs/sharding.md` walks an example):
+//!
+//! 1. [`crate::config::MeshRules`] rewrite the config for the target
+//!    instance type (mesh shape, remat, quantization, kernels).
+//! 2. [`sharding`] collects `param_partition_spec` annotations and
+//!    resolves them against the mesh axes.
+//! 3. [`plan::materialize`] resolves the mesh wildcards into a
+//!    [`crate::perfmodel::Strategy`] and bundles everything into a
+//!    [`Plan`].
+//! 4. [`schedule`] lowers strategy + sharding into the plan's explicit
+//!    [`CollectiveSchedule`] with [`crate::perfmodel::comms`] cost
+//!    annotations.
+//!
 //! Local (CPU) execution consumes the plan's `artifact` field through
 //! [`crate::runtime`]; simulated-scale execution consumes `strategy` /
-//! `remat` / `quantization` through [`crate::perfmodel`].
+//! `remat` / `quantization` through [`crate::perfmodel`]; mesh-sharded
+//! execution consumes the schedule through
+//! [`crate::distributed::mesh::MeshTrainer`].
 
 pub mod aot_check;
 pub mod plan;
+pub mod schedule;
 pub mod sharding;
 
 pub use aot_check::{aot_compile_check, AotReport};
 pub use plan::{materialize, Plan};
-pub use sharding::{infer_bias_spec, resolve_partition_spec, ShardingSpec};
+pub use schedule::{
+    build_schedule, local_interconnect, shard_degrees, CollectiveSchedule, ScheduleEntry,
+    SchedulePhase,
+};
+pub use sharding::{
+    collect_sharding, infer_bias_spec, resolve_partition_spec, shard_axes_from_specs, ShardingSpec,
+};

@@ -3,10 +3,12 @@
 use anyhow::{Context, Result};
 
 use crate::config::{ConfigNode, MeshRules};
+use crate::perfmodel::chips;
 use crate::perfmodel::model_shapes::TransformerShape;
 use crate::perfmodel::Strategy;
 
-use super::sharding::{collect_sharding, ShardingSpec};
+use super::schedule::{build_schedule, local_interconnect, CollectiveSchedule};
+use super::sharding::{collect_sharding, shard_axes_from_specs, ShardingSpec};
 
 /// A materialized execution plan: everything the runtime (local or
 /// simulated) needs, fully resolved.
@@ -16,24 +18,40 @@ pub struct Plan {
     pub artifact: String,
     /// Which graph kinds this plan will execute.
     pub preset: String,
+    /// Whether the feed-forward stack is a mixture of experts.
     pub moe: bool,
+    /// Whether the attention stack uses rotary position embeddings.
     pub rope: bool,
+    /// The instance type the plan was materialized for (mesh-rule key
+    /// and interconnect lookup).
+    pub instance_type: String,
     /// Resolved parallelism strategy (wildcards filled in).
     pub strategy: Strategy,
+    /// Mesh axis names after mesh-rule dispatch, parallel to the mesh
+    /// shape the strategy was resolved from.
+    pub mesh_axes: Vec<String>,
     /// Per-layer remat policy (from tagged points), or the trainer-wide
     /// default.
     pub remat_policy: String,
+    /// Numeric format for matmuls ("none" | "int8" | "fp8").
     pub quantization: String,
     /// Attention kernel backend after mesh-rule dispatch.
     pub kernel_backend: String,
     /// Parameter sharding annotations gathered from the layer configs.
     pub sharding: Vec<ShardingSpec>,
+    /// Per-step collective schedule lowered from the strategy + sharding,
+    /// with [`crate::perfmodel::comms`] cost annotations for the target
+    /// interconnect.
+    pub schedule: CollectiveSchedule,
     /// Transformer shape math for this model.
     pub shape: TransformerShape,
-    /// Batch/seq from the input config.
+    /// Global batch size from the input config.
     pub global_batch: usize,
+    /// Sequence length from the input config.
     pub seq_len: usize,
+    /// Training step budget.
     pub max_steps: u64,
+    /// Initialization seed.
     pub seed: u64,
 }
 
@@ -132,16 +150,29 @@ pub fn materialize(
     let seq_len = input.get_int("seq_len")? as usize;
     strategy.validate(global_batch.max(strategy.total_chips()), shape.num_layers as usize)?;
 
+    // Lower strategy + sharding into the explicit per-step collective
+    // schedule, costed over the target's interconnect.
+    let sharding = collect_sharding(&cfg);
+    let shard_axes = shard_axes_from_specs(&sharding, &mesh_names);
+    let interconnect = chips::by_instance_type(instance_type)
+        .map(|c| c.interconnect)
+        .unwrap_or_else(local_interconnect);
+    let schedule =
+        build_schedule(&strategy, &shape, &shard_axes, global_batch, seq_len, &interconnect);
+
     Ok(Plan {
         artifact,
         preset,
         moe,
         rope,
+        instance_type: instance_type.to_string(),
         strategy,
+        mesh_axes: mesh_names,
         remat_policy,
         quantization: cfg.get_str("quantization")?,
         kernel_backend,
-        sharding: collect_sharding(&cfg),
+        sharding,
+        schedule,
         shape,
         global_batch,
         seq_len,
@@ -242,6 +273,35 @@ mod tests {
         t.set("mesh_axis_names", Value::StrList(vec!["data".into(), "fsdp".into()]))
             .unwrap();
         assert!(materialize(&t, "cpu-local", 16, &rules()).is_err());
+    }
+
+    #[test]
+    fn plan_schedule_reflects_the_mesh() {
+        use crate::composer::schedule::SchedulePhase;
+        use crate::perfmodel::comms::Collective;
+        let t = trainer_for_preset("small").unwrap();
+        // H100 rule: fsdp×model mesh -> FSDP gather/scatter + TP activation
+        // all-reduce, no data-parallel sync (data degree 1)
+        let gpu = materialize(&t, "gpu-H100-32", 256, &rules()).unwrap();
+        assert_eq!(gpu.mesh_axes, vec!["fsdp", "model"]);
+        let axes: Vec<&str> = gpu.schedule.entries.iter().map(|e| e.axis.as_str()).collect();
+        assert!(axes.contains(&"fsdp") && axes.contains(&"model"));
+        assert!(!axes.contains(&"data"));
+        assert!(gpu.schedule.total_comm_s() > 0.0);
+        // v5e rule: data×fsdp mesh -> DP sync appears, TP disappears
+        let tpu = materialize(&t, "tpu-v5e-256-4", 1024, &rules()).unwrap();
+        let tpu_axes: Vec<&str> =
+            tpu.schedule.entries.iter().map(|e| e.axis.as_str()).collect();
+        assert!(tpu_axes.contains(&"data") && tpu_axes.contains(&"fsdp"));
+        assert!(!tpu_axes.contains(&"model"));
+        assert!(tpu
+            .schedule
+            .entries
+            .iter()
+            .any(|e| e.phase == SchedulePhase::Update && e.collective == Collective::AllReduce));
+        // single device: nothing to communicate
+        let local = materialize(&t, "cpu-local", 1, &rules()).unwrap();
+        assert!(local.schedule.entries.is_empty());
     }
 
     #[test]

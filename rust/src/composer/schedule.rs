@@ -1,0 +1,392 @@
+//! Collective schedules: the explicit, inspectable communication plan of
+//! a mesh-sharded training step.
+//!
+//! The composer lowers a resolved parallelism [`Strategy`] plus the
+//! parameter sharding collected from the config tree into a
+//! [`CollectiveSchedule`]: one [`ScheduleEntry`] per collective a real
+//! mesh would issue — the FSDP parameter all-gather, the tensor-parallel
+//! activation all-reduce, the FSDP gradient reduce-scatter, and the
+//! data-parallel gradient all-reduce — each annotated with its mesh
+//! axis, subgroup size, payload bytes, and a [`crate::perfmodel::comms`]
+//! cost estimate over the target interconnect.
+//!
+//! Two consumers:
+//!
+//! * [`crate::composer::plan::materialize`] attaches a plan-level
+//!   schedule to every [`crate::composer::Plan`], which `benches/
+//!   bench_mesh.rs` turns into step-time-vs-mesh-shape curves.
+//! * [`crate::distributed::mesh::MeshTrainer`] lowers its per-tensor
+//!   state layout to the same entry type and then *executes* the
+//!   entries over [`crate::distributed::SimCollective`] subgroups.
+//!
+//! Ordering is overlap-aware: within each phase, overlappable entries
+//! (prefetchable gathers, bucketed gradient reductions) are issued
+//! first, largest first, so the longest transfers get the most compute
+//! to hide behind — the standard FSDP prefetch/bucketing discipline.
+
+use crate::perfmodel::chips::Interconnect;
+use crate::perfmodel::comms::{hierarchical, Collective};
+use crate::perfmodel::model_shapes::TransformerShape;
+use crate::perfmodel::Strategy;
+
+/// Where in the step a collective is issued.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SchedulePhase {
+    /// Before compute: parameter reconstruction (FSDP/TP all-gathers).
+    Gather,
+    /// Interleaved with compute: activation reductions on the critical
+    /// path (tensor parallelism).
+    Compute,
+    /// After (or overlapped with) the backward pass: gradient
+    /// reduce-scatter and data-parallel synchronization.
+    Update,
+}
+
+/// One collective in a step, annotated for inspection and cost modeling.
+#[derive(Clone, Debug)]
+pub struct ScheduleEntry {
+    /// Phase the entry is issued in.
+    pub phase: SchedulePhase,
+    /// Collective kind (all-gather, reduce-scatter, all-reduce, …).
+    pub collective: Collective,
+    /// Mesh axis the subgroup spans ("data", "fsdp", "model").
+    pub axis: String,
+    /// Participants per subgroup (the mesh-axis degree).
+    pub group: usize,
+    /// Concurrent subgroup instances tiling the rest of the mesh; they
+    /// run in parallel on disjoint links, so cost is per instance.
+    pub count: usize,
+    /// What is being moved ("params", "grads", "activations", or a
+    /// state-tensor name for the mesh trainer's lowering).
+    pub tensor: String,
+    /// Payload bytes per instance (the gathered/reduced tensor size).
+    pub bytes: f64,
+    /// Estimated seconds for one instance over the target interconnect
+    /// ([`crate::perfmodel::comms::hierarchical`]).
+    pub cost_s: f64,
+    /// Whether the entry can hide behind compute (prefetched gathers,
+    /// bucketed gradient reductions) or sits on the critical path.
+    pub overlappable: bool,
+}
+
+/// The communication plan of one training step, in issue order.
+#[derive(Clone, Debug, Default)]
+pub struct CollectiveSchedule {
+    /// Entries in overlap-aware issue order (see the module docs).
+    pub entries: Vec<ScheduleEntry>,
+}
+
+impl CollectiveSchedule {
+    /// Sort `entries` into overlap-aware issue order: by phase, then
+    /// overlappable before exposed, then largest cost first.
+    pub fn new(mut entries: Vec<ScheduleEntry>) -> Self {
+        entries.sort_by(|a, b| {
+            (a.phase, !a.overlappable)
+                .cmp(&(b.phase, !b.overlappable))
+                .then(b.cost_s.total_cmp(&a.cost_s))
+        });
+        CollectiveSchedule { entries }
+    }
+
+    /// Total per-step communication time, ignoring overlap (sum of one
+    /// instance per entry; concurrent instances tile disjoint links).
+    pub fn total_comm_s(&self) -> f64 {
+        self.entries.iter().map(|e| e.cost_s).sum()
+    }
+
+    /// Communication on the critical path (entries that cannot overlap
+    /// with compute).
+    pub fn exposed_comm_s(&self) -> f64 {
+        self.entries
+            .iter()
+            .filter(|e| !e.overlappable)
+            .map(|e| e.cost_s)
+            .sum()
+    }
+
+    /// Communication that can hide behind compute.
+    pub fn overlappable_comm_s(&self) -> f64 {
+        self.total_comm_s() - self.exposed_comm_s()
+    }
+
+    /// Step time for a given compute estimate: compute, plus exposed
+    /// communication, plus whatever overlappable communication did not
+    /// fit under the compute window.
+    pub fn step_time_s(&self, compute_s: f64) -> f64 {
+        compute_s + self.exposed_comm_s() + (self.overlappable_comm_s() - compute_s).max(0.0)
+    }
+
+    /// Human-readable table (used by docs, benches, and debugging).
+    pub fn render(&self) -> String {
+        let mut out = String::from(
+            "phase    collective     axis   group count tensor        \
+             bytes        cost_s   overlap\n",
+        );
+        for e in &self.entries {
+            let phase = format!("{:?}", e.phase);
+            let collective = format!("{:?}", e.collective);
+            out.push_str(&format!(
+                "{phase:<8} {collective:<14} {:<6} {:>5} {:>5} {:<12} {:>12.3e} {:>12.3e} {}\n",
+                e.axis,
+                e.group,
+                e.count,
+                e.tensor,
+                e.bytes,
+                e.cost_s,
+                if e.overlappable { "yes" } else { "exposed" },
+            ));
+        }
+        out
+    }
+}
+
+/// A modest shared-host interconnect used for cost annotations when the
+/// target is not a known accelerator platform (`cpu-local`, the mock
+/// backends).  The absolute numbers are placeholders; only the relative
+/// shape of the schedule matters on such targets.
+pub fn local_interconnect() -> Interconnect {
+    Interconnect {
+        domain_size: 8,
+        intra_bw: 50e9,
+        inter_bw: 10e9,
+        intra_latency: 1e-6,
+        inter_latency: 10e-6,
+    }
+}
+
+/// Sharding degrees of a strategy under a shard-axis set:
+/// `(fs, ms, rep)` — the fsdp and model sharding degrees (1 when the
+/// axis does not shard parameters; `"model"` and `"tensor"` are
+/// aliases) and the replication degree (the data axis times any
+/// unsharded fsdp/tensor degrees, which fold into the DP sync).
+///
+/// The single source of truth for this derivation: [`build_schedule`]
+/// (the plan-level schedule) and
+/// [`crate::distributed::mesh::MeshTrainer`] (the execution) both call
+/// it, which is what keeps the emitted schedule and the executed
+/// collectives in agreement.
+pub fn shard_degrees(strategy: &Strategy, shard_axes: &[String]) -> (usize, usize, usize) {
+    let has = |name: &str| shard_axes.iter().any(|a| a == name);
+    let fs = if has("fsdp") { strategy.fsdp } else { 1 };
+    let ms = if has("model") || has("tensor") { strategy.tensor } else { 1 };
+    let rep = strategy.data * (strategy.fsdp / fs.max(1)) * (strategy.tensor / ms.max(1));
+    (fs, ms, rep)
+}
+
+/// Lower a resolved strategy + sharding into the plan-level collective
+/// schedule for one training step of `shape`.
+///
+/// `shard_axes` is the set of mesh axes the parameters actually shard
+/// over (see [`crate::composer::sharding::shard_axes_from_specs`]); a
+/// mesh axis that does not shard parameters degrades to extra data
+/// parallelism and is folded into the data-parallel gradient sync.
+pub fn build_schedule(
+    strategy: &Strategy,
+    shape: &TransformerShape,
+    shard_axes: &[String],
+    global_batch: usize,
+    seq_len: usize,
+    ic: &Interconnect,
+) -> CollectiveSchedule {
+    let (fs, ms, rep) = shard_degrees(strategy, shard_axes);
+    let chips = strategy.total_chips().max(1);
+
+    // bf16 parameters/gradients on the wire.
+    let param_bytes = shape.params() as f64 * 2.0;
+    // Tensor-parallel activation traffic: one [batch/dp, seq, model_dim]
+    // bf16 reduction per layer for forward and again for backward.
+    let dp = (strategy.data * strategy.fsdp).max(1);
+    let act_bytes = (global_batch.max(dp) / dp) as f64
+        * seq_len as f64
+        * shape.model_dim as f64
+        * 2.0
+        * shape.num_layers as f64
+        * 2.0;
+
+    let mut entries = Vec::new();
+    if fs > 1 {
+        entries.push(ScheduleEntry {
+            phase: SchedulePhase::Gather,
+            collective: Collective::AllGather,
+            axis: "fsdp".into(),
+            group: fs,
+            count: chips / fs,
+            tensor: "params".into(),
+            bytes: param_bytes / ms as f64,
+            cost_s: hierarchical(Collective::AllGather, param_bytes / ms as f64, fs, ic),
+            overlappable: true,
+        });
+        entries.push(ScheduleEntry {
+            phase: SchedulePhase::Update,
+            collective: Collective::ReduceScatter,
+            axis: "fsdp".into(),
+            group: fs,
+            count: chips / fs,
+            tensor: "grads".into(),
+            bytes: param_bytes / ms as f64,
+            cost_s: hierarchical(Collective::ReduceScatter, param_bytes / ms as f64, fs, ic),
+            overlappable: true,
+        });
+    }
+    if ms > 1 {
+        entries.push(ScheduleEntry {
+            phase: SchedulePhase::Compute,
+            collective: Collective::AllReduce,
+            axis: "model".into(),
+            group: ms,
+            count: chips / ms,
+            tensor: "activations".into(),
+            bytes: act_bytes,
+            cost_s: hierarchical(Collective::AllReduce, act_bytes, ms, ic),
+            overlappable: false,
+        });
+    }
+    if rep > 1 {
+        let grad_shard = param_bytes / (fs * ms) as f64;
+        entries.push(ScheduleEntry {
+            phase: SchedulePhase::Update,
+            collective: Collective::AllReduce,
+            axis: "data".into(),
+            group: rep,
+            count: chips / rep,
+            tensor: "grads".into(),
+            bytes: grad_shard,
+            cost_s: hierarchical(Collective::AllReduce, grad_shard, rep, ic),
+            overlappable: true,
+        });
+    }
+    CollectiveSchedule::new(entries)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn axes(names: &[&str]) -> Vec<String> {
+        names.iter().map(|s| s.to_string()).collect()
+    }
+
+    fn strat(data: usize, fsdp: usize, tensor: usize) -> Strategy {
+        Strategy {
+            data,
+            fsdp,
+            tensor,
+            ..Strategy::default()
+        }
+    }
+
+    fn shape() -> TransformerShape {
+        TransformerShape::llama2_7b()
+    }
+
+    #[test]
+    fn single_device_schedule_is_empty() {
+        let s = build_schedule(
+            &strat(1, 1, 1),
+            &shape(),
+            &axes(&["fsdp", "model"]),
+            8,
+            128,
+            &local_interconnect(),
+        );
+        assert!(s.entries.is_empty());
+        assert_eq!(s.total_comm_s(), 0.0);
+        assert_eq!(s.step_time_s(1.0), 1.0);
+    }
+
+    #[test]
+    fn dp_fsdp_tp_emits_all_four_entries() {
+        let s = build_schedule(
+            &strat(2, 4, 8),
+            &shape(),
+            &axes(&["fsdp", "model"]),
+            1024,
+            4096,
+            &crate::perfmodel::chips::h100().interconnect,
+        );
+        let kinds: Vec<(String, Collective)> = s
+            .entries
+            .iter()
+            .map(|e| (e.axis.clone(), e.collective))
+            .collect();
+        assert!(kinds.contains(&("fsdp".into(), Collective::AllGather)));
+        assert!(kinds.contains(&("fsdp".into(), Collective::ReduceScatter)));
+        assert!(kinds.contains(&("model".into(), Collective::AllReduce)));
+        assert!(kinds.contains(&("data".into(), Collective::AllReduce)));
+        assert!(s.entries.iter().all(|e| e.cost_s > 0.0 && e.bytes > 0.0));
+        // disjoint subgroups tile the mesh
+        for e in &s.entries {
+            assert_eq!(e.group * e.count, 64, "{e:?}");
+        }
+        // the TP activation reduction is the only exposed entry
+        assert!(s.exposed_comm_s() > 0.0);
+        assert_eq!(
+            s.entries.iter().filter(|e| !e.overlappable).count(),
+            1
+        );
+    }
+
+    #[test]
+    fn unsharded_axes_fold_into_data_parallel_sync() {
+        // mesh has fsdp=4 but the specs shard nothing: pure replication
+        let s = build_schedule(&strat(2, 4, 1), &shape(), &[], 64, 128, &local_interconnect());
+        assert_eq!(s.entries.len(), 1);
+        assert_eq!(s.entries[0].axis, "data");
+        assert_eq!(s.entries[0].group, 8); // 2 × 4 folded
+    }
+
+    #[test]
+    fn ordering_is_overlap_aware() {
+        let s = build_schedule(
+            &strat(2, 4, 8),
+            &shape(),
+            &axes(&["fsdp", "model"]),
+            1024,
+            4096,
+            &crate::perfmodel::chips::h100().interconnect,
+        );
+        // phases in order, overlappable first within a phase
+        let phases: Vec<SchedulePhase> = s.entries.iter().map(|e| e.phase).collect();
+        let mut sorted = phases.clone();
+        sorted.sort();
+        assert_eq!(phases, sorted);
+        let update: Vec<&ScheduleEntry> =
+            s.entries.iter().filter(|e| e.phase == SchedulePhase::Update).collect();
+        // within Update, larger overlappable transfers issue first
+        assert!(update.windows(2).all(|w| w[0].cost_s >= w[1].cost_s || !w[1].overlappable));
+    }
+
+    #[test]
+    fn step_time_accounts_for_partial_overlap() {
+        let s = build_schedule(
+            &strat(1, 32, 1),
+            &shape(),
+            &axes(&["fsdp"]),
+            256,
+            2048,
+            &crate::perfmodel::chips::tpu_v5e().interconnect,
+        );
+        let comm = s.overlappable_comm_s();
+        assert!(comm > 0.0);
+        // plenty of compute: fully hidden
+        assert!((s.step_time_s(comm * 10.0) - comm * 10.0).abs() < 1e-12);
+        // no compute: fully exposed
+        assert!((s.step_time_s(0.0) - s.total_comm_s()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn render_mentions_every_entry() {
+        let s = build_schedule(
+            &strat(2, 2, 2),
+            &shape(),
+            &axes(&["fsdp", "model"]),
+            64,
+            128,
+            &local_interconnect(),
+        );
+        let table = s.render();
+        for e in &s.entries {
+            assert!(table.contains(&e.tensor), "{table}");
+        }
+    }
+}

@@ -6,6 +6,11 @@
 //! "AXLearn's Linear layer implementation automatically infers the bias
 //! sharding from the sharding of the model weights, which minimizes
 //! communication costs").
+//!
+//! See `docs/sharding.md` for the end-to-end story: mesh rules pick the
+//! mesh shape, these specs say which axes shard which tensors, and
+//! [`super::schedule`] / [`crate::distributed::mesh`] turn the result
+//! into explicit collectives.
 
 use crate::config::{visit, ConfigNode, Value};
 
@@ -23,6 +28,23 @@ pub struct ShardingSpec {
 /// Resolve a partition spec against the mesh axis names: axes not present
 /// in the mesh degrade to replication (XLA semantics: missing axis =>
 /// replicated), preserving validity across targets.
+///
+/// ```
+/// use axlearn::composer::resolve_partition_spec;
+///
+/// // A ("fsdp", "model") weight on a data×fsdp mesh: the model axis
+/// // does not exist on this target, so that dim replicates.
+/// let spec = vec!["fsdp".to_string(), "model".to_string()];
+/// let mesh = vec!["data".to_string(), "fsdp".to_string()];
+/// assert_eq!(
+///     resolve_partition_spec(&spec, &mesh),
+///     vec!["fsdp".to_string(), "replicated".to_string()]
+/// );
+///
+/// // Resolution is idempotent: re-resolving changes nothing.
+/// let once = resolve_partition_spec(&spec, &mesh);
+/// assert_eq!(resolve_partition_spec(&once, &mesh), once);
+/// ```
 pub fn resolve_partition_spec(spec: &[String], mesh_axes: &[String]) -> Vec<String> {
     spec.iter()
         .map(|a| {
@@ -37,11 +59,36 @@ pub fn resolve_partition_spec(spec: &[String], mesh_axes: &[String]) -> Vec<Stri
 
 /// Infer the bias spec from the weight spec: the bias is sharded like the
 /// weight's *output* dim (last axis), everything else replicated.
+///
+/// ```
+/// use axlearn::composer::infer_bias_spec;
+///
+/// let weight = vec!["fsdp".to_string(), "model".to_string()];
+/// assert_eq!(infer_bias_spec(&weight), vec!["model".to_string()]);
+/// ```
 pub fn infer_bias_spec(weight_axes: &[String]) -> Vec<String> {
     match weight_axes.last() {
         Some(last) => vec![last.clone()],
         None => vec![],
     }
+}
+
+/// The mesh axes a parameter set actually shards over: the union, across
+/// all specs, of resolved axes that name a real mesh axis.  Mesh axes
+/// *not* in this set replicate parameters (extra data parallelism) —
+/// [`super::schedule::build_schedule`] and
+/// [`crate::distributed::mesh::MeshTrainer`] both key off this.
+pub fn shard_axes_from_specs(specs: &[ShardingSpec], mesh_axes: &[String]) -> Vec<String> {
+    let mut out: Vec<String> = Vec::new();
+    for spec in specs {
+        for axis in resolve_partition_spec(&spec.axes, mesh_axes) {
+            if axis != "replicated" && !out.contains(&axis) {
+                out.push(axis);
+            }
+        }
+    }
+    out.sort();
+    out
 }
 
 /// Walk the config tree collecting every `param_partition_spec`.
@@ -104,5 +151,18 @@ mod tests {
         let t = trainer_for_preset("small").unwrap();
         let specs = collect_sharding(&t);
         assert!(specs.iter().all(|s| s.param == "weight"));
+    }
+
+    #[test]
+    fn shard_axes_are_the_resolved_union() {
+        let t = trainer_for_preset("small").unwrap();
+        let specs = collect_sharding(&t);
+        let full = vec!["data".to_string(), "fsdp".to_string(), "model".to_string()];
+        assert_eq!(shard_axes_from_specs(&specs, &full), vec!["fsdp", "model"]);
+        // on a data×fsdp mesh the model dim replicates away
+        let no_tp = vec!["data".to_string(), "fsdp".to_string()];
+        assert_eq!(shard_axes_from_specs(&specs, &no_tp), vec!["fsdp"]);
+        // an empty mesh shards nothing
+        assert!(shard_axes_from_specs(&specs, &[]).is_empty());
     }
 }

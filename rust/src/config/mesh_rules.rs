@@ -14,12 +14,17 @@ use super::node::ConfigNode;
 
 /// One rule: pattern over instance-type strings + ordered modifiers.
 pub struct MeshRule {
+    /// The glob-flavored source pattern (e.g. `"tpu-v5e-256-*"`).
     pub pattern: String,
     regex: Regex,
+    /// Config modifiers applied, in order, when the pattern matches.
     pub modifiers: ModifierList,
 }
 
 impl MeshRule {
+    /// Compile a rule from a glob-flavored pattern (as in the paper:
+    /// `"tpu-v5e-256-*"` — `*` matches anything, everything else is
+    /// literal) and its ordered modifiers.
     pub fn new(pattern: &str, modifiers: Vec<Box<dyn ConfigModifier>>) -> Result<Self> {
         // Glob-flavored pattern as in the paper ("tpu-v5e-256-*"): translate
         // `*` to `.*` and anchor.
@@ -31,6 +36,7 @@ impl MeshRule {
         })
     }
 
+    /// Whether this rule's pattern matches `instance_type`.
     pub fn matches(&self, instance_type: &str) -> bool {
         self.regex.is_match(instance_type)
     }
@@ -54,10 +60,12 @@ fn glob_to_regex(glob: &str) -> String {
 
 /// Ordered rule table; first match wins (like the paper's list form).
 pub struct MeshRules {
+    /// Rules in priority order.
     pub rules: Vec<MeshRule>,
 }
 
 impl MeshRules {
+    /// Build a table from rules in priority order.
     pub fn new(rules: Vec<MeshRule>) -> Self {
         MeshRules { rules }
     }
@@ -70,6 +78,27 @@ impl MeshRules {
     /// Apply the first matching rule's modifiers to `cfg`. Returns the
     /// matched pattern, or None if nothing matched (config left unchanged
     /// — XLA defaults, as the paper notes, are often reasonable).
+    ///
+    /// ```
+    /// use axlearn::config::mesh_rules::paper_appendix_a_rules;
+    /// use axlearn::config::registry::trainer_for_preset;
+    ///
+    /// let rules = paper_appendix_a_rules();
+    /// let mut cfg = trainer_for_preset("small").unwrap();
+    ///
+    /// // Launching on H100s rewrites the mesh to fsdp×model + FP8:
+    /// let matched = rules.apply("gpu-H100-64", &mut cfg).unwrap();
+    /// assert_eq!(matched.as_deref(), Some("gpu-H100-*"));
+    /// assert_eq!(cfg.get_str("quantization").unwrap(), "fp8");
+    /// assert_eq!(
+    ///     cfg.get_str_list("mesh_axis_names").unwrap(),
+    ///     vec!["fsdp".to_string(), "model".to_string()]
+    /// );
+    ///
+    /// // An unknown platform matches nothing and changes nothing:
+    /// let mut other = trainer_for_preset("small").unwrap();
+    /// assert!(rules.apply("cpu-local", &mut other).unwrap().is_none());
+    /// ```
     pub fn apply(&self, instance_type: &str, cfg: &mut ConfigNode) -> Result<Option<String>> {
         match self.find(instance_type) {
             Some(rule) => {

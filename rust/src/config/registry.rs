@@ -247,6 +247,22 @@ pub fn register_defaults() -> BTreeMap<&'static str, Ctor> {
             .field("lr", Value::Float(0.2))
     });
 
+    // ---- training: mesh-sharded execution (wraps any train backend) ----
+    m.insert("MeshTrainer", || {
+        ConfigNode::new("MeshTrainer")
+            .field("mesh_shape", Value::IntList(vec![1, 2, 2]))
+            .field(
+                "mesh_axis_names",
+                Value::StrList(vec!["data".into(), "fsdp".into(), "model".into()]),
+            )
+            // mesh axes that shard parameters (the resolved sharding
+            // plan); axes left out replicate and fold into DP sync
+            .field("shard_axes", Value::StrList(vec!["fsdp".into(), "model".into()]))
+            // instance type selects the interconnect cost model
+            .field("instance_type", Value::Str("cpu-local".into()))
+            .field("backend", Value::Config(builtin("MockTrainBackend")))
+    });
+
     // ---- training: fleet recovery strategy ----
     m.insert("FleetRecovery", || {
         ConfigNode::new("FleetRecovery")
@@ -419,6 +435,22 @@ mod tests {
         )
         .unwrap();
         assert_eq!(f2.child("backend").unwrap().klass, "PjrtTrainBackend");
+    }
+
+    #[test]
+    fn mesh_trainer_tree_is_hierarchical() {
+        // mesh-shape × backend compose like fleet presets: the mesh node
+        // never sees backend internals, and fleets nest meshes
+        let m = default_config("MeshTrainer").unwrap();
+        assert_eq!(m.child("backend").unwrap().klass, "MockTrainBackend");
+        assert!(!m.has_field("dim")); // strict encapsulation
+        let mut fleet = default_config("FleetTrainer").unwrap();
+        fleet.set("backend", Value::Config(m)).unwrap();
+        assert_eq!(fleet.child("backend").unwrap().klass, "MeshTrainer");
+        assert_eq!(
+            fleet.at_path("backend.backend").unwrap().klass,
+            "MockTrainBackend"
+        );
     }
 
     #[test]

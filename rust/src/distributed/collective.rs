@@ -1,24 +1,49 @@
 //! Simulated collectives over replica state vectors.
 //!
 //! The data plane of the cluster simulator: all-reduce/all-gather/
-//! broadcast implemented over plain host vectors, with an injectable
-//! fault hook so the SDC detector and failure-injection tests can
-//! exercise real corruption paths (a bit flip inside a collective is the
-//! canonical interconnect SDC of §5).
+//! broadcast/reduce-scatter implemented over plain host vectors, with an
+//! injectable fault hook so the SDC detector and failure-injection tests
+//! can exercise real corruption paths (a bit flip inside a collective is
+//! the canonical interconnect SDC of §5).
+//!
+//! Reductions run in **binary-tree (pairwise) order**, like real
+//! ring/tree collective implementations — not left-to-right.  Two
+//! properties follow, and the mesh trainer
+//! ([`crate::distributed::mesh::MeshTrainer`]) depends on both:
+//!
+//! * Summing `2^k` *bit-identical* contributions is exact (every partial
+//!   is a power-of-two multiple, i.e. an exponent shift), so a
+//!   mean-reduction over a power-of-two group of equal contributions
+//!   returns them unchanged, bit for bit.
+//! * The result is independent of which replica "hosts" the reduction —
+//!   there is no privileged rank 0 accumulation order.
 
 use anyhow::{bail, Result};
 
-/// A fault hook: (replica, element_index, value) -> corrupted value.
+/// A fault hook: `(replica, element_index, value) -> corrupted value`.
+///
+/// Installed with [`SimCollective::with_fault`]; applied to every
+/// replica's contribution before the collective runs, which is how the
+/// failure-injection tests model interconnect bit flips.
 pub type FaultHook = Box<dyn Fn(usize, usize, f32) -> f32 + Send>;
 
 /// Simulated collective engine.
+///
+/// Each method takes the per-replica contributions of one subgroup (a
+/// mesh-axis slice, a data-parallel ring, …) and returns the
+/// per-replica results.  Shapes are strictly checked: mismatched shard
+/// lengths are an error, never silently truncated or padded.
 #[derive(Default)]
 pub struct SimCollective {
     fault: Option<FaultHook>,
+    /// Number of collectives executed so far (inner phases of a fused
+    /// collective — e.g. the reduction inside a reduce-scatter — count
+    /// as part of their parent, not separately).
     pub ops_run: u64,
 }
 
 impl SimCollective {
+    /// A fault-free engine.
     pub fn new() -> Self {
         Self::default()
     }
@@ -40,25 +65,50 @@ impl SimCollective {
         }
     }
 
+    fn check_equal_lengths(op: &str, shards: &[Vec<f32>]) -> Result<usize> {
+        if shards.is_empty() {
+            bail!("{op} over zero replicas");
+        }
+        let len = shards[0].len();
+        if let Some((r, s)) = shards.iter().enumerate().find(|(_, s)| s.len() != len) {
+            bail!(
+                "{op} shard shape mismatch: replica {r} has {} elements, replica 0 has {len}",
+                s.len()
+            );
+        }
+        Ok(len)
+    }
+
+    /// Pairwise (binary-tree) elementwise sum of the faulted
+    /// contributions — see the module docs for why tree order matters.
+    fn tree_sum(&self, shards: &[Vec<f32>]) -> Vec<f32> {
+        let mut level: Vec<Vec<f32>> = shards
+            .iter()
+            .enumerate()
+            .map(|(r, s)| self.apply_fault(r, s))
+            .collect();
+        while level.len() > 1 {
+            let mut next = Vec::with_capacity(level.len().div_ceil(2));
+            let mut it = level.into_iter();
+            while let Some(mut a) = it.next() {
+                if let Some(b) = it.next() {
+                    for (x, y) in a.iter_mut().zip(&b) {
+                        *x += y;
+                    }
+                }
+                next.push(a);
+            }
+            level = next;
+        }
+        level.pop().expect("non-empty shard set")
+    }
+
     /// Sum all-reduce: every replica ends with the elementwise sum.
     pub fn all_reduce(&mut self, shards: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
         self.ops_run += 1;
-        let n = shards.len();
-        if n == 0 {
-            bail!("all_reduce over zero replicas");
-        }
-        let len = shards[0].len();
-        if shards.iter().any(|s| s.len() != len) {
-            bail!("all_reduce shard length mismatch");
-        }
-        let mut sum = vec![0f32; len];
-        for (r, shard) in shards.iter().enumerate() {
-            let contrib = self.apply_fault(r, shard);
-            for (acc, x) in sum.iter_mut().zip(&contrib) {
-                *acc += x;
-            }
-        }
-        Ok(vec![sum; n])
+        Self::check_equal_lengths("all_reduce", shards)?;
+        let sum = self.tree_sum(shards);
+        Ok(vec![sum; shards.len()])
     }
 
     /// All-gather: every replica ends with the concatenation.
@@ -75,10 +125,23 @@ impl SimCollective {
     }
 
     /// Broadcast from `root` to all replicas.
+    ///
+    /// Every receiving buffer must already have the root's shape — a
+    /// length mismatch is a usage error (the caller sized a replica's
+    /// buffer for a different tensor) and is reported, not papered over
+    /// by silently replacing the buffer.
     pub fn broadcast(&mut self, shards: &mut [Vec<f32>], root: usize) -> Result<()> {
         self.ops_run += 1;
         if root >= shards.len() {
             bail!("broadcast root {root} out of range");
+        }
+        let len = shards[root].len();
+        if let Some((r, s)) = shards.iter().enumerate().find(|(_, s)| s.len() != len) {
+            bail!(
+                "broadcast shard shape mismatch: replica {r} has {} elements, \
+                 root {root} has {len}",
+                s.len()
+            );
         }
         let src = self.apply_fault(root, &shards[root]);
         for (r, s) in shards.iter_mut().enumerate() {
@@ -89,22 +152,22 @@ impl SimCollective {
         Ok(())
     }
 
-    /// Reduce-scatter: replica r ends with the r-th chunk of the sum.
+    /// Reduce-scatter: replica `r` ends with the `r`-th chunk of the sum.
+    ///
+    /// All contributions must have the same length (checked — a
+    /// mismatch is an error, not an out-of-bounds or silent truncation),
+    /// and that length must divide evenly into one chunk per replica.
     pub fn reduce_scatter(&mut self, shards: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
         self.ops_run += 1;
         let n = shards.len();
-        if n == 0 {
-            bail!("reduce_scatter over zero replicas");
-        }
-        let len = shards[0].len();
+        let len = Self::check_equal_lengths("reduce_scatter", shards)?;
         if len % n != 0 {
             bail!("reduce_scatter: {len} elements not divisible by {n} replicas");
         }
-        let summed = self.all_reduce(shards)?; // sums include fault hook
-        self.ops_run -= 1; // the inner op isn't a separate collective
+        let sum = self.tree_sum(shards);
         let chunk = len / n;
         Ok((0..n)
-            .map(|r| summed[0][r * chunk..(r + 1) * chunk].to_vec())
+            .map(|r| sum[r * chunk..(r + 1) * chunk].to_vec())
             .collect())
     }
 }
@@ -138,6 +201,23 @@ mod tests {
     }
 
     #[test]
+    fn tree_reduction_is_exact_for_identical_power_of_two_groups() {
+        // the property the mesh trainer's exactness argument rests on:
+        // 2^k identical contributions sum to exactly 2^k * x, and the
+        // mean (an exponent shift) returns x bit-for-bit
+        let x: Vec<f32> = vec![0.1, -3.7e-3, 123.456, 1.0 + f32::EPSILON];
+        for n in [2usize, 4, 8, 16] {
+            let shards = vec![x.clone(); n];
+            let mut c = SimCollective::new();
+            let out = c.all_reduce(&shards).unwrap();
+            for (i, &xi) in x.iter().enumerate() {
+                let mean = out[0][i] / n as f32;
+                assert_eq!(mean.to_bits(), xi.to_bits(), "n={n} i={i}");
+            }
+        }
+    }
+
+    #[test]
     fn all_gather_concatenates_in_order() {
         let mut c = SimCollective::new();
         let out = c
@@ -156,6 +236,39 @@ mod tests {
     }
 
     #[test]
+    fn shape_mismatch_rejected() {
+        let mut c = SimCollective::new();
+        assert!(c.all_reduce(&[vec![1.0], vec![1.0, 2.0]]).is_err());
+        assert!(c.reduce_scatter(&[vec![1.0, 2.0, 3.0], vec![1.0, 2.0, 3.0]]).is_err());
+    }
+
+    #[test]
+    fn broadcast_shape_mismatch_is_an_error() {
+        // regression: the old implementation silently replaced a
+        // wrongly-sized receive buffer with the root's clone
+        let mut c = SimCollective::new();
+        let mut shards = vec![vec![1.0, 2.0], vec![0.0; 3]];
+        let err = c.broadcast(&mut shards, 0).unwrap_err();
+        assert!(err.to_string().contains("shape mismatch"), "{err}");
+        // the mismatched buffer is left untouched
+        assert_eq!(shards[1], vec![0.0; 3]);
+    }
+
+    #[test]
+    fn reduce_scatter_shape_mismatch_is_an_error() {
+        // regression: lengths were only checked against shards[0] by way
+        // of the inner reduction; the error must name reduce_scatter and
+        // the offending replica
+        let mut c = SimCollective::new();
+        let err = c
+            .reduce_scatter(&[vec![1.0, 2.0], vec![1.0, 2.0, 3.0, 4.0]])
+            .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("reduce_scatter"), "{msg}");
+        assert!(msg.contains("replica 1"), "{msg}");
+    }
+
+    #[test]
     fn reduce_scatter_chunks() {
         let mut c = SimCollective::new();
         let shards = vec![vec![1.0, 2.0, 3.0, 4.0], vec![10.0, 20.0, 30.0, 40.0]];
@@ -165,10 +278,10 @@ mod tests {
     }
 
     #[test]
-    fn shape_mismatch_rejected() {
+    fn reduce_scatter_counts_as_one_collective() {
         let mut c = SimCollective::new();
-        assert!(c.all_reduce(&[vec![1.0], vec![1.0, 2.0]]).is_err());
-        assert!(c.reduce_scatter(&[vec![1.0, 2.0, 3.0], vec![1.0, 2.0, 3.0]]).is_err());
+        c.reduce_scatter(&[vec![1.0, 2.0], vec![3.0, 4.0]]).unwrap();
+        assert_eq!(c.ops_run, 1);
     }
 
     #[test]

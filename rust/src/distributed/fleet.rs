@@ -43,7 +43,7 @@ use crate::checkpoint::multi_tier::{MultiTierCheckpointer, SaveAction, Tier};
 use crate::config::ConfigNode;
 use crate::monitor::goodput::{EventKind, GoodputTracker};
 use crate::monitor::sdc::SdcChecker;
-use crate::trainer::backend::{train_backend_from_config, TrainBackend};
+use crate::trainer::backend::TrainBackend;
 use crate::trainer::input::SyntheticCorpus;
 use crate::trainer::InputPipeline;
 
@@ -458,8 +458,13 @@ impl FleetTrainer {
 
 /// Build a fleet from a registered `FleetTrainer` config: backend ×
 /// replica-count × recovery-strategy compose exactly like trainer
-/// configs.  PJRT backends need a live client — open those with
-/// [`crate::trainer::PjrtTrainBackend::open`] and use [`FleetTrainer::new`].
+/// configs.  The backend child may be a `MeshTrainer` config, in which
+/// case every replica (and spare) is mesh-sharded — data parallelism
+/// across the fleet, FSDP×TP inside each replica — and crash recovery,
+/// checkpointing, and spare promotion run unchanged over the
+/// [`TrainBackend`] boundary.  PJRT backends need a live client — open
+/// those with [`crate::trainer::PjrtTrainBackend::open`] and use
+/// [`FleetTrainer::new`].
 pub fn fleet_from_config(cfg: &ConfigNode) -> Result<FleetTrainer> {
     anyhow::ensure!(
         cfg.klass == "FleetTrainer",
@@ -476,7 +481,7 @@ pub fn fleet_from_config(cfg: &ConfigNode) -> Result<FleetTrainer> {
     let spares = recovery.get_int("spares")? as usize;
     let backend_cfg = cfg.child("backend")?;
     let workers = (0..replicas + spares)
-        .map(|_| train_backend_from_config(backend_cfg))
+        .map(|_| super::mesh::mesh_backend_from_config(backend_cfg))
         .collect::<Result<Vec<_>>>()?;
     let rate = cfg.get_float("failure_rate_per_host_hour")?;
     let failure = if rate > 0.0 {

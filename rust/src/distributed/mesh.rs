@@ -1,0 +1,935 @@
+//! Mesh-sharded execution: the GSPMD-style "global computer" of §3 made
+//! runnable.  A [`MeshTrainer`] takes a resolved DP×FSDP×TP mesh shape,
+//! partitions parameters/gradients/optimizer state across the device
+//! grid per the sharding plan, and executes steps over any
+//! [`TrainBackend`] — lowering every step to an explicit, inspectable
+//! [`CollectiveSchedule`] whose entries it executes over
+//! [`SimCollective`] subgroups per mesh axis.
+//!
+//! ## Execution model
+//!
+//! The mesh runs ONE logical program (the paper's "global computation
+//! over a device mesh").  Between steps, state lives **sharded**: each
+//! device of the `data × fsdp × model` grid holds only its chunk of
+//! every sharded state tensor.  One step is:
+//!
+//! 1. **Gather** — FSDP all-gather within each model column, then a
+//!    model-axis all-gather, reconstruct the full state per replica
+//!    group (explicit [`SimCollective::all_gather`] calls; replica
+//!    groups are cross-checked bit-for-bit, so shard corruption
+//!    surfaces as an error instead of silent divergence).
+//! 2. **Compute** — the gathered state is installed into the inner
+//!    backend and the global step executes once (the simulation
+//!    substrate has one executor; GSPMD guarantees the partitioned
+//!    program computes exactly what the unpartitioned one does, and the
+//!    simulator inherits that property by construction).  When the mesh
+//!    has a model axis, the returned loss is reassembled from
+//!    per-tensor-rank partials through a real model-axis all-reduce —
+//!    the tensor-parallel activation reduction, executed, not implied.
+//! 3. **Update** — FSDP reduce-scatter leaves each rank its mean chunk
+//!    of the updated block, and a data-axis all-reduce synchronizes the
+//!    replication groups.  Both run through the collective engine, so
+//!    an installed fault hook corrupts them exactly like a real
+//!    interconnect SDC.
+//!
+//! ## Bit-exactness
+//!
+//! [`SimCollective`] reduces in binary-tree order, so power-of-two
+//! groups of bit-identical contributions reduce *exactly* (see the
+//! collective module docs).  Every collective above is a mean over
+//! bit-identical contributions; for power-of-two mesh axes the sharded
+//! run is therefore **bit-identical** to the single-device run on the
+//! same seed and data — for every factorization of the device count.
+//! `tests/mesh_integration.rs` asserts exactly that, and the fleet
+//! trainer leans on it: a [`MeshTrainer`] *is* a [`TrainBackend`], so
+//! fleet replicas can be mesh-sharded and recover through host crashes
+//! with the unchanged checkpoint/restore machinery.
+
+use std::cell::RefCell;
+
+use anyhow::{Context, Result};
+
+use crate::composer::schedule::{
+    local_interconnect, shard_degrees, CollectiveSchedule, ScheduleEntry, SchedulePhase,
+};
+use crate::composer::sharding::shard_axes_from_specs;
+use crate::composer::{materialize, Plan};
+use crate::config::{ConfigNode, MeshRules};
+use crate::perfmodel::chips;
+use crate::perfmodel::chips::Interconnect;
+use crate::perfmodel::comms::{hierarchical, Collective};
+use crate::perfmodel::Strategy;
+use crate::trainer::backend::{train_backend_from_config, TrainBackend, TrainBackendDescriptor};
+
+use super::collective::{FaultHook, SimCollective};
+
+/// How a [`MeshTrainer`] shards and costs its mesh.
+#[derive(Clone, Debug)]
+pub struct MeshOptions {
+    /// Resolved mesh shape: `data × fsdp × tensor` (pipeline and expert
+    /// must be 1).
+    pub strategy: Strategy,
+    /// Mesh axes that shard parameters (from the resolved
+    /// [`crate::composer::ShardingSpec`]s; see
+    /// [`shard_axes_from_specs`]).  A mesh axis not listed here
+    /// replicates parameters and folds into the data-parallel sync.
+    pub shard_axes: Vec<String>,
+    /// Interconnect used for the schedule's cost annotations.
+    pub interconnect: Interconnect,
+    /// Payload of the per-step tensor-parallel activation reduction
+    /// (cost annotation); `0.0` derives a batch×seq proxy from the
+    /// backend descriptor.
+    pub activation_bytes: f64,
+}
+
+impl MeshOptions {
+    /// Options for a plain `data × fsdp × model` mesh with the default
+    /// parameter sharding (over both fsdp and model axes) and the local
+    /// cost model.
+    pub fn for_mesh(data: usize, fsdp: usize, tensor: usize) -> Self {
+        MeshOptions {
+            strategy: Strategy {
+                data,
+                fsdp,
+                tensor,
+                ..Strategy::default()
+            },
+            shard_axes: vec!["fsdp".into(), "model".into()],
+            interconnect: local_interconnect(),
+            activation_bytes: 0.0,
+        }
+    }
+}
+
+/// The mutable execution state (interior-mutable so `&self` trait ops —
+/// eval, state snapshot — can run collectives and install state).
+struct MeshCore {
+    inner: Box<dyn TrainBackend>,
+    collective: SimCollective,
+    /// `devices[dev][tensor]`: the chunk of a sharded tensor (or a full
+    /// copy of a replicated one) held by device `dev = r*g + c`, where
+    /// `r` indexes the replication group and `c = m*fs + f` the shard
+    /// lattice position.
+    devices: Vec<Vec<Vec<f32>>>,
+    names: Vec<String>,
+    sharded: Vec<bool>,
+    /// FSDP sharding degree (1 when "fsdp" is not a shard axis).
+    fs: usize,
+    /// Model/tensor sharding degree (1 when "model" is not a shard axis).
+    ms: usize,
+    /// Shard-lattice size: `fs * ms`.
+    g: usize,
+    /// Replication degree: data × any unsharded fsdp/tensor axes.
+    rep: usize,
+    step: u64,
+    initialized: bool,
+}
+
+fn bits_eq(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+impl MeshCore {
+    /// Split `state` into per-device chunks (the init/restore "scatter").
+    fn shard_state(&mut self, state: &[(String, Vec<f32>)]) -> Result<()> {
+        let (fs, ms, g, rep) = (self.fs, self.ms, self.g, self.rep);
+        let mut sharded = Vec::with_capacity(state.len());
+        for (name, v) in state {
+            let shard = g > 1 && v.len() > 1;
+            if shard && v.len() % g != 0 {
+                anyhow::bail!(
+                    "tensor {name:?} ({} elements) does not divide into {g} shards \
+                     (fsdp {fs} × model {ms}); pick a mesh whose shard group divides the state",
+                    v.len()
+                );
+            }
+            sharded.push(shard);
+        }
+        self.devices = (0..rep * g)
+            .map(|dev| {
+                let c = dev % g;
+                state
+                    .iter()
+                    .zip(&sharded)
+                    .map(|((_, v), &shard)| {
+                        if shard {
+                            let chunk = v.len() / g;
+                            v[c * chunk..(c + 1) * chunk].to_vec()
+                        } else {
+                            v.clone()
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+        self.names = state.iter().map(|(n, _)| n.clone()).collect();
+        self.sharded = sharded;
+        Ok(())
+    }
+
+    /// Reconstruct the full state from the device shards: FSDP
+    /// all-gather within each model column, then a model-axis
+    /// all-gather — executed per replication group and cross-checked
+    /// bit-for-bit between groups.
+    fn gather_full(&mut self) -> Result<Vec<(String, Vec<f32>)>> {
+        anyhow::ensure!(self.initialized, "MeshTrainer: no state to gather before init/restore");
+        let (fs, ms, g, rep) = (self.fs, self.ms, self.g, self.rep);
+        let mut first: Vec<(String, Vec<f32>)> = Vec::new();
+        for r in 0..rep {
+            let mut tensors = Vec::with_capacity(self.names.len());
+            for t in 0..self.names.len() {
+                let full = if self.sharded[t] {
+                    let mut blocks: Vec<Vec<f32>> = Vec::with_capacity(ms);
+                    for m in 0..ms {
+                        let block = if fs > 1 {
+                            let contribs: Vec<Vec<f32>> = (0..fs)
+                                .map(|f| self.devices[r * g + m * fs + f][t].clone())
+                                .collect();
+                            self.collective.all_gather(&contribs)?.swap_remove(0)
+                        } else {
+                            self.devices[r * g + m * fs][t].clone()
+                        };
+                        blocks.push(block);
+                    }
+                    if ms > 1 {
+                        self.collective.all_gather(&blocks)?.swap_remove(0)
+                    } else {
+                        blocks.swap_remove(0)
+                    }
+                } else {
+                    self.devices[r * g][t].clone()
+                };
+                tensors.push((self.names[t].clone(), full));
+            }
+            if r == 0 {
+                first = tensors;
+            } else {
+                for (a, b) in first.iter().zip(&tensors) {
+                    anyhow::ensure!(
+                        bits_eq(&a.1, &b.1),
+                        "mesh replica group {r} diverged from group 0 on tensor {:?}: \
+                         possible shard corruption",
+                        a.0
+                    );
+                }
+            }
+        }
+        Ok(first)
+    }
+
+    /// Lower the post-step state back onto the device grid: FSDP
+    /// reduce-scatter (mean) per model column, then the data-axis
+    /// all-reduce (mean) across replication groups.
+    fn scatter_update(&mut self, new: &[(String, Vec<f32>)]) -> Result<()> {
+        anyhow::ensure!(
+            new.len() == self.names.len(),
+            "state tensor count changed across a step: {} vs {}",
+            new.len(),
+            self.names.len()
+        );
+        let (fs, ms, g, rep) = (self.fs, self.ms, self.g, self.rep);
+        for (t, (name, v)) in new.iter().enumerate() {
+            anyhow::ensure!(
+                *name == self.names[t],
+                "state tensor order changed across a step: {name:?} vs {:?}",
+                self.names[t]
+            );
+            if self.sharded[t] {
+                anyhow::ensure!(
+                    v.len() % g == 0,
+                    "sharded tensor {name:?} changed to {} elements (not divisible by {g})",
+                    v.len()
+                );
+                let block_len = v.len() / ms;
+                for r in 0..rep {
+                    for m in 0..ms {
+                        let block = &v[m * block_len..(m + 1) * block_len];
+                        if fs > 1 {
+                            // every fsdp rank contributes its (replicated-
+                            // compute) block and keeps its mean chunk
+                            let contribs: Vec<Vec<f32>> =
+                                (0..fs).map(|_| block.to_vec()).collect();
+                            let chunks = self.collective.reduce_scatter(&contribs)?;
+                            for (f, mut chunk) in chunks.into_iter().enumerate() {
+                                for x in chunk.iter_mut() {
+                                    *x /= fs as f32;
+                                }
+                                self.devices[r * g + m * fs + f][t] = chunk;
+                            }
+                        } else {
+                            self.devices[r * g + m * fs][t] = block.to_vec();
+                        }
+                    }
+                }
+                if rep > 1 {
+                    // DP sync: all-reduce-average each shard position
+                    // across the replication groups
+                    for c in 0..g {
+                        let contribs: Vec<Vec<f32>> =
+                            (0..rep).map(|r| self.devices[r * g + c][t].clone()).collect();
+                        let mut merged = self.collective.all_reduce(&contribs)?.swap_remove(0);
+                        for x in merged.iter_mut() {
+                            *x /= rep as f32;
+                        }
+                        for r in 0..rep {
+                            self.devices[r * g + c][t] = merged.clone();
+                        }
+                    }
+                }
+            } else if rep > 1 && v.len() > 1 {
+                // replicated tensor under data parallelism: the DP
+                // gradient sync (identical contributions -> exact mean)
+                let contribs: Vec<Vec<f32>> = (0..rep).map(|_| v.clone()).collect();
+                let mut merged = self.collective.all_reduce(&contribs)?.swap_remove(0);
+                for x in merged.iter_mut() {
+                    *x /= rep as f32;
+                }
+                for dev in self.devices.iter_mut() {
+                    dev[t] = merged.clone();
+                }
+            } else {
+                // scalar bookkeeping (the step counter) advances
+                // identically everywhere — no communication, as on a
+                // real mesh
+                for dev in self.devices.iter_mut() {
+                    dev[t] = v.clone();
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Mesh-sharded training over any [`TrainBackend`] — itself a
+/// [`TrainBackend`], so the trainer loop, `train_data_parallel_backends`,
+/// and the fleet orchestrator run mesh-sharded without changes (mesh ×
+/// backend composition, exactly like the serving router composes
+/// backends).
+pub struct MeshTrainer {
+    opts: MeshOptions,
+    desc: TrainBackendDescriptor,
+    activation_bytes: f64,
+    core: RefCell<MeshCore>,
+}
+
+impl MeshTrainer {
+    /// Wrap `inner` in a mesh.  Fails on pipeline/expert axes (not
+    /// lowered here) — shard-divisibility is checked at init/restore
+    /// time, when tensor shapes are known.
+    pub fn new(inner: Box<dyn TrainBackend>, opts: MeshOptions) -> Result<Self> {
+        let s = &opts.strategy;
+        anyhow::ensure!(
+            s.pipeline == 1 && s.expert == 1,
+            "MeshTrainer lowers DP×FSDP×TP; pipeline ({}) and expert ({}) axes are not supported",
+            s.pipeline,
+            s.expert
+        );
+        anyhow::ensure!(
+            s.data >= 1 && s.fsdp >= 1 && s.tensor >= 1,
+            "mesh axes must be >= 1: {s:?}"
+        );
+        // same derivation the composer's plan-level schedule uses — the
+        // emitted schedule and the executed collectives must agree
+        let (fs, ms, rep) = shard_degrees(s, &opts.shard_axes);
+        let g = fs * ms;
+        let inner_desc = inner.descriptor().clone();
+        let desc = TrainBackendDescriptor {
+            name: format!(
+                "mesh[{}x{}x{}]:{}",
+                s.data, s.fsdp, s.tensor, inner_desc.name
+            ),
+            ..inner_desc.clone()
+        };
+        let activation_bytes = if opts.activation_bytes > 0.0 {
+            opts.activation_bytes
+        } else {
+            (inner_desc.batch * inner_desc.seq * 4) as f64
+        };
+        Ok(MeshTrainer {
+            opts,
+            desc,
+            activation_bytes,
+            core: RefCell::new(MeshCore {
+                inner,
+                collective: SimCollective::new(),
+                devices: Vec::new(),
+                names: Vec::new(),
+                sharded: Vec::new(),
+                fs,
+                ms,
+                g,
+                rep,
+                step: 0,
+                initialized: false,
+            }),
+        })
+    }
+
+    /// Install a fault hook on the mesh's collective engine (interconnect
+    /// SDC injection — corruption flows through gathers and reductions
+    /// exactly as on real hardware).
+    pub fn with_fault(mut self, hook: FaultHook) -> Self {
+        let core = self.core.get_mut();
+        core.collective = std::mem::take(&mut core.collective).with_fault(hook);
+        self
+    }
+
+    /// The resolved mesh shape.
+    pub fn strategy(&self) -> &Strategy {
+        &self.opts.strategy
+    }
+
+    /// Devices on the mesh (`data × fsdp × tensor`).
+    pub fn num_devices(&self) -> usize {
+        let core = self.core.borrow();
+        core.rep * core.g
+    }
+
+    /// Collectives executed so far.
+    pub fn collective_ops(&self) -> u64 {
+        self.core.borrow().collective.ops_run
+    }
+
+    /// Lower one step to its [`CollectiveSchedule`]: the collectives
+    /// [`TrainBackend::step`] executes, annotated with mesh axis,
+    /// subgroup size, payload, and a [`crate::perfmodel::comms`] cost
+    /// over the configured interconnect.
+    ///
+    /// Entry kinds, axes, subgroup sizes, and payloads match execution
+    /// exactly.  `count` is the **real-mesh tiling** (`group × count` =
+    /// devices): the simulator coalesces instances whose contributions
+    /// are bit-identical — e.g. the model-axis parameter all-gather,
+    /// which every fsdp rank issues on real hardware (`count = rep*fs`),
+    /// runs once per replication group here because the preceding fsdp
+    /// gather already equalized the ranks.  Compare `collective_ops()`
+    /// against execution, not against summed `count`s.
+    pub fn lower_step(&self) -> Result<CollectiveSchedule> {
+        let core = self.core.borrow();
+        anyhow::ensure!(core.initialized, "MeshTrainer::lower_step before init/restore");
+        let (fs, ms, g, rep) = (core.fs, core.ms, core.g, core.rep);
+        let ic = &self.opts.interconnect;
+        let mut entries = Vec::new();
+        for (t, name) in core.names.iter().enumerate() {
+            let chunk_len = core.devices[0][t].len();
+            if core.sharded[t] {
+                let full_bytes = (chunk_len * g * 4) as f64;
+                let block_bytes = full_bytes / ms as f64;
+                if fs > 1 {
+                    entries.push(ScheduleEntry {
+                        phase: SchedulePhase::Gather,
+                        collective: Collective::AllGather,
+                        axis: "fsdp".into(),
+                        group: fs,
+                        count: rep * ms,
+                        tensor: name.clone(),
+                        bytes: block_bytes,
+                        cost_s: hierarchical(Collective::AllGather, block_bytes, fs, ic),
+                        overlappable: true,
+                    });
+                    entries.push(ScheduleEntry {
+                        phase: SchedulePhase::Update,
+                        collective: Collective::ReduceScatter,
+                        axis: "fsdp".into(),
+                        group: fs,
+                        count: rep * ms,
+                        tensor: name.clone(),
+                        bytes: block_bytes,
+                        cost_s: hierarchical(Collective::ReduceScatter, block_bytes, fs, ic),
+                        overlappable: true,
+                    });
+                }
+                if ms > 1 {
+                    entries.push(ScheduleEntry {
+                        phase: SchedulePhase::Gather,
+                        collective: Collective::AllGather,
+                        axis: "model".into(),
+                        group: ms,
+                        count: rep * fs,
+                        tensor: name.clone(),
+                        bytes: full_bytes,
+                        cost_s: hierarchical(Collective::AllGather, full_bytes, ms, ic),
+                        overlappable: true,
+                    });
+                }
+                if rep > 1 {
+                    let shard_bytes = full_bytes / g as f64;
+                    entries.push(ScheduleEntry {
+                        phase: SchedulePhase::Update,
+                        collective: Collective::AllReduce,
+                        axis: "data".into(),
+                        group: rep,
+                        count: g,
+                        tensor: name.clone(),
+                        bytes: shard_bytes,
+                        cost_s: hierarchical(Collective::AllReduce, shard_bytes, rep, ic),
+                        overlappable: true,
+                    });
+                }
+            } else if rep > 1 && chunk_len > 1 {
+                let bytes = (chunk_len * 4) as f64;
+                entries.push(ScheduleEntry {
+                    phase: SchedulePhase::Update,
+                    collective: Collective::AllReduce,
+                    axis: "data".into(),
+                    group: rep,
+                    count: 1,
+                    tensor: name.clone(),
+                    bytes,
+                    cost_s: hierarchical(Collective::AllReduce, bytes, rep, ic),
+                    overlappable: true,
+                });
+            }
+        }
+        if ms > 1 {
+            entries.push(ScheduleEntry {
+                phase: SchedulePhase::Compute,
+                collective: Collective::AllReduce,
+                axis: "model".into(),
+                group: ms,
+                count: rep * fs,
+                tensor: "activations".into(),
+                bytes: self.activation_bytes,
+                cost_s: hierarchical(Collective::AllReduce, self.activation_bytes, ms, ic),
+                overlappable: false,
+            });
+        }
+        Ok(CollectiveSchedule::new(entries))
+    }
+}
+
+impl TrainBackend for MeshTrainer {
+    fn descriptor(&self) -> &TrainBackendDescriptor {
+        &self.desc
+    }
+
+    fn init(&mut self, seed: i32) -> Result<()> {
+        let core = self.core.get_mut();
+        core.inner.init(seed)?;
+        let state = core.inner.state_to_host()?;
+        core.shard_state(&state)?;
+        core.step = 0;
+        core.initialized = true;
+        Ok(())
+    }
+
+    fn step(&mut self, tokens: &[i32], targets: &[i32]) -> Result<f32> {
+        let core = self.core.get_mut();
+        anyhow::ensure!(core.initialized, "MeshTrainer::step before init/restore");
+        // 1. gather: reconstruct the full state from the device shards
+        let full = core.gather_full()?;
+        let at_step = core.step;
+        core.inner
+            .restore_from_host(&full, at_step)
+            .context("installing gathered mesh state")?;
+        // 2. compute: the global step
+        let raw = core.inner.step(tokens, targets)?;
+        // tensor-parallel activation reduction: reassemble the loss from
+        // per-rank partials through a real model-axis all-reduce
+        let loss = if core.ms > 1 {
+            let part = raw / core.ms as f32;
+            let contribs = vec![vec![part]; core.ms];
+            core.collective.all_reduce(&contribs)?[0][0]
+        } else {
+            raw
+        };
+        // 3. update: reduce-scatter + DP sync back onto the shards
+        let new = core.inner.state_to_host()?;
+        core.scatter_update(&new)?;
+        core.step += 1;
+        Ok(loss)
+    }
+
+    fn eval_loss(&self, tokens: &[i32], targets: &[i32]) -> Result<f32> {
+        let mut core = self.core.borrow_mut();
+        anyhow::ensure!(core.initialized, "MeshTrainer::eval_loss before init/restore");
+        let full = core.gather_full()?;
+        let at_step = core.step;
+        core.inner.restore_from_host(&full, at_step)?;
+        core.inner.eval_loss(tokens, targets)
+    }
+
+    fn supports_eval(&self) -> bool {
+        self.core.borrow().inner.supports_eval()
+    }
+
+    fn state_to_host(&self) -> Result<Vec<(String, Vec<f32>)>> {
+        self.core.borrow_mut().gather_full()
+    }
+
+    fn restore_from_host(&mut self, tensors: &[(String, Vec<f32>)], step: u64) -> Result<()> {
+        let core = self.core.get_mut();
+        // the inner backend validates names/shapes; then re-shard
+        core.inner.restore_from_host(tensors, step)?;
+        core.shard_state(tensors)?;
+        core.step = step;
+        core.initialized = true;
+        Ok(())
+    }
+
+    fn steps_done(&self) -> u64 {
+        self.core.borrow().step
+    }
+
+    fn num_params(&self) -> usize {
+        self.core.borrow().inner.num_params()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Config-driven construction
+// ---------------------------------------------------------------------------
+
+/// Build a [`MeshTrainer`] from a registered `MeshTrainer` config
+/// (mesh-shape × backend composition, like fleet presets).  The mesh
+/// shape must be fully resolved — route wildcard shapes through
+/// [`crate::composer::materialize`] / [`mesh_trainer_for_instance`].
+pub fn mesh_from_config(cfg: &ConfigNode) -> Result<MeshTrainer> {
+    anyhow::ensure!(
+        cfg.klass == "MeshTrainer",
+        "expected a MeshTrainer config, got {:?}",
+        cfg.klass
+    );
+    let shape = cfg.get_int_list("mesh_shape")?;
+    let names = cfg.get_str_list("mesh_axis_names")?;
+    anyhow::ensure!(
+        shape.iter().all(|&d| d > 0),
+        "MeshTrainer config mesh_shape {shape:?} must be fully resolved (no wildcards); \
+         resolve against a chip count with composer::materialize or Strategy::from_mesh"
+    );
+    let total: i64 = shape.iter().product();
+    let strategy = Strategy::from_mesh(&shape, &names, total as usize)?;
+    let instance = cfg.get_str("instance_type")?;
+    let interconnect = chips::by_instance_type(&instance)
+        .map(|c| c.interconnect)
+        .unwrap_or_else(local_interconnect);
+    // recurse through the dispatch so meshes nest in config exactly as
+    // they do at the type level (a mesh wraps any TrainBackend)
+    let inner = mesh_backend_from_config(cfg.child("backend")?)?;
+    MeshTrainer::new(
+        inner,
+        MeshOptions {
+            strategy,
+            shard_axes: cfg.get_str_list("shard_axes")?,
+            interconnect,
+            activation_bytes: 0.0,
+        },
+    )
+}
+
+/// Config dispatch for fleet/DP workers: a `MeshTrainer` config becomes
+/// a mesh-sharded worker wrapping its inner backend; anything else goes
+/// through [`train_backend_from_config`] unchanged.
+pub fn mesh_backend_from_config(cfg: &ConfigNode) -> Result<Box<dyn TrainBackend>> {
+    if cfg.klass == "MeshTrainer" {
+        Ok(Box::new(mesh_from_config(cfg)?))
+    } else {
+        train_backend_from_config(cfg)
+    }
+}
+
+/// Wire a materialized [`Plan`] into mesh-sharded execution: the plan's
+/// resolved strategy, its sharding specs (resolved against the plan's
+/// mesh axes), and its target interconnect become the mesh options.
+pub fn mesh_trainer_from_plan(plan: &Plan, inner: Box<dyn TrainBackend>) -> Result<MeshTrainer> {
+    let shard_axes = shard_axes_from_specs(&plan.sharding, &plan.mesh_axes);
+    let interconnect = chips::by_instance_type(&plan.instance_type)
+        .map(|c| c.interconnect)
+        .unwrap_or_else(local_interconnect);
+    MeshTrainer::new(
+        inner,
+        MeshOptions {
+            strategy: plan.strategy.clone(),
+            shard_axes,
+            interconnect,
+            activation_bytes: 0.0,
+        },
+    )
+}
+
+/// The full §3 route in one call: apply [`MeshRules`] for the instance
+/// type, materialize the plan, and construct the mesh-sharded trainer —
+/// `mesh_rules.apply` output flowing into [`MeshTrainer`] construction.
+pub fn mesh_trainer_for_instance(
+    trainer: &ConfigNode,
+    instance_type: &str,
+    total_chips: usize,
+    rules: &MeshRules,
+    inner: Box<dyn TrainBackend>,
+) -> Result<MeshTrainer> {
+    let plan = materialize(trainer, instance_type, total_chips, rules)?;
+    mesh_trainer_from_plan(&plan, inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trainer::backend::{MockTrainBackend, MockTrainBackendOptions};
+    use crate::trainer::input::{CorpusKind, SyntheticCorpus};
+    use crate::trainer::InputPipeline;
+
+    fn mock() -> Box<dyn TrainBackend> {
+        Box::new(MockTrainBackend::new(MockTrainBackendOptions::default()))
+    }
+
+    fn corpus(seed: u64) -> SyntheticCorpus {
+        let d = MockTrainBackendOptions::default();
+        SyntheticCorpus::new(CorpusKind::Markov, d.vocab, d.batch, d.seq, seed)
+    }
+
+    fn state_bits(b: &dyn TrainBackend) -> Vec<(String, Vec<u32>)> {
+        b.state_to_host()
+            .unwrap()
+            .into_iter()
+            .map(|(n, v)| (n, v.iter().map(|x| x.to_bits()).collect()))
+            .collect()
+    }
+
+    fn run_steps(b: &mut dyn TrainBackend, corpus_seed: u64, steps: usize) -> Vec<u32> {
+        let mut c = corpus(corpus_seed);
+        (0..steps)
+            .map(|_| {
+                let (tok, tgt) = c.next_batch();
+                b.step(&tok, &tgt).unwrap().to_bits()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn trivial_mesh_is_transparent() {
+        let mut single = mock();
+        single.init(3).unwrap();
+        let ls = run_steps(&mut *single, 5, 6);
+        let mut mesh = MeshTrainer::new(mock(), MeshOptions::for_mesh(1, 1, 1)).unwrap();
+        mesh.init(3).unwrap();
+        let lm = run_steps(&mut mesh, 5, 6);
+        assert_eq!(ls, lm);
+        assert_eq!(state_bits(&*single), state_bits(&mesh));
+        assert_eq!(mesh.num_devices(), 1);
+        assert_eq!(mesh.collective_ops(), 0, "a 1-device mesh communicates nothing");
+    }
+
+    #[test]
+    fn dp_fsdp_tp_mesh_matches_single_device_bitwise() {
+        let mut single = mock();
+        single.init(7).unwrap();
+        let ls = run_steps(&mut *single, 9, 8);
+        let mut mesh = MeshTrainer::new(mock(), MeshOptions::for_mesh(2, 2, 2)).unwrap();
+        mesh.init(7).unwrap();
+        assert_eq!(mesh.num_devices(), 8);
+        let lm = run_steps(&mut mesh, 9, 8);
+        assert_eq!(ls, lm, "losses must be bit-identical");
+        assert_eq!(state_bits(&*single), state_bits(&mesh));
+        assert!(mesh.collective_ops() > 0, "sharded execution must communicate");
+        assert_eq!(mesh.steps_done(), 8);
+    }
+
+    #[test]
+    fn restore_reshards_and_replays_bit_identically() {
+        let mut full = MeshTrainer::new(mock(), MeshOptions::for_mesh(1, 4, 1)).unwrap();
+        full.init(2).unwrap();
+        let mut c = corpus(4);
+        let mut snapshot = None;
+        for s in 1..=8 {
+            let (tok, tgt) = c.next_batch();
+            full.step(&tok, &tgt).unwrap();
+            if s == 5 {
+                snapshot = Some(full.state_to_host().unwrap());
+            }
+        }
+        let mut resumed = MeshTrainer::new(mock(), MeshOptions::for_mesh(1, 4, 1)).unwrap();
+        resumed.restore_from_host(&snapshot.unwrap(), 5).unwrap();
+        assert_eq!(resumed.steps_done(), 5);
+        let mut c2 = corpus(4);
+        for _ in 0..5 {
+            c2.next_batch();
+        }
+        for _ in 6..=8 {
+            let (tok, tgt) = c2.next_batch();
+            resumed.step(&tok, &tgt).unwrap();
+        }
+        assert_eq!(state_bits(&full), state_bits(&resumed));
+    }
+
+    #[test]
+    fn eval_is_pure_on_the_mesh() {
+        let mut mesh = MeshTrainer::new(mock(), MeshOptions::for_mesh(1, 2, 2)).unwrap();
+        mesh.init(1).unwrap();
+        run_steps(&mut mesh, 2, 3);
+        let mut c = corpus(8);
+        let (tok, tgt) = c.next_batch();
+        let before = state_bits(&mesh);
+        let e1 = mesh.eval_loss(&tok, &tgt).unwrap();
+        let e2 = mesh.eval_loss(&tok, &tgt).unwrap();
+        assert_eq!(e1.to_bits(), e2.to_bits());
+        assert_eq!(before, state_bits(&mesh), "eval must not perturb the shards");
+        assert!(mesh.supports_eval());
+    }
+
+    #[test]
+    fn indivisible_state_is_rejected_with_a_clear_error() {
+        let inner = Box::new(MockTrainBackend::new(MockTrainBackendOptions {
+            dim: 60,
+            ..Default::default()
+        }));
+        let mut mesh = MeshTrainer::new(inner, MeshOptions::for_mesh(1, 4, 2)).unwrap();
+        let err = mesh.init(0).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("does not divide"), "{msg}");
+        assert!(msg.contains("fsdp 4"), "{msg}");
+    }
+
+    #[test]
+    fn pipeline_and_expert_axes_are_rejected() {
+        let mut opts = MeshOptions::for_mesh(1, 2, 1);
+        opts.strategy.pipeline = 2;
+        assert!(MeshTrainer::new(mock(), opts).is_err());
+    }
+
+    #[test]
+    fn lower_step_matches_the_layout() {
+        let mut mesh = MeshTrainer::new(mock(), MeshOptions::for_mesh(2, 2, 2)).unwrap();
+        mesh.init(0).unwrap();
+        let sched = mesh.lower_step().unwrap();
+        // params + opt_m + opt_v shard; the step counter does not
+        let axes: Vec<&str> = sched.entries.iter().map(|e| e.axis.as_str()).collect();
+        assert!(axes.contains(&"fsdp"));
+        assert!(axes.contains(&"model"));
+        assert!(axes.contains(&"data"));
+        // 3 sharded tensors × (gather-ag + rs + model-ag + dp-ar) + 1 activation
+        assert_eq!(sched.entries.len(), 3 * 4 + 1);
+        assert!(sched.entries.iter().all(|e| e.cost_s > 0.0));
+        // subgroup instances tile the 8-device mesh
+        for e in &sched.entries {
+            if e.tensor != "activations" {
+                assert_eq!(e.group * e.count, 8, "{e:?}");
+            }
+        }
+        // the activation reduction sits on the critical path
+        assert!(sched.exposed_comm_s() > 0.0);
+    }
+
+    #[test]
+    fn pure_dp_mesh_emits_gradient_sync_only() {
+        let mut mesh = MeshTrainer::new(mock(), MeshOptions::for_mesh(4, 1, 1)).unwrap();
+        mesh.init(0).unwrap();
+        let sched = mesh.lower_step().unwrap();
+        assert!(!sched.entries.is_empty());
+        assert!(sched.entries.iter().all(|e| e.axis == "data"));
+        assert_eq!(sched.exposed_comm_s(), 0.0, "DP sync fully overlaps");
+        // and the sync really executes
+        run_steps(&mut mesh, 1, 2);
+        assert!(mesh.collective_ops() > 0);
+    }
+
+    #[test]
+    fn interconnect_fault_corrupts_the_trajectory() {
+        // an SDC inside a mesh collective must change the numerics (it
+        // flows through gathers/reductions like a real bit flip)
+        let mut clean = MeshTrainer::new(mock(), MeshOptions::for_mesh(1, 2, 1)).unwrap();
+        clean.init(0).unwrap();
+        let clean_losses = run_steps(&mut clean, 3, 4);
+        let mut faulty = MeshTrainer::new(mock(), MeshOptions::for_mesh(1, 2, 1))
+            .unwrap()
+            .with_fault(Box::new(|r, i, x| if r == 0 && i == 0 { x + 0.25 } else { x }));
+        faulty.init(0).unwrap();
+        let faulty_losses = run_steps(&mut faulty, 3, 4);
+        assert_ne!(clean_losses, faulty_losses, "corruption must be visible");
+    }
+
+    #[test]
+    fn unsharded_axes_fold_into_replication() {
+        // specs shard over fsdp only: the model axis replicates and its
+        // degree folds into the DP sync group
+        let opts = MeshOptions {
+            shard_axes: vec!["fsdp".into()],
+            ..MeshOptions::for_mesh(2, 2, 2)
+        };
+        let mut mesh = MeshTrainer::new(mock(), opts).unwrap();
+        mesh.init(11).unwrap();
+        let sched = mesh.lower_step().unwrap();
+        assert!(sched
+            .entries
+            .iter()
+            .filter(|e| e.axis == "data")
+            .all(|e| e.group == 4), "{sched:?}");
+        let mut single = mock();
+        single.init(11).unwrap();
+        let ls = run_steps(&mut *single, 6, 5);
+        let lm = run_steps(&mut mesh, 6, 5);
+        // model axis is 2 but shards nothing: no TP loss reduction, and
+        // the trajectory still matches the single device bitwise
+        assert_eq!(ls, lm);
+        assert_eq!(state_bits(&*single), state_bits(&mesh));
+    }
+
+    #[test]
+    fn mesh_composes_from_config() {
+        use crate::config::registry::default_config;
+        use crate::config::Value;
+        let mut cfg = default_config("MeshTrainer").unwrap();
+        cfg.set("mesh_shape", Value::IntList(vec![2, 2, 1])).unwrap();
+        let mut mesh = mesh_from_config(&cfg).unwrap();
+        assert_eq!(mesh.num_devices(), 4);
+        assert_eq!(mesh.strategy().data, 2);
+        mesh.init(0).unwrap();
+        let losses = run_steps(&mut mesh, 1, 3);
+        assert!(losses.iter().all(|l| f32::from_bits(*l).is_finite()));
+        assert!(mesh.descriptor().name.starts_with("mesh[2x2x1]:"));
+        // non-mesh configs pass through the dispatch unchanged
+        let plain = mesh_backend_from_config(&default_config("MockTrainBackend").unwrap()).unwrap();
+        assert_eq!(plain.descriptor().name, "mock-train");
+    }
+
+    #[test]
+    fn meshes_nest_in_config_like_they_do_at_the_type_level() {
+        use crate::config::registry::default_config;
+        use crate::config::Value;
+        // a mesh wrapping a mesh wrapping the mock: config composition
+        // must match type-level composition
+        let mut outer = default_config("MeshTrainer").unwrap();
+        outer.set("mesh_shape", Value::IntList(vec![2, 1, 1])).unwrap();
+        let mut inner = default_config("MeshTrainer").unwrap();
+        inner.set("mesh_shape", Value::IntList(vec![1, 2, 1])).unwrap();
+        outer.set("backend", Value::Config(inner)).unwrap();
+        let mut mesh = mesh_from_config(&outer).unwrap();
+        assert!(mesh
+            .descriptor()
+            .name
+            .starts_with("mesh[2x1x1]:mesh[1x2x1]:"));
+        mesh.init(4).unwrap();
+        let lm = run_steps(&mut mesh, 2, 3);
+        let mut single = mock();
+        single.init(4).unwrap();
+        let ls = run_steps(&mut *single, 2, 3);
+        assert_eq!(ls, lm, "nested meshes must preserve the numerics");
+    }
+
+    #[test]
+    fn mesh_rules_route_into_mesh_construction() {
+        use crate::config::mesh_rules::paper_appendix_a_rules;
+        use crate::config::registry::trainer_for_preset;
+        use crate::config::Value;
+        let mut t = trainer_for_preset("tiny").unwrap();
+        t.set("mesh_shape", Value::IntList(vec![2, 2, 2])).unwrap();
+        t.set(
+            "mesh_axis_names",
+            Value::StrList(vec!["data".into(), "fsdp".into(), "model".into()]),
+        )
+        .unwrap();
+        // cpu-local matches no rule: the trainer's own mesh shape stands
+        let mut mesh =
+            mesh_trainer_for_instance(&t, "cpu-local", 8, &paper_appendix_a_rules(), mock())
+                .unwrap();
+        assert_eq!(mesh.num_devices(), 8);
+        assert_eq!(
+            (mesh.strategy().data, mesh.strategy().fsdp, mesh.strategy().tensor),
+            (2, 2, 2)
+        );
+        mesh.init(7).unwrap();
+        let lm = run_steps(&mut mesh, 9, 4);
+        let mut single = mock();
+        single.init(7).unwrap();
+        let ls = run_steps(&mut *single, 9, 4);
+        assert_eq!(ls, lm);
+    }
+}

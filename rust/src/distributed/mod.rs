@@ -14,12 +14,21 @@
 //! behind the [`crate::trainer::TrainBackend`] boundary with in-process
 //! failure injection, hot-swap spare promotion, and multi-tier restore
 //! exercised by actual numerics.
+//!
+//! Mesh-sharded execution lives in [`mesh`]: a [`mesh::MeshTrainer`]
+//! partitions parameters/gradients/optimizer state over a DP×FSDP×TP
+//! device grid per the composer's sharding plan and lowers every step to
+//! an explicit [`crate::composer::CollectiveSchedule`] executed through
+//! [`SimCollective`] subgroups.  Because it is itself a `TrainBackend`,
+//! fleet replicas compose with meshes: DP across the fleet, FSDP×TP
+//! inside each replica, with recovery unchanged (see `docs/sharding.md`).
 
 pub mod cluster;
 pub mod collective;
 pub mod data_parallel;
 pub mod failure;
 pub mod fleet;
+pub mod mesh;
 pub mod recovery;
 pub mod scheduler;
 
@@ -32,6 +41,10 @@ pub use failure::{FailureInjector, FailureKind};
 pub use fleet::{
     fleet_from_config, FleetFailureOptions, FleetOptions, FleetOutcome, FleetTrainer,
     InjectedFailure,
+};
+pub use mesh::{
+    mesh_backend_from_config, mesh_from_config, mesh_trainer_for_instance, mesh_trainer_from_plan,
+    MeshOptions, MeshTrainer,
 };
 pub use recovery::{recovery_experiment, RecoveryOutcome, RecoveryStrategy};
 pub use scheduler::{HotSwapScheduler, SliceState};

@@ -1,6 +1,10 @@
 //! `axlearn-rs` — a Rust + JAX + Pallas reproduction of
-//! *AXLearn: Modular Large Model Training on Heterogeneous Infrastructure*
+//! *AXLearn: Modular, Hardware-Agnostic Large Model Training*
 //! (Lee et al., 2025).
+//!
+//! **Docs site:** `docs/index.md` is the map; `docs/getting-started.md`
+//! covers build/artifacts/first runs; `docs/sharding.md`,
+//! `docs/training.md`, and `docs/serving.md` go deep per subsystem.
 //!
 //! The crate is the Layer-3 coordinator of a three-layer stack:
 //!
@@ -8,37 +12,48 @@
 //!   kernel, lowered in interpret mode.
 //! * **Layer 2** (`python/compile/`): a modular JAX transformer (RoPE/MoE
 //!   composable by config) lowered ahead-of-time to HLO text artifacts.
-//! * **Layer 3** (this crate): AXLearn's system contribution — the
-//!   strictly-encapsulated hierarchical config system ([`config`]), the
-//!   composer ([`composer`]), the training runtime (checkpointing,
-//!   monitoring, failure detection and recovery over a simulated
-//!   heterogeneous cluster — [`checkpoint`], [`monitor`],
-//!   [`distributed`]), the hardware performance model that reproduces
-//!   the paper's evaluation ([`perfmodel`]), and the serving stack.
+//! * **Layer 3** (this crate): AXLearn's system contribution, layered as
+//!   `configs → composer → backends → distributed → serving`:
 //!
-//! Serving and training both apply the same encapsulation discipline
-//! vertically:
+//!   | layer | modules | role |
+//!   |-------|---------|------|
+//!   | configs | [`config`] | hierarchical strictly-encapsulated [`config::ConfigNode`] trees, the class registry, modifiers, [`config::MeshRules`], golden serialization |
+//!   | composer | [`composer`] | [`composer::materialize`]: mesh rules → sharding specs → a [`composer::Plan`] with an explicit, perfmodel-costed [`composer::CollectiveSchedule`] |
+//!   | backends | [`runtime`], [`trainer`] | the two hardware trait boundaries (below) plus the PJRT client and AOT artifact loading |
+//!   | distributed | [`distributed`] | [`distributed::SimCollective`] collectives, the mesh-sharded [`distributed::mesh::MeshTrainer`], data-parallel training, the fault-tolerant [`distributed::fleet::FleetTrainer`] |
+//!   | serving | [`serving`] | continuous batching, paged KV, baselines, and the hot-swapping multi-replica [`serving::router`] |
+//!
+//!   Cross-cutting: [`checkpoint`] (sharded async + multi-tier),
+//!   [`monitor`] (watchdog, SDC, goodput), [`perfmodel`] (chip specs,
+//!   comms costs, the step estimator behind the paper's tables), and
+//!   [`experiments`] (the table/figure drivers).
+//!
+//! Serving and training apply the same encapsulation discipline
+//! vertically, one trait boundary each:
 //!
 //! * [`runtime::backend::ComputeBackend`] is the serving hardware
 //!   boundary — prefill/decode/cache ops plus discovered capabilities.
-//!   Three substrates implement it: real PJRT over AOT artifacts, an
-//!   analytic model driven by `perfmodel` chip specs (Table-4-scale
-//!   hardware in simulation), and a deterministic mock.
-//! * [`serving`]'s schedulers — the continuous batcher, the vLLM-style
-//!   static baseline, and the multi-replica [`serving::router`] with
-//!   hot-swap spare promotion — are pure policies over that trait, so
-//!   backend × policy × replica-count compose through the config
-//!   registry exactly like trainer configs (see `docs/serving.md`).
+//!   Schedulers, baselines, and the router are pure policies over it
+//!   (`docs/serving.md`).
 //! * [`trainer::backend::TrainBackend`] is the training twin —
 //!   init/step/eval/state ops over PJRT sessions or a deterministic
-//!   mock.  The trainer loop, the data-parallel trainer, and the
-//!   fault-tolerant [`distributed::fleet::FleetTrainer`] (failure
-//!   injection, hot-swap spare promotion, multi-tier restore, goodput
-//!   accounting) are policies over it (see `docs/training.md`).
+//!   mock.  The trainer loop, the data-parallel trainer, the
+//!   [`distributed::mesh::MeshTrainer`] (DP×FSDP×TP over explicit
+//!   [`composer::CollectiveSchedule`]s — and itself a `TrainBackend`,
+//!   so meshes nest inside fleets), and the fault-tolerant
+//!   [`distributed::fleet::FleetTrainer`] are policies over it
+//!   (`docs/training.md`, `docs/sharding.md`).
 //!
-//! Python never runs on the request path: `make artifacts` is build-time
-//! only; everything here executes AOT-compiled HLO through PJRT
-//! ([`runtime`]).
+//! Python never runs on the request path: artifact generation
+//! (`python/compile/aot.py`) is build-time only; everything here
+//! executes AOT-compiled HLO through PJRT ([`runtime`]).
+//!
+//! Entry points: `examples/quickstart.rs` (first run),
+//! `examples/train_e2e.rs` (long real-numerics runs),
+//! `examples/moe_swap.rs` (the Figure-1 swap),
+//! `examples/heterogeneous.rs` (one config, four targets),
+//! `examples/serve.rs` (the serving stack), and the `repro` binary
+//! (`rust/src/main.rs`) for the paper's tables and figures.
 
 pub mod baselines;
 pub mod checkpoint;

@@ -23,7 +23,7 @@ pub struct SyntheticCorpus {
     vocab: usize,
     batch: usize,
     seq: usize,
-    /// transitions[v] = candidate next tokens for v.
+    /// `transitions[v]` = candidate next tokens for v.
     transitions: Vec<Vec<i32>>,
     kind: CorpusKind,
 }

@@ -1,0 +1,236 @@
+//! Mesh-sharded execution integration: the GSPMD equivalence claim and
+//! its composition with the fault-tolerant fleet.
+//!
+//! The headline assertion (the paper's "global computation over a device
+//! mesh" made checkable): for a fixed 8-device budget, **every** mesh
+//! factorization `data × fsdp × model` of the mock backend produces
+//! final parameters bit-identical to the 1-device run on the same seed
+//! — the collectives (FSDP gathers, reduce-scatters, TP loss
+//! reductions, DP syncs) genuinely execute over `SimCollective`
+//! subgroups, and binary-tree reduction makes the power-of-two means
+//! exact.  And because a `MeshTrainer` is itself a `TrainBackend`, a
+//! fleet of mesh-sharded replicas recovers through a `HostCrash` with
+//! the unchanged multi-tier/hot-swap machinery.
+
+use std::path::PathBuf;
+
+use axlearn::checkpoint::multi_tier::Tier;
+use axlearn::distributed::failure::FailureKind;
+use axlearn::distributed::fleet::{FleetOptions, FleetTrainer, InjectedFailure};
+use axlearn::distributed::mesh::{MeshOptions, MeshTrainer};
+use axlearn::trainer::backend::{MockTrainBackend, MockTrainBackendOptions, TrainBackend};
+use axlearn::trainer::input::{CorpusKind, SyntheticCorpus};
+use axlearn::trainer::InputPipeline;
+
+fn mock() -> Box<dyn TrainBackend> {
+    Box::new(MockTrainBackend::new(MockTrainBackendOptions::default()))
+}
+
+fn corpus(seed: u64) -> SyntheticCorpus {
+    let d = MockTrainBackendOptions::default();
+    SyntheticCorpus::new(CorpusKind::Markov, d.vocab, d.batch, d.seq, seed)
+}
+
+fn state_bits(state: &[(String, Vec<f32>)]) -> Vec<(String, Vec<u32>)> {
+    state
+        .iter()
+        .map(|(n, v)| (n.clone(), v.iter().map(|x| x.to_bits()).collect()))
+        .collect()
+}
+
+fn run(b: &mut dyn TrainBackend, corpus_seed: u64, steps: usize) -> Vec<u32> {
+    let mut c = corpus(corpus_seed);
+    (0..steps)
+        .map(|_| {
+            let (tok, tgt) = c.next_batch();
+            b.step(&tok, &tgt).unwrap().to_bits()
+        })
+        .collect()
+}
+
+/// All (data, fsdp, model) factorizations of `n`.
+fn factorizations(n: usize) -> Vec<(usize, usize, usize)> {
+    let mut out = Vec::new();
+    for d in 1..=n {
+        if n % d != 0 {
+            continue;
+        }
+        let rest = n / d;
+        for f in 1..=rest {
+            if rest % f == 0 {
+                out.push((d, f, rest / f));
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn every_8_device_factorization_is_bit_identical_to_single_device() {
+    const SEED: i32 = 7;
+    const CORPUS: u64 = 13;
+    const STEPS: usize = 12;
+
+    let mut single = mock();
+    single.init(SEED).unwrap();
+    let ref_losses = run(&mut *single, CORPUS, STEPS);
+    let ref_state = state_bits(&single.state_to_host().unwrap());
+
+    let meshes = factorizations(8);
+    assert_eq!(meshes.len(), 10, "{meshes:?}"); // 8=2^3: 10 ordered factorizations
+    for (d, f, m) in meshes {
+        let mut mesh = MeshTrainer::new(mock(), MeshOptions::for_mesh(d, f, m)).unwrap();
+        mesh.init(SEED).unwrap();
+        assert_eq!(mesh.num_devices(), 8);
+        let losses = run(&mut mesh, CORPUS, STEPS);
+        assert_eq!(
+            losses, ref_losses,
+            "mesh {d}x{f}x{m}: per-step losses diverged from the single device"
+        );
+        assert_eq!(
+            state_bits(&mesh.state_to_host().unwrap()),
+            ref_state,
+            "mesh {d}x{f}x{m}: final params diverged from the single device"
+        );
+        // the equivalence is not vacuous: the mesh really communicates,
+        // per its own lowered schedule
+        assert!(mesh.collective_ops() > 0, "mesh {d}x{f}x{m} ran no collectives");
+        let sched = mesh.lower_step().unwrap();
+        assert!(!sched.entries.is_empty(), "mesh {d}x{f}x{m} lowered an empty schedule");
+        assert!(sched.total_comm_s() > 0.0);
+    }
+}
+
+#[test]
+fn mesh_schedules_differ_by_factorization_but_numerics_do_not() {
+    // two factorizations of the same budget: different communication
+    // plans (that is the point of mesh rules), identical numerics
+    let mut a = MeshTrainer::new(mock(), MeshOptions::for_mesh(1, 8, 1)).unwrap();
+    let mut b = MeshTrainer::new(mock(), MeshOptions::for_mesh(1, 2, 4)).unwrap();
+    a.init(1).unwrap();
+    b.init(1).unwrap();
+    let la = run(&mut a, 3, 6);
+    let lb = run(&mut b, 3, 6);
+    assert_eq!(la, lb);
+    let sa = a.lower_step().unwrap();
+    let sb = b.lower_step().unwrap();
+    let axes = |s: &axlearn::composer::CollectiveSchedule| {
+        s.entries.iter().map(|e| (e.axis.clone(), e.group)).collect::<Vec<_>>()
+    };
+    assert_ne!(axes(&sa), axes(&sb));
+    // pure FSDP exposes nothing; the TP variant pays an exposed
+    // activation reduction on the critical path
+    assert_eq!(sa.exposed_comm_s(), 0.0);
+    assert!(sb.exposed_comm_s() > 0.0);
+}
+
+fn dirs(name: &str) -> (PathBuf, PathBuf) {
+    let base = std::env::temp_dir().join(format!("axl_mesh_{name}_{}", std::process::id()));
+    std::fs::remove_dir_all(&base).ok();
+    (base.join("local"), base.join("remote"))
+}
+
+fn fleet_opts(local: PathBuf, remote: PathBuf) -> FleetOptions {
+    FleetOptions {
+        replicas: 2,
+        spares: 1,
+        steps: 24,
+        sync_every: 4,
+        local_every: 4,
+        remote_every: 8,
+        local_dir: local,
+        remote_dir: remote,
+        seed: 0,
+        step_time_s: 1.0,
+        restart_overhead_s: 5.0,
+        reprovision_s: 30.0,
+        ..Default::default()
+    }
+}
+
+fn mesh_workers(n: usize) -> Vec<Box<dyn TrainBackend>> {
+    // fleet provides the data axis; each replica is FSDP×TP inside
+    (0..n)
+        .map(|_| {
+            Box::new(MeshTrainer::new(mock(), MeshOptions::for_mesh(1, 2, 2)).unwrap())
+                as Box<dyn TrainBackend>
+        })
+        .collect()
+}
+
+fn plain_workers(n: usize) -> Vec<Box<dyn TrainBackend>> {
+    (0..n).map(|_| mock()).collect()
+}
+
+#[test]
+fn mesh_sharded_fleet_recovers_through_host_crash() {
+    // run A: a mesh-sharded fleet loses replica 1's host after step 18,
+    // taking the local checkpoint tier with it
+    let (la, ra) = dirs("crash");
+    let mut a = FleetTrainer::new(
+        mesh_workers(3),
+        FleetOptions {
+            injected: vec![InjectedFailure {
+                at_step: 18,
+                replica: 1,
+                kind: FailureKind::HostCrash,
+            }],
+            ..fleet_opts(la, ra)
+        },
+    )
+    .unwrap();
+    let out_a = a.run().unwrap();
+    assert_eq!(out_a.final_step, 24);
+    assert_eq!(out_a.hot_swaps, 1);
+    assert_eq!(out_a.restores, vec![(16, Tier::Remote)]);
+    assert_eq!(out_a.replica_divergence, 0.0);
+
+    // run B: the same fleet, failure-free
+    let (lb, rb) = dirs("clean");
+    let out_b = FleetTrainer::new(mesh_workers(3), fleet_opts(lb, rb))
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(
+        state_bits(&out_a.final_state),
+        state_bits(&out_b.final_state),
+        "recovery must replay onto the failure-free trajectory"
+    );
+
+    // run C: a non-mesh fleet — mesh sharding inside the replicas must
+    // be invisible to the fleet-level numerics (the equivalence claim,
+    // composed through DP sync, checkpointing, and recovery)
+    let (lc, rc) = dirs("plain");
+    let out_c = FleetTrainer::new(plain_workers(3), fleet_opts(lc, rc))
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(
+        state_bits(&out_b.final_state),
+        state_bits(&out_c.final_state),
+        "mesh-sharded replicas changed the fleet numerics"
+    );
+}
+
+#[test]
+fn mesh_sharded_fleet_composes_from_config() {
+    use axlearn::config::registry::default_config;
+    use axlearn::config::Value;
+    let mut cfg = default_config("FleetTrainer").unwrap();
+    // swap the backend child for a mesh wrapping the mock: one-field
+    // composition, exactly like swapping the serve router's backend
+    let mut mesh_cfg = default_config("MeshTrainer").unwrap();
+    mesh_cfg.set("mesh_shape", Value::IntList(vec![1, 2, 2])).unwrap();
+    cfg.set("backend", Value::Config(mesh_cfg)).unwrap();
+    let (l, r) = dirs("config");
+    {
+        let rec = cfg.at_path_mut("recovery").unwrap();
+        rec.set("local_dir", Value::Str(l.to_string_lossy().into_owned())).unwrap();
+        rec.set("remote_dir", Value::Str(r.to_string_lossy().into_owned())).unwrap();
+    }
+    let mut fleet = axlearn::distributed::fleet_from_config(&cfg).unwrap();
+    let out = fleet.run().unwrap();
+    assert_eq!(out.final_step, 16); // registry default
+    assert!(out.final_losses.iter().all(|l| l.is_finite()));
+    assert_eq!(out.replica_divergence, 0.0);
+}

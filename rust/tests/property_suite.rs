@@ -167,6 +167,55 @@ fn paged_allocator_exact_accounting_under_admit_extend_release() {
 }
 
 #[test]
+fn sharding_resolution_round_trips_over_arbitrary_mesh_subsets() {
+    // resolve_partition_spec ∘ infer_bias_spec over random weight specs
+    // and random mesh-axis subsets: resolution must be idempotent
+    // (round-trip), commute with bias inference, never invent axes, and
+    // preserve rank.  Previously only the happy path was covered.
+    use axlearn::composer::{infer_bias_spec, resolve_partition_spec};
+    let pool = ["data", "fsdp", "model", "expert", "pipeline", "seq", "replicated"];
+    let mesh_pool = &pool[..6]; // "replicated" is never a mesh axis
+    let mut rng = Rng::new(11);
+    for _ in 0..300 {
+        let rank = rng.gen_range(1, 5) as usize;
+        let weight: Vec<String> = (0..rank)
+            .map(|_| pool[rng.gen_range(0, pool.len() as u64) as usize].to_string())
+            .collect();
+        let mesh: Vec<String> = mesh_pool
+            .iter()
+            .filter(|_| rng.gen_bool(0.5))
+            .map(|s| s.to_string())
+            .collect();
+
+        let resolved = resolve_partition_spec(&weight, &mesh);
+        // rank preserved, and every axis is a mesh axis or "replicated"
+        assert_eq!(resolved.len(), weight.len());
+        for a in &resolved {
+            assert!(
+                a == "replicated" || mesh.contains(a),
+                "resolved axis {a:?} not in mesh {mesh:?}"
+            );
+        }
+        // round-trip: re-resolving a resolved spec is the identity
+        assert_eq!(
+            resolve_partition_spec(&resolved, &mesh),
+            resolved,
+            "resolution must be idempotent (weight {weight:?}, mesh {mesh:?})"
+        );
+        // bias inference commutes with resolution: inferring the bias
+        // from the resolved weight equals resolving the inferred bias
+        assert_eq!(
+            infer_bias_spec(&resolved),
+            resolve_partition_spec(&infer_bias_spec(&weight), &mesh),
+            "infer/resolve must commute (weight {weight:?}, mesh {mesh:?})"
+        );
+    }
+    // degenerate cases stay total
+    assert!(infer_bias_spec(&[]).is_empty());
+    assert!(resolve_partition_spec(&[], &["data".to_string()]).is_empty());
+}
+
+#[test]
 fn golden_serialization_is_injective_over_presets() {
     use axlearn::config::golden::to_golden_string;
     use axlearn::config::registry::trainer_for_preset;
