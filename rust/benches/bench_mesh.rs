@@ -1,14 +1,18 @@
 //! Bench: step time vs mesh shape — the composer's collective schedule
-//! plus the analytic step estimator, swept over factorizations of a
-//! fixed 256-chip budget for a 7B model on H100s.  Pure cost-model
-//! arithmetic (no artifacts, no accelerator); emits JSON.
+//! plus the analytic step estimator, swept over 4-axis factorizations
+//! (data × pipeline × fsdp × model) of a fixed 256-chip budget for a 7B
+//! model on H100s.  Pure cost-model arithmetic (no artifacts, no
+//! accelerator); emits JSON.
 //!
 //! The table tells the §3 story end to end: pure data parallelism OOMs
 //! (nothing shards the optimizer state), FSDP makes it fit, tensor
 //! parallelism buys memory headroom at the price of exposed activation
-//! reductions on the critical path, and the balanced meshes win.
+//! reductions on the critical path, pipeline stages trade stage-boundary
+//! p2p traffic plus a bubble (annotated straight off the 1F1B microbatch
+//! grid, `(S-1)/(S-1+m)`) for another sharding axis, and the balanced
+//! meshes win.
 
-use axlearn::composer::{build_schedule, CollectiveSchedule};
+use axlearn::composer::{build_schedule, CollectiveSchedule, PipelineSchedule};
 use axlearn::perfmodel::chips;
 use axlearn::perfmodel::estimator::{estimate_step, StepSpec, SystemProfile};
 use axlearn::perfmodel::{Strategy, TransformerShape};
@@ -17,45 +21,64 @@ use axlearn::util::json::Json;
 const CHIPS: usize = 256;
 const GLOBAL_BATCH: usize = 1024;
 const SEQ: usize = 4096;
+/// Microbatches for the pipelined shapes (1F1B).
+const MICROBATCHES: usize = 16;
 
-fn strategy(data: usize, fsdp: usize, tensor: usize) -> Strategy {
+fn strategy(data: usize, pipeline: usize, fsdp: usize, tensor: usize) -> Strategy {
     Strategy {
         data,
         fsdp,
         tensor,
+        pipeline,
+        microbatches: if pipeline > 1 { MICROBATCHES } else { 1 },
         ..Strategy::default()
     }
 }
 
 fn main() {
-    println!("=== Mesh shapes: step time vs data×fsdp×model on {CHIPS} H100s (llama2-7b) ===\n");
+    println!(
+        "=== Mesh shapes: step time vs data×pipeline×fsdp×model on {CHIPS} H100s (llama2-7b) ===\n"
+    );
     let chip = chips::h100();
     let shape = TransformerShape::llama2_7b();
     let profile = SystemProfile::axlearn();
     let shard_axes = vec!["fsdp".to_string(), "model".to_string()];
 
-    let meshes: [(usize, usize, usize); 8] = [
-        (256, 1, 1), // pure DP: must OOM (14 bytes/param unsharded)
-        (32, 8, 1),
-        (8, 32, 1),
-        (4, 64, 1),
-        (1, 256, 1), // pure FSDP
-        (8, 16, 2),
-        (4, 8, 8),
-        (1, 32, 8), // TP-heavy
+    let meshes: [(usize, usize, usize, usize); 11] = [
+        (256, 1, 1, 1), // pure DP: must OOM (14 bytes/param unsharded)
+        (32, 1, 8, 1),
+        (8, 1, 32, 1),
+        (4, 1, 64, 1),
+        (1, 1, 256, 1), // pure FSDP
+        (8, 1, 16, 2),
+        (4, 1, 8, 8),
+        (1, 1, 32, 8), // TP-heavy
+        (1, 4, 64, 1), // pipeline × FSDP
+        (4, 8, 8, 1),  // pipeline-heavy
+        (1, 4, 8, 8),  // pipeline × FSDP × TP
     ];
 
     println!(
-        "{:>12} {:>10} {:>10} {:>10} {:>10} {:>8}",
-        "mesh(dxfxm)", "compute_s", "comm_s", "exposed_s", "step_s", "fits"
+        "{:>14} {:>10} {:>10} {:>10} {:>8} {:>10} {:>8}",
+        "mesh(dxpxfxm)", "compute_s", "comm_s", "exposed_s", "bubble", "step_s", "fits"
     );
     let mut points = Vec::new();
     let mut feasible: Vec<(String, f64, CollectiveSchedule)> = Vec::new();
-    for (d, f, m) in meshes {
-        assert_eq!(d * f * m, CHIPS, "factorization must use the full budget");
-        let strat = strategy(d, f, m);
+    for (d, p, f, m) in meshes {
+        assert_eq!(d * p * f * m, CHIPS, "factorization must use the full budget");
+        let strat = strategy(d, p, f, m);
         let sched =
             build_schedule(&strat, &shape, &shard_axes, GLOBAL_BATCH, SEQ, &chip.interconnect);
+        // the schedule's own microbatch grid: its bubble fraction must
+        // reproduce the analytic (S-1)/(S-1+m) annotation bit-for-bit
+        let pipe = PipelineSchedule::one_f_one_b(strat.pipeline, strat.microbatches.max(1))
+            .expect("pipelined shapes are feasible");
+        assert_eq!(
+            pipe.bubble_fraction(),
+            strat.pipeline_bubble(),
+            "grid bubble must match the analytic annotation for {d}x{p}x{f}x{m}"
+        );
+        let bubble = pipe.bubble_fraction();
         let spec = StepSpec {
             shape: shape.clone(),
             strategy: strat,
@@ -64,26 +87,31 @@ fn main() {
             quantization: "none".into(),
             remat_policy: "auto".into(),
         };
-        let name = format!("{d}x{f}x{m}");
+        let name = format!("{d}x{p}x{f}x{m}");
         match estimate_step(&spec, &chip, &profile) {
             Ok(est) => {
                 // overlap-aware composition: compute hides the
-                // overlappable entries, exposed entries stack on top
-                let step_s = sched.step_time_s(est.compute_s);
+                // overlappable entries, exposed entries stack on top,
+                // and the pipeline bubble stretches the whole step
+                let step_s = sched.step_time_s(est.compute_s) / (1.0 - bubble);
                 println!(
-                    "{:>12} {:>10.4} {:>10.4} {:>10.4} {:>10.4} {:>8}",
+                    "{:>14} {:>10.4} {:>10.4} {:>10.4} {:>8.4} {:>10.4} {:>8}",
                     name,
                     est.compute_s,
                     sched.total_comm_s(),
                     sched.exposed_comm_s(),
+                    bubble,
                     step_s,
                     "yes"
                 );
                 points.push(Json::obj(vec![
                     ("mesh", Json::str(name.clone())),
                     ("data", Json::num(d as f64)),
+                    ("pipeline", Json::num(p as f64)),
                     ("fsdp", Json::num(f as f64)),
                     ("model", Json::num(m as f64)),
+                    ("microbatches", Json::num(pipe.microbatches as f64)),
+                    ("bubble", Json::num(bubble)),
                     ("fits", Json::Bool(true)),
                     ("compute_s", Json::num(est.compute_s)),
                     ("comm_s", Json::num(sched.total_comm_s())),
@@ -97,19 +125,23 @@ fn main() {
                 let msg = format!("{err:#}");
                 assert!(msg.contains("OOM"), "only OOM is acceptable here: {msg}");
                 println!(
-                    "{:>12} {:>10} {:>10.4} {:>10.4} {:>10} {:>8}",
+                    "{:>14} {:>10} {:>10.4} {:>10.4} {:>8.4} {:>10} {:>8}",
                     name,
                     "-",
                     sched.total_comm_s(),
                     sched.exposed_comm_s(),
+                    bubble,
                     "-",
                     "OOM"
                 );
                 points.push(Json::obj(vec![
                     ("mesh", Json::str(name)),
                     ("data", Json::num(d as f64)),
+                    ("pipeline", Json::num(p as f64)),
                     ("fsdp", Json::num(f as f64)),
                     ("model", Json::num(m as f64)),
+                    ("microbatches", Json::num(pipe.microbatches as f64)),
+                    ("bubble", Json::num(bubble)),
                     ("fits", Json::Bool(false)),
                     ("comm_s", Json::num(sched.total_comm_s())),
                     ("schedule_entries", Json::num(sched.entries.len() as f64)),
@@ -119,7 +151,7 @@ fn main() {
     }
 
     // sanity: the sweep is informative
-    assert!(feasible.len() >= 4, "most sharded meshes must fit");
+    assert!(feasible.len() >= 6, "most sharded meshes must fit");
     assert!(
         feasible.len() < meshes.len(),
         "pure DP of a 7B model must OOM — the schedule exists to avoid exactly this"
@@ -129,7 +161,8 @@ fn main() {
         .min_by(|a, b| a.1.total_cmp(&b.1))
         .expect("at least one feasible mesh");
     println!("\nbest mesh: {} ({:.4}s/step)", best.0, best.1);
-    // TP pays exposed activation reductions; FSDP-only does not
+    // TP pays exposed activation reductions; FSDP-only (pipelined or
+    // not) does not
     let tp_exposed = feasible
         .iter()
         .filter(|(n, _, _)| n.ends_with("x8"))
@@ -144,6 +177,12 @@ fn main() {
         tp_exposed > fsdp_exposed,
         "TP meshes must expose activation reductions ({tp_exposed} vs {fsdp_exposed})"
     );
+    // pipelined shapes carry stage-boundary p2p entries in the schedule
+    for (n, _, s) in &feasible {
+        let has_p2p = s.entries.iter().any(|e| e.axis == "pipeline");
+        let piped = n.split('x').nth(1).unwrap() != "1";
+        assert_eq!(piped, has_p2p, "p2p entries must track the pipeline axis ({n})");
+    }
 
     let doc = Json::obj(vec![
         ("bench", Json::str("mesh_step_time")),
@@ -152,6 +191,7 @@ fn main() {
         ("model", Json::str("llama2_7b")),
         ("global_batch", Json::num(GLOBAL_BATCH as f64)),
         ("seq_len", Json::num(SEQ as f64)),
+        ("microbatches", Json::num(MICROBATCHES as f64)),
         ("best_mesh", Json::str(best.0.clone())),
         ("points", Json::Arr(points)),
     ]);

@@ -17,7 +17,8 @@
 //!    [`Plan`].
 //! 4. [`schedule`] lowers strategy + sharding into the plan's explicit
 //!    [`CollectiveSchedule`] with [`crate::perfmodel::comms`] cost
-//!    annotations.
+//!    annotations, plus the [`PipelineSchedule`] microbatch grid
+//!    (GPipe/1F1B) when the mesh has a pipeline axis.
 //!
 //! Local (CPU) execution consumes the plan's `artifact` field through
 //! [`crate::runtime`]; simulated-scale execution consumes `strategy` /
@@ -33,8 +34,8 @@ pub mod sharding;
 pub use aot_check::{aot_compile_check, AotReport};
 pub use plan::{materialize, Plan};
 pub use schedule::{
-    build_schedule, local_interconnect, shard_degrees, CollectiveSchedule, ScheduleEntry,
-    SchedulePhase,
+    build_schedule, local_interconnect, resolve_microbatches, shard_degrees, stage_partition,
+    CollectiveSchedule, PipelineKind, PipelineSchedule, PipelineSlot, ScheduleEntry, SchedulePhase,
 };
 pub use sharding::{
     collect_sharding, infer_bias_spec, resolve_partition_spec, shard_axes_from_specs, ShardingSpec,

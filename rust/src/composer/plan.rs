@@ -7,7 +7,10 @@ use crate::perfmodel::chips;
 use crate::perfmodel::model_shapes::TransformerShape;
 use crate::perfmodel::Strategy;
 
-use super::schedule::{build_schedule, local_interconnect, CollectiveSchedule};
+use super::schedule::{
+    build_schedule, local_interconnect, resolve_microbatches, CollectiveSchedule, PipelineKind,
+    PipelineSchedule,
+};
 use super::sharding::{collect_sharding, shard_axes_from_specs, ShardingSpec};
 
 /// A materialized execution plan: everything the runtime (local or
@@ -43,6 +46,10 @@ pub struct Plan {
     /// with [`crate::perfmodel::comms`] cost annotations for the target
     /// interconnect.
     pub schedule: CollectiveSchedule,
+    /// Microbatch pipeline grid (GPipe or 1F1B) with its bubble-fraction
+    /// annotation.  Every plan carries one; without a pipeline axis it is
+    /// the trivial 1-stage grid (bubble 0).
+    pub pipeline: PipelineSchedule,
     /// Transformer shape math for this model.
     pub shape: TransformerShape,
     /// Global batch size from the input config.
@@ -103,8 +110,17 @@ pub fn materialize(
 
     let mesh_shape = cfg.get_int_list("mesh_shape")?;
     let mesh_names = cfg.get_str_list("mesh_axis_names")?;
-    let strategy = Strategy::from_mesh(&mesh_shape, &mesh_names, total_chips)
+    let mut strategy = Strategy::from_mesh(&mesh_shape, &mesh_names, total_chips)
         .with_context(|| format!("resolving mesh for {instance_type} ({total_chips} chips)"))?;
+    // Microbatch count for pipeline scheduling: the trainer's setting,
+    // raised to the stage count when a mesh rule introduces a pipeline
+    // axis the base config did not anticipate (a 1-microbatch pipeline
+    // cannot fill itself; stage-count microbatches is the floor).
+    strategy.microbatches =
+        resolve_microbatches(cfg.get_int("microbatches").ok(), strategy.pipeline);
+    let pipeline_kind = PipelineKind::parse(
+        &cfg.get_str("pipeline_schedule").unwrap_or_else(|_| "1f1b".into()),
+    )?;
 
     let shape = shape_from_config(&cfg)?;
 
@@ -159,6 +175,8 @@ pub fn materialize(
         .unwrap_or_else(local_interconnect);
     let schedule =
         build_schedule(&strategy, &shape, &shard_axes, global_batch, seq_len, &interconnect);
+    let pipeline =
+        PipelineSchedule::for_kind(pipeline_kind, strategy.pipeline, strategy.microbatches)?;
 
     Ok(Plan {
         artifact,
@@ -173,6 +191,7 @@ pub fn materialize(
         kernel_backend,
         sharding,
         schedule,
+        pipeline,
         shape,
         global_batch,
         seq_len,
@@ -302,6 +321,54 @@ mod tests {
         // single device: nothing to communicate
         let local = materialize(&t, "cpu-local", 1, &rules()).unwrap();
         assert!(local.schedule.entries.is_empty());
+    }
+
+    #[test]
+    fn pipelined_mesh_materializes_with_a_microbatch_grid() {
+        use crate::composer::schedule::PipelineKind;
+        let mut t = trainer_for_preset("small").unwrap();
+        t.set("mesh_shape", Value::IntList(vec![-1, 4, 2])).unwrap();
+        t.set(
+            "mesh_axis_names",
+            Value::StrList(vec!["data".into(), "pipeline".into(), "fsdp".into()]),
+        )
+        .unwrap();
+        t.set("microbatches", Value::Int(8)).unwrap();
+        let plan = materialize(&t, "cpu-local", 16, &rules()).unwrap();
+        assert_eq!(plan.strategy.pipeline, 4);
+        assert_eq!(plan.strategy.microbatches, 8);
+        assert_eq!(plan.pipeline.kind, PipelineKind::OneFOneB); // the default
+        assert_eq!(plan.pipeline.stages, 4);
+        assert_eq!(plan.pipeline.bubble_fraction(), plan.strategy.pipeline_bubble());
+        // the schedule carries the stage-boundary p2p entries
+        assert!(plan.schedule.entries.iter().any(|e| e.axis == "pipeline"));
+
+        // schedule kind is a config field; unknown kinds are an error
+        t.set("pipeline_schedule", Value::Str("gpipe".into())).unwrap();
+        let gp = materialize(&t, "cpu-local", 16, &rules()).unwrap();
+        assert_eq!(gp.pipeline.kind, PipelineKind::GPipe);
+        t.set("pipeline_schedule", Value::Str("zigzag".into())).unwrap();
+        assert!(materialize(&t, "cpu-local", 16, &rules()).is_err());
+
+        // too few microbatches auto-raise to the stage count
+        let mut few = trainer_for_preset("small").unwrap();
+        few.set("mesh_shape", Value::IntList(vec![4, 4])).unwrap();
+        few.set(
+            "mesh_axis_names",
+            Value::StrList(vec!["pipeline".into(), "fsdp".into()]),
+        )
+        .unwrap();
+        let plan = materialize(&few, "cpu-local", 16, &rules()).unwrap();
+        assert_eq!(plan.strategy.microbatches, 4);
+    }
+
+    #[test]
+    fn plans_without_a_pipeline_axis_carry_the_trivial_grid() {
+        let t = trainer_for_preset("tiny").unwrap();
+        let plan = materialize(&t, "cpu-local", 1, &rules()).unwrap();
+        assert_eq!(plan.pipeline.stages, 1);
+        assert_eq!(plan.pipeline.bubble_fraction(), 0.0);
+        assert!(!plan.schedule.entries.iter().any(|e| e.axis == "pipeline"));
     }
 
     #[test]

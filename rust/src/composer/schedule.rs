@@ -5,24 +5,34 @@
 //! parameter sharding collected from the config tree into a
 //! [`CollectiveSchedule`]: one [`ScheduleEntry`] per collective a real
 //! mesh would issue — the FSDP parameter all-gather, the tensor-parallel
-//! activation all-reduce, the FSDP gradient reduce-scatter, and the
-//! data-parallel gradient all-reduce — each annotated with its mesh
-//! axis, subgroup size, payload bytes, and a [`crate::perfmodel::comms`]
-//! cost estimate over the target interconnect.
+//! activation all-reduce, the FSDP gradient reduce-scatter, the
+//! data-parallel gradient all-reduce, and (when the mesh has a pipeline
+//! axis) the stage-boundary point-to-point activation/gradient
+//! transfers — each annotated with its mesh axis, subgroup size, payload
+//! bytes, and a [`crate::perfmodel::comms`] cost estimate over the
+//! target interconnect.  A [`PipelineSchedule`] complements the entry
+//! list with the microbatch grid itself: which stage runs which
+//! forward/backward at which tick (GPipe or 1F1B), and the bubble
+//! fraction that follows from it.
 //!
 //! Two consumers:
 //!
 //! * [`crate::composer::plan::materialize`] attaches a plan-level
-//!   schedule to every [`crate::composer::Plan`], which `benches/
-//!   bench_mesh.rs` turns into step-time-vs-mesh-shape curves.
+//!   schedule (and pipeline grid) to every [`crate::composer::Plan`],
+//!   which `benches/bench_mesh.rs` turns into step-time-vs-mesh-shape
+//!   curves.
 //! * [`crate::distributed::mesh::MeshTrainer`] lowers its per-tensor
 //!   state layout to the same entry type and then *executes* the
-//!   entries over [`crate::distributed::SimCollective`] subgroups.
+//!   entries over [`crate::distributed::SimCollective`] subgroups —
+//!   including the per-microbatch sends/recvs, in [`PipelineSchedule`]
+//!   slot order.
 //!
 //! Ordering is overlap-aware: within each phase, overlappable entries
 //! (prefetchable gathers, bucketed gradient reductions) are issued
 //! first, largest first, so the longest transfers get the most compute
 //! to hide behind — the standard FSDP prefetch/bucketing discipline.
+
+use anyhow::Result;
 
 use crate::perfmodel::chips::Interconnect;
 use crate::perfmodel::comms::{hierarchical, Collective};
@@ -158,7 +168,10 @@ pub fn local_interconnect() -> Interconnect {
 /// `(fs, ms, rep)` — the fsdp and model sharding degrees (1 when the
 /// axis does not shard parameters; `"model"` and `"tensor"` are
 /// aliases) and the replication degree (the data axis times any
-/// unsharded fsdp/tensor degrees, which fold into the DP sync).
+/// unsharded fsdp/tensor degrees, which fold into the DP sync).  The
+/// pipeline axis is not part of this derivation: it always partitions
+/// layers (`strategy.pipeline` stages), orthogonally to the
+/// within-stage `fs × ms` lattice.
 ///
 /// The single source of truth for this derivation: [`build_schedule`]
 /// (the plan-level schedule) and
@@ -171,6 +184,276 @@ pub fn shard_degrees(strategy: &Strategy, shard_axes: &[String]) -> (usize, usiz
     let ms = if has("model") || has("tensor") { strategy.tensor } else { 1 };
     let rep = strategy.data * (strategy.fsdp / fs.max(1)) * (strategy.tensor / ms.max(1));
     (fs, ms, rep)
+}
+
+// ---------------------------------------------------------------------------
+// Pipeline schedules (GPipe / 1F1B)
+// ---------------------------------------------------------------------------
+
+/// Which microbatch schedule a pipeline runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PipelineKind {
+    /// All forwards, then all backwards: simple, but every microbatch's
+    /// activations stay live until its backward — peak in-flight = `m`.
+    GPipe,
+    /// One-forward-one-backward steady state: the same `(S-1)/(S-1+m)`
+    /// bubble, but concentrated in warmup/cooldown, with at most `S`
+    /// microbatches in flight per stage.
+    OneFOneB,
+}
+
+impl PipelineKind {
+    /// Parse the config-level schedule name — the single parser behind
+    /// both construction routes (`composer::materialize` and
+    /// `distributed::mesh::mesh_from_config`).
+    pub fn parse(name: &str) -> Result<Self> {
+        match name {
+            "1f1b" => Ok(PipelineKind::OneFOneB),
+            "gpipe" => Ok(PipelineKind::GPipe),
+            other => anyhow::bail!(
+                "unknown pipeline_schedule {other:?}; expected \"1f1b\" or \"gpipe\""
+            ),
+        }
+    }
+}
+
+/// Resolve a configured microbatch count against a stage count: a
+/// missing or sub-1 setting defaults to 1, and the result floors at
+/// `stages` — a pipeline cannot fill with fewer microbatches than
+/// stages.  Shared by `composer::materialize` and
+/// `distributed::mesh::mesh_from_config` so the two construction routes
+/// cannot drift.
+pub fn resolve_microbatches(configured: Option<i64>, stages: usize) -> usize {
+    configured.map(|v| v.max(1) as usize).unwrap_or(1).max(stages.max(1))
+}
+
+/// One forward or backward microbatch execution on one stage.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PipelineSlot {
+    /// Schedule tick; each forward or backward occupies one tick (the
+    /// unit-time cost model under which GPipe and 1F1B are both
+    /// makespan-optimal at `2·(m + S - 1)` ticks).
+    pub tick: usize,
+    /// Pipeline stage (layer-partition index), `0..stages`.
+    pub stage: usize,
+    /// Microbatch index, `0..microbatches`.
+    pub microbatch: usize,
+    /// Forward (activations flow to `stage + 1`) or backward (gradients
+    /// flow to `stage - 1`).
+    pub is_forward: bool,
+}
+
+/// A pipeline-parallel microbatch schedule: the `stages × microbatches`
+/// forward/backward grid, in issue order, plus the bubble math the
+/// perfmodel annotates plans with.
+///
+/// The slot grid is the timing/cost model *and* the execution order:
+/// [`crate::distributed::mesh::MeshTrainer`] walks the forward slots to
+/// route microbatch payloads through [`crate::distributed::SimCollective`]
+/// sends/recvs, and the backward slots to route the per-microbatch loss
+/// partials back for accumulation.
+#[derive(Clone, Debug)]
+pub struct PipelineSchedule {
+    pub kind: PipelineKind,
+    pub stages: usize,
+    pub microbatches: usize,
+    /// All `2 · stages · microbatches` slots, sorted by `(tick, stage)`
+    /// — dependency order: a slot's upstream producer always sorts
+    /// strictly earlier.
+    pub slots: Vec<PipelineSlot>,
+}
+
+impl PipelineSchedule {
+    fn validate_shape(stages: usize, microbatches: usize) -> Result<()> {
+        anyhow::ensure!(stages >= 1, "pipeline needs >= 1 stage");
+        anyhow::ensure!(microbatches >= 1, "pipeline needs >= 1 microbatch");
+        anyhow::ensure!(
+            stages == 1 || microbatches >= stages,
+            "pipeline with {stages} stages needs >= that many microbatches (got {microbatches})"
+        );
+        Ok(())
+    }
+
+    /// Dispatch on [`PipelineKind`].
+    pub fn for_kind(kind: PipelineKind, stages: usize, microbatches: usize) -> Result<Self> {
+        match kind {
+            PipelineKind::GPipe => Self::gpipe(stages, microbatches),
+            PipelineKind::OneFOneB => Self::one_f_one_b(stages, microbatches),
+        }
+    }
+
+    /// The GPipe schedule: forward `j` on stage `s` at tick `s + j`;
+    /// after the last forward drains, backwards run in reverse microbatch
+    /// order from the last stage down.
+    pub fn gpipe(stages: usize, microbatches: usize) -> Result<Self> {
+        Self::validate_shape(stages, microbatches)?;
+        let (s_n, m) = (stages, microbatches);
+        let mut slots = Vec::with_capacity(2 * s_n * m);
+        for s in 0..s_n {
+            for j in 0..m {
+                slots.push(PipelineSlot { tick: s + j, stage: s, microbatch: j, is_forward: true });
+                slots.push(PipelineSlot {
+                    tick: (m + s_n - 1) + (s_n - 1 - s) + (m - 1 - j),
+                    stage: s,
+                    microbatch: j,
+                    is_forward: false,
+                });
+            }
+        }
+        slots.sort_by_key(|sl| (sl.tick, sl.stage));
+        Ok(PipelineSchedule { kind: PipelineKind::GPipe, stages, microbatches, slots })
+    }
+
+    /// The 1F1B (one-forward-one-backward) schedule: stage `s` runs
+    /// `S - 1 - s` warmup forwards, then alternates forward/backward in
+    /// steady state, then drains its remaining backwards.  Timing is
+    /// earliest-start list scheduling under the pipeline dependencies
+    /// (`F(s,j)` after `F(s-1,j)`; `B(s,j)` after `F(s,j)` and
+    /// `B(s+1,j)`), which reproduces the canonical 1F1B makespan of
+    /// `2·(m + S - 1)` ticks.
+    ///
+    /// ```
+    /// use axlearn::composer::schedule::PipelineSchedule;
+    ///
+    /// let s = PipelineSchedule::one_f_one_b(4, 8).unwrap();
+    /// // Same (S-1)/(S-1+m) bubble fraction as GPipe under the
+    /// // unit-time cost model …
+    /// assert_eq!(s.bubble_fraction(), 3.0 / 11.0);
+    /// // … but only `stages` microbatches ever in flight (GPipe keeps
+    /// // all 8 live through the forward phase):
+    /// assert_eq!(s.peak_in_flight(), 4);
+    /// assert_eq!(PipelineSchedule::gpipe(4, 8).unwrap().peak_in_flight(), 8);
+    /// ```
+    pub fn one_f_one_b(stages: usize, microbatches: usize) -> Result<Self> {
+        Self::validate_shape(stages, microbatches)?;
+        let (s_n, m) = (stages, microbatches);
+        // per-stage op order: warmup forwards, steady 1F1B, cooldown
+        let ops: Vec<Vec<(bool, usize)>> = (0..s_n)
+            .map(|s| {
+                let w = (s_n - 1 - s).min(m);
+                let mut v = Vec::with_capacity(2 * m);
+                for j in 0..w {
+                    v.push((true, j));
+                }
+                for i in 0..(m - w) {
+                    v.push((true, w + i));
+                    v.push((false, i));
+                }
+                for j in (m - w)..m {
+                    v.push((false, j));
+                }
+                v
+            })
+            .collect();
+        const UNSET: usize = usize::MAX;
+        let mut f_end = vec![vec![UNSET; m]; s_n];
+        let mut b_end = vec![vec![UNSET; m]; s_n];
+        let mut next = vec![0usize; s_n];
+        let mut free = vec![0usize; s_n];
+        let mut slots = Vec::with_capacity(2 * s_n * m);
+        while slots.len() < 2 * s_n * m {
+            let mut progressed = false;
+            for s in 0..s_n {
+                while next[s] < ops[s].len() {
+                    let (is_forward, j) = ops[s][next[s]];
+                    let ready_at = if is_forward {
+                        if s == 0 {
+                            Some(0)
+                        } else if f_end[s - 1][j] != UNSET {
+                            Some(f_end[s - 1][j])
+                        } else {
+                            None
+                        }
+                    } else {
+                        let own = f_end[s][j];
+                        let upstream = if s == s_n - 1 { 0 } else { b_end[s + 1][j] };
+                        if own != UNSET && upstream != UNSET {
+                            Some(own.max(upstream))
+                        } else {
+                            None
+                        }
+                    };
+                    let Some(dep) = ready_at else { break };
+                    let tick = free[s].max(dep);
+                    free[s] = tick + 1;
+                    if is_forward {
+                        f_end[s][j] = tick + 1;
+                    } else {
+                        b_end[s][j] = tick + 1;
+                    }
+                    slots.push(PipelineSlot { tick, stage: s, microbatch: j, is_forward });
+                    next[s] += 1;
+                    progressed = true;
+                }
+            }
+            anyhow::ensure!(
+                progressed,
+                "1F1B schedule deadlocked (stages={s_n}, microbatches={m})"
+            );
+        }
+        slots.sort_by_key(|sl| (sl.tick, sl.stage));
+        Ok(PipelineSchedule { kind: PipelineKind::OneFOneB, stages, microbatches, slots })
+    }
+
+    /// Total schedule span in ticks (last slot's end).
+    pub fn makespan_ticks(&self) -> usize {
+        self.slots.iter().map(|sl| sl.tick + 1).max().unwrap_or(0)
+    }
+
+    /// Bubble fraction of this grid: the share of stage-ticks spent
+    /// idle, `1 - 2m / makespan`.  For both GPipe and 1F1B this equals
+    /// the analytic [`Strategy::pipeline_bubble`] value
+    /// `(S-1)/(S-1+m)`; a 1-stage schedule has no bubble.
+    pub fn bubble_fraction(&self) -> f64 {
+        let span = self.makespan_ticks();
+        if span == 0 {
+            return 0.0;
+        }
+        (span - 2 * self.microbatches) as f64 / span as f64
+    }
+
+    /// Peak microbatches in flight on any stage (forward issued, backward
+    /// not yet run) — the activation-memory axis on which 1F1B (≤ `S`)
+    /// beats GPipe (`m`).
+    pub fn peak_in_flight(&self) -> usize {
+        let mut peak = 0usize;
+        for s in 0..self.stages {
+            let mut cur = 0usize;
+            let mut stage_peak = 0usize;
+            for sl in &self.slots {
+                if sl.stage != s {
+                    continue;
+                }
+                if sl.is_forward {
+                    cur += 1;
+                    stage_peak = stage_peak.max(cur);
+                } else {
+                    cur = cur.saturating_sub(1);
+                }
+            }
+            peak = peak.max(stage_peak);
+        }
+        peak
+    }
+}
+
+/// Contiguous `[lo, hi)` bounds partitioning `n` items (layers, or a
+/// flat per-layer state vector) into `stages` equal pipeline stages.
+///
+/// ```
+/// use axlearn::composer::schedule::stage_partition;
+///
+/// assert_eq!(stage_partition(8, 4).unwrap(), vec![(0, 2), (2, 4), (4, 6), (6, 8)]);
+/// assert!(stage_partition(6, 4).is_err()); // 6 layers don't split 4 ways
+/// ```
+pub fn stage_partition(n: usize, stages: usize) -> Result<Vec<(usize, usize)>> {
+    anyhow::ensure!(stages >= 1, "stage_partition over zero stages");
+    anyhow::ensure!(
+        n % stages == 0,
+        "{n} items do not divide into {stages} equal pipeline stages"
+    );
+    let chunk = n / stages;
+    Ok((0..stages).map(|p| (p * chunk, (p + 1) * chunk)).collect())
 }
 
 /// Lower a resolved strategy + sharding into the plan-level collective
@@ -189,18 +472,21 @@ pub fn build_schedule(
     ic: &Interconnect,
 ) -> CollectiveSchedule {
     let (fs, ms, rep) = shard_degrees(strategy, shard_axes);
+    let ps = strategy.pipeline.max(1);
     let chips = strategy.total_chips().max(1);
 
-    // bf16 parameters/gradients on the wire.
-    let param_bytes = shape.params() as f64 * 2.0;
+    // bf16 parameters/gradients on the wire; a pipeline stage only moves
+    // its own layer slice.
+    let param_bytes = shape.params() as f64 * 2.0 / ps as f64;
     // Tensor-parallel activation traffic: one [batch/dp, seq, model_dim]
-    // bf16 reduction per layer for forward and again for backward.
+    // bf16 reduction per resident layer for forward and again for
+    // backward (a stage holds num_layers / ps layers).
     let dp = (strategy.data * strategy.fsdp).max(1);
     let act_bytes = (global_batch.max(dp) / dp) as f64
         * seq_len as f64
         * shape.model_dim as f64
         * 2.0
-        * shape.num_layers as f64
+        * (shape.num_layers as f64 / ps as f64)
         * 2.0;
 
     let mut entries = Vec::new();
@@ -240,6 +526,37 @@ pub fn build_schedule(
             cost_s: hierarchical(Collective::AllReduce, act_bytes, ms, ic),
             overlappable: false,
         });
+    }
+    if ps > 1 {
+        // Stage-boundary point-to-point traffic: every one of the `m`
+        // microbatches crosses each of the `S-1` boundaries once forward
+        // (activations) and once backward (activation gradients); each
+        // hop is a 2-party transfer of one microbatch's boundary tensor.
+        // The bubble — not these transfers — carries the pipeline's
+        // exposure, so both directions are overlappable.
+        let m = strategy.microbatches.max(1);
+        let micro_bytes = (global_batch.max(dp) / dp) as f64 / m as f64
+            * seq_len as f64
+            * shape.model_dim as f64
+            * 2.0;
+        let hop = hierarchical(Collective::P2P, micro_bytes, 2, ic);
+        let chain_cost = (ps - 1) as f64 * m as f64 * hop;
+        for (phase, tensor) in [
+            (SchedulePhase::Compute, "activations"),
+            (SchedulePhase::Update, "activation-grads"),
+        ] {
+            entries.push(ScheduleEntry {
+                phase,
+                collective: Collective::P2P,
+                axis: "pipeline".into(),
+                group: ps,
+                count: chips / ps,
+                tensor: tensor.into(),
+                bytes: micro_bytes,
+                cost_s: chain_cost,
+                overlappable: true,
+            });
+        }
     }
     if rep > 1 {
         let grad_shard = param_bytes / (fs * ms) as f64;
@@ -372,6 +689,162 @@ mod tests {
         assert!((s.step_time_s(comm * 10.0) - comm * 10.0).abs() < 1e-12);
         // no compute: fully exposed
         assert!((s.step_time_s(0.0) - s.total_comm_s()).abs() < 1e-12);
+    }
+
+    fn check_slot_dependencies(sched: &PipelineSchedule) {
+        // slots are sorted, unique per (tick, stage), and every slot's
+        // producer finishes strictly before it starts
+        let mut seen = std::collections::BTreeSet::new();
+        let tick_of = |stage: usize, j: usize, fwd: bool| {
+            sched
+                .slots
+                .iter()
+                .find(|sl| sl.stage == stage && sl.microbatch == j && sl.is_forward == fwd)
+                .map(|sl| sl.tick)
+                .unwrap()
+        };
+        assert_eq!(sched.slots.len(), 2 * sched.stages * sched.microbatches);
+        for w in sched.slots.windows(2) {
+            assert!((w[0].tick, w[0].stage) <= (w[1].tick, w[1].stage), "unsorted: {w:?}");
+        }
+        for sl in &sched.slots {
+            assert!(seen.insert((sl.tick, sl.stage)), "stage double-booked: {sl:?}");
+            if sl.is_forward {
+                if sl.stage > 0 {
+                    assert!(
+                        tick_of(sl.stage - 1, sl.microbatch, true) < sl.tick,
+                        "forward before its upstream forward: {sl:?}"
+                    );
+                }
+            } else {
+                assert!(
+                    tick_of(sl.stage, sl.microbatch, true) < sl.tick,
+                    "backward before its own forward: {sl:?}"
+                );
+                if sl.stage + 1 < sched.stages {
+                    assert!(
+                        tick_of(sl.stage + 1, sl.microbatch, false) < sl.tick,
+                        "backward before its downstream backward: {sl:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pipeline_grids_are_valid_and_makespan_optimal() {
+        for (s, m) in [(1, 1), (1, 4), (2, 2), (2, 4), (3, 3), (4, 8), (8, 8), (4, 16)] {
+            for kind in [PipelineKind::GPipe, PipelineKind::OneFOneB] {
+                let sched = PipelineSchedule::for_kind(kind, s, m).unwrap();
+                check_slot_dependencies(&sched);
+                assert_eq!(
+                    sched.makespan_ticks(),
+                    2 * (m + s - 1),
+                    "{kind:?} stages={s} m={m}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn bubble_matches_the_analytic_annotation() {
+        // the (S-1)/(S-1+m) fraction the perfmodel annotates, bit-equal
+        for (s, m) in [(2, 2), (2, 8), (4, 8), (4, 16), (8, 8)] {
+            let strat = Strategy {
+                pipeline: s,
+                microbatches: m,
+                ..Strategy::default()
+            };
+            for kind in [PipelineKind::GPipe, PipelineKind::OneFOneB] {
+                let sched = PipelineSchedule::for_kind(kind, s, m).unwrap();
+                assert_eq!(
+                    sched.bubble_fraction(),
+                    strat.pipeline_bubble(),
+                    "{kind:?} stages={s} m={m}"
+                );
+            }
+        }
+        assert_eq!(PipelineSchedule::gpipe(1, 4).unwrap().bubble_fraction(), 0.0);
+    }
+
+    #[test]
+    fn one_f_one_b_caps_in_flight_microbatches() {
+        let g = PipelineSchedule::gpipe(4, 16).unwrap();
+        let f = PipelineSchedule::one_f_one_b(4, 16).unwrap();
+        assert_eq!(g.peak_in_flight(), 16, "GPipe keeps every microbatch live");
+        assert_eq!(f.peak_in_flight(), 4, "1F1B keeps at most `stages` live");
+    }
+
+    #[test]
+    fn pipeline_shape_validation() {
+        assert!(PipelineSchedule::gpipe(4, 2).is_err()); // microbatches < stages
+        assert!(PipelineSchedule::one_f_one_b(4, 2).is_err());
+        assert!(PipelineSchedule::gpipe(0, 1).is_err());
+        assert!(PipelineSchedule::one_f_one_b(1, 1).is_ok());
+    }
+
+    #[test]
+    fn pipeline_kind_parsing_and_microbatch_flooring() {
+        assert_eq!(PipelineKind::parse("1f1b").unwrap(), PipelineKind::OneFOneB);
+        assert_eq!(PipelineKind::parse("gpipe").unwrap(), PipelineKind::GPipe);
+        assert!(PipelineKind::parse("zigzag").is_err());
+        assert_eq!(resolve_microbatches(None, 4), 4);
+        assert_eq!(resolve_microbatches(Some(16), 4), 16);
+        assert_eq!(resolve_microbatches(Some(0), 1), 1);
+        assert_eq!(resolve_microbatches(Some(-3), 2), 2);
+    }
+
+    #[test]
+    fn stage_partition_bounds() {
+        assert_eq!(stage_partition(64, 1).unwrap(), vec![(0, 64)]);
+        assert_eq!(stage_partition(64, 4).unwrap()[3], (48, 64));
+        assert!(stage_partition(10, 4).is_err());
+        assert!(stage_partition(0, 0).is_err());
+    }
+
+    #[test]
+    fn pipelined_schedule_emits_stage_boundary_p2p() {
+        let strat = Strategy {
+            data: 2,
+            fsdp: 4,
+            pipeline: 4,
+            microbatches: 8,
+            ..Strategy::default()
+        };
+        let s = build_schedule(
+            &strat,
+            &shape(),
+            &axes(&["fsdp"]),
+            1024,
+            4096,
+            &crate::perfmodel::chips::h100().interconnect,
+        );
+        let p2p: Vec<&ScheduleEntry> =
+            s.entries.iter().filter(|e| e.collective == Collective::P2P).collect();
+        assert_eq!(p2p.len(), 2, "one forward + one backward chain");
+        for e in &p2p {
+            assert_eq!(e.axis, "pipeline");
+            assert_eq!(e.group * e.count, strat.total_chips(), "{e:?}");
+            assert!(e.cost_s > 0.0 && e.bytes > 0.0);
+            assert!(e.overlappable, "the bubble, not the hop, carries the exposure");
+        }
+        // per-stage payloads shrink with the stage count
+        let unpiped = build_schedule(
+            &Strategy { data: 2, fsdp: 4, ..Strategy::default() },
+            &shape(),
+            &axes(&["fsdp"]),
+            1024,
+            4096,
+            &crate::perfmodel::chips::h100().interconnect,
+        );
+        let gather_bytes = |sch: &CollectiveSchedule| {
+            sch.entries
+                .iter()
+                .find(|e| e.tensor == "params")
+                .map(|e| e.bytes)
+                .unwrap()
+        };
+        assert_eq!(gather_bytes(&s), gather_bytes(&unpiped) / 4.0);
     }
 
     #[test]

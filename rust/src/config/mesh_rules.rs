@@ -114,6 +114,7 @@ impl MeshRules {
 /// `heterogeneous` example and the Table-3 composer plans.
 pub fn paper_appendix_a_rules() -> MeshRules {
     use super::modifier::*;
+    use super::node::Value;
     MeshRules::new(vec![
         MeshRule::new(
             "tpu-v5e-256-*",
@@ -121,6 +122,28 @@ pub fn paper_appendix_a_rules() -> MeshRules {
                 Box::new(MeshShapeModifier::new(&[-1, 256], &["data", "fsdp"])),
                 Box::new(RematSpecModifier::at("offload_dots", "model.decoder.layer")),
                 Box::new(QuantizationModifier::int8()),
+            ],
+        )
+        .unwrap(),
+        // Pipelined H100 pods (the "-pp" instance flavor): FSDP within
+        // the node, 4 pipeline stages across nodes with a 1F1B
+        // microbatch schedule — listed before the generic H100 rule so
+        // first-match-wins picks the more specific pattern.
+        MeshRule::new(
+            "gpu-H100-pp-*",
+            vec![
+                Box::new(MeshShapeModifier::new(
+                    &[-1, 4, 8],
+                    &["fsdp", "pipeline", "model"],
+                )),
+                Box::new(SetFieldModifier::new("", "microbatches", Value::Int(16))),
+                Box::new(SetFieldModifier::new(
+                    "",
+                    "pipeline_schedule",
+                    Value::Str("1f1b".into()),
+                )),
+                Box::new(RematSpecModifier::at("save_qkvo", "model.decoder.layer")),
+                Box::new(QuantizationModifier::fp8(128)),
             ],
         )
         .unwrap(),
@@ -210,6 +233,28 @@ mod tests {
             t.at_path("model.decoder.layer").unwrap().get_str("remat_spec").unwrap(),
             "save_qkvo"
         );
+    }
+
+    #[test]
+    fn h100_pp_rule_adds_a_pipeline_axis() {
+        let rules = paper_appendix_a_rules();
+        let mut t = trainer_for_preset("small").unwrap();
+        let matched = rules.apply("gpu-H100-pp-64", &mut t).unwrap();
+        assert_eq!(matched.as_deref(), Some("gpu-H100-pp-*"));
+        assert_eq!(
+            t.get_str_list("mesh_axis_names").unwrap(),
+            vec!["fsdp", "pipeline", "model"]
+        );
+        assert_eq!(t.get_int_list("mesh_shape").unwrap(), vec![-1, 4, 8]);
+        assert_eq!(t.get_int("microbatches").unwrap(), 16);
+        assert_eq!(t.get_str("pipeline_schedule").unwrap(), "1f1b");
+        // the more specific pattern must not shadow plain H100 strings
+        let mut plain = trainer_for_preset("small").unwrap();
+        assert_eq!(
+            rules.apply("gpu-H100-64", &mut plain).unwrap().as_deref(),
+            Some("gpu-H100-*")
+        );
+        assert_eq!(plain.get_int("microbatches").unwrap(), 1);
     }
 
     #[test]

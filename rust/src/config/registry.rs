@@ -258,6 +258,11 @@ pub fn register_defaults() -> BTreeMap<&'static str, Ctor> {
             // mesh axes that shard parameters (the resolved sharding
             // plan); axes left out replicate and fold into DP sync
             .field("shard_axes", Value::StrList(vec!["fsdp".into(), "model".into()]))
+            // microbatches per step when the mesh has a pipeline axis
+            // (raised to the stage count if set lower)
+            .field("microbatches", Value::Int(1))
+            // "1f1b" | "gpipe" — the microbatch schedule for pipeline axes
+            .field("pipeline_schedule", Value::Str("1f1b".into()))
             // instance type selects the interconnect cost model
             .field("instance_type", Value::Str("cpu-local".into()))
             .field("backend", Value::Config(builtin("MockTrainBackend")))
@@ -303,6 +308,10 @@ pub fn register_defaults() -> BTreeMap<&'static str, Ctor> {
             .field("seed", Value::Int(0))
             .field("mesh_shape", Value::IntList(vec![1, 1]))
             .field("mesh_axis_names", Value::StrList(vec!["data".into(), "model".into()]))
+            // microbatches per step for pipeline mesh axes (the composer
+            // raises it to the stage count when a mesh rule adds stages)
+            .field("microbatches", Value::Int(1))
+            .field("pipeline_schedule", Value::Str("1f1b".into())) // | "gpipe"
             .field("remat_policy", Value::Str("none".into()))
             .field("quantization", Value::Str("none".into())) // none | int8 | fp8
             .field("preset", Value::Str("tiny".into()))

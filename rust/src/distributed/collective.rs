@@ -1,9 +1,11 @@
 //! Simulated collectives over replica state vectors.
 //!
 //! The data plane of the cluster simulator: all-reduce/all-gather/
-//! broadcast/reduce-scatter implemented over plain host vectors, with an
-//! injectable fault hook so the SDC detector and failure-injection tests
-//! can exercise real corruption paths (a bit flip inside a collective is
+//! broadcast/reduce-scatter plus point-to-point [`SimCollective::send`]/
+//! [`SimCollective::recv`] (the pipeline-parallel stage-boundary
+//! transfers), implemented over plain host vectors, with an injectable
+//! fault hook so the SDC detector and failure-injection tests can
+//! exercise real corruption paths (a bit flip inside a collective is
 //! the canonical interconnect SDC of §5).
 //!
 //! Reductions run in **binary-tree (pairwise) order**, like real
@@ -36,9 +38,13 @@ pub type FaultHook = Box<dyn Fn(usize, usize, f32) -> f32 + Send>;
 #[derive(Default)]
 pub struct SimCollective {
     fault: Option<FaultHook>,
+    /// In-flight point-to-point messages: `(src, dst, tag, payload)`.
+    /// FIFO per `(src, dst, tag)` channel, so matching is deterministic.
+    p2p: std::collections::VecDeque<(usize, usize, u64, Vec<f32>)>,
     /// Number of collectives executed so far (inner phases of a fused
     /// collective — e.g. the reduction inside a reduce-scatter — count
-    /// as part of their parent, not separately).
+    /// as part of their parent, not separately; a send/recv pair counts
+    /// once, at the send).
     pub ops_run: u64,
 }
 
@@ -170,6 +176,46 @@ impl SimCollective {
             .map(|r| sum[r * chunk..(r + 1) * chunk].to_vec())
             .collect())
     }
+
+    /// Point-to-point send from rank `src` to rank `dst` of the caller's
+    /// subgroup (the pipeline stage-boundary transfer).  The fault hook
+    /// is applied to the payload as it leaves the sender — corruption
+    /// propagates downstream exactly like an interconnect bit flip on a
+    /// real link.  `tag` disambiguates concurrent transfers on the same
+    /// channel (e.g. microbatch index); matching is FIFO per
+    /// `(src, dst, tag)` channel, so replay is deterministic.
+    ///
+    /// Like the reductions, a transfer is one op: `ops_run` counts the
+    /// send; the matching [`SimCollective::recv`] completes it.
+    pub fn send(&mut self, src: usize, dst: usize, tag: u64, data: &[f32]) -> Result<()> {
+        if src == dst {
+            bail!("send: src and dst are both rank {src}");
+        }
+        self.ops_run += 1;
+        let payload = self.apply_fault(src, data);
+        self.p2p.push_back((src, dst, tag, payload));
+        Ok(())
+    }
+
+    /// Receive the oldest in-flight message on the `(src, dst, tag)`
+    /// channel.  A recv with no matching send is a schedule bug and is
+    /// reported as an error, never fabricated.
+    pub fn recv(&mut self, src: usize, dst: usize, tag: u64) -> Result<Vec<f32>> {
+        match self
+            .p2p
+            .iter()
+            .position(|(s, d, t, _)| *s == src && *d == dst && *t == tag)
+        {
+            Some(i) => Ok(self.p2p.remove(i).expect("position is in range").3),
+            None => bail!("recv: no in-flight send on channel {src}->{dst} tag {tag}"),
+        }
+    }
+
+    /// Number of sends not yet received — a drained pipeline must leave
+    /// this at zero (the mesh trainer asserts it every step).
+    pub fn pending_p2p(&self) -> usize {
+        self.p2p.len()
+    }
 }
 
 #[cfg(test)]
@@ -282,6 +328,65 @@ mod tests {
         let mut c = SimCollective::new();
         c.reduce_scatter(&[vec![1.0, 2.0], vec![3.0, 4.0]]).unwrap();
         assert_eq!(c.ops_run, 1);
+    }
+
+    #[test]
+    fn send_recv_roundtrips_bit_exactly() {
+        let mut c = SimCollective::new();
+        let data = vec![0.1f32, -3.7e-3, 123.456, 1.0 + f32::EPSILON];
+        c.send(0, 1, 7, &data).unwrap();
+        assert_eq!(c.pending_p2p(), 1);
+        let got = c.recv(0, 1, 7).unwrap();
+        assert!(data.iter().zip(&got).all(|(a, b)| a.to_bits() == b.to_bits()));
+        assert_eq!(c.pending_p2p(), 0);
+        assert_eq!(c.ops_run, 1, "a send/recv pair is one transfer");
+    }
+
+    #[test]
+    fn recv_without_send_is_an_error() {
+        let mut c = SimCollective::new();
+        let err = c.recv(0, 1, 0).unwrap_err();
+        assert!(err.to_string().contains("no in-flight send"), "{err}");
+        // tag and endpoints must both match
+        c.send(0, 1, 5, &[1.0]).unwrap();
+        assert!(c.recv(0, 1, 6).is_err());
+        assert!(c.recv(1, 0, 5).is_err());
+        assert!(c.recv(0, 1, 5).is_ok());
+    }
+
+    #[test]
+    fn send_to_self_rejected() {
+        let mut c = SimCollective::new();
+        assert!(c.send(2, 2, 0, &[1.0]).is_err());
+    }
+
+    #[test]
+    fn p2p_channels_are_fifo() {
+        let mut c = SimCollective::new();
+        c.send(0, 1, 3, &[1.0]).unwrap();
+        c.send(0, 1, 3, &[2.0]).unwrap();
+        c.send(1, 2, 3, &[9.0]).unwrap(); // different channel, interleaved
+        assert_eq!(c.recv(0, 1, 3).unwrap(), vec![1.0]);
+        assert_eq!(c.recv(1, 2, 3).unwrap(), vec![9.0]);
+        assert_eq!(c.recv(0, 1, 3).unwrap(), vec![2.0]);
+    }
+
+    #[test]
+    fn fault_hook_applies_at_the_sender() {
+        // src is the replica index the hook sees — a stage-0 fault
+        // corrupts what stage 1 receives, like a real bad link
+        let mut c = SimCollective::new().with_fault(Box::new(|r, i, x| {
+            if r == 0 && i == 1 {
+                x + 0.5
+            } else {
+                x
+            }
+        }));
+        c.send(0, 1, 0, &[1.0, 2.0]).unwrap();
+        assert_eq!(c.recv(0, 1, 0).unwrap(), vec![1.0, 2.5]);
+        // a send from another rank is untouched
+        c.send(1, 2, 0, &[1.0, 2.0]).unwrap();
+        assert_eq!(c.recv(1, 2, 0).unwrap(), vec![1.0, 2.0]);
     }
 
     #[test]

@@ -460,7 +460,7 @@ impl FleetTrainer {
 /// replica-count × recovery-strategy compose exactly like trainer
 /// configs.  The backend child may be a `MeshTrainer` config, in which
 /// case every replica (and spare) is mesh-sharded — data parallelism
-/// across the fleet, FSDP×TP inside each replica — and crash recovery,
+/// across the fleet, pipeline/FSDP/TP inside each replica — and crash recovery,
 /// checkpointing, and spare promotion run unchanged over the
 /// [`TrainBackend`] boundary.  PJRT backends need a live client — open
 /// those with [`crate::trainer::PjrtTrainBackend::open`] and use

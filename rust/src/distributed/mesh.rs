@@ -1,56 +1,79 @@
 //! Mesh-sharded execution: the GSPMD-style "global computer" of §3 made
-//! runnable.  A [`MeshTrainer`] takes a resolved DP×FSDP×TP mesh shape,
-//! partitions parameters/gradients/optimizer state across the device
-//! grid per the sharding plan, and executes steps over any
-//! [`TrainBackend`] — lowering every step to an explicit, inspectable
-//! [`CollectiveSchedule`] whose entries it executes over
-//! [`SimCollective`] subgroups per mesh axis.
+//! runnable.  A [`MeshTrainer`] takes a resolved DP×PP×FSDP×TP mesh
+//! shape, partitions parameters/gradients/optimizer state across the
+//! device grid per the sharding plan (and layers across pipeline
+//! stages), and executes steps over any [`TrainBackend`] — lowering
+//! every step to an explicit, inspectable [`CollectiveSchedule`] whose
+//! entries it executes over [`SimCollective`] subgroups per mesh axis,
+//! with microbatches walked in [`PipelineSchedule`] (GPipe/1F1B) order.
 //!
 //! ## Execution model
 //!
 //! The mesh runs ONE logical program (the paper's "global computation
 //! over a device mesh").  Between steps, state lives **sharded**: each
-//! device of the `data × fsdp × model` grid holds only its chunk of
-//! every sharded state tensor.  One step is:
+//! device of the `data × pipeline × fsdp × model` grid holds only its
+//! chunk of every sharded state tensor — the pipeline axis partitions
+//! the layer stack into contiguous stage slices, and each stage's slice
+//! shards over the within-stage `fsdp × model` lattice.  One step is:
 //!
 //! 1. **Gather** — FSDP all-gather within each model column, then a
-//!    model-axis all-gather, reconstruct the full state per replica
-//!    group (explicit [`SimCollective::all_gather`] calls; replica
-//!    groups are cross-checked bit-for-bit, so shard corruption
-//!    surfaces as an error instead of silent divergence).
-//! 2. **Compute** — the gathered state is installed into the inner
-//!    backend and the global step executes once (the simulation
-//!    substrate has one executor; GSPMD guarantees the partitioned
-//!    program computes exactly what the unpartitioned one does, and the
-//!    simulator inherits that property by construction).  When the mesh
-//!    has a model axis, the returned loss is reassembled from
-//!    per-tensor-rank partials through a real model-axis all-reduce —
-//!    the tensor-parallel activation reduction, executed, not implied.
+//!    model-axis all-gather, per stage; stage slices concatenate
+//!    host-side (real pipelines never exchange parameters between
+//!    stages) to reconstruct the full state per replica group (explicit
+//!    [`SimCollective::all_gather`] calls; replica groups are
+//!    cross-checked bit-for-bit, so shard corruption surfaces as an
+//!    error instead of silent divergence).
+//! 2. **Compute** — with a pipeline axis, the microbatch token/target
+//!    chunks genuinely travel the stage chain first: one
+//!    [`SimCollective::send`]/[`SimCollective::recv`] per forward slot
+//!    of the pipeline schedule, hop by hop, reassembled at the last
+//!    stage — a fault hook on any link corrupts the batch exactly like
+//!    real interconnect damage.  The gathered state is installed into
+//!    the inner backend and the global step executes once on the
+//!    reassembled batch (the simulation substrate has one executor;
+//!    GSPMD guarantees the partitioned program computes exactly what
+//!    the unpartitioned one does, and microbatch gradient accumulation
+//!    is folded into that single step — so the simulator serializes
+//!    the schedule's forward slots, then compute, then its backward
+//!    slots; the slot grid itself still carries the 1F1B-vs-GPipe
+//!    timing and memory story).  When the mesh has a model axis, the
+//!    returned loss is reassembled from per-tensor-rank partials
+//!    through a real model-axis all-reduce — the tensor-parallel
+//!    activation reduction, executed, not implied.  With a pipeline
+//!    axis, the per-microbatch loss partials then travel *back* down
+//!    the stage chain (one send/recv per backward slot) and accumulate
+//!    at stage 0 in binary-tree order — the gradient-accumulation
+//!    discipline, applied to the loss.
 //! 3. **Update** — FSDP reduce-scatter leaves each rank its mean chunk
-//!    of the updated block, and a data-axis all-reduce synchronizes the
-//!    replication groups.  Both run through the collective engine, so
-//!    an installed fault hook corrupts them exactly like a real
-//!    interconnect SDC.
+//!    of the updated block (per stage), and a data-axis all-reduce
+//!    synchronizes the replication groups.  Both run through the
+//!    collective engine, so an installed fault hook corrupts them
+//!    exactly like a real interconnect SDC.
 //!
 //! ## Bit-exactness
 //!
 //! [`SimCollective`] reduces in binary-tree order, so power-of-two
 //! groups of bit-identical contributions reduce *exactly* (see the
 //! collective module docs).  Every collective above is a mean over
-//! bit-identical contributions; for power-of-two mesh axes the sharded
-//! run is therefore **bit-identical** to the single-device run on the
-//! same seed and data — for every factorization of the device count.
+//! bit-identical contributions, microbatch transport moves bits without
+//! arithmetic, and the loss accumulation tree-sums `m` copies of
+//! `loss/m`; for power-of-two mesh axes and microbatch counts the
+//! sharded run is therefore **bit-identical** to the single-device run
+//! on the same seed and data — for every 4-axis factorization of the
+//! device count, under both GPipe and 1F1B.
 //! `tests/mesh_integration.rs` asserts exactly that, and the fleet
 //! trainer leans on it: a [`MeshTrainer`] *is* a [`TrainBackend`], so
-//! fleet replicas can be mesh-sharded and recover through host crashes
-//! with the unchanged checkpoint/restore machinery.
+//! fleet replicas can be mesh-sharded (pipelined included) and recover
+//! through host crashes with the unchanged checkpoint/restore
+//! machinery.  See `docs/pipeline.md` for the schedule math.
 
 use std::cell::RefCell;
 
 use anyhow::{Context, Result};
 
 use crate::composer::schedule::{
-    local_interconnect, shard_degrees, CollectiveSchedule, ScheduleEntry, SchedulePhase,
+    local_interconnect, resolve_microbatches, shard_degrees, stage_partition, CollectiveSchedule,
+    PipelineKind, PipelineSchedule, ScheduleEntry, SchedulePhase,
 };
 use crate::composer::sharding::shard_axes_from_specs;
 use crate::composer::{materialize, Plan};
@@ -66,38 +89,65 @@ use super::collective::{FaultHook, SimCollective};
 /// How a [`MeshTrainer`] shards and costs its mesh.
 #[derive(Clone, Debug)]
 pub struct MeshOptions {
-    /// Resolved mesh shape: `data × fsdp × tensor` (pipeline and expert
-    /// must be 1).
+    /// Resolved mesh shape: `data × pipeline × fsdp × tensor` (expert
+    /// must be 1), with `microbatches` for the pipeline schedule.
     pub strategy: Strategy,
     /// Mesh axes that shard parameters (from the resolved
     /// [`crate::composer::ShardingSpec`]s; see
     /// [`shard_axes_from_specs`]).  A mesh axis not listed here
     /// replicates parameters and folds into the data-parallel sync.
+    /// The pipeline axis is orthogonal: it always partitions the layer
+    /// stack into stages.
     pub shard_axes: Vec<String>,
     /// Interconnect used for the schedule's cost annotations.
     pub interconnect: Interconnect,
-    /// Payload of the per-step tensor-parallel activation reduction
-    /// (cost annotation); `0.0` derives a batch×seq proxy from the
-    /// backend descriptor.
+    /// Payload of the per-step tensor-parallel activation reduction and
+    /// the per-step pipeline boundary traffic (cost annotation); `0.0`
+    /// derives a batch×seq proxy from the backend descriptor.
     pub activation_bytes: f64,
+    /// Microbatch schedule for the pipeline axis (GPipe or 1F1B);
+    /// irrelevant when `strategy.pipeline == 1`.
+    pub pipeline_schedule: PipelineKind,
 }
 
 impl MeshOptions {
-    /// Options for a plain `data × fsdp × model` mesh with the default
-    /// parameter sharding (over both fsdp and model axes) and the local
-    /// cost model.
+    /// Options for a plain `data × fsdp × model` mesh (no pipeline) with
+    /// the default parameter sharding (over both fsdp and model axes)
+    /// and the local cost model.
     pub fn for_mesh(data: usize, fsdp: usize, tensor: usize) -> Self {
+        Self::for_mesh4(data, 1, fsdp, tensor, 1)
+    }
+
+    /// Options for a full 4-axis `data × pipeline × fsdp × model` mesh
+    /// running `microbatches` microbatches per step (1F1B by default;
+    /// see [`MeshOptions::with_schedule`]).
+    pub fn for_mesh4(
+        data: usize,
+        pipeline: usize,
+        fsdp: usize,
+        tensor: usize,
+        microbatches: usize,
+    ) -> Self {
         MeshOptions {
             strategy: Strategy {
                 data,
                 fsdp,
                 tensor,
+                pipeline,
+                microbatches,
                 ..Strategy::default()
             },
             shard_axes: vec!["fsdp".into(), "model".into()],
             interconnect: local_interconnect(),
             activation_bytes: 0.0,
+            pipeline_schedule: PipelineKind::OneFOneB,
         }
+    }
+
+    /// Select the microbatch schedule (GPipe or 1F1B).
+    pub fn with_schedule(mut self, kind: PipelineKind) -> Self {
+        self.pipeline_schedule = kind;
+        self
     }
 }
 
@@ -107,9 +157,10 @@ struct MeshCore {
     inner: Box<dyn TrainBackend>,
     collective: SimCollective,
     /// `devices[dev][tensor]`: the chunk of a sharded tensor (or a full
-    /// copy of a replicated one) held by device `dev = r*g + c`, where
-    /// `r` indexes the replication group and `c = m*fs + f` the shard
-    /// lattice position.
+    /// copy of a replicated one) held by device
+    /// `dev = r*(ps*g) + p*g + c`, where `r` indexes the replication
+    /// group, `p` the pipeline stage, and `c = m*fs + f` the
+    /// within-stage shard lattice position.
     devices: Vec<Vec<Vec<f32>>>,
     names: Vec<String>,
     sharded: Vec<bool>,
@@ -117,7 +168,9 @@ struct MeshCore {
     fs: usize,
     /// Model/tensor sharding degree (1 when "model" is not a shard axis).
     ms: usize,
-    /// Shard-lattice size: `fs * ms`.
+    /// Pipeline stage count (always partitions sharded tensors).
+    ps: usize,
+    /// Within-stage shard-lattice size: `fs * ms`.
     g: usize,
     /// Replication degree: data × any unsharded fsdp/tensor axes.
     rep: usize,
@@ -129,31 +182,61 @@ fn bits_eq(a: &[f32], b: &[f32]) -> bool {
     a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
 }
 
+/// Binary-tree (pairwise) sum — the same reduction order as
+/// [`SimCollective`], so accumulating `2^k` identical contributions is
+/// exact.  Used for the stage-0 microbatch loss accumulation.
+fn tree_accumulate(vals: &[f32]) -> f32 {
+    let mut level: Vec<f32> = vals.to_vec();
+    while level.len() > 1 {
+        let mut next = Vec::with_capacity(level.len().div_ceil(2));
+        let mut it = level.into_iter();
+        while let Some(a) = it.next() {
+            next.push(if let Some(b) = it.next() { a + b } else { a });
+        }
+        level = next;
+    }
+    level.first().copied().unwrap_or(0.0)
+}
+
+/// P2p channel tags: microbatch index, disambiguated by direction.
+fn fwd_tag(microbatch: usize) -> u64 {
+    microbatch as u64
+}
+
+fn bwd_tag(microbatch: usize) -> u64 {
+    (1u64 << 32) | microbatch as u64
+}
+
 impl MeshCore {
     /// Split `state` into per-device chunks (the init/restore "scatter").
+    /// The pipeline axis partitions each sharded tensor into `ps`
+    /// contiguous stage slices; each slice shards over the within-stage
+    /// `fs × ms` lattice.
     fn shard_state(&mut self, state: &[(String, Vec<f32>)]) -> Result<()> {
-        let (fs, ms, g, rep) = (self.fs, self.ms, self.g, self.rep);
+        let (fs, ms, ps, g, rep) = (self.fs, self.ms, self.ps, self.g, self.rep);
+        let span = ps * g;
         let mut sharded = Vec::with_capacity(state.len());
         for (name, v) in state {
-            let shard = g > 1 && v.len() > 1;
-            if shard && v.len() % g != 0 {
+            let shard = span > 1 && v.len() > 1;
+            if shard && v.len() % span != 0 {
                 anyhow::bail!(
-                    "tensor {name:?} ({} elements) does not divide into {g} shards \
-                     (fsdp {fs} × model {ms}); pick a mesh whose shard group divides the state",
+                    "tensor {name:?} ({} elements) does not divide into {span} shards \
+                     (pipeline {ps} × fsdp {fs} × model {ms}); pick a mesh whose shard \
+                     group divides the state",
                     v.len()
                 );
             }
             sharded.push(shard);
         }
-        self.devices = (0..rep * g)
+        self.devices = (0..rep * span)
             .map(|dev| {
-                let c = dev % g;
+                let c = dev % span; // = p*g + (m*fs + f): stage-major
                 state
                     .iter()
                     .zip(&sharded)
                     .map(|((_, v), &shard)| {
                         if shard {
-                            let chunk = v.len() / g;
+                            let chunk = v.len() / span;
                             v[c * chunk..(c + 1) * chunk].to_vec()
                         } else {
                             v.clone()
@@ -169,35 +252,44 @@ impl MeshCore {
 
     /// Reconstruct the full state from the device shards: FSDP
     /// all-gather within each model column, then a model-axis
-    /// all-gather — executed per replication group and cross-checked
+    /// all-gather, per pipeline stage; stage slices concatenate
+    /// host-side (parameters never cross stage boundaries on a real
+    /// pipeline) — executed per replication group and cross-checked
     /// bit-for-bit between groups.
     fn gather_full(&mut self) -> Result<Vec<(String, Vec<f32>)>> {
         anyhow::ensure!(self.initialized, "MeshTrainer: no state to gather before init/restore");
-        let (fs, ms, g, rep) = (self.fs, self.ms, self.g, self.rep);
+        let (fs, ms, ps, g, rep) = (self.fs, self.ms, self.ps, self.g, self.rep);
+        let span = ps * g;
         let mut first: Vec<(String, Vec<f32>)> = Vec::new();
         for r in 0..rep {
             let mut tensors = Vec::with_capacity(self.names.len());
             for t in 0..self.names.len() {
                 let full = if self.sharded[t] {
-                    let mut blocks: Vec<Vec<f32>> = Vec::with_capacity(ms);
-                    for m in 0..ms {
-                        let block = if fs > 1 {
-                            let contribs: Vec<Vec<f32>> = (0..fs)
-                                .map(|f| self.devices[r * g + m * fs + f][t].clone())
-                                .collect();
-                            self.collective.all_gather(&contribs)?.swap_remove(0)
+                    let mut full = Vec::new();
+                    for p in 0..ps {
+                        let base = r * span + p * g;
+                        let mut blocks: Vec<Vec<f32>> = Vec::with_capacity(ms);
+                        for m in 0..ms {
+                            let block = if fs > 1 {
+                                let contribs: Vec<Vec<f32>> = (0..fs)
+                                    .map(|f| self.devices[base + m * fs + f][t].clone())
+                                    .collect();
+                                self.collective.all_gather(&contribs)?.swap_remove(0)
+                            } else {
+                                self.devices[base + m * fs][t].clone()
+                            };
+                            blocks.push(block);
+                        }
+                        let stage_slice = if ms > 1 {
+                            self.collective.all_gather(&blocks)?.swap_remove(0)
                         } else {
-                            self.devices[r * g + m * fs][t].clone()
+                            blocks.swap_remove(0)
                         };
-                        blocks.push(block);
+                        full.extend(stage_slice);
                     }
-                    if ms > 1 {
-                        self.collective.all_gather(&blocks)?.swap_remove(0)
-                    } else {
-                        blocks.swap_remove(0)
-                    }
+                    full
                 } else {
-                    self.devices[r * g][t].clone()
+                    self.devices[r * span][t].clone()
                 };
                 tensors.push((self.names[t].clone(), full));
             }
@@ -218,8 +310,8 @@ impl MeshCore {
     }
 
     /// Lower the post-step state back onto the device grid: FSDP
-    /// reduce-scatter (mean) per model column, then the data-axis
-    /// all-reduce (mean) across replication groups.
+    /// reduce-scatter (mean) per model column per stage, then the
+    /// data-axis all-reduce (mean) across replication groups.
     fn scatter_update(&mut self, new: &[(String, Vec<f32>)]) -> Result<()> {
         anyhow::ensure!(
             new.len() == self.names.len(),
@@ -227,7 +319,8 @@ impl MeshCore {
             new.len(),
             self.names.len()
         );
-        let (fs, ms, g, rep) = (self.fs, self.ms, self.g, self.rep);
+        let (fs, ms, ps, g, rep) = (self.fs, self.ms, self.ps, self.g, self.rep);
+        let span = ps * g;
         for (t, (name, v)) in new.iter().enumerate() {
             anyhow::ensure!(
                 *name == self.names[t],
@@ -236,43 +329,47 @@ impl MeshCore {
             );
             if self.sharded[t] {
                 anyhow::ensure!(
-                    v.len() % g == 0,
-                    "sharded tensor {name:?} changed to {} elements (not divisible by {g})",
+                    v.len() % span == 0,
+                    "sharded tensor {name:?} changed to {} elements (not divisible by {span})",
                     v.len()
                 );
-                let block_len = v.len() / ms;
+                let stages = stage_partition(v.len(), ps)?;
                 for r in 0..rep {
-                    for m in 0..ms {
-                        let block = &v[m * block_len..(m + 1) * block_len];
-                        if fs > 1 {
-                            // every fsdp rank contributes its (replicated-
-                            // compute) block and keeps its mean chunk
-                            let contribs: Vec<Vec<f32>> =
-                                (0..fs).map(|_| block.to_vec()).collect();
-                            let chunks = self.collective.reduce_scatter(&contribs)?;
-                            for (f, mut chunk) in chunks.into_iter().enumerate() {
-                                for x in chunk.iter_mut() {
-                                    *x /= fs as f32;
+                    for (p, &(lo, hi)) in stages.iter().enumerate() {
+                        let stage_slice = &v[lo..hi];
+                        let block_len = stage_slice.len() / ms;
+                        for m in 0..ms {
+                            let block = &stage_slice[m * block_len..(m + 1) * block_len];
+                            if fs > 1 {
+                                // every fsdp rank contributes its (replicated-
+                                // compute) block and keeps its mean chunk
+                                let contribs: Vec<Vec<f32>> =
+                                    (0..fs).map(|_| block.to_vec()).collect();
+                                let chunks = self.collective.reduce_scatter(&contribs)?;
+                                for (f, mut chunk) in chunks.into_iter().enumerate() {
+                                    for x in chunk.iter_mut() {
+                                        *x /= fs as f32;
+                                    }
+                                    self.devices[r * span + p * g + m * fs + f][t] = chunk;
                                 }
-                                self.devices[r * g + m * fs + f][t] = chunk;
+                            } else {
+                                self.devices[r * span + p * g + m * fs][t] = block.to_vec();
                             }
-                        } else {
-                            self.devices[r * g + m * fs][t] = block.to_vec();
                         }
                     }
                 }
                 if rep > 1 {
                     // DP sync: all-reduce-average each shard position
                     // across the replication groups
-                    for c in 0..g {
+                    for c in 0..span {
                         let contribs: Vec<Vec<f32>> =
-                            (0..rep).map(|r| self.devices[r * g + c][t].clone()).collect();
+                            (0..rep).map(|r| self.devices[r * span + c][t].clone()).collect();
                         let mut merged = self.collective.all_reduce(&contribs)?.swap_remove(0);
                         for x in merged.iter_mut() {
                             *x /= rep as f32;
                         }
                         for r in 0..rep {
-                            self.devices[r * g + c][t] = merged.clone();
+                            self.devices[r * span + c][t] = merged.clone();
                         }
                     }
                 }
@@ -298,6 +395,123 @@ impl MeshCore {
         }
         Ok(())
     }
+
+    /// Route the microbatch token/target chunks through the stage chain,
+    /// one [`SimCollective::send`]/[`SimCollective::recv`] hop per
+    /// forward slot of `sched`, and reassemble the global batch at the
+    /// last stage.  Transport moves bits without arithmetic, so the
+    /// reassembled batch is bit-identical to the input on a healthy
+    /// interconnect — and corrupted exactly like real activations
+    /// under a fault hook.
+    fn pipeline_forward(
+        &mut self,
+        sched: &PipelineSchedule,
+        tokens: &[i32],
+        targets: &[i32],
+    ) -> Result<(Vec<i32>, Vec<i32>)> {
+        let (s_n, m) = (sched.stages, sched.microbatches);
+        anyhow::ensure!(
+            tokens.len() == targets.len(),
+            "token/target length mismatch: {} vs {}",
+            tokens.len(),
+            targets.len()
+        );
+        anyhow::ensure!(
+            !tokens.is_empty() && tokens.len() % m == 0,
+            "batch of {} tokens does not divide into {m} microbatches",
+            tokens.len()
+        );
+        let chunk = tokens.len() / m;
+        let mut arrived: Vec<Option<Vec<f32>>> = vec![None; m];
+        for slot in sched.slots.iter().filter(|sl| sl.is_forward) {
+            let (st, j) = (slot.stage, slot.microbatch);
+            if st == 0 {
+                // stage 0 owns the input: pack microbatch j's tokens and
+                // targets into one boundary payload.  Bit-cast, not
+                // numeric cast — transport must be lossless for every
+                // i32 (an `as f32` round-trip would corrupt ids above
+                // 2^24), and pure moves never touch the bits
+                let mut payload: Vec<f32> = Vec::with_capacity(2 * chunk);
+                payload.extend(
+                    tokens[j * chunk..(j + 1) * chunk]
+                        .iter()
+                        .map(|&x| f32::from_bits(x as u32)),
+                );
+                payload.extend(
+                    targets[j * chunk..(j + 1) * chunk]
+                        .iter()
+                        .map(|&x| f32::from_bits(x as u32)),
+                );
+                if s_n > 1 {
+                    self.collective.send(0, 1, fwd_tag(j), &payload)?;
+                } else {
+                    arrived[j] = Some(payload);
+                }
+            } else {
+                let data = self.collective.recv(st - 1, st, fwd_tag(j))?;
+                anyhow::ensure!(
+                    data.len() == 2 * chunk,
+                    "microbatch {j} payload changed shape in flight at stage {st}"
+                );
+                if st < s_n - 1 {
+                    self.collective.send(st, st + 1, fwd_tag(j), &data)?;
+                } else {
+                    arrived[j] = Some(data);
+                }
+            }
+        }
+        let mut out_tokens = Vec::with_capacity(tokens.len());
+        let mut out_targets = Vec::with_capacity(targets.len());
+        for (j, payload) in arrived.into_iter().enumerate() {
+            let data = payload
+                .with_context(|| format!("microbatch {j} never reached the last stage"))?;
+            out_tokens.extend(data[..chunk].iter().map(|&x| x.to_bits() as i32));
+            out_targets.extend(data[chunk..].iter().map(|&x| x.to_bits() as i32));
+        }
+        Ok((out_tokens, out_targets))
+    }
+
+    /// Route the per-microbatch loss partials (`loss/m` each) back down
+    /// the stage chain, one hop per backward slot of `sched`, and
+    /// accumulate them at stage 0 in binary-tree order — the microbatch
+    /// gradient-accumulation discipline applied to the loss.  For
+    /// power-of-two `m` the accumulated loss is bit-identical to the
+    /// unpipelined one.
+    fn pipeline_backward(&mut self, sched: &PipelineSchedule, loss: f32) -> Result<f32> {
+        let (s_n, m) = (sched.stages, sched.microbatches);
+        let part = loss / m as f32;
+        let mut partials: Vec<Option<f32>> = vec![None; m];
+        for slot in sched.slots.iter().filter(|sl| !sl.is_forward) {
+            let (st, j) = (slot.stage, slot.microbatch);
+            if st == s_n - 1 {
+                // the loss originates at the last stage
+                if s_n > 1 {
+                    self.collective.send(st, st - 1, bwd_tag(j), &[part])?;
+                } else {
+                    partials[j] = Some(part);
+                }
+            } else {
+                let data = self.collective.recv(st + 1, st, bwd_tag(j))?;
+                anyhow::ensure!(
+                    data.len() == 1,
+                    "microbatch {j} loss partial changed shape in flight at stage {st}"
+                );
+                if st > 0 {
+                    self.collective.send(st, st - 1, bwd_tag(j), &data)?;
+                } else {
+                    partials[j] = Some(data[0]);
+                }
+            }
+        }
+        let vals: Vec<f32> = partials
+            .into_iter()
+            .enumerate()
+            .map(|(j, p)| {
+                p.with_context(|| format!("microbatch {j} loss partial never reached stage 0"))
+            })
+            .collect::<Result<_>>()?;
+        Ok(tree_accumulate(&vals))
+    }
 }
 
 /// Mesh-sharded training over any [`TrainBackend`] — itself a
@@ -309,35 +523,61 @@ pub struct MeshTrainer {
     opts: MeshOptions,
     desc: TrainBackendDescriptor,
     activation_bytes: f64,
+    pipe: PipelineSchedule,
     core: RefCell<MeshCore>,
 }
 
 impl MeshTrainer {
-    /// Wrap `inner` in a mesh.  Fails on pipeline/expert axes (not
-    /// lowered here) — shard-divisibility is checked at init/restore
-    /// time, when tensor shapes are known.
+    /// Wrap `inner` in a mesh.  Fails on an expert axis (not lowered
+    /// here) and on infeasible pipeline shapes (fewer microbatches than
+    /// stages, or a batch that does not split into the microbatches) —
+    /// shard-divisibility is checked at init/restore time, when tensor
+    /// shapes are known.
     pub fn new(inner: Box<dyn TrainBackend>, opts: MeshOptions) -> Result<Self> {
         let s = &opts.strategy;
         anyhow::ensure!(
-            s.pipeline == 1 && s.expert == 1,
-            "MeshTrainer lowers DP×FSDP×TP; pipeline ({}) and expert ({}) axes are not supported",
-            s.pipeline,
+            s.expert == 1,
+            "MeshTrainer lowers DP×PP×FSDP×TP; the expert ({}) axis is not supported",
             s.expert
         );
         anyhow::ensure!(
-            s.data >= 1 && s.fsdp >= 1 && s.tensor >= 1,
+            s.data >= 1 && s.fsdp >= 1 && s.tensor >= 1 && s.pipeline >= 1,
             "mesh axes must be >= 1: {s:?}"
         );
         // same derivation the composer's plan-level schedule uses — the
         // emitted schedule and the executed collectives must agree
         let (fs, ms, rep) = shard_degrees(s, &opts.shard_axes);
+        let ps = s.pipeline;
         let g = fs * ms;
         let inner_desc = inner.descriptor().clone();
+        let microbatches = s.microbatches.max(1);
+        if ps > 1 {
+            anyhow::ensure!(
+                microbatches >= ps,
+                "pipeline with {ps} stages needs >= that many microbatches (got {microbatches})"
+            );
+            let batch_tokens = inner_desc.batch * inner_desc.seq;
+            anyhow::ensure!(
+                batch_tokens > 0 && batch_tokens % microbatches == 0,
+                "batch of {batch_tokens} tokens ({}x{}) does not divide into \
+                 {microbatches} microbatches",
+                inner_desc.batch,
+                inner_desc.seq
+            );
+        }
+        let pipe = PipelineSchedule::for_kind(opts.pipeline_schedule, ps, microbatches)?;
         let desc = TrainBackendDescriptor {
-            name: format!(
-                "mesh[{}x{}x{}]:{}",
-                s.data, s.fsdp, s.tensor, inner_desc.name
-            ),
+            name: if ps > 1 {
+                format!(
+                    "mesh[{}x{}x{}x{}]:{}",
+                    s.data, ps, s.fsdp, s.tensor, inner_desc.name
+                )
+            } else {
+                format!(
+                    "mesh[{}x{}x{}]:{}",
+                    s.data, s.fsdp, s.tensor, inner_desc.name
+                )
+            },
             ..inner_desc.clone()
         };
         let activation_bytes = if opts.activation_bytes > 0.0 {
@@ -349,6 +589,7 @@ impl MeshTrainer {
             opts,
             desc,
             activation_bytes,
+            pipe,
             core: RefCell::new(MeshCore {
                 inner,
                 collective: SimCollective::new(),
@@ -357,6 +598,7 @@ impl MeshTrainer {
                 sharded: Vec::new(),
                 fs,
                 ms,
+                ps,
                 g,
                 rep,
                 step: 0,
@@ -379,15 +621,21 @@ impl MeshTrainer {
         &self.opts.strategy
     }
 
-    /// Devices on the mesh (`data × fsdp × tensor`).
+    /// Devices on the mesh (`data × pipeline × fsdp × tensor`).
     pub fn num_devices(&self) -> usize {
         let core = self.core.borrow();
-        core.rep * core.g
+        core.rep * core.ps * core.g
     }
 
-    /// Collectives executed so far.
+    /// Collectives (including p2p sends) executed so far.
     pub fn collective_ops(&self) -> u64 {
         self.core.borrow().collective.ops_run
+    }
+
+    /// The microbatch pipeline grid this mesh executes (trivial 1-stage
+    /// grid when the mesh has no pipeline axis).
+    pub fn pipeline_schedule(&self) -> &PipelineSchedule {
+        &self.pipe
     }
 
     /// Lower one step to its [`CollectiveSchedule`]: the collectives
@@ -406,21 +654,22 @@ impl MeshTrainer {
     pub fn lower_step(&self) -> Result<CollectiveSchedule> {
         let core = self.core.borrow();
         anyhow::ensure!(core.initialized, "MeshTrainer::lower_step before init/restore");
-        let (fs, ms, g, rep) = (core.fs, core.ms, core.g, core.rep);
+        let (fs, ms, ps, g, rep) = (core.fs, core.ms, core.ps, core.g, core.rep);
         let ic = &self.opts.interconnect;
         let mut entries = Vec::new();
         for (t, name) in core.names.iter().enumerate() {
             let chunk_len = core.devices[0][t].len();
             if core.sharded[t] {
-                let full_bytes = (chunk_len * g * 4) as f64;
-                let block_bytes = full_bytes / ms as f64;
+                // per-stage payloads: a stage only moves its layer slice
+                let stage_bytes = (chunk_len * g * 4) as f64;
+                let block_bytes = stage_bytes / ms as f64;
                 if fs > 1 {
                     entries.push(ScheduleEntry {
                         phase: SchedulePhase::Gather,
                         collective: Collective::AllGather,
                         axis: "fsdp".into(),
                         group: fs,
-                        count: rep * ms,
+                        count: rep * ps * ms,
                         tensor: name.clone(),
                         bytes: block_bytes,
                         cost_s: hierarchical(Collective::AllGather, block_bytes, fs, ic),
@@ -431,7 +680,7 @@ impl MeshTrainer {
                         collective: Collective::ReduceScatter,
                         axis: "fsdp".into(),
                         group: fs,
-                        count: rep * ms,
+                        count: rep * ps * ms,
                         tensor: name.clone(),
                         bytes: block_bytes,
                         cost_s: hierarchical(Collective::ReduceScatter, block_bytes, fs, ic),
@@ -444,21 +693,21 @@ impl MeshTrainer {
                         collective: Collective::AllGather,
                         axis: "model".into(),
                         group: ms,
-                        count: rep * fs,
+                        count: rep * ps * fs,
                         tensor: name.clone(),
-                        bytes: full_bytes,
-                        cost_s: hierarchical(Collective::AllGather, full_bytes, ms, ic),
+                        bytes: stage_bytes,
+                        cost_s: hierarchical(Collective::AllGather, stage_bytes, ms, ic),
                         overlappable: true,
                     });
                 }
                 if rep > 1 {
-                    let shard_bytes = full_bytes / g as f64;
+                    let shard_bytes = (chunk_len * 4) as f64;
                     entries.push(ScheduleEntry {
                         phase: SchedulePhase::Update,
                         collective: Collective::AllReduce,
                         axis: "data".into(),
                         group: rep,
-                        count: g,
+                        count: ps * g,
                         tensor: name.clone(),
                         bytes: shard_bytes,
                         cost_s: hierarchical(Collective::AllReduce, shard_bytes, rep, ic),
@@ -481,17 +730,47 @@ impl MeshTrainer {
             }
         }
         if ms > 1 {
+            let act = self.activation_bytes / ps as f64;
             entries.push(ScheduleEntry {
                 phase: SchedulePhase::Compute,
                 collective: Collective::AllReduce,
                 axis: "model".into(),
                 group: ms,
-                count: rep * fs,
+                count: rep * ps * fs,
                 tensor: "activations".into(),
-                bytes: self.activation_bytes,
-                cost_s: hierarchical(Collective::AllReduce, self.activation_bytes, ms, ic),
+                bytes: act,
+                cost_s: hierarchical(Collective::AllReduce, act, ms, ic),
                 overlappable: false,
             });
+        }
+        if ps > 1 {
+            // Stage-boundary p2p: each of the `m` microbatches crosses
+            // every boundary once forward (the token/target payload the
+            // simulator actually sends: 2 · activation_bytes / m) and
+            // once backward (the 4-byte loss partial).  The bubble
+            // fraction — annotated on the pipeline schedule — carries
+            // the exposure, so both directions overlap.
+            let m = self.pipe.microbatches.max(1);
+            let fwd_bytes = 2.0 * self.activation_bytes / m as f64;
+            let bwd_bytes = 4.0;
+            for (phase, tensor, bytes) in [
+                (SchedulePhase::Compute, "activations", fwd_bytes),
+                (SchedulePhase::Update, "activation-grads", bwd_bytes),
+            ] {
+                entries.push(ScheduleEntry {
+                    phase,
+                    collective: Collective::P2P,
+                    axis: "pipeline".into(),
+                    group: ps,
+                    count: rep * g,
+                    tensor: tensor.into(),
+                    bytes,
+                    cost_s: (ps - 1) as f64
+                        * m as f64
+                        * hierarchical(Collective::P2P, bytes, 2, ic),
+                    overlappable: true,
+                });
+            }
         }
         Ok(CollectiveSchedule::new(entries))
     }
@@ -521,8 +800,15 @@ impl TrainBackend for MeshTrainer {
         core.inner
             .restore_from_host(&full, at_step)
             .context("installing gathered mesh state")?;
-        // 2. compute: the global step
-        let raw = core.inner.step(tokens, targets)?;
+        // 2. compute: with a pipeline axis, the microbatch payloads
+        // first travel the stage chain (forward slots, in schedule
+        // order) and the global batch is reassembled at the last stage
+        let (tokens, targets) = if core.ps > 1 {
+            core.pipeline_forward(&self.pipe, tokens, targets)?
+        } else {
+            (tokens.to_vec(), targets.to_vec())
+        };
+        let raw = core.inner.step(&tokens, &targets)?;
         // tensor-parallel activation reduction: reassemble the loss from
         // per-rank partials through a real model-axis all-reduce
         let loss = if core.ms > 1 {
@@ -531,6 +817,19 @@ impl TrainBackend for MeshTrainer {
             core.collective.all_reduce(&contribs)?[0][0]
         } else {
             raw
+        };
+        // pipeline backward: per-microbatch loss partials return down
+        // the stage chain (backward slots) and accumulate at stage 0
+        let loss = if core.ps > 1 {
+            let acc = core.pipeline_backward(&self.pipe, loss)?;
+            anyhow::ensure!(
+                core.collective.pending_p2p() == 0,
+                "pipeline left {} undrained p2p transfers after the step",
+                core.collective.pending_p2p()
+            );
+            acc
+        } else {
+            loss
         };
         // 3. update: reduce-scatter + DP sync back onto the shards
         let new = core.inner.state_to_host()?;
@@ -597,7 +896,14 @@ pub fn mesh_from_config(cfg: &ConfigNode) -> Result<MeshTrainer> {
          resolve against a chip count with composer::materialize or Strategy::from_mesh"
     );
     let total: i64 = shape.iter().product();
-    let strategy = Strategy::from_mesh(&shape, &names, total as usize)?;
+    let mut strategy = Strategy::from_mesh(&shape, &names, total as usize)?;
+    // same microbatch flooring and schedule parsing as the composer's
+    // materialize route — shared helpers keep the two paths in lockstep
+    strategy.microbatches =
+        resolve_microbatches(cfg.get_int("microbatches").ok(), strategy.pipeline);
+    let pipeline_schedule = PipelineKind::parse(
+        &cfg.get_str("pipeline_schedule").unwrap_or_else(|_| "1f1b".into()),
+    )?;
     let instance = cfg.get_str("instance_type")?;
     let interconnect = chips::by_instance_type(&instance)
         .map(|c| c.interconnect)
@@ -612,6 +918,7 @@ pub fn mesh_from_config(cfg: &ConfigNode) -> Result<MeshTrainer> {
             shard_axes: cfg.get_str_list("shard_axes")?,
             interconnect,
             activation_bytes: 0.0,
+            pipeline_schedule,
         },
     )
 }
@@ -642,6 +949,7 @@ pub fn mesh_trainer_from_plan(plan: &Plan, inner: Box<dyn TrainBackend>) -> Resu
             shard_axes,
             interconnect,
             activation_bytes: 0.0,
+            pipeline_schedule: plan.pipeline.kind,
         },
     )
 }
@@ -779,10 +1087,139 @@ mod tests {
     }
 
     #[test]
-    fn pipeline_and_expert_axes_are_rejected() {
+    fn expert_axis_is_rejected_but_pipeline_is_lowered() {
+        // expert stays unsupported …
         let mut opts = MeshOptions::for_mesh(1, 2, 1);
-        opts.strategy.pipeline = 2;
-        assert!(MeshTrainer::new(mock(), opts).is_err());
+        opts.strategy.expert = 2;
+        let err = MeshTrainer::new(mock(), opts).unwrap_err();
+        assert!(format!("{err:#}").contains("expert"), "{err:#}");
+        // … pipeline is now a real fourth axis
+        let mesh = MeshTrainer::new(mock(), MeshOptions::for_mesh4(1, 2, 1, 1, 4)).unwrap();
+        assert_eq!(mesh.num_devices(), 2);
+        assert_eq!(mesh.pipeline_schedule().stages, 2);
+    }
+
+    #[test]
+    fn infeasible_pipeline_shapes_are_rejected_up_front() {
+        // fewer microbatches than stages
+        let err =
+            MeshTrainer::new(mock(), MeshOptions::for_mesh4(1, 4, 1, 1, 2)).unwrap_err();
+        assert!(format!("{err:#}").contains("microbatches"), "{err:#}");
+        // batch does not split into the microbatches (2×32 tokens, m=7)
+        let err =
+            MeshTrainer::new(mock(), MeshOptions::for_mesh4(1, 2, 1, 1, 7)).unwrap_err();
+        assert!(format!("{err:#}").contains("does not divide"), "{err:#}");
+    }
+
+    #[test]
+    fn pipelined_mesh_matches_single_device_bitwise() {
+        let mut single = mock();
+        single.init(5).unwrap();
+        let ls = run_steps(&mut *single, 11, 8);
+        let ref_state = state_bits(&*single);
+        for kind in [PipelineKind::GPipe, PipelineKind::OneFOneB] {
+            // pipeline-only …
+            let opts = MeshOptions::for_mesh4(1, 4, 1, 1, 8).with_schedule(kind);
+            let mut mesh = MeshTrainer::new(mock(), opts).unwrap();
+            mesh.init(5).unwrap();
+            assert_eq!(mesh.num_devices(), 4);
+            let lm = run_steps(&mut mesh, 11, 8);
+            assert_eq!(ls, lm, "{kind:?}: losses diverged");
+            assert_eq!(ref_state, state_bits(&mesh), "{kind:?}: state diverged");
+            assert!(mesh.collective_ops() > 0, "{kind:?}: the pipeline must communicate");
+            // … and pipeline × everything else
+            let opts = MeshOptions::for_mesh4(2, 2, 2, 2, 4).with_schedule(kind);
+            let mut mesh = MeshTrainer::new(mock(), opts).unwrap();
+            mesh.init(5).unwrap();
+            assert_eq!(mesh.num_devices(), 16);
+            let lm = run_steps(&mut mesh, 11, 8);
+            assert_eq!(ls, lm, "{kind:?}: 4-axis losses diverged");
+            assert_eq!(ref_state, state_bits(&mesh), "{kind:?}: 4-axis state diverged");
+        }
+    }
+
+    #[test]
+    fn pipeline_fault_corrupts_the_trajectory() {
+        // a bit flip on a stage-boundary link must change the numerics:
+        // the microbatch payloads genuinely travel the chain
+        let mut clean =
+            MeshTrainer::new(mock(), MeshOptions::for_mesh4(1, 2, 1, 1, 2)).unwrap();
+        clean.init(0).unwrap();
+        let clean_losses = run_steps(&mut clean, 3, 4);
+        let mut faulty = MeshTrainer::new(mock(), MeshOptions::for_mesh4(1, 2, 1, 1, 2))
+            .unwrap()
+            .with_fault(Box::new(|r, i, x| if r == 0 && i == 0 { x + 1.0 } else { x }));
+        faulty.init(0).unwrap();
+        let faulty_losses = run_steps(&mut faulty, 3, 4);
+        assert_ne!(clean_losses, faulty_losses, "p2p corruption must be visible");
+    }
+
+    #[test]
+    fn pipelined_lower_step_emits_stage_boundary_p2p() {
+        let mut mesh =
+            MeshTrainer::new(mock(), MeshOptions::for_mesh4(2, 2, 2, 1, 4)).unwrap();
+        mesh.init(0).unwrap();
+        let sched = mesh.lower_step().unwrap();
+        let p2p: Vec<&ScheduleEntry> = sched
+            .entries
+            .iter()
+            .filter(|e| e.axis == "pipeline")
+            .collect();
+        assert_eq!(p2p.len(), 2, "forward activations + backward grads: {sched:?}");
+        for e in &p2p {
+            assert_eq!(e.collective, crate::perfmodel::comms::Collective::P2P);
+            assert!(e.cost_s > 0.0 && e.bytes > 0.0);
+        }
+        // subgroup instances still tile the mesh exactly
+        for e in &sched.entries {
+            assert_eq!(e.group * e.count, 8, "{e:?}");
+        }
+        // the fsdp entries see per-stage payloads: the 64-element tensor
+        // splits into 2 stage slices of 32 f32s = 128 bytes each
+        let params = sched
+            .entries
+            .iter()
+            .find(|e| e.axis == "fsdp" && e.tensor == "params")
+            .unwrap();
+        assert_eq!(params.bytes, (64 / 2) as f64 * 4.0);
+    }
+
+    #[test]
+    fn mesh_with_pipeline_composes_from_config() {
+        use crate::config::registry::default_config;
+        use crate::config::Value;
+        let mut cfg = default_config("MeshTrainer").unwrap();
+        cfg.set("mesh_shape", Value::IntList(vec![1, 2, 2, 1])).unwrap();
+        cfg.set(
+            "mesh_axis_names",
+            Value::StrList(vec![
+                "data".into(),
+                "pipeline".into(),
+                "fsdp".into(),
+                "model".into(),
+            ]),
+        )
+        .unwrap();
+        cfg.set("microbatches", Value::Int(4)).unwrap();
+        cfg.set("pipeline_schedule", Value::Str("gpipe".into())).unwrap();
+        let mut mesh = mesh_from_config(&cfg).unwrap();
+        assert_eq!(mesh.num_devices(), 4);
+        assert_eq!(mesh.strategy().pipeline, 2);
+        assert_eq!(mesh.pipeline_schedule().kind, PipelineKind::GPipe);
+        assert!(mesh.descriptor().name.starts_with("mesh[1x2x2x1]:"));
+        mesh.init(9).unwrap();
+        let lm = run_steps(&mut mesh, 4, 5);
+        let mut single = mock();
+        single.init(9).unwrap();
+        let ls = run_steps(&mut *single, 4, 5);
+        assert_eq!(ls, lm, "config-built pipelined mesh must preserve the numerics");
+        // microbatches below the stage count floor at the stage count
+        cfg.set("microbatches", Value::Int(1)).unwrap();
+        let mesh = mesh_from_config(&cfg).unwrap();
+        assert_eq!(mesh.strategy().microbatches, 2);
+        // unknown schedule kinds are an error
+        cfg.set("pipeline_schedule", Value::Str("zigzag".into())).unwrap();
+        assert!(mesh_from_config(&cfg).is_err());
     }
 
     #[test]

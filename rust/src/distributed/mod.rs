@@ -16,12 +16,15 @@
 //! exercised by actual numerics.
 //!
 //! Mesh-sharded execution lives in [`mesh`]: a [`mesh::MeshTrainer`]
-//! partitions parameters/gradients/optimizer state over a DP×FSDP×TP
-//! device grid per the composer's sharding plan and lowers every step to
-//! an explicit [`crate::composer::CollectiveSchedule`] executed through
-//! [`SimCollective`] subgroups.  Because it is itself a `TrainBackend`,
-//! fleet replicas compose with meshes: DP across the fleet, FSDP×TP
-//! inside each replica, with recovery unchanged (see `docs/sharding.md`).
+//! partitions parameters/gradients/optimizer state over a
+//! DP×PP×FSDP×TP device grid per the composer's sharding plan (layers
+//! across pipeline stages) and lowers every step to an explicit
+//! [`crate::composer::CollectiveSchedule`] executed through
+//! [`SimCollective`] subgroups — microbatch stage-boundary transfers
+//! included, in [`crate::composer::PipelineSchedule`] order.  Because
+//! it is itself a `TrainBackend`, fleet replicas compose with meshes:
+//! DP across the fleet, PP/FSDP/TP inside each replica, with recovery
+//! unchanged (see `docs/sharding.md` and `docs/pipeline.md`).
 
 pub mod cluster;
 pub mod collective;

@@ -38,11 +38,12 @@
 //! * [`trainer::backend::TrainBackend`] is the training twin —
 //!   init/step/eval/state ops over PJRT sessions or a deterministic
 //!   mock.  The trainer loop, the data-parallel trainer, the
-//!   [`distributed::mesh::MeshTrainer`] (DP×FSDP×TP over explicit
-//!   [`composer::CollectiveSchedule`]s — and itself a `TrainBackend`,
-//!   so meshes nest inside fleets), and the fault-tolerant
+//!   [`distributed::mesh::MeshTrainer`] (DP×PP×FSDP×TP over explicit
+//!   [`composer::CollectiveSchedule`]s and GPipe/1F1B microbatch
+//!   grids — and itself a `TrainBackend`, so meshes nest inside
+//!   fleets), and the fault-tolerant
 //!   [`distributed::fleet::FleetTrainer`] are policies over it
-//!   (`docs/training.md`, `docs/sharding.md`).
+//!   (`docs/training.md`, `docs/sharding.md`, `docs/pipeline.md`).
 //!
 //! Python never runs on the request path: artifact generation
 //! (`python/compile/aot.py`) is build-time only; everything here

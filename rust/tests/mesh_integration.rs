@@ -3,18 +3,22 @@
 //!
 //! The headline assertion (the paper's "global computation over a device
 //! mesh" made checkable): for a fixed 8-device budget, **every** mesh
-//! factorization `data × fsdp × model` of the mock backend produces
-//! final parameters bit-identical to the 1-device run on the same seed
-//! — the collectives (FSDP gathers, reduce-scatters, TP loss
-//! reductions, DP syncs) genuinely execute over `SimCollective`
-//! subgroups, and binary-tree reduction makes the power-of-two means
-//! exact.  And because a `MeshTrainer` is itself a `TrainBackend`, a
-//! fleet of mesh-sharded replicas recovers through a `HostCrash` with
-//! the unchanged multi-tier/hot-swap machinery.
+//! factorization — all ten over `data × fsdp × model`, and all twenty
+//! over `data × pipeline × fsdp × model` under both GPipe and 1F1B —
+//! of the mock backend produces final parameters bit-identical to the
+//! 1-device run on the same seed.  The collectives (FSDP gathers,
+//! reduce-scatters, TP loss reductions, DP syncs, pipeline
+//! stage-boundary sends/recvs) genuinely execute over `SimCollective`
+//! subgroups; binary-tree reduction makes the power-of-two means and
+//! microbatch accumulations exact.  And because a `MeshTrainer` is
+//! itself a `TrainBackend`, a fleet of mesh-sharded replicas —
+//! pipelined included — recovers through a `HostCrash` with the
+//! unchanged multi-tier/hot-swap machinery.
 
 use std::path::PathBuf;
 
 use axlearn::checkpoint::multi_tier::Tier;
+use axlearn::composer::PipelineKind;
 use axlearn::distributed::failure::FailureKind;
 use axlearn::distributed::fleet::{FleetOptions, FleetTrainer, InjectedFailure};
 use axlearn::distributed::mesh::{MeshOptions, MeshTrainer};
@@ -65,6 +69,20 @@ fn factorizations(n: usize) -> Vec<(usize, usize, usize)> {
     out
 }
 
+/// All (data, pipeline, fsdp, model) factorizations of `n`.
+fn factorizations4(n: usize) -> Vec<(usize, usize, usize, usize)> {
+    let mut out = Vec::new();
+    for d in 1..=n {
+        if n % d != 0 {
+            continue;
+        }
+        for (p, f, m) in factorizations(n / d) {
+            out.push((d, p, f, m));
+        }
+    }
+    out
+}
+
 #[test]
 fn every_8_device_factorization_is_bit_identical_to_single_device() {
     const SEED: i32 = 7;
@@ -98,6 +116,57 @@ fn every_8_device_factorization_is_bit_identical_to_single_device() {
         let sched = mesh.lower_step().unwrap();
         assert!(!sched.entries.is_empty(), "mesh {d}x{f}x{m} lowered an empty schedule");
         assert!(sched.total_comm_s() > 0.0);
+    }
+}
+
+#[test]
+fn every_4_axis_factorization_is_bit_identical_under_both_pipeline_schedules() {
+    const SEED: i32 = 7;
+    const CORPUS: u64 = 13;
+    const STEPS: usize = 8;
+    // 8 microbatches: a power of two >= every stage count below, so the
+    // stage-0 loss accumulation tree is exact
+    const MICRO: usize = 8;
+
+    let mut single = mock();
+    single.init(SEED).unwrap();
+    let ref_losses = run(&mut *single, CORPUS, STEPS);
+    let ref_state = state_bits(&single.state_to_host().unwrap());
+
+    let meshes = factorizations4(8);
+    assert_eq!(meshes.len(), 20, "{meshes:?}"); // 8=2^3 into 4 ordered factors
+    for (d, p, f, m) in meshes {
+        for kind in [PipelineKind::GPipe, PipelineKind::OneFOneB] {
+            let opts = MeshOptions::for_mesh4(d, p, f, m, MICRO).with_schedule(kind);
+            let mut mesh = MeshTrainer::new(mock(), opts).unwrap();
+            mesh.init(SEED).unwrap();
+            assert_eq!(mesh.num_devices(), 8);
+            let losses = run(&mut mesh, CORPUS, STEPS);
+            assert_eq!(
+                losses, ref_losses,
+                "mesh {d}x{p}x{f}x{m} ({kind:?}): per-step losses diverged"
+            );
+            assert_eq!(
+                state_bits(&mesh.state_to_host().unwrap()),
+                ref_state,
+                "mesh {d}x{p}x{f}x{m} ({kind:?}): final params diverged"
+            );
+            // not vacuous: every non-trivial mesh really communicates —
+            // pipeline-only meshes through stage-boundary p2p alone
+            assert!(mesh.collective_ops() > 0, "mesh {d}x{p}x{f}x{m} ran no collectives");
+            let sched = mesh.lower_step().unwrap();
+            assert!(!sched.entries.is_empty(), "mesh {d}x{p}x{f}x{m}: empty schedule");
+            assert!(sched.total_comm_s() > 0.0);
+            if p > 1 {
+                assert!(
+                    sched.entries.iter().any(|e| e.axis == "pipeline"),
+                    "pipelined mesh must emit p2p entries"
+                );
+                // the analytic bubble annotation matches the grid
+                let pipe = mesh.pipeline_schedule();
+                assert_eq!(pipe.bubble_fraction(), mesh.strategy().pipeline_bubble());
+            }
+        }
     }
 }
 
@@ -209,6 +278,70 @@ fn mesh_sharded_fleet_recovers_through_host_crash() {
         state_bits(&out_b.final_state),
         state_bits(&out_c.final_state),
         "mesh-sharded replicas changed the fleet numerics"
+    );
+}
+
+fn pipelined_mesh_workers(n: usize) -> Vec<Box<dyn TrainBackend>> {
+    // fleet provides the data axis; each replica is a 2-stage pipeline
+    // with FSDP inside each stage, on a 1F1B microbatch schedule
+    (0..n)
+        .map(|_| {
+            Box::new(
+                MeshTrainer::new(
+                    mock(),
+                    MeshOptions::for_mesh4(1, 2, 2, 1, 4)
+                        .with_schedule(PipelineKind::OneFOneB),
+                )
+                .unwrap(),
+            ) as Box<dyn TrainBackend>
+        })
+        .collect()
+}
+
+#[test]
+fn pipelined_fleet_recovers_through_host_crash() {
+    // a fleet of pipelined mesh replicas loses replica 0's host mid-run,
+    // taking the local checkpoint tier with it
+    let (la, ra) = dirs("pp_crash");
+    let mut a = FleetTrainer::new(
+        pipelined_mesh_workers(3),
+        FleetOptions {
+            injected: vec![InjectedFailure {
+                at_step: 18,
+                replica: 0,
+                kind: FailureKind::HostCrash,
+            }],
+            ..fleet_opts(la, ra)
+        },
+    )
+    .unwrap();
+    let out_a = a.run().unwrap();
+    assert_eq!(out_a.final_step, 24);
+    assert_eq!(out_a.hot_swaps, 1);
+    assert_eq!(out_a.restores, vec![(16, Tier::Remote)]);
+    assert_eq!(out_a.replica_divergence, 0.0);
+
+    // the recovered run replays onto the failure-free pipelined
+    // trajectory, which in turn matches a plain (non-mesh) fleet
+    let (lb, rb) = dirs("pp_clean");
+    let out_b = FleetTrainer::new(pipelined_mesh_workers(3), fleet_opts(lb, rb))
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(
+        state_bits(&out_a.final_state),
+        state_bits(&out_b.final_state),
+        "recovery must replay onto the failure-free trajectory"
+    );
+    let (lc, rc) = dirs("pp_plain");
+    let out_c = FleetTrainer::new(plain_workers(3), fleet_opts(lc, rc))
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(
+        state_bits(&out_b.final_state),
+        state_bits(&out_c.final_state),
+        "pipelined replicas changed the fleet numerics"
     );
 }
 
