@@ -1,199 +1,102 @@
 //! Bench: step time vs mesh shape — the composer's collective schedule
-//! plus the analytic step estimator, swept over 4-axis factorizations
-//! (data × pipeline × fsdp × model) of a fixed 256-chip budget for a 7B
-//! model on H100s.  Pure cost-model arithmetic (no artifacts, no
-//! accelerator); emits JSON.
+//! plus the analytic step estimator, swept over 5-axis factorizations
+//! (data × pipeline × fsdp × model × expert) of a fixed 256-chip budget
+//! for a 7B model (and its 8-expert MoE variant) on H100s.  Pure
+//! cost-model arithmetic (no artifacts, no accelerator); emits JSON, and
+//! writes it to `$BENCH_JSON_DIR/bench_mesh.json` when that variable is
+//! set (the CI bench-regression gate consumes the file — see
+//! `rust/src/bin/bench_check.rs` and `benches/baseline.json`).
 //!
 //! The table tells the §3 story end to end: pure data parallelism OOMs
 //! (nothing shards the optimizer state), FSDP makes it fit, tensor
 //! parallelism buys memory headroom at the price of exposed activation
 //! reductions on the critical path, pipeline stages trade stage-boundary
 //! p2p traffic plus a bubble (annotated straight off the 1F1B microbatch
-//! grid, `(S-1)/(S-1+m)`) for another sharding axis, and the balanced
-//! meshes win.
+//! grid, `(S-1)/(S-1+m)`), expert parallelism adds MoE token-dispatch
+//! all-to-alls whose cost is asserted bit-identical to the analytic
+//! estimator formula, and the balanced meshes win.
+//!
+//! The sweep itself lives in `axlearn::composer::mesh_sweep` so this
+//! bench, the CI checker, and the tier-1 gate test can never disagree
+//! about what is being measured.
 
-use axlearn::composer::{build_schedule, CollectiveSchedule, PipelineSchedule};
-use axlearn::perfmodel::chips;
-use axlearn::perfmodel::estimator::{estimate_step, StepSpec, SystemProfile};
-use axlearn::perfmodel::{Strategy, TransformerShape};
-use axlearn::util::json::Json;
-
-const CHIPS: usize = 256;
-const GLOBAL_BATCH: usize = 1024;
-const SEQ: usize = 4096;
-/// Microbatches for the pipelined shapes (1F1B).
-const MICROBATCHES: usize = 16;
-
-fn strategy(data: usize, pipeline: usize, fsdp: usize, tensor: usize) -> Strategy {
-    Strategy {
-        data,
-        fsdp,
-        tensor,
-        pipeline,
-        microbatches: if pipeline > 1 { MICROBATCHES } else { 1 },
-        ..Strategy::default()
-    }
-}
+use axlearn::composer::{mesh_sweep_doc, mesh_sweep_points};
 
 fn main() {
+    let points = mesh_sweep_points();
     println!(
-        "=== Mesh shapes: step time vs data×pipeline×fsdp×model on {CHIPS} H100s (llama2-7b) ===\n"
+        "=== Mesh shapes: step time vs data×pipeline×fsdp×model×expert on 256 H100s \
+         (llama2-7b / moe8) ===\n"
     );
-    let chip = chips::h100();
-    let shape = TransformerShape::llama2_7b();
-    let profile = SystemProfile::axlearn();
-    let shard_axes = vec!["fsdp".to_string(), "model".to_string()];
-
-    let meshes: [(usize, usize, usize, usize); 11] = [
-        (256, 1, 1, 1), // pure DP: must OOM (14 bytes/param unsharded)
-        (32, 1, 8, 1),
-        (8, 1, 32, 1),
-        (4, 1, 64, 1),
-        (1, 1, 256, 1), // pure FSDP
-        (8, 1, 16, 2),
-        (4, 1, 8, 8),
-        (1, 1, 32, 8), // TP-heavy
-        (1, 4, 64, 1), // pipeline × FSDP
-        (4, 8, 8, 1),  // pipeline-heavy
-        (1, 4, 8, 8),  // pipeline × FSDP × TP
-    ];
-
     println!(
-        "{:>14} {:>10} {:>10} {:>10} {:>8} {:>10} {:>8}",
-        "mesh(dxpxfxm)", "compute_s", "comm_s", "exposed_s", "bubble", "step_s", "fits"
+        "{:>16} {:>10} {:>10} {:>10} {:>10} {:>8} {:>10} {:>8}",
+        "mesh(dxpxfxmxe)", "compute_s", "comm_s", "exposed_s", "a2a_s", "bubble", "step_s", "fits"
     );
-    let mut points = Vec::new();
-    let mut feasible: Vec<(String, f64, CollectiveSchedule)> = Vec::new();
-    for (d, p, f, m) in meshes {
-        assert_eq!(d * p * f * m, CHIPS, "factorization must use the full budget");
-        let strat = strategy(d, p, f, m);
-        let sched =
-            build_schedule(&strat, &shape, &shard_axes, GLOBAL_BATCH, SEQ, &chip.interconnect);
-        // the schedule's own microbatch grid: its bubble fraction must
-        // reproduce the analytic (S-1)/(S-1+m) annotation bit-for-bit
-        let pipe = PipelineSchedule::one_f_one_b(strat.pipeline, strat.microbatches.max(1))
-            .expect("pipelined shapes are feasible");
-        assert_eq!(
-            pipe.bubble_fraction(),
-            strat.pipeline_bubble(),
-            "grid bubble must match the analytic annotation for {d}x{p}x{f}x{m}"
-        );
-        let bubble = pipe.bubble_fraction();
-        let spec = StepSpec {
-            shape: shape.clone(),
-            strategy: strat,
-            global_batch: GLOBAL_BATCH,
-            seq_len: SEQ,
-            quantization: "none".into(),
-            remat_policy: "auto".into(),
-        };
-        let name = format!("{d}x{p}x{f}x{m}");
-        match estimate_step(&spec, &chip, &profile) {
-            Ok(est) => {
-                // overlap-aware composition: compute hides the
-                // overlappable entries, exposed entries stack on top,
-                // and the pipeline bubble stretches the whole step
-                let step_s = sched.step_time_s(est.compute_s) / (1.0 - bubble);
-                println!(
-                    "{:>14} {:>10.4} {:>10.4} {:>10.4} {:>8.4} {:>10.4} {:>8}",
-                    name,
-                    est.compute_s,
-                    sched.total_comm_s(),
-                    sched.exposed_comm_s(),
-                    bubble,
-                    step_s,
-                    "yes"
-                );
-                points.push(Json::obj(vec![
-                    ("mesh", Json::str(name.clone())),
-                    ("data", Json::num(d as f64)),
-                    ("pipeline", Json::num(p as f64)),
-                    ("fsdp", Json::num(f as f64)),
-                    ("model", Json::num(m as f64)),
-                    ("microbatches", Json::num(pipe.microbatches as f64)),
-                    ("bubble", Json::num(bubble)),
-                    ("fits", Json::Bool(true)),
-                    ("compute_s", Json::num(est.compute_s)),
-                    ("comm_s", Json::num(sched.total_comm_s())),
-                    ("exposed_comm_s", Json::num(sched.exposed_comm_s())),
-                    ("step_s", Json::num(step_s)),
-                    ("schedule_entries", Json::num(sched.entries.len() as f64)),
-                ]));
-                feasible.push((name, step_s, sched));
-            }
-            Err(err) => {
-                let msg = format!("{err:#}");
-                assert!(msg.contains("OOM"), "only OOM is acceptable here: {msg}");
-                println!(
-                    "{:>14} {:>10} {:>10.4} {:>10.4} {:>8.4} {:>10} {:>8}",
-                    name,
-                    "-",
-                    sched.total_comm_s(),
-                    sched.exposed_comm_s(),
-                    bubble,
-                    "-",
-                    "OOM"
-                );
-                points.push(Json::obj(vec![
-                    ("mesh", Json::str(name)),
-                    ("data", Json::num(d as f64)),
-                    ("pipeline", Json::num(p as f64)),
-                    ("fsdp", Json::num(f as f64)),
-                    ("model", Json::num(m as f64)),
-                    ("microbatches", Json::num(pipe.microbatches as f64)),
-                    ("bubble", Json::num(bubble)),
-                    ("fits", Json::Bool(false)),
-                    ("comm_s", Json::num(sched.total_comm_s())),
-                    ("schedule_entries", Json::num(sched.entries.len() as f64)),
-                ]));
-            }
+    for p in &points {
+        if p.fits {
+            println!(
+                "{:>16} {:>10.4} {:>10.4} {:>10.4} {:>10.4} {:>8.4} {:>10.4} {:>8}",
+                p.mesh, p.compute_s, p.comm_s, p.exposed_comm_s, p.alltoall_s, p.bubble,
+                p.step_s, "yes"
+            );
+        } else {
+            println!(
+                "{:>16} {:>10} {:>10.4} {:>10.4} {:>10.4} {:>8.4} {:>10} {:>8}",
+                p.mesh, "-", p.comm_s, p.exposed_comm_s, p.alltoall_s, p.bubble, "-", "OOM"
+            );
         }
     }
 
     // sanity: the sweep is informative
-    assert!(feasible.len() >= 6, "most sharded meshes must fit");
+    let feasible: Vec<_> = points.iter().filter(|p| p.fits).collect();
+    assert!(feasible.len() >= 9, "most sharded meshes must fit");
     assert!(
-        feasible.len() < meshes.len(),
+        feasible.len() < points.len(),
         "pure DP of a 7B model must OOM — the schedule exists to avoid exactly this"
     );
     let best = feasible
         .iter()
-        .min_by(|a, b| a.1.total_cmp(&b.1))
+        .min_by(|a, b| a.step_s.total_cmp(&b.step_s))
         .expect("at least one feasible mesh");
-    println!("\nbest mesh: {} ({:.4}s/step)", best.0, best.1);
+    println!("\nbest mesh: {} ({:.4}s/step)", best.mesh, best.step_s);
+
     // TP pays exposed activation reductions; FSDP-only (pipelined or
     // not) does not
     let tp_exposed = feasible
         .iter()
-        .filter(|(n, _, _)| n.ends_with("x8"))
-        .map(|(_, _, s)| s.exposed_comm_s())
+        .filter(|p| p.model > 1)
+        .map(|p| p.exposed_comm_s)
         .fold(0.0f64, f64::max);
     let fsdp_exposed = feasible
         .iter()
-        .filter(|(n, _, _)| n.ends_with("x1"))
-        .map(|(_, _, s)| s.exposed_comm_s())
+        .filter(|p| p.model == 1)
+        .map(|p| p.exposed_comm_s)
         .fold(0.0f64, f64::max);
     assert!(
         tp_exposed > fsdp_exposed,
         "TP meshes must expose activation reductions ({tp_exposed} vs {fsdp_exposed})"
     );
-    // pipelined shapes carry stage-boundary p2p entries in the schedule
-    for (n, _, s) in &feasible {
-        let has_p2p = s.entries.iter().any(|e| e.axis == "pipeline");
-        let piped = n.split('x').nth(1).unwrap() != "1";
-        assert_eq!(piped, has_p2p, "p2p entries must track the pipeline axis ({n})");
+    // pipelined shapes carry their bubble; expert shapes carry AllToAll
+    // entries whose summed cost is the analytic estimator value, exactly
+    for p in &points {
+        assert_eq!(p.bubble > 0.0, p.pipeline > 1, "bubble must track the pipeline axis ({})", p.mesh);
+        assert_eq!(p.alltoall_s > 0.0, p.expert > 1, "AllToAll must track the expert axis ({})", p.mesh);
+        if p.expert > 1 {
+            assert_eq!(
+                p.alltoall_s, p.alltoall_analytic_s,
+                "{}: schedule AllToAll cost must equal the estimator's tok_bytes formula",
+                p.mesh
+            );
+        }
     }
 
-    let doc = Json::obj(vec![
-        ("bench", Json::str("mesh_step_time")),
-        ("chip", Json::str(chip.name)),
-        ("chips", Json::num(CHIPS as f64)),
-        ("model", Json::str("llama2_7b")),
-        ("global_batch", Json::num(GLOBAL_BATCH as f64)),
-        ("seq_len", Json::num(SEQ as f64)),
-        ("microbatches", Json::num(MICROBATCHES as f64)),
-        ("best_mesh", Json::str(best.0.clone())),
-        ("points", Json::Arr(points)),
-    ]);
-    println!("\nJSON: {}", doc.to_string());
+    let doc = mesh_sweep_doc(&points);
+    let text = doc.to_string();
+    println!("\nJSON: {text}");
+    if let Ok(dir) = std::env::var("BENCH_JSON_DIR") {
+        let path = std::path::Path::new(&dir).join("bench_mesh.json");
+        std::fs::create_dir_all(&dir).expect("create BENCH_JSON_DIR");
+        std::fs::write(&path, &text).expect("write bench_mesh.json");
+        println!("wrote {}", path.display());
+    }
 }

@@ -1,0 +1,128 @@
+//! CI bench-regression gate: recompute the deterministic mesh sweep and
+//! compare it against the committed `benches/baseline.json` — exit
+//! nonzero when simulated step-time / bubble / AllToAll cost drifts
+//! beyond the tolerance, so cost-model regressions fail the `bench` job
+//! instead of landing silently.
+//!
+//! ```text
+//! bench_check [--baseline <path>] [--json <bench_mesh.json>] [--tol <rel>] [--write]
+//! ```
+//!
+//! * `--baseline` — baseline document (default `benches/baseline.json`
+//!   under the repo root).
+//! * `--json` — additionally verify an emitted bench artifact (the file
+//!   `bench_mesh` writes under `$BENCH_JSON_DIR`) against the same
+//!   recomputed points, guarding the bench's own output path.
+//! * `--tol` — relative drift tolerance (default
+//!   [`axlearn::composer::BASELINE_DEFAULT_TOL`]).
+//! * `--write` — (re)generate the baseline from the current sweep
+//!   instead of checking, for deliberate, reviewed model changes.
+//!
+//! The comparison logic lives in `axlearn::composer::mesh_sweep`; the
+//! tier-1 test `rust/tests/bench_gate.rs` proves it catches injected
+//! regressions.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use axlearn::composer::{
+    compare_to_baseline, mesh_sweep_doc, mesh_sweep_points, BASELINE_DEFAULT_TOL,
+};
+use axlearn::util::json::Json;
+
+fn usage() -> ExitCode {
+    eprintln!("usage: bench_check [--baseline <path>] [--json <path>] [--tol <rel>] [--write]");
+    ExitCode::from(2)
+}
+
+fn main() -> ExitCode {
+    let mut baseline_path: PathBuf = axlearn::repo_root().join("benches/baseline.json");
+    let mut bench_json: Option<PathBuf> = None;
+    let mut tol = BASELINE_DEFAULT_TOL;
+    let mut write = false;
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--baseline" => match args.next() {
+                Some(p) => baseline_path = PathBuf::from(p),
+                None => return usage(),
+            },
+            "--json" => match args.next() {
+                Some(p) => bench_json = Some(PathBuf::from(p)),
+                None => return usage(),
+            },
+            "--tol" => match args.next().and_then(|t| t.parse::<f64>().ok()) {
+                Some(t) if t > 0.0 => tol = t,
+                _ => return usage(),
+            },
+            "--write" => write = true,
+            _ => return usage(),
+        }
+    }
+
+    let points = mesh_sweep_points();
+    if write {
+        let text = mesh_sweep_doc(&points).to_string();
+        if let Err(e) = std::fs::write(&baseline_path, text + "\n") {
+            eprintln!("bench_check: writing {}: {e}", baseline_path.display());
+            return ExitCode::from(2);
+        }
+        println!(
+            "bench_check: wrote {} ({} points) — commit it with the change that moved the numbers",
+            baseline_path.display(),
+            points.len()
+        );
+        return ExitCode::SUCCESS;
+    }
+
+    let mut failed = false;
+    for (label, path) in std::iter::once(("baseline", baseline_path.clone()))
+        .chain(bench_json.into_iter().map(|p| ("bench artifact", p)))
+    {
+        let text = match std::fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("bench_check: reading {label} {}: {e}", path.display());
+                eprintln!("  (generate the baseline with `bench_check --write`)");
+                failed = true;
+                continue;
+            }
+        };
+        let doc = match Json::parse(&text) {
+            Ok(d) => d,
+            Err(e) => {
+                eprintln!("bench_check: parsing {label} {}: {e}", path.display());
+                failed = true;
+                continue;
+            }
+        };
+        let drifts = compare_to_baseline(&points, &doc, tol);
+        if drifts.is_empty() {
+            println!(
+                "bench_check: {label} {} OK ({} points within {:.3}% relative)",
+                path.display(),
+                points.len(),
+                tol * 100.0
+            );
+        } else {
+            eprintln!(
+                "bench_check: {label} {} DRIFTED ({} findings):",
+                path.display(),
+                drifts.len()
+            );
+            for d in &drifts {
+                eprintln!("  {d}");
+            }
+            eprintln!(
+                "  intentional model change? regenerate with `bench_check --write` and \
+                 commit the reviewed baseline diff"
+            );
+            failed = true;
+        }
+    }
+    if failed {
+        ExitCode::FAILURE
+    } else {
+        ExitCode::SUCCESS
+    }
+}

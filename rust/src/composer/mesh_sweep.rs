@@ -1,0 +1,393 @@
+//! The canonical mesh-shape sweep behind `benches/bench_mesh.rs` and the
+//! CI bench-regression gate.
+//!
+//! One function ([`mesh_sweep_points`]) computes the
+//! step-time-vs-mesh-shape table — every 5-axis `data × pipeline × fsdp
+//! × model × expert` factorization the bench reports for a fixed
+//! 256-chip H100 budget, with the collective schedule's comm costs, the
+//! pipeline bubble, and the MoE AllToAll dispatch cost per point.  Three
+//! consumers share it, which is the point:
+//!
+//! * `rust/benches/bench_mesh.rs` prints the table and emits the JSON
+//!   artifact;
+//! * `rust/src/bin/bench_check.rs` recomputes the points and fails CI
+//!   when they drift from the committed `benches/baseline.json` beyond a
+//!   tolerance;
+//! * `rust/tests/bench_gate.rs` proves the comparison mechanism catches
+//!   injected regressions, in tier-1.
+//!
+//! Everything here is pure f64 cost-model arithmetic — deterministic
+//! across runs, so the gate's tolerance only has to absorb genuine
+//! model changes, never noise.
+
+use crate::perfmodel::chips;
+use crate::perfmodel::comms::Collective;
+use crate::perfmodel::estimator::{estimate_step, StepSpec, SystemProfile};
+use crate::perfmodel::{Strategy, TransformerShape};
+use crate::util::json::Json;
+
+use super::schedule::{build_schedule, PipelineSchedule};
+
+/// Chip budget every factorization must use exactly.
+pub const SWEEP_CHIPS: usize = 256;
+/// Global batch (sequences) of the swept workload.
+pub const SWEEP_GLOBAL_BATCH: usize = 1024;
+/// Sequence length of the swept workload.
+pub const SWEEP_SEQ: usize = 4096;
+/// Microbatches for the pipelined shapes (1F1B).
+pub const SWEEP_MICROBATCHES: usize = 16;
+
+/// One mesh shape's worth of sweep output.
+#[derive(Clone, Debug)]
+pub struct MeshSweepPoint {
+    /// `"dxpxfxmxe"` — the gate's join key.
+    pub mesh: String,
+    pub data: usize,
+    pub pipeline: usize,
+    pub fsdp: usize,
+    pub model: usize,
+    pub expert: usize,
+    pub microbatches: usize,
+    /// Whether the point ran the MoE model variant (every `expert > 1`
+    /// shape does).
+    pub moe: bool,
+    /// Whether the plan fit in HBM (`false` = the estimator's OOM row).
+    pub fits: bool,
+    /// Pipeline bubble fraction off the 1F1B slot grid.
+    pub bubble: f64,
+    /// Roofline compute estimate (0 when OOM).
+    pub compute_s: f64,
+    /// Schedule totals over the H100 interconnect.
+    pub comm_s: f64,
+    pub exposed_comm_s: f64,
+    /// Summed cost of the schedule's `AllToAll` entries (0 without an
+    /// expert axis).
+    pub alltoall_s: f64,
+    /// The estimator's analytic expert-dispatch cost
+    /// (`4 · layers_resident · hierarchical(AllToAll, tok_bytes, e)`);
+    /// the bench asserts `alltoall_s` equals this exactly.
+    pub alltoall_analytic_s: f64,
+    /// Composed step time (0 when OOM).
+    pub step_s: f64,
+    pub schedule_entries: usize,
+}
+
+/// The swept factorizations: `(data, pipeline, fsdp, model, expert)`,
+/// each multiplying out to [`SWEEP_CHIPS`].  Dense rows tell the §3
+/// story (pure DP OOMs, FSDP fits, TP pays exposed reductions, pipeline
+/// trades a bubble); the `expert > 1` rows run the MoE variant and
+/// exercise the AllToAll dispatch cost.
+pub const SWEEP_MESHES: [(usize, usize, usize, usize, usize); 14] = [
+    (256, 1, 1, 1, 1), // pure DP: must OOM (14 bytes/param unsharded)
+    (32, 1, 8, 1, 1),
+    (8, 1, 32, 1, 1),
+    (4, 1, 64, 1, 1),
+    (1, 1, 256, 1, 1), // pure FSDP
+    (8, 1, 16, 2, 1),
+    (4, 1, 8, 8, 1),
+    (1, 1, 32, 8, 1), // TP-heavy
+    (1, 4, 64, 1, 1), // pipeline × FSDP
+    (4, 8, 8, 1, 1),  // pipeline-heavy
+    (1, 4, 8, 8, 1),  // pipeline × FSDP × TP
+    (4, 1, 8, 1, 8),  // DP × FSDP × EP (MoE)
+    (1, 1, 32, 1, 8), // FSDP × EP (MoE)
+    (1, 4, 8, 1, 8),  // PP × FSDP × EP (MoE)
+];
+
+/// The dense model of the sweep (Table-3 row 1).
+pub fn sweep_shape_dense() -> TransformerShape {
+    TransformerShape::llama2_7b()
+}
+
+/// The MoE variant the `expert > 1` rows run: the same backbone with an
+/// 8-expert top-2 FFN bank (one expert per rank at `expert = 8`).
+pub fn sweep_shape_moe() -> TransformerShape {
+    let mut s = sweep_shape_dense();
+    s.name = "Llama2-7B-MoE8".into();
+    s.num_experts = 8;
+    s.active_experts = 2;
+    s
+}
+
+/// Compute the full sweep.  Panics on an estimator error that is not an
+/// OOM row — in this table only OOM is a legitimate infeasibility.
+pub fn mesh_sweep_points() -> Vec<MeshSweepPoint> {
+    let chip = chips::h100();
+    let profile = SystemProfile::axlearn();
+    let shard_axes = vec!["fsdp".to_string(), "model".to_string()];
+    let mut points = Vec::with_capacity(SWEEP_MESHES.len());
+    for (d, p, f, m, e) in SWEEP_MESHES {
+        assert_eq!(d * p * f * m * e, SWEEP_CHIPS, "factorization must use the full budget");
+        let shape = if e > 1 { sweep_shape_moe() } else { sweep_shape_dense() };
+        let strat = Strategy {
+            data: d,
+            fsdp: f,
+            tensor: m,
+            pipeline: p,
+            expert: e,
+            microbatches: if p > 1 { SWEEP_MICROBATCHES } else { 1 },
+        };
+        let sched = build_schedule(
+            &strat,
+            &shape,
+            &shard_axes,
+            SWEEP_GLOBAL_BATCH,
+            SWEEP_SEQ,
+            &chip.interconnect,
+        );
+        let pipe = PipelineSchedule::one_f_one_b(strat.pipeline, strat.microbatches.max(1))
+            .expect("pipelined sweep shapes are feasible");
+        let bubble = pipe.bubble_fraction();
+        let alltoall_s: f64 = sched
+            .entries
+            .iter()
+            .filter(|en| en.collective == Collective::AllToAll)
+            .map(|en| en.cost_s)
+            .sum();
+        // the estimator's expert-dispatch cost, via the same shared
+        // helpers `estimate_step` and `build_schedule` both call — the
+        // schedule's AllToAll entries must sum to this bit-for-bit
+        let alltoall_analytic_s = if e > 1 {
+            let tok_bytes = crate::perfmodel::comms::expert_tok_bytes(
+                SWEEP_GLOBAL_BATCH,
+                SWEEP_SEQ,
+                strat.data * strat.fsdp,
+                shape.model_dim,
+            );
+            let layers_resident = shape.num_layers as f64 / p as f64;
+            crate::perfmodel::comms::expert_alltoall_cost(
+                tok_bytes,
+                layers_resident,
+                e,
+                &chip.interconnect,
+            )
+        } else {
+            0.0
+        };
+        let spec = StepSpec {
+            shape: shape.clone(),
+            strategy: strat,
+            global_batch: SWEEP_GLOBAL_BATCH,
+            seq_len: SWEEP_SEQ,
+            quantization: "none".into(),
+            remat_policy: "auto".into(),
+        };
+        let mesh = format!("{d}x{p}x{f}x{m}x{e}");
+        let (fits, compute_s, step_s) = match estimate_step(&spec, &chip, &profile) {
+            Ok(est) => {
+                // overlap-aware composition: compute hides the
+                // overlappable entries, exposed entries stack on top,
+                // and the pipeline bubble stretches the whole step
+                let step_s = sched.step_time_s(est.compute_s) / (1.0 - bubble);
+                (true, est.compute_s, step_s)
+            }
+            Err(err) => {
+                let msg = format!("{err:#}");
+                assert!(msg.contains("OOM"), "only OOM is acceptable here ({mesh}): {msg}");
+                (false, 0.0, 0.0)
+            }
+        };
+        points.push(MeshSweepPoint {
+            mesh,
+            data: d,
+            pipeline: p,
+            fsdp: f,
+            model: m,
+            expert: e,
+            microbatches: pipe.microbatches,
+            moe: e > 1,
+            fits,
+            bubble,
+            compute_s,
+            comm_s: sched.total_comm_s(),
+            exposed_comm_s: sched.exposed_comm_s(),
+            alltoall_s,
+            alltoall_analytic_s,
+            step_s,
+            schedule_entries: sched.entries.len(),
+        });
+    }
+    points
+}
+
+/// The bench/baseline JSON document for a computed sweep (the same
+/// format `bench_mesh` prints and `benches/baseline.json` commits).
+pub fn mesh_sweep_doc(points: &[MeshSweepPoint]) -> Json {
+    let best = points
+        .iter()
+        .filter(|p| p.fits)
+        .min_by(|a, b| a.step_s.total_cmp(&b.step_s))
+        .expect("at least one feasible mesh");
+    Json::obj(vec![
+        ("bench", Json::str("mesh_step_time")),
+        ("chip", Json::str("H100")),
+        ("chips", Json::num(SWEEP_CHIPS as f64)),
+        ("model", Json::str(sweep_shape_dense().name)),
+        ("moe_model", Json::str(sweep_shape_moe().name)),
+        ("global_batch", Json::num(SWEEP_GLOBAL_BATCH as f64)),
+        ("seq_len", Json::num(SWEEP_SEQ as f64)),
+        ("microbatches", Json::num(SWEEP_MICROBATCHES as f64)),
+        ("best_mesh", Json::str(best.mesh.clone())),
+        (
+            "points",
+            Json::Arr(
+                points
+                    .iter()
+                    .map(|p| {
+                        Json::obj(vec![
+                            ("mesh", Json::str(p.mesh.clone())),
+                            ("data", Json::num(p.data as f64)),
+                            ("pipeline", Json::num(p.pipeline as f64)),
+                            ("fsdp", Json::num(p.fsdp as f64)),
+                            ("model", Json::num(p.model as f64)),
+                            ("expert", Json::num(p.expert as f64)),
+                            ("microbatches", Json::num(p.microbatches as f64)),
+                            ("moe", Json::Bool(p.moe)),
+                            ("fits", Json::Bool(p.fits)),
+                            ("bubble", Json::num(p.bubble)),
+                            ("compute_s", Json::num(p.compute_s)),
+                            ("comm_s", Json::num(p.comm_s)),
+                            ("exposed_comm_s", Json::num(p.exposed_comm_s)),
+                            ("alltoall_s", Json::num(p.alltoall_s)),
+                            ("step_s", Json::num(p.step_s)),
+                            ("schedule_entries", Json::num(p.schedule_entries as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Default relative drift tolerance of the gate.  Wide enough to absorb
+/// libm-level noise across toolchains (the arithmetic itself is
+/// deterministic), tight enough that any real cost-model change trips
+/// it — at which point the baseline is regenerated *deliberately* with
+/// `bench_check --write` and reviewed in the diff.
+pub const BASELINE_DEFAULT_TOL: f64 = 1e-3;
+
+fn rel_close(a: f64, b: f64, tol: f64) -> bool {
+    let scale = a.abs().max(b.abs());
+    (a - b).abs() <= tol * scale.max(1e-12)
+}
+
+/// Compare a computed sweep against a baseline document.  Returns one
+/// human-readable message per drifted/missing/extra metric; empty means
+/// the gate passes.  `tol` is relative (see [`BASELINE_DEFAULT_TOL`]).
+pub fn compare_to_baseline(points: &[MeshSweepPoint], baseline: &Json, tol: f64) -> Vec<String> {
+    let mut drifts = Vec::new();
+    let Some(base_points) = baseline.get("points").and_then(|p| p.as_arr()) else {
+        return vec!["baseline has no \"points\" array".into()];
+    };
+    for p in points {
+        let Some(b) = base_points
+            .iter()
+            .find(|b| b.get("mesh").and_then(|m| m.as_str()) == Some(p.mesh.as_str()))
+        else {
+            drifts.push(format!("mesh {} missing from baseline", p.mesh));
+            continue;
+        };
+        let fits = b.get("fits").and_then(|f| f.as_bool());
+        if fits != Some(p.fits) {
+            drifts.push(format!(
+                "mesh {}: fits changed {:?} -> {} (an OOM row appeared or vanished)",
+                p.mesh, fits, p.fits
+            ));
+            continue;
+        }
+        for (metric, current) in [
+            ("bubble", p.bubble),
+            ("compute_s", p.compute_s),
+            ("comm_s", p.comm_s),
+            ("exposed_comm_s", p.exposed_comm_s),
+            ("alltoall_s", p.alltoall_s),
+            ("step_s", p.step_s),
+        ] {
+            match b.get(metric).and_then(|v| v.as_f64()) {
+                None => drifts.push(format!("mesh {}: baseline lacks {metric}", p.mesh)),
+                Some(base) if !rel_close(current, base, tol) => drifts.push(format!(
+                    "mesh {}: {metric} drifted {base:.6e} -> {current:.6e} \
+                     ({:+.3}% > {:.3}% tolerance)",
+                    p.mesh,
+                    (current - base) / base.abs().max(1e-12) * 100.0,
+                    tol * 100.0,
+                )),
+                Some(_) => {}
+            }
+        }
+    }
+    for b in base_points {
+        let name = b.get("mesh").and_then(|m| m.as_str()).unwrap_or("<unnamed>");
+        if !points.iter().any(|p| p.mesh == name) {
+            drifts.push(format!("baseline mesh {name} no longer swept"));
+        }
+    }
+    drifts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_covers_the_story() {
+        let points = mesh_sweep_points();
+        assert_eq!(points.len(), SWEEP_MESHES.len());
+        // pure DP OOMs; most sharded meshes fit
+        assert!(!points[0].fits, "pure DP of a 7B model must OOM");
+        assert!(points.iter().filter(|p| p.fits).count() >= 9);
+        // every expert row prices its AllToAll exactly at the analytic
+        // estimator formula — the consistency the gate guards
+        for p in &points {
+            if p.expert > 1 {
+                assert!(p.moe && p.alltoall_s > 0.0, "{}", p.mesh);
+                assert_eq!(
+                    p.alltoall_s, p.alltoall_analytic_s,
+                    "{}: schedule and estimator disagree on the AllToAll cost",
+                    p.mesh
+                );
+            } else {
+                assert_eq!(p.alltoall_s, 0.0, "{}", p.mesh);
+            }
+        }
+        // pipelined rows carry their bubble
+        for p in &points {
+            assert_eq!(p.bubble > 0.0, p.pipeline > 1, "{}", p.mesh);
+        }
+    }
+
+    #[test]
+    fn sweep_is_deterministic() {
+        let a = mesh_sweep_points();
+        let b = mesh_sweep_points();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.mesh, y.mesh);
+            assert_eq!(x.step_s.to_bits(), y.step_s.to_bits());
+            assert_eq!(x.comm_s.to_bits(), y.comm_s.to_bits());
+        }
+    }
+
+    // (the self-comparison and injected-regression scenarios live in
+    // tier-1 `rust/tests/bench_gate.rs`, which also exercises the
+    // committed baseline file; only the structural cases it does not
+    // cover are tested here)
+
+    #[test]
+    fn structural_drift_is_caught() {
+        let points = mesh_sweep_points();
+        let parsed = Json::parse(&mesh_sweep_doc(&points).to_string()).unwrap();
+        // a vanished mesh
+        let fewer = &points[1..];
+        assert!(compare_to_baseline(fewer, &parsed, BASELINE_DEFAULT_TOL)
+            .iter()
+            .any(|d| d.contains("no longer swept")));
+        // an OOM flip
+        let mut flipped = points.clone();
+        flipped[0].fits = true;
+        assert!(compare_to_baseline(&flipped, &parsed, BASELINE_DEFAULT_TOL)
+            .iter()
+            .any(|d| d.contains("fits changed")));
+        // a garbage baseline
+        assert!(!compare_to_baseline(&points, &Json::Null, BASELINE_DEFAULT_TOL).is_empty());
+    }
+}

@@ -27,11 +27,15 @@
 //! [`crate::distributed::mesh::MeshTrainer`].
 
 pub mod aot_check;
+pub mod mesh_sweep;
 pub mod plan;
 pub mod schedule;
 pub mod sharding;
 
 pub use aot_check::{aot_compile_check, AotReport};
+pub use mesh_sweep::{
+    compare_to_baseline, mesh_sweep_doc, mesh_sweep_points, MeshSweepPoint, BASELINE_DEFAULT_TOL,
+};
 pub use plan::{materialize, Plan};
 pub use schedule::{
     build_schedule, local_interconnect, resolve_microbatches, shard_degrees, stage_partition,

@@ -38,6 +38,9 @@ pub struct Plan {
     pub remat_policy: String,
     /// Numeric format for matmuls ("none" | "int8" | "fp8").
     pub quantization: String,
+    /// Per-expert token capacity headroom for an expert mesh axis
+    /// (see `docs/moe.md`); 1.25 when the trainer does not set one.
+    pub capacity_factor: f64,
     /// Attention kernel backend after mesh-rule dispatch.
     pub kernel_backend: String,
     /// Parameter sharding annotations gathered from the layer configs.
@@ -188,6 +191,7 @@ pub fn materialize(
         mesh_axes: mesh_names,
         remat_policy,
         quantization: cfg.get_str("quantization")?,
+        capacity_factor: cfg.get_float("capacity_factor").unwrap_or(1.25),
         kernel_backend,
         sharding,
         schedule,
@@ -360,6 +364,62 @@ mod tests {
         .unwrap();
         let plan = materialize(&few, "cpu-local", 16, &rules()).unwrap();
         assert_eq!(plan.strategy.microbatches, 4);
+    }
+
+    #[test]
+    fn moe_mesh_rule_materializes_an_expert_plan() {
+        use crate::perfmodel::comms::Collective;
+        // one MoE experiment config, launched on the v5e MoE flavor: the
+        // rule adds the expert axis, the plan carries the AllToAll
+        // schedule and the capacity factor, and the mesh trainer lowers
+        // it (the §3 route, fifth axis included)
+        let mut t = trainer_for_preset("tiny").unwrap();
+        replace_config(&mut t, "FeedForward", &|old| {
+            default_config("MoE").unwrap()
+                .with("input_dim", old.get("input_dim").unwrap().clone())
+                .with("hidden_dim", old.get("hidden_dim").unwrap().clone())
+                .with("num_experts", Value::Int(32))
+        });
+        let plan = materialize(&t, "tpu-v5e-moe-512", 512, &rules()).unwrap();
+        assert!(plan.moe);
+        assert_eq!(plan.strategy.expert, 16);
+        assert_eq!(plan.strategy.fsdp, 16);
+        assert_eq!(plan.strategy.data, 2);
+        assert_eq!(plan.capacity_factor, 2.0);
+        assert_eq!(plan.shape.num_experts, 32);
+        let a2a: Vec<_> = plan
+            .schedule
+            .entries
+            .iter()
+            .filter(|e| e.collective == Collective::AllToAll)
+            .collect();
+        assert_eq!(a2a.len(), 2, "dispatch + combine: {:?}", plan.schedule);
+        for e in &a2a {
+            assert_eq!(e.axis, "expert");
+            assert_eq!(e.group, 16);
+            assert!(e.cost_s > 0.0 && e.bytes > 0.0);
+        }
+        // the plan flows into mesh construction: the 32-expert bank
+        // partitions 2-per-rank over the 16 expert ranks, top_k comes
+        // from the model, capacity from the trainer
+        use crate::distributed::mesh::mesh_trainer_from_plan;
+        use crate::trainer::backend::{MockTrainBackend, MockTrainBackendOptions};
+        let inner = Box::new(MockTrainBackend::new(MockTrainBackendOptions {
+            dim: 512,
+            ..Default::default()
+        }));
+        let mesh = mesh_trainer_from_plan(&plan, inner).unwrap();
+        assert_eq!(mesh.strategy().expert, 16);
+        assert_eq!(mesh.num_devices(), 512);
+        // a dense model cannot take an expert axis: the bank (1 expert)
+        // does not partition over 16 ranks
+        let dense = trainer_for_preset("tiny").unwrap();
+        let plan = materialize(&dense, "tpu-v5e-moe-512", 512, &rules()).unwrap();
+        let err = mesh_trainer_from_plan(&plan, Box::new(MockTrainBackend::new(
+            MockTrainBackendOptions::default(),
+        )))
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("expert"), "{err:#}");
     }
 
     #[test]

@@ -6,8 +6,10 @@
 //! [`CollectiveSchedule`]: one [`ScheduleEntry`] per collective a real
 //! mesh would issue — the FSDP parameter all-gather, the tensor-parallel
 //! activation all-reduce, the FSDP gradient reduce-scatter, the
-//! data-parallel gradient all-reduce, and (when the mesh has a pipeline
-//! axis) the stage-boundary point-to-point activation/gradient
+//! data-parallel gradient all-reduce, the MoE token dispatch/combine
+//! all-to-alls (when the mesh has an expert axis), and (when the mesh
+//! has a pipeline axis) the stage-boundary point-to-point
+//! activation/gradient
 //! transfers — each annotated with its mesh axis, subgroup size, payload
 //! bytes, and a [`crate::perfmodel::comms`] cost estimate over the
 //! target interconnect.  A [`PipelineSchedule`] complements the entry
@@ -527,6 +529,38 @@ pub fn build_schedule(
             overlappable: false,
         });
     }
+    if strategy.expert > 1 {
+        // MoE token dispatch/combine: two all-to-alls per resident MoE
+        // layer forward and two backward, over the expert subgroup.
+        // Payload and cost come from the SAME helpers the estimator
+        // uses (`comms::expert_tok_bytes`/`expert_alltoall_cost`), so
+        // the schedule prices exactly what `estimate_step` prices —
+        // `bench_mesh.rs` asserts the agreement bit-for-bit.
+        let es = strategy.expert;
+        let tok_bytes =
+            crate::perfmodel::comms::expert_tok_bytes(global_batch, seq_len, dp, shape.model_dim);
+        let layers_resident = shape.num_layers as f64 / ps as f64;
+        let total =
+            crate::perfmodel::comms::expert_alltoall_cost(tok_bytes, layers_resident, es, ic);
+        for (phase, tensor) in [
+            (SchedulePhase::Compute, "moe-dispatch"),
+            (SchedulePhase::Compute, "moe-combine"),
+        ] {
+            entries.push(ScheduleEntry {
+                phase,
+                collective: Collective::AllToAll,
+                axis: "expert".into(),
+                group: es,
+                count: chips / es,
+                tensor: tensor.into(),
+                bytes: tok_bytes,
+                // half the fwd+bwd total per direction (exact: a
+                // power-of-two split of the shared cost)
+                cost_s: total / 2.0,
+                overlappable: true,
+            });
+        }
+    }
     if ps > 1 {
         // Stage-boundary point-to-point traffic: every one of the `m`
         // microbatches crosses each of the `S-1` boundaries once forward
@@ -845,6 +879,57 @@ mod tests {
                 .unwrap()
         };
         assert_eq!(gather_bytes(&s), gather_bytes(&unpiped) / 4.0);
+    }
+
+    #[test]
+    fn expert_schedule_prices_the_estimator_tok_bytes_formula() {
+        // the agreement bench_mesh.rs asserts: the schedule's AllToAll
+        // entries carry exactly the estimator's expert-dispatch cost
+        let strat = Strategy {
+            data: 4,
+            fsdp: 8,
+            expert: 8,
+            ..Strategy::default()
+        };
+        let mut sh = shape();
+        sh.num_experts = 8;
+        sh.active_experts = 2;
+        let ic = crate::perfmodel::chips::h100().interconnect;
+        let s = build_schedule(&strat, &sh, &axes(&["fsdp"]), 1024, 4096, &ic);
+        let a2a: Vec<&ScheduleEntry> =
+            s.entries.iter().filter(|e| e.collective == Collective::AllToAll).collect();
+        assert_eq!(a2a.len(), 2, "one dispatch + one combine chain");
+        let tok_bytes = (1024 * 4096 / (4 * 8)) as f64 * sh.model_dim as f64 * 2.0;
+        let expected = 4.0
+            * sh.num_layers as f64
+            * hierarchical(Collective::AllToAll, tok_bytes, 8, &ic);
+        let mut total = 0.0;
+        for e in &a2a {
+            assert_eq!(e.axis, "expert");
+            assert_eq!(e.group * e.count, strat.total_chips(), "{e:?}");
+            assert_eq!(e.bytes, tok_bytes);
+            assert!(e.overlappable, "dispatch hides behind expert compute");
+            total += e.cost_s;
+        }
+        assert_eq!(total, expected, "schedule must price the estimator's formula");
+        // no expert axis, no all-to-alls
+        let dense = build_schedule(
+            &strat_no_expert(),
+            &shape(),
+            &axes(&["fsdp"]),
+            1024,
+            4096,
+            &ic,
+        );
+        assert!(dense.entries.iter().all(|e| e.collective != Collective::AllToAll));
+    }
+
+    fn strat_no_expert() -> Strategy {
+        Strategy {
+            data: 4,
+            fsdp: 8,
+            ..Strategy::default()
+        }
     }
 
     #[test]

@@ -125,6 +125,24 @@ pub fn paper_appendix_a_rules() -> MeshRules {
             ],
         )
         .unwrap(),
+        // MoE v5e pods (the "-moe" instance flavor): FSDP within the
+        // slice with a 16-way expert axis, so the expert bank shards and
+        // tokens dispatch over AllToAll (docs/moe.md walks this preset).
+        // The generous capacity factor reflects v5e's cheap intra-slice
+        // all-to-alls: headroom is cheaper than drops.
+        MeshRule::new(
+            "tpu-v5e-moe-*",
+            vec![
+                Box::new(MeshShapeModifier::new(
+                    &[-1, 16, 16],
+                    &["data", "fsdp", "expert"],
+                )),
+                Box::new(SetFieldModifier::new("", "capacity_factor", Value::Float(2.0))),
+                Box::new(RematSpecModifier::at("offload_dots", "model.decoder.layer")),
+                Box::new(QuantizationModifier::int8()),
+            ],
+        )
+        .unwrap(),
         // Pipelined H100 pods (the "-pp" instance flavor): FSDP within
         // the node, 4 pipeline stages across nodes with a 1F1B
         // microbatch schedule — listed before the generic H100 rule so
@@ -255,6 +273,31 @@ mod tests {
             Some("gpu-H100-*")
         );
         assert_eq!(plain.get_int("microbatches").unwrap(), 1);
+    }
+
+    #[test]
+    fn v5e_moe_rule_adds_an_expert_axis() {
+        let rules = paper_appendix_a_rules();
+        let mut t = trainer_for_preset("small").unwrap();
+        let matched = rules.apply("tpu-v5e-moe-512", &mut t).unwrap();
+        assert_eq!(matched.as_deref(), Some("tpu-v5e-moe-*"));
+        assert_eq!(
+            t.get_str_list("mesh_axis_names").unwrap(),
+            vec!["data", "fsdp", "expert"]
+        );
+        assert_eq!(t.get_int_list("mesh_shape").unwrap(), vec![-1, 16, 16]);
+        assert_eq!(t.get_float("capacity_factor").unwrap(), 2.0);
+        assert_eq!(t.get_str("quantization").unwrap(), "int8");
+        // the MoE flavor must not shadow plain v5e instance strings
+        let mut plain = trainer_for_preset("small").unwrap();
+        assert_eq!(
+            rules.apply("tpu-v5e-256-8", &mut plain).unwrap().as_deref(),
+            Some("tpu-v5e-256-*")
+        );
+        assert!(!plain
+            .get_str_list("mesh_axis_names")
+            .unwrap()
+            .contains(&"expert".to_string()));
     }
 
     #[test]

@@ -263,6 +263,11 @@ pub fn register_defaults() -> BTreeMap<&'static str, Ctor> {
             .field("microbatches", Value::Int(1))
             // "1f1b" | "gpipe" — the microbatch schedule for pipeline axes
             .field("pipeline_schedule", Value::Str("1f1b".into()))
+            // MoE bank for an expert mesh axis: the expert degree must
+            // divide num_experts; active_experts is the router top-k
+            .field("num_experts", Value::Int(1))
+            .field("active_experts", Value::Int(1))
+            .field("capacity_factor", Value::Float(1.25))
             // instance type selects the interconnect cost model
             .field("instance_type", Value::Str("cpu-local".into()))
             .field("backend", Value::Config(builtin("MockTrainBackend")))
@@ -312,6 +317,9 @@ pub fn register_defaults() -> BTreeMap<&'static str, Ctor> {
             // raises it to the stage count when a mesh rule adds stages)
             .field("microbatches", Value::Int(1))
             .field("pipeline_schedule", Value::Str("1f1b".into())) // | "gpipe"
+            // per-expert token headroom when the mesh has an expert axis
+            // (the MoE bank itself lives on model.decoder.layer.feed_forward)
+            .field("capacity_factor", Value::Float(1.25))
             .field("remat_policy", Value::Str("none".into()))
             .field("quantization", Value::Str("none".into())) // none | int8 | fp8
             .field("preset", Value::Str("tiny".into()))

@@ -1,9 +1,12 @@
 //! Simulated collectives over replica state vectors.
 //!
 //! The data plane of the cluster simulator: all-reduce/all-gather/
-//! broadcast/reduce-scatter plus point-to-point [`SimCollective::send`]/
-//! [`SimCollective::recv`] (the pipeline-parallel stage-boundary
-//! transfers), implemented over plain host vectors, with an injectable
+//! broadcast/reduce-scatter, subgroup-scoped
+//! [`SimCollective::all_to_all`] over per-rank send/recv buckets (the
+//! MoE expert token dispatch/combine), and point-to-point
+//! [`SimCollective::send`]/[`SimCollective::recv`] (the
+//! pipeline-parallel stage-boundary transfers), implemented over plain
+//! host vectors, with an injectable
 //! fault hook so the SDC detector and failure-injection tests can
 //! exercise real corruption paths (a bit flip inside a collective is
 //! the canonical interconnect SDC of §5).
@@ -177,6 +180,59 @@ impl SimCollective {
             .collect())
     }
 
+    /// All-to-all over per-rank send buckets (the MoE expert-dispatch
+    /// collective): `buckets[src][dst]` is the payload rank `src` sends
+    /// to rank `dst`, and the result is the received view —
+    /// `out[dst][src]` is exactly `buckets[src][dst]` after the sender's
+    /// fault hook.  Buckets may have unequal lengths (all-to-all-v, the
+    /// shape real token dispatch produces); every rank must provide
+    /// exactly one bucket per peer, which is checked — a ragged bucket
+    /// matrix is a routing bug, never padded or truncated.
+    ///
+    /// The transfer moves bits without arithmetic, so it is trivially
+    /// compatible with the binary-tree reduction order the mesh trainer's
+    /// bit-identity argument rests on: dispatch∘combine round-trips every
+    /// payload bit-for-bit on a healthy interconnect (and corrupts it
+    /// exactly like a real link under a fault hook, applied at the
+    /// sender).  Counts as one op, like the fused reductions.
+    ///
+    /// ```
+    /// use axlearn::distributed::SimCollective;
+    ///
+    /// let mut c = SimCollective::new();
+    /// // rank 0 sends [1] to itself and [2, 3] to rank 1; rank 1 sends
+    /// // [4] to rank 0 and nothing to itself
+    /// let out = c
+    ///     .all_to_all(&[
+    ///         vec![vec![1.0], vec![2.0, 3.0]],
+    ///         vec![vec![4.0], vec![]],
+    ///     ])
+    ///     .unwrap();
+    /// assert_eq!(out[0], vec![vec![1.0], vec![4.0]]); // rank 0: from 0, from 1
+    /// assert_eq!(out[1], vec![vec![2.0, 3.0], vec![]]); // rank 1: from 0, from 1
+    /// ```
+    pub fn all_to_all(&mut self, buckets: &[Vec<Vec<f32>>]) -> Result<Vec<Vec<Vec<f32>>>> {
+        let n = buckets.len();
+        if n == 0 {
+            bail!("all_to_all over zero replicas");
+        }
+        if let Some((r, b)) = buckets.iter().enumerate().find(|(_, b)| b.len() != n) {
+            bail!(
+                "all_to_all bucket shape mismatch: replica {r} provides {} send buckets \
+                 for {n} replicas",
+                b.len()
+            );
+        }
+        self.ops_run += 1;
+        Ok((0..n)
+            .map(|dst| {
+                (0..n)
+                    .map(|src| self.apply_fault(src, &buckets[src][dst]))
+                    .collect()
+            })
+            .collect())
+    }
+
     /// Point-to-point send from rank `src` to rank `dst` of the caller's
     /// subgroup (the pipeline stage-boundary transfer).  The fault hook
     /// is applied to the payload as it leaves the sender — corruption
@@ -328,6 +384,106 @@ mod tests {
         let mut c = SimCollective::new();
         c.reduce_scatter(&[vec![1.0, 2.0], vec![3.0, 4.0]]).unwrap();
         assert_eq!(c.ops_run, 1);
+    }
+
+    #[test]
+    fn all_to_all_is_the_bucket_transpose() {
+        let mut c = SimCollective::new();
+        let buckets = vec![
+            vec![vec![1.0], vec![2.0, 3.0], vec![]],
+            vec![vec![4.0, 5.0], vec![], vec![6.0]],
+            vec![vec![], vec![7.0], vec![8.0, 9.0]],
+        ];
+        let out = c.all_to_all(&buckets).unwrap();
+        for dst in 0..3 {
+            for src in 0..3 {
+                assert_eq!(out[dst][src], buckets[src][dst], "dst {dst} src {src}");
+            }
+        }
+        assert_eq!(c.ops_run, 1);
+    }
+
+    #[test]
+    fn all_to_all_conserves_every_token_bit_for_bit() {
+        // property over random bucket matrices: the multiset of payload
+        // bits is conserved (nothing dropped, fabricated, or rounded)
+        let mut rng = Rng::new(11);
+        for _ in 0..20 {
+            let n = rng.gen_range(1, 7) as usize;
+            let buckets: Vec<Vec<Vec<f32>>> = (0..n)
+                .map(|_| {
+                    (0..n)
+                        .map(|_| {
+                            let len = rng.gen_range(0, 9) as usize;
+                            (0..len).map(|_| rng.normal() as f32).collect()
+                        })
+                        .collect()
+                })
+                .collect();
+            let mut c = SimCollective::new();
+            let out = c.all_to_all(&buckets).unwrap();
+            let mut sent: Vec<u32> = buckets
+                .iter()
+                .flatten()
+                .flatten()
+                .map(|x| x.to_bits())
+                .collect();
+            let mut got: Vec<u32> =
+                out.iter().flatten().flatten().map(|x| x.to_bits()).collect();
+            sent.sort_unstable();
+            got.sort_unstable();
+            assert_eq!(sent, got, "token multiset must be conserved");
+        }
+    }
+
+    #[test]
+    fn all_to_all_round_trip_is_identity() {
+        // dispatch∘combine: sending the received view back restores the
+        // original buckets exactly — the MoE combine path
+        let mut c = SimCollective::new();
+        let buckets = vec![
+            vec![vec![0.1f32], vec![1.0 + f32::EPSILON, -3.7e-3]],
+            vec![vec![123.456], vec![]],
+        ];
+        let dispatched = c.all_to_all(&buckets).unwrap();
+        let returned = c.all_to_all(&dispatched).unwrap();
+        for (orig, back) in buckets.iter().zip(&returned) {
+            for (a, b) in orig.iter().zip(back) {
+                assert!(a.iter().zip(b.iter()).all(|(x, y)| x.to_bits() == y.to_bits()));
+                assert_eq!(a.len(), b.len());
+            }
+        }
+    }
+
+    #[test]
+    fn all_to_all_ragged_bucket_matrix_is_an_error() {
+        let mut c = SimCollective::new();
+        let err = c
+            .all_to_all(&[vec![vec![1.0], vec![2.0]], vec![vec![3.0]]])
+            .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("bucket shape mismatch"), "{msg}");
+        assert!(msg.contains("replica 1"), "{msg}");
+        assert!(c.all_to_all(&[]).is_err());
+    }
+
+    #[test]
+    fn all_to_all_fault_applies_at_the_sender() {
+        let mut c = SimCollective::new().with_fault(Box::new(|r, i, x| {
+            if r == 1 && i == 0 {
+                x + 0.5
+            } else {
+                x
+            }
+        }));
+        let out = c
+            .all_to_all(&[vec![vec![1.0], vec![1.0]], vec![vec![2.0], vec![2.0]]])
+            .unwrap();
+        // only rank 1's outgoing buckets are corrupted, wherever they land
+        assert_eq!(out[0][0], vec![1.0]);
+        assert_eq!(out[0][1], vec![2.5]);
+        assert_eq!(out[1][0], vec![1.0]);
+        assert_eq!(out[1][1], vec![2.5]);
     }
 
     #[test]

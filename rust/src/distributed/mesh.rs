@@ -1,20 +1,24 @@
 //! Mesh-sharded execution: the GSPMD-style "global computer" of §3 made
-//! runnable.  A [`MeshTrainer`] takes a resolved DP×PP×FSDP×TP mesh
+//! runnable.  A [`MeshTrainer`] takes a resolved DP×PP×FSDP×TP×EP mesh
 //! shape, partitions parameters/gradients/optimizer state across the
-//! device grid per the sharding plan (and layers across pipeline
-//! stages), and executes steps over any [`TrainBackend`] — lowering
-//! every step to an explicit, inspectable [`CollectiveSchedule`] whose
-//! entries it executes over [`SimCollective`] subgroups per mesh axis,
-//! with microbatches walked in [`PipelineSchedule`] (GPipe/1F1B) order.
+//! device grid per the sharding plan (layers across pipeline stages,
+//! expert banks across expert ranks), and executes steps over any
+//! [`TrainBackend`] — lowering every step to an explicit, inspectable
+//! [`CollectiveSchedule`] whose entries it executes over
+//! [`SimCollective`] subgroups per mesh axis, with microbatches walked
+//! in [`PipelineSchedule`] (GPipe/1F1B) order and MoE tokens routed by
+//! [`crate::distributed::moe`].
 //!
 //! ## Execution model
 //!
 //! The mesh runs ONE logical program (the paper's "global computation
 //! over a device mesh").  Between steps, state lives **sharded**: each
-//! device of the `data × pipeline × fsdp × model` grid holds only its
-//! chunk of every sharded state tensor — the pipeline axis partitions
-//! the layer stack into contiguous stage slices, and each stage's slice
-//! shards over the within-stage `fsdp × model` lattice.  One step is:
+//! device of the `data × pipeline × fsdp × model × expert` grid holds
+//! only its chunk of every sharded state tensor — the pipeline axis
+//! partitions the layer stack into contiguous stage slices, the expert
+//! axis partitions each stage slice into per-rank expert-FFN banks,
+//! and each expert slice shards over the within-stage `fsdp × model`
+//! lattice.  One step is:
 //!
 //! 1. **Gather** — FSDP all-gather within each model column, then a
 //!    model-axis all-gather, per stage; stage slices concatenate
@@ -23,8 +27,15 @@
 //!    [`SimCollective::all_gather`] calls; replica groups are
 //!    cross-checked bit-for-bit, so shard corruption surfaces as an
 //!    error instead of silent divergence).
-//! 2. **Compute** — with a pipeline axis, the microbatch token/target
-//!    chunks genuinely travel the stage chain first: one
+//! 2. **Compute** — with an expert axis, the batch first runs the MoE
+//!    round trip: a deterministic top-k router picks each token's
+//!    expert, tokens **dispatch** to the rank owning it through a real
+//!    subgroup-scoped [`SimCollective::all_to_all`], and a second
+//!    all-to-all **combines** them back in original order (capacity-
+//!    factor drop accounting lands in
+//!    [`MeshTrainer::last_moe_stats`]).  With a pipeline axis, the
+//!    microbatch token/target
+//!    chunks then genuinely travel the stage chain: one
 //!    [`SimCollective::send`]/[`SimCollective::recv`] per forward slot
 //!    of the pipeline schedule, hop by hop, reassembled at the last
 //!    stage — a fault hook on any link corrupts the batch exactly like
@@ -55,17 +66,19 @@
 //! [`SimCollective`] reduces in binary-tree order, so power-of-two
 //! groups of bit-identical contributions reduce *exactly* (see the
 //! collective module docs).  Every collective above is a mean over
-//! bit-identical contributions, microbatch transport moves bits without
-//! arithmetic, and the loss accumulation tree-sums `m` copies of
-//! `loss/m`; for power-of-two mesh axes and microbatch counts the
-//! sharded run is therefore **bit-identical** to the single-device run
-//! on the same seed and data — for every 4-axis factorization of the
-//! device count, under both GPipe and 1F1B.
+//! bit-identical contributions, microbatch and expert-token transport
+//! move bits without arithmetic (the MoE dispatch∘combine is a
+//! recorded permutation and its inverse), and the loss accumulation
+//! tree-sums `m` copies of `loss/m`; for power-of-two mesh axes and
+//! microbatch counts the sharded run is therefore **bit-identical** to
+//! the single-device run on the same seed and data — for every 5-axis
+//! factorization of the device count, under both GPipe and 1F1B.
 //! `tests/mesh_integration.rs` asserts exactly that, and the fleet
 //! trainer leans on it: a [`MeshTrainer`] *is* a [`TrainBackend`], so
-//! fleet replicas can be mesh-sharded (pipelined included) and recover
-//! through host crashes with the unchanged checkpoint/restore
-//! machinery.  See `docs/pipeline.md` for the schedule math.
+//! fleet replicas can be mesh-sharded (pipelined and expert-sharded
+//! included) and recover through host crashes with the unchanged
+//! checkpoint/restore machinery.  See `docs/pipeline.md` for the
+//! schedule math and `docs/moe.md` for the expert axis.
 
 use std::cell::RefCell;
 
@@ -85,19 +98,21 @@ use crate::perfmodel::Strategy;
 use crate::trainer::backend::{train_backend_from_config, TrainBackend, TrainBackendDescriptor};
 
 use super::collective::{FaultHook, SimCollective};
+use super::moe::{self, MoeStepStats};
 
 /// How a [`MeshTrainer`] shards and costs its mesh.
 #[derive(Clone, Debug)]
 pub struct MeshOptions {
-    /// Resolved mesh shape: `data × pipeline × fsdp × tensor` (expert
-    /// must be 1), with `microbatches` for the pipeline schedule.
+    /// Resolved mesh shape: `data × pipeline × fsdp × tensor × expert`,
+    /// with `microbatches` for the pipeline schedule.
     pub strategy: Strategy,
     /// Mesh axes that shard parameters (from the resolved
     /// [`crate::composer::ShardingSpec`]s; see
     /// [`shard_axes_from_specs`]).  A mesh axis not listed here
     /// replicates parameters and folds into the data-parallel sync.
-    /// The pipeline axis is orthogonal: it always partitions the layer
-    /// stack into stages.
+    /// The pipeline and expert axes are orthogonal: pipeline always
+    /// partitions the layer stack into stages, and expert always
+    /// partitions each stage slice into per-rank expert banks.
     pub shard_axes: Vec<String>,
     /// Interconnect used for the schedule's cost annotations.
     pub interconnect: Interconnect,
@@ -108,6 +123,15 @@ pub struct MeshOptions {
     /// Microbatch schedule for the pipeline axis (GPipe or 1F1B);
     /// irrelevant when `strategy.pipeline == 1`.
     pub pipeline_schedule: PipelineKind,
+    /// Size of the expert-FFN bank the expert axis partitions; must be
+    /// a positive multiple of `strategy.expert`.  1 with no expert axis.
+    pub num_experts: usize,
+    /// Router top-k (the paper's `active_experts`); clamped to
+    /// `1..=num_experts`.
+    pub active_experts: usize,
+    /// Per-expert token capacity factor for the drop accounting
+    /// ([`crate::distributed::moe::capacity_per_expert`]).
+    pub capacity_factor: f64,
 }
 
 impl MeshOptions {
@@ -118,7 +142,7 @@ impl MeshOptions {
         Self::for_mesh4(data, 1, fsdp, tensor, 1)
     }
 
-    /// Options for a full 4-axis `data × pipeline × fsdp × model` mesh
+    /// Options for a 4-axis `data × pipeline × fsdp × model` mesh
     /// running `microbatches` microbatches per step (1F1B by default;
     /// see [`MeshOptions::with_schedule`]).
     pub fn for_mesh4(
@@ -128,25 +152,57 @@ impl MeshOptions {
         tensor: usize,
         microbatches: usize,
     ) -> Self {
+        Self::for_mesh5(data, pipeline, fsdp, tensor, 1, microbatches)
+    }
+
+    /// Options for the full 5-axis `data × pipeline × fsdp × model ×
+    /// expert` mesh.  An expert axis defaults to a two-experts-per-rank
+    /// bank with top-2 routing and 1.25× capacity headroom (the common
+    /// switch-style configuration) — override with
+    /// [`MeshOptions::with_moe`].
+    pub fn for_mesh5(
+        data: usize,
+        pipeline: usize,
+        fsdp: usize,
+        tensor: usize,
+        expert: usize,
+        microbatches: usize,
+    ) -> Self {
         MeshOptions {
             strategy: Strategy {
                 data,
                 fsdp,
                 tensor,
                 pipeline,
+                expert,
                 microbatches,
-                ..Strategy::default()
             },
             shard_axes: vec!["fsdp".into(), "model".into()],
             interconnect: local_interconnect(),
             activation_bytes: 0.0,
             pipeline_schedule: PipelineKind::OneFOneB,
+            num_experts: if expert > 1 { 2 * expert } else { 1 },
+            active_experts: if expert > 1 { 2 } else { 1 },
+            capacity_factor: 1.25,
         }
     }
 
     /// Select the microbatch schedule (GPipe or 1F1B).
     pub fn with_schedule(mut self, kind: PipelineKind) -> Self {
         self.pipeline_schedule = kind;
+        self
+    }
+
+    /// Configure the MoE bank the expert axis partitions.
+    pub fn with_moe(
+        mut self,
+        num_experts: usize,
+        active_experts: usize,
+        capacity_factor: f64,
+    ) -> Self {
+        self.num_experts = num_experts;
+        self.active_experts = active_experts;
+        self.capacity_factor = capacity_factor;
         self
     }
 }
@@ -158,9 +214,9 @@ struct MeshCore {
     collective: SimCollective,
     /// `devices[dev][tensor]`: the chunk of a sharded tensor (or a full
     /// copy of a replicated one) held by device
-    /// `dev = r*(ps*g) + p*g + c`, where `r` indexes the replication
-    /// group, `p` the pipeline stage, and `c = m*fs + f` the
-    /// within-stage shard lattice position.
+    /// `dev = r*(ps*es*g) + p*(es*g) + e*g + c`, where `r` indexes the
+    /// replication group, `p` the pipeline stage, `e` the expert rank,
+    /// and `c = m*fs + f` the within-stage shard lattice position.
     devices: Vec<Vec<Vec<f32>>>,
     names: Vec<String>,
     sharded: Vec<bool>,
@@ -170,10 +226,15 @@ struct MeshCore {
     ms: usize,
     /// Pipeline stage count (always partitions sharded tensors).
     ps: usize,
+    /// Expert-parallel degree (always partitions each stage slice into
+    /// per-rank expert banks).
+    es: usize,
     /// Within-stage shard-lattice size: `fs * ms`.
     g: usize,
     /// Replication degree: data × any unsharded fsdp/tensor axes.
     rep: usize,
+    /// Drop accounting of the most recent MoE step (expert axis only).
+    moe_stats: Option<MoeStepStats>,
     step: u64,
     initialized: bool,
 }
@@ -210,19 +271,20 @@ fn bwd_tag(microbatch: usize) -> u64 {
 impl MeshCore {
     /// Split `state` into per-device chunks (the init/restore "scatter").
     /// The pipeline axis partitions each sharded tensor into `ps`
-    /// contiguous stage slices; each slice shards over the within-stage
-    /// `fs × ms` lattice.
+    /// contiguous stage slices, the expert axis partitions each stage
+    /// slice into `es` per-rank expert banks, and each bank shards over
+    /// the within-stage `fs × ms` lattice.
     fn shard_state(&mut self, state: &[(String, Vec<f32>)]) -> Result<()> {
-        let (fs, ms, ps, g, rep) = (self.fs, self.ms, self.ps, self.g, self.rep);
-        let span = ps * g;
+        let (fs, ms, ps, es, g, rep) = (self.fs, self.ms, self.ps, self.es, self.g, self.rep);
+        let span = ps * es * g;
         let mut sharded = Vec::with_capacity(state.len());
         for (name, v) in state {
             let shard = span > 1 && v.len() > 1;
             if shard && v.len() % span != 0 {
                 anyhow::bail!(
                     "tensor {name:?} ({} elements) does not divide into {span} shards \
-                     (pipeline {ps} × fsdp {fs} × model {ms}); pick a mesh whose shard \
-                     group divides the state",
+                     (pipeline {ps} × expert {es} × fsdp {fs} × model {ms}); pick a mesh \
+                     whose shard group divides the state",
                     v.len()
                 );
             }
@@ -230,7 +292,7 @@ impl MeshCore {
         }
         self.devices = (0..rep * span)
             .map(|dev| {
-                let c = dev % span; // = p*g + (m*fs + f): stage-major
+                let c = dev % span; // = p*(es*g) + e*g + (m*fs + f): stage-major
                 state
                     .iter()
                     .zip(&sharded)
@@ -252,14 +314,15 @@ impl MeshCore {
 
     /// Reconstruct the full state from the device shards: FSDP
     /// all-gather within each model column, then a model-axis
-    /// all-gather, per pipeline stage; stage slices concatenate
-    /// host-side (parameters never cross stage boundaries on a real
-    /// pipeline) — executed per replication group and cross-checked
-    /// bit-for-bit between groups.
+    /// all-gather, per pipeline stage and expert rank; expert and stage
+    /// slices concatenate host-side (parameters never cross stage
+    /// boundaries on a real pipeline, and expert ranks never exchange
+    /// their expert banks) — executed per replication group and
+    /// cross-checked bit-for-bit between groups.
     fn gather_full(&mut self) -> Result<Vec<(String, Vec<f32>)>> {
         anyhow::ensure!(self.initialized, "MeshTrainer: no state to gather before init/restore");
-        let (fs, ms, ps, g, rep) = (self.fs, self.ms, self.ps, self.g, self.rep);
-        let span = ps * g;
+        let (fs, ms, ps, es, g, rep) = (self.fs, self.ms, self.ps, self.es, self.g, self.rep);
+        let span = ps * es * g;
         let mut first: Vec<(String, Vec<f32>)> = Vec::new();
         for r in 0..rep {
             let mut tensors = Vec::with_capacity(self.names.len());
@@ -267,25 +330,27 @@ impl MeshCore {
                 let full = if self.sharded[t] {
                     let mut full = Vec::new();
                     for p in 0..ps {
-                        let base = r * span + p * g;
-                        let mut blocks: Vec<Vec<f32>> = Vec::with_capacity(ms);
-                        for m in 0..ms {
-                            let block = if fs > 1 {
-                                let contribs: Vec<Vec<f32>> = (0..fs)
-                                    .map(|f| self.devices[base + m * fs + f][t].clone())
-                                    .collect();
-                                self.collective.all_gather(&contribs)?.swap_remove(0)
+                        for e in 0..es {
+                            let base = r * span + p * es * g + e * g;
+                            let mut blocks: Vec<Vec<f32>> = Vec::with_capacity(ms);
+                            for m in 0..ms {
+                                let block = if fs > 1 {
+                                    let contribs: Vec<Vec<f32>> = (0..fs)
+                                        .map(|f| self.devices[base + m * fs + f][t].clone())
+                                        .collect();
+                                    self.collective.all_gather(&contribs)?.swap_remove(0)
+                                } else {
+                                    self.devices[base + m * fs][t].clone()
+                                };
+                                blocks.push(block);
+                            }
+                            let expert_slice = if ms > 1 {
+                                self.collective.all_gather(&blocks)?.swap_remove(0)
                             } else {
-                                self.devices[base + m * fs][t].clone()
+                                blocks.swap_remove(0)
                             };
-                            blocks.push(block);
+                            full.extend(expert_slice);
                         }
-                        let stage_slice = if ms > 1 {
-                            self.collective.all_gather(&blocks)?.swap_remove(0)
-                        } else {
-                            blocks.swap_remove(0)
-                        };
-                        full.extend(stage_slice);
                     }
                     full
                 } else {
@@ -319,8 +384,8 @@ impl MeshCore {
             new.len(),
             self.names.len()
         );
-        let (fs, ms, ps, g, rep) = (self.fs, self.ms, self.ps, self.g, self.rep);
-        let span = ps * g;
+        let (fs, ms, ps, es, g, rep) = (self.fs, self.ms, self.ps, self.es, self.g, self.rep);
+        let span = ps * es * g;
         for (t, (name, v)) in new.iter().enumerate() {
             anyhow::ensure!(
                 *name == self.names[t],
@@ -337,23 +402,28 @@ impl MeshCore {
                 for r in 0..rep {
                     for (p, &(lo, hi)) in stages.iter().enumerate() {
                         let stage_slice = &v[lo..hi];
-                        let block_len = stage_slice.len() / ms;
-                        for m in 0..ms {
-                            let block = &stage_slice[m * block_len..(m + 1) * block_len];
-                            if fs > 1 {
-                                // every fsdp rank contributes its (replicated-
-                                // compute) block and keeps its mean chunk
-                                let contribs: Vec<Vec<f32>> =
-                                    (0..fs).map(|_| block.to_vec()).collect();
-                                let chunks = self.collective.reduce_scatter(&contribs)?;
-                                for (f, mut chunk) in chunks.into_iter().enumerate() {
-                                    for x in chunk.iter_mut() {
-                                        *x /= fs as f32;
+                        let bank_len = stage_slice.len() / es;
+                        for e in 0..es {
+                            let bank = &stage_slice[e * bank_len..(e + 1) * bank_len];
+                            let block_len = bank.len() / ms;
+                            let base = r * span + p * es * g + e * g;
+                            for m in 0..ms {
+                                let block = &bank[m * block_len..(m + 1) * block_len];
+                                if fs > 1 {
+                                    // every fsdp rank contributes its (replicated-
+                                    // compute) block and keeps its mean chunk
+                                    let contribs: Vec<Vec<f32>> =
+                                        (0..fs).map(|_| block.to_vec()).collect();
+                                    let chunks = self.collective.reduce_scatter(&contribs)?;
+                                    for (f, mut chunk) in chunks.into_iter().enumerate() {
+                                        for x in chunk.iter_mut() {
+                                            *x /= fs as f32;
+                                        }
+                                        self.devices[base + m * fs + f][t] = chunk;
                                     }
-                                    self.devices[r * span + p * g + m * fs + f][t] = chunk;
+                                } else {
+                                    self.devices[base + m * fs][t] = block.to_vec();
                                 }
-                            } else {
-                                self.devices[r * span + p * g + m * fs][t] = block.to_vec();
                             }
                         }
                     }
@@ -512,6 +582,42 @@ impl MeshCore {
             .collect::<Result<_>>()?;
         Ok(tree_accumulate(&vals))
     }
+
+    /// The MoE round trip of one step: route every token with the
+    /// deterministic top-k router, **dispatch** the `(token, target)`
+    /// payloads to their primary expert's rank through a real
+    /// expert-subgroup [`SimCollective::all_to_all`], then **combine**
+    /// them back with a second all-to-all and restore the original
+    /// order from the recorded permutation.  Transport moves bits
+    /// without arithmetic, so the reassembled batch is bit-identical to
+    /// the input on a healthy interconnect — and corrupted exactly like
+    /// real expert activations under a fault hook.  Capacity-factor
+    /// drop accounting lands in `moe_stats`.
+    fn expert_round_trip(
+        &mut self,
+        tokens: &[i32],
+        targets: &[i32],
+        num_experts: usize,
+        active_experts: usize,
+        capacity_factor: f64,
+    ) -> Result<(Vec<i32>, Vec<i32>)> {
+        let plan = moe::plan_dispatch(
+            tokens,
+            targets,
+            self.es,
+            num_experts,
+            active_experts,
+            capacity_factor,
+        )?;
+        let dispatched = self.collective.all_to_all(&plan.buckets)?;
+        // the expert FFN application itself folds into the global
+        // compute (one executor — GSPMD semantics); the combine pass
+        // returns each rank's received tokens to their source
+        let returned = self.collective.all_to_all(&dispatched)?;
+        let out = moe::reassemble(&plan.dest_of, &returned)?;
+        self.moe_stats = Some(plan.stats);
+        Ok(out)
+    }
 }
 
 /// Mesh-sharded training over any [`TrainBackend`] — itself a
@@ -528,35 +634,32 @@ pub struct MeshTrainer {
 }
 
 impl MeshTrainer {
-    /// Wrap `inner` in a mesh.  Fails on an expert axis (not lowered
-    /// here) and on infeasible pipeline shapes (fewer microbatches than
-    /// stages, or a batch that does not split into the microbatches) —
-    /// shard-divisibility is checked at init/restore time, when tensor
-    /// shapes are known.
+    /// Wrap `inner` in a mesh.  Fails on infeasible pipeline shapes
+    /// (fewer microbatches than stages, or a batch that does not split
+    /// into the microbatches) and infeasible expert shapes (an expert
+    /// axis that does not partition the expert bank, or a batch that
+    /// does not divide across the expert subgroup) — shard-divisibility
+    /// is checked at init/restore time, when tensor shapes are known.
     pub fn new(inner: Box<dyn TrainBackend>, opts: MeshOptions) -> Result<Self> {
         let s = &opts.strategy;
         anyhow::ensure!(
-            s.expert == 1,
-            "MeshTrainer lowers DP×PP×FSDP×TP; the expert ({}) axis is not supported",
-            s.expert
-        );
-        anyhow::ensure!(
-            s.data >= 1 && s.fsdp >= 1 && s.tensor >= 1 && s.pipeline >= 1,
+            s.data >= 1 && s.fsdp >= 1 && s.tensor >= 1 && s.pipeline >= 1 && s.expert >= 1,
             "mesh axes must be >= 1: {s:?}"
         );
         // same derivation the composer's plan-level schedule uses — the
         // emitted schedule and the executed collectives must agree
         let (fs, ms, rep) = shard_degrees(s, &opts.shard_axes);
         let ps = s.pipeline;
+        let es = s.expert;
         let g = fs * ms;
         let inner_desc = inner.descriptor().clone();
+        let batch_tokens = inner_desc.batch * inner_desc.seq;
         let microbatches = s.microbatches.max(1);
         if ps > 1 {
             anyhow::ensure!(
                 microbatches >= ps,
                 "pipeline with {ps} stages needs >= that many microbatches (got {microbatches})"
             );
-            let batch_tokens = inner_desc.batch * inner_desc.seq;
             anyhow::ensure!(
                 batch_tokens > 0 && batch_tokens % microbatches == 0,
                 "batch of {batch_tokens} tokens ({}x{}) does not divide into \
@@ -565,9 +668,40 @@ impl MeshTrainer {
                 inner_desc.seq
             );
         }
+        if es > 1 {
+            anyhow::ensure!(
+                opts.num_experts >= es && opts.num_experts % es == 0,
+                "expert axis {es} does not partition the {}-expert bank \
+                 (num_experts must be a positive multiple of the axis degree)",
+                opts.num_experts
+            );
+            anyhow::ensure!(
+                (1..=opts.num_experts).contains(&opts.active_experts),
+                "active_experts {} out of range 1..={}",
+                opts.active_experts,
+                opts.num_experts
+            );
+            anyhow::ensure!(
+                opts.capacity_factor.is_finite() && opts.capacity_factor > 0.0,
+                "capacity_factor {} must be a positive finite number",
+                opts.capacity_factor
+            );
+            anyhow::ensure!(
+                batch_tokens > 0 && batch_tokens % es == 0,
+                "batch of {batch_tokens} tokens ({}x{}) does not divide across \
+                 {es} expert ranks",
+                inner_desc.batch,
+                inner_desc.seq
+            );
+        }
         let pipe = PipelineSchedule::for_kind(opts.pipeline_schedule, ps, microbatches)?;
         let desc = TrainBackendDescriptor {
-            name: if ps > 1 {
+            name: if es > 1 {
+                format!(
+                    "mesh[{}x{}x{}x{}x{}]:{}",
+                    s.data, ps, s.fsdp, s.tensor, es, inner_desc.name
+                )
+            } else if ps > 1 {
                 format!(
                     "mesh[{}x{}x{}x{}]:{}",
                     s.data, ps, s.fsdp, s.tensor, inner_desc.name
@@ -599,8 +733,10 @@ impl MeshTrainer {
                 fs,
                 ms,
                 ps,
+                es,
                 g,
                 rep,
+                moe_stats: None,
                 step: 0,
                 initialized: false,
             }),
@@ -621,10 +757,18 @@ impl MeshTrainer {
         &self.opts.strategy
     }
 
-    /// Devices on the mesh (`data × pipeline × fsdp × tensor`).
+    /// Devices on the mesh (`data × pipeline × fsdp × tensor × expert`).
     pub fn num_devices(&self) -> usize {
         let core = self.core.borrow();
-        core.rep * core.ps * core.g
+        core.rep * core.ps * core.es * core.g
+    }
+
+    /// Capacity-factor drop accounting of the most recent step: router
+    /// load per expert, the per-expert capacity, and how many
+    /// assignments exceeded it.  `None` before the first step or when
+    /// the mesh has no expert axis.
+    pub fn last_moe_stats(&self) -> Option<MoeStepStats> {
+        self.core.borrow().moe_stats.clone()
     }
 
     /// Collectives (including p2p sends) executed so far.
@@ -654,22 +798,23 @@ impl MeshTrainer {
     pub fn lower_step(&self) -> Result<CollectiveSchedule> {
         let core = self.core.borrow();
         anyhow::ensure!(core.initialized, "MeshTrainer::lower_step before init/restore");
-        let (fs, ms, ps, g, rep) = (core.fs, core.ms, core.ps, core.g, core.rep);
+        let (fs, ms, ps, es, g, rep) = (core.fs, core.ms, core.ps, core.es, core.g, core.rep);
         let ic = &self.opts.interconnect;
         let mut entries = Vec::new();
         for (t, name) in core.names.iter().enumerate() {
             let chunk_len = core.devices[0][t].len();
             if core.sharded[t] {
-                // per-stage payloads: a stage only moves its layer slice
-                let stage_bytes = (chunk_len * g * 4) as f64;
-                let block_bytes = stage_bytes / ms as f64;
+                // per-cell payloads: a (stage, expert-rank) cell only
+                // moves its own layer/expert-bank slice
+                let cell_bytes = (chunk_len * g * 4) as f64;
+                let block_bytes = cell_bytes / ms as f64;
                 if fs > 1 {
                     entries.push(ScheduleEntry {
                         phase: SchedulePhase::Gather,
                         collective: Collective::AllGather,
                         axis: "fsdp".into(),
                         group: fs,
-                        count: rep * ps * ms,
+                        count: rep * ps * es * ms,
                         tensor: name.clone(),
                         bytes: block_bytes,
                         cost_s: hierarchical(Collective::AllGather, block_bytes, fs, ic),
@@ -680,7 +825,7 @@ impl MeshTrainer {
                         collective: Collective::ReduceScatter,
                         axis: "fsdp".into(),
                         group: fs,
-                        count: rep * ps * ms,
+                        count: rep * ps * es * ms,
                         tensor: name.clone(),
                         bytes: block_bytes,
                         cost_s: hierarchical(Collective::ReduceScatter, block_bytes, fs, ic),
@@ -693,10 +838,10 @@ impl MeshTrainer {
                         collective: Collective::AllGather,
                         axis: "model".into(),
                         group: ms,
-                        count: rep * ps * fs,
+                        count: rep * ps * es * fs,
                         tensor: name.clone(),
-                        bytes: stage_bytes,
-                        cost_s: hierarchical(Collective::AllGather, stage_bytes, ms, ic),
+                        bytes: cell_bytes,
+                        cost_s: hierarchical(Collective::AllGather, cell_bytes, ms, ic),
                         overlappable: true,
                     });
                 }
@@ -707,7 +852,7 @@ impl MeshTrainer {
                         collective: Collective::AllReduce,
                         axis: "data".into(),
                         group: rep,
-                        count: ps * g,
+                        count: ps * es * g,
                         tensor: name.clone(),
                         bytes: shard_bytes,
                         cost_s: hierarchical(Collective::AllReduce, shard_bytes, rep, ic),
@@ -736,12 +881,36 @@ impl MeshTrainer {
                 collective: Collective::AllReduce,
                 axis: "model".into(),
                 group: ms,
-                count: rep * ps * fs,
+                count: rep * ps * es * fs,
                 tensor: "activations".into(),
                 bytes: act,
                 cost_s: hierarchical(Collective::AllReduce, act, ms, ic),
                 overlappable: false,
             });
+        }
+        if es > 1 {
+            // MoE token dispatch + combine: what the simulator actually
+            // moves — each expert rank's (token, target) payload, two
+            // all-to-alls per step.  Overlappable: expert compute of
+            // already-arrived chunks hides the tail of the exchange.
+            let batch_tokens = self.desc.batch * self.desc.seq;
+            let tok_bytes = (2 * batch_tokens / es * 4) as f64;
+            for (phase, tensor) in [
+                (SchedulePhase::Compute, "moe-dispatch"),
+                (SchedulePhase::Compute, "moe-combine"),
+            ] {
+                entries.push(ScheduleEntry {
+                    phase,
+                    collective: Collective::AllToAll,
+                    axis: "expert".into(),
+                    group: es,
+                    count: rep * ps * g,
+                    tensor: tensor.into(),
+                    bytes: tok_bytes,
+                    cost_s: hierarchical(Collective::AllToAll, tok_bytes, es, ic),
+                    overlappable: true,
+                });
+            }
         }
         if ps > 1 {
             // Stage-boundary p2p: each of the `m` microbatches crosses
@@ -762,7 +931,7 @@ impl MeshTrainer {
                     collective: Collective::P2P,
                     axis: "pipeline".into(),
                     group: ps,
-                    count: rep * g,
+                    count: rep * es * g,
                     tensor: tensor.into(),
                     bytes,
                     cost_s: (ps - 1) as f64
@@ -800,13 +969,28 @@ impl TrainBackend for MeshTrainer {
         core.inner
             .restore_from_host(&full, at_step)
             .context("installing gathered mesh state")?;
-        // 2. compute: with a pipeline axis, the microbatch payloads
-        // first travel the stage chain (forward slots, in schedule
-        // order) and the global batch is reassembled at the last stage
-        let (tokens, targets) = if core.ps > 1 {
-            core.pipeline_forward(&self.pipe, tokens, targets)?
+        // 2. compute: with an expert axis, the batch first runs the MoE
+        // dispatch/combine round trip over the expert subgroup (two real
+        // all-to-alls; the router's drop accounting lands in
+        // `last_moe_stats`)
+        let (tokens, targets) = if core.es > 1 {
+            core.expert_round_trip(
+                tokens,
+                targets,
+                self.opts.num_experts,
+                self.opts.active_experts,
+                self.opts.capacity_factor,
+            )?
         } else {
             (tokens.to_vec(), targets.to_vec())
+        };
+        // … then, with a pipeline axis, the microbatch payloads travel
+        // the stage chain (forward slots, in schedule order) and the
+        // global batch is reassembled at the last stage
+        let (tokens, targets) = if core.ps > 1 {
+            core.pipeline_forward(&self.pipe, &tokens, &targets)?
+        } else {
+            (tokens, targets)
         };
         let raw = core.inner.step(&tokens, &targets)?;
         // tensor-parallel activation reduction: reassemble the loss from
@@ -919,6 +1103,9 @@ pub fn mesh_from_config(cfg: &ConfigNode) -> Result<MeshTrainer> {
             interconnect,
             activation_bytes: 0.0,
             pipeline_schedule,
+            num_experts: cfg.get_int("num_experts").unwrap_or(1).max(1) as usize,
+            active_experts: cfg.get_int("active_experts").unwrap_or(1).max(1) as usize,
+            capacity_factor: cfg.get_float("capacity_factor").unwrap_or(1.25),
         },
     )
 }
@@ -950,6 +1137,12 @@ pub fn mesh_trainer_from_plan(plan: &Plan, inner: Box<dyn TrainBackend>) -> Resu
             interconnect,
             activation_bytes: 0.0,
             pipeline_schedule: plan.pipeline.kind,
+            // the model's expert bank flows in from the plan's shape (an
+            // expert axis over a dense model leaves 1 expert per rank
+            // degenerate and is rejected by the constructor)
+            num_experts: (plan.shape.num_experts as usize).max(1),
+            active_experts: (plan.shape.active_experts as usize).max(1),
+            capacity_factor: plan.capacity_factor,
         },
     )
 }
@@ -1087,16 +1280,21 @@ mod tests {
     }
 
     #[test]
-    fn expert_axis_is_rejected_but_pipeline_is_lowered() {
-        // expert stays unsupported …
-        let mut opts = MeshOptions::for_mesh(1, 2, 1);
-        opts.strategy.expert = 2;
-        let err = MeshTrainer::new(mock(), opts).unwrap_err();
-        assert!(format!("{err:#}").contains("expert"), "{err:#}");
-        // … pipeline is now a real fourth axis
+    fn expert_and_pipeline_axes_are_both_lowered() {
+        // the expert axis is a real fifth axis …
+        let mesh =
+            MeshTrainer::new(mock(), MeshOptions::for_mesh5(1, 1, 1, 1, 2, 1)).unwrap();
+        assert_eq!(mesh.num_devices(), 2);
+        assert_eq!(mesh.strategy().expert, 2);
+        assert!(mesh.descriptor().name.starts_with("mesh[1x1x1x1x2]:"));
+        // … alongside the pipeline axis
         let mesh = MeshTrainer::new(mock(), MeshOptions::for_mesh4(1, 2, 1, 1, 4)).unwrap();
         assert_eq!(mesh.num_devices(), 2);
         assert_eq!(mesh.pipeline_schedule().stages, 2);
+        // … and the two compose
+        let mesh =
+            MeshTrainer::new(mock(), MeshOptions::for_mesh5(1, 2, 1, 1, 2, 4)).unwrap();
+        assert_eq!(mesh.num_devices(), 4);
     }
 
     #[test]
@@ -1109,6 +1307,153 @@ mod tests {
         let err =
             MeshTrainer::new(mock(), MeshOptions::for_mesh4(1, 2, 1, 1, 7)).unwrap_err();
         assert!(format!("{err:#}").contains("does not divide"), "{err:#}");
+    }
+
+    #[test]
+    fn infeasible_expert_shapes_are_rejected_up_front() {
+        // expert bank does not partition over the axis
+        let opts = MeshOptions::for_mesh5(1, 1, 1, 1, 4, 1).with_moe(6, 2, 1.25);
+        let err = MeshTrainer::new(mock(), opts).unwrap_err();
+        assert!(format!("{err:#}").contains("expert"), "{err:#}");
+        // more expert ranks than experts
+        let opts = MeshOptions::for_mesh5(1, 1, 1, 1, 8, 1).with_moe(4, 2, 1.25);
+        assert!(MeshTrainer::new(mock(), opts).is_err());
+        // active_experts out of range
+        let opts = MeshOptions::for_mesh5(1, 1, 1, 1, 2, 1).with_moe(4, 5, 1.25);
+        let err = MeshTrainer::new(mock(), opts).unwrap_err();
+        assert!(format!("{err:#}").contains("active_experts"), "{err:#}");
+        // nonsense capacity factor
+        let opts = MeshOptions::for_mesh5(1, 1, 1, 1, 2, 1).with_moe(4, 2, 0.0);
+        assert!(MeshTrainer::new(mock(), opts).is_err());
+        // batch does not divide across the expert ranks (2×32 tokens)
+        let inner = Box::new(MockTrainBackend::new(MockTrainBackendOptions {
+            seq: 31,
+            ..Default::default()
+        }));
+        let err =
+            MeshTrainer::new(inner, MeshOptions::for_mesh5(1, 1, 1, 1, 4, 1)).unwrap_err();
+        assert!(format!("{err:#}").contains("expert ranks"), "{err:#}");
+    }
+
+    #[test]
+    fn expert_mesh_matches_single_device_bitwise_and_accounts_drops() {
+        let mut single = mock();
+        single.init(13).unwrap();
+        let ls = run_steps(&mut *single, 17, 8);
+        let ref_state = state_bits(&*single);
+        // expert-only, and expert × everything else
+        for opts in [
+            MeshOptions::for_mesh5(1, 1, 1, 1, 4, 1),
+            MeshOptions::for_mesh5(2, 1, 2, 1, 2, 1),
+            MeshOptions::for_mesh5(1, 2, 2, 2, 2, 4),
+        ] {
+            let devices = opts.strategy.total_chips();
+            let mut mesh = MeshTrainer::new(mock(), opts).unwrap();
+            mesh.init(13).unwrap();
+            assert_eq!(mesh.num_devices(), devices);
+            assert!(mesh.last_moe_stats().is_none(), "no stats before a step");
+            let lm = run_steps(&mut mesh, 17, 8);
+            assert_eq!(ls, lm, "{devices}-device expert mesh: losses diverged");
+            assert_eq!(ref_state, state_bits(&mesh), "expert mesh: state diverged");
+            assert!(mesh.collective_ops() > 0, "the expert mesh must communicate");
+            // the drop accounting is populated and self-consistent
+            let stats = mesh.last_moe_stats().expect("stats after a step");
+            let d = MockTrainBackendOptions::default();
+            assert_eq!(stats.tokens, d.batch * d.seq);
+            assert_eq!(stats.assignments, stats.tokens * 2);
+            assert_eq!(stats.expert_load.iter().sum::<usize>(), stats.assignments);
+            let over: usize = stats
+                .expert_load
+                .iter()
+                .map(|&l| l.saturating_sub(stats.capacity))
+                .sum();
+            assert_eq!(stats.dropped, over);
+        }
+    }
+
+    #[test]
+    fn expert_fault_corrupts_the_trajectory() {
+        // a one-shot bit flip on the expert-dispatch all-to-all must
+        // change the numerics: the token payloads genuinely travel the
+        // subgroup.  (One-shot, because a *persistent* rank-0 hook would
+        // hit the same element again on the combine pass and XOR itself
+        // away for rank-0-to-rank-0 buckets.)
+        let mut clean =
+            MeshTrainer::new(mock(), MeshOptions::for_mesh5(1, 1, 1, 1, 2, 1)).unwrap();
+        clean.init(0).unwrap();
+        let clean_losses = run_steps(&mut clean, 3, 4);
+        let hit = std::sync::atomic::AtomicBool::new(false);
+        let mut faulty = MeshTrainer::new(mock(), MeshOptions::for_mesh5(1, 1, 1, 1, 2, 1))
+            .unwrap()
+            .with_fault(Box::new(move |r, _i, x| {
+                if r == 0 && !hit.swap(true, std::sync::atomic::Ordering::SeqCst) {
+                    f32::from_bits(x.to_bits() ^ 0x1)
+                } else {
+                    x
+                }
+            }));
+        faulty.init(0).unwrap();
+        let faulty_losses = run_steps(&mut faulty, 3, 4);
+        assert_ne!(clean_losses, faulty_losses, "dispatch corruption must be visible");
+    }
+
+    #[test]
+    fn expert_lower_step_emits_dispatch_and_combine_all_to_alls() {
+        use crate::perfmodel::comms::Collective;
+        let mut mesh =
+            MeshTrainer::new(mock(), MeshOptions::for_mesh5(2, 1, 2, 1, 2, 1)).unwrap();
+        mesh.init(0).unwrap();
+        let sched = mesh.lower_step().unwrap();
+        let a2a: Vec<&ScheduleEntry> = sched
+            .entries
+            .iter()
+            .filter(|e| e.axis == "expert")
+            .collect();
+        assert_eq!(a2a.len(), 2, "dispatch + combine: {sched:?}");
+        let d = MockTrainBackendOptions::default();
+        for e in &a2a {
+            assert_eq!(e.collective, Collective::AllToAll);
+            assert_eq!(e.group, 2);
+            // the actual wire payload: (token, target) pairs per rank
+            assert_eq!(e.bytes, (2 * d.batch * d.seq / 2 * 4) as f64);
+            assert!(e.cost_s > 0.0);
+        }
+        // subgroup instances still tile the mesh exactly
+        for e in &sched.entries {
+            if e.tensor != "activations" {
+                assert_eq!(e.group * e.count, 8, "{e:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn expert_mesh_composes_from_config() {
+        use crate::config::registry::default_config;
+        use crate::config::Value;
+        let mut cfg = default_config("MeshTrainer").unwrap();
+        cfg.set("mesh_shape", Value::IntList(vec![1, 2, 2])).unwrap();
+        cfg.set(
+            "mesh_axis_names",
+            Value::StrList(vec!["data".into(), "fsdp".into(), "expert".into()]),
+        )
+        .unwrap();
+        cfg.set("num_experts", Value::Int(4)).unwrap();
+        cfg.set("active_experts", Value::Int(2)).unwrap();
+        cfg.set("capacity_factor", Value::Float(1.5)).unwrap();
+        let mut mesh = mesh_from_config(&cfg).unwrap();
+        assert_eq!(mesh.num_devices(), 4);
+        assert_eq!(mesh.strategy().expert, 2);
+        assert!(mesh.descriptor().name.starts_with("mesh[1x1x2x1x2]:"));
+        mesh.init(21).unwrap();
+        let lm = run_steps(&mut mesh, 8, 5);
+        let mut single = mock();
+        single.init(21).unwrap();
+        let ls = run_steps(&mut *single, 8, 5);
+        assert_eq!(ls, lm, "config-built expert mesh must preserve the numerics");
+        assert_eq!(mesh.last_moe_stats().unwrap().capacity, 48); // ceil(2·64/4 · 1.5)
+        // an expert bank the axis cannot partition is a config error
+        cfg.set("num_experts", Value::Int(3)).unwrap();
+        assert!(mesh_from_config(&cfg).is_err());
     }
 
     #[test]

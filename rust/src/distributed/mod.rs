@@ -17,14 +17,17 @@
 //!
 //! Mesh-sharded execution lives in [`mesh`]: a [`mesh::MeshTrainer`]
 //! partitions parameters/gradients/optimizer state over a
-//! DP×PP×FSDP×TP device grid per the composer's sharding plan (layers
-//! across pipeline stages) and lowers every step to an explicit
+//! DP×PP×FSDP×TP×EP device grid per the composer's sharding plan
+//! (layers across pipeline stages, expert banks across expert ranks)
+//! and lowers every step to an explicit
 //! [`crate::composer::CollectiveSchedule`] executed through
 //! [`SimCollective`] subgroups — microbatch stage-boundary transfers
-//! included, in [`crate::composer::PipelineSchedule`] order.  Because
-//! it is itself a `TrainBackend`, fleet replicas compose with meshes:
-//! DP across the fleet, PP/FSDP/TP inside each replica, with recovery
-//! unchanged (see `docs/sharding.md` and `docs/pipeline.md`).
+//! and the MoE token dispatch/combine all-to-alls ([`moe`]) included,
+//! in [`crate::composer::PipelineSchedule`] order.  Because it is
+//! itself a `TrainBackend`, fleet replicas compose with meshes: DP
+//! across the fleet, PP/FSDP/TP/EP inside each replica, with recovery
+//! unchanged (see `docs/sharding.md`, `docs/pipeline.md`, and
+//! `docs/moe.md`).
 
 pub mod cluster;
 pub mod collective;
@@ -32,6 +35,7 @@ pub mod data_parallel;
 pub mod failure;
 pub mod fleet;
 pub mod mesh;
+pub mod moe;
 pub mod recovery;
 pub mod scheduler;
 

@@ -1,0 +1,395 @@
+//! Mixture-of-experts routing for the mesh trainer's expert axis.
+//!
+//! The expert axis (§4.2's fifth parallelism dimension) shards a bank of
+//! `num_experts` expert FFNs across `expert` mesh ranks; every step,
+//! each rank's tokens are **dispatched** to the rank owning their
+//! routed expert through a subgroup-scoped
+//! [`crate::distributed::SimCollective::all_to_all`], processed, and
+//! **combined** back with a second all-to-all.  This module holds the
+//! routing policy and the dispatch bookkeeping; execution lives in
+//! [`crate::distributed::mesh::MeshTrainer`].
+//!
+//! Determinism is the design constraint throughout: the router scores
+//! experts with a keyed integer mix (no floats), breaks ties toward the
+//! lower expert index, and the dispatch plan orders every bucket by
+//! source-token position — so replaying a step reproduces the same
+//! permutation, and the combine pass can restore the exact token order
+//! from the plan alone.  Transport moves bits without arithmetic, which
+//! is what keeps an expert-sharded mesh bit-identical to the 1-device
+//! run (see `docs/moe.md` for the full argument).
+
+use anyhow::Result;
+
+/// Deterministic router score of `(token, expert)` — a SplitMix64-style
+/// integer mix, so scoring is exact, platform-independent, and free of
+/// float comparison hazards.  Higher wins.
+pub fn expert_score(token: i32, expert: usize) -> u64 {
+    let mut z = (token as u32 as u64)
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add((expert as u64).wrapping_mul(0xBF58_476D_1CE4_E5B9));
+    z ^= z >> 30;
+    z = z.wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Top-`k` expert choice for one token: experts ranked by
+/// [`expert_score`] descending, ties broken toward the **lower expert
+/// index** (deterministic — no dependence on sort stability or float
+/// rounding).  The first entry is the primary expert, which is where
+/// the token is physically dispatched.
+///
+/// ```
+/// use axlearn::distributed::moe::route_top_k;
+///
+/// let picks = route_top_k(42, 8, 2);
+/// assert_eq!(picks.len(), 2);
+/// assert_ne!(picks[0], picks[1]);
+/// assert!(picks.iter().all(|&e| e < 8));
+/// // deterministic: the same token always routes the same way
+/// assert_eq!(picks, route_top_k(42, 8, 2));
+/// // k = num_experts degenerates to a ranking of the full bank
+/// let all = route_top_k(7, 4, 4);
+/// let mut sorted = all.clone();
+/// sorted.sort_unstable();
+/// assert_eq!(sorted, vec![0, 1, 2, 3]);
+/// ```
+pub fn route_top_k(token: i32, num_experts: usize, k: usize) -> Vec<usize> {
+    // score once per expert, then sort the cached values by
+    // (score desc, index asc); the index tiebreak makes the ordering
+    // total even if two scores collide
+    let mut ranked: Vec<(u64, usize)> = (0..num_experts)
+        .map(|e| (expert_score(token, e), e))
+        .collect();
+    ranked.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+    ranked.truncate(k.min(num_experts).max(1));
+    ranked.into_iter().map(|(_, e)| e).collect()
+}
+
+/// Per-expert token capacity under a capacity factor: the classic
+/// `ceil(capacity_factor · k · tokens / num_experts)` budget — a factor
+/// of 1.0 is an exactly-balanced load, above 1.0 buys headroom for hot
+/// experts, below 1.0 forces drops.
+///
+/// ```
+/// use axlearn::distributed::moe::capacity_per_expert;
+///
+/// // 64 tokens, top-2 of 8 experts, 1.25x headroom: ceil(2·64/8 · 1.25)
+/// assert_eq!(capacity_per_expert(64, 8, 2, 1.25), 20);
+/// // capacity never rounds to zero while tokens flow
+/// assert_eq!(capacity_per_expert(1, 64, 1, 0.1), 1);
+/// ```
+pub fn capacity_per_expert(tokens: usize, num_experts: usize, k: usize, factor: f64) -> usize {
+    let ideal = (k.max(1) * tokens) as f64 / num_experts.max(1) as f64;
+    ((ideal * factor).ceil() as usize).max(1)
+}
+
+/// Capacity-factor drop accounting for one step, surfaced through
+/// [`crate::distributed::mesh::MeshTrainer::last_moe_stats`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct MoeStepStats {
+    /// Tokens routed this step (the global batch).
+    pub tokens: usize,
+    /// Router assignments (`tokens × active_experts`).
+    pub assignments: usize,
+    /// Per-expert assignment load, `num_experts` entries.
+    pub expert_load: Vec<usize>,
+    /// Per-expert capacity from [`capacity_per_expert`].
+    pub capacity: usize,
+    /// Assignments beyond capacity — what a capacity-enforcing kernel
+    /// would drop.  The simulator *accounts* drops without applying
+    /// them: the global compute is exact (GSPMD semantics), so the
+    /// number is a load-balance diagnostic, not a numerics change.
+    pub dropped: usize,
+}
+
+impl MoeStepStats {
+    /// Fraction of router assignments over capacity.
+    pub fn drop_fraction(&self) -> f64 {
+        if self.assignments == 0 {
+            0.0
+        } else {
+            self.dropped as f64 / self.assignments as f64
+        }
+    }
+}
+
+/// A planned expert dispatch for one step: the all-to-all send buckets,
+/// the per-source destination trace the combine pass replays, and the
+/// step's drop accounting.
+pub struct DispatchPlan {
+    /// `buckets[src][dst]`: packed `(token, target)` payloads rank `src`
+    /// sends to rank `dst` (bit-cast `i32 → f32`, lossless for every id
+    /// — see the packing helpers below).
+    pub buckets: Vec<Vec<Vec<f32>>>,
+    /// `dest_of[src]`: for each of `src`'s local tokens, in order, the
+    /// expert rank it was dispatched to.  This is the permutation record
+    /// [`reassemble`] inverts.
+    pub dest_of: Vec<Vec<usize>>,
+    /// Capacity/drop accounting for the step.
+    pub stats: MoeStepStats,
+}
+
+/// Lossless transport encoding: token ids ride the f32 wire bit-cast,
+/// never value-cast (an `as f32` round trip would corrupt ids above
+/// 2^24).
+fn pack(x: i32) -> f32 {
+    f32::from_bits(x as u32)
+}
+
+fn unpack(x: f32) -> i32 {
+    x.to_bits() as i32
+}
+
+/// Plan the expert dispatch of one global batch over an `expert_ranks`
+/// subgroup: tokens partition contiguously across the ranks (the
+/// expert-group data distribution), each token's primary expert comes
+/// from [`route_top_k`], and each rank's send bucket for peer `d` holds
+/// its tokens bound for experts living on `d` (experts partition
+/// contiguously: expert `x` lives on rank `x / (num_experts /
+/// expert_ranks)`).  Load/drop accounting covers all `k` assignments.
+pub fn plan_dispatch(
+    tokens: &[i32],
+    targets: &[i32],
+    expert_ranks: usize,
+    num_experts: usize,
+    active_experts: usize,
+    capacity_factor: f64,
+) -> Result<DispatchPlan> {
+    anyhow::ensure!(
+        tokens.len() == targets.len(),
+        "token/target length mismatch: {} vs {}",
+        tokens.len(),
+        targets.len()
+    );
+    anyhow::ensure!(expert_ranks >= 1, "expert dispatch over zero ranks");
+    anyhow::ensure!(
+        num_experts >= expert_ranks && num_experts % expert_ranks == 0,
+        "{num_experts} experts do not partition over {expert_ranks} expert ranks"
+    );
+    anyhow::ensure!(
+        !tokens.is_empty() && tokens.len() % expert_ranks == 0,
+        "batch of {} tokens does not divide across {expert_ranks} expert ranks",
+        tokens.len()
+    );
+    let per_rank = tokens.len() / expert_ranks;
+    let experts_per_rank = num_experts / expert_ranks;
+    let k = active_experts.clamp(1, num_experts);
+    let mut buckets = vec![vec![Vec::new(); expert_ranks]; expert_ranks];
+    let mut dest_of = vec![Vec::with_capacity(per_rank); expert_ranks];
+    let mut expert_load = vec![0usize; num_experts];
+    for src in 0..expert_ranks {
+        for i in 0..per_rank {
+            let idx = src * per_rank + i;
+            let picks = route_top_k(tokens[idx], num_experts, k);
+            for &e in &picks {
+                expert_load[e] += 1;
+            }
+            let dst = picks[0] / experts_per_rank;
+            buckets[src][dst].push(pack(tokens[idx]));
+            buckets[src][dst].push(pack(targets[idx]));
+            dest_of[src].push(dst);
+        }
+    }
+    let capacity = capacity_per_expert(tokens.len(), num_experts, k, capacity_factor);
+    let dropped = expert_load.iter().map(|&l| l.saturating_sub(capacity)).sum();
+    Ok(DispatchPlan {
+        buckets,
+        dest_of,
+        stats: MoeStepStats {
+            tokens: tokens.len(),
+            assignments: tokens.len() * k,
+            expert_load,
+            capacity,
+            dropped,
+        },
+    })
+}
+
+/// Invert a dispatch: given the buckets each source rank got back from
+/// the combine all-to-all (`returned[src][dst]`, packed `(token,
+/// target)` pairs in dispatch order) and the plan's destination trace,
+/// rebuild the global `(tokens, targets)` batch in its original order.
+/// Pure bookkeeping over the recorded permutation — on a healthy
+/// interconnect the result is bit-identical to the dispatched batch.
+pub fn reassemble(
+    dest_of: &[Vec<usize>],
+    returned: &[Vec<Vec<f32>>],
+) -> Result<(Vec<i32>, Vec<i32>)> {
+    anyhow::ensure!(
+        dest_of.len() == returned.len(),
+        "combine rank count mismatch: {} vs {}",
+        dest_of.len(),
+        returned.len()
+    );
+    let total: usize = dest_of.iter().map(|d| d.len()).sum();
+    let mut tokens = Vec::with_capacity(total);
+    let mut targets = Vec::with_capacity(total);
+    for (src, dests) in dest_of.iter().enumerate() {
+        anyhow::ensure!(
+            returned[src].len() == dest_of.len(),
+            "combine rank {src} returned {} buckets for {} ranks: a peer's bucket \
+             vanished in flight",
+            returned[src].len(),
+            dest_of.len()
+        );
+        // per-peer read cursors: buckets preserve dispatch order, so
+        // walking the destination trace pops each bucket in sequence
+        let mut cursor = vec![0usize; returned[src].len()];
+        for &dst in dests {
+            let bucket = &returned[src][dst];
+            anyhow::ensure!(
+                cursor[dst] + 2 <= bucket.len(),
+                "combine bucket {src}<-{dst} ran short: a token went missing in flight"
+            );
+            tokens.push(unpack(bucket[cursor[dst]]));
+            targets.push(unpack(bucket[cursor[dst] + 1]));
+            cursor[dst] += 2;
+        }
+        for (dst, &c) in cursor.iter().enumerate() {
+            anyhow::ensure!(
+                c == returned[src][dst].len(),
+                "combine bucket {src}<-{dst} has {} unclaimed values: \
+                 a token was fabricated in flight",
+                returned[src][dst].len() - c
+            );
+        }
+    }
+    Ok((tokens, targets))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distributed::SimCollective;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn router_is_deterministic_and_in_range() {
+        for token in [-5i32, 0, 1, 1000, i32::MAX] {
+            let picks = route_top_k(token, 8, 2);
+            assert_eq!(picks, route_top_k(token, 8, 2));
+            assert_eq!(picks.len(), 2);
+            assert!(picks[0] != picks[1] && picks.iter().all(|&e| e < 8));
+        }
+    }
+
+    #[test]
+    fn router_tie_break_prefers_the_lower_index() {
+        // construct a tie by ranking a 1-expert bank (every score is the
+        // single expert's), then check the general ordering rule: equal
+        // scores order by index
+        assert_eq!(route_top_k(3, 1, 1), vec![0]);
+        // the full ranking is a permutation for any k = n
+        for token in 0..64 {
+            let mut all = route_top_k(token, 16, 16);
+            all.sort_unstable();
+            assert_eq!(all, (0..16).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn router_spreads_load_roughly_evenly() {
+        // hash routing over many tokens should not collapse onto one
+        // expert (a degenerate router would make the expert axis
+        // pointless and hide dispatch bugs)
+        let mut load = vec![0usize; 8];
+        for token in 0..4096 {
+            load[route_top_k(token, 8, 1)[0]] += 1;
+        }
+        let (min, max) = (load.iter().min().unwrap(), load.iter().max().unwrap());
+        assert!(*min > 256 && *max < 1024, "{load:?}");
+    }
+
+    #[test]
+    fn capacity_math() {
+        assert_eq!(capacity_per_expert(64, 8, 2, 1.0), 16);
+        assert_eq!(capacity_per_expert(64, 8, 2, 1.25), 20);
+        assert_eq!(capacity_per_expert(64, 8, 1, 0.5), 4);
+        assert_eq!(capacity_per_expert(2, 8, 1, 0.1), 1, "floor at 1");
+    }
+
+    #[test]
+    fn dispatch_combine_round_trip_is_identity_over_random_batches() {
+        // the property the mesh's bit-identity rests on: dispatch through
+        // a real all-to-all, combine back, and the batch is bit-identical
+        // in its original order
+        let mut rng = Rng::new(3);
+        for _ in 0..20 {
+            let es = 1usize << rng.gen_range(0, 4); // 1, 2, 4, 8
+            let per_rank = rng.gen_range(1, 9) as usize * 2;
+            let n = es * per_rank;
+            let tokens: Vec<i32> =
+                (0..n).map(|_| rng.gen_range(0, 1 << 30) as i32).collect();
+            let targets: Vec<i32> =
+                (0..n).map(|_| rng.gen_range(0, 1 << 30) as i32).collect();
+            let plan = plan_dispatch(&tokens, &targets, es, 2 * es, 2, 1.25).unwrap();
+            let mut c = SimCollective::new();
+            let dispatched = c.all_to_all(&plan.buckets).unwrap();
+            let returned = c.all_to_all(&dispatched).unwrap();
+            let (tok2, tgt2) = reassemble(&plan.dest_of, &returned).unwrap();
+            assert_eq!(tokens, tok2, "es={es}");
+            assert_eq!(targets, tgt2, "es={es}");
+        }
+    }
+
+    #[test]
+    fn dispatch_conserves_tokens_and_counts_load() {
+        let tokens: Vec<i32> = (0..64).collect();
+        let targets: Vec<i32> = (64..128).collect();
+        let plan = plan_dispatch(&tokens, &targets, 4, 8, 2, 1.0).unwrap();
+        let sent: usize = plan.buckets.iter().flatten().map(|b| b.len()).sum();
+        assert_eq!(sent, 2 * 64, "every (token, target) pair ships exactly once");
+        assert_eq!(plan.stats.tokens, 64);
+        assert_eq!(plan.stats.assignments, 128);
+        assert_eq!(plan.stats.expert_load.iter().sum::<usize>(), 128);
+        assert_eq!(plan.stats.capacity, 16);
+        // drops are exactly the over-capacity remainder
+        let want: usize = plan
+            .stats
+            .expert_load
+            .iter()
+            .map(|&l| l.saturating_sub(16))
+            .sum();
+        assert_eq!(plan.stats.dropped, want);
+        // a generous factor absorbs the imbalance entirely
+        let roomy = plan_dispatch(&tokens, &targets, 4, 8, 2, 8.0).unwrap();
+        assert_eq!(roomy.stats.dropped, 0);
+        assert_eq!(roomy.stats.drop_fraction(), 0.0);
+    }
+
+    #[test]
+    fn infeasible_dispatch_shapes_are_rejected() {
+        let t: Vec<i32> = (0..8).collect();
+        // experts do not partition over the ranks
+        assert!(plan_dispatch(&t, &t, 4, 6, 1, 1.0).is_err());
+        assert!(plan_dispatch(&t, &t, 8, 4, 1, 1.0).is_err());
+        // batch does not divide across the ranks
+        let odd: Vec<i32> = (0..6).collect();
+        assert!(plan_dispatch(&odd, &odd, 4, 8, 1, 1.0).is_err());
+        // token/target mismatch
+        assert!(plan_dispatch(&t, &t[..4], 2, 4, 1, 1.0).is_err());
+    }
+
+    #[test]
+    fn tampered_combine_is_an_error_not_a_silent_skew() {
+        let tokens: Vec<i32> = (0..16).collect();
+        let plan = plan_dispatch(&tokens, &tokens, 2, 4, 1, 1.0).unwrap();
+        let mut c = SimCollective::new();
+        let dispatched = c.all_to_all(&plan.buckets).unwrap();
+        let mut returned = c.all_to_all(&dispatched).unwrap();
+        // drop one (token, target) pair from a non-empty bucket
+        let (s, d) = (0..2)
+            .flat_map(|s| (0..2).map(move |d| (s, d)))
+            .find(|&(s, d)| !returned[s][d].is_empty())
+            .unwrap();
+        returned[s][d].truncate(returned[s][d].len() - 2);
+        let err = reassemble(&plan.dest_of, &returned).unwrap_err();
+        assert!(format!("{err:#}").contains("missing"), "{err:#}");
+        // a whole per-peer bucket vanishing is caught up front, as an
+        // error rather than an index panic
+        let mut short = c.all_to_all(&dispatched).unwrap();
+        short[0].pop();
+        let err = reassemble(&plan.dest_of, &short).unwrap_err();
+        assert!(format!("{err:#}").contains("vanished"), "{err:#}");
+    }
+}

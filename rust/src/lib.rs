@@ -38,12 +38,13 @@
 //! * [`trainer::backend::TrainBackend`] is the training twin —
 //!   init/step/eval/state ops over PJRT sessions or a deterministic
 //!   mock.  The trainer loop, the data-parallel trainer, the
-//!   [`distributed::mesh::MeshTrainer`] (DP×PP×FSDP×TP over explicit
-//!   [`composer::CollectiveSchedule`]s and GPipe/1F1B microbatch
-//!   grids — and itself a `TrainBackend`, so meshes nest inside
-//!   fleets), and the fault-tolerant
-//!   [`distributed::fleet::FleetTrainer`] are policies over it
-//!   (`docs/training.md`, `docs/sharding.md`, `docs/pipeline.md`).
+//!   [`distributed::mesh::MeshTrainer`] (DP×PP×FSDP×TP×EP over
+//!   explicit [`composer::CollectiveSchedule`]s, GPipe/1F1B microbatch
+//!   grids, and [`distributed::moe`] token dispatch — and itself a
+//!   `TrainBackend`, so meshes nest inside fleets), and the
+//!   fault-tolerant [`distributed::fleet::FleetTrainer`] are policies
+//!   over it (`docs/training.md`, `docs/sharding.md`,
+//!   `docs/pipeline.md`, `docs/moe.md`).
 //!
 //! Python never runs on the request path: artifact generation
 //! (`python/compile/aot.py`) is build-time only; everything here

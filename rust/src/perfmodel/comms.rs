@@ -51,6 +51,34 @@ pub fn inter_domain(c: Collective, bytes: f64, n_domains: usize, ic: &Interconne
     bytes * payload_factor(c, nf) / ic.inter_bw + ic.inter_latency * nf.log2().ceil()
 }
 
+/// Per-replica MoE token payload of one expert dispatch/combine
+/// all-to-all: one `[tokens/dp, model_dim]` bf16 block, with the token
+/// count clamped so a degenerate `global_batch < dp` still moves one
+/// sequence per replica.
+///
+/// The single source of truth for the expert `tok_bytes` formula —
+/// [`crate::perfmodel::estimator::estimate_step`],
+/// [`crate::composer::build_schedule`], and the bench-gate sweep all
+/// call it, which is what makes the "schedule prices exactly what the
+/// estimator prices" assertion in `bench_mesh` span the estimator
+/// instead of comparing two copies.
+pub fn expert_tok_bytes(global_batch: usize, seq_len: usize, dp: usize, model_dim: u64) -> f64 {
+    let dp = dp.max(1);
+    ((global_batch.max(dp) * seq_len) / dp) as f64 * model_dim as f64 * 2.0
+}
+
+/// Total per-step expert-dispatch communication: 2 dispatch + 2 combine
+/// all-to-alls per resident MoE layer (forward and backward), over the
+/// expert subgroup.  Shared companion of [`expert_tok_bytes`].
+pub fn expert_alltoall_cost(
+    tok_bytes: f64,
+    layers_resident: f64,
+    expert: usize,
+    ic: &Interconnect,
+) -> f64 {
+    4.0 * layers_resident * hierarchical(Collective::AllToAll, tok_bytes, expert, ic)
+}
+
 /// Hierarchical collective: `n` chips spread over domains of
 /// `domain_size`.  Cost = intra phase + inter phase (+ intra broadcast for
 /// all-reduce, folded into the payload factors).

@@ -119,7 +119,10 @@ pub fn estimate_step(spec: &StepSpec, chip: &ChipSpec, profile: &SystemProfile) 
     let n_params = shape.params() as f64;
 
     // ---- memory budget --------------------------------------------------
-    let shard = (s.fsdp * s.tensor * s.pipeline) as f64;
+    // expert ranks hold disjoint expert banks, so the expert axis shards
+    // optimizer state like the other model axes (SageMaker-style uniform
+    // grid; the mesh trainer partitions state the same way)
+    let shard = (s.fsdp * s.tensor * s.pipeline * s.expert) as f64;
     // bf16 params + f32 master + adam m/v  (14 bytes/param), sharded
     let state_bytes = n_params * 14.0 / shard
         // system-specific unsharded transients (see SystemProfile)
@@ -249,11 +252,17 @@ pub fn estimate_step(spec: &StepSpec, chip: &ChipSpec, profile: &SystemProfile) 
             * super::comms::intra_domain(Collective::AllReduce, act_bytes, s.tensor, ic);
     }
     if s.expert > 1 {
-        // 2 all-to-alls per MoE layer fwd + 2 bwd
-        let tok_bytes = tokens_per_replica as f64 * shape.model_dim as f64 * 2.0;
-        comm_s += 4.0
-            * layers_resident
-            * hierarchical(Collective::AllToAll, tok_bytes, s.expert, ic);
+        // 2 all-to-alls per MoE layer fwd + 2 bwd — the shared formula
+        // (`comms::expert_tok_bytes`/`expert_alltoall_cost`) that
+        // `composer::build_schedule` prices into its AllToAll entries,
+        // so the two cost models cannot drift apart
+        let tok_bytes = super::comms::expert_tok_bytes(
+            spec.global_batch,
+            spec.seq_len,
+            s.data * s.fsdp,
+            shape.model_dim,
+        );
+        comm_s += super::comms::expert_alltoall_cost(tok_bytes, layers_resident, s.expert, ic);
     }
     if s.pipeline > 1 {
         let act_bytes =

@@ -1,0 +1,129 @@
+//! The bench-regression gate, proven in tier-1: the comparison behind
+//! `bench_check` (and the CI `bench` job) must catch injected
+//! regressions, and the committed `benches/baseline.json` must stay
+//! structurally in sync with the sweep it gates.
+//!
+//! Float *values* are compared in the CI bench job (`bench_check`
+//! against the committed baseline), where a drift is an actionable
+//! review signal; here we prove the mechanism and the structure so the
+//! gate can never rot into a no-op.
+
+use axlearn::composer::{
+    compare_to_baseline, mesh_sweep_doc, mesh_sweep_points, BASELINE_DEFAULT_TOL,
+};
+use axlearn::util::json::Json;
+
+fn committed_baseline() -> Json {
+    let path = axlearn::repo_root().join("benches/baseline.json");
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("reading {}: {e}", path.display()));
+    Json::parse(&text).unwrap_or_else(|e| panic!("parsing {}: {e}", path.display()))
+}
+
+#[test]
+fn injected_step_time_regression_fails_the_gate() {
+    // the acceptance check: perturb one simulated step time by 10% and
+    // the gate must flag exactly that metric on exactly that mesh
+    let points = mesh_sweep_points();
+    let baseline = Json::parse(&mesh_sweep_doc(&points).to_string()).unwrap();
+    let mut tampered = points.clone();
+    let idx = tampered.iter().position(|p| p.fits).expect("a feasible mesh");
+    tampered[idx].step_s *= 1.10;
+    let drifts = compare_to_baseline(&tampered, &baseline, BASELINE_DEFAULT_TOL);
+    assert_eq!(drifts.len(), 1, "{drifts:?}");
+    assert!(drifts[0].contains("step_s") && drifts[0].contains(&tampered[idx].mesh));
+}
+
+#[test]
+fn injected_bubble_and_alltoall_regressions_fail_the_gate() {
+    let points = mesh_sweep_points();
+    let baseline = Json::parse(&mesh_sweep_doc(&points).to_string()).unwrap();
+    // a bubble change (e.g. a broken pipeline grid)
+    let mut tampered = points.clone();
+    let pp = tampered.iter().position(|p| p.pipeline > 1).unwrap();
+    tampered[pp].bubble *= 0.5;
+    assert!(compare_to_baseline(&tampered, &baseline, BASELINE_DEFAULT_TOL)
+        .iter()
+        .any(|d| d.contains("bubble")));
+    // an AllToAll cost change (e.g. a broken expert-dispatch payload)
+    let mut tampered = points.clone();
+    let ep = tampered.iter().position(|p| p.expert > 1).unwrap();
+    tampered[ep].alltoall_s *= 2.0;
+    assert!(compare_to_baseline(&tampered, &baseline, BASELINE_DEFAULT_TOL)
+        .iter()
+        .any(|d| d.contains("alltoall_s")));
+}
+
+#[test]
+fn unperturbed_sweep_passes_its_own_serialization() {
+    // compare(compute(), serialize(compute())) must be drift-free, or
+    // the gate would flap on every CI run
+    let points = mesh_sweep_points();
+    let baseline = Json::parse(&mesh_sweep_doc(&points).to_string()).unwrap();
+    let drifts = compare_to_baseline(&points, &baseline, BASELINE_DEFAULT_TOL);
+    assert!(drifts.is_empty(), "{drifts:?}");
+}
+
+#[test]
+fn committed_baseline_is_structurally_current() {
+    // the committed file must parse, gate every swept mesh (same names,
+    // same feasibility split, AllToAll coverage on the expert rows), and
+    // carry every metric the comparison reads — so `bench_check` in CI
+    // can never silently skip a point
+    let baseline = committed_baseline();
+    let points = mesh_sweep_points();
+    let base_points = baseline
+        .get("points")
+        .and_then(|p| p.as_arr())
+        .expect("baseline.json has a points array");
+    assert_eq!(base_points.len(), points.len(), "sweep changed; rerun bench_check --write");
+    for p in &points {
+        let b = base_points
+            .iter()
+            .find(|b| b.get("mesh").and_then(|m| m.as_str()) == Some(p.mesh.as_str()))
+            .unwrap_or_else(|| panic!("baseline lacks mesh {}", p.mesh));
+        assert_eq!(
+            b.get("fits").and_then(|f| f.as_bool()),
+            Some(p.fits),
+            "{}: feasibility split changed; rerun bench_check --write",
+            p.mesh
+        );
+        for metric in ["bubble", "compute_s", "comm_s", "exposed_comm_s", "alltoall_s", "step_s"] {
+            assert!(
+                b.get(metric).and_then(|v| v.as_f64()).is_some(),
+                "{}: baseline lacks {metric}",
+                p.mesh
+            );
+        }
+        // expert rows must gate a real AllToAll cost
+        if p.expert > 1 {
+            assert!(
+                b.get("alltoall_s").and_then(|v| v.as_f64()).unwrap() > 0.0,
+                "{}: baseline AllToAll cost vanished",
+                p.mesh
+            );
+        }
+    }
+}
+
+#[test]
+fn exact_bubbles_in_the_committed_baseline() {
+    // bubbles are exact rationals of the slot grid — independent of any
+    // cost model, so the committed values can be checked bit-for-bit in
+    // tier-1 (a drift here means the baseline predates a grid change)
+    let baseline = committed_baseline();
+    let points = mesh_sweep_points();
+    let base_points = baseline.get("points").and_then(|p| p.as_arr()).unwrap();
+    for p in &points {
+        let b = base_points
+            .iter()
+            .find(|b| b.get("mesh").and_then(|m| m.as_str()) == Some(p.mesh.as_str()))
+            .unwrap();
+        assert_eq!(
+            b.get("bubble").and_then(|v| v.as_f64()).unwrap().to_bits(),
+            p.bubble.to_bits(),
+            "{}: committed bubble is stale",
+            p.mesh
+        );
+    }
+}

@@ -2,18 +2,20 @@
 //! its composition with the fault-tolerant fleet.
 //!
 //! The headline assertion (the paper's "global computation over a device
-//! mesh" made checkable): for a fixed 8-device budget, **every** mesh
-//! factorization — all ten over `data × fsdp × model`, and all twenty
-//! over `data × pipeline × fsdp × model` under both GPipe and 1F1B —
-//! of the mock backend produces final parameters bit-identical to the
+//! mesh" made checkable): for a fixed device budget, **every** mesh
+//! factorization — all ten 3-axis ones of 8 devices, all twenty 4-axis
+//! ones under both GPipe and 1F1B, and all seventy 5-axis
+//! `data × pipeline × fsdp × model × expert` ones of 16 devices — of
+//! the mock backend produces final parameters bit-identical to the
 //! 1-device run on the same seed.  The collectives (FSDP gathers,
 //! reduce-scatters, TP loss reductions, DP syncs, pipeline
-//! stage-boundary sends/recvs) genuinely execute over `SimCollective`
-//! subgroups; binary-tree reduction makes the power-of-two means and
-//! microbatch accumulations exact.  And because a `MeshTrainer` is
-//! itself a `TrainBackend`, a fleet of mesh-sharded replicas —
-//! pipelined included — recovers through a `HostCrash` with the
-//! unchanged multi-tier/hot-swap machinery.
+//! stage-boundary sends/recvs, MoE dispatch/combine all-to-alls)
+//! genuinely execute over `SimCollective` subgroups; binary-tree
+//! reduction makes the power-of-two means and microbatch accumulations
+//! exact, and token transport is pure bit movement.  And because a
+//! `MeshTrainer` is itself a `TrainBackend`, a fleet of mesh-sharded
+//! replicas — pipelined and expert-sharded included — recovers through
+//! a `HostCrash` with the unchanged multi-tier/hot-swap machinery.
 
 use std::path::PathBuf;
 
@@ -78,6 +80,20 @@ fn factorizations4(n: usize) -> Vec<(usize, usize, usize, usize)> {
         }
         for (p, f, m) in factorizations(n / d) {
             out.push((d, p, f, m));
+        }
+    }
+    out
+}
+
+/// All (data, pipeline, fsdp, model, expert) factorizations of `n`.
+fn factorizations5(n: usize) -> Vec<(usize, usize, usize, usize, usize)> {
+    let mut out = Vec::new();
+    for d in 1..=n {
+        if n % d != 0 {
+            continue;
+        }
+        for (p, f, m, e) in factorizations4(n / d) {
+            out.push((d, p, f, m, e));
         }
     }
     out
@@ -165,6 +181,69 @@ fn every_4_axis_factorization_is_bit_identical_under_both_pipeline_schedules() {
                 // the analytic bubble annotation matches the grid
                 let pipe = mesh.pipeline_schedule();
                 assert_eq!(pipe.bubble_fraction(), mesh.strategy().pipeline_bubble());
+            }
+        }
+    }
+}
+
+#[test]
+fn every_5_axis_factorization_of_16_devices_is_bit_identical() {
+    const SEED: i32 = 5;
+    const CORPUS: u64 = 19;
+    const STEPS: usize = 6;
+    // 16 microbatches: a power of two >= every stage count below, so the
+    // stage-0 loss accumulation tree is exact; 16 experts cover the
+    // deepest expert axis (one expert per rank at e = 16)
+    const MICRO: usize = 16;
+    const EXPERTS: usize = 16;
+
+    let mut single = mock();
+    single.init(SEED).unwrap();
+    let ref_losses = run(&mut *single, CORPUS, STEPS);
+    let ref_state = state_bits(&single.state_to_host().unwrap());
+
+    let meshes = factorizations5(16);
+    assert_eq!(meshes.len(), 70, "{meshes:?}"); // 16=2^4 into 5 ordered factors
+    for (d, p, f, m, e) in meshes {
+        // every shape runs 1F1B; pipelined shapes also run GPipe (the
+        // schedule is irrelevant on 1-stage grids)
+        let kinds: &[PipelineKind] = if p > 1 {
+            &[PipelineKind::OneFOneB, PipelineKind::GPipe]
+        } else {
+            &[PipelineKind::OneFOneB]
+        };
+        for &kind in kinds {
+            let opts = MeshOptions::for_mesh5(d, p, f, m, e, MICRO)
+                .with_schedule(kind)
+                .with_moe(EXPERTS.max(e), 2, 1.25);
+            let mut mesh = MeshTrainer::new(mock(), opts).unwrap();
+            mesh.init(SEED).unwrap();
+            assert_eq!(mesh.num_devices(), 16);
+            let losses = run(&mut mesh, CORPUS, STEPS);
+            assert_eq!(
+                losses, ref_losses,
+                "mesh {d}x{p}x{f}x{m}x{e} ({kind:?}): per-step losses diverged"
+            );
+            assert_eq!(
+                state_bits(&mesh.state_to_host().unwrap()),
+                ref_state,
+                "mesh {d}x{p}x{f}x{m}x{e} ({kind:?}): final params diverged"
+            );
+            assert!(
+                mesh.collective_ops() > 0,
+                "mesh {d}x{p}x{f}x{m}x{e} ran no collectives"
+            );
+            if e > 1 {
+                // the expert path really ran and accounted its routing
+                let stats = mesh.last_moe_stats().expect("MoE stats after a step");
+                assert_eq!(stats.expert_load.iter().sum::<usize>(), stats.assignments);
+                let sched = mesh.lower_step().unwrap();
+                assert!(
+                    sched.entries.iter().any(|en| en.axis == "expert"),
+                    "expert mesh must emit AllToAll entries"
+                );
+            } else {
+                assert!(mesh.last_moe_stats().is_none());
             }
         }
     }
@@ -342,6 +421,74 @@ fn pipelined_fleet_recovers_through_host_crash() {
         state_bits(&out_b.final_state),
         state_bits(&out_c.final_state),
         "pipelined replicas changed the fleet numerics"
+    );
+}
+
+fn pipelined_expert_mesh_workers(n: usize) -> Vec<Box<dyn TrainBackend>> {
+    // fleet provides the data axis; each replica is a 2-stage pipeline
+    // with FSDP inside each stage AND a 2-way expert axis dispatching
+    // tokens over all-to-all (4-expert top-2 bank, 1.25x capacity)
+    (0..n)
+        .map(|_| {
+            Box::new(
+                MeshTrainer::new(
+                    mock(),
+                    MeshOptions::for_mesh5(1, 2, 2, 1, 2, 4)
+                        .with_schedule(PipelineKind::OneFOneB)
+                        .with_moe(4, 2, 1.25),
+                )
+                .unwrap(),
+            ) as Box<dyn TrainBackend>
+        })
+        .collect()
+}
+
+#[test]
+fn pipelined_expert_fleet_recovers_through_host_crash() {
+    // a fleet of pipelined + expert-sharded mesh replicas loses replica
+    // 1's host mid-run, taking the local checkpoint tier with it — the
+    // expert axis must nest in fleets exactly like the other four
+    let (la, ra) = dirs("ep_crash");
+    let mut a = FleetTrainer::new(
+        pipelined_expert_mesh_workers(3),
+        FleetOptions {
+            injected: vec![InjectedFailure {
+                at_step: 18,
+                replica: 1,
+                kind: FailureKind::HostCrash,
+            }],
+            ..fleet_opts(la, ra)
+        },
+    )
+    .unwrap();
+    let out_a = a.run().unwrap();
+    assert_eq!(out_a.final_step, 24);
+    assert_eq!(out_a.hot_swaps, 1);
+    assert_eq!(out_a.restores, vec![(16, Tier::Remote)]);
+    assert_eq!(out_a.replica_divergence, 0.0);
+
+    // the recovered run replays onto the failure-free trajectory, which
+    // matches a plain (non-mesh) fleet — expert sharding is invisible to
+    // the fleet-level numerics
+    let (lb, rb) = dirs("ep_clean");
+    let out_b = FleetTrainer::new(pipelined_expert_mesh_workers(3), fleet_opts(lb, rb))
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(
+        state_bits(&out_a.final_state),
+        state_bits(&out_b.final_state),
+        "recovery must replay onto the failure-free trajectory"
+    );
+    let (lc, rc) = dirs("ep_plain");
+    let out_c = FleetTrainer::new(plain_workers(3), fleet_opts(lc, rc))
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(
+        state_bits(&out_b.final_state),
+        state_bits(&out_c.final_state),
+        "pipelined+expert replicas changed the fleet numerics"
     );
 }
 

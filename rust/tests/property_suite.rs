@@ -216,6 +216,52 @@ fn sharding_resolution_round_trips_over_arbitrary_mesh_subsets() {
 }
 
 #[test]
+fn moe_dispatch_combine_round_trips_over_random_shapes() {
+    // SimCollective::all_to_all + the MoE routing plan, swept over random
+    // batch sizes, expert-axis degrees, bank sizes, top-k, and capacity
+    // factors: dispatch∘combine must be the identity permutation (bit
+    // conservation through a real collective), and the drop accounting
+    // must always balance against the router loads.
+    use axlearn::distributed::moe::{plan_dispatch, reassemble};
+    use axlearn::distributed::SimCollective;
+    let mut rng = Rng::new(23);
+    for _ in 0..100 {
+        let es = 1usize << rng.gen_range(0, 5); // 1..=16 expert ranks
+        let per_rank = rng.gen_range(1, 17) as usize;
+        let n = es * per_rank;
+        let experts = es * rng.gen_range(1, 5) as usize;
+        let k = rng.gen_range(1, experts as u64 + 1) as usize;
+        let factor = 0.25 + rng.gen_range(0, 8) as f64 * 0.25;
+        let tokens: Vec<i32> = (0..n).map(|_| rng.gen_range(0, 1 << 31) as i32).collect();
+        let targets: Vec<i32> = (0..n).map(|_| rng.gen_range(0, 1 << 31) as i32).collect();
+        let plan = plan_dispatch(&tokens, &targets, es, experts, k, factor).unwrap();
+        // every (token, target) pair ships exactly once
+        let sent: usize = plan.buckets.iter().flatten().map(|b| b.len()).sum();
+        assert_eq!(sent, 2 * n, "es={es} experts={experts}");
+        // the loads cover all k assignments; drops are the over-capacity tail
+        assert_eq!(plan.stats.expert_load.iter().sum::<usize>(), n * k);
+        let over: usize = plan
+            .stats
+            .expert_load
+            .iter()
+            .map(|&l| l.saturating_sub(plan.stats.capacity))
+            .sum();
+        assert_eq!(plan.stats.dropped, over);
+        // round trip through the real collective restores the batch
+        let mut c = SimCollective::new();
+        let dispatched = c.all_to_all(&plan.buckets).unwrap();
+        let returned = c.all_to_all(&dispatched).unwrap();
+        let (tok2, tgt2) = reassemble(&plan.dest_of, &returned).unwrap();
+        assert_eq!(tokens, tok2, "es={es} experts={experts} k={k}");
+        assert_eq!(targets, tgt2, "es={es} experts={experts} k={k}");
+        assert_eq!(c.ops_run, 2, "dispatch + combine are exactly two collectives");
+    }
+    // shape mismatches stay errors under the same API (never padded)
+    let mut c = SimCollective::new();
+    assert!(c.all_to_all(&[vec![vec![1.0]], vec![vec![2.0]]]).is_err());
+}
+
+#[test]
 fn golden_serialization_is_injective_over_presets() {
     use axlearn::config::golden::to_golden_string;
     use axlearn::config::registry::trainer_for_preset;
