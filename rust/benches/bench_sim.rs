@@ -1,0 +1,86 @@
+//! Bench: simulator throughput — wall-clock per simulated step and the
+//! deterministic work counters, swept over scaling 5-axis meshes
+//! (16 → 256 devices) at several `sim_threads` values.  Emits JSON, and
+//! writes it to `$BENCH_JSON_DIR/bench_sim.json` when that variable is
+//! set (the CI bench job uploads the file; `bench_check` gates the
+//! *counters* against `benches/baseline.json` — wall-clock is reported
+//! for the speedup story but never gated, because it is machine noise).
+//!
+//! The sweep itself lives in `axlearn::distributed::sim_bench` so this
+//! bench, the CI checker, and the tier-1 gate test can never disagree
+//! about what is being measured.
+
+use axlearn::distributed::sim_bench::{
+    measure_wall_clock, sim_counter_points, sim_doc, SIM_BENCH_MEASURE_STEPS, SIM_BENCH_MESHES,
+};
+use axlearn::util::json::Json;
+
+const THREADS: [usize; 4] = [1, 2, 4, 8];
+
+fn main() {
+    let points = sim_counter_points();
+    println!(
+        "=== Simulator throughput: work counters + wall-clock/step vs \
+         data×pipeline×fsdp×model×expert (1024-element mock) ===\n"
+    );
+    println!(
+        "{:>12} {:>8} {:>6} {:>12} {:>14} {:>14} {:>10}",
+        "mesh", "devices", "moe", "ops", "reduce_ops", "bytes_moved", "alloc"
+    );
+    for p in &points {
+        println!(
+            "{:>12} {:>8} {:>6} {:>12} {:>14} {:>14} {:>10}",
+            p.mesh, p.devices, p.moe, p.ops, p.reduce_ops, p.bytes_moved, p.buffers_alloc_steady
+        );
+        // the zero-copy invariant the gate protects
+        assert_eq!(
+            p.buffers_alloc_steady, 0,
+            "{}: steady-state steps must not allocate",
+            p.mesh
+        );
+    }
+
+    println!("\n{:>12} {:>8}  s/step at sim_threads = {THREADS:?}", "mesh", "devices");
+    let mut wall = Vec::new();
+    for (&shape, p) in SIM_BENCH_MESHES.iter().zip(&points) {
+        let series: Vec<f64> = THREADS
+            .iter()
+            .map(|&t| measure_wall_clock(shape, t, SIM_BENCH_MEASURE_STEPS))
+            .collect();
+        let cells: Vec<String> = series.iter().map(|s| format!("{s:>10.6}")).collect();
+        println!("{:>12} {:>8}  {}", p.mesh, p.devices, cells.join(" "));
+        wall.push((p.mesh.clone(), series));
+    }
+
+    let mut doc = sim_doc(&points);
+    if let Json::Obj(map) = &mut doc {
+        map.insert(
+            "threads".into(),
+            Json::Arr(THREADS.iter().map(|&t| Json::num(t as f64)).collect()),
+        );
+        map.insert(
+            "wall_clock".into(),
+            Json::Arr(
+                wall.iter()
+                    .map(|(mesh, series)| {
+                        Json::obj(vec![
+                            ("mesh", Json::str(mesh.clone())),
+                            (
+                                "s_per_step",
+                                Json::Arr(series.iter().map(|&s| Json::num(s)).collect()),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        );
+    }
+    let text = doc.to_string();
+    println!("\nJSON: {text}");
+    if let Ok(dir) = std::env::var("BENCH_JSON_DIR") {
+        let path = std::path::Path::new(&dir).join("bench_sim.json");
+        std::fs::create_dir_all(&dir).expect("create BENCH_JSON_DIR");
+        std::fs::write(&path, &text).expect("write bench_sim.json");
+        println!("wrote {}", path.display());
+    }
+}

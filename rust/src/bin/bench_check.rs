@@ -1,11 +1,15 @@
-//! CI bench-regression gate: recompute the deterministic mesh sweep and
-//! compare it against the committed `benches/baseline.json` — exit
-//! nonzero when simulated step-time / bubble / AllToAll cost drifts
-//! beyond the tolerance, so cost-model regressions fail the `bench` job
-//! instead of landing silently.
+//! CI bench-regression gate: recompute the deterministic mesh sweep
+//! *and* the simulator counter sweep, and compare both against the
+//! committed `benches/baseline.json` — exit nonzero when simulated
+//! step-time / bubble / AllToAll cost drifts beyond the tolerance, or
+//! when any simulator work counter (`sim_points`: collective ops,
+//! reduce additions, bytes moved, steady-state allocations) changes
+//! **at all**, so cost-model regressions and reintroduced per-step
+//! clones fail the `bench` job instead of landing silently.
 //!
 //! ```text
-//! bench_check [--baseline <path>] [--json <bench_mesh.json>] [--tol <rel>] [--write]
+//! bench_check [--baseline <path>] [--json <bench_mesh.json>]
+//!             [--sim-json <bench_sim.json>] [--tol <rel>] [--write]
 //! ```
 //!
 //! * `--baseline` — baseline document (default `benches/baseline.json`
@@ -13,14 +17,18 @@
 //! * `--json` — additionally verify an emitted bench artifact (the file
 //!   `bench_mesh` writes under `$BENCH_JSON_DIR`) against the same
 //!   recomputed points, guarding the bench's own output path.
-//! * `--tol` — relative drift tolerance (default
-//!   [`axlearn::composer::BASELINE_DEFAULT_TOL`]).
-//! * `--write` — (re)generate the baseline from the current sweep
-//!   instead of checking, for deliberate, reviewed model changes.
+//! * `--sim-json` — likewise for the `bench_sim` artifact's counter
+//!   section (its wall-clock series is reported, never gated).
+//! * `--tol` — relative drift tolerance for the step-time sweep
+//!   (default [`axlearn::composer::BASELINE_DEFAULT_TOL`]); the counter
+//!   sweep is always compared exactly.
+//! * `--write` — (re)generate the baseline (both sections) from the
+//!   current sweeps instead of checking, for deliberate, reviewed model
+//!   changes.
 //!
-//! The comparison logic lives in `axlearn::composer::mesh_sweep`; the
-//! tier-1 test `rust/tests/bench_gate.rs` proves it catches injected
-//! regressions.
+//! The comparison logic lives in `axlearn::composer::mesh_sweep` and
+//! `axlearn::distributed::sim_bench`; the tier-1 test
+//! `rust/tests/bench_gate.rs` proves both catch injected regressions.
 
 use std::path::PathBuf;
 use std::process::ExitCode;
@@ -28,16 +36,21 @@ use std::process::ExitCode;
 use axlearn::composer::{
     compare_to_baseline, mesh_sweep_doc, mesh_sweep_points, BASELINE_DEFAULT_TOL,
 };
+use axlearn::distributed::sim_bench::{compare_sim_to_baseline, sim_counter_points, sim_doc};
 use axlearn::util::json::Json;
 
 fn usage() -> ExitCode {
-    eprintln!("usage: bench_check [--baseline <path>] [--json <path>] [--tol <rel>] [--write]");
+    eprintln!(
+        "usage: bench_check [--baseline <path>] [--json <path>] [--sim-json <path>] \
+         [--tol <rel>] [--write]"
+    );
     ExitCode::from(2)
 }
 
 fn main() -> ExitCode {
     let mut baseline_path: PathBuf = axlearn::repo_root().join("benches/baseline.json");
     let mut bench_json: Option<PathBuf> = None;
+    let mut sim_json: Option<PathBuf> = None;
     let mut tol = BASELINE_DEFAULT_TOL;
     let mut write = false;
     let mut args = std::env::args().skip(1);
@@ -51,6 +64,10 @@ fn main() -> ExitCode {
                 Some(p) => bench_json = Some(PathBuf::from(p)),
                 None => return usage(),
             },
+            "--sim-json" => match args.next() {
+                Some(p) => sim_json = Some(PathBuf::from(p)),
+                None => return usage(),
+            },
             "--tol" => match args.next().and_then(|t| t.parse::<f64>().ok()) {
                 Some(t) if t > 0.0 => tol = t,
                 _ => return usage(),
@@ -61,23 +78,34 @@ fn main() -> ExitCode {
     }
 
     let points = mesh_sweep_points();
+    let sim_points = sim_counter_points();
     if write {
-        let text = mesh_sweep_doc(&points).to_string();
+        let mut doc = mesh_sweep_doc(&points);
+        let sim = sim_doc(&sim_points);
+        if let (Json::Obj(map), Some(sp)) = (&mut doc, sim.get("sim_points")) {
+            map.insert("sim_points".into(), sp.clone());
+        }
+        let text = doc.to_string();
         if let Err(e) = std::fs::write(&baseline_path, text + "\n") {
             eprintln!("bench_check: writing {}: {e}", baseline_path.display());
             return ExitCode::from(2);
         }
         println!(
-            "bench_check: wrote {} ({} points) — commit it with the change that moved the numbers",
+            "bench_check: wrote {} ({} step-time points, {} counter points) — \
+             commit it with the change that moved the numbers",
             baseline_path.display(),
-            points.len()
+            points.len(),
+            sim_points.len()
         );
         return ExitCode::SUCCESS;
     }
 
     let mut failed = false;
-    for (label, path) in std::iter::once(("baseline", baseline_path.clone()))
-        .chain(bench_json.into_iter().map(|p| ("bench artifact", p)))
+    // (label, path, gate step-time sweep?, gate counter sweep?)
+    for (label, path, mesh_gate, sim_gate) in
+        std::iter::once(("baseline", baseline_path.clone(), true, true))
+            .chain(bench_json.into_iter().map(|p| ("bench artifact", p, true, false)))
+            .chain(sim_json.into_iter().map(|p| ("sim artifact", p, false, true)))
     {
         let text = match std::fs::read_to_string(&path) {
             Ok(t) => t,
@@ -96,13 +124,21 @@ fn main() -> ExitCode {
                 continue;
             }
         };
-        let drifts = compare_to_baseline(&points, &doc, tol);
+        let mut drifts = Vec::new();
+        if mesh_gate {
+            drifts.extend(compare_to_baseline(&points, &doc, tol));
+        }
+        if sim_gate {
+            drifts.extend(compare_sim_to_baseline(&sim_points, &doc));
+        }
         if drifts.is_empty() {
             println!(
-                "bench_check: {label} {} OK ({} points within {:.3}% relative)",
+                "bench_check: {label} {} OK ({} points within {:.3}% relative; \
+                 {} counter points exact)",
                 path.display(),
-                points.len(),
-                tol * 100.0
+                if mesh_gate { points.len() } else { 0 },
+                tol * 100.0,
+                if sim_gate { sim_points.len() } else { 0 }
             );
         } else {
             eprintln!(

@@ -270,6 +270,9 @@ pub fn register_defaults() -> BTreeMap<&'static str, Ctor> {
             .field("capacity_factor", Value::Float(1.25))
             // instance type selects the interconnect cost model
             .field("instance_type", Value::Str("cpu-local".into()))
+            // simulator worker threads (wall-clock only: results are
+            // bit-identical at any value)
+            .field("sim_threads", Value::Int(1))
             .field("backend", Value::Config(builtin("MockTrainBackend")))
     });
 

@@ -22,6 +22,37 @@
 //!   returns them unchanged, bit for bit.
 //! * The result is independent of which replica "hosts" the reduction —
 //!   there is no privileged rank 0 accumulation order.
+//!
+//! ## Storage model
+//!
+//! The engine is built for a **zero-copy steady state**.  Scratch
+//! buffers come from a per-engine arena ([`SimCollective::take_buf`] /
+//! [`SimCollective::recycle`]) that recycles payload vectors across
+//! calls, `broadcast` copies the root payload *into* the existing
+//! receiver buffers instead of handing out fresh clones (or hands out
+//! one `Arc`'d payload via [`SimCollective::broadcast_shared`]),
+//! [`SimCollective::all_to_all_owned`] transposes the bucket matrix by
+//! *move*, and [`SimCollective::send_owned`] puts the payload itself on
+//! the wire.  The borrow-based kernels on [`SimWorker`] write reduction
+//! and gather results straight into caller-owned regions.  Once the
+//! arena is warm, none of these paths allocate.
+//!
+//! The legacy `Vec`-returning collectives (`all_reduce`, `all_gather`,
+//! `reduce_scatter`, borrow-based `all_to_all`) still replicate their
+//! result per rank; every fresh payload buffer they hand out is counted
+//! in [`SimCounters::buffers_alloc`], so a hot path that regresses onto
+//! them shows up in the gated counter series (see `docs/simulator.md`).
+//!
+//! ## Threaded use
+//!
+//! A [`SimWorker`] (from [`SimCollective::worker`]) carries the same
+//! fault hook plus its own counters and arena, so independent subgroup
+//! collectives can run on `std::thread::scope` workers; the parent
+//! engine folds the work back in with [`SimCollective::absorb`].
+//! Counter totals are order-independent sums, and every kernel writes a
+//! caller-chosen region, so results are identical at any thread count.
+
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
@@ -29,18 +60,221 @@ use anyhow::{bail, Result};
 ///
 /// Installed with [`SimCollective::with_fault`]; applied to every
 /// replica's contribution before the collective runs, which is how the
-/// failure-injection tests model interconnect bit flips.
-pub type FaultHook = Box<dyn Fn(usize, usize, f32) -> f32 + Send>;
+/// failure-injection tests model interconnect bit flips.  `Sync` so the
+/// hook can be shared with [`SimWorker`]s on scoped threads.
+pub type FaultHook = Box<dyn Fn(usize, usize, f32) -> f32 + Send + Sync>;
+
+type FaultFn = dyn Fn(usize, usize, f32) -> f32 + Send + Sync;
+
+/// Deterministic work counters, kept exactly (no sampling): the series
+/// `bench_sim` gates against `benches/baseline.json`.
+///
+/// * `ops` — collectives executed (fused phases count once; a
+///   send/recv pair counts once, at the send).
+/// * `reduce_ops` — f32 additions performed inside reductions:
+///   `(group - 1) × len` per reduce collective.
+/// * `bytes_moved` — payload bytes entering a collective: the summed
+///   contribution lengths × 4 for gathers/reductions/all-to-all, the
+///   root payload × receivers for broadcast, the payload for a send.
+/// * `buffers_alloc` — fresh f32 payload buffers: arena misses plus
+///   every replicated result the legacy `Vec`-returning APIs clone.
+///   Zero in the mesh's steady state; a reintroduced per-call clone
+///   makes it nonzero and fails the bench gate.
+///
+/// `ops`, `reduce_ops`, and `bytes_moved` are sums over a fixed task
+/// set, so they are independent of `sim_threads`; `buffers_alloc`
+/// depends on arena warm-up per worker and is gated from
+/// single-threaded runs only.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SimCounters {
+    /// Collectives executed.
+    pub ops: u64,
+    /// Elementwise additions inside reductions.
+    pub reduce_ops: u64,
+    /// Payload bytes entering collectives.
+    pub bytes_moved: u64,
+    /// Fresh payload buffers (arena misses + legacy replicating APIs).
+    pub buffers_alloc: u64,
+}
+
+impl SimCounters {
+    /// Counter-wise difference since an earlier snapshot (saturating).
+    pub fn since(self, earlier: SimCounters) -> SimCounters {
+        SimCounters {
+            ops: self.ops.saturating_sub(earlier.ops),
+            reduce_ops: self.reduce_ops.saturating_sub(earlier.reduce_ops),
+            bytes_moved: self.bytes_moved.saturating_sub(earlier.bytes_moved),
+            buffers_alloc: self.buffers_alloc.saturating_sub(earlier.buffers_alloc),
+        }
+    }
+
+    fn merge(&mut self, other: SimCounters) {
+        self.ops += other.ops;
+        self.reduce_ops += other.reduce_ops;
+        self.bytes_moved += other.bytes_moved;
+        self.buffers_alloc += other.buffers_alloc;
+    }
+}
+
+/// Scratch-buffer arena: recycled payload vectors.  A `take` that pops
+/// a large-enough buffer is allocation-free; a miss (empty pool, or a
+/// pooled buffer too small) counts in `buffers_alloc`.
+#[derive(Default)]
+struct BufPool {
+    free: Vec<Vec<f32>>,
+}
+
+impl BufPool {
+    fn take(&mut self, len: usize, c: &mut SimCounters) -> Vec<f32> {
+        match self.free.pop() {
+            Some(mut b) => {
+                if b.capacity() < len {
+                    c.buffers_alloc += 1;
+                }
+                b.clear();
+                b.resize(len, 0.0);
+                b
+            }
+            None => {
+                c.buffers_alloc += 1;
+                vec![0.0; len]
+            }
+        }
+    }
+
+    fn give(&mut self, b: Vec<f32>) {
+        if b.capacity() > 0 {
+            self.free.push(b);
+        }
+    }
+}
+
+/// The kernel state shared by [`SimCollective`] and [`SimWorker`]: the
+/// fault hook, the counters, and the scratch arena.
+#[derive(Default)]
+struct EngineCore {
+    fault: Option<Arc<FaultFn>>,
+    counters: SimCounters,
+    pool: BufPool,
+    /// Reusable level buffer for the pairwise reduction (holds pooled
+    /// vectors only while a reduction runs; capacity persists).
+    level: Vec<Vec<f32>>,
+}
+
+impl EngineCore {
+    /// Copy `src` into `out`, applying the fault hook for `replica`.
+    fn copy_faulted(&self, replica: usize, src: &[f32], out: &mut [f32]) {
+        match &self.fault {
+            None => out.copy_from_slice(src),
+            Some(h) => {
+                for (i, (o, &x)) in out.iter_mut().zip(src).enumerate() {
+                    *o = h(replica, i, x);
+                }
+            }
+        }
+    }
+
+    /// Apply the fault hook for `replica` in place (element indices are
+    /// local to `data`, exactly as when the payload was a fresh copy).
+    fn fault_in_place(&self, replica: usize, data: &mut [f32]) {
+        if let Some(h) = &self.fault {
+            for (i, x) in data.iter_mut().enumerate() {
+                *x = h(replica, i, *x);
+            }
+        }
+    }
+
+    /// Concatenate the faulted contributions into `out` (an all-gather
+    /// is a straight concat in device order).
+    fn gather_into(&mut self, shards: &[&[f32]], out: &mut [f32]) {
+        let mut off = 0;
+        for (r, s) in shards.iter().enumerate() {
+            self.copy_faulted(r, s, &mut out[off..off + s.len()]);
+            off += s.len();
+        }
+        debug_assert_eq!(off, out.len());
+    }
+
+    /// Pairwise (binary-tree) elementwise sum of the faulted
+    /// contributions, written into `out` through the arena — the same
+    /// association (adjacent pairs per level, odd tail passes through)
+    /// and the same `left += right` merge order as the original
+    /// allocate-per-level reduction, so results are bit-identical; see
+    /// the module docs for why tree order matters.  `out`'s previous
+    /// buffer is recycled, so repeated calls are allocation-free.
+    fn tree_sum_into(&mut self, shards: &[&[f32]], out: &mut Vec<f32>) {
+        let n = shards.len();
+        debug_assert!(n > 0, "tree_sum over zero shards");
+        let len = shards[0].len();
+        self.counters.reduce_ops += ((n - 1) * len) as u64;
+        let mut level = std::mem::take(&mut self.level);
+        debug_assert!(level.is_empty());
+        // level 1: fuse the fault application into the first pairwise
+        // add (same operands and order as faulted-copy-then-add)
+        let mut r = 0;
+        while r < n {
+            let mut buf = self.pool.take(len, &mut self.counters);
+            if r + 1 < n {
+                match &self.fault {
+                    None => {
+                        for ((o, &a), &b) in buf.iter_mut().zip(shards[r]).zip(shards[r + 1]) {
+                            *o = a + b;
+                        }
+                    }
+                    Some(h) => {
+                        for (i, o) in buf.iter_mut().enumerate() {
+                            *o = h(r, i, shards[r][i]) + h(r + 1, i, shards[r + 1][i]);
+                        }
+                    }
+                }
+            } else {
+                self.copy_faulted(r, shards[r], &mut buf);
+            }
+            level.push(buf);
+            r += 2;
+        }
+        // higher levels: merge adjacent pairs in place, left += right
+        while level.len() > 1 {
+            let l = level.len();
+            let mut survivors = 0;
+            let mut k = 0;
+            while k < l {
+                if k + 1 < l {
+                    let (head, tail) = level.split_at_mut(k + 1);
+                    for (x, y) in head[k].iter_mut().zip(tail[0].iter()) {
+                        *x += *y;
+                    }
+                }
+                level.swap(survivors, k);
+                survivors += 1;
+                k += 2;
+            }
+            for consumed in level.drain(survivors..) {
+                self.pool.give(consumed);
+            }
+        }
+        let mut result = level.pop().expect("non-empty shard set");
+        self.level = level; // empty again; capacity persists
+        std::mem::swap(out, &mut result);
+        self.pool.give(result); // the caller's previous buffer
+    }
+}
 
 /// Simulated collective engine.
 ///
 /// Each method takes the per-replica contributions of one subgroup (a
-/// mesh-axis slice, a data-parallel ring, …) and returns the
-/// per-replica results.  Shapes are strictly checked: mismatched shard
-/// lengths are an error, never silently truncated or padded.
+/// mesh-axis slice, a data-parallel ring, …).  Shapes are strictly
+/// checked: mismatched shard lengths are an error, never silently
+/// truncated or padded.  The legacy methods return per-replica result
+/// vectors; the zero-copy paths (`broadcast` in place,
+/// [`SimCollective::broadcast_shared`],
+/// [`SimCollective::all_to_all_owned`],
+/// [`SimCollective::send_owned`], and the [`SimWorker`] kernels) reuse
+/// or move buffers instead — see the module docs for the storage model
+/// and [`SimCounters`] for what is counted.
 #[derive(Default)]
 pub struct SimCollective {
-    fault: Option<FaultHook>,
+    core: EngineCore,
     /// In-flight point-to-point messages: `(src, dst, tag, payload)`.
     /// FIFO per `(src, dst, tag)` channel, so matching is deterministic.
     p2p: std::collections::VecDeque<(usize, usize, u64, Vec<f32>)>,
@@ -57,21 +291,52 @@ impl SimCollective {
         Self::default()
     }
 
-    /// Install a fault hook (e.g. flip a bit on one replica's contribution).
+    /// Install a fault hook (e.g. flip a bit on one replica's
+    /// contribution).  Shared with every [`SimWorker`] created after
+    /// this call.
     pub fn with_fault(mut self, hook: FaultHook) -> Self {
-        self.fault = Some(hook);
+        self.core.fault = Some(Arc::from(hook));
         self
     }
 
-    fn apply_fault(&self, replica: usize, data: &[f32]) -> Vec<f32> {
-        match &self.fault {
-            None => data.to_vec(),
-            Some(hook) => data
-                .iter()
-                .enumerate()
-                .map(|(i, &x)| hook(replica, i, x))
-                .collect(),
+    /// The deterministic work counters accumulated so far (worker
+    /// counters fold in at [`SimCollective::absorb`]).
+    pub fn counters(&self) -> SimCounters {
+        SimCounters {
+            ops: self.ops_run,
+            ..self.core.counters
         }
+    }
+
+    /// A worker sharing this engine's fault hook, with its own counters
+    /// and scratch arena — safe to move to a scoped thread.  Fold its
+    /// work back in with [`SimCollective::absorb`].
+    pub fn worker(&self) -> SimWorker {
+        SimWorker {
+            core: EngineCore {
+                fault: self.core.fault.clone(),
+                ..EngineCore::default()
+            },
+        }
+    }
+
+    /// Merge a worker's counters into this engine (the worker keeps its
+    /// warm arena; its counters reset so the next absorb is a delta).
+    pub fn absorb(&mut self, worker: &mut SimWorker) {
+        let c = std::mem::take(&mut worker.core.counters);
+        self.ops_run += c.ops;
+        self.core.counters.merge(SimCounters { ops: 0, ..c });
+    }
+
+    /// Take a scratch buffer of `len` zeros from the arena (an arena
+    /// miss counts in [`SimCounters::buffers_alloc`]).
+    pub fn take_buf(&mut self, len: usize) -> Vec<f32> {
+        self.core.pool.take(len, &mut self.core.counters)
+    }
+
+    /// Return a buffer to the arena for reuse.
+    pub fn recycle(&mut self, buf: Vec<f32>) {
+        self.core.pool.give(buf);
     }
 
     fn check_equal_lengths(op: &str, shards: &[Vec<f32>]) -> Result<usize> {
@@ -88,52 +353,50 @@ impl SimCollective {
         Ok(len)
     }
 
-    /// Pairwise (binary-tree) elementwise sum of the faulted
-    /// contributions — see the module docs for why tree order matters.
-    fn tree_sum(&self, shards: &[Vec<f32>]) -> Vec<f32> {
-        let mut level: Vec<Vec<f32>> = shards
-            .iter()
-            .enumerate()
-            .map(|(r, s)| self.apply_fault(r, s))
-            .collect();
-        while level.len() > 1 {
-            let mut next = Vec::with_capacity(level.len().div_ceil(2));
-            let mut it = level.into_iter();
-            while let Some(mut a) = it.next() {
-                if let Some(b) = it.next() {
-                    for (x, y) in a.iter_mut().zip(&b) {
-                        *x += y;
-                    }
-                }
-                next.push(a);
-            }
-            level = next;
-        }
-        level.pop().expect("non-empty shard set")
-    }
-
     /// Sum all-reduce: every replica ends with the elementwise sum.
+    ///
+    /// Legacy replicating API: the result is cloned per rank (counted
+    /// in [`SimCounters::buffers_alloc`]); hot paths use
+    /// [`SimWorker::all_reduce_into`] instead.
     pub fn all_reduce(&mut self, shards: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
         self.ops_run += 1;
-        Self::check_equal_lengths("all_reduce", shards)?;
-        let sum = self.tree_sum(shards);
-        Ok(vec![sum; shards.len()])
+        let len = Self::check_equal_lengths("all_reduce", shards)?;
+        let n = shards.len();
+        self.core.counters.bytes_moved += (n * len * 4) as u64;
+        let refs: Vec<&[f32]> = shards.iter().map(|s| s.as_slice()).collect();
+        let mut sum = Vec::new();
+        self.core.tree_sum_into(&refs, &mut sum);
+        self.core.counters.buffers_alloc += n as u64;
+        let out = vec![sum.clone(); n];
+        self.core.pool.give(sum);
+        Ok(out)
     }
 
     /// All-gather: every replica ends with the concatenation.
+    ///
+    /// Legacy replicating API (the gathered result is cloned per rank);
+    /// hot paths use [`SimWorker::all_gather_into`].
     pub fn all_gather(&mut self, shards: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
         self.ops_run += 1;
         if shards.is_empty() {
             bail!("all_gather over zero replicas");
         }
-        let mut full = Vec::new();
-        for (r, shard) in shards.iter().enumerate() {
-            full.extend(self.apply_fault(r, shard));
-        }
-        Ok(vec![full; shards.len()])
+        let n = shards.len();
+        let total: usize = shards.iter().map(|s| s.len()).sum();
+        self.core.counters.bytes_moved += (total * 4) as u64;
+        let refs: Vec<&[f32]> = shards.iter().map(|s| s.as_slice()).collect();
+        let mut full = self.core.pool.take(total, &mut self.core.counters);
+        self.core.gather_into(&refs, &mut full);
+        self.core.counters.buffers_alloc += n as u64;
+        let out = vec![full.clone(); n];
+        self.core.pool.give(full);
+        Ok(out)
     }
 
-    /// Broadcast from `root` to all replicas.
+    /// Broadcast from `root` to all replicas, **in place**: the root's
+    /// (faulted) payload is copied into the existing receiver buffers,
+    /// so a warm engine allocates nothing — the buffers the receivers
+    /// already own *are* the destination.
     ///
     /// Every receiving buffer must already have the root's shape — a
     /// length mismatch is a usage error (the caller sized a replica's
@@ -152,13 +415,61 @@ impl SimCollective {
                 s.len()
             );
         }
-        let src = self.apply_fault(root, &shards[root]);
-        for (r, s) in shards.iter_mut().enumerate() {
-            if r != root {
-                *s = src.clone();
+        self.core.counters.bytes_moved += ((shards.len() - 1) * len * 4) as u64;
+        let (head, rest) = shards.split_at_mut(root);
+        let (root_buf, tail) = rest.split_first_mut().expect("root is in range");
+        if self.core.fault.is_some() {
+            let mut src = self.core.pool.take(len, &mut self.core.counters);
+            self.core.copy_faulted(root, root_buf, &mut src);
+            for s in head.iter_mut().chain(tail.iter_mut()) {
+                s.copy_from_slice(&src);
+            }
+            self.core.pool.give(src);
+        } else {
+            for s in head.iter_mut().chain(tail.iter_mut()) {
+                s.copy_from_slice(root_buf);
             }
         }
         Ok(())
+    }
+
+    /// Broadcast as **one shared read-only payload**: the root's
+    /// (faulted) contribution is materialized once and every reader of
+    /// the subgroup holds the same `Arc` — n readers, one buffer, the
+    /// replacement for `vec![payload.clone(); n]` fan-outs.
+    ///
+    /// ```
+    /// use axlearn::distributed::SimCollective;
+    ///
+    /// let mut c = SimCollective::new();
+    /// let shared = c.broadcast_shared(0, &[1.0, 2.0], 4).unwrap();
+    /// let per_rank: Vec<_> = (0..4).map(|_| shared.clone()).collect(); // no copies
+    /// assert_eq!(&*per_rank[3], &[1.0, 2.0]);
+    /// ```
+    pub fn broadcast_shared(
+        &mut self,
+        root: usize,
+        payload: &[f32],
+        group: usize,
+    ) -> Result<Arc<[f32]>> {
+        if group == 0 {
+            bail!("broadcast_shared over zero replicas");
+        }
+        if root >= group {
+            bail!("broadcast_shared root {root} out of range for group of {group}");
+        }
+        self.ops_run += 1;
+        self.core.counters.bytes_moved += ((group - 1) * payload.len() * 4) as u64;
+        self.core.counters.buffers_alloc += 1;
+        let shared: Arc<[f32]> = match &self.core.fault {
+            None => Arc::from(payload),
+            Some(h) => payload
+                .iter()
+                .enumerate()
+                .map(|(i, &x)| h(root, i, x))
+                .collect(),
+        };
+        Ok(shared)
     }
 
     /// Reduce-scatter: replica `r` ends with the `r`-th chunk of the sum.
@@ -166,6 +477,8 @@ impl SimCollective {
     /// All contributions must have the same length (checked — a
     /// mismatch is an error, not an out-of-bounds or silent truncation),
     /// and that length must divide evenly into one chunk per replica.
+    /// Legacy replicating API; hot paths use
+    /// [`SimWorker::reduce_scatter_into`] and slice the chunks.
     pub fn reduce_scatter(&mut self, shards: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
         self.ops_run += 1;
         let n = shards.len();
@@ -173,11 +486,33 @@ impl SimCollective {
         if len % n != 0 {
             bail!("reduce_scatter: {len} elements not divisible by {n} replicas");
         }
-        let sum = self.tree_sum(shards);
+        self.core.counters.bytes_moved += (n * len * 4) as u64;
+        let refs: Vec<&[f32]> = shards.iter().map(|s| s.as_slice()).collect();
+        let mut sum = Vec::new();
+        self.core.tree_sum_into(&refs, &mut sum);
         let chunk = len / n;
-        Ok((0..n)
+        self.core.counters.buffers_alloc += n as u64;
+        let out = (0..n)
             .map(|r| sum[r * chunk..(r + 1) * chunk].to_vec())
-            .collect())
+            .collect();
+        self.core.pool.give(sum);
+        Ok(out)
+    }
+
+    fn check_bucket_matrix(buckets_len: usize, rows: impl Iterator<Item = usize>) -> Result<()> {
+        let n = buckets_len;
+        if n == 0 {
+            bail!("all_to_all over zero replicas");
+        }
+        for (r, row_len) in rows.enumerate() {
+            if row_len != n {
+                bail!(
+                    "all_to_all bucket shape mismatch: replica {r} provides {row_len} send \
+                     buckets for {n} replicas"
+                );
+            }
+        }
+        Ok(())
     }
 
     /// All-to-all over per-rank send buckets (the MoE expert-dispatch
@@ -194,7 +529,9 @@ impl SimCollective {
     /// bit-identity argument rests on: dispatch∘combine round-trips every
     /// payload bit-for-bit on a healthy interconnect (and corrupts it
     /// exactly like a real link under a fault hook, applied at the
-    /// sender).  Counts as one op, like the fused reductions.
+    /// sender).  Counts as one op, like the fused reductions.  This
+    /// borrow-based form copies every bucket (counted);
+    /// [`SimCollective::all_to_all_owned`] moves them instead.
     ///
     /// ```
     /// use axlearn::distributed::SimCollective;
@@ -212,25 +549,47 @@ impl SimCollective {
     /// assert_eq!(out[1], vec![vec![2.0, 3.0], vec![]]); // rank 1: from 0, from 1
     /// ```
     pub fn all_to_all(&mut self, buckets: &[Vec<Vec<f32>>]) -> Result<Vec<Vec<Vec<f32>>>> {
+        Self::check_bucket_matrix(buckets.len(), buckets.iter().map(|b| b.len()))?;
         let n = buckets.len();
-        if n == 0 {
-            bail!("all_to_all over zero replicas");
-        }
-        if let Some((r, b)) = buckets.iter().enumerate().find(|(_, b)| b.len() != n) {
-            bail!(
-                "all_to_all bucket shape mismatch: replica {r} provides {} send buckets \
-                 for {n} replicas",
-                b.len()
-            );
-        }
         self.ops_run += 1;
+        let total: usize = buckets.iter().flatten().map(|b| b.len()).sum();
+        self.core.counters.bytes_moved += (total * 4) as u64;
+        self.core.counters.buffers_alloc += (n * n) as u64;
         Ok((0..n)
             .map(|dst| {
                 (0..n)
-                    .map(|src| self.apply_fault(src, &buckets[src][dst]))
+                    .map(|src| {
+                        let mut b = buckets[src][dst].clone();
+                        self.core.fault_in_place(src, &mut b);
+                        b
+                    })
                     .collect()
             })
             .collect())
+    }
+
+    /// [`SimCollective::all_to_all`] by **move**: the bucket matrix is
+    /// transposed without copying a single payload (the fault hook, if
+    /// any, applies in place at the sender).  Same checks, same op and
+    /// byte accounting, zero payload allocations — the mesh's MoE
+    /// dispatch/combine path.
+    pub fn all_to_all_owned(
+        &mut self,
+        buckets: Vec<Vec<Vec<f32>>>,
+    ) -> Result<Vec<Vec<Vec<f32>>>> {
+        Self::check_bucket_matrix(buckets.len(), buckets.iter().map(|b| b.len()))?;
+        let n = buckets.len();
+        self.ops_run += 1;
+        let total: usize = buckets.iter().flatten().map(|b| b.len()).sum();
+        self.core.counters.bytes_moved += (total * 4) as u64;
+        let mut out: Vec<Vec<Vec<f32>>> = (0..n).map(|_| Vec::with_capacity(n)).collect();
+        for (src, row) in buckets.into_iter().enumerate() {
+            for (dst, mut bucket) in row.into_iter().enumerate() {
+                self.core.fault_in_place(src, &mut bucket);
+                out[dst].push(bucket);
+            }
+        }
+        Ok(out)
     }
 
     /// Point-to-point send from rank `src` to rank `dst` of the caller's
@@ -242,14 +601,29 @@ impl SimCollective {
     /// `(src, dst, tag)` channel, so replay is deterministic.
     ///
     /// Like the reductions, a transfer is one op: `ops_run` counts the
-    /// send; the matching [`SimCollective::recv`] completes it.
+    /// send; the matching [`SimCollective::recv`] completes it.  The
+    /// payload is staged through the arena; [`SimCollective::send_owned`]
+    /// avoids even that copy.
     pub fn send(&mut self, src: usize, dst: usize, tag: u64, data: &[f32]) -> Result<()> {
+        let mut payload = self.core.pool.take(data.len(), &mut self.core.counters);
+        payload.copy_from_slice(data);
+        self.send_owned(src, dst, tag, payload)
+    }
+
+    /// [`SimCollective::send`] by **move**: the payload vector itself
+    /// goes on the wire (fault applied in place at the sender), and the
+    /// matching [`SimCollective::recv`] hands it back — a pipeline hop
+    /// is a pure move.  Recycle drained payloads with
+    /// [`SimCollective::recycle`] to keep the steady state
+    /// allocation-free.
+    pub fn send_owned(&mut self, src: usize, dst: usize, tag: u64, mut data: Vec<f32>) -> Result<()> {
         if src == dst {
             bail!("send: src and dst are both rank {src}");
         }
         self.ops_run += 1;
-        let payload = self.apply_fault(src, data);
-        self.p2p.push_back((src, dst, tag, payload));
+        self.core.counters.bytes_moved += (data.len() * 4) as u64;
+        self.core.fault_in_place(src, &mut data);
+        self.p2p.push_back((src, dst, tag, data));
         Ok(())
     }
 
@@ -271,6 +645,86 @@ impl SimCollective {
     /// this at zero (the mesh trainer asserts it every step).
     pub fn pending_p2p(&self) -> usize {
         self.p2p.len()
+    }
+}
+
+/// A thread-safe collective kernel set: the same fault hook as its
+/// parent [`SimCollective`], its own [`SimCounters`] and scratch arena.
+/// Every kernel writes a caller-owned region (no replicated results),
+/// so independent subgroup collectives can run on `std::thread::scope`
+/// workers and remain bit-identical at any thread count; the parent
+/// folds the counters back in with [`SimCollective::absorb`].
+pub struct SimWorker {
+    core: EngineCore,
+}
+
+impl SimWorker {
+    /// Work counted since the last [`SimCollective::absorb`].
+    pub fn counters(&self) -> SimCounters {
+        self.core.counters
+    }
+
+    /// Subgroup all-gather written straight into `out` (which must be
+    /// the concatenated length): the per-rank results of a simulated
+    /// gather are identical, so one caller-owned region represents the
+    /// whole subgroup.
+    pub fn all_gather_into(&mut self, shards: &[&[f32]], out: &mut [f32]) {
+        debug_assert!(!shards.is_empty());
+        self.core.counters.ops += 1;
+        let total: usize = shards.iter().map(|s| s.len()).sum();
+        debug_assert_eq!(total, out.len());
+        self.core.counters.bytes_moved += (total * 4) as u64;
+        self.core.gather_into(shards, out);
+    }
+
+    /// All-gather whose `parts` equal-length contributions are already
+    /// packed consecutively in `data` (the mesh's model-axis gather over
+    /// blocks the fsdp gather just wrote): applies the per-part fault
+    /// hook in place — with no hook installed, a gather of co-resident
+    /// shards moves no bytes it hasn't already placed.
+    pub fn all_gather_in_place(&mut self, data: &mut [f32], parts: usize) {
+        debug_assert!(parts > 0 && data.len() % parts == 0);
+        self.core.counters.ops += 1;
+        self.core.counters.bytes_moved += (data.len() * 4) as u64;
+        if self.core.fault.is_some() {
+            let block = data.len() / parts;
+            for m in 0..parts {
+                self.core.fault_in_place(m, &mut data[m * block..(m + 1) * block]);
+            }
+        }
+    }
+
+    /// Sum all-reduce into `out` (binary-tree order; `out`'s previous
+    /// buffer recycles through the arena).  One region represents every
+    /// rank of the subgroup — the caller fans it out in place.
+    pub fn all_reduce_into(&mut self, shards: &[&[f32]], out: &mut Vec<f32>) {
+        debug_assert!(!shards.is_empty());
+        self.core.counters.ops += 1;
+        self.core.counters.bytes_moved +=
+            (shards.len() * shards[0].len() * 4) as u64;
+        self.core.tree_sum_into(shards, out);
+    }
+
+    /// Reduce-scatter into `out`: the full binary-tree sum lands in
+    /// `out` and the caller slices chunk `r` for rank `r` (the summed
+    /// length must divide by the subgroup size, asserted).
+    pub fn reduce_scatter_into(&mut self, shards: &[&[f32]], out: &mut Vec<f32>) {
+        debug_assert!(!shards.is_empty());
+        debug_assert_eq!(shards[0].len() % shards.len(), 0);
+        self.core.counters.ops += 1;
+        self.core.counters.bytes_moved +=
+            (shards.len() * shards[0].len() * 4) as u64;
+        self.core.tree_sum_into(shards, out);
+    }
+
+    /// Take a scratch buffer of `len` zeros from this worker's arena.
+    pub fn take_buf(&mut self, len: usize) -> Vec<f32> {
+        self.core.pool.take(len, &mut self.core.counters)
+    }
+
+    /// Return a buffer to this worker's arena.
+    pub fn recycle(&mut self, buf: Vec<f32>) {
+        self.core.pool.give(buf);
     }
 }
 
@@ -354,6 +808,37 @@ mod tests {
         assert!(err.to_string().contains("shape mismatch"), "{err}");
         // the mismatched buffer is left untouched
         assert_eq!(shards[1], vec![0.0; 3]);
+    }
+
+    #[test]
+    fn broadcast_reuses_the_receiver_buffers() {
+        // the satellite fix: no fresh payloads — the root's bits land in
+        // the buffers the receivers already own
+        let mut c = SimCollective::new();
+        let mut shards = vec![vec![9.0, 9.0], vec![1.5, 2.5], vec![9.0, 9.0], vec![9.0, 9.0]];
+        let ptrs: Vec<*const f32> = shards.iter().map(|s| s.as_ptr()).collect();
+        c.broadcast(&mut shards, 1).unwrap();
+        for (s, &p) in shards.iter().zip(&ptrs) {
+            assert_eq!(s.as_ptr(), p, "broadcast must not replace receiver buffers");
+            assert_eq!(s, &vec![1.5, 2.5]);
+        }
+        assert_eq!(c.counters().buffers_alloc, 0, "fault-free broadcast allocates nothing");
+        assert_eq!(c.counters().bytes_moved, 3 * 2 * 4);
+    }
+
+    #[test]
+    fn broadcast_shared_is_one_payload_for_the_group() {
+        let mut c = SimCollective::new();
+        let shared = c.broadcast_shared(0, &[1.0, 2.0, 3.0], 8).unwrap();
+        assert_eq!(&*shared, &[1.0, 2.0, 3.0]);
+        assert_eq!(c.counters().buffers_alloc, 1, "one buffer for the whole subgroup");
+        assert!(c.broadcast_shared(8, &[1.0], 8).is_err(), "root out of range");
+        assert!(c.broadcast_shared(0, &[1.0], 0).is_err(), "empty group");
+        // the fault hook applies at the root, like any sender
+        let mut f = SimCollective::new()
+            .with_fault(Box::new(|r, i, x| if r == 2 && i == 0 { x + 1.0 } else { x }));
+        let shared = f.broadcast_shared(2, &[1.0, 2.0], 4).unwrap();
+        assert_eq!(&*shared, &[2.0, 2.0]);
     }
 
     #[test]
@@ -456,6 +941,32 @@ mod tests {
     }
 
     #[test]
+    fn all_to_all_owned_matches_the_borrowed_form() {
+        // same transpose, same fault application, zero payload copies
+        let buckets = vec![
+            vec![vec![1.0], vec![2.0, 3.0], vec![]],
+            vec![vec![4.0, 5.0], vec![], vec![6.0]],
+            vec![vec![], vec![7.0], vec![8.0, 9.0]],
+        ];
+        let hook = |r: usize, i: usize, x: f32| if r == 1 && i == 0 { x + 0.5 } else { x };
+        let mut a = SimCollective::new().with_fault(Box::new(hook));
+        let mut b = SimCollective::new().with_fault(Box::new(hook));
+        let borrowed = a.all_to_all(&buckets).unwrap();
+        let ptr_before = buckets[0][1].as_ptr();
+        let owned = b.all_to_all_owned(buckets).unwrap();
+        assert_eq!(borrowed, owned);
+        assert_eq!(owned[1][0].as_ptr(), ptr_before, "payloads must move, not copy");
+        assert_eq!(b.counters().buffers_alloc, 0);
+        assert_eq!(a.counters().bytes_moved, b.counters().bytes_moved);
+        // the owned form keeps the same validation
+        let mut c = SimCollective::new();
+        assert!(c.all_to_all_owned(vec![]).is_err());
+        assert!(c
+            .all_to_all_owned(vec![vec![vec![1.0], vec![2.0]], vec![vec![3.0]]])
+            .is_err());
+    }
+
+    #[test]
     fn all_to_all_ragged_bucket_matrix_is_an_error() {
         let mut c = SimCollective::new();
         let err = c
@@ -496,6 +1007,20 @@ mod tests {
         assert!(data.iter().zip(&got).all(|(a, b)| a.to_bits() == b.to_bits()));
         assert_eq!(c.pending_p2p(), 0);
         assert_eq!(c.ops_run, 1, "a send/recv pair is one transfer");
+    }
+
+    #[test]
+    fn send_owned_moves_the_payload() {
+        let mut c = SimCollective::new()
+            .with_fault(Box::new(|r, i, x| if r == 0 && i == 1 { x + 0.5 } else { x }));
+        let data = vec![1.0f32, 2.0];
+        let ptr = data.as_ptr();
+        c.send_owned(0, 1, 3, data).unwrap();
+        let got = c.recv(0, 1, 3).unwrap();
+        assert_eq!(got, vec![1.0, 2.5], "fault applies at the sender, in place");
+        assert_eq!(got.as_ptr(), ptr, "the payload vector itself travels");
+        assert_eq!(c.counters().buffers_alloc, 0);
+        assert!(c.send_owned(2, 2, 0, vec![1.0]).is_err(), "send to self rejected");
     }
 
     #[test]
@@ -582,5 +1107,138 @@ mod tests {
         }
         let all_same = results.windows(2).all(|w| w[0] == w[1]);
         assert!(!all_same, "intermittent corruption must be visible");
+    }
+
+    // ---- counters, arena, and worker kernels ----
+
+    #[test]
+    fn counters_are_exact_for_a_known_sequence() {
+        let mut c = SimCollective::new();
+        c.all_reduce(&[vec![1.0; 8], vec![2.0; 8]]).unwrap();
+        // 2 contributions × 8 f32 × 4 bytes in; 8 additions; 2 results out
+        let snap = c.counters();
+        assert_eq!(snap.ops, 1);
+        assert_eq!(snap.reduce_ops, 8);
+        assert_eq!(snap.bytes_moved, 64);
+        c.all_gather(&[vec![1.0; 4], vec![2.0; 4], vec![3.0; 4]]).unwrap();
+        let d = c.counters().since(snap);
+        assert_eq!(d.ops, 1);
+        assert_eq!(d.reduce_ops, 0, "a gather adds nothing");
+        assert_eq!(d.bytes_moved, 48);
+        c.send(0, 1, 0, &[0.0; 16]).unwrap();
+        assert_eq!(c.counters().bytes_moved, 64 + 48 + 64);
+    }
+
+    #[test]
+    fn worker_kernels_match_the_legacy_collectives_bitwise() {
+        let hook = |r: usize, i: usize, x: f32| {
+            if i % 3 == r % 3 {
+                f32::from_bits(x.to_bits() ^ 0x2)
+            } else {
+                x
+            }
+        };
+        let mut rng = Rng::new(23);
+        for n in [1usize, 2, 3, 5, 8] {
+            let len = 3 * n; // divisible for the scatter
+            let shards: Vec<Vec<f32>> = (0..n)
+                .map(|_| (0..len).map(|_| rng.normal() as f32).collect())
+                .collect();
+            let refs: Vec<&[f32]> = shards.iter().map(|s| s.as_slice()).collect();
+            let mut legacy = SimCollective::new().with_fault(Box::new(hook));
+            let engine = SimCollective::new().with_fault(Box::new(hook));
+            let mut w = engine.worker();
+            // all_reduce
+            let want = legacy.all_reduce(&shards).unwrap();
+            let mut got = Vec::new();
+            w.all_reduce_into(&refs, &mut got);
+            assert!(want[0].iter().zip(&got).all(|(a, b)| a.to_bits() == b.to_bits()));
+            // reduce_scatter: the full sum chunks the same way
+            let want = legacy.reduce_scatter(&shards).unwrap();
+            let mut sum = Vec::new();
+            w.reduce_scatter_into(&refs, &mut sum);
+            let chunk = len / n;
+            for (r, wchunk) in want.iter().enumerate() {
+                let g = &sum[r * chunk..(r + 1) * chunk];
+                assert!(wchunk.iter().zip(g).all(|(a, b)| a.to_bits() == b.to_bits()));
+            }
+            // all_gather
+            let want = legacy.all_gather(&shards).unwrap();
+            let mut out = vec![0.0; n * len];
+            w.all_gather_into(&refs, &mut out);
+            assert!(want[0].iter().zip(&out).all(|(a, b)| a.to_bits() == b.to_bits()));
+            // all_gather_in_place over pre-packed parts matches a gather
+            // of those parts
+            let packed: Vec<f32> = shards.iter().flatten().copied().collect();
+            let mut in_place = packed.clone();
+            w.all_gather_in_place(&mut in_place, n);
+            assert!(want[0].iter().zip(&in_place).all(|(a, b)| a.to_bits() == b.to_bits()));
+        }
+    }
+
+    #[test]
+    fn worker_arena_reaches_a_zero_alloc_steady_state() {
+        let engine = SimCollective::new();
+        let mut w = engine.worker();
+        let shards: Vec<Vec<f32>> = (0..8).map(|r| vec![r as f32; 64]).collect();
+        let refs: Vec<&[f32]> = shards.iter().map(|s| s.as_slice()).collect();
+        let mut out = Vec::new();
+        w.all_reduce_into(&refs, &mut out);
+        let warm = w.counters().buffers_alloc;
+        assert!(warm > 0, "cold arena must allocate");
+        for _ in 0..10 {
+            w.all_reduce_into(&refs, &mut out);
+        }
+        assert_eq!(
+            w.counters().buffers_alloc,
+            warm,
+            "warm reductions must be allocation-free"
+        );
+    }
+
+    #[test]
+    fn absorb_folds_worker_counters_into_the_engine() {
+        let mut engine = SimCollective::new();
+        let mut w = engine.worker();
+        let a = [1.0f32, 2.0];
+        let b = [3.0f32, 4.0];
+        let mut out = Vec::new();
+        w.all_reduce_into(&[&a, &b], &mut out);
+        let wc = w.counters();
+        assert_eq!(wc.ops, 1);
+        engine.absorb(&mut w);
+        assert_eq!(engine.ops_run, 1, "worker ops land in ops_run");
+        assert_eq!(engine.counters().reduce_ops, wc.reduce_ops);
+        assert_eq!(engine.counters().bytes_moved, wc.bytes_moved);
+        assert_eq!(w.counters(), SimCounters::default(), "absorb resets the worker");
+        // absorbing twice does not double-count
+        engine.absorb(&mut w);
+        assert_eq!(engine.ops_run, 1);
+    }
+
+    #[test]
+    fn workers_share_the_fault_hook() {
+        let engine = SimCollective::new()
+            .with_fault(Box::new(|r, i, x| if r == 0 && i == 0 { x + 1.0 } else { x }));
+        let mut w = engine.worker();
+        let a = [1.0f32, 2.0];
+        let b = [3.0f32, 4.0];
+        let mut out = Vec::new();
+        w.all_reduce_into(&[&a, &b], &mut out);
+        assert_eq!(out, vec![5.0, 6.0], "the hook corrupts replica 0's contribution");
+    }
+
+    #[test]
+    fn take_buf_recycle_round_trip_is_allocation_free_when_warm() {
+        let mut c = SimCollective::new();
+        let buf = c.take_buf(32);
+        assert_eq!(c.counters().buffers_alloc, 1);
+        c.recycle(buf);
+        let buf = c.take_buf(16);
+        assert_eq!(c.counters().buffers_alloc, 1, "smaller reuse is free");
+        assert_eq!(buf.len(), 16);
+        c.recycle(buf);
+        let _big = c.take_buf(64);
+        assert_eq!(c.counters().buffers_alloc, 2, "regrowth counts as an allocation");
     }
 }

@@ -23,23 +23,28 @@
 //! 1. **Gather** — FSDP all-gather within each model column, then a
 //!    model-axis all-gather, per stage; stage slices concatenate
 //!    host-side (real pipelines never exchange parameters between
-//!    stages) to reconstruct the full state per replica group (explicit
-//!    [`SimCollective::all_gather`] calls; replica groups are
-//!    cross-checked bit-for-bit, so shard corruption surfaces as an
-//!    error instead of silent divergence).
+//!    stages) to reconstruct the full state per replica group.  The
+//!    gathers write **in place** into a persistent full-state buffer
+//!    ([`SimWorker::all_gather_into`] /
+//!    [`SimWorker::all_gather_in_place`]); replica groups are
+//!    cross-checked bit-for-bit against it through recycled scratch, so
+//!    shard corruption surfaces as an error instead of silent
+//!    divergence.
 //! 2. **Compute** — with an expert axis, the batch first runs the MoE
 //!    round trip: a deterministic top-k router picks each token's
 //!    expert, tokens **dispatch** to the rank owning it through a real
-//!    subgroup-scoped [`SimCollective::all_to_all`], and a second
-//!    all-to-all **combines** them back in original order (capacity-
-//!    factor drop accounting lands in
+//!    subgroup-scoped [`SimCollective::all_to_all_owned`] (the bucket
+//!    matrix transposes by move — payloads are never copied), and a
+//!    second all-to-all **combines** them back in original order
+//!    (capacity-factor drop accounting lands in
 //!    [`MeshTrainer::last_moe_stats`]).  With a pipeline axis, the
 //!    microbatch token/target
 //!    chunks then genuinely travel the stage chain: one
-//!    [`SimCollective::send`]/[`SimCollective::recv`] per forward slot
-//!    of the pipeline schedule, hop by hop, reassembled at the last
-//!    stage — a fault hook on any link corrupts the batch exactly like
-//!    real interconnect damage.  The gathered state is installed into
+//!    [`SimCollective::send_owned`]/[`SimCollective::recv`] per forward
+//!    slot of the pipeline schedule — each hop a pure buffer move —
+//!    reassembled at the last stage; a fault hook on any link corrupts
+//!    the batch exactly like real interconnect damage.  The gathered
+//!    state is installed into
 //!    the inner backend and the global step executes once on the
 //!    reassembled batch (the simulation substrate has one executor;
 //!    GSPMD guarantees the partitioned program computes exactly what
@@ -57,7 +62,9 @@
 //!    discipline, applied to the loss.
 //! 3. **Update** — FSDP reduce-scatter leaves each rank its mean chunk
 //!    of the updated block (per stage), and a data-axis all-reduce
-//!    synchronizes the replication groups.  Both run through the
+//!    synchronizes the replication groups — both reduced **in place**
+//!    through one tree-merged buffer per subgroup and fanned out into
+//!    the existing device buffers.  Both run through the
 //!    collective engine, so an installed fault hook corrupts them
 //!    exactly like a real interconnect SDC.
 //!
@@ -79,6 +86,25 @@
 //! included) and recover through host crashes with the unchanged
 //! checkpoint/restore machinery.  See `docs/pipeline.md` for the
 //! schedule math and `docs/moe.md` for the expert axis.
+//!
+//! ## Zero-copy storage and worker threads
+//!
+//! Shard storage is tensor-major (`shards[tensor][device]`), gathered
+//! state lives in persistent per-tensor full-state buffers, and every
+//! per-step scratch buffer cycles through a per-worker arena — after a
+//! warm-up step the steady state allocates nothing
+//! ([`SimCounters::buffers_alloc`] stays flat; asserted by the
+//! steady-state tests below), and payload transport (pipeline hops, MoE
+//! dispatch/combine) moves buffers instead of copying them.
+//! Independent subgroup collectives fan out over
+//! [`MeshOptions::sim_threads`] scoped worker threads: each task owns a
+//! disjoint output region, the task→worker assignment is a fixed
+//! contiguous chunking, and every reduction keeps the binary-tree
+//! order — so the simulated bits (and the deterministic op/byte
+//! counters, see [`SimCounters`]) are identical at any thread count;
+//! only wall-clock changes.  `tests/sim_determinism.rs` proves this
+//! across the canonical mesh sweep, and `docs/simulator.md` develops
+//! the argument and the counter semantics.
 
 use std::cell::RefCell;
 
@@ -97,7 +123,7 @@ use crate::perfmodel::comms::{hierarchical, Collective};
 use crate::perfmodel::Strategy;
 use crate::trainer::backend::{train_backend_from_config, TrainBackend, TrainBackendDescriptor};
 
-use super::collective::{FaultHook, SimCollective};
+use super::collective::{FaultHook, SimCollective, SimCounters, SimWorker};
 use super::moe::{self, MoeStepStats};
 
 /// How a [`MeshTrainer`] shards and costs its mesh.
@@ -132,6 +158,13 @@ pub struct MeshOptions {
     /// Per-expert token capacity factor for the drop accounting
     /// ([`crate::distributed::moe::capacity_per_expert`]).
     pub capacity_factor: f64,
+    /// Worker threads for the simulator's independent subgroup
+    /// collectives (`1` = serial; values below 1 clamp to 1).  Purely a
+    /// wall-clock knob: the task→worker mapping is deterministic and
+    /// every output bit and every deterministic counter ([`SimCounters`]
+    /// `ops`/`reduce_ops`/`bytes_moved`) is identical at any value —
+    /// proven across the canonical sweep by `tests/sim_determinism.rs`.
+    pub sim_threads: usize,
 }
 
 impl MeshOptions {
@@ -184,6 +217,7 @@ impl MeshOptions {
             num_experts: if expert > 1 { 2 * expert } else { 1 },
             active_experts: if expert > 1 { 2 } else { 1 },
             capacity_factor: 1.25,
+            sim_threads: 1,
         }
     }
 
@@ -205,6 +239,13 @@ impl MeshOptions {
         self.capacity_factor = capacity_factor;
         self
     }
+
+    /// Set the simulator worker-thread count (bit-identical output at
+    /// any value; see [`MeshOptions::sim_threads`]).
+    pub fn with_sim_threads(mut self, n: usize) -> Self {
+        self.sim_threads = n;
+        self
+    }
 }
 
 /// The mutable execution state (interior-mutable so `&self` trait ops —
@@ -212,12 +253,26 @@ impl MeshOptions {
 struct MeshCore {
     inner: Box<dyn TrainBackend>,
     collective: SimCollective,
-    /// `devices[dev][tensor]`: the chunk of a sharded tensor (or a full
+    /// `shards[tensor][dev]`: the chunk of a sharded tensor (or a full
     /// copy of a replicated one) held by device
     /// `dev = r*(ps*es*g) + p*(es*g) + e*g + c`, where `r` indexes the
     /// replication group, `p` the pipeline stage, `e` the expert rank,
     /// and `c = m*fs + f` the within-stage shard lattice position.
-    devices: Vec<Vec<Vec<f32>>>,
+    /// Tensor-major, so one tensor's device column is contiguous and a
+    /// step fans tasks over disjoint `&mut` cells of it.
+    shards: Vec<Vec<Vec<f32>>>,
+    /// The most recently gathered full state (replica group 0's view),
+    /// refreshed **in place** by `gather_full` — the buffers persist
+    /// across steps, so the steady-state re-gather allocates nothing.
+    full_state: Vec<(String, Vec<f32>)>,
+    /// Worker engines for the `run_tasks` fan-out: same fault hook as
+    /// `collective`, own counters and scratch arena; counters fold back
+    /// in via [`SimCollective::absorb`] at the end of each phase.
+    workers: Vec<SimWorker>,
+    /// Worker-pool width ([`MeshOptions::sim_threads`], clamped >= 1).
+    threads: usize,
+    /// Recycled scratch for the model-axis loss reduction.
+    loss_buf: Vec<f32>,
     names: Vec<String>,
     sharded: Vec<bool>,
     /// FSDP sharding degree (1 when "fsdp" is not a shard axis).
@@ -268,12 +323,151 @@ fn bwd_tag(microbatch: usize) -> u64 {
     (1u64 << 32) | microbatch as u64
 }
 
+/// Deterministically fan `tasks` over the worker pool.  Each task owns
+/// a disjoint output region, tasks are assigned to workers in fixed
+/// contiguous chunks (`ceil(len/threads)` per worker, in task order),
+/// and results return in task order — so every output bit and every
+/// order-independent counter sum is identical at any worker count; only
+/// wall-clock changes.  With one worker (or one task) the fan-out runs
+/// inline, spawning nothing.
+fn run_tasks<T, R, F>(workers: &mut [SimWorker], tasks: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(&mut SimWorker, T) -> R + Sync,
+{
+    let nw = workers.len().min(tasks.len()).max(1);
+    if nw <= 1 {
+        let w = &mut workers[0];
+        return tasks.into_iter().map(|t| f(w, t)).collect();
+    }
+    let per = tasks.len().div_ceil(nw);
+    let mut chunks: Vec<Vec<T>> = Vec::with_capacity(nw);
+    let mut it = tasks.into_iter();
+    loop {
+        let chunk: Vec<T> = it.by_ref().take(per).collect();
+        if chunk.is_empty() {
+            break;
+        }
+        chunks.push(chunk);
+    }
+    let f = &f;
+    let mut results: Vec<Vec<R>> = Vec::with_capacity(chunks.len());
+    std::thread::scope(|s| {
+        let handles: Vec<_> = chunks
+            .into_iter()
+            .zip(workers.iter_mut())
+            .map(|(chunk, w)| {
+                s.spawn(move || chunk.into_iter().map(|t| f(w, t)).collect::<Vec<R>>())
+            })
+            .collect();
+        for h in handles {
+            results.push(h.join().expect("simulation worker panicked"));
+        }
+    });
+    results.into_iter().flatten().collect()
+}
+
+/// Reconstruct one (stage, expert-rank) cell of a sharded tensor into
+/// `out` from its `g = fs × ms` device chunks: FSDP all-gather within
+/// each model column ([`SimWorker::all_gather_into`], written straight
+/// into the cell's block), then the model-axis all-gather over the
+/// blocks just placed ([`SimWorker::all_gather_in_place`]).  Same
+/// collectives, same fault application, zero intermediate buffers.
+fn gather_cell_into(w: &mut SimWorker, out: &mut [f32], devs: &[Vec<f32>], fs: usize, ms: usize) {
+    let chunk = devs[0].len();
+    if fs > 1 {
+        let block = fs * chunk;
+        for (m, o) in out.chunks_mut(block).enumerate() {
+            let refs: Vec<&[f32]> =
+                devs[m * fs..(m + 1) * fs].iter().map(|d| d.as_slice()).collect();
+            w.all_gather_into(&refs, o);
+        }
+    } else {
+        for (o, d) in out.chunks_mut(chunk).zip(devs) {
+            o.copy_from_slice(d);
+        }
+    }
+    if ms > 1 {
+        w.all_gather_in_place(out, ms);
+    }
+}
+
+/// Lower one (stage, expert-rank) cell's post-step bank back onto its
+/// `g = fs × ms` device chunks: per model column, one in-place FSDP
+/// reduce-scatter over the (replicated-compute) block — every rank
+/// keeps its mean chunk, written into the existing device buffers, with
+/// one tree-merged scratch buffer recycled across columns.
+fn scatter_cell(w: &mut SimWorker, devs: &mut [Vec<f32>], bank: &[f32], fs: usize, ms: usize) {
+    let block_len = bank.len() / ms;
+    if fs > 1 {
+        let chunk = block_len / fs;
+        let mut sum = Vec::new();
+        for (m, block) in bank.chunks(block_len).enumerate() {
+            let refs: Vec<&[f32]> = vec![block; fs];
+            w.reduce_scatter_into(&refs, &mut sum);
+            for (f, piece) in sum.chunks(chunk).enumerate() {
+                let dev = &mut devs[m * fs + f];
+                dev.clear();
+                dev.extend(piece.iter().map(|&x| x / fs as f32));
+            }
+        }
+        w.recycle(sum);
+    } else {
+        for (dev, block) in devs.iter_mut().zip(bank.chunks(block_len)) {
+            dev.clear();
+            dev.extend_from_slice(block);
+        }
+    }
+}
+
+/// One gather-phase work item: fill a disjoint region of the persistent
+/// full-state buffer from a cell's device chunks (or copy a replicated
+/// tensor straight through).
+struct GatherTask<'a> {
+    out: &'a mut [f32],
+    devs: &'a [Vec<f32>],
+    sharded: bool,
+}
+
+/// One replica-verification work item: re-gather replica group `r`'s
+/// view of a tensor into recycled scratch and compare it bit-for-bit
+/// against group 0's.
+struct CheckTask<'a> {
+    r: usize,
+    devs: &'a [Vec<f32>],
+    expect: &'a [f32],
+    name: &'a str,
+    sharded: bool,
+}
+
+/// One update-phase work item: a (stage, expert-rank) cell's
+/// reduce-scatter.
+struct ScatterTask<'a> {
+    devs: &'a mut [Vec<f32>],
+    bank: &'a [f32],
+}
+
+/// One DP-sync work item.
+enum DpTask<'a> {
+    /// All replication-group copies of one shard position: tree-merge
+    /// in place, mean, fan out into the existing buffers.
+    Cell(Vec<&'a mut Vec<f32>>),
+    /// A replicated tensor under data parallelism: the DP gradient sync
+    /// over `rep` (identical) contributions, merged through **one**
+    /// buffer — allocation stays flat as `rep` grows.
+    Replicated { devs: &'a mut [Vec<f32>], src: &'a [f32] },
+    /// Scalar bookkeeping (the step counter) advances identically
+    /// everywhere — no communication, as on a real mesh.
+    Copy { devs: &'a mut [Vec<f32>], src: &'a [f32] },
+}
 impl MeshCore {
-    /// Split `state` into per-device chunks (the init/restore "scatter").
-    /// The pipeline axis partitions each sharded tensor into `ps`
-    /// contiguous stage slices, the expert axis partitions each stage
-    /// slice into `es` per-rank expert banks, and each bank shards over
-    /// the within-stage `fs × ms` lattice.
+    /// Split `state` into per-device chunks (the init/restore "scatter")
+    /// and seed the persistent full-state buffers.  The pipeline axis
+    /// partitions each sharded tensor into `ps` contiguous stage
+    /// slices, the expert axis partitions each stage slice into `es`
+    /// per-rank expert banks, and each bank shards over the
+    /// within-stage `fs × ms` lattice.
     fn shard_state(&mut self, state: &[(String, Vec<f32>)]) -> Result<()> {
         let (fs, ms, ps, es, g, rep) = (self.fs, self.ms, self.ps, self.es, self.g, self.rep);
         let span = ps * es * g;
@@ -290,14 +484,14 @@ impl MeshCore {
             }
             sharded.push(shard);
         }
-        self.devices = (0..rep * span)
-            .map(|dev| {
-                let c = dev % span; // = p*(es*g) + e*g + (m*fs + f): stage-major
-                state
-                    .iter()
-                    .zip(&sharded)
-                    .map(|((_, v), &shard)| {
+        self.shards = state
+            .iter()
+            .zip(&sharded)
+            .map(|((_, v), &shard)| {
+                (0..rep * span)
+                    .map(|dev| {
                         if shard {
+                            let c = dev % span; // = p*(es*g) + e*g + (m*fs + f): stage-major
                             let chunk = v.len() / span;
                             v[c * chunk..(c + 1) * chunk].to_vec()
                         } else {
@@ -309,74 +503,124 @@ impl MeshCore {
             .collect();
         self.names = state.iter().map(|(n, _)| n.clone()).collect();
         self.sharded = sharded;
+        self.full_state = state.to_vec();
         Ok(())
     }
 
-    /// Reconstruct the full state from the device shards: FSDP
-    /// all-gather within each model column, then a model-axis
-    /// all-gather, per pipeline stage and expert rank; expert and stage
-    /// slices concatenate host-side (parameters never cross stage
-    /// boundaries on a real pipeline, and expert ranks never exchange
-    /// their expert banks) — executed per replication group and
-    /// cross-checked bit-for-bit between groups.
-    fn gather_full(&mut self) -> Result<Vec<(String, Vec<f32>)>> {
+    /// Reconstruct the full state from the device shards into the
+    /// persistent `full_state` buffers: FSDP all-gather within each
+    /// model column, then a model-axis all-gather, per pipeline stage
+    /// and expert rank; expert and stage slices land host-side at their
+    /// cell offsets (parameters never cross stage boundaries on a real
+    /// pipeline, and expert ranks never exchange their expert banks) —
+    /// executed per replication group and cross-checked bit-for-bit
+    /// between groups, with the per-cell work fanned over the worker
+    /// pool.  Steady state: zero allocations (the full-state buffers
+    /// persist and the verification scratch recycles).
+    fn gather_full(&mut self) -> Result<()> {
         anyhow::ensure!(self.initialized, "MeshTrainer: no state to gather before init/restore");
         let (fs, ms, ps, es, g, rep) = (self.fs, self.ms, self.ps, self.es, self.g, self.rep);
         let span = ps * es * g;
-        let mut first: Vec<(String, Vec<f32>)> = Vec::new();
-        for r in 0..rep {
-            let mut tensors = Vec::with_capacity(self.names.len());
-            for t in 0..self.names.len() {
-                let full = if self.sharded[t] {
-                    let mut full = Vec::new();
-                    for p in 0..ps {
-                        for e in 0..es {
-                            let base = r * span + p * es * g + e * g;
-                            let mut blocks: Vec<Vec<f32>> = Vec::with_capacity(ms);
-                            for m in 0..ms {
-                                let block = if fs > 1 {
-                                    let contribs: Vec<Vec<f32>> = (0..fs)
-                                        .map(|f| self.devices[base + m * fs + f][t].clone())
-                                        .collect();
-                                    self.collective.all_gather(&contribs)?.swap_remove(0)
-                                } else {
-                                    self.devices[base + m * fs][t].clone()
-                                };
-                                blocks.push(block);
-                            }
-                            let expert_slice = if ms > 1 {
-                                self.collective.all_gather(&blocks)?.swap_remove(0)
-                            } else {
-                                blocks.swap_remove(0)
-                            };
-                            full.extend(expert_slice);
-                        }
+        let MeshCore {
+            shards,
+            full_state,
+            workers,
+            sharded,
+            collective,
+            ..
+        } = self;
+        // replica group 0 fills the persistent buffers in place, one
+        // task per (stage, expert-rank) cell
+        {
+            let mut tasks: Vec<GatherTask<'_>> = Vec::new();
+            for ((col, &is_sharded), (_, full)) in
+                shards.iter().zip(sharded.iter()).zip(full_state.iter_mut())
+            {
+                if is_sharded {
+                    let chunk = col[0].len();
+                    let cell = g * chunk;
+                    full.resize(span * chunk, 0.0);
+                    for (out, devs) in full.chunks_mut(cell).zip(col[..span].chunks(g)) {
+                        tasks.push(GatherTask { out, devs, sharded: true });
                     }
-                    full
                 } else {
-                    self.devices[r * span][t].clone()
-                };
-                tensors.push((self.names[t].clone(), full));
-            }
-            if r == 0 {
-                first = tensors;
-            } else {
-                for (a, b) in first.iter().zip(&tensors) {
-                    anyhow::ensure!(
-                        bits_eq(&a.1, &b.1),
-                        "mesh replica group {r} diverged from group 0 on tensor {:?}: \
-                         possible shard corruption",
-                        a.0
-                    );
+                    let src = &col[0];
+                    full.resize(src.len(), 0.0);
+                    tasks.push(GatherTask {
+                        out: full.as_mut_slice(),
+                        devs: std::slice::from_ref(src),
+                        sharded: false,
+                    });
                 }
             }
+            run_tasks(workers, tasks, |w, task| {
+                if task.sharded {
+                    gather_cell_into(w, task.out, task.devs, fs, ms);
+                } else {
+                    task.out.copy_from_slice(&task.devs[0]);
+                }
+            });
         }
-        Ok(first)
+        // the other replica groups re-gather into recycled scratch and
+        // must match group 0 bit-for-bit (tasks ordered r-then-tensor,
+        // so the first reported divergence matches the serial order)
+        if rep > 1 {
+            let mut checks: Vec<CheckTask<'_>> = Vec::new();
+            for r in 1..rep {
+                for ((col, &is_sharded), (name, expect)) in
+                    shards.iter().zip(sharded.iter()).zip(full_state.iter())
+                {
+                    checks.push(CheckTask {
+                        r,
+                        devs: &col[r * span..(r + 1) * span],
+                        expect,
+                        name,
+                        sharded: is_sharded,
+                    });
+                }
+            }
+            let mismatches = run_tasks(workers, checks, |w, task| {
+                let ok = if task.sharded {
+                    let chunk = task.devs[0].len();
+                    let cell = g * chunk;
+                    let mut buf = w.take_buf(task.expect.len());
+                    for (out, devs) in buf.chunks_mut(cell).zip(task.devs.chunks(g)) {
+                        gather_cell_into(w, out, devs, fs, ms);
+                    }
+                    let ok = bits_eq(&buf, task.expect);
+                    w.recycle(buf);
+                    ok
+                } else {
+                    bits_eq(&task.devs[0], task.expect)
+                };
+                if ok {
+                    None
+                } else {
+                    Some((task.r, task.name.to_string()))
+                }
+            });
+            for m in mismatches.into_iter().flatten() {
+                anyhow::bail!(
+                    "mesh replica group {} diverged from group 0 on tensor {:?}: \
+                     possible shard corruption",
+                    m.0,
+                    m.1
+                );
+            }
+        }
+        for w in workers.iter_mut() {
+            collective.absorb(w);
+        }
+        Ok(())
     }
 
     /// Lower the post-step state back onto the device grid: FSDP
     /// reduce-scatter (mean) per model column per stage, then the
-    /// data-axis all-reduce (mean) across replication groups.
+    /// data-axis all-reduce (mean) across replication groups — every
+    /// reduction tree-merged through one recycled buffer and written
+    /// into the existing device buffers (no per-rank contribution or
+    /// result clones), with independent subgroups fanned over the
+    /// worker pool.
     fn scatter_update(&mut self, new: &[(String, Vec<f32>)]) -> Result<()> {
         anyhow::ensure!(
             new.len() == self.names.len(),
@@ -386,6 +630,9 @@ impl MeshCore {
         );
         let (fs, ms, ps, es, g, rep) = (self.fs, self.ms, self.ps, self.es, self.g, self.rep);
         let span = ps * es * g;
+        // validate shapes (and fix the stage partitions) up front, so
+        // the parallel phases below cannot fail mid-flight
+        let mut stage_maps: Vec<Option<Vec<(usize, usize)>>> = Vec::with_capacity(new.len());
         for (t, (name, v)) in new.iter().enumerate() {
             anyhow::ensure!(
                 *name == self.names[t],
@@ -398,81 +645,114 @@ impl MeshCore {
                     "sharded tensor {name:?} changed to {} elements (not divisible by {span})",
                     v.len()
                 );
-                let stages = stage_partition(v.len(), ps)?;
-                for r in 0..rep {
-                    for (p, &(lo, hi)) in stages.iter().enumerate() {
-                        let stage_slice = &v[lo..hi];
-                        let bank_len = stage_slice.len() / es;
-                        for e in 0..es {
-                            let bank = &stage_slice[e * bank_len..(e + 1) * bank_len];
-                            let block_len = bank.len() / ms;
-                            let base = r * span + p * es * g + e * g;
-                            for m in 0..ms {
-                                let block = &bank[m * block_len..(m + 1) * block_len];
-                                if fs > 1 {
-                                    // every fsdp rank contributes its (replicated-
-                                    // compute) block and keeps its mean chunk
-                                    let contribs: Vec<Vec<f32>> =
-                                        (0..fs).map(|_| block.to_vec()).collect();
-                                    let chunks = self.collective.reduce_scatter(&contribs)?;
-                                    for (f, mut chunk) in chunks.into_iter().enumerate() {
-                                        for x in chunk.iter_mut() {
-                                            *x /= fs as f32;
-                                        }
-                                        self.devices[base + m * fs + f][t] = chunk;
-                                    }
-                                } else {
-                                    self.devices[base + m * fs][t] = block.to_vec();
-                                }
-                            }
-                        }
-                    }
-                }
-                if rep > 1 {
-                    // DP sync: all-reduce-average each shard position
-                    // across the replication groups
-                    for c in 0..span {
-                        let contribs: Vec<Vec<f32>> =
-                            (0..rep).map(|r| self.devices[r * span + c][t].clone()).collect();
-                        let mut merged = self.collective.all_reduce(&contribs)?.swap_remove(0);
-                        for x in merged.iter_mut() {
-                            *x /= rep as f32;
-                        }
-                        for r in 0..rep {
-                            self.devices[r * span + c][t] = merged.clone();
-                        }
-                    }
-                }
-            } else if rep > 1 && v.len() > 1 {
-                // replicated tensor under data parallelism: the DP
-                // gradient sync (identical contributions -> exact mean)
-                let contribs: Vec<Vec<f32>> = (0..rep).map(|_| v.clone()).collect();
-                let mut merged = self.collective.all_reduce(&contribs)?.swap_remove(0);
-                for x in merged.iter_mut() {
-                    *x /= rep as f32;
-                }
-                for dev in self.devices.iter_mut() {
-                    dev[t] = merged.clone();
-                }
+                stage_maps.push(Some(stage_partition(v.len(), ps)?));
             } else {
-                // scalar bookkeeping (the step counter) advances
-                // identically everywhere — no communication, as on a
-                // real mesh
-                for dev in self.devices.iter_mut() {
-                    dev[t] = v.clone();
+                stage_maps.push(None);
+            }
+        }
+        let MeshCore {
+            shards,
+            workers,
+            sharded,
+            collective,
+            ..
+        } = self;
+        // phase 1: per-cell FSDP reduce-scatter of every sharded tensor
+        {
+            let mut tasks: Vec<ScatterTask<'_>> = Vec::new();
+            for ((col, (_, v)), stages) in shards.iter_mut().zip(new.iter()).zip(&stage_maps) {
+                let stages = match stages {
+                    Some(s) => s,
+                    None => continue,
+                };
+                let mut banks: Vec<&[f32]> = Vec::with_capacity(ps * es);
+                for &(lo, hi) in stages {
+                    let stage_slice = &v[lo..hi];
+                    let bank_len = stage_slice.len() / es;
+                    for e in 0..es {
+                        banks.push(&stage_slice[e * bank_len..(e + 1) * bank_len]);
+                    }
+                }
+                for (cell, devs) in col.chunks_mut(g).enumerate() {
+                    tasks.push(ScatterTask { devs, bank: banks[cell % (ps * es)] });
                 }
             }
+            run_tasks(workers, tasks, |w, task| {
+                scatter_cell(w, task.devs, task.bank, fs, ms)
+            });
+        }
+        // phase 2: the data-axis sync — all-reduce-average each shard
+        // position across the replication groups, and the DP gradient
+        // sync of replicated tensors (identical contributions -> exact
+        // mean), both merged in place through one buffer per subgroup
+        {
+            let mut tasks: Vec<DpTask<'_>> = Vec::new();
+            for ((col, (_, v)), &is_sharded) in
+                shards.iter_mut().zip(new.iter()).zip(sharded.iter())
+            {
+                if is_sharded {
+                    if rep > 1 {
+                        let mut groups: Vec<Vec<&mut Vec<f32>>> =
+                            (0..span).map(|_| Vec::with_capacity(rep)).collect();
+                        for (dev, buf) in col.iter_mut().enumerate() {
+                            groups[dev % span].push(buf);
+                        }
+                        tasks.extend(groups.into_iter().map(DpTask::Cell));
+                    }
+                } else if rep > 1 && v.len() > 1 {
+                    tasks.push(DpTask::Replicated { devs: col.as_mut_slice(), src: v });
+                } else {
+                    tasks.push(DpTask::Copy { devs: col.as_mut_slice(), src: v });
+                }
+            }
+            run_tasks(workers, tasks, |w, task| match task {
+                DpTask::Cell(mut bufs) => {
+                    let refs: Vec<&[f32]> = bufs.iter().map(|b| b.as_slice()).collect();
+                    let mut sum = Vec::new();
+                    w.all_reduce_into(&refs, &mut sum);
+                    for x in sum.iter_mut() {
+                        *x /= rep as f32;
+                    }
+                    for b in bufs.iter_mut() {
+                        b.clear();
+                        b.extend_from_slice(&sum);
+                    }
+                    w.recycle(sum);
+                }
+                DpTask::Replicated { devs, src } => {
+                    let refs: Vec<&[f32]> = vec![src; rep];
+                    let mut sum = Vec::new();
+                    w.all_reduce_into(&refs, &mut sum);
+                    for x in sum.iter_mut() {
+                        *x /= rep as f32;
+                    }
+                    for d in devs.iter_mut() {
+                        d.clear();
+                        d.extend_from_slice(&sum);
+                    }
+                    w.recycle(sum);
+                }
+                DpTask::Copy { devs, src } => {
+                    for d in devs.iter_mut() {
+                        d.clear();
+                        d.extend_from_slice(src);
+                    }
+                }
+            });
+        }
+        for w in workers.iter_mut() {
+            collective.absorb(w);
         }
         Ok(())
     }
 
     /// Route the microbatch token/target chunks through the stage chain,
-    /// one [`SimCollective::send`]/[`SimCollective::recv`] hop per
-    /// forward slot of `sched`, and reassemble the global batch at the
-    /// last stage.  Transport moves bits without arithmetic, so the
-    /// reassembled batch is bit-identical to the input on a healthy
-    /// interconnect — and corrupted exactly like real activations
-    /// under a fault hook.
+    /// one [`SimCollective::send_owned`]/[`SimCollective::recv`] hop per
+    /// forward slot of `sched` (a hop is a pure buffer move), and
+    /// reassemble the global batch at the last stage.  Transport moves
+    /// bits without arithmetic, so the reassembled batch is
+    /// bit-identical to the input on a healthy interconnect — and
+    /// corrupted exactly like real activations under a fault hook.
     fn pipeline_forward(
         &mut self,
         sched: &PipelineSchedule,
@@ -497,23 +777,26 @@ impl MeshCore {
             let (st, j) = (slot.stage, slot.microbatch);
             if st == 0 {
                 // stage 0 owns the input: pack microbatch j's tokens and
-                // targets into one boundary payload.  Bit-cast, not
-                // numeric cast — transport must be lossless for every
-                // i32 (an `as f32` round-trip would corrupt ids above
-                // 2^24), and pure moves never touch the bits
-                let mut payload: Vec<f32> = Vec::with_capacity(2 * chunk);
-                payload.extend(
-                    tokens[j * chunk..(j + 1) * chunk]
-                        .iter()
-                        .map(|&x| f32::from_bits(x as u32)),
-                );
-                payload.extend(
-                    targets[j * chunk..(j + 1) * chunk]
-                        .iter()
-                        .map(|&x| f32::from_bits(x as u32)),
-                );
+                // targets into one boundary payload (from the arena).
+                // Bit-cast, not numeric cast — transport must be
+                // lossless for every i32 (an `as f32` round-trip would
+                // corrupt ids above 2^24), and pure moves never touch
+                // the bits
+                let mut payload = self.collective.take_buf(2 * chunk);
+                for (o, &x) in payload[..chunk]
+                    .iter_mut()
+                    .zip(&tokens[j * chunk..(j + 1) * chunk])
+                {
+                    *o = f32::from_bits(x as u32);
+                }
+                for (o, &x) in payload[chunk..]
+                    .iter_mut()
+                    .zip(&targets[j * chunk..(j + 1) * chunk])
+                {
+                    *o = f32::from_bits(x as u32);
+                }
                 if s_n > 1 {
-                    self.collective.send(0, 1, fwd_tag(j), &payload)?;
+                    self.collective.send_owned(0, 1, fwd_tag(j), payload)?;
                 } else {
                     arrived[j] = Some(payload);
                 }
@@ -524,7 +807,7 @@ impl MeshCore {
                     "microbatch {j} payload changed shape in flight at stage {st}"
                 );
                 if st < s_n - 1 {
-                    self.collective.send(st, st + 1, fwd_tag(j), &data)?;
+                    self.collective.send_owned(st, st + 1, fwd_tag(j), data)?;
                 } else {
                     arrived[j] = Some(data);
                 }
@@ -537,6 +820,7 @@ impl MeshCore {
                 .with_context(|| format!("microbatch {j} never reached the last stage"))?;
             out_tokens.extend(data[..chunk].iter().map(|&x| x.to_bits() as i32));
             out_targets.extend(data[chunk..].iter().map(|&x| x.to_bits() as i32));
+            self.collective.recycle(data);
         }
         Ok((out_tokens, out_targets))
     }
@@ -546,7 +830,7 @@ impl MeshCore {
     /// accumulate them at stage 0 in binary-tree order — the microbatch
     /// gradient-accumulation discipline applied to the loss.  For
     /// power-of-two `m` the accumulated loss is bit-identical to the
-    /// unpipelined one.
+    /// unpipelined one.  Drained payloads recycle through the arena.
     fn pipeline_backward(&mut self, sched: &PipelineSchedule, loss: f32) -> Result<f32> {
         let (s_n, m) = (sched.stages, sched.microbatches);
         let part = loss / m as f32;
@@ -556,7 +840,9 @@ impl MeshCore {
             if st == s_n - 1 {
                 // the loss originates at the last stage
                 if s_n > 1 {
-                    self.collective.send(st, st - 1, bwd_tag(j), &[part])?;
+                    let mut payload = self.collective.take_buf(1);
+                    payload[0] = part;
+                    self.collective.send_owned(st, st - 1, bwd_tag(j), payload)?;
                 } else {
                     partials[j] = Some(part);
                 }
@@ -567,9 +853,10 @@ impl MeshCore {
                     "microbatch {j} loss partial changed shape in flight at stage {st}"
                 );
                 if st > 0 {
-                    self.collective.send(st, st - 1, bwd_tag(j), &data)?;
+                    self.collective.send_owned(st, st - 1, bwd_tag(j), data)?;
                 } else {
                     partials[j] = Some(data[0]);
+                    self.collective.recycle(data);
                 }
             }
         }
@@ -586,9 +873,11 @@ impl MeshCore {
     /// The MoE round trip of one step: route every token with the
     /// deterministic top-k router, **dispatch** the `(token, target)`
     /// payloads to their primary expert's rank through a real
-    /// expert-subgroup [`SimCollective::all_to_all`], then **combine**
-    /// them back with a second all-to-all and restore the original
-    /// order from the recorded permutation.  Transport moves bits
+    /// expert-subgroup [`SimCollective::all_to_all_owned`], then
+    /// **combine** them back with a second all-to-all and restore the
+    /// original order from the recorded permutation.  The bucket
+    /// payloads move end to end — dispatch and combine transpose the
+    /// bucket matrix without copying a token.  Transport moves bits
     /// without arithmetic, so the reassembled batch is bit-identical to
     /// the input on a healthy interconnect — and corrupted exactly like
     /// real expert activations under a fault hook.  Capacity-factor
@@ -601,7 +890,7 @@ impl MeshCore {
         active_experts: usize,
         capacity_factor: f64,
     ) -> Result<(Vec<i32>, Vec<i32>)> {
-        let plan = moe::plan_dispatch(
+        let moe::DispatchPlan { buckets, dest_of, stats } = moe::plan_dispatch(
             tokens,
             targets,
             self.es,
@@ -609,17 +898,16 @@ impl MeshCore {
             active_experts,
             capacity_factor,
         )?;
-        let dispatched = self.collective.all_to_all(&plan.buckets)?;
+        let dispatched = self.collective.all_to_all_owned(buckets)?;
         // the expert FFN application itself folds into the global
         // compute (one executor — GSPMD semantics); the combine pass
         // returns each rank's received tokens to their source
-        let returned = self.collective.all_to_all(&dispatched)?;
-        let out = moe::reassemble(&plan.dest_of, &returned)?;
-        self.moe_stats = Some(plan.stats);
+        let returned = self.collective.all_to_all_owned(dispatched)?;
+        let out = moe::reassemble(&dest_of, &returned)?;
+        self.moe_stats = Some(stats);
         Ok(out)
     }
 }
-
 /// Mesh-sharded training over any [`TrainBackend`] — itself a
 /// [`TrainBackend`], so the trainer loop, `train_data_parallel_backends`,
 /// and the fleet orchestrator run mesh-sharded without changes (mesh ×
@@ -719,6 +1007,9 @@ impl MeshTrainer {
         } else {
             (inner_desc.batch * inner_desc.seq * 4) as f64
         };
+        let threads = opts.sim_threads.max(1);
+        let collective = SimCollective::new();
+        let workers = (0..threads).map(|_| collective.worker()).collect();
         Ok(MeshTrainer {
             opts,
             desc,
@@ -726,8 +1017,12 @@ impl MeshTrainer {
             pipe,
             core: RefCell::new(MeshCore {
                 inner,
-                collective: SimCollective::new(),
-                devices: Vec::new(),
+                collective,
+                shards: Vec::new(),
+                full_state: Vec::new(),
+                workers,
+                threads,
+                loss_buf: Vec::new(),
                 names: Vec::new(),
                 sharded: Vec::new(),
                 fs,
@@ -745,10 +1040,12 @@ impl MeshTrainer {
 
     /// Install a fault hook on the mesh's collective engine (interconnect
     /// SDC injection — corruption flows through gathers and reductions
-    /// exactly as on real hardware).
+    /// exactly as on real hardware).  The worker pool is rebuilt so
+    /// every worker shares the hook.
     pub fn with_fault(mut self, hook: FaultHook) -> Self {
         let core = self.core.get_mut();
         core.collective = std::mem::take(&mut core.collective).with_fault(hook);
+        core.workers = (0..core.threads).map(|_| core.collective.worker()).collect();
         self
     }
 
@@ -774,6 +1071,22 @@ impl MeshTrainer {
     /// Collectives (including p2p sends) executed so far.
     pub fn collective_ops(&self) -> u64 {
         self.core.borrow().collective.ops_run
+    }
+
+    /// The deterministic work counters accumulated so far — ops,
+    /// reduce additions, bytes moved, fresh buffers (see
+    /// [`SimCounters`]).  `ops`/`reduce_ops`/`bytes_moved` are
+    /// independent of [`MeshOptions::sim_threads`]; `buffers_alloc`
+    /// depends on per-worker arena warm-up, so gate it from
+    /// single-threaded runs.
+    pub fn counters(&self) -> SimCounters {
+        self.core.borrow().collective.counters()
+    }
+
+    /// Worker threads the simulator fans independent subgroup
+    /// collectives over (>= 1; see [`MeshOptions::sim_threads`]).
+    pub fn sim_threads(&self) -> usize {
+        self.core.borrow().threads
     }
 
     /// The microbatch pipeline grid this mesh executes (trivial 1-stage
@@ -802,7 +1115,7 @@ impl MeshTrainer {
         let ic = &self.opts.interconnect;
         let mut entries = Vec::new();
         for (t, name) in core.names.iter().enumerate() {
-            let chunk_len = core.devices[0][t].len();
+            let chunk_len = core.shards[t][0].len();
             if core.sharded[t] {
                 // per-cell payloads: a (stage, expert-rank) cell only
                 // moves its own layer/expert-bank slice
@@ -963,11 +1276,12 @@ impl TrainBackend for MeshTrainer {
     fn step(&mut self, tokens: &[i32], targets: &[i32]) -> Result<f32> {
         let core = self.core.get_mut();
         anyhow::ensure!(core.initialized, "MeshTrainer::step before init/restore");
-        // 1. gather: reconstruct the full state from the device shards
-        let full = core.gather_full()?;
+        // 1. gather: reconstruct the full state from the device shards,
+        // refreshed in place into the persistent full-state buffers
+        core.gather_full()?;
         let at_step = core.step;
         core.inner
-            .restore_from_host(&full, at_step)
+            .restore_from_host(&core.full_state, at_step)
             .context("installing gathered mesh state")?;
         // 2. compute: with an expert axis, the batch first runs the MoE
         // dispatch/combine round trip over the expert subgroup (two real
@@ -994,11 +1308,18 @@ impl TrainBackend for MeshTrainer {
         };
         let raw = core.inner.step(&tokens, &targets)?;
         // tensor-parallel activation reduction: reassemble the loss from
-        // per-rank partials through a real model-axis all-reduce
+        // per-rank partials through a real model-axis all-reduce (one
+        // tree-merged buffer, recycled across steps)
         let loss = if core.ms > 1 {
             let part = raw / core.ms as f32;
-            let contribs = vec![vec![part]; core.ms];
-            core.collective.all_reduce(&contribs)?[0][0]
+            let one = [part];
+            let refs: Vec<&[f32]> = vec![&one[..]; core.ms];
+            let mut sum = std::mem::take(&mut core.loss_buf);
+            core.workers[0].all_reduce_into(&refs, &mut sum);
+            let merged = sum[0];
+            core.loss_buf = sum;
+            core.collective.absorb(&mut core.workers[0]);
+            merged
         } else {
             raw
         };
@@ -1024,10 +1345,11 @@ impl TrainBackend for MeshTrainer {
 
     fn eval_loss(&self, tokens: &[i32], targets: &[i32]) -> Result<f32> {
         let mut core = self.core.borrow_mut();
+        let core = &mut *core;
         anyhow::ensure!(core.initialized, "MeshTrainer::eval_loss before init/restore");
-        let full = core.gather_full()?;
+        core.gather_full()?;
         let at_step = core.step;
-        core.inner.restore_from_host(&full, at_step)?;
+        core.inner.restore_from_host(&core.full_state, at_step)?;
         core.inner.eval_loss(tokens, targets)
     }
 
@@ -1036,7 +1358,9 @@ impl TrainBackend for MeshTrainer {
     }
 
     fn state_to_host(&self) -> Result<Vec<(String, Vec<f32>)>> {
-        self.core.borrow_mut().gather_full()
+        let mut core = self.core.borrow_mut();
+        core.gather_full()?;
+        Ok(core.full_state.clone())
     }
 
     fn restore_from_host(&mut self, tensors: &[(String, Vec<f32>)], step: u64) -> Result<()> {
@@ -1106,6 +1430,7 @@ pub fn mesh_from_config(cfg: &ConfigNode) -> Result<MeshTrainer> {
             num_experts: cfg.get_int("num_experts").unwrap_or(1).max(1) as usize,
             active_experts: cfg.get_int("active_experts").unwrap_or(1).max(1) as usize,
             capacity_factor: cfg.get_float("capacity_factor").unwrap_or(1.25),
+            sim_threads: cfg.get_int("sim_threads").unwrap_or(1).max(1) as usize,
         },
     )
 }
@@ -1143,6 +1468,7 @@ pub fn mesh_trainer_from_plan(plan: &Plan, inner: Box<dyn TrainBackend>) -> Resu
             num_experts: (plan.shape.num_experts as usize).max(1),
             active_experts: (plan.shape.active_experts as usize).max(1),
             capacity_factor: plan.capacity_factor,
+            sim_threads: 1,
         },
     )
 }
@@ -1160,7 +1486,6 @@ pub fn mesh_trainer_for_instance(
     let plan = materialize(trainer, instance_type, total_chips, rules)?;
     mesh_trainer_from_plan(&plan, inner)
 }
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1713,5 +2038,78 @@ mod tests {
         single.init(7).unwrap();
         let ls = run_steps(&mut *single, 9, 4);
         assert_eq!(ls, lm);
+    }
+
+    #[test]
+    fn dp_fan_out_allocations_stay_flat_as_replication_grows() {
+        // the DP sync merges in place and fans the result out into the
+        // existing replica buffers — growing the replication degree must
+        // not grow steady-state allocations
+        let mut deltas = Vec::new();
+        for rep in [2usize, 4, 8] {
+            let mut mesh =
+                MeshTrainer::new(mock(), MeshOptions::for_mesh(rep, 1, 1)).unwrap();
+            mesh.init(1).unwrap();
+            run_steps(&mut mesh, 2, 3); // warm the scratch arenas
+            let before = mesh.counters();
+            run_steps(&mut mesh, 3, 3);
+            let d = mesh.counters().since(before);
+            assert!(d.ops > 0, "rep={rep}: steps must communicate");
+            assert_eq!(
+                d.buffers_alloc, 0,
+                "rep={rep}: steady-state DP fan-out must not allocate"
+            );
+            deltas.push(d);
+        }
+        // the sync itself still scales with the replica count
+        assert!(deltas[0].bytes_moved < deltas[1].bytes_moved);
+        assert!(deltas[1].bytes_moved < deltas[2].bytes_moved);
+    }
+
+    #[test]
+    fn steady_state_steps_allocate_nothing() {
+        let mut mesh = MeshTrainer::new(mock(), MeshOptions::for_mesh(2, 2, 2)).unwrap();
+        mesh.init(5).unwrap();
+        run_steps(&mut mesh, 7, 3); // warm the scratch arenas
+        let before = mesh.counters();
+        run_steps(&mut mesh, 8, 3);
+        let d = mesh.counters().since(before);
+        assert!(d.ops > 0 && d.bytes_moved > 0, "warm steps must communicate");
+        assert_eq!(d.buffers_alloc, 0, "warm steps must recycle every buffer");
+    }
+
+    #[test]
+    fn sim_threads_change_nothing_but_wall_clock() {
+        let run = |threads: usize| {
+            let opts = MeshOptions::for_mesh(2, 2, 2).with_sim_threads(threads);
+            let mut mesh = MeshTrainer::new(mock(), opts).unwrap();
+            assert_eq!(mesh.sim_threads(), threads.max(1));
+            mesh.init(3).unwrap();
+            let losses = run_steps(&mut mesh, 5, 5);
+            let c = mesh.counters();
+            (losses, state_bits(&mesh), c.ops, c.reduce_ops, c.bytes_moved)
+        };
+        let base = run(1);
+        assert_eq!(base, run(2), "2 workers must be bit-identical to 1");
+        assert_eq!(base, run(8), "8 workers must be bit-identical to 1");
+        assert_eq!(base, run(0), "sim_threads clamps to >= 1");
+    }
+
+    #[test]
+    fn sim_threads_flow_from_config() {
+        use crate::config::registry::default_config;
+        use crate::config::Value;
+        let mut cfg = default_config("MeshTrainer").unwrap();
+        cfg.set("mesh_shape", Value::IntList(vec![1, 2, 1])).unwrap();
+        cfg.set("sim_threads", Value::Int(4)).unwrap();
+        let mut mesh = mesh_from_config(&cfg).unwrap();
+        assert_eq!(mesh.sim_threads(), 4);
+        mesh.init(6).unwrap();
+        let lm = run_steps(&mut mesh, 7, 4);
+        let mut single = mock();
+        single.init(6).unwrap();
+        let ls = run_steps(&mut *single, 7, 4);
+        assert_eq!(ls, lm, "threaded config-built mesh must preserve the numerics");
+        assert_eq!(state_bits(&*single), state_bits(&mesh));
     }
 }

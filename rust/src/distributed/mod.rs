@@ -38,9 +38,10 @@ pub mod mesh;
 pub mod moe;
 pub mod recovery;
 pub mod scheduler;
+pub mod sim_bench;
 
 pub use cluster::{Cluster, ClusterOptions};
-pub use collective::SimCollective;
+pub use collective::{SimCollective, SimCounters, SimWorker};
 pub use data_parallel::{
     train_data_parallel, train_data_parallel_backends, DataParallelOptions, DataParallelOutcome,
 };
@@ -52,6 +53,9 @@ pub use fleet::{
 pub use mesh::{
     mesh_backend_from_config, mesh_from_config, mesh_trainer_for_instance, mesh_trainer_from_plan,
     MeshOptions, MeshTrainer,
+};
+pub use sim_bench::{
+    compare_sim_to_baseline, sim_counter_points, sim_doc, SimBenchPoint, SIM_BENCH_MESHES,
 };
 pub use recovery::{recovery_experiment, RecoveryOutcome, RecoveryStrategy};
 pub use scheduler::{HotSwapScheduler, SliceState};

@@ -1,0 +1,297 @@
+//! The canonical simulator-throughput sweep behind
+//! `benches/bench_sim.rs` and the counter half of the CI bench gate.
+//!
+//! [`sim_counter_points`] runs real [`MeshTrainer`] steps over scaling
+//! 5-axis meshes (16 → 256 devices, 1024-element mock state) and
+//! records the **deterministic work counters** — collective ops, tree
+//! reduce additions, bytes moved, and fresh buffer allocations in the
+//! steady state ([`crate::distributed::SimCounters`]).  Three consumers
+//! share it, mirroring the step-time sweep in
+//! [`crate::composer::mesh_sweep`]:
+//!
+//! * `rust/benches/bench_sim.rs` prints the table, measures wall-clock
+//!   per simulated step at several `sim_threads` values, and emits
+//!   `bench_sim.json`;
+//! * `rust/src/bin/bench_check.rs` recomputes the counters and fails CI
+//!   when they drift from the `sim_points` section of the committed
+//!   `benches/baseline.json` — **exactly**, no tolerance, because the
+//!   counters are integers a code change either preserves or does not
+//!   (a reintroduced per-step clone shows up as `buffers_alloc_steady`
+//!   or `bytes_moved` growth even when wall-clock noise would hide it);
+//! * `rust/tests/bench_gate.rs` proves the comparison catches injected
+//!   counter regressions, in tier-1.
+//!
+//! Wall-clock is *reported* in `bench_sim.json` for the speedup story
+//! but never gated — only the counters are.
+
+use crate::trainer::backend::{MockTrainBackend, MockTrainBackendOptions};
+use crate::trainer::input::{CorpusKind, SyntheticCorpus};
+use crate::trainer::{InputPipeline, TrainBackend};
+use crate::util::json::Json;
+
+use super::mesh::{MeshOptions, MeshTrainer};
+
+/// Mock parameter-vector length of the swept workload (divisible by
+/// every shard span below).
+pub const SIM_BENCH_DIM: usize = 1024;
+/// Steps run before measuring, so the scratch arenas reach their warm
+/// fixed point and the measured counter deltas are steady-state (kept
+/// fixed rather than adaptive: the MoE rows' bytes-moved depend on
+/// which corpus steps land in the measured window, so the window must
+/// not drift).
+pub const SIM_BENCH_WARM_STEPS: usize = 6;
+/// Steps the counter deltas (and the bench's wall-clock) cover.
+pub const SIM_BENCH_MEASURE_STEPS: usize = 3;
+/// Microbatches for the pipelined shapes.
+pub const SIM_BENCH_MICROBATCHES: usize = 8;
+
+/// The swept factorizations: `(data, pipeline, fsdp, model, expert)`,
+/// scaling 16 → 256 simulated devices.  Every shard span
+/// `pipeline·expert·fsdp·model` divides [`SIM_BENCH_DIM`]; the
+/// `expert > 1` rows route through an 8-expert top-2 bank.
+pub const SIM_BENCH_MESHES: [(usize, usize, usize, usize, usize); 8] = [
+    (4, 1, 4, 1, 1), // 16 devices: DP × FSDP
+    (2, 2, 2, 2, 1), // 16 devices: all four dense axes
+    (4, 1, 8, 2, 1), // 64 devices
+    (2, 2, 4, 2, 2), // 64 devices, MoE
+    (4, 2, 8, 2, 1), // 128 devices
+    (2, 2, 8, 2, 2), // 128 devices, MoE
+    (4, 4, 8, 2, 1), // 256 devices: pipeline-heavy
+    (4, 2, 8, 2, 2), // 256 devices: all five axes, MoE
+];
+
+/// One mesh shape's worth of counter output.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SimBenchPoint {
+    /// `"dxpxfxmxe"` — the gate's join key.
+    pub mesh: String,
+    pub devices: usize,
+    pub moe: bool,
+    /// Steps the deltas cover ([`SIM_BENCH_MEASURE_STEPS`]).
+    pub steps: usize,
+    /// Collectives executed (thread-count independent).
+    pub ops: u64,
+    /// Tree-reduction float additions (thread-count independent).
+    pub reduce_ops: u64,
+    /// Payload bytes through the collectives (thread-count independent).
+    pub bytes_moved: u64,
+    /// Fresh buffers allocated during the measured steps at
+    /// `sim_threads = 1` — the zero-copy refactor's invariant is that
+    /// this is 0, and the gate keeps it that way.
+    pub buffers_alloc_steady: u64,
+}
+
+/// Build the sweep's trainer for one factorization: the 1024-element
+/// mock sharded over the mesh, 1F1B for pipelined shapes, an 8-expert
+/// top-2 bank for expert shapes.
+pub fn sim_bench_trainer(
+    shape: (usize, usize, usize, usize, usize),
+    sim_threads: usize,
+) -> anyhow::Result<MeshTrainer> {
+    let (d, p, f, m, e) = shape;
+    let inner = Box::new(MockTrainBackend::new(MockTrainBackendOptions {
+        dim: SIM_BENCH_DIM,
+        ..Default::default()
+    }));
+    let micro = if p > 1 { SIM_BENCH_MICROBATCHES } else { 1 };
+    let mut opts = MeshOptions::for_mesh5(d, p, f, m, e, micro).with_sim_threads(sim_threads);
+    if e > 1 {
+        opts = opts.with_moe(8, 2, 1.25);
+    }
+    MeshTrainer::new(inner, opts)
+}
+
+fn run_steps(mesh: &mut MeshTrainer, corpus: &mut SyntheticCorpus, steps: usize) {
+    for _ in 0..steps {
+        let (tok, tgt) = corpus.next_batch();
+        mesh.step(&tok, &tgt).expect("sim bench step");
+    }
+}
+
+fn sweep_corpus() -> SyntheticCorpus {
+    let d = MockTrainBackendOptions::default();
+    SyntheticCorpus::new(CorpusKind::Markov, d.vocab, d.batch, d.seq, 11)
+}
+
+/// Compute the counter sweep at `sim_threads = 1` (the counters other
+/// than `buffers_alloc_steady` are identical at any thread count — the
+/// tier-1 determinism suite proves it; the single-threaded run is the
+/// canonical one so `buffers_alloc_steady` is well-defined too).
+pub fn sim_counter_points() -> Vec<SimBenchPoint> {
+    SIM_BENCH_MESHES
+        .iter()
+        .map(|&shape| {
+            let (d, p, f, m, e) = shape;
+            let mut mesh = sim_bench_trainer(shape, 1).expect("sim bench mesh");
+            mesh.init(0).expect("sim bench init");
+            let mut corpus = sweep_corpus();
+            run_steps(&mut mesh, &mut corpus, SIM_BENCH_WARM_STEPS);
+            let before = mesh.counters();
+            run_steps(&mut mesh, &mut corpus, SIM_BENCH_MEASURE_STEPS);
+            let delta = mesh.counters().since(before);
+            SimBenchPoint {
+                mesh: format!("{d}x{p}x{f}x{m}x{e}"),
+                devices: mesh.num_devices(),
+                moe: e > 1,
+                steps: SIM_BENCH_MEASURE_STEPS,
+                ops: delta.ops,
+                reduce_ops: delta.reduce_ops,
+                bytes_moved: delta.bytes_moved,
+                buffers_alloc_steady: delta.buffers_alloc,
+            }
+        })
+        .collect()
+}
+
+/// Wall-clock seconds per simulated step for one factorization at a
+/// given worker-thread count (used by `bench_sim` for the reported —
+/// never gated — speedup series).  Warms the arenas first so the
+/// measurement covers steady-state steps.
+pub fn measure_wall_clock(
+    shape: (usize, usize, usize, usize, usize),
+    sim_threads: usize,
+    steps: usize,
+) -> f64 {
+    let mut mesh = sim_bench_trainer(shape, sim_threads).expect("sim bench mesh");
+    mesh.init(0).expect("sim bench init");
+    let mut corpus = sweep_corpus();
+    run_steps(&mut mesh, &mut corpus, SIM_BENCH_WARM_STEPS);
+    let start = std::time::Instant::now();
+    run_steps(&mut mesh, &mut corpus, steps.max(1));
+    start.elapsed().as_secs_f64() / steps.max(1) as f64
+}
+
+/// The `sim_points` JSON section for a computed counter sweep — the
+/// format `bench_sim` embeds in `bench_sim.json` and `bench_check
+/// --write` merges into `benches/baseline.json`.
+pub fn sim_doc(points: &[SimBenchPoint]) -> Json {
+    Json::obj(vec![
+        ("bench", Json::str("sim_step_counters")),
+        ("dim", Json::num(SIM_BENCH_DIM as f64)),
+        ("warm_steps", Json::num(SIM_BENCH_WARM_STEPS as f64)),
+        ("measure_steps", Json::num(SIM_BENCH_MEASURE_STEPS as f64)),
+        (
+            "sim_points",
+            Json::Arr(
+                points
+                    .iter()
+                    .map(|p| {
+                        Json::obj(vec![
+                            ("mesh", Json::str(p.mesh.clone())),
+                            ("devices", Json::num(p.devices as f64)),
+                            ("moe", Json::Bool(p.moe)),
+                            ("steps", Json::num(p.steps as f64)),
+                            ("ops", Json::num(p.ops as f64)),
+                            ("reduce_ops", Json::num(p.reduce_ops as f64)),
+                            ("bytes_moved", Json::num(p.bytes_moved as f64)),
+                            (
+                                "buffers_alloc_steady",
+                                Json::num(p.buffers_alloc_steady as f64),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Compare a computed counter sweep against a baseline document
+/// **exactly** — the counters are integers, so any difference is a real
+/// behavior change (a reintroduced clone, a dropped collective), never
+/// noise.  Returns one message per mismatch; empty means the gate
+/// passes.  A baseline without a `sim_points` section yields a single
+/// actionable message pointing at `bench_check --write`.
+pub fn compare_sim_to_baseline(points: &[SimBenchPoint], baseline: &Json) -> Vec<String> {
+    let Some(base_points) = baseline.get("sim_points").and_then(|p| p.as_arr()) else {
+        return vec![
+            "baseline has no \"sim_points\" array — regenerate it with `bench_check --write` \
+             and commit the reviewed diff"
+                .into(),
+        ];
+    };
+    let mut drifts = Vec::new();
+    for p in points {
+        let Some(b) = base_points
+            .iter()
+            .find(|b| b.get("mesh").and_then(|m| m.as_str()) == Some(p.mesh.as_str()))
+        else {
+            drifts.push(format!("sim mesh {} missing from baseline", p.mesh));
+            continue;
+        };
+        for (metric, current) in [
+            ("ops", p.ops),
+            ("reduce_ops", p.reduce_ops),
+            ("bytes_moved", p.bytes_moved),
+            ("buffers_alloc_steady", p.buffers_alloc_steady),
+        ] {
+            match b.get(metric).and_then(|v| v.as_f64()) {
+                None => drifts.push(format!("sim mesh {}: baseline lacks {metric}", p.mesh)),
+                Some(base) if base != current as f64 => drifts.push(format!(
+                    "sim mesh {}: {metric} changed {base} -> {current} \
+                     (deterministic counter: any change is a real behavior change)",
+                    p.mesh
+                )),
+                Some(_) => {}
+            }
+        }
+    }
+    for b in base_points {
+        let name = b.get("mesh").and_then(|m| m.as_str()).unwrap_or("<unnamed>");
+        if !points.iter().any(|p| p.mesh == name) {
+            drifts.push(format!("baseline sim mesh {name} no longer swept"));
+        }
+    }
+    drifts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_are_well_formed() {
+        for (d, p, f, m, e) in SIM_BENCH_MESHES {
+            let span = p * e * f * m;
+            assert_eq!(SIM_BENCH_DIM % span, 0, "{d}x{p}x{f}x{m}x{e}");
+            assert!(d * span <= 256);
+            // every shape constructs (feasibility checks run up front)
+            sim_bench_trainer((d, p, f, m, e), 1).unwrap();
+        }
+    }
+
+    #[test]
+    fn counters_are_deterministic_and_steady_state_is_clone_free() {
+        let a = sim_counter_points();
+        let b = sim_counter_points();
+        assert_eq!(a, b, "counter sweep must be run-to-run deterministic");
+        for p in &a {
+            assert!(p.ops > 0 && p.bytes_moved > 0, "{}: sweep must communicate", p.mesh);
+            assert_eq!(
+                p.buffers_alloc_steady, 0,
+                "{}: warm steps must recycle every buffer",
+                p.mesh
+            );
+        }
+        // the round-trip through the document preserves every counter
+        let parsed = Json::parse(&sim_doc(&a).to_string()).unwrap();
+        assert!(compare_sim_to_baseline(&a, &parsed).is_empty());
+    }
+
+    #[test]
+    fn a_missing_sim_section_is_actionable() {
+        let points = vec![SimBenchPoint {
+            mesh: "1x1x1x1x1".into(),
+            devices: 1,
+            moe: false,
+            steps: 1,
+            ops: 0,
+            reduce_ops: 0,
+            bytes_moved: 0,
+            buffers_alloc_steady: 0,
+        }];
+        let msgs = compare_sim_to_baseline(&points, &Json::Null);
+        assert_eq!(msgs.len(), 1);
+        assert!(msgs[0].contains("--write"), "{msgs:?}");
+    }
+}

@@ -11,6 +11,7 @@
 use axlearn::composer::{
     compare_to_baseline, mesh_sweep_doc, mesh_sweep_points, BASELINE_DEFAULT_TOL,
 };
+use axlearn::distributed::sim_bench::{compare_sim_to_baseline, sim_counter_points, sim_doc};
 use axlearn::util::json::Json;
 
 fn committed_baseline() -> Json {
@@ -104,6 +105,61 @@ fn committed_baseline_is_structurally_current() {
             );
         }
     }
+}
+
+#[test]
+fn injected_counter_regression_fails_the_sim_gate() {
+    // the satellite acceptance check: double one mesh's bytes-moved (a
+    // reintroduced per-step clone) and the exact-match counter gate must
+    // flag exactly that metric on exactly that mesh
+    let points = sim_counter_points();
+    let baseline = Json::parse(&sim_doc(&points).to_string()).unwrap();
+    let mut tampered = points.clone();
+    tampered[0].bytes_moved *= 2;
+    let drifts = compare_sim_to_baseline(&tampered, &baseline);
+    assert_eq!(drifts.len(), 1, "{drifts:?}");
+    assert!(drifts[0].contains("bytes_moved") && drifts[0].contains(&tampered[0].mesh));
+    // … and a steady-state allocation (the zero-copy invariant) likewise
+    let mut tampered = points.clone();
+    let last = tampered.len() - 1;
+    tampered[last].buffers_alloc_steady += 1;
+    let drifts = compare_sim_to_baseline(&tampered, &baseline);
+    assert_eq!(drifts.len(), 1, "{drifts:?}");
+    assert!(drifts[0].contains("buffers_alloc_steady") && drifts[0].contains(&tampered[last].mesh));
+    // the unperturbed sweep is drift-free against its own serialization
+    assert!(compare_sim_to_baseline(&points, &baseline).is_empty());
+}
+
+#[test]
+fn committed_baseline_gates_the_sim_counters() {
+    // the committed baseline must carry a sim_points section the CI
+    // gate compares exactly.  Like the golden configs, the section is
+    // materialized on first run (or with UPDATE_GOLDEN=1) and committed;
+    // after that, any counter change here means simulator behavior
+    // changed and the baseline must be regenerated *deliberately* with
+    // `bench_check --write`.
+    let path = axlearn::repo_root().join("benches/baseline.json");
+    let mut baseline = committed_baseline();
+    let points = sim_counter_points();
+    let missing = baseline.get("sim_points").is_none();
+    if std::env::var("UPDATE_GOLDEN").is_ok() || missing {
+        let sim = sim_doc(&points);
+        if let (Json::Obj(map), Some(sp)) = (&mut baseline, sim.get("sim_points")) {
+            map.insert("sim_points".into(), sp.clone());
+        }
+        // write-then-rename: sibling tests read the file concurrently
+        let tmp = path.with_extension("json.tmp");
+        std::fs::write(&tmp, baseline.to_string() + "\n")
+            .unwrap_or_else(|e| panic!("writing {}: {e}", tmp.display()));
+        std::fs::rename(&tmp, &path)
+            .unwrap_or_else(|e| panic!("renaming {}: {e}", tmp.display()));
+        return;
+    }
+    let drifts = compare_sim_to_baseline(&points, &baseline);
+    assert!(
+        drifts.is_empty(),
+        "committed sim counters drifted (regenerate with bench_check --write):\n{drifts:#?}"
+    );
 }
 
 #[test]

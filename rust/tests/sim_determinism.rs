@@ -1,0 +1,145 @@
+//! Tier-1 determinism suite for threaded simulation: `sim_threads` is a
+//! wall-clock knob and **nothing else**.
+//!
+//! For every shape in the canonical 14-point
+//! [`axlearn::composer::mesh_sweep::SWEEP_MESHES`] — run as a *real*
+//! 256-device `MeshTrainer` over a 1024-element mock, both pipeline
+//! schedules for the pipelined rows, the 8-expert top-2 MoE bank for the
+//! expert rows — worker counts 1, 2, and 8 must produce bit-identical
+//! per-step losses and final state, identical lowered
+//! [`CollectiveSchedule`]s, and identical deterministic work counters
+//! (`ops`, `reduce_ops`, `bytes_moved`; `buffers_alloc` is per-worker
+//! arena warm-up and deliberately excluded).  The single-threaded run is
+//! additionally pinned to the 1-device trajectory, extending the
+//! 16-device bit-identity sweep in `mesh_integration.rs` to the full
+//! 256-device factorizations.
+//!
+//! Why this holds by construction: workers only ever run *independent*
+//! subgroup collectives (disjoint cells/replica groups), each collective
+//! keeps its binary-tree reduction order regardless of which worker runs
+//! it, results land in pre-partitioned output slots, and P2P/AllToAll
+//! channel ordering is fixed by the schedule — so the fan-out changes
+//! scheduling, never arithmetic.  See `docs/simulator.md`.
+
+use axlearn::composer::mesh_sweep::SWEEP_MESHES;
+use axlearn::composer::PipelineKind;
+use axlearn::distributed::mesh::{MeshOptions, MeshTrainer};
+use axlearn::trainer::backend::{MockTrainBackend, MockTrainBackendOptions, TrainBackend};
+use axlearn::trainer::input::{CorpusKind, SyntheticCorpus};
+use axlearn::trainer::InputPipeline;
+
+const DIM: usize = 1024;
+const MICRO: usize = 16;
+const STEPS: usize = 3;
+const SEED: i32 = 5;
+const CORPUS_SEED: u64 = 13;
+
+fn mock() -> Box<dyn TrainBackend> {
+    Box::new(MockTrainBackend::new(MockTrainBackendOptions {
+        dim: DIM,
+        ..Default::default()
+    }))
+}
+
+fn corpus() -> SyntheticCorpus {
+    let d = MockTrainBackendOptions::default();
+    SyntheticCorpus::new(CorpusKind::Markov, d.vocab, d.batch, d.seq, CORPUS_SEED)
+}
+
+fn opts(
+    shape: (usize, usize, usize, usize, usize),
+    kind: PipelineKind,
+    threads: usize,
+) -> MeshOptions {
+    let (d, p, f, m, e) = shape;
+    let mut o = MeshOptions::for_mesh5(d, p, f, m, e, if p > 1 { MICRO } else { 1 })
+        .with_schedule(kind)
+        .with_sim_threads(threads);
+    if e > 1 {
+        o = o.with_moe(8, 2, 1.25);
+    }
+    o
+}
+
+/// Everything a run can observably produce: per-step loss bits, final
+/// state bits, the lowered schedule, and the thread-independent work
+/// counters.
+fn observe(
+    shape: (usize, usize, usize, usize, usize),
+    kind: PipelineKind,
+    threads: usize,
+) -> (Vec<u32>, Vec<(String, Vec<u32>)>, String, (u64, u64, u64)) {
+    let mut mesh = MeshTrainer::new(mock(), opts(shape, kind, threads)).unwrap();
+    assert_eq!(mesh.sim_threads(), threads.max(1));
+    mesh.init(SEED).unwrap();
+    let mut c = corpus();
+    let losses = (0..STEPS)
+        .map(|_| {
+            let (tok, tgt) = c.next_batch();
+            mesh.step(&tok, &tgt).unwrap().to_bits()
+        })
+        .collect();
+    let state = mesh
+        .state_to_host()
+        .unwrap()
+        .into_iter()
+        .map(|(n, v)| (n, v.iter().map(|x| x.to_bits()).collect()))
+        .collect();
+    let sched = format!("{:?}", mesh.lower_step().unwrap());
+    let cnt = mesh.counters();
+    (losses, state, sched, (cnt.ops, cnt.reduce_ops, cnt.bytes_moved))
+}
+
+#[test]
+fn the_canonical_sweep_is_thread_count_invariant() {
+    // the 1-device reference trajectory every shape must reproduce
+    let mut single = mock();
+    single.init(SEED).unwrap();
+    let mut c = corpus();
+    let ref_losses: Vec<u32> = (0..STEPS)
+        .map(|_| {
+            let (tok, tgt) = c.next_batch();
+            single.step(&tok, &tgt).unwrap().to_bits()
+        })
+        .collect();
+    let ref_state: Vec<(String, Vec<u32>)> = single
+        .state_to_host()
+        .unwrap()
+        .into_iter()
+        .map(|(n, v)| (n, v.iter().map(|x| x.to_bits()).collect()))
+        .collect();
+
+    for shape in SWEEP_MESHES {
+        let (d, p, f, m, e) = shape;
+        let kinds: &[PipelineKind] = if p > 1 {
+            &[PipelineKind::OneFOneB, PipelineKind::GPipe]
+        } else {
+            &[PipelineKind::OneFOneB]
+        };
+        for &kind in kinds {
+            let label = format!("{d}x{p}x{f}x{m}x{e} {kind:?}");
+            let base = observe(shape, kind, 1);
+            assert_eq!(
+                base.0, ref_losses,
+                "{label}: mesh losses diverged from the 1-device run"
+            );
+            assert_eq!(
+                base.1, ref_state,
+                "{label}: mesh state diverged from the 1-device run"
+            );
+            for threads in [2usize, 8] {
+                let run = observe(shape, kind, threads);
+                assert_eq!(base.0, run.0, "{label}: losses changed at {threads} workers");
+                assert_eq!(base.1, run.1, "{label}: state changed at {threads} workers");
+                assert_eq!(
+                    base.2, run.2,
+                    "{label}: lowered schedule changed at {threads} workers"
+                );
+                assert_eq!(
+                    base.3, run.3,
+                    "{label}: work counters changed at {threads} workers"
+                );
+            }
+        }
+    }
+}
