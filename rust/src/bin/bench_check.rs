@@ -5,7 +5,10 @@
 //! when any simulator work counter (`sim_points`: collective ops,
 //! reduce additions, bytes moved, steady-state allocations) changes
 //! **at all**, so cost-model regressions and reintroduced per-step
-//! clones fail the `bench` job instead of landing silently.
+//! clones fail the `bench` job instead of landing silently.  Before any
+//! comparison, the canonical sweep's schedules are run through the
+//! static schedule verifier (`axlearn::composer::verify`) and the gate
+//! fails on any diagnostic.
 //!
 //! ```text
 //! bench_check [--baseline <path>] [--json <bench_mesh.json>]
@@ -34,7 +37,7 @@ use std::path::PathBuf;
 use std::process::ExitCode;
 
 use axlearn::composer::{
-    compare_to_baseline, mesh_sweep_doc, mesh_sweep_points, BASELINE_DEFAULT_TOL,
+    compare_to_baseline, lint_sweep, mesh_sweep_doc, mesh_sweep_points, BASELINE_DEFAULT_TOL,
 };
 use axlearn::distributed::sim_bench::{compare_sim_to_baseline, sim_counter_points, sim_doc};
 use axlearn::util::json::Json;
@@ -76,6 +79,25 @@ fn main() -> ExitCode {
             _ => return usage(),
         }
     }
+
+    // Lint the canonical sweep's schedules before comparing numbers: a
+    // malformed schedule makes every downstream cost meaningless, and
+    // `--write` must never bake one into the baseline.
+    let lint_rows = lint_sweep();
+    let lint_findings: usize = lint_rows.iter().map(|(_, r)| r.diagnostics.len()).sum();
+    if lint_findings > 0 {
+        eprintln!("bench_check: static schedule verifier rejected the sweep:");
+        for (label, report) in &lint_rows {
+            for d in &report.diagnostics {
+                eprintln!("  {label}: {d}");
+            }
+        }
+        return ExitCode::FAILURE;
+    }
+    println!(
+        "bench_check: {} sweep schedules lint clean",
+        lint_rows.len()
+    );
 
     let points = mesh_sweep_points();
     let sim_points = sim_counter_points();

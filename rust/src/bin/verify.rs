@@ -1,0 +1,87 @@
+//! CI schedule-lint gate: run the static schedule verifier
+//! (`axlearn::composer::verify`) over every mesh-rules preset target and
+//! the canonical 14-point mesh sweep, print one row per target, and exit
+//! nonzero on any diagnostic — so a schedule-lowering change that breaks
+//! subgroup tiling, phase ordering, payload conservation, P2P
+//! deadlock-freedom, or the HBM watermark fails the `bench` job instead
+//! of surfacing as a runtime panic deep in a sweep.
+//!
+//! ```text
+//! verify [--json <report_path>]
+//! ```
+//!
+//! * `--json` — additionally write the full lint report (every target,
+//!   every diagnostic) as a JSON artifact for CI upload.
+//!
+//! The check logic lives in `axlearn::composer::verify`; the tier-1
+//! test `rust/tests/verify_suite.rs` proves each diagnostic class fires
+//! on an injected corruption.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use axlearn::composer::{lint_doc, lint_presets, lint_sweep};
+
+fn usage() -> ExitCode {
+    eprintln!("usage: verify [--json <path>]");
+    ExitCode::from(2)
+}
+
+fn main() -> ExitCode {
+    let mut json_path: Option<PathBuf> = None;
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--json" => match args.next() {
+                Some(p) => json_path = Some(PathBuf::from(p)),
+                None => return usage(),
+            },
+            _ => return usage(),
+        }
+    }
+
+    let mut rows = match lint_presets() {
+        Ok(rows) => rows,
+        Err(e) => {
+            eprintln!("verify: materializing preset targets: {e:#}");
+            return ExitCode::FAILURE;
+        }
+    };
+    rows.extend(lint_sweep());
+
+    let mut diagnostics = 0usize;
+    for (label, report) in &rows {
+        if report.is_clean() {
+            println!(
+                "verify: {label:<32} OK ({} entries, watermark {:.3e} B)",
+                report.entries, report.watermark_bytes
+            );
+        } else {
+            diagnostics += report.diagnostics.len();
+            eprintln!("verify: {label:<32} FAILED:");
+            for d in &report.diagnostics {
+                eprintln!("  {d}");
+            }
+        }
+    }
+
+    if let Some(path) = &json_path {
+        let doc = lint_doc(&rows);
+        if let Err(e) = std::fs::write(path, doc.to_string() + "\n") {
+            eprintln!("verify: writing {}: {e}", path.display());
+            return ExitCode::from(2);
+        }
+        println!("verify: wrote {}", path.display());
+    }
+
+    if diagnostics > 0 {
+        eprintln!(
+            "verify: {diagnostics} diagnostic(s) across {} target(s)",
+            rows.len()
+        );
+        ExitCode::FAILURE
+    } else {
+        println!("verify: all {} targets lint clean", rows.len());
+        ExitCode::SUCCESS
+    }
+}

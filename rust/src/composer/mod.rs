@@ -31,6 +31,7 @@ pub mod mesh_sweep;
 pub mod plan;
 pub mod schedule;
 pub mod sharding;
+pub mod verify;
 
 pub use aot_check::{aot_compile_check, AotReport};
 pub use mesh_sweep::{
@@ -43,4 +44,9 @@ pub use schedule::{
 };
 pub use sharding::{
     collect_sharding, infer_bias_spec, resolve_partition_spec, shard_axes_from_specs, ShardingSpec,
+};
+pub use verify::{
+    bwd_channel_tag, fwd_channel_tag, lint_doc, lint_presets, lint_sweep, lower_p2p_program,
+    verify_p2p_program, verify_pipeline, verify_plan, verify_schedule, CheckId, Diagnostic, P2pOp,
+    VerifyContext, VerifyReport,
 };

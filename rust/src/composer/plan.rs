@@ -63,6 +63,10 @@ pub struct Plan {
     pub max_steps: u64,
     /// Initialization seed.
     pub seed: u64,
+    /// Whether mesh construction from this plan runs the static
+    /// schedule verifier ([`crate::composer::verify`]) — on unless the
+    /// trainer config sets `verify: false`.
+    pub verify: bool,
 }
 
 /// Derive the model shape from the *config tree* (not from a preset
@@ -201,6 +205,7 @@ pub fn materialize(
         seq_len,
         max_steps: cfg.get_int("max_steps")? as u64,
         seed: cfg.get_int("seed")? as u64,
+        verify: cfg.get_bool("verify").unwrap_or(true),
     })
 }
 

@@ -1,0 +1,1190 @@
+//! Static schedule verifier: prove a lowered [`CollectiveSchedule`] and
+//! its pipeline P2P program deadlock-free, well-formed, and memory-safe
+//! *before* a single simulated byte moves.
+//!
+//! The AOT compile-check (`aot_check.rs`) bounds memory; this pass
+//! closes the other half of the §4.2 promise by type-checking the
+//! *communication program* itself — the same spirit as GSPMD's
+//! partitioner validating the sharded program before execution.  Five
+//! check classes, each with a stable [`CheckId`] diagnostic name:
+//!
+//! * **subgroup-tiling** — every collective's `group × count` subgroups
+//!   are disjoint and tile the device grid along the named mesh axis
+//!   (coalesced instances — `count` dividing the tile count — are the
+//!   one sanctioned exception, used by the mesh trainer's replicated
+//!   gradient sync).
+//! * **phase-order** — no `Gather`-phase consumer precedes its
+//!   producer: all-gathers belong to `Gather`, reduce-scatters to
+//!   `Update`, reductions/dispatch never to `Gather`, and the entry
+//!   list itself is phase-monotone.
+//! * **payload-conservation** — payloads are finite and positive,
+//!   gather/scatter payloads divide by the subgroup size (exact
+//!   lowered schedules), paired all-gather/reduce-scatter entries move
+//!   the same bytes, and AllToAll dispatch/combine bucket totals are
+//!   preserved per axis.
+//! * **p2p-unmatched** / **p2p-deadlock** — the pipeline send/recv
+//!   program is lowered to an explicit op list ([`lower_p2p_program`],
+//!   the same per-microbatch channel protocol the mesh trainer
+//!   executes) and checked: every recv has a matching send *already
+//!   issued* under the sequential executor, no sends are left pending
+//!   after the step (the runtime's `pending_p2p` drain assert, ahead
+//!   of time), and the cross-stage wait-for graph is acyclic.
+//! * **watermark** — a live-buffer high-watermark derived from entry
+//!   lifetimes (gathered parameter blocks live through compute, plus
+//!   the largest transient), cross-checked against the `aot_check`
+//!   HBM bound so the two static reports cannot silently disagree.
+//!
+//! Wired in three places: [`crate::distributed::mesh::MeshTrainer`]
+//! refuses to construct or initialize over a schedule that does not
+//! lint clean (the `verify` knob), [`verify_plan`] lints any
+//! materialized [`Plan`], and the `verify` binary + `bench_check` lint
+//! every mesh-rules preset and the canonical 14-point sweep in CI.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use anyhow::Result;
+
+use crate::perfmodel::chips;
+use crate::perfmodel::comms::Collective;
+use crate::perfmodel::Strategy;
+use crate::util::json::Json;
+
+use super::aot_check::aot_compile_check;
+use super::mesh_sweep::{
+    sweep_shape_dense, sweep_shape_moe, SWEEP_GLOBAL_BATCH, SWEEP_MESHES, SWEEP_MICROBATCHES,
+    SWEEP_SEQ,
+};
+use super::plan::Plan;
+use super::schedule::{build_schedule, CollectiveSchedule, PipelineSchedule, SchedulePhase};
+use super::sharding::shard_axes_from_specs;
+
+/// Stable identifier of a verifier check class; `name()` is the string
+/// diagnostics carry in reports, tests, and the JSON lint artifact.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum CheckId {
+    /// Subgroups overlap, miss devices, or sit on an unknown/degenerate
+    /// mesh axis.
+    SubgroupTiling,
+    /// An entry's phase is illegal for its collective, or the entry
+    /// list is not phase-monotone.
+    PhaseOrder,
+    /// Payload bytes are malformed, gather/scatter payloads don't
+    /// divide, or AllToAll bucket totals leak.
+    PayloadConservation,
+    /// A recv with no send, or sends left pending after the step.
+    P2pUnmatched,
+    /// A recv whose matching send the executor would never reach.
+    P2pDeadlock,
+    /// The schedule's live-buffer high-watermark exceeds the HBM bound
+    /// the AOT check approved.
+    Watermark,
+}
+
+impl CheckId {
+    /// The diagnostic catalogue name (`docs/verifier.md`).
+    pub fn name(self) -> &'static str {
+        match self {
+            CheckId::SubgroupTiling => "subgroup-tiling",
+            CheckId::PhaseOrder => "phase-order",
+            CheckId::PayloadConservation => "payload-conservation",
+            CheckId::P2pUnmatched => "p2p-unmatched",
+            CheckId::P2pDeadlock => "p2p-deadlock",
+            CheckId::Watermark => "watermark",
+        }
+    }
+}
+
+/// One verifier finding: which check, which schedule entry (when the
+/// finding anchors to one), which mesh axis, and a human message that
+/// always names the entry index and axis when known.
+#[derive(Clone, Debug)]
+pub struct Diagnostic {
+    pub check: CheckId,
+    /// Index into `schedule.entries` when the finding anchors to one.
+    pub entry: Option<usize>,
+    /// Mesh axis the finding concerns ("-" for program-level findings).
+    pub axis: String,
+    pub message: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[{}] {}", self.check.name(), self.message)
+    }
+}
+
+fn diag(check: CheckId, entry: Option<usize>, axis: &str, message: String) -> Diagnostic {
+    Diagnostic { check, entry, axis: axis.to_string(), message }
+}
+
+/// What the verifier knows about the mesh a schedule was lowered for.
+#[derive(Clone, Debug)]
+pub struct VerifyContext {
+    /// The resolved parallelism strategy (device grid + axis degrees).
+    pub strategy: Strategy,
+    /// Mesh axes that shard parameters (drives the expected fsdp/model
+    /// subgroup sizes via [`super::schedule::shard_degrees`]).
+    pub shard_axes: Vec<String>,
+    /// Whether payload bytes are exact integers (the mesh trainer's
+    /// lowered schedules) rather than analytic estimates (plan-level
+    /// schedules); enables the gather/scatter divisibility check.
+    pub exact_payloads: bool,
+    /// Per-chip HBM capacity when the target chip is known.
+    pub hbm_capacity: Option<f64>,
+    /// The AOT check's verdict for the same plan, when one ran; the
+    /// watermark check cross-references it so the two reports agree.
+    pub aot_fits: Option<bool>,
+}
+
+impl VerifyContext {
+    /// A context for a bare strategy with every axis sharding params
+    /// and no memory information.
+    pub fn for_strategy(strategy: &Strategy) -> Self {
+        VerifyContext {
+            strategy: strategy.clone(),
+            shard_axes: vec!["fsdp".into(), "model".into()],
+            exact_payloads: false,
+            hbm_capacity: None,
+            aot_fits: None,
+        }
+    }
+}
+
+/// The verifier's answer for one schedule.
+#[derive(Clone, Debug)]
+pub struct VerifyReport {
+    pub diagnostics: Vec<Diagnostic>,
+    /// Entries inspected.
+    pub entries: usize,
+    /// Live-buffer high-watermark the watermark check derived
+    /// (0 when the schedule is empty).
+    pub watermark_bytes: f64,
+}
+
+impl VerifyReport {
+    pub fn is_clean(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+
+    /// Human-readable summary, one diagnostic per line.
+    pub fn render(&self) -> String {
+        if self.is_clean() {
+            return format!("verify: OK ({} entries)", self.entries);
+        }
+        let mut out = format!(
+            "verify: {} diagnostic(s) over {} entries:\n",
+            self.diagnostics.len(),
+            self.entries
+        );
+        for d in &self.diagnostics {
+            out.push_str(&format!("  {d}\n"));
+        }
+        out
+    }
+}
+
+/// Expected subgroup size along a named mesh axis, `None` for an axis
+/// the strategy does not know.
+fn expected_group(ctx: &VerifyContext, axis: &str) -> Option<usize> {
+    let (fs, ms, rep) = super::schedule::shard_degrees(&ctx.strategy, &ctx.shard_axes);
+    match axis {
+        "fsdp" => Some(fs),
+        "model" | "tensor" => Some(ms),
+        "data" => Some(rep),
+        "pipeline" => Some(ctx.strategy.pipeline.max(1)),
+        "expert" => Some(ctx.strategy.expert.max(1)),
+        _ => None,
+    }
+}
+
+/// Statically verify one collective schedule against its mesh context.
+///
+/// `pipeline` (when given) enables the entry-level P2P presence checks;
+/// the program-level send/recv analysis is [`verify_pipeline`] (the
+/// two compose in [`verify_plan`]).
+///
+/// Diagnostics are precise in the single-mutation sense the property
+/// suite relies on: a per-entry failure short-circuits that entry's
+/// remaining checks, and cross-entry checks skip axes that already
+/// carry a finding, so corrupting one field yields exactly one
+/// diagnostic naming the entry index and axis.
+pub fn verify_schedule(
+    sched: &CollectiveSchedule,
+    pipeline: Option<&PipelineSchedule>,
+    ctx: &VerifyContext,
+) -> VerifyReport {
+    let devices = ctx.strategy.total_chips().max(1);
+    let mut diags: Vec<Diagnostic> = Vec::new();
+    // entries that passed every per-entry check; cross-entry checks run
+    // only over these
+    let mut clean: Vec<usize> = Vec::new();
+
+    for (i, e) in sched.entries.iter().enumerate() {
+        // (a) subgroup well-formedness -----------------------------------
+        let Some(expect) = expected_group(ctx, &e.axis) else {
+            diags.push(diag(
+                CheckId::SubgroupTiling,
+                Some(i),
+                &e.axis,
+                format!(
+                    "entry {i} ({:?} {:?}): unknown mesh axis \"{}\" \
+                     (mesh knows data/pipeline/fsdp/model/expert)",
+                    e.collective, e.tensor, e.axis
+                ),
+            ));
+            continue;
+        };
+        if expect < 2 {
+            diags.push(diag(
+                CheckId::SubgroupTiling,
+                Some(i),
+                &e.axis,
+                format!(
+                    "entry {i} ({:?} {:?}): collective over axis \"{}\" whose mesh degree \
+                     is {expect} — a degenerate subgroup communicates with nobody",
+                    e.collective, e.tensor, e.axis
+                ),
+            ));
+            continue;
+        }
+        if e.group != expect {
+            diags.push(diag(
+                CheckId::SubgroupTiling,
+                Some(i),
+                &e.axis,
+                format!(
+                    "entry {i} ({:?} {:?}): subgroup size {} does not match the \
+                     axis \"{}\" degree {expect}",
+                    e.collective, e.tensor, e.group, e.axis
+                ),
+            ));
+            continue;
+        }
+        if devices % e.group != 0 {
+            diags.push(diag(
+                CheckId::SubgroupTiling,
+                Some(i),
+                &e.axis,
+                format!(
+                    "entry {i}: subgroups of {} along axis \"{}\" cannot tile a \
+                     {devices}-device grid",
+                    e.group, e.axis
+                ),
+            ));
+            continue;
+        }
+        let tiles = devices / e.group;
+        if e.count == 0 || e.count > tiles || tiles % e.count != 0 {
+            diags.push(diag(
+                CheckId::SubgroupTiling,
+                Some(i),
+                &e.axis,
+                format!(
+                    "entry {i}: {} subgroup instance(s) of size {} along axis \"{}\" \
+                     {} the {devices}-device grid (expected {tiles}, or a divisor \
+                     for coalesced instances)",
+                    e.count,
+                    e.group,
+                    e.axis,
+                    if e.count > tiles { "overlap on" } else { "do not tile" },
+                ),
+            ));
+            continue;
+        }
+
+        // (c) payload well-formedness ------------------------------------
+        if !e.bytes.is_finite() || e.bytes <= 0.0 || !e.cost_s.is_finite() || e.cost_s < 0.0 {
+            diags.push(diag(
+                CheckId::PayloadConservation,
+                Some(i),
+                &e.axis,
+                format!(
+                    "entry {i} ({:?} {:?}) on axis \"{}\": malformed payload \
+                     (bytes {:e}, cost {:e}s) — payloads must be finite and positive",
+                    e.collective, e.tensor, e.axis, e.bytes, e.cost_s
+                ),
+            ));
+            continue;
+        }
+
+        // (d) phase legality per collective ------------------------------
+        let phase_bad = match e.collective {
+            Collective::AllGather => e.phase != SchedulePhase::Gather,
+            Collective::ReduceScatter => e.phase != SchedulePhase::Update,
+            _ => e.phase == SchedulePhase::Gather,
+        };
+        if phase_bad {
+            diags.push(diag(
+                CheckId::PhaseOrder,
+                Some(i),
+                &e.axis,
+                format!(
+                    "entry {i} ({:?} {:?}) on axis \"{}\": illegal phase {:?} — \
+                     all-gathers reconstruct params in Gather, reduce-scatters \
+                     follow the backward in Update, and reductions/dispatch \
+                     consume computed values so cannot run in Gather",
+                    e.collective, e.tensor, e.axis, e.phase
+                ),
+            ));
+            continue;
+        }
+
+        // (c) gather/scatter divisibility (exact lowered payloads only) --
+        if ctx.exact_payloads
+            && matches!(e.collective, Collective::AllGather | Collective::ReduceScatter)
+        {
+            let words = e.bytes / 4.0;
+            let whole = words.fract() == 0.0;
+            if !whole || (words as u64) % (e.group as u64) != 0 {
+                diags.push(diag(
+                    CheckId::PayloadConservation,
+                    Some(i),
+                    &e.axis,
+                    format!(
+                        "entry {i} ({:?} {:?}): payload {} bytes on axis \"{}\" is not \
+                         an equal split over the {}-rank subgroup (must be a whole \
+                         multiple of 4·group bytes)",
+                        e.collective, e.tensor, e.bytes, e.axis, e.group
+                    ),
+                ));
+                continue;
+            }
+        }
+
+        clean.push(i);
+    }
+
+    // axes already carrying a finding are excluded from cross-entry
+    // checks: one corrupted field must yield exactly one diagnostic
+    let tainted: Vec<String> = diags.iter().map(|d| d.axis.clone()).collect();
+    let is_clean_axis = |axis: &str| !tainted.iter().any(|a| a == axis);
+
+    // (d) the issue order itself must be phase-monotone ------------------
+    let mut prev: Option<(usize, SchedulePhase)> = None;
+    for &i in &clean {
+        let e = &sched.entries[i];
+        if let Some((pi, pp)) = prev {
+            if e.phase < pp && is_clean_axis(&e.axis) {
+                diags.push(diag(
+                    CheckId::PhaseOrder,
+                    Some(i),
+                    &e.axis,
+                    format!(
+                        "entry {i} ({:?} on axis \"{}\", phase {:?}) is issued after \
+                         entry {pi} (phase {pp:?}) — the schedule is not phase-monotone, \
+                         a Gather-phase consumer would precede its producer",
+                        e.collective, e.axis, e.phase
+                    ),
+                ));
+                break; // one finding for the ordering, not a cascade
+            }
+        }
+        prev = Some((i, e.phase));
+    }
+
+    // (c) paired all-gather / reduce-scatter payload equality ------------
+    // key: (axis, tensor) — the mesh trainer pairs per-tensor (exact
+    // payloads); the plan-level schedule pairs "params"/"grads",
+    // normalized to one key below
+    let exact = ctx.exact_payloads;
+    let norm = move |t: &str| match t {
+        "params" | "grads" if !exact => "params+grads".to_string(),
+        other => other.to_string(),
+    };
+    let mut gathers: BTreeMap<(String, String), (usize, f64)> = BTreeMap::new();
+    for &i in &clean {
+        let e = &sched.entries[i];
+        if e.collective == Collective::AllGather {
+            gathers.insert((e.axis.clone(), norm(&e.tensor)), (i, e.bytes));
+        }
+    }
+    for &i in &clean {
+        let e = &sched.entries[i];
+        if e.collective != Collective::ReduceScatter || !is_clean_axis(&e.axis) {
+            continue;
+        }
+        if let Some(&(gi, gbytes)) = gathers.get(&(e.axis.clone(), norm(&e.tensor))) {
+            if e.bytes != gbytes {
+                diags.push(diag(
+                    CheckId::PayloadConservation,
+                    Some(i),
+                    &e.axis,
+                    format!(
+                        "entry {i} (ReduceScatter {:?}) on axis \"{}\" moves {} bytes but \
+                         its paired AllGather (entry {gi}) moves {gbytes} — the gathered \
+                         and re-scattered partitions must conserve bytes",
+                        e.tensor, e.axis, e.bytes
+                    ),
+                ));
+            }
+        }
+    }
+
+    // (c) AllToAll bucket conservation per axis --------------------------
+    let mut a2a: BTreeMap<String, (f64, f64, Option<usize>, usize)> = BTreeMap::new();
+    for &i in &clean {
+        let e = &sched.entries[i];
+        if e.collective != Collective::AllToAll || !is_clean_axis(&e.axis) {
+            continue;
+        }
+        let slot = a2a.entry(e.axis.clone()).or_insert((0.0, 0.0, None, 0));
+        if e.tensor.contains("combine") {
+            slot.1 += e.bytes;
+            slot.2 = Some(i);
+        } else {
+            slot.0 += e.bytes; // dispatch side
+        }
+        slot.3 += 1;
+    }
+    for (axis, (dispatch, combine, combine_entry, n)) in &a2a {
+        if *n < 2 {
+            diags.push(diag(
+                CheckId::PayloadConservation,
+                *combine_entry,
+                axis,
+                format!(
+                    "axis \"{axis}\": unpaired AllToAll — token dispatch and combine \
+                     must both appear ({n} entry present)"
+                ),
+            ));
+        } else if dispatch != combine {
+            diags.push(diag(
+                CheckId::PayloadConservation,
+                *combine_entry,
+                axis,
+                format!(
+                    "entry {} on axis \"{axis}\": AllToAll bucket totals leak — dispatch \
+                     moves {dispatch} bytes but combine returns {combine}",
+                    combine_entry.map(|i| i.to_string()).unwrap_or_else(|| "?".into()),
+                ),
+            ));
+        }
+    }
+
+    // (b) entry-level P2P presence vs the pipeline grid ------------------
+    if let Some(pipe) = pipeline {
+        if is_clean_axis("pipeline") {
+            let p2p: Vec<usize> = clean
+                .iter()
+                .copied()
+                .filter(|&i| sched.entries[i].collective == Collective::P2P)
+                .collect();
+            if pipe.stages <= 1 {
+                if let Some(&i) = p2p.first() {
+                    let e = &sched.entries[i];
+                    diags.push(diag(
+                        CheckId::P2pUnmatched,
+                        Some(i),
+                        &e.axis,
+                        format!(
+                            "entry {i} (P2P {:?}) on axis \"{}\": stage-boundary transfer \
+                             in a 1-stage pipeline — every send would wait on a peer that \
+                             does not exist",
+                            e.tensor, e.axis
+                        ),
+                    ));
+                }
+            } else if p2p.is_empty() {
+                diags.push(diag(
+                    CheckId::P2pUnmatched,
+                    None,
+                    "pipeline",
+                    format!(
+                        "axis \"pipeline\": a {}-stage pipeline lowered no P2P entries — \
+                         stage boundaries would starve",
+                        pipe.stages
+                    ),
+                ));
+            }
+        }
+    }
+
+    // (e) live-buffer high-watermark vs the AOT HBM bound ----------------
+    let mut watermark = 0.0f64;
+    let mut transient = 0.0f64;
+    for &i in &clean {
+        let e = &sched.entries[i];
+        if e.phase == SchedulePhase::Gather {
+            // gathered parameter blocks stay live through compute
+            watermark += e.bytes;
+        } else {
+            transient = transient.max(e.bytes);
+        }
+    }
+    watermark += transient;
+    if let Some(hbm) = ctx.hbm_capacity {
+        // aot_fits == Some(false) means both reports already agree the
+        // plan is infeasible; a diagnostic would be noise
+        if ctx.aot_fits != Some(false) && watermark > hbm {
+            diags.push(diag(
+                CheckId::Watermark,
+                None,
+                "-",
+                format!(
+                    "live-buffer high-watermark {watermark:.3e} bytes exceeds the \
+                     {hbm:.3e}-byte HBM bound{}",
+                    if ctx.aot_fits == Some(true) {
+                        " the AOT check approved — the two static reports disagree"
+                    } else {
+                        ""
+                    }
+                ),
+            ));
+        }
+    }
+
+    VerifyReport { diagnostics: diags, entries: sched.entries.len(), watermark_bytes: watermark }
+}
+
+// ---------------------------------------------------------------------------
+// P2P program analysis
+// ---------------------------------------------------------------------------
+
+/// Channel tag of microbatch `j`'s forward (activation) transfers — the
+/// canonical definition the mesh trainer's executor shares.
+pub fn fwd_channel_tag(microbatch: usize) -> u64 {
+    microbatch as u64
+}
+
+/// Channel tag of microbatch `j`'s backward (gradient) transfers; the
+/// high bit block keeps the two directions' channels disjoint.
+pub fn bwd_channel_tag(microbatch: usize) -> u64 {
+    (1u64 << 32) | microbatch as u64
+}
+
+/// One send or recv in the lowered pipeline program, attributed to the
+/// stage that issues it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct P2pOp {
+    /// Stage whose program this op belongs to.
+    pub stage: usize,
+    /// `true` = send (non-blocking, buffers into the channel);
+    /// `false` = recv (blocks until a matching send was issued).
+    pub is_send: bool,
+    /// Sending stage of the channel.
+    pub src: usize,
+    /// Receiving stage of the channel.
+    pub dst: usize,
+    /// Channel tag ([`fwd_channel_tag`] / [`bwd_channel_tag`]).
+    pub tag: u64,
+}
+
+impl fmt::Display for P2pOp {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}(stage {}: {}->{} tag {:#x})",
+            if self.is_send { "send" } else { "recv" },
+            self.stage,
+            self.src,
+            self.dst,
+            self.tag
+        )
+    }
+}
+
+/// Lower a pipeline grid to its explicit send/recv program, in the
+/// execution order the mesh trainer walks: forward slots in stored slot
+/// order (recv-before-forward, send-after), then backward slots
+/// (recv-before-backward, send-after).  This is the program
+/// [`verify_p2p_program`] analyzes — and, by construction, exactly the
+/// channel protocol `MeshTrainer` executes, so a clean verdict here is
+/// a clean `pending_p2p` drain at runtime.
+pub fn lower_p2p_program(pipe: &PipelineSchedule) -> Vec<P2pOp> {
+    let s_n = pipe.stages;
+    let mut ops = Vec::new();
+    if s_n <= 1 {
+        return ops;
+    }
+    for sl in pipe.slots.iter().filter(|sl| sl.is_forward) {
+        let (st, j) = (sl.stage, sl.microbatch);
+        if st > 0 {
+            ops.push(P2pOp { stage: st, is_send: false, src: st - 1, dst: st, tag: fwd_channel_tag(j) });
+        }
+        if st < s_n - 1 {
+            ops.push(P2pOp { stage: st, is_send: true, src: st, dst: st + 1, tag: fwd_channel_tag(j) });
+        }
+    }
+    for sl in pipe.slots.iter().filter(|sl| !sl.is_forward) {
+        let (st, j) = (sl.stage, sl.microbatch);
+        if st < s_n - 1 {
+            ops.push(P2pOp { stage: st, is_send: false, src: st + 1, dst: st, tag: bwd_channel_tag(j) });
+        }
+        if st > 0 {
+            ops.push(P2pOp { stage: st, is_send: true, src: st, dst: st - 1, tag: bwd_channel_tag(j) });
+        }
+    }
+    ops
+}
+
+/// Verify a P2P program: every recv matched by an already-issued send
+/// (the sequential executor's requirement), no pending sends after the
+/// step, and an acyclic cross-stage wait-for graph (the requirement
+/// even under fully parallel stage execution).
+pub fn verify_p2p_program(ops: &[P2pOp]) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+
+    // --- sequential-executor walk: per-channel FIFO ---------------------
+    // channel key -> queue of op indices of not-yet-consumed sends
+    let mut channels: BTreeMap<(usize, usize, u64), Vec<usize>> = BTreeMap::new();
+    // sends already claimed by an order-deadlocked recv, so a single
+    // misordered pair yields one finding, not finding + phantom-pending
+    let mut claimed: Vec<usize> = Vec::new();
+    for (i, op) in ops.iter().enumerate() {
+        let key = (op.src, op.dst, op.tag);
+        if op.is_send {
+            if let Some(pos) = claimed.iter().position(|&k| k == i) {
+                claimed.swap_remove(pos);
+                continue;
+            }
+            channels.entry(key).or_default().push(i);
+            continue;
+        }
+        let q = channels.entry(key).or_default();
+        if !q.is_empty() {
+            q.remove(0);
+            continue;
+        }
+        // no send issued yet: is one coming later?
+        let later = ops[i + 1..]
+            .iter()
+            .position(|o| o.is_send && (o.src, o.dst, o.tag) == key)
+            .map(|k| i + 1 + k);
+        match later {
+            Some(k) => {
+                claimed.push(k);
+                diags.push(diag(
+                    CheckId::P2pDeadlock,
+                    None,
+                    "pipeline",
+                    format!(
+                        "op {i} {} precedes its matching send (op {k} {}) — the \
+                         sequential executor would block forever",
+                        op, ops[k]
+                    ),
+                ));
+            }
+            None => diags.push(diag(
+                CheckId::P2pUnmatched,
+                None,
+                "pipeline",
+                format!("op {i} {} has no matching send anywhere in the program", op),
+            )),
+        }
+    }
+    let pending: usize = channels.values().map(|q| q.len()).sum();
+    if pending > 0 {
+        let example = channels
+            .iter()
+            .find(|(_, q)| !q.is_empty())
+            .map(|((s, d, t), _)| format!("{s}->{d} tag {t:#x}"))
+            .unwrap_or_default();
+        diags.push(diag(
+            CheckId::P2pUnmatched,
+            None,
+            "pipeline",
+            format!(
+                "{pending} send(s) never received (e.g. channel {example}) — \
+                 pending_p2p would be {pending} after the step"
+            ),
+        ));
+    }
+
+    // --- wait-for cycle detection (Kahn) --------------------------------
+    // Edges: program order within each stage, plus matched send -> recv.
+    // Independent of the sequential walk: a cycle deadlocks under ANY
+    // interleaving, which is a strictly stronger finding.
+    {
+        let n = ops.len();
+        let mut succs: Vec<Vec<usize>> = vec![Vec::new(); n];
+        let mut indeg = vec![0usize; n];
+        let mut last_of_stage: BTreeMap<usize, usize> = BTreeMap::new();
+        let mut sends: BTreeMap<(usize, usize, u64), Vec<usize>> = BTreeMap::new();
+        let mut recv_seq: BTreeMap<(usize, usize, u64), usize> = BTreeMap::new();
+        for (i, op) in ops.iter().enumerate() {
+            if let Some(&p) = last_of_stage.get(&op.stage) {
+                succs[p].push(i);
+                indeg[i] += 1;
+            }
+            last_of_stage.insert(op.stage, i);
+            if op.is_send {
+                sends.entry((op.src, op.dst, op.tag)).or_default().push(i);
+            }
+        }
+        for (i, op) in ops.iter().enumerate() {
+            if op.is_send {
+                continue;
+            }
+            let key = (op.src, op.dst, op.tag);
+            let seq = recv_seq.entry(key).or_insert(0);
+            if let Some(&s) = sends.get(&key).and_then(|v| v.get(*seq)) {
+                succs[s].push(i);
+                indeg[i] += 1;
+            }
+            *seq += 1;
+        }
+        let mut ready: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+        let mut done = 0usize;
+        while let Some(i) = ready.pop() {
+            done += 1;
+            for &s in &succs[i] {
+                indeg[s] -= 1;
+                if indeg[s] == 0 {
+                    ready.push(s);
+                }
+            }
+        }
+        if done < n {
+            let stuck: Vec<String> = (0..n)
+                .filter(|&i| indeg[i] > 0)
+                .take(4)
+                .map(|i| format!("op {i} {}", ops[i]))
+                .collect();
+            diags.push(diag(
+                CheckId::P2pDeadlock,
+                None,
+                "pipeline",
+                format!(
+                    "wait-for cycle across stages: {} op(s) can never become ready \
+                     ({}, …) — the program deadlocks under any interleaving",
+                    n - done,
+                    stuck.join("; ")
+                ),
+            ));
+        }
+    }
+
+    diags
+}
+
+/// Verify a pipeline grid end to end: lower it to its send/recv program
+/// and run the program analysis.
+pub fn verify_pipeline(pipe: &PipelineSchedule) -> Vec<Diagnostic> {
+    verify_p2p_program(&lower_p2p_program(pipe))
+}
+
+// ---------------------------------------------------------------------------
+// Plan-level entry points and the lint harness
+// ---------------------------------------------------------------------------
+
+/// Lint a materialized [`Plan`]: the schedule checks against the plan's
+/// strategy/sharding, the pipeline program analysis, and — when the
+/// plan's instance type names a known chip — the watermark cross-check
+/// against the AOT report.
+pub fn verify_plan(plan: &Plan) -> Result<VerifyReport> {
+    let (hbm_capacity, aot_fits) = match chips::by_instance_type(&plan.instance_type) {
+        Some(chip) => {
+            let aot = aot_compile_check(plan, &chip, None)?;
+            (Some(aot.hbm_capacity), Some(aot.fits))
+        }
+        None => (None, None),
+    };
+    let ctx = VerifyContext {
+        strategy: plan.strategy.clone(),
+        shard_axes: shard_axes_from_specs(&plan.sharding, &plan.mesh_axes),
+        exact_payloads: false,
+        hbm_capacity,
+        aot_fits,
+    };
+    let mut report = verify_schedule(&plan.schedule, Some(&plan.pipeline), &ctx);
+    report.diagnostics.extend(verify_pipeline(&plan.pipeline));
+    Ok(report)
+}
+
+/// The preset/instance pairings the lint harness and CI cover: every
+/// mesh rule in [`crate::config::mesh_rules::paper_appendix_a_rules`],
+/// on a chip count its pattern anticipates.
+pub fn lint_preset_targets() -> Vec<(&'static str, &'static str, usize)> {
+    vec![
+        ("small", "gpu-H100-32", 256),
+        ("small", "gpu-H100-pp-64", 256),
+        ("small", "tpu-v5e-256-4", 1024),
+        ("tiny", "tpu-v5p-32", 32),
+        ("small", "trn2-16", 64),
+        ("tiny-moe", "tpu-v5e-moe-512", 512),
+    ]
+}
+
+/// Lint every mesh-rules preset target.  Returns `(label, report)`
+/// rows; an `Err` means materialization itself failed, which is worse
+/// than a diagnostic.
+pub fn lint_presets() -> Result<Vec<(String, VerifyReport)>> {
+    use crate::config::mesh_rules::paper_appendix_a_rules;
+    use crate::config::registry::{default_config, trainer_for_preset};
+    use crate::config::{replace_config, Value};
+
+    let rules = paper_appendix_a_rules();
+    let mut out = Vec::new();
+    for (preset, instance, chips_n) in lint_preset_targets() {
+        let trainer = if let Some(base) = preset.strip_suffix("-moe") {
+            let mut t = trainer_for_preset(base)?;
+            replace_config(&mut t, "FeedForward", &|old| {
+                default_config("MoE")
+                    .expect("MoE is registered")
+                    .with("input_dim", old.get("input_dim").expect("ffn input_dim").clone())
+                    .with("hidden_dim", old.get("hidden_dim").expect("ffn hidden_dim").clone())
+                    .with("num_experts", Value::Int(32))
+            });
+            t
+        } else {
+            trainer_for_preset(preset)?
+        };
+        let plan = super::plan::materialize(&trainer, instance, chips_n, &rules)?;
+        let report = verify_plan(&plan)?;
+        out.push((format!("{preset}@{instance}x{chips_n}"), report));
+    }
+    Ok(out)
+}
+
+/// Lint the canonical 14-point mesh sweep (the same factorizations
+/// `bench_mesh`/`bench_check` gate), with the watermark check wired to
+/// each point's estimator verdict.
+pub fn lint_sweep() -> Vec<(String, VerifyReport)> {
+    let chip = chips::h100();
+    let points = super::mesh_sweep::mesh_sweep_points();
+    let shard_axes = vec!["fsdp".to_string(), "model".to_string()];
+    let mut out = Vec::with_capacity(SWEEP_MESHES.len());
+    for (idx, (d, p, f, m, e)) in SWEEP_MESHES.into_iter().enumerate() {
+        let shape = if e > 1 { sweep_shape_moe() } else { sweep_shape_dense() };
+        let strat = Strategy {
+            data: d,
+            fsdp: f,
+            tensor: m,
+            pipeline: p,
+            expert: e,
+            microbatches: if p > 1 { SWEEP_MICROBATCHES } else { 1 },
+        };
+        let sched = build_schedule(
+            &strat,
+            &shape,
+            &shard_axes,
+            SWEEP_GLOBAL_BATCH,
+            SWEEP_SEQ,
+            &chip.interconnect,
+        );
+        let pipe = PipelineSchedule::one_f_one_b(strat.pipeline, strat.microbatches.max(1))
+            .expect("swept shapes are feasible");
+        let ctx = VerifyContext {
+            strategy: strat,
+            shard_axes: shard_axes.clone(),
+            exact_payloads: false,
+            hbm_capacity: Some(chip.hbm_bytes),
+            aot_fits: points.get(idx).map(|pt| pt.fits),
+        };
+        let mut report = verify_schedule(&sched, Some(&pipe), &ctx);
+        report.diagnostics.extend(verify_pipeline(&pipe));
+        out.push((format!("sweep:{d}x{p}x{f}x{m}x{e}"), report));
+    }
+    out
+}
+
+/// The JSON lint artifact the `verify` binary writes and CI uploads:
+/// one row per linted target with its diagnostics spelled out.
+pub fn lint_doc(rows: &[(String, VerifyReport)]) -> Json {
+    let total: usize = rows.iter().map(|(_, r)| r.diagnostics.len()).sum();
+    Json::obj(vec![
+        ("tool", Json::str("schedule_verify")),
+        ("targets", Json::num(rows.len() as f64)),
+        ("diagnostics", Json::num(total as f64)),
+        ("clean", Json::Bool(total == 0)),
+        (
+            "rows",
+            Json::Arr(
+                rows.iter()
+                    .map(|(label, r)| {
+                        Json::obj(vec![
+                            ("target", Json::str(label.clone())),
+                            ("entries", Json::num(r.entries as f64)),
+                            ("watermark_bytes", Json::num(r.watermark_bytes)),
+                            ("clean", Json::Bool(r.is_clean())),
+                            (
+                                "diagnostics",
+                                Json::Arr(
+                                    r.diagnostics
+                                        .iter()
+                                        .map(|d| {
+                                            Json::obj(vec![
+                                                ("check", Json::str(d.check.name())),
+                                                (
+                                                    "entry",
+                                                    d.entry
+                                                        .map(|i| Json::num(i as f64))
+                                                        .unwrap_or(Json::Null),
+                                                ),
+                                                ("axis", Json::str(d.axis.clone())),
+                                                ("message", Json::str(d.message.clone())),
+                                            ])
+                                        })
+                                        .collect(),
+                                ),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::composer::schedule::ScheduleEntry;
+    use crate::perfmodel::comms::hierarchical;
+
+    fn strat() -> Strategy {
+        Strategy { data: 2, fsdp: 8, tensor: 2, pipeline: 2, expert: 2, microbatches: 4 }
+    }
+
+    fn ctx() -> VerifyContext {
+        VerifyContext::for_strategy(&strat())
+    }
+
+    fn sched() -> CollectiveSchedule {
+        let ic = super::super::schedule::local_interconnect();
+        build_schedule(
+            &strat(),
+            &sweep_shape_moe(),
+            &["fsdp".to_string(), "model".to_string()],
+            256,
+            1024,
+            &ic,
+        )
+    }
+
+    #[test]
+    fn emitted_schedules_lint_clean() {
+        let s = sched();
+        let pipe = PipelineSchedule::one_f_one_b(2, 4).unwrap();
+        let r = verify_schedule(&s, Some(&pipe), &ctx());
+        assert!(r.is_clean(), "{}", r.render());
+        assert!(r.watermark_bytes > 0.0);
+        assert!(verify_pipeline(&pipe).is_empty());
+    }
+
+    #[test]
+    fn overlapping_subgroups_are_caught() {
+        let mut s = sched();
+        let i = s.entries.iter().position(|e| e.axis == "fsdp").unwrap();
+        s.entries[i].count += 1; // group*count now exceeds the grid
+        let r = verify_schedule(&s, None, &ctx());
+        assert_eq!(r.diagnostics.len(), 1, "{}", r.render());
+        let d = &r.diagnostics[0];
+        assert_eq!(d.check, CheckId::SubgroupTiling);
+        assert_eq!(d.entry, Some(i));
+        assert!(d.message.contains(&format!("entry {i}")) && d.message.contains("fsdp"));
+    }
+
+    #[test]
+    fn unknown_axis_is_caught() {
+        let mut s = sched();
+        s.entries[0].axis = "bogus".into();
+        let r = verify_schedule(&s, None, &ctx());
+        assert_eq!(r.diagnostics.len(), 1, "{}", r.render());
+        assert_eq!(r.diagnostics[0].check, CheckId::SubgroupTiling);
+        assert!(r.diagnostics[0].message.contains("bogus"));
+    }
+
+    #[test]
+    fn phase_inversion_is_caught() {
+        let mut s = sched();
+        let i = s
+            .entries
+            .iter()
+            .position(|e| e.collective == Collective::AllGather)
+            .unwrap();
+        s.entries[i].phase = SchedulePhase::Update;
+        // re-sort the way the composer would, so only the per-entry
+        // legality (not the monotonicity) can fire
+        let s = CollectiveSchedule::new(s.entries);
+        let i = s
+            .entries
+            .iter()
+            .position(|e| e.collective == Collective::AllGather)
+            .unwrap();
+        let r = verify_schedule(&s, None, &ctx());
+        assert_eq!(r.diagnostics.len(), 1, "{}", r.render());
+        let d = &r.diagnostics[0];
+        assert_eq!(d.check, CheckId::PhaseOrder);
+        assert_eq!(d.entry, Some(i));
+    }
+
+    #[test]
+    fn non_monotone_issue_order_is_caught() {
+        let s = sched();
+        let mut entries = s.entries;
+        entries.reverse(); // Update now precedes Gather
+        let s = CollectiveSchedule { entries };
+        let r = verify_schedule(&s, None, &ctx());
+        assert!(
+            r.diagnostics.iter().any(|d| d.check == CheckId::PhaseOrder
+                && d.message.contains("not phase-monotone")),
+            "{}",
+            r.render()
+        );
+    }
+
+    #[test]
+    fn alltoall_bucket_leak_is_caught() {
+        let mut s = sched();
+        let i = s
+            .entries
+            .iter()
+            .position(|e| e.tensor == "moe-combine")
+            .unwrap();
+        s.entries[i].bytes += 64.0;
+        let r = verify_schedule(&s, None, &ctx());
+        assert_eq!(r.diagnostics.len(), 1, "{}", r.render());
+        let d = &r.diagnostics[0];
+        assert_eq!(d.check, CheckId::PayloadConservation);
+        assert!(d.message.contains("bucket totals leak"), "{}", d.message);
+        assert!(d.message.contains("expert"));
+    }
+
+    #[test]
+    fn gather_scatter_asymmetry_is_caught() {
+        let mut s = sched();
+        let i = s
+            .entries
+            .iter()
+            .position(|e| e.collective == Collective::ReduceScatter)
+            .unwrap();
+        s.entries[i].bytes *= 2.0;
+        let r = verify_schedule(&s, None, &ctx());
+        assert_eq!(r.diagnostics.len(), 1, "{}", r.render());
+        assert!(r.diagnostics[0].message.contains("conserve bytes"));
+    }
+
+    #[test]
+    fn divisibility_needs_exact_payloads() {
+        let ic = super::super::schedule::local_interconnect();
+        let entry = ScheduleEntry {
+            phase: SchedulePhase::Gather,
+            collective: Collective::AllGather,
+            axis: "fsdp".into(),
+            group: 8,
+            count: 8,
+            tensor: "w0".into(),
+            bytes: 4.0 * 8.0 * 3.0 + 4.0, // not a multiple of 4*group
+            cost_s: hierarchical(Collective::AllGather, 100.0, 8, &ic),
+            overlappable: true,
+        };
+        let strat = Strategy { data: 8, fsdp: 8, tensor: 1, pipeline: 1, expert: 1, microbatches: 1 };
+        let mut c = VerifyContext::for_strategy(&strat);
+        let s = CollectiveSchedule { entries: vec![entry] };
+        assert!(verify_schedule(&s, None, &c).is_clean());
+        c.exact_payloads = true;
+        let r = verify_schedule(&s, None, &c);
+        assert_eq!(r.diagnostics.len(), 1, "{}", r.render());
+        assert_eq!(r.diagnostics[0].check, CheckId::PayloadConservation);
+        assert!(r.diagnostics[0].message.contains("equal split"));
+    }
+
+    #[test]
+    fn watermark_over_hbm_is_caught() {
+        let s = sched();
+        let mut c = ctx();
+        c.hbm_capacity = Some(1.0); // one byte of HBM
+        c.aot_fits = Some(true);
+        let r = verify_schedule(&s, None, &c);
+        assert_eq!(r.diagnostics.len(), 1, "{}", r.render());
+        let d = &r.diagnostics[0];
+        assert_eq!(d.check, CheckId::Watermark);
+        assert!(d.message.contains("disagree"));
+        // when the AOT check already rejected the plan the reports agree
+        c.aot_fits = Some(false);
+        assert!(verify_schedule(&s, None, &c).is_clean());
+    }
+
+    #[test]
+    fn p2p_program_matches_and_drains() {
+        for (s_n, m) in [(2usize, 4usize), (4, 8), (4, 4), (8, 16)] {
+            for pipe in [
+                PipelineSchedule::one_f_one_b(s_n, m).unwrap(),
+                PipelineSchedule::gpipe(s_n, m).unwrap(),
+            ] {
+                let diags = verify_pipeline(&pipe);
+                assert!(
+                    diags.is_empty(),
+                    "{s_n}x{m} {:?}: {:?}",
+                    pipe.kind,
+                    diags
+                );
+                // 2*(S-1)*m sends and as many recvs per direction pair
+                let ops = lower_p2p_program(&pipe);
+                assert_eq!(ops.len(), 4 * (s_n - 1) * m);
+            }
+        }
+    }
+
+    #[test]
+    fn unmatched_send_is_caught() {
+        let pipe = PipelineSchedule::gpipe(2, 2).unwrap();
+        let mut ops = lower_p2p_program(&pipe);
+        // drop a recv: its send is now never consumed
+        let i = ops.iter().position(|o| !o.is_send).unwrap();
+        ops.remove(i);
+        let diags = verify_p2p_program(&ops);
+        assert!(
+            diags
+                .iter()
+                .any(|d| d.check == CheckId::P2pUnmatched && d.message.contains("pending_p2p")),
+            "{diags:?}"
+        );
+    }
+
+    #[test]
+    fn recv_without_any_send_is_caught() {
+        let ops = vec![P2pOp { stage: 1, is_send: false, src: 0, dst: 1, tag: 0 }];
+        let diags = verify_p2p_program(&ops);
+        assert_eq!(diags.len(), 1, "{diags:?}");
+        assert_eq!(diags[0].check, CheckId::P2pUnmatched);
+        assert!(diags[0].message.contains("no matching send"));
+    }
+
+    #[test]
+    fn order_deadlock_is_caught() {
+        // recv issued before its matching send in executor order
+        let ops = vec![
+            P2pOp { stage: 1, is_send: false, src: 0, dst: 1, tag: 7 },
+            P2pOp { stage: 0, is_send: true, src: 0, dst: 1, tag: 7 },
+        ];
+        let diags = verify_p2p_program(&ops);
+        assert_eq!(diags.len(), 1, "{diags:?}");
+        assert_eq!(diags[0].check, CheckId::P2pDeadlock);
+        assert!(diags[0].message.contains("block forever"));
+    }
+
+    #[test]
+    fn wait_for_cycle_is_caught() {
+        // two stages, each recv-then-send toward the other on distinct
+        // channels: a classic head-of-line cycle no interleaving solves
+        let ops = vec![
+            P2pOp { stage: 0, is_send: false, src: 1, dst: 0, tag: 1 },
+            P2pOp { stage: 0, is_send: true, src: 0, dst: 1, tag: 0 },
+            P2pOp { stage: 1, is_send: false, src: 0, dst: 1, tag: 0 },
+            P2pOp { stage: 1, is_send: true, src: 1, dst: 0, tag: 1 },
+        ];
+        let diags = verify_p2p_program(&ops);
+        assert!(
+            diags.iter().any(|d| d.check == CheckId::P2pDeadlock
+                && d.message.contains("wait-for cycle")),
+            "{diags:?}"
+        );
+    }
+
+    #[test]
+    fn presets_and_sweep_lint_clean() {
+        for (label, report) in lint_presets().unwrap() {
+            assert!(report.is_clean(), "{label}: {}", report.render());
+        }
+        let rows = lint_sweep();
+        assert_eq!(rows.len(), SWEEP_MESHES.len());
+        for (label, report) in &rows {
+            assert!(report.is_clean(), "{label}: {}", report.render());
+        }
+        let doc = lint_doc(&rows);
+        assert_eq!(doc.get("clean").and_then(|v| v.as_bool()), Some(true));
+    }
+}

@@ -273,6 +273,9 @@ pub fn register_defaults() -> BTreeMap<&'static str, Ctor> {
             // simulator worker threads (wall-clock only: results are
             // bit-identical at any value)
             .field("sim_threads", Value::Int(1))
+            // static schedule verifier (composer::verify) at
+            // construction + init; off only to test its failure paths
+            .field("verify", Value::Bool(true))
             .field("backend", Value::Config(builtin("MockTrainBackend")))
     });
 

@@ -52,6 +52,12 @@
 //! Counter totals are order-independent sums, and every kernel writes a
 //! caller-chosen region, so results are identical at any thread count.
 
+// Hot-path code: recoverable failures must surface as typed errors
+// through the anyhow paths, never as `unwrap()` panics.  Tests keep
+// `unwrap()` for brevity (the cfg_attr lifts the deny under cfg(test);
+// invariant `expect`s with a stated reason remain allowed).
+#![cfg_attr(not(test), deny(clippy::unwrap_used))]
+
 use std::sync::Arc;
 
 use anyhow::{bail, Result};

@@ -106,6 +106,12 @@
 //! across the canonical mesh sweep, and `docs/simulator.md` develops
 //! the argument and the counter semantics.
 
+// Hot-path code: recoverable failures must surface as typed errors
+// through the anyhow paths, never as `unwrap()` panics.  Tests keep
+// `unwrap()` for brevity (the cfg_attr lifts the deny under cfg(test);
+// invariant `expect`s with a stated reason remain allowed).
+#![cfg_attr(not(test), deny(clippy::unwrap_used))]
+
 use std::cell::RefCell;
 
 use anyhow::{Context, Result};
@@ -115,6 +121,10 @@ use crate::composer::schedule::{
     PipelineKind, PipelineSchedule, ScheduleEntry, SchedulePhase,
 };
 use crate::composer::sharding::shard_axes_from_specs;
+use crate::composer::verify::{
+    bwd_channel_tag, fwd_channel_tag, verify_pipeline, verify_plan, verify_schedule, VerifyContext,
+    VerifyReport,
+};
 use crate::composer::{materialize, Plan};
 use crate::config::{ConfigNode, MeshRules};
 use crate::perfmodel::chips;
@@ -165,6 +175,13 @@ pub struct MeshOptions {
     /// `ops`/`reduce_ops`/`bytes_moved`) is identical at any value —
     /// proven across the canonical sweep by `tests/sim_determinism.rs`.
     pub sim_threads: usize,
+    /// Run the static schedule verifier
+    /// ([`crate::composer::verify`]) at construction (pipeline P2P
+    /// program) and at init/restore (the lowered per-tensor schedule),
+    /// refusing to run a schedule that does not lint clean.  On by
+    /// default; turn off only to exercise the verifier's own failure
+    /// paths.
+    pub verify: bool,
 }
 
 impl MeshOptions {
@@ -218,6 +235,7 @@ impl MeshOptions {
             active_experts: if expert > 1 { 2 } else { 1 },
             capacity_factor: 1.25,
             sim_threads: 1,
+            verify: true,
         }
     }
 
@@ -244,6 +262,13 @@ impl MeshOptions {
     /// any value; see [`MeshOptions::sim_threads`]).
     pub fn with_sim_threads(mut self, n: usize) -> Self {
         self.sim_threads = n;
+        self
+    }
+
+    /// Enable/disable the static schedule verifier (see
+    /// [`MeshOptions::verify`]; on by default).
+    pub fn with_verify(mut self, on: bool) -> Self {
+        self.verify = on;
         self
     }
 }
@@ -314,13 +339,15 @@ fn tree_accumulate(vals: &[f32]) -> f32 {
     level.first().copied().unwrap_or(0.0)
 }
 
-/// P2p channel tags: microbatch index, disambiguated by direction.
+/// P2p channel tags: microbatch index, disambiguated by direction.  The
+/// canonical definitions live in [`crate::composer::verify`] so the
+/// static verifier analyzes exactly the channels this executor uses.
 fn fwd_tag(microbatch: usize) -> u64 {
-    microbatch as u64
+    fwd_channel_tag(microbatch)
 }
 
 fn bwd_tag(microbatch: usize) -> u64 {
-    (1u64 << 32) | microbatch as u64
+    bwd_channel_tag(microbatch)
 }
 
 /// Deterministically fan `tasks` over the worker pool.  Each task owns
@@ -983,6 +1010,17 @@ impl MeshTrainer {
             );
         }
         let pipe = PipelineSchedule::for_kind(opts.pipeline_schedule, ps, microbatches)?;
+        if opts.verify {
+            // static deadlock-freedom of the send/recv program this grid
+            // lowers to — refuse construction rather than hang or panic
+            // deep in a sweep
+            let diags = verify_pipeline(&pipe);
+            anyhow::ensure!(
+                diags.is_empty(),
+                "static schedule verifier rejected the pipeline program:\n{}",
+                diags.iter().map(|d| format!("  {d}")).collect::<Vec<_>>().join("\n")
+            );
+        }
         let desc = TrainBackendDescriptor {
             name: if es > 1 {
                 format!(
@@ -1256,6 +1294,30 @@ impl MeshTrainer {
         }
         Ok(CollectiveSchedule::new(entries))
     }
+
+    /// Run the static schedule verifier over the mesh's lowered step
+    /// schedule (exact per-tensor payloads) and its pipeline program,
+    /// returning the clean report or failing with every diagnostic
+    /// spelled out.  Called automatically at init/restore when
+    /// [`MeshOptions::verify`] is set.
+    pub fn verify_lowered(&self) -> Result<VerifyReport> {
+        let sched = self.lower_step()?;
+        let ctx = VerifyContext {
+            strategy: self.opts.strategy.clone(),
+            shard_axes: self.opts.shard_axes.clone(),
+            exact_payloads: true,
+            hbm_capacity: None,
+            aot_fits: None,
+        };
+        let mut report = verify_schedule(&sched, Some(&self.pipe), &ctx);
+        report.diagnostics.extend(verify_pipeline(&self.pipe));
+        anyhow::ensure!(
+            report.is_clean(),
+            "static schedule verifier rejected the lowered step:\n{}",
+            report.render()
+        );
+        Ok(report)
+    }
 }
 
 impl TrainBackend for MeshTrainer {
@@ -1270,6 +1332,11 @@ impl TrainBackend for MeshTrainer {
         core.shard_state(&state)?;
         core.step = 0;
         core.initialized = true;
+        if self.opts.verify {
+            // shard shapes are now known: statically verify the exact
+            // lowered schedule before the first step executes
+            self.verify_lowered()?;
+        }
         Ok(())
     }
 
@@ -1370,6 +1437,9 @@ impl TrainBackend for MeshTrainer {
         core.shard_state(tensors)?;
         core.step = step;
         core.initialized = true;
+        if self.opts.verify {
+            self.verify_lowered()?;
+        }
         Ok(())
     }
 
@@ -1431,6 +1501,7 @@ pub fn mesh_from_config(cfg: &ConfigNode) -> Result<MeshTrainer> {
             active_experts: cfg.get_int("active_experts").unwrap_or(1).max(1) as usize,
             capacity_factor: cfg.get_float("capacity_factor").unwrap_or(1.25),
             sim_threads: cfg.get_int("sim_threads").unwrap_or(1).max(1) as usize,
+            verify: cfg.get_bool("verify").unwrap_or(true),
         },
     )
 }
@@ -1450,6 +1521,17 @@ pub fn mesh_backend_from_config(cfg: &ConfigNode) -> Result<Box<dyn TrainBackend
 /// resolved strategy, its sharding specs (resolved against the plan's
 /// mesh axes), and its target interconnect become the mesh options.
 pub fn mesh_trainer_from_plan(plan: &Plan, inner: Box<dyn TrainBackend>) -> Result<MeshTrainer> {
+    if plan.verify {
+        // lint the plan-level schedule before committing to construction
+        // (the lowered per-tensor schedule is re-verified at init)
+        let report = verify_plan(plan)?;
+        anyhow::ensure!(
+            report.is_clean(),
+            "static schedule verifier rejected the plan for {}:\n{}",
+            plan.instance_type,
+            report.render()
+        );
+    }
     let shard_axes = shard_axes_from_specs(&plan.sharding, &plan.mesh_axes);
     let interconnect = chips::by_instance_type(&plan.instance_type)
         .map(|c| c.interconnect)
@@ -1469,6 +1551,7 @@ pub fn mesh_trainer_from_plan(plan: &Plan, inner: Box<dyn TrainBackend>) -> Resu
             active_experts: (plan.shape.active_experts as usize).max(1),
             capacity_factor: plan.capacity_factor,
             sim_threads: 1,
+            verify: plan.verify,
         },
     )
 }

@@ -18,6 +18,12 @@
 //! is what keeps an expert-sharded mesh bit-identical to the 1-device
 //! run (see `docs/moe.md` for the full argument).
 
+// Hot-path code: recoverable failures must surface as typed errors
+// through the anyhow paths, never as `unwrap()` panics.  Tests keep
+// `unwrap()` for brevity (the cfg_attr lifts the deny under cfg(test);
+// invariant `expect`s with a stated reason remain allowed).
+#![cfg_attr(not(test), deny(clippy::unwrap_used))]
+
 use anyhow::Result;
 
 /// Deterministic router score of `(token, expert)` — a SplitMix64-style
