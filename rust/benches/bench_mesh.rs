@@ -14,7 +14,11 @@
 //! p2p traffic plus a bubble (annotated straight off the 1F1B microbatch
 //! grid, `(S-1)/(S-1+m)`), expert parallelism adds MoE token-dispatch
 //! all-to-alls whose cost is asserted bit-identical to the analytic
-//! estimator formula, and the balanced meshes win.
+//! estimator formula, and the balanced meshes win.  Next to the analytic
+//! columns, `netsim_s`/`netsim_ex` report the same schedule executed by
+//! the flow-level network simulator (`axlearn::netsim`) over a two-tier
+//! pod/spine topology — topology- and contention-aware where the closed
+//! forms are not (`docs/netsim.md`).
 //!
 //! The sweep itself lives in `axlearn::composer::mesh_sweep` so this
 //! bench, the CI checker, and the tier-1 gate test can never disagree
@@ -29,20 +33,23 @@ fn main() {
          (llama2-7b / moe8) ===\n"
     );
     println!(
-        "{:>16} {:>10} {:>10} {:>10} {:>10} {:>8} {:>10} {:>8}",
-        "mesh(dxpxfxmxe)", "compute_s", "comm_s", "exposed_s", "a2a_s", "bubble", "step_s", "fits"
+        "{:>16} {:>10} {:>10} {:>10} {:>10} {:>10} {:>10} {:>8} {:>10} {:>8}",
+        "mesh(dxpxfxmxe)", "compute_s", "comm_s", "exposed_s", "netsim_s", "netsim_ex", "a2a_s",
+        "bubble", "step_s", "fits"
     );
     for p in &points {
         if p.fits {
             println!(
-                "{:>16} {:>10.4} {:>10.4} {:>10.4} {:>10.4} {:>8.4} {:>10.4} {:>8}",
-                p.mesh, p.compute_s, p.comm_s, p.exposed_comm_s, p.alltoall_s, p.bubble,
-                p.step_s, "yes"
+                "{:>16} {:>10.4} {:>10.4} {:>10.4} {:>10.4} {:>10.4} {:>10.4} {:>8.4} {:>10.4} \
+                 {:>8}",
+                p.mesh, p.compute_s, p.comm_s, p.exposed_comm_s, p.netsim_tiered_s,
+                p.netsim_exposed_s, p.alltoall_s, p.bubble, p.step_s, "yes"
             );
         } else {
             println!(
-                "{:>16} {:>10} {:>10.4} {:>10.4} {:>10.4} {:>8.4} {:>10} {:>8}",
-                p.mesh, "-", p.comm_s, p.exposed_comm_s, p.alltoall_s, p.bubble, "-", "OOM"
+                "{:>16} {:>10} {:>10.4} {:>10.4} {:>10.4} {:>10.4} {:>10.4} {:>8.4} {:>10} {:>8}",
+                p.mesh, "-", p.comm_s, p.exposed_comm_s, p.netsim_tiered_s, p.netsim_exposed_s,
+                p.alltoall_s, p.bubble, "-", "OOM"
             );
         }
     }
@@ -88,6 +95,14 @@ fn main() {
                 p.mesh
             );
         }
+        // the topology-aware columns exist wherever the analytic model
+        // prices communication
+        assert_eq!(
+            p.netsim_tiered_s > 0.0,
+            p.comm_s > 0.0,
+            "netsim must simulate every communicating mesh ({})",
+            p.mesh
+        );
     }
 
     let doc = mesh_sweep_doc(&points);

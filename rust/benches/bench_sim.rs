@@ -3,8 +3,9 @@
 //! (16 → 256 devices) at several `sim_threads` values.  Emits JSON, and
 //! writes it to `$BENCH_JSON_DIR/bench_sim.json` when that variable is
 //! set (the CI bench job uploads the file; `bench_check` gates the
-//! *counters* against `benches/baseline.json` — wall-clock is reported
-//! for the speedup story but never gated, because it is machine noise).
+//! *counters* against `benches/baseline.json` — wall-clock and the
+//! flow-simulated `netsim_s` column (`axlearn::netsim`, `docs/netsim.md`)
+//! are reported for the story but never gated).
 //!
 //! The sweep itself lives in `axlearn::distributed::sim_bench` so this
 //! bench, the CI checker, and the tier-1 gate test can never disagree
@@ -24,14 +25,16 @@ fn main() {
          data×pipeline×fsdp×model×expert (1024-element mock) ===\n"
     );
     println!(
-        "{:>12} {:>8} {:>6} {:>12} {:>14} {:>14} {:>10}",
-        "mesh", "devices", "moe", "ops", "reduce_ops", "bytes_moved", "alloc"
+        "{:>12} {:>8} {:>6} {:>12} {:>14} {:>14} {:>10} {:>12}",
+        "mesh", "devices", "moe", "ops", "reduce_ops", "bytes_moved", "alloc", "netsim_s"
     );
     for p in &points {
         println!(
-            "{:>12} {:>8} {:>6} {:>12} {:>14} {:>14} {:>10}",
-            p.mesh, p.devices, p.moe, p.ops, p.reduce_ops, p.bytes_moved, p.buffers_alloc_steady
+            "{:>12} {:>8} {:>6} {:>12} {:>14} {:>14} {:>10} {:>12.6}",
+            p.mesh, p.devices, p.moe, p.ops, p.reduce_ops, p.bytes_moved,
+            p.buffers_alloc_steady, p.netsim_s
         );
+        assert!(p.netsim_s > 0.0, "{}: simulated comm time must be real", p.mesh);
         // the zero-copy invariant the gate protects
         assert_eq!(
             p.buffers_alloc_steady, 0,

@@ -1,7 +1,9 @@
 //! CI bench-regression gate: recompute the deterministic mesh sweep
 //! *and* the simulator counter sweep, and compare both against the
 //! committed `benches/baseline.json` — exit nonzero when simulated
-//! step-time / bubble / AllToAll cost drifts beyond the tolerance, or
+//! step-time / bubble / AllToAll cost or a topology-aware flow-simulated
+//! comm time (`netsim_tiered_s` / `netsim_exposed_s`, see
+//! `docs/netsim.md`) drifts beyond the tolerance, or
 //! when any simulator work counter (`sim_points`: collective ops,
 //! reduce additions, bytes moved, steady-state allocations) changes
 //! **at all**, so cost-model regressions and reintroduced per-step

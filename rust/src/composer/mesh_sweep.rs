@@ -70,6 +70,14 @@ pub struct MeshSweepPoint {
     /// Composed step time (0 when OOM).
     pub step_s: f64,
     pub schedule_entries: usize,
+    /// Total simulated comm time of the schedule executed by the flow
+    /// simulator ([`crate::netsim`]) over a two-tier pod/spine topology
+    /// of [`SWEEP_CHIPS`] hosts — topology- and contention-aware, where
+    /// `comm_s` is the closed-form analytic total.
+    pub netsim_tiered_s: f64,
+    /// Simulated comm time on the critical path (non-overlappable
+    /// entries), same topology.
+    pub netsim_exposed_s: f64,
 }
 
 /// The swept factorizations: `(data, pipeline, fsdp, model, expert)`,
@@ -115,6 +123,9 @@ pub fn mesh_sweep_points() -> Vec<MeshSweepPoint> {
     let chip = chips::h100();
     let profile = SystemProfile::axlearn();
     let shard_axes = vec!["fsdp".to_string(), "model".to_string()];
+    // the topology-aware re-ranker: the same schedule, executed by the
+    // flow simulator over an explicit two-tier pod/spine fabric
+    let topo = crate::netsim::Topology::two_tier(SWEEP_CHIPS, &chip.interconnect);
     let mut points = Vec::with_capacity(SWEEP_MESHES.len());
     for (d, p, f, m, e) in SWEEP_MESHES {
         assert_eq!(d * p * f * m * e, SWEEP_CHIPS, "factorization must use the full budget");
@@ -173,6 +184,9 @@ pub fn mesh_sweep_points() -> Vec<MeshSweepPoint> {
             remat_policy: "auto".into(),
         };
         let mesh = format!("{d}x{p}x{f}x{m}x{e}");
+        let sim = sched
+            .simulate(&topo, crate::netsim::AlgoChoice::Auto)
+            .unwrap_or_else(|err| panic!("netsim failed for mesh {mesh}: {err:#}"));
         let (fits, compute_s, step_s) = match estimate_step(&spec, &chip, &profile) {
             Ok(est) => {
                 // overlap-aware composition: compute hides the
@@ -205,6 +219,8 @@ pub fn mesh_sweep_points() -> Vec<MeshSweepPoint> {
             alltoall_analytic_s,
             step_s,
             schedule_entries: sched.entries.len(),
+            netsim_tiered_s: sim.total_sim_s(),
+            netsim_exposed_s: sim.exposed_sim_s(),
         });
     }
     points
@@ -229,6 +245,16 @@ pub fn mesh_sweep_doc(points: &[MeshSweepPoint]) -> Json {
         ("microbatches", Json::num(SWEEP_MICROBATCHES as f64)),
         ("best_mesh", Json::str(best.mesh.clone())),
         (
+            // provenance of the netsim_* columns: the flow simulator's
+            // topology and lowering (docs/netsim.md)
+            "netsim",
+            Json::obj(vec![
+                ("topology", Json::str("two_tier")),
+                ("hosts", Json::num(SWEEP_CHIPS as f64)),
+                ("algo", Json::str("auto")),
+            ]),
+        ),
+        (
             "points",
             Json::Arr(
                 points
@@ -250,6 +276,8 @@ pub fn mesh_sweep_doc(points: &[MeshSweepPoint]) -> Json {
                             ("exposed_comm_s", Json::num(p.exposed_comm_s)),
                             ("alltoall_s", Json::num(p.alltoall_s)),
                             ("step_s", Json::num(p.step_s)),
+                            ("netsim_tiered_s", Json::num(p.netsim_tiered_s)),
+                            ("netsim_exposed_s", Json::num(p.netsim_exposed_s)),
                             ("schedule_entries", Json::num(p.schedule_entries as f64)),
                         ])
                     })
@@ -302,6 +330,8 @@ pub fn compare_to_baseline(points: &[MeshSweepPoint], baseline: &Json, tol: f64)
             ("exposed_comm_s", p.exposed_comm_s),
             ("alltoall_s", p.alltoall_s),
             ("step_s", p.step_s),
+            ("netsim_tiered_s", p.netsim_tiered_s),
+            ("netsim_exposed_s", p.netsim_exposed_s),
         ] {
             match b.get(metric).and_then(|v| v.as_f64()) {
                 None => drifts.push(format!("mesh {}: baseline lacks {metric}", p.mesh)),
@@ -354,6 +384,13 @@ mod tests {
         for p in &points {
             assert_eq!(p.bubble > 0.0, p.pipeline > 1, "{}", p.mesh);
         }
+        // the simulated columns exist wherever the analytic model
+        // prices communication, and exposed <= total
+        for p in &points {
+            assert_eq!(p.netsim_tiered_s > 0.0, p.comm_s > 0.0, "{}", p.mesh);
+            assert!(p.netsim_exposed_s <= p.netsim_tiered_s + 1e-12, "{}", p.mesh);
+            assert_eq!(p.netsim_exposed_s > 0.0, p.exposed_comm_s > 0.0, "{}", p.mesh);
+        }
     }
 
     #[test]
@@ -364,6 +401,8 @@ mod tests {
             assert_eq!(x.mesh, y.mesh);
             assert_eq!(x.step_s.to_bits(), y.step_s.to_bits());
             assert_eq!(x.comm_s.to_bits(), y.comm_s.to_bits());
+            assert_eq!(x.netsim_tiered_s.to_bits(), y.netsim_tiered_s.to_bits());
+            assert_eq!(x.netsim_exposed_s.to_bits(), y.netsim_exposed_s.to_bits());
         }
     }
 

@@ -76,6 +76,11 @@ pub struct ScheduleEntry {
     /// Estimated seconds for one instance over the target interconnect
     /// ([`crate::perfmodel::comms::hierarchical`]).
     pub cost_s: f64,
+    /// Sequential repetitions folded into `cost_s` (pipeline
+    /// microbatches, per-layer expert dispatches).  `cost_s / rounds` is
+    /// the cost of one repetition — the unit the flow simulator
+    /// (`crate::netsim`) executes and scales back up.
+    pub rounds: usize,
     /// Whether the entry can hide behind compute (prefetched gathers,
     /// bucketed gradient reductions) or sits on the critical path.
     pub overlappable: bool,
@@ -502,6 +507,7 @@ pub fn build_schedule(
             tensor: "params".into(),
             bytes: param_bytes / ms as f64,
             cost_s: hierarchical(Collective::AllGather, param_bytes / ms as f64, fs, ic),
+            rounds: 1,
             overlappable: true,
         });
         entries.push(ScheduleEntry {
@@ -513,6 +519,7 @@ pub fn build_schedule(
             tensor: "grads".into(),
             bytes: param_bytes / ms as f64,
             cost_s: hierarchical(Collective::ReduceScatter, param_bytes / ms as f64, fs, ic),
+            rounds: 1,
             overlappable: true,
         });
     }
@@ -526,6 +533,7 @@ pub fn build_schedule(
             tensor: "activations".into(),
             bytes: act_bytes,
             cost_s: hierarchical(Collective::AllReduce, act_bytes, ms, ic),
+            rounds: 1,
             overlappable: false,
         });
     }
@@ -557,6 +565,10 @@ pub fn build_schedule(
                 // half the fwd+bwd total per direction (exact: a
                 // power-of-two split of the shared cost)
                 cost_s: total / 2.0,
+                // 2·layers_resident all-to-alls per direction (fwd+bwd
+                // per resident MoE layer); cost_s / rounds is one
+                // dispatch
+                rounds: (2.0 * layers_resident).round() as usize,
                 overlappable: true,
             });
         }
@@ -588,6 +600,8 @@ pub fn build_schedule(
                 tensor: tensor.into(),
                 bytes: micro_bytes,
                 cost_s: chain_cost,
+                // one chain traversal per microbatch
+                rounds: m,
                 overlappable: true,
             });
         }
@@ -603,6 +617,7 @@ pub fn build_schedule(
             tensor: "grads".into(),
             bytes: grad_shard,
             cost_s: hierarchical(Collective::AllReduce, grad_shard, rep, ic),
+            rounds: 1,
             overlappable: true,
         });
     }

@@ -1068,6 +1068,7 @@ mod tests {
             tensor: "w0".into(),
             bytes: 4.0 * 8.0 * 3.0 + 4.0, // not a multiple of 4*group
             cost_s: hierarchical(Collective::AllGather, 100.0, 8, &ic),
+            rounds: 1,
             overlappable: true,
         };
         let strat = Strategy { data: 8, fsdp: 8, tensor: 1, pipeline: 1, expert: 1, microbatches: 1 };

@@ -1098,6 +1098,12 @@ impl MeshTrainer {
         core.rep * core.ps * core.es * core.g
     }
 
+    /// Interconnect the schedule's cost annotations are priced over
+    /// (and the flow simulator's topologies are sized from).
+    pub fn interconnect(&self) -> &Interconnect {
+        &self.opts.interconnect
+    }
+
     /// Capacity-factor drop accounting of the most recent step: router
     /// load per expert, the per-expert capacity, and how many
     /// assignments exceeded it.  `None` before the first step or when
@@ -1169,6 +1175,7 @@ impl MeshTrainer {
                         tensor: name.clone(),
                         bytes: block_bytes,
                         cost_s: hierarchical(Collective::AllGather, block_bytes, fs, ic),
+                        rounds: 1,
                         overlappable: true,
                     });
                     entries.push(ScheduleEntry {
@@ -1180,6 +1187,7 @@ impl MeshTrainer {
                         tensor: name.clone(),
                         bytes: block_bytes,
                         cost_s: hierarchical(Collective::ReduceScatter, block_bytes, fs, ic),
+                        rounds: 1,
                         overlappable: true,
                     });
                 }
@@ -1193,6 +1201,7 @@ impl MeshTrainer {
                         tensor: name.clone(),
                         bytes: cell_bytes,
                         cost_s: hierarchical(Collective::AllGather, cell_bytes, ms, ic),
+                        rounds: 1,
                         overlappable: true,
                     });
                 }
@@ -1207,6 +1216,7 @@ impl MeshTrainer {
                         tensor: name.clone(),
                         bytes: shard_bytes,
                         cost_s: hierarchical(Collective::AllReduce, shard_bytes, rep, ic),
+                        rounds: 1,
                         overlappable: true,
                     });
                 }
@@ -1221,6 +1231,7 @@ impl MeshTrainer {
                     tensor: name.clone(),
                     bytes,
                     cost_s: hierarchical(Collective::AllReduce, bytes, rep, ic),
+                    rounds: 1,
                     overlappable: true,
                 });
             }
@@ -1236,6 +1247,7 @@ impl MeshTrainer {
                 tensor: "activations".into(),
                 bytes: act,
                 cost_s: hierarchical(Collective::AllReduce, act, ms, ic),
+                rounds: 1,
                 overlappable: false,
             });
         }
@@ -1259,6 +1271,7 @@ impl MeshTrainer {
                     tensor: tensor.into(),
                     bytes: tok_bytes,
                     cost_s: hierarchical(Collective::AllToAll, tok_bytes, es, ic),
+                    rounds: 1,
                     overlappable: true,
                 });
             }
@@ -1288,6 +1301,7 @@ impl MeshTrainer {
                     cost_s: (ps - 1) as f64
                         * m as f64
                         * hierarchical(Collective::P2P, bytes, 2, ic),
+                    rounds: m,
                     overlappable: true,
                 });
             }

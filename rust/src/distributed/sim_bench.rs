@@ -21,8 +21,9 @@
 //! * `rust/tests/bench_gate.rs` proves the comparison catches injected
 //!   counter regressions, in tier-1.
 //!
-//! Wall-clock is *reported* in `bench_sim.json` for the speedup story
-//! but never gated — only the counters are.
+//! Wall-clock — and the flow-simulated comm time `netsim_s`
+//! ([`crate::netsim`]) — are *reported* in `bench_sim.json` for the
+//! story but never gated — only the counters are.
 
 use crate::trainer::backend::{MockTrainBackend, MockTrainBackendOptions};
 use crate::trainer::input::{CorpusKind, SyntheticCorpus};
@@ -61,7 +62,7 @@ pub const SIM_BENCH_MESHES: [(usize, usize, usize, usize, usize); 8] = [
 ];
 
 /// One mesh shape's worth of counter output.
-#[derive(Clone, Debug, PartialEq, Eq)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct SimBenchPoint {
     /// `"dxpxfxmxe"` — the gate's join key.
     pub mesh: String,
@@ -79,6 +80,11 @@ pub struct SimBenchPoint {
     /// `sim_threads = 1` — the zero-copy refactor's invariant is that
     /// this is 0, and the gate keeps it that way.
     pub buffers_alloc_steady: u64,
+    /// Simulated per-step communication time of the mesh's lowered
+    /// schedule ([`crate::netsim`]) over a two-tier topology of
+    /// `devices` hosts.  **Reported** in `bench_sim.json` next to the
+    /// counters, never gated — it is an f64 cost, not a work counter.
+    pub netsim_s: f64,
 }
 
 /// Build the sweep's trainer for one factorization: the 1024-element
@@ -129,6 +135,15 @@ pub fn sim_counter_points() -> Vec<SimBenchPoint> {
             let before = mesh.counters();
             run_steps(&mut mesh, &mut corpus, SIM_BENCH_MEASURE_STEPS);
             let delta = mesh.counters().since(before);
+            // topology-aware time for the same lowered schedule the
+            // counters measure (reported, never gated)
+            let sched = mesh.lower_step().expect("sim bench lower_step");
+            let topo =
+                crate::netsim::Topology::two_tier(mesh.num_devices(), mesh.interconnect());
+            let netsim_s = sched
+                .simulate(&topo, crate::netsim::AlgoChoice::Auto)
+                .expect("sim bench netsim")
+                .total_sim_s();
             SimBenchPoint {
                 mesh: format!("{d}x{p}x{f}x{m}x{e}"),
                 devices: mesh.num_devices(),
@@ -138,6 +153,7 @@ pub fn sim_counter_points() -> Vec<SimBenchPoint> {
                 reduce_ops: delta.reduce_ops,
                 bytes_moved: delta.bytes_moved,
                 buffers_alloc_steady: delta.buffers_alloc,
+                netsim_s,
             }
         })
         .collect()
@@ -188,6 +204,9 @@ pub fn sim_doc(points: &[SimBenchPoint]) -> Json {
                                 "buffers_alloc_steady",
                                 Json::num(p.buffers_alloc_steady as f64),
                             ),
+                            // reported only — compare_sim_to_baseline
+                            // never reads it (f64 cost, not a counter)
+                            ("netsim_s", Json::num(p.netsim_s)),
                         ])
                     })
                     .collect(),
@@ -267,6 +286,7 @@ mod tests {
         assert_eq!(a, b, "counter sweep must be run-to-run deterministic");
         for p in &a {
             assert!(p.ops > 0 && p.bytes_moved > 0, "{}: sweep must communicate", p.mesh);
+            assert!(p.netsim_s > 0.0, "{}: the simulated comm time must be real", p.mesh);
             assert_eq!(
                 p.buffers_alloc_steady, 0,
                 "{}: warm steps must recycle every buffer",
@@ -289,6 +309,7 @@ mod tests {
             reduce_ops: 0,
             bytes_moved: 0,
             buffers_alloc_steady: 0,
+            netsim_s: 0.0,
         }];
         let msgs = compare_sim_to_baseline(&points, &Json::Null);
         assert_eq!(msgs.len(), 1);

@@ -66,6 +66,7 @@ pub mod experiments;
 pub mod loc;
 pub mod module;
 pub mod monitor;
+pub mod netsim;
 pub mod perfmodel;
 pub mod runtime;
 pub mod serving;

@@ -1,0 +1,523 @@
+//! Collective-algorithm lowering: turn one collective over a rank set
+//! into the per-link flow set the fluid engine executes.
+//!
+//! The lowerings mirror the textbook algorithms the analytic
+//! [`crate::perfmodel::comms`] model prices, so that on a
+//! contention-free [`Topology::single_domain`] the simulated times land
+//! within tolerance of the closed forms (the contract
+//! `rust/tests/netsim_validation.rs` pins):
+//!
+//! * **Ring** all-gather / reduce-scatter: `n-1` rounds of `bytes/n`
+//!   chunks around the ring; all-reduce is the reduce-scatter ring
+//!   followed by the all-gather ring (`2(n-1)` rounds).  Rounds are
+//!   cut-through pipelined: only round-0 flows pay wire latency (see
+//!   [`super::sim::FlowSpec::pays_latency`]).
+//! * **AllToAll** is a single shot: every rank sends `bytes/(n-1)` to
+//!   every other rank simultaneously, so each access link carries the
+//!   full `bytes` — the per-link factor is 1, not the ring's
+//!   `(n-1)/n`, which is exactly the `payload_factor` fix this
+//!   simulator grounds (all-to-all-v routing is data-dependent, so no
+//!   uniform `1/n` stay-local share can be assumed).
+//! * **Broadcast** is a pipelined chain (cut-through: all hops drain
+//!   concurrently on disjoint links), **P2P** a store-and-forward
+//!   chain — one hop per stage boundary, strictly serialized.
+//! * **Tree** broadcasts/reduces along a binomial tree (`log2 n` full-
+//!   payload levels); gather-type collectives fall back to the ring,
+//!   which is bandwidth-optimal for them.
+//! * **Hierarchical** mirrors `comms::hierarchical` phase for phase:
+//!   intra-pod rings on the full payload, then per-slot inter-pod
+//!   exchanges on `bytes/within` (every intra-pod slot drives its own
+//!   cross-pod ring, so the trunk's aggregate bandwidth is actually
+//!   used), with a barrier between phases — the analytic model sums
+//!   phases, so the lowering sequences them.
+//!
+//! [`AlgoChoice::Auto`] picks Hierarchical when the ranks span more
+//! than one pod, Ring otherwise.
+
+use anyhow::Result;
+
+use crate::perfmodel::comms::Collective;
+
+use super::sim::{simulate_flows, FlowSpec, Timeline};
+use super::topo::Topology;
+
+/// Which lowering family to use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AlgoChoice {
+    Ring,
+    Tree,
+    Hierarchical,
+    /// Hierarchical when the ranks span pods, Ring otherwise.
+    Auto,
+}
+
+fn push_flow(
+    flows: &mut Vec<FlowSpec>,
+    src: usize,
+    dst: usize,
+    bytes: f64,
+    deps: Vec<usize>,
+    pays_latency: bool,
+) -> usize {
+    flows.push(FlowSpec { src, dst, bytes, deps, pays_latency });
+    flows.len() - 1
+}
+
+/// `rounds` rounds of `chunk`-byte neighbor exchanges around the ring
+/// of `ranks`.  Round 0 waits on `deps0` (the phase barrier) and pays
+/// latency; later rounds are released by the sender having forwarded
+/// its previous chunk and received its neighbor's.  Returns the
+/// last-round flow ids (the next phase's barrier).
+fn ring_rounds(
+    flows: &mut Vec<FlowSpec>,
+    ranks: &[usize],
+    chunk: f64,
+    rounds: usize,
+    deps0: &[usize],
+) -> Vec<usize> {
+    let n = ranks.len();
+    if n < 2 || rounds == 0 {
+        return deps0.to_vec();
+    }
+    let base = flows.len();
+    for r in 0..rounds {
+        for i in 0..n {
+            let deps = if r == 0 {
+                deps0.to_vec()
+            } else {
+                let prev = base + (r - 1) * n;
+                vec![prev + i, prev + (i + n - 1) % n]
+            };
+            push_flow(flows, ranks[i], ranks[(i + 1) % n], chunk, deps, r == 0);
+        }
+    }
+    (0..n).map(|i| base + (rounds - 1) * n + i).collect()
+}
+
+/// Single-shot all-to-all: every rank sends `per_peer` bytes to every
+/// other rank, all concurrently.
+fn alltoall_shot(
+    flows: &mut Vec<FlowSpec>,
+    ranks: &[usize],
+    per_peer: f64,
+    deps0: &[usize],
+) -> Vec<usize> {
+    let n = ranks.len();
+    if n < 2 {
+        return deps0.to_vec();
+    }
+    let mut out = Vec::with_capacity(n * (n - 1));
+    for i in 0..n {
+        for j in 0..n {
+            if i != j {
+                out.push(push_flow(flows, ranks[i], ranks[j], per_peer, deps0.to_vec(), true));
+            }
+        }
+    }
+    out
+}
+
+/// Pipelined broadcast chain: every hop starts at once (cut-through on
+/// disjoint links), so the makespan is one hop's `bytes/bw + latency`.
+fn broadcast_chain(
+    flows: &mut Vec<FlowSpec>,
+    ranks: &[usize],
+    bytes: f64,
+    deps0: &[usize],
+) -> Vec<usize> {
+    ranks
+        .windows(2)
+        .map(|w| push_flow(flows, w[0], w[1], bytes, deps0.to_vec(), true))
+        .collect()
+}
+
+/// Store-and-forward point-to-point chain: hop `k` waits for hop
+/// `k-1` — the pipeline stage-boundary pattern.
+fn p2p_chain(
+    flows: &mut Vec<FlowSpec>,
+    ranks: &[usize],
+    bytes: f64,
+    deps0: &[usize],
+) -> Vec<usize> {
+    let mut prev = deps0.to_vec();
+    for w in ranks.windows(2) {
+        prev = vec![push_flow(flows, w[0], w[1], bytes, prev, true)];
+    }
+    prev
+}
+
+/// Binomial-tree broadcast from `ranks[0]`: level `l` doubles the
+/// covered prefix, each transfer carrying the full payload.
+fn tree_broadcast(
+    flows: &mut Vec<FlowSpec>,
+    ranks: &[usize],
+    bytes: f64,
+    deps0: &[usize],
+) -> Vec<usize> {
+    let n = ranks.len();
+    // delivered[i]: the flow that delivered the payload to ranks[i]
+    let mut delivered: Vec<Option<usize>> = vec![None; n];
+    let mut leaves = Vec::new();
+    let mut span = 1;
+    while span < n {
+        for i in 0..span.min(n) {
+            let j = i + span;
+            if j >= n {
+                continue;
+            }
+            let deps = match delivered[i] {
+                Some(f) => vec![f],
+                None => deps0.to_vec(),
+            };
+            let f = push_flow(flows, ranks[i], ranks[j], bytes, deps, true);
+            delivered[j] = Some(f);
+            leaves.push(f);
+        }
+        span *= 2;
+    }
+    // only the final-level flows gate the next phase, but returning
+    // every tree edge keeps the barrier conservative and correct
+    leaves
+}
+
+/// Binomial-tree reduction onto `ranks[0]` (the broadcast mirrored).
+fn tree_reduce(
+    flows: &mut Vec<FlowSpec>,
+    ranks: &[usize],
+    bytes: f64,
+    deps0: &[usize],
+) -> Vec<usize> {
+    let n = ranks.len();
+    let mut sent: Vec<Option<usize>> = vec![None; n];
+    let mut last = deps0.to_vec();
+    let mut span = n.next_power_of_two() / 2;
+    while span >= 1 {
+        let mut level = Vec::new();
+        for i in 0..span {
+            let j = i + span;
+            if j >= n {
+                continue;
+            }
+            // a rank sends once it has absorbed everything below it
+            let mut deps: Vec<usize> = deps0.to_vec();
+            if let Some(f) = sent[j] {
+                deps.push(f);
+            }
+            let f = push_flow(flows, ranks[j], ranks[i], bytes, deps, true);
+            sent[i] = Some(f);
+            level.push(f);
+        }
+        if !level.is_empty() {
+            last = level;
+        }
+        span /= 2;
+    }
+    last
+}
+
+/// Group `ranks` by pod, preserving first-appearance order.  Errors
+/// when the pods are unevenly filled (the hierarchical phase structure
+/// needs one slot per intra-pod position).
+fn pod_groups(topo: &Topology, ranks: &[usize]) -> Result<Vec<Vec<usize>>> {
+    let mut order: Vec<usize> = Vec::new();
+    let mut groups: Vec<Vec<usize>> = Vec::new();
+    for &r in ranks {
+        let p = topo.pod_of(r);
+        match order.iter().position(|&q| q == p) {
+            Some(k) => groups[k].push(r),
+            None => {
+                order.push(p);
+                groups.push(vec![r]);
+            }
+        }
+    }
+    let w = groups[0].len();
+    anyhow::ensure!(
+        groups.iter().all(|g| g.len() == w),
+        "hierarchical lowering needs equally filled pods (got {:?})",
+        groups.iter().map(|g| g.len()).collect::<Vec<_>>()
+    );
+    Ok(groups)
+}
+
+/// Lower one collective over `ranks` into `flows` (appending; indices
+/// are absolute, so several instances can share one flow set).
+pub fn lower_collective_into(
+    flows: &mut Vec<FlowSpec>,
+    topo: &Topology,
+    algo: AlgoChoice,
+    c: Collective,
+    ranks: &[usize],
+    bytes: f64,
+) -> Result<()> {
+    let n = ranks.len();
+    anyhow::ensure!(bytes >= 0.0 && bytes.is_finite(), "collective payload must be finite");
+    {
+        let mut seen = ranks.to_vec();
+        seen.sort_unstable();
+        seen.dedup();
+        anyhow::ensure!(seen.len() == n, "collective ranks must be distinct");
+    }
+    if n < 2 {
+        return Ok(());
+    }
+    let nf = n as f64;
+    let spans_pods = ranks.iter().any(|&r| topo.pod_of(r) != topo.pod_of(ranks[0]));
+    let algo = match algo {
+        AlgoChoice::Auto if spans_pods => AlgoChoice::Hierarchical,
+        AlgoChoice::Auto => AlgoChoice::Ring,
+        AlgoChoice::Hierarchical if !spans_pods => AlgoChoice::Ring,
+        other => other,
+    };
+    match algo {
+        AlgoChoice::Ring | AlgoChoice::Tree => {
+            // tree only changes the rooted collectives; the gather-type
+            // collectives keep the bandwidth-optimal ring
+            match c {
+                Collective::AllGather | Collective::ReduceScatter => {
+                    ring_rounds(flows, ranks, bytes / nf, n - 1, &[]);
+                }
+                Collective::AllReduce => {
+                    if algo == AlgoChoice::Tree {
+                        let up = tree_reduce(flows, ranks, bytes, &[]);
+                        tree_broadcast(flows, ranks, bytes, &up);
+                    } else {
+                        ring_rounds(flows, ranks, bytes / nf, 2 * (n - 1), &[]);
+                    }
+                }
+                Collective::AllToAll => {
+                    alltoall_shot(flows, ranks, bytes / (nf - 1.0), &[]);
+                }
+                Collective::Broadcast => {
+                    if algo == AlgoChoice::Tree {
+                        tree_broadcast(flows, ranks, bytes, &[]);
+                    } else {
+                        broadcast_chain(flows, ranks, bytes, &[]);
+                    }
+                }
+                Collective::P2P => {
+                    p2p_chain(flows, ranks, bytes, &[]);
+                }
+            }
+        }
+        AlgoChoice::Hierarchical => {
+            let groups = pod_groups(topo, ranks)?;
+            let (a, w) = (groups.len(), groups[0].len());
+            let (af, wf) = (a as f64, w as f64);
+            let slot_ranks =
+                |s: usize| groups.iter().map(|g| g[s]).collect::<Vec<usize>>();
+            match c {
+                Collective::AllReduce => {
+                    // intra reduce-scatter, per-slot inter all-reduce on
+                    // the 1/within shard, intra all-gather — the same
+                    // three phases comms::hierarchical sums
+                    let mut b1 = Vec::new();
+                    for g in &groups {
+                        b1.extend(ring_rounds(flows, g, bytes / wf, w.saturating_sub(1), &[]));
+                    }
+                    let shard = bytes / wf;
+                    let mut b2 = Vec::new();
+                    for s in 0..w {
+                        b2.extend(ring_rounds(
+                            flows,
+                            &slot_ranks(s),
+                            shard / af,
+                            2 * (a - 1),
+                            &b1,
+                        ));
+                    }
+                    for g in &groups {
+                        ring_rounds(flows, g, bytes / wf, w.saturating_sub(1), &b2);
+                    }
+                }
+                Collective::AllGather | Collective::ReduceScatter => {
+                    let mut b1 = Vec::new();
+                    for g in &groups {
+                        b1.extend(ring_rounds(flows, g, bytes / wf, w.saturating_sub(1), &[]));
+                    }
+                    let shard = bytes / wf;
+                    for s in 0..w {
+                        ring_rounds(flows, &slot_ranks(s), shard / af, a - 1, &b1);
+                    }
+                }
+                Collective::AllToAll => {
+                    let mut b1 = Vec::new();
+                    if w > 1 {
+                        for g in &groups {
+                            b1.extend(alltoall_shot(flows, g, bytes / (wf - 1.0), &[]));
+                        }
+                    }
+                    let shard = bytes / wf;
+                    for s in 0..w {
+                        alltoall_shot(flows, &slot_ranks(s), shard / (af - 1.0), &b1);
+                    }
+                }
+                Collective::Broadcast => {
+                    // mirror the analytic decomposition: full payload
+                    // within the root's pod, 1/within shards across
+                    let b1 = broadcast_chain(flows, &groups[0], bytes, &[]);
+                    for s in 0..w {
+                        broadcast_chain(flows, &slot_ranks(s), bytes / wf, &b1);
+                    }
+                }
+                Collective::P2P => {
+                    p2p_chain(flows, ranks, bytes, &[]);
+                }
+            }
+        }
+        AlgoChoice::Auto => unreachable!("resolved above"),
+    }
+    Ok(())
+}
+
+/// Lower one collective into a fresh flow set.
+pub fn lower_collective(
+    topo: &Topology,
+    algo: AlgoChoice,
+    c: Collective,
+    ranks: &[usize],
+    bytes: f64,
+) -> Result<Vec<FlowSpec>> {
+    let mut flows = Vec::new();
+    lower_collective_into(&mut flows, topo, algo, c, ranks, bytes)?;
+    Ok(flows)
+}
+
+/// Lower and run one collective; the timeline's makespan is its
+/// simulated completion time.
+pub fn simulate_collective(
+    topo: &Topology,
+    algo: AlgoChoice,
+    c: Collective,
+    ranks: &[usize],
+    bytes: f64,
+) -> Result<Timeline> {
+    simulate_flows(topo, &lower_collective(topo, algo, c, ranks, bytes)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perfmodel::chips::{self, Interconnect};
+    use crate::perfmodel::comms;
+
+    fn flat_ic(n: usize) -> Interconnect {
+        Interconnect { domain_size: n, ..chips::h100().interconnect }
+    }
+
+    fn rel_err(a: f64, b: f64) -> f64 {
+        (a - b).abs() / b.abs().max(1e-12)
+    }
+
+    #[test]
+    fn ring_collectives_match_the_analytic_bandwidth_term() {
+        let ic = flat_ic(64);
+        let topo = Topology::single_domain(64, &ic);
+        let ranks: Vec<usize> = (0..64).collect();
+        let bytes = 4e9;
+        for c in [Collective::AllGather, Collective::ReduceScatter, Collective::AllReduce] {
+            let tl = simulate_collective(&topo, AlgoChoice::Ring, c, &ranks, bytes).unwrap();
+            let analytic = comms::intra_domain(c, bytes, 64, &ic);
+            assert!(
+                rel_err(tl.makespan_s, analytic) < 0.05,
+                "{c:?}: sim {} vs analytic {analytic}",
+                tl.makespan_s
+            );
+        }
+    }
+
+    #[test]
+    fn alltoall_uplink_carries_the_full_payload() {
+        // the payload_factor fix's ground truth: each access link moves
+        // `bytes`, so the time is bytes/bw + latency — factor 1.0
+        let ic = flat_ic(8);
+        let topo = Topology::single_domain(8, &ic);
+        let ranks: Vec<usize> = (0..8).collect();
+        let bytes = 9e9;
+        let tl =
+            simulate_collective(&topo, AlgoChoice::Ring, Collective::AllToAll, &ranks, bytes)
+                .unwrap();
+        let implied_factor = (tl.makespan_s - ic.intra_latency) * ic.intra_bw / bytes;
+        assert!(
+            (implied_factor - 1.0).abs() < 1e-9,
+            "implied per-link factor {implied_factor}"
+        );
+        // and every rank's up link carried exactly `bytes`
+        for h in 0..8 {
+            let up = topo.path(h, (h + 1) % 8)[0];
+            assert!((tl.link_bytes[up] - bytes).abs() < 1.0);
+        }
+    }
+
+    #[test]
+    fn tree_broadcast_pays_log_depth() {
+        let ic = flat_ic(16);
+        let topo = Topology::single_domain(16, &ic);
+        let ranks: Vec<usize> = (0..16).collect();
+        let tl = simulate_collective(&topo, AlgoChoice::Tree, Collective::Broadcast, &ranks, 1e9)
+            .unwrap();
+        // 4 serialized levels of full-payload transfers
+        let level = ic.intra_latency + 1e9 / ic.intra_bw;
+        assert!(rel_err(tl.makespan_s, 4.0 * level) < 0.05, "{}", tl.makespan_s);
+        // everyone received the payload exactly once
+        let received: f64 = (1..16).map(|h| tl.link_bytes[topo.path(0, h)[1]]).sum();
+        assert!((received - 15.0 * 1e9).abs() < 1.0);
+    }
+
+    #[test]
+    fn tree_allreduce_completes_and_covers_all_ranks() {
+        let ic = flat_ic(10); // non-power-of-two
+        let topo = Topology::single_domain(10, &ic);
+        let ranks: Vec<usize> = (0..10).collect();
+        let tl =
+            simulate_collective(&topo, AlgoChoice::Tree, Collective::AllReduce, &ranks, 1e9)
+                .unwrap();
+        assert!(tl.makespan_s > 0.0);
+        // every non-root rank both sent (reduce) and received (bcast)
+        for h in 1..10 {
+            assert!(tl.link_bytes[topo.path(h, 0)[0]] > 0.0, "rank {h} never sent");
+            assert!(tl.link_bytes[topo.path(0, h)[1]] > 0.0, "rank {h} never received");
+        }
+    }
+
+    #[test]
+    fn hierarchical_matches_the_analytic_phase_sum_on_two_tier() {
+        let ic = chips::h100().interconnect; // domain_size 8
+        let topo = Topology::two_tier(32, &ic);
+        let ranks: Vec<usize> = (0..32).collect();
+        let bytes = 4e9;
+        for c in [Collective::AllReduce, Collective::AllGather, Collective::AllToAll] {
+            let tl = simulate_collective(&topo, AlgoChoice::Auto, c, &ranks, bytes).unwrap();
+            // the analytic hierarchical bound with the AllToAll factor
+            // corrected to 1: compare loosely — the bandwidth terms
+            // dominate at 4 GB and must agree within 10%
+            let analytic = comms::hierarchical(c, bytes, 32, &ic);
+            assert!(
+                rel_err(tl.makespan_s, analytic) < 0.10,
+                "{c:?}: sim {} vs analytic {analytic}",
+                tl.makespan_s
+            );
+        }
+    }
+
+    #[test]
+    fn auto_resolves_by_pod_span() {
+        let ic = chips::h100().interconnect;
+        let topo = Topology::two_tier(16, &ic);
+        let intra: Vec<usize> = (0..8).collect();
+        let cross: Vec<usize> = (0..16).collect();
+        // intra-pod auto == ring lowering, flow for flow
+        let a = lower_collective(&topo, AlgoChoice::Auto, Collective::AllReduce, &intra, 1e9)
+            .unwrap();
+        let r = lower_collective(&topo, AlgoChoice::Ring, Collective::AllReduce, &intra, 1e9)
+            .unwrap();
+        assert_eq!(a.len(), r.len());
+        // cross-pod auto grows the hierarchical phase structure
+        let h = lower_collective(&topo, AlgoChoice::Auto, Collective::AllReduce, &cross, 1e9)
+            .unwrap();
+        assert!(h.len() > r.len());
+        // and rejects duplicate ranks
+        assert!(lower_collective(&topo, AlgoChoice::Ring, Collective::AllReduce, &[0, 0], 1.0)
+            .is_err());
+    }
+}

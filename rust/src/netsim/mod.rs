@@ -1,0 +1,281 @@
+//! Flow-level network simulation under the collective schedules — the
+//! ground truth the analytic [`crate::perfmodel::comms`] model is
+//! validated against (`docs/netsim.md`).
+//!
+//! The analytic model prices every mesh with the same payload
+//! identically, regardless of topology or contention.  This module
+//! executes the *same* [`crate::composer::CollectiveSchedule`] entries
+//! over an explicit link graph instead:
+//!
+//! * [`sim`] — the event-driven fluid engine: a deterministic
+//!   [`sim::EventQueue`], a virtual clock, and max-min fair-shared
+//!   link bandwidth between concurrent flows.
+//! * [`net`] — links and the progressive-filling fair-share
+//!   allocation.
+//! * [`topo`] — topology builders ([`Topology::single_domain`],
+//!   [`Topology::two_tier`], [`Topology::dumbbell`]) sized from a
+//!   [`crate::perfmodel::chips::Interconnect`], plus seeded per-host
+//!   straggler jitter.
+//! * [`algos`] — ring/tree/hierarchical lowering of each collective to
+//!   per-link flows.
+//!
+//! The schedule-level entry point is
+//! [`CollectiveSchedule::simulate`](crate::composer::CollectiveSchedule):
+//! each entry's `count` subgroup instances are laid out block-wise over
+//! the hosts (instance `k` on hosts `k·group .. (k+1)·group`), lowered
+//! together into one flow set, and run to completion; the entry's
+//! simulated seconds are the makespan times its `rounds` repetition
+//! factor.  Entries are independent simulations, so
+//! [`NetSimOptions::sim_threads`] fans them across worker threads with
+//! bit-identical results at any thread count (the determinism suite
+//! pins this).
+//!
+//! Consumers: `composer::mesh_sweep` adds topology-aware columns to
+//! `bench_mesh.json` (gated by `bench_check` against
+//! `benches/baseline.json`), `distributed::sim_bench` reports a
+//! simulated comm time next to its work counters, and
+//! `rust/tests/netsim_validation.rs` holds the tolerance contract
+//! against the analytic model.
+
+pub mod algos;
+pub mod net;
+pub mod sim;
+pub mod topo;
+
+pub use algos::{lower_collective, simulate_collective, AlgoChoice};
+pub use net::Link;
+pub use sim::{simulate_flows, EventQueue, FlowOutcome, FlowSpec, Timeline};
+pub use topo::{Topology, TopologyKind};
+
+use anyhow::Result;
+
+use crate::composer::schedule::{CollectiveSchedule, ScheduleEntry};
+
+/// How to run a schedule through the simulator.
+#[derive(Clone, Copy, Debug)]
+pub struct NetSimOptions {
+    /// Lowering family per entry ([`AlgoChoice::Auto`] picks
+    /// hierarchical exactly when the subgroup spans pods).
+    pub algo: AlgoChoice,
+    /// Worker threads to fan independent entries across (1 = inline).
+    /// Results are bit-identical at any setting.
+    pub sim_threads: usize,
+}
+
+impl Default for NetSimOptions {
+    fn default() -> Self {
+        NetSimOptions { algo: AlgoChoice::Auto, sim_threads: 1 }
+    }
+}
+
+/// One schedule entry's simulated outcome next to its analytic cost.
+#[derive(Clone, Debug)]
+pub struct EntrySim {
+    /// The entry's `tensor` label (join key for reporting).
+    pub tensor: String,
+    /// The entry's mesh axis.
+    pub axis: String,
+    /// The analytic cost the schedule carries (`ScheduleEntry::cost_s`).
+    pub analytic_s: f64,
+    /// Simulated seconds: flow-set makespan × the entry's `rounds`.
+    pub sim_s: f64,
+    /// Whether the entry hides behind compute (copied from the entry).
+    pub overlappable: bool,
+    /// Flows in the lowered set (all `count` instances).
+    pub flows: usize,
+    /// Events the fluid engine processed.
+    pub events: usize,
+}
+
+/// A schedule run through the simulator: per-entry outcomes plus the
+/// same exposed/overlappable totals the analytic schedule offers, so
+/// the two cost models compose step time identically.
+#[derive(Clone, Debug)]
+pub struct ScheduleSim {
+    pub entries: Vec<EntrySim>,
+}
+
+impl ScheduleSim {
+    /// Total simulated communication time (sum over entries).
+    pub fn total_sim_s(&self) -> f64 {
+        self.entries.iter().map(|e| e.sim_s).sum()
+    }
+
+    /// Simulated communication on the critical path.
+    pub fn exposed_sim_s(&self) -> f64 {
+        self.entries.iter().filter(|e| !e.overlappable).map(|e| e.sim_s).sum()
+    }
+
+    /// Simulated communication that can hide behind compute.
+    pub fn overlappable_sim_s(&self) -> f64 {
+        self.total_sim_s() - self.exposed_sim_s()
+    }
+
+    /// Step-time composition mirroring
+    /// [`CollectiveSchedule::step_time_s`], with simulated times.
+    pub fn step_time_s(&self, compute_s: f64) -> f64 {
+        compute_s + self.exposed_sim_s() + (self.overlappable_sim_s() - compute_s).max(0.0)
+    }
+}
+
+/// Simulate one entry: all `count` instances lowered into one flow set
+/// (instance `k` on the host block `k·group .. (k+1)·group`), run to
+/// completion, scaled by the entry's repetition factor.
+fn simulate_entry(entry: &ScheduleEntry, topo: &Topology, algo: AlgoChoice) -> Result<EntrySim> {
+    let done = |sim_s: f64, flows: usize, events: usize| EntrySim {
+        tensor: entry.tensor.clone(),
+        axis: entry.axis.clone(),
+        analytic_s: entry.cost_s,
+        sim_s,
+        overlappable: entry.overlappable,
+        flows,
+        events,
+    };
+    if entry.group < 2 {
+        return Ok(done(0.0, 0, 0));
+    }
+    anyhow::ensure!(
+        entry.group * entry.count <= topo.hosts(),
+        "entry {:?}/{}: {}x{} subgroup instances exceed the {}-host topology",
+        entry.collective,
+        entry.tensor,
+        entry.group,
+        entry.count,
+        topo.hosts()
+    );
+    let mut flows = Vec::new();
+    for k in 0..entry.count.max(1) {
+        let ranks: Vec<usize> = (k * entry.group..(k + 1) * entry.group).collect();
+        algos::lower_collective_into(
+            &mut flows,
+            topo,
+            algo,
+            entry.collective,
+            &ranks,
+            entry.bytes,
+        )?;
+    }
+    let tl = simulate_flows(topo, &flows)?;
+    Ok(done(tl.makespan_s * entry.rounds.max(1) as f64, flows.len(), tl.events))
+}
+
+impl CollectiveSchedule {
+    /// Execute every entry over `topo` with the given lowering and
+    /// return simulated per-entry times (see [`ScheduleSim`]).
+    pub fn simulate(&self, topo: &Topology, algo: AlgoChoice) -> Result<ScheduleSim> {
+        self.simulate_with(topo, &NetSimOptions { algo, sim_threads: 1 })
+    }
+
+    /// [`CollectiveSchedule::simulate`] with explicit options.  Entries
+    /// are independent simulations; `sim_threads > 1` fans them across
+    /// scoped worker threads and merges in entry order, so the result
+    /// is bit-identical at any thread count.
+    pub fn simulate_with(&self, topo: &Topology, opts: &NetSimOptions) -> Result<ScheduleSim> {
+        let threads = opts.sim_threads.max(1).min(self.entries.len().max(1));
+        let mut slots: Vec<Option<Result<EntrySim>>> =
+            (0..self.entries.len()).map(|_| None).collect();
+        if threads <= 1 {
+            for (i, e) in self.entries.iter().enumerate() {
+                slots[i] = Some(simulate_entry(e, topo, opts.algo));
+            }
+        } else {
+            let entries = &self.entries;
+            let algo = opts.algo;
+            std::thread::scope(|scope| {
+                let mut handles = Vec::with_capacity(threads);
+                for t in 0..threads {
+                    handles.push(scope.spawn(move || {
+                        entries
+                            .iter()
+                            .enumerate()
+                            .skip(t)
+                            .step_by(threads)
+                            .map(|(i, e)| (i, simulate_entry(e, topo, algo)))
+                            .collect::<Vec<_>>()
+                    }));
+                }
+                for h in handles {
+                    for (i, r) in h.join().expect("netsim worker panicked") {
+                        slots[i] = Some(r);
+                    }
+                }
+            });
+        }
+        let mut entries = Vec::with_capacity(slots.len());
+        for s in slots {
+            entries.push(s.expect("every entry simulated")?);
+        }
+        Ok(ScheduleSim { entries })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::composer::schedule::build_schedule;
+    use crate::perfmodel::chips;
+    use crate::perfmodel::Strategy;
+    use crate::perfmodel::TransformerShape;
+
+    fn sched() -> CollectiveSchedule {
+        let strat = Strategy { data: 4, fsdp: 8, tensor: 2, ..Strategy::default() };
+        build_schedule(
+            &strat,
+            &TransformerShape::llama2_7b(),
+            &["fsdp".to_string(), "model".to_string()],
+            256,
+            2048,
+            &chips::h100().interconnect,
+        )
+    }
+
+    #[test]
+    fn schedule_simulation_produces_positive_times() {
+        let topo = Topology::two_tier(64, &chips::h100().interconnect);
+        let sim = sched().simulate(&topo, AlgoChoice::Auto).unwrap();
+        assert_eq!(sim.entries.len(), sched().entries.len());
+        for e in &sim.entries {
+            assert!(e.sim_s > 0.0 && e.flows > 0, "{e:?}");
+        }
+        assert!(sim.total_sim_s() >= sim.exposed_sim_s());
+        assert!(sim.step_time_s(0.0) >= sim.total_sim_s() - 1e-12);
+    }
+
+    #[test]
+    fn thread_fanout_is_bit_identical() {
+        let topo = Topology::two_tier(64, &chips::h100().interconnect);
+        let s = sched();
+        let base = s.simulate_with(&topo, &NetSimOptions { algo: AlgoChoice::Auto, sim_threads: 1 })
+            .unwrap();
+        for threads in [2, 3, 8] {
+            let t = s
+                .simulate_with(&topo, &NetSimOptions { algo: AlgoChoice::Auto, sim_threads: threads })
+                .unwrap();
+            for (a, b) in base.entries.iter().zip(&t.entries) {
+                assert_eq!(a.sim_s.to_bits(), b.sim_s.to_bits(), "threads={threads}");
+                assert_eq!(a.events, b.events, "threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn oversized_subgroups_are_rejected() {
+        let topo = Topology::single_domain(8, &chips::h100().interconnect);
+        let err = sched().simulate(&topo, AlgoChoice::Ring);
+        assert!(err.is_err());
+        assert!(format!("{:#}", err.unwrap_err()).contains("exceed"));
+    }
+
+    #[test]
+    fn jittered_hosts_slow_the_simulation_deterministically() {
+        let ic = chips::h100().interconnect;
+        let clean = Topology::single_domain(64, &ic);
+        let jittered = Topology::single_domain(64, &ic).with_host_jitter(7, 0.3);
+        let s = sched();
+        let a = s.simulate(&clean, AlgoChoice::Ring).unwrap();
+        let b = s.simulate(&jittered, AlgoChoice::Ring).unwrap();
+        let c = s.simulate(&jittered, AlgoChoice::Ring).unwrap();
+        assert!(b.total_sim_s() > a.total_sim_s(), "stragglers must cost time");
+        assert_eq!(b.total_sim_s().to_bits(), c.total_sim_s().to_bits(), "replayable");
+    }
+}

@@ -1,0 +1,371 @@
+//! The event-driven fluid-flow engine: a virtual clock, a deterministic
+//! event queue, and max-min rate sharing between whatever flows are
+//! active at each instant.
+//!
+//! The model is flow-level ("fluid"), not packet-level: a flow is a
+//! byte count draining along a fixed link path at whatever rate the
+//! max-min allocation ([`super::net::fair_share_rates`]) gives it.  The
+//! clock jumps between *events* — a dependency-released flow becoming
+//! active, or an active flow draining to zero — and rates are
+//! recomputed only at events.  Two properties the test suite pins:
+//!
+//! * **Determinism.**  Events at the same virtual time pop in insertion
+//!   order ([`EventQueue`] breaks ties by sequence number), link scans
+//!   are index-ordered, and flows that finish at bit-equal times
+//!   complete in the same batch — so a timeline is a pure function of
+//!   (topology, flow set), bit-identical across reruns and thread
+//!   counts.
+//! * **Conservation.**  Every byte a flow carries is accounted to every
+//!   link on its path ([`Timeline::link_bytes`]); the property suite
+//!   checks the ledger against the flow set exactly.
+//!
+//! Latency is start-up, not per-round: a flow with
+//! [`FlowSpec::pays_latency`] waits its path's propagation latency
+//! between becoming ready and becoming active.  Collective lowerings
+//! (`super::algos`) set it on first-round flows only, modeling
+//! cut-through pipelining — a ring pays its wire latency once, not once
+//! per chunk, which is what keeps long rings within tolerance of the
+//! analytic `(n-1)/n · bytes / bw + latency` costs.
+
+use anyhow::Result;
+
+use super::topo::Topology;
+
+/// A deterministic min-heap of timed events: pops are nondecreasing in
+/// time, and ties pop in push order.
+#[derive(Debug)]
+pub struct EventQueue<T> {
+    // (time bits, sequence, payload); f64::to_bits preserves order for
+    // the nonnegative finite times the simulator produces, and the
+    // sequence number makes ties deterministic
+    heap: std::collections::BinaryHeap<std::cmp::Reverse<(u64, u64, EventSlot<T>)>>,
+    seq: u64,
+}
+
+/// Payload wrapper that never participates in heap ordering (the
+/// `(time, seq)` prefix is already unique).
+#[derive(Debug)]
+struct EventSlot<T>(T);
+
+impl<T> PartialEq for EventSlot<T> {
+    fn eq(&self, _: &Self) -> bool {
+        true
+    }
+}
+impl<T> Eq for EventSlot<T> {}
+impl<T> PartialOrd for EventSlot<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<T> Ord for EventSlot<T> {
+    fn cmp(&self, _: &Self) -> std::cmp::Ordering {
+        std::cmp::Ordering::Equal
+    }
+}
+
+impl<T> Default for EventQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> EventQueue<T> {
+    pub fn new() -> Self {
+        EventQueue { heap: std::collections::BinaryHeap::new(), seq: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Schedule `payload` at virtual time `time` (finite, >= 0).
+    pub fn push(&mut self, time: f64, payload: T) {
+        assert!(
+            time.is_finite() && time >= 0.0,
+            "EventQueue::push: time must be finite and nonnegative, got {time}"
+        );
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(std::cmp::Reverse((time.to_bits(), seq, EventSlot(payload))));
+    }
+
+    /// Earliest scheduled time, if any.
+    pub fn peek_time(&self) -> Option<f64> {
+        self.heap.peek().map(|std::cmp::Reverse((t, _, _))| f64::from_bits(*t))
+    }
+
+    /// Pop the earliest event (ties in push order).
+    pub fn pop(&mut self) -> Option<(f64, T)> {
+        self.heap
+            .pop()
+            .map(|std::cmp::Reverse((t, _, EventSlot(p)))| (f64::from_bits(t), p))
+    }
+}
+
+/// One flow: `bytes` from `src` to `dst`, eligible to start once every
+/// flow in `deps` has finished.
+#[derive(Clone, Debug)]
+pub struct FlowSpec {
+    pub src: usize,
+    pub dst: usize,
+    pub bytes: f64,
+    /// Indices (into the same flow slice) that must finish first.
+    pub deps: Vec<usize>,
+    /// Pay the path's propagation latency between readiness and
+    /// activation (set on round-0/root flows of a collective; follow-on
+    /// rounds are cut-through pipelined and start immediately).
+    pub pays_latency: bool,
+}
+
+/// Per-flow result: when it started draining and when it finished.
+#[derive(Clone, Copy, Debug)]
+pub struct FlowOutcome {
+    pub start_s: f64,
+    pub finish_s: f64,
+}
+
+/// A completed simulation: per-flow outcomes, the makespan, and the
+/// per-link byte ledger.
+#[derive(Clone, Debug)]
+pub struct Timeline {
+    pub flows: Vec<FlowOutcome>,
+    /// Finish time of the last flow (0 for an empty flow set).
+    pub makespan_s: f64,
+    /// Bytes carried by each link, indexed like
+    /// [`Topology::links`] — conserved against the flow set.
+    pub link_bytes: Vec<f64>,
+    /// Events processed (activations + completions), for
+    /// instrumentation.
+    pub events: usize,
+}
+
+/// Run a flow set to completion over `topo`.  Errors on malformed
+/// specs (bad endpoints, negative bytes, dangling or cyclic
+/// dependencies).
+pub fn simulate_flows(topo: &Topology, specs: &[FlowSpec]) -> Result<Timeline> {
+    let n = specs.len();
+    let links = topo.links();
+    let mut paths = Vec::with_capacity(n);
+    let mut children: Vec<Vec<usize>> = vec![Vec::new(); n];
+    let mut pending: Vec<usize> = vec![0; n];
+    for (i, f) in specs.iter().enumerate() {
+        anyhow::ensure!(f.bytes >= 0.0 && f.bytes.is_finite(), "flow {i}: bad byte count");
+        paths.push(topo.path(f.src, f.dst));
+        for &d in &f.deps {
+            anyhow::ensure!(d < n, "flow {i}: dependency {d} out of range");
+            anyhow::ensure!(d != i, "flow {i}: depends on itself");
+            children[d].push(i);
+            pending[i] += 1;
+        }
+    }
+
+    let mut outcomes = vec![FlowOutcome { start_s: f64::NAN, finish_s: f64::NAN }; n];
+    let mut remaining: Vec<f64> = specs.iter().map(|f| f.bytes).collect();
+    let mut link_bytes = vec![0.0f64; links.len()];
+    let mut queue: EventQueue<usize> = EventQueue::new();
+    let mut active: Vec<usize> = Vec::new();
+    let mut finished = vec![false; n];
+    let mut events = 0usize;
+    let mut now = 0.0f64;
+
+    let activation_time = |now: f64, i: usize, paths: &[Vec<usize>]| {
+        if specs[i].pays_latency {
+            now + topo.path_latency(&paths[i])
+        } else {
+            now
+        }
+    };
+    for i in 0..n {
+        if pending[i] == 0 {
+            queue.push(activation_time(0.0, i, &paths), i);
+        }
+    }
+
+    loop {
+        // next completion among active flows under current fair shares
+        let active_paths: Vec<&[usize]> = active.iter().map(|&i| paths[i].as_slice()).collect();
+        let rates = super::net::fair_share_rates(links, &active_paths);
+        let mut next_done = f64::INFINITY;
+        let done_at: Vec<f64> = active
+            .iter()
+            .zip(&rates)
+            .map(|(&i, &r)| {
+                let t = if r > 0.0 { now + remaining[i] / r } else { f64::INFINITY };
+                if t < next_done {
+                    next_done = t;
+                }
+                t
+            })
+            .collect();
+        let next_act = queue.peek_time().unwrap_or(f64::INFINITY);
+        let t = next_done.min(next_act);
+        if !t.is_finite() {
+            break;
+        }
+
+        // drain active flows to t, crediting every crossed link;
+        // bit-equal finishers complete together in this batch
+        let mut completed = Vec::new();
+        for (k, &i) in active.iter().enumerate() {
+            let delta = if done_at[k] <= t {
+                completed.push(i);
+                remaining[i]
+            } else {
+                rates[k] * (t - now)
+            };
+            remaining[i] -= delta;
+            for &l in &paths[i] {
+                link_bytes[l] += delta;
+            }
+        }
+        now = t;
+
+        let mut newly_done = completed;
+        while let Some(i) = newly_done.pop() {
+            finished[i] = true;
+            outcomes[i].finish_s = now;
+            events += 1;
+            for &c in &children[i] {
+                pending[c] -= 1;
+                if pending[c] == 0 {
+                    queue.push(activation_time(now, c, &paths), c);
+                }
+            }
+        }
+        active.retain(|&i| !finished[i]);
+
+        // activations due now (pushes from the completions above with
+        // zero latency land at exactly `now` and start this instant)
+        while queue.peek_time().is_some_and(|ta| ta <= now) {
+            let (_, i) = queue.pop().expect("peeked");
+            events += 1;
+            outcomes[i].start_s = now;
+            if remaining[i] == 0.0 {
+                // zero-byte flow: completes instantly, may release more
+                finished[i] = true;
+                outcomes[i].finish_s = now;
+                for &c in &children[i] {
+                    pending[c] -= 1;
+                    if pending[c] == 0 {
+                        queue.push(activation_time(now, c, &paths), c);
+                    }
+                }
+            } else {
+                active.push(i);
+            }
+        }
+        active.sort_unstable();
+    }
+
+    anyhow::ensure!(
+        finished.iter().all(|&f| f),
+        "simulate_flows: {} flows never ran (dependency cycle)",
+        finished.iter().filter(|&&f| !f).count()
+    );
+    let makespan_s = outcomes.iter().map(|o| o.finish_s).fold(0.0f64, f64::max);
+    Ok(Timeline { flows: outcomes, makespan_s, link_bytes, events })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perfmodel::chips;
+
+    fn topo(hosts: usize) -> Topology {
+        Topology::single_domain(hosts, &chips::h100().interconnect)
+    }
+
+    fn flow(src: usize, dst: usize, bytes: f64, deps: &[usize]) -> FlowSpec {
+        FlowSpec { src, dst, bytes, deps: deps.to_vec(), pays_latency: false }
+    }
+
+    #[test]
+    fn event_queue_pops_nondecreasing_with_fifo_ties() {
+        let mut q = EventQueue::new();
+        q.push(2.0, "late");
+        q.push(1.0, "a");
+        q.push(1.0, "b");
+        q.push(0.5, "first");
+        assert_eq!(q.peek_time(), Some(0.5));
+        let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|(_, p)| p)).collect();
+        assert_eq!(order, vec!["first", "a", "b", "late"]);
+    }
+
+    #[test]
+    fn lone_flow_takes_bytes_over_bandwidth() {
+        let t = topo(2);
+        let bw = t.links()[0].bw;
+        let tl = simulate_flows(&t, &[flow(0, 1, 9e9, &[])]).unwrap();
+        assert!((tl.makespan_s - 9e9 / bw).abs() < 1e-12);
+        assert_eq!(tl.link_bytes.iter().filter(|&&b| b > 0.0).count(), 2);
+    }
+
+    #[test]
+    fn latency_is_paid_once_at_activation() {
+        let t = topo(2);
+        let bw = t.links()[0].bw;
+        let lat = chips::h100().interconnect.intra_latency;
+        let mut f = flow(0, 1, 9e9, &[]);
+        f.pays_latency = true;
+        let tl = simulate_flows(&t, &[f]).unwrap();
+        assert!((tl.flows[0].start_s - lat).abs() < 1e-15);
+        assert!((tl.makespan_s - (lat + 9e9 / bw)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dependencies_serialize_flows() {
+        let t = topo(3);
+        let bw = t.links()[0].bw;
+        let tl =
+            simulate_flows(&t, &[flow(0, 1, 4e9, &[]), flow(1, 2, 4e9, &[0])]).unwrap();
+        assert!((tl.flows[1].start_s - tl.flows[0].finish_s).abs() < 1e-15);
+        assert!((tl.makespan_s - 2.0 * 4e9 / bw).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sharing_halves_the_rate() {
+        // two flows into the same destination host: its down link is
+        // the bottleneck, so each drains at bw/2
+        let t = topo(3);
+        let bw = t.links()[0].bw;
+        let tl = simulate_flows(&t, &[flow(0, 2, 6e9, &[]), flow(1, 2, 6e9, &[])]).unwrap();
+        assert!((tl.makespan_s - 12e9 / bw).abs() < 1e-12, "{}", tl.makespan_s);
+    }
+
+    #[test]
+    fn zero_byte_flows_release_dependents() {
+        let t = topo(3);
+        let tl =
+            simulate_flows(&t, &[flow(0, 1, 0.0, &[]), flow(1, 2, 1e9, &[0])]).unwrap();
+        assert_eq!(tl.flows[0].finish_s, 0.0);
+        assert!(tl.makespan_s > 0.0);
+    }
+
+    #[test]
+    fn dependency_cycles_are_an_error() {
+        let t = topo(2);
+        let err = simulate_flows(&t, &[flow(0, 1, 1.0, &[1]), flow(1, 0, 1.0, &[0])]);
+        assert!(err.is_err());
+        assert!(format!("{:#}", err.unwrap_err()).contains("cycle"));
+    }
+
+    #[test]
+    fn link_ledger_conserves_bytes() {
+        let t = topo(4);
+        let specs = vec![
+            flow(0, 1, 3e9, &[]),
+            flow(1, 2, 5e9, &[]),
+            flow(2, 3, 7e9, &[1]),
+            flow(3, 0, 2e9, &[0, 2]),
+        ];
+        let tl = simulate_flows(&t, &specs).unwrap();
+        let expected: f64 = specs.iter().map(|f| 2.0 * f.bytes).sum(); // 2 links/path
+        let total: f64 = tl.link_bytes.iter().sum();
+        assert!((total - expected).abs() < 1.0, "{total} vs {expected}");
+    }
+}

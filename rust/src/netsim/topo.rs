@@ -1,0 +1,259 @@
+//! Topology builders: explicit link graphs sized from a
+//! [`crate::perfmodel::chips::Interconnect`].
+//!
+//! Three shapes, one per modeling need (`docs/netsim.md`):
+//!
+//! * [`Topology::single_domain`] — every host hangs off one
+//!   non-blocking switch at `intra_bw`.  The contention-free reference:
+//!   on it the simulator must reproduce the analytic
+//!   [`crate::perfmodel::comms`] costs (the tolerance test's contract).
+//! * [`Topology::two_tier`] — pods of `domain_size` hosts, each pod
+//!   uplinked to a spine by a trunk of `pod_size × inter_bw` (every
+//!   chip contributes its slow-network injection bandwidth).  The
+//!   realistic shape behind the sweep's topology-aware columns.
+//! * [`Topology::dumbbell`] — two halves joined by a deliberately
+//!   oversubscribed trunk.  Exists to *create* contention the analytic
+//!   model cannot see; the validation suite asserts simulated time
+//!   strictly exceeds the analytic bound here.
+//!
+//! All links are directed; a host has one `up` link into its switch and
+//! one `down` link out of it, so a host-to-host path is `up → (trunks)
+//! → down` and intra-pod one-hop latency totals `intra_latency`
+//! (`intra_latency/2` per access link).  Cross-pod paths total
+//! `inter_latency`.  [`Topology::with_host_jitter`] derates per-host
+//! access bandwidth from a seeded [`crate::util::rng::Rng`] — the
+//! deterministic, replayable straggler model.
+
+use crate::perfmodel::chips::Interconnect;
+use crate::util::rng::Rng;
+
+use super::net::Link;
+
+/// Which builder produced a [`Topology`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TopologyKind {
+    SingleDomain,
+    TwoTier,
+    Dumbbell,
+}
+
+/// An explicit directed link graph with precomputed host access links
+/// and per-pod trunks, plus the routing rule that turns `(src, dst)`
+/// into a link path.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    kind: TopologyKind,
+    hosts: usize,
+    pod_size: usize,
+    links: Vec<Link>,
+    /// Per host: the link from the host into its switch.
+    up: Vec<usize>,
+    /// Per host: the link from its switch back to the host.
+    down: Vec<usize>,
+    /// Per pod: the trunk leaving the pod (empty for single-domain).
+    trunk_up: Vec<usize>,
+    /// Per pod: the trunk entering the pod (empty for single-domain;
+    /// for the dumbbell the two directed trunks serve both roles).
+    trunk_down: Vec<usize>,
+}
+
+impl Topology {
+    /// Every host on one non-blocking switch at `intra_bw`; one-hop
+    /// latency `intra_latency`.
+    pub fn single_domain(hosts: usize, ic: &Interconnect) -> Self {
+        assert!(hosts >= 1, "topology needs at least one host");
+        let mut links = Vec::with_capacity(2 * hosts);
+        let (mut up, mut down) = (Vec::with_capacity(hosts), Vec::with_capacity(hosts));
+        for h in 0..hosts {
+            up.push(links.len());
+            links.push(Link::new(ic.intra_bw, ic.intra_latency / 2.0, format!("up:{h}")));
+            down.push(links.len());
+            links.push(Link::new(ic.intra_bw, ic.intra_latency / 2.0, format!("down:{h}")));
+        }
+        Topology {
+            kind: TopologyKind::SingleDomain,
+            hosts,
+            pod_size: hosts,
+            links,
+            up,
+            down,
+            trunk_up: Vec::new(),
+            trunk_down: Vec::new(),
+        }
+    }
+
+    /// Pods of `ic.domain_size` hosts behind a spine; each pod's trunk
+    /// carries `pod_size × inter_bw` (the pod's aggregate slow-network
+    /// injection bandwidth), and a cross-pod path's latency totals
+    /// `inter_latency`.
+    pub fn two_tier(hosts: usize, ic: &Interconnect) -> Self {
+        let pod_size = ic.domain_size.max(1).min(hosts.max(1));
+        let pods = hosts.div_ceil(pod_size);
+        let trunk_bw = pod_size as f64 * ic.inter_bw;
+        let trunk_latency = ((ic.inter_latency - ic.intra_latency) / 2.0).max(0.0);
+        let mut t = Self::single_domain(hosts, ic);
+        t.kind = TopologyKind::TwoTier;
+        t.pod_size = pod_size;
+        for p in 0..pods {
+            t.trunk_up.push(t.links.len());
+            t.links.push(Link::new(trunk_bw, trunk_latency, format!("trunk-up:{p}")));
+            t.trunk_down.push(t.links.len());
+            t.links.push(Link::new(trunk_bw, trunk_latency, format!("trunk-down:{p}")));
+        }
+        t
+    }
+
+    /// Two halves joined by a single directed trunk pair whose capacity
+    /// is the half's aggregate injection bandwidth divided by
+    /// `oversubscription` — the contention fixture.  `oversubscription
+    /// = 1.0` is a full-bisection dumbbell; larger values starve
+    /// cross-half traffic.
+    pub fn dumbbell(hosts: usize, ic: &Interconnect, oversubscription: f64) -> Self {
+        assert!(hosts >= 2 && hosts % 2 == 0, "dumbbell needs an even host count");
+        assert!(oversubscription >= 1.0, "oversubscription is a ratio >= 1");
+        let half = hosts / 2;
+        let trunk_bw = half as f64 * ic.inter_bw / oversubscription;
+        let trunk_latency = ((ic.inter_latency - ic.intra_latency) / 2.0).max(0.0);
+        let mut t = Self::single_domain(hosts, ic);
+        t.kind = TopologyKind::Dumbbell;
+        t.pod_size = half;
+        // one directed trunk per crossing direction; a cross path uses
+        // exactly one of them, so it serves as both pods' up/down trunk
+        for p in 0..2 {
+            let l = t.links.len();
+            t.links.push(Link::new(trunk_bw, 2.0 * trunk_latency, format!("trunk:{p}>{}", 1 - p)));
+            t.trunk_up.push(l);
+        }
+        t.trunk_down = vec![t.trunk_up[1], t.trunk_up[0]];
+        t
+    }
+
+    /// Derate each host's access links by up to `amount` (a fraction in
+    /// `[0, 1)`), drawn per host from a seeded RNG — the deterministic
+    /// straggler model.  Same seed, same topology, bit-identical
+    /// timelines.
+    pub fn with_host_jitter(mut self, seed: u64, amount: f64) -> Self {
+        assert!((0.0..1.0).contains(&amount), "jitter amount must be in [0, 1)");
+        let mut rng = Rng::new(seed);
+        for h in 0..self.hosts {
+            let derate = 1.0 - amount * rng.next_f64();
+            self.links[self.up[h]].bw *= derate;
+            self.links[self.down[h]].bw *= derate;
+        }
+        self
+    }
+
+    pub fn kind(&self) -> TopologyKind {
+        self.kind
+    }
+
+    pub fn hosts(&self) -> usize {
+        self.hosts
+    }
+
+    pub fn links(&self) -> &[Link] {
+        &self.links
+    }
+
+    /// Hosts per pod (the whole machine for single-domain).
+    pub fn pod_size(&self) -> usize {
+        self.pod_size
+    }
+
+    pub fn pod_of(&self, host: usize) -> usize {
+        assert!(host < self.hosts, "host {host} out of range ({})", self.hosts);
+        host / self.pod_size
+    }
+
+    /// The directed link path from `src` to `dst` (both hosts).
+    pub fn path(&self, src: usize, dst: usize) -> Vec<usize> {
+        assert!(src < self.hosts && dst < self.hosts, "path endpoints out of range");
+        assert_ne!(src, dst, "a flow needs distinct endpoints");
+        let (sp, dp) = (self.pod_of(src), self.pod_of(dst));
+        if sp == dp || self.kind == TopologyKind::SingleDomain {
+            return vec![self.up[src], self.down[dst]];
+        }
+        match self.kind {
+            TopologyKind::SingleDomain => unreachable!(),
+            TopologyKind::TwoTier => {
+                vec![self.up[src], self.trunk_up[sp], self.trunk_down[dp], self.down[dst]]
+            }
+            // the dumbbell trunk is a single directed hop
+            TopologyKind::Dumbbell => vec![self.up[src], self.trunk_up[sp], self.down[dst]],
+        }
+    }
+
+    /// Total propagation latency along a path.
+    pub fn path_latency(&self, path: &[usize]) -> f64 {
+        path.iter().map(|&l| self.links[l].latency).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perfmodel::chips;
+
+    fn ic() -> Interconnect {
+        chips::h100().interconnect
+    }
+
+    #[test]
+    fn single_domain_paths_pay_intra_latency() {
+        let t = Topology::single_domain(16, &ic());
+        assert_eq!(t.kind(), TopologyKind::SingleDomain);
+        let p = t.path(3, 11);
+        assert_eq!(p.len(), 2);
+        assert_eq!(t.path_latency(&p), ic().intra_latency);
+    }
+
+    #[test]
+    fn two_tier_pods_and_trunks() {
+        let t = Topology::two_tier(64, &ic()); // domain_size 8 -> 8 pods
+        assert_eq!(t.pod_size(), 8);
+        assert_eq!(t.pod_of(7), 0);
+        assert_eq!(t.pod_of(8), 1);
+        // intra-pod: two hops, intra latency
+        let p = t.path(0, 7);
+        assert_eq!(p.len(), 2);
+        assert_eq!(t.path_latency(&p), ic().intra_latency);
+        // cross-pod: four hops totalling inter latency
+        let p = t.path(0, 63);
+        assert_eq!(p.len(), 4);
+        assert!((t.path_latency(&p) - ic().inter_latency).abs() < 1e-15);
+        // trunk carries the pod's aggregate injection bandwidth
+        let trunk = &t.links()[p[1]];
+        assert_eq!(trunk.bw, 8.0 * ic().inter_bw);
+    }
+
+    #[test]
+    fn dumbbell_oversubscription_shrinks_the_trunk() {
+        let full = Topology::dumbbell(16, &ic(), 1.0);
+        let starved = Topology::dumbbell(16, &ic(), 4.0);
+        let trunk_bw = |t: &Topology| t.links()[t.path(0, 15)[1]].bw;
+        assert_eq!(trunk_bw(&full), 8.0 * ic().inter_bw);
+        assert_eq!(trunk_bw(&starved), 2.0 * ic().inter_bw);
+        // cross paths use one directed trunk; same-half paths skip it
+        assert_eq!(full.path(0, 15).len(), 3);
+        assert_eq!(full.path(0, 7).len(), 2);
+        assert_ne!(full.path(0, 8)[1], full.path(8, 0)[1], "directions are separate links");
+    }
+
+    #[test]
+    fn jitter_is_seeded_and_bounded() {
+        let base = Topology::single_domain(32, &ic());
+        let a = base.clone().with_host_jitter(9, 0.2);
+        let b = base.clone().with_host_jitter(9, 0.2);
+        let c = base.clone().with_host_jitter(10, 0.2);
+        let mut differs_across_seeds = false;
+        for l in 0..base.links().len() {
+            let (bw0, bw_a) = (base.links()[l].bw, a.links()[l].bw);
+            assert_eq!(bw_a.to_bits(), b.links()[l].bw.to_bits(), "same seed must replay");
+            assert!(bw_a <= bw0 && bw_a >= bw0 * 0.8, "derate out of range: {bw_a} vs {bw0}");
+            if bw_a.to_bits() != c.links()[l].bw.to_bits() {
+                differs_across_seeds = true;
+            }
+        }
+        assert!(differs_across_seeds, "different seeds must jitter differently");
+    }
+}

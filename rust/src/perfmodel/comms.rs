@@ -5,6 +5,7 @@
 //!   all-reduce      2·bytes·(n-1)/n / bw
 //!   all-gather      bytes·(n-1)/n / bw
 //!   reduce-scatter  bytes·(n-1)/n / bw
+//!   all-to-all      bytes / bw          (full payload on the access link)
 //! plus a per-hop latency term.  When a collective spans both the fast
 //! domain and the slow network, the slow phase dominates (hierarchical
 //! reduction: intra-domain reduce, inter-domain exchange, intra-domain
@@ -26,7 +27,13 @@ fn payload_factor(c: Collective, n: f64) -> f64 {
     match c {
         Collective::AllReduce => 2.0 * (n - 1.0) / n,
         Collective::AllGather | Collective::ReduceScatter => (n - 1.0) / n,
-        Collective::AllToAll => (n - 1.0) / n,
+        // All-to-all-v over a switch: each rank injects bytes/(n-1) to
+        // every peer, so the access link carries the full payload — the
+        // ring (n-1)/n discount does not apply (routing is
+        // data-dependent; no uniform 1/n share stays local).  The flow
+        // simulator's single-domain run pins this factor
+        // (netsim::algos::alltoall_uplink_carries_the_full_payload).
+        Collective::AllToAll => 1.0,
         Collective::Broadcast => 1.0,
         Collective::P2P => 1.0,
     }
@@ -148,6 +155,25 @@ mod tests {
         let a = intra_domain(Collective::AllGather, 1e9, 512, &chips::tpu_v5p().interconnect);
         let b = intra_domain(Collective::AllGather, 1e9, 1024, &chips::tpu_v5p().interconnect);
         assert!((b - a) / a < 0.02);
+    }
+
+    #[test]
+    fn alltoall_prices_the_full_payload() {
+        // Regression: all-to-all used the ring (n-1)/n discount, which
+        // undercharges switch-based all-to-all-v where the access link
+        // carries the whole payload.  Pin factor 1.0 against the ring
+        // collectives, which keep their discount.
+        let n = 8;
+        let bytes = 1e9;
+        let ic = ic();
+        let a2a = intra_domain(Collective::AllToAll, bytes, n, &ic);
+        let ag = intra_domain(Collective::AllGather, bytes, n, &ic);
+        let lat = ic.intra_latency * (n as f64).log2().ceil();
+        assert_eq!((a2a - lat) * ic.intra_bw, bytes, "all-to-all factor must be exactly 1");
+        assert!(
+            ((a2a - lat) / (ag - lat) - n as f64 / (n as f64 - 1.0)).abs() < 1e-12,
+            "all-gather keeps the ring discount"
+        );
     }
 
     #[test]

@@ -71,8 +71,33 @@ fn committed_baseline_is_structurally_current() {
     // same feasibility split, AllToAll coverage on the expert rows), and
     // carry every metric the comparison reads — so `bench_check` in CI
     // can never silently skip a point
-    let baseline = committed_baseline();
+    let path = axlearn::repo_root().join("benches/baseline.json");
+    let mut baseline = committed_baseline();
     let points = mesh_sweep_points();
+    // One-time migration, same pattern as the sim_points section below:
+    // a baseline predating the flow simulator lacks the netsim_*
+    // columns (and the AllToAll payload-factor fix the simulator
+    // grounded), so the refreshed sweep is materialized on first run
+    // (or with UPDATE_GOLDEN=1) and committed; `bench_check` gates the
+    // values from then on.
+    let needs_netsim = baseline
+        .get("points")
+        .and_then(|p| p.as_arr())
+        .map(|arr| arr.iter().any(|b| b.get("netsim_tiered_s").is_none()))
+        .unwrap_or(true);
+    if std::env::var("UPDATE_GOLDEN").is_ok() || needs_netsim {
+        let mut doc = mesh_sweep_doc(&points);
+        if let (Json::Obj(map), Some(sp)) = (&mut doc, baseline.get("sim_points")) {
+            map.insert("sim_points".into(), sp.clone());
+        }
+        // write-then-rename: sibling tests read the file concurrently
+        let tmp = path.with_extension("json.points.tmp");
+        std::fs::write(&tmp, doc.to_string() + "\n")
+            .unwrap_or_else(|e| panic!("writing {}: {e}", tmp.display()));
+        std::fs::rename(&tmp, &path)
+            .unwrap_or_else(|e| panic!("renaming {}: {e}", tmp.display()));
+        baseline = doc;
+    }
     let base_points = baseline
         .get("points")
         .and_then(|p| p.as_arr())
@@ -89,7 +114,16 @@ fn committed_baseline_is_structurally_current() {
             "{}: feasibility split changed; rerun bench_check --write",
             p.mesh
         );
-        for metric in ["bubble", "compute_s", "comm_s", "exposed_comm_s", "alltoall_s", "step_s"] {
+        for metric in [
+            "bubble",
+            "compute_s",
+            "comm_s",
+            "exposed_comm_s",
+            "alltoall_s",
+            "step_s",
+            "netsim_tiered_s",
+            "netsim_exposed_s",
+        ] {
             assert!(
                 b.get(metric).and_then(|v| v.as_f64()).is_some(),
                 "{}: baseline lacks {metric}",
@@ -105,6 +139,25 @@ fn committed_baseline_is_structurally_current() {
             );
         }
     }
+}
+
+#[test]
+fn injected_netsim_contention_regression_fails_the_gate() {
+    // the tentpole acceptance check: a regression visible only to the
+    // flow simulator (the analytic columns untouched — e.g. a lowering
+    // that starts contending on a shared trunk) must still fail the
+    // gate via the topology-aware columns
+    let points = mesh_sweep_points();
+    let baseline = Json::parse(&mesh_sweep_doc(&points).to_string()).unwrap();
+    let mut tampered = points.clone();
+    let idx = tampered.iter().position(|p| p.netsim_tiered_s > 0.0).expect("a simulated mesh");
+    tampered[idx].netsim_tiered_s *= 1.25;
+    let drifts = compare_to_baseline(&tampered, &baseline, BASELINE_DEFAULT_TOL);
+    assert_eq!(drifts.len(), 1, "{drifts:?}");
+    assert!(
+        drifts[0].contains("netsim_tiered_s") && drifts[0].contains(&tampered[idx].mesh),
+        "{drifts:?}"
+    );
 }
 
 #[test]

@@ -261,6 +261,134 @@ fn moe_dispatch_combine_round_trips_over_random_shapes() {
     assert!(c.all_to_all(&[vec![vec![1.0]], vec![vec![2.0]]]).is_err());
 }
 
+/// Random acyclic flow set over `hosts`: deps only point backwards, so
+/// every generated set is valid by construction; sources, sinks, byte
+/// counts, latency flags, and fan-in are all randomized.
+fn random_flow_set(rng: &mut Rng, hosts: usize, n: usize) -> Vec<axlearn::netsim::FlowSpec> {
+    (0..n)
+        .map(|i| {
+            let src = rng.gen_range(0, hosts as u64) as usize;
+            let mut dst = rng.gen_range(0, hosts as u64) as usize;
+            if dst == src {
+                dst = (dst + 1) % hosts;
+            }
+            let deps = if i > 0 {
+                (0..rng.gen_range(0, 3)).map(|_| rng.gen_range(0, i as u64) as usize).collect()
+            } else {
+                Vec::new()
+            };
+            axlearn::netsim::FlowSpec {
+                src,
+                dst,
+                bytes: rng.gen_f64(1.0, 4e9),
+                deps,
+                pays_latency: rng.gen_bool(0.5),
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn netsim_link_ledger_conserves_bytes_over_random_flow_sets() {
+    // every byte a flow carries must be accounted to every link on its
+    // path — no more, no less — regardless of contention, dependency
+    // structure, or topology shape
+    use axlearn::netsim::{simulate_flows, Topology};
+    use axlearn::perfmodel::chips;
+    let ic = chips::h100().interconnect;
+    for seed in [5u64, 6, 7] {
+        let mut rng = Rng::new(seed);
+        for topo in [
+            Topology::single_domain(24, &ic),
+            Topology::two_tier(24, &ic),
+            Topology::dumbbell(24, &ic, 2.0),
+        ] {
+            let specs = random_flow_set(&mut rng, 24, 80);
+            let tl = simulate_flows(&topo, &specs).unwrap();
+            let mut expected = vec![0.0f64; topo.links().len()];
+            for f in &specs {
+                for &l in &topo.path(f.src, f.dst) {
+                    expected[l] += f.bytes;
+                }
+            }
+            for (l, (got, want)) in tl.link_bytes.iter().zip(&expected).enumerate() {
+                assert!(
+                    (got - want).abs() <= 1e-6 * want.max(1.0),
+                    "seed {seed} {:?} link {l}: {got} vs {want}",
+                    topo.kind()
+                );
+            }
+            // and the timeline is complete: every flow started and
+            // finished, in dependency order
+            for (i, f) in specs.iter().enumerate() {
+                let o = tl.flows[i];
+                assert!(o.finish_s >= o.start_s, "flow {i}: {o:?}");
+                for &d in &f.deps {
+                    assert!(
+                        tl.flows[d].finish_s <= o.start_s,
+                        "flow {i} started before dep {d} finished"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn netsim_event_queue_pops_nondecreasing_with_fifo_ties() {
+    // random pushes from a small discrete time set (plenty of ties):
+    // pops must be nondecreasing in time, and same-time events must pop
+    // in push order — the determinism the whole engine rests on
+    use axlearn::netsim::EventQueue;
+    let mut rng = Rng::new(41);
+    for _ in 0..20 {
+        let mut q = EventQueue::new();
+        let n = 200 + rng.gen_range(0, 200) as usize;
+        for id in 0..n {
+            q.push(rng.gen_range(0, 16) as f64 * 0.25, id);
+        }
+        let mut last: Option<(f64, usize)> = None;
+        for _ in 0..n {
+            let (t, id) = q.pop().unwrap();
+            if let Some((lt, lid)) = last {
+                assert!(t >= lt, "time went backwards: {t} < {lt}");
+                if t == lt {
+                    assert!(id > lid, "tie broke FIFO order: {id} popped after {lid}");
+                }
+            }
+            last = Some((t, id));
+        }
+        assert!(q.is_empty() && q.pop().is_none());
+    }
+}
+
+#[test]
+fn netsim_jittered_topologies_replay_bit_identical_by_seed() {
+    // the straggler model is deterministic: same seed, same derated
+    // fabric, bit-identical timeline — and different seeds actually
+    // produce different stragglers
+    use axlearn::netsim::{simulate_flows, Topology};
+    use axlearn::perfmodel::chips;
+    let ic = chips::h100().interconnect;
+    let mut rng = Rng::new(77);
+    let specs = random_flow_set(&mut rng, 16, 60);
+    let mut distinct = std::collections::HashSet::new();
+    for seed in [1u64, 2, 3, 4] {
+        let jittered = || Topology::single_domain(16, &ic).with_host_jitter(seed, 0.4);
+        let a = simulate_flows(&jittered(), &specs).unwrap();
+        let b = simulate_flows(&jittered(), &specs).unwrap();
+        assert_eq!(a.makespan_s.to_bits(), b.makespan_s.to_bits(), "seed {seed}");
+        for (x, y) in a.flows.iter().zip(&b.flows) {
+            assert_eq!(x.finish_s.to_bits(), y.finish_s.to_bits(), "seed {seed}");
+        }
+        for (x, y) in a.link_bytes.iter().zip(&b.link_bytes) {
+            assert_eq!(x.to_bits(), y.to_bits(), "seed {seed}");
+        }
+        distinct.insert(a.makespan_s.to_bits());
+    }
+    assert!(distinct.len() > 1, "different seeds must jitter differently");
+}
+
 #[test]
 fn golden_serialization_is_injective_over_presets() {
     use axlearn::config::golden::to_golden_string;
