@@ -12,9 +12,18 @@
 //! static schedule verifier (`axlearn::composer::verify`) and the gate
 //! fails on any diagnostic.
 //!
+//! The gate also replans the auto-sharding planner's canonical cases
+//! (`axlearn::composer::planner`) and compares the chosen plans, their
+//! cost columns, and the exact search counters against the baseline's
+//! `planner_points` section — a pruning-bound regression surfaces as a
+//! worse chosen plan or a counter drift — and, in optimized builds,
+//! enforces the per-case planning latency budget
+//! ([`axlearn::composer::planner::PLANNER_LATENCY_BUDGET_S`]).
+//!
 //! ```text
 //! bench_check [--baseline <path>] [--json <bench_mesh.json>]
-//!             [--sim-json <bench_sim.json>] [--tol <rel>] [--write]
+//!             [--sim-json <bench_sim.json>]
+//!             [--planner-json <bench_planner.json>] [--tol <rel>] [--write]
 //! ```
 //!
 //! * `--baseline` — baseline document (default `benches/baseline.json`
@@ -24,6 +33,8 @@
 //!   recomputed points, guarding the bench's own output path.
 //! * `--sim-json` — likewise for the `bench_sim` artifact's counter
 //!   section (its wall-clock series is reported, never gated).
+//! * `--planner-json` — likewise for the `bench_planner` artifact's
+//!   `planner_points` section.
 //! * `--tol` — relative drift tolerance for the step-time sweep
 //!   (default [`axlearn::composer::BASELINE_DEFAULT_TOL`]); the counter
 //!   sweep is always compared exactly.
@@ -38,6 +49,9 @@
 use std::path::PathBuf;
 use std::process::ExitCode;
 
+use axlearn::composer::planner::{
+    compare_planner_to_baseline, planner_bench_points, planner_doc, PLANNER_LATENCY_BUDGET_S,
+};
 use axlearn::composer::{
     compare_to_baseline, lint_sweep, mesh_sweep_doc, mesh_sweep_points, BASELINE_DEFAULT_TOL,
 };
@@ -47,7 +61,7 @@ use axlearn::util::json::Json;
 fn usage() -> ExitCode {
     eprintln!(
         "usage: bench_check [--baseline <path>] [--json <path>] [--sim-json <path>] \
-         [--tol <rel>] [--write]"
+         [--planner-json <path>] [--tol <rel>] [--write]"
     );
     ExitCode::from(2)
 }
@@ -56,6 +70,7 @@ fn main() -> ExitCode {
     let mut baseline_path: PathBuf = axlearn::repo_root().join("benches/baseline.json");
     let mut bench_json: Option<PathBuf> = None;
     let mut sim_json: Option<PathBuf> = None;
+    let mut planner_json: Option<PathBuf> = None;
     let mut tol = BASELINE_DEFAULT_TOL;
     let mut write = false;
     let mut args = std::env::args().skip(1);
@@ -71,6 +86,10 @@ fn main() -> ExitCode {
             },
             "--sim-json" => match args.next() {
                 Some(p) => sim_json = Some(PathBuf::from(p)),
+                None => return usage(),
+            },
+            "--planner-json" => match args.next() {
+                Some(p) => planner_json = Some(PathBuf::from(p)),
                 None => return usage(),
             },
             "--tol" => match args.next().and_then(|t| t.parse::<f64>().ok()) {
@@ -103,11 +122,16 @@ fn main() -> ExitCode {
 
     let points = mesh_sweep_points();
     let sim_points = sim_counter_points();
+    let planner_points = planner_bench_points();
     if write {
         let mut doc = mesh_sweep_doc(&points);
         let sim = sim_doc(&sim_points);
         if let (Json::Obj(map), Some(sp)) = (&mut doc, sim.get("sim_points")) {
             map.insert("sim_points".into(), sp.clone());
+        }
+        let planner = planner_doc(&planner_points);
+        if let (Json::Obj(map), Some(pp)) = (&mut doc, planner.get("planner_points")) {
+            map.insert("planner_points".into(), pp.clone());
         }
         let text = doc.to_string();
         if let Err(e) = std::fs::write(&baseline_path, text + "\n") {
@@ -115,21 +139,52 @@ fn main() -> ExitCode {
             return ExitCode::from(2);
         }
         println!(
-            "bench_check: wrote {} ({} step-time points, {} counter points) — \
-             commit it with the change that moved the numbers",
+            "bench_check: wrote {} ({} step-time points, {} counter points, \
+             {} planner points) — commit it with the change that moved the numbers",
             baseline_path.display(),
             points.len(),
-            sim_points.len()
+            sim_points.len(),
+            planner_points.len()
         );
         return ExitCode::SUCCESS;
     }
 
     let mut failed = false;
-    // (label, path, gate step-time sweep?, gate counter sweep?)
-    for (label, path, mesh_gate, sim_gate) in
-        std::iter::once(("baseline", baseline_path.clone(), true, true))
-            .chain(bench_json.into_iter().map(|p| ("bench artifact", p, true, false)))
-            .chain(sim_json.into_iter().map(|p| ("sim artifact", p, false, true)))
+
+    // Planner latency: the ISSUE's "16384 chips in under 5 seconds"
+    // acceptance bar.  Wall-clock is only meaningful in optimized
+    // builds; debug builds report the numbers without gating them.
+    for p in &planner_points {
+        println!(
+            "bench_check: planner {} -> {} (mb={}, remat={}) in {:.3}s",
+            p.case, p.mesh, p.microbatches, p.remat, p.plan_wall_s
+        );
+        if p.plan_wall_s >= PLANNER_LATENCY_BUDGET_S {
+            if cfg!(debug_assertions) {
+                println!(
+                    "bench_check: (debug build — {:.3}s over the {PLANNER_LATENCY_BUDGET_S}s \
+                     budget is reported, not gated)",
+                    p.plan_wall_s
+                );
+            } else {
+                eprintln!(
+                    "bench_check: planner case {} took {:.3}s, budget is \
+                     {PLANNER_LATENCY_BUDGET_S}s",
+                    p.case, p.plan_wall_s
+                );
+                failed = true;
+            }
+        }
+    }
+
+    // (label, path, gate step-time sweep?, gate counter sweep?, gate planner?)
+    for (label, path, mesh_gate, sim_gate, planner_gate) in
+        std::iter::once(("baseline", baseline_path.clone(), true, true, true))
+            .chain(bench_json.into_iter().map(|p| ("bench artifact", p, true, false, false)))
+            .chain(sim_json.into_iter().map(|p| ("sim artifact", p, false, true, false)))
+            .chain(
+                planner_json.into_iter().map(|p| ("planner artifact", p, false, false, true)),
+            )
     {
         let text = match std::fs::read_to_string(&path) {
             Ok(t) => t,
@@ -155,14 +210,18 @@ fn main() -> ExitCode {
         if sim_gate {
             drifts.extend(compare_sim_to_baseline(&sim_points, &doc));
         }
+        if planner_gate {
+            drifts.extend(compare_planner_to_baseline(&planner_points, &doc, tol));
+        }
         if drifts.is_empty() {
             println!(
                 "bench_check: {label} {} OK ({} points within {:.3}% relative; \
-                 {} counter points exact)",
+                 {} counter points exact; {} planner points)",
                 path.display(),
                 if mesh_gate { points.len() } else { 0 },
                 tol * 100.0,
-                if sim_gate { sim_points.len() } else { 0 }
+                if sim_gate { sim_points.len() } else { 0 },
+                if planner_gate { planner_points.len() } else { 0 }
             );
         } else {
             eprintln!(

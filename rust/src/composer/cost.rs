@@ -1,0 +1,276 @@
+//! The **one** leaf cost evaluation shared by the exhaustive mesh sweep
+//! (`mesh_sweep.rs`) and the branch-and-bound planner (`planner.rs`).
+//!
+//! Both consumers price a candidate `(data, pipeline, fsdp, model,
+//! expert, microbatches, remat)` point with exactly this function chain:
+//! `build_schedule` → 1F1B grid → AllToAll sum → `estimate_step` →
+//! `step_s = schedule.step_time_s(compute_s) / (1 − bubble)`.  Keeping
+//! the chain in one place is what makes the planner-vs-sweep
+//! equivalence proof (`rust/tests/planner_suite.rs`) durable: the two
+//! cost columns *cannot* drift apart, because there is only one column.
+//!
+//! [`candidate_order`] is the shared total order over candidates.  Exact
+//! `step_s` ties are real (every non-TP dense mesh whose state and
+//! activations fit under `remat=none` costs exactly `compute_s`), so the
+//! comparator breaks ties deterministically by axis preference; the
+//! planner and its own exhaustive enumeration therefore agree on a
+//! unique winner, bit-for-bit.
+
+use std::cmp::Ordering;
+
+use anyhow::Result;
+
+use crate::perfmodel::chips::ChipSpec;
+use crate::perfmodel::comms::Collective;
+use crate::perfmodel::estimator::{estimate_step, StepSpec, SystemProfile};
+use crate::perfmodel::{Strategy, TransformerShape};
+
+use super::schedule::{build_schedule, CollectiveSchedule, PipelineSchedule};
+
+/// The fixed workload + platform context a candidate is priced against.
+#[derive(Clone, Debug)]
+pub struct CostModel<'a> {
+    pub chip: &'a ChipSpec,
+    pub profile: &'a SystemProfile,
+    /// Mesh axes that shard parameters (the sweep's `["fsdp","model"]`).
+    pub shard_axes: Vec<String>,
+    pub global_batch: usize,
+    pub seq_len: usize,
+    /// "none" | "int8" | "fp8"
+    pub quantization: String,
+}
+
+impl<'a> CostModel<'a> {
+    pub fn new(
+        chip: &'a ChipSpec,
+        profile: &'a SystemProfile,
+        global_batch: usize,
+        seq_len: usize,
+    ) -> Self {
+        CostModel {
+            chip,
+            profile,
+            shard_axes: vec!["fsdp".to_string(), "model".to_string()],
+            global_batch,
+            seq_len,
+            quantization: "none".to_string(),
+        }
+    }
+}
+
+/// One candidate's cost columns — the same columns `MeshSweepPoint`
+/// reports, plus the remat request/resolution pair the planner searches.
+#[derive(Clone, Debug)]
+pub struct CandidateCost {
+    /// `"dxpxfxmxe"` — the join key everywhere.
+    pub mesh: String,
+    pub data: usize,
+    pub pipeline: usize,
+    pub fsdp: usize,
+    pub model: usize,
+    pub expert: usize,
+    pub microbatches: usize,
+    pub moe: bool,
+    /// Whether the plan fit in HBM (`false` = the estimator's OOM row).
+    pub fits: bool,
+    /// The estimator's OOM message when `!fits`.
+    pub oom: Option<String>,
+    /// The remat policy requested ("auto" or an explicit policy).
+    pub remat_request: String,
+    /// The policy the estimator resolved ("" when OOM).
+    pub remat_resolved: String,
+    pub bubble: f64,
+    pub compute_s: f64,
+    pub comm_s: f64,
+    pub exposed_comm_s: f64,
+    pub alltoall_s: f64,
+    pub alltoall_analytic_s: f64,
+    /// Composed step time (0 when OOM):
+    /// `schedule.step_time_s(compute_s) / (1 − bubble)`.
+    pub step_s: f64,
+    pub hbm_used_bytes: f64,
+    pub schedule_entries: usize,
+}
+
+/// A priced candidate together with the schedules that priced it, so the
+/// planner can re-rank the survivors through the flow simulator and
+/// verify the winner without rebuilding anything.
+#[derive(Clone, Debug)]
+pub struct CandidateEval {
+    pub cost: CandidateCost,
+    pub schedule: CollectiveSchedule,
+    pub pipeline: PipelineSchedule,
+}
+
+/// Price one candidate.  This is `mesh_sweep_points`' per-row body,
+/// verbatim — the regression tests in `planner_suite.rs` pin the two
+/// bit-equal.  An estimator error that is not an OOM (and a microbatch
+/// grid that does not validate) propagates as `Err`; an OOM becomes a
+/// `fits = false` row.
+pub fn evaluate_candidate(
+    model: &CostModel,
+    shape: &TransformerShape,
+    strat: &Strategy,
+    remat_policy: &str,
+) -> Result<CandidateEval> {
+    let (d, p, f, m, e) =
+        (strat.data, strat.pipeline, strat.fsdp, strat.tensor, strat.expert);
+    let sched = build_schedule(
+        strat,
+        shape,
+        &model.shard_axes,
+        model.global_batch,
+        model.seq_len,
+        &model.chip.interconnect,
+    );
+    let pipe = PipelineSchedule::one_f_one_b(strat.pipeline, strat.microbatches.max(1))?;
+    let bubble = pipe.bubble_fraction();
+    let alltoall_s: f64 = sched
+        .entries
+        .iter()
+        .filter(|en| en.collective == Collective::AllToAll)
+        .map(|en| en.cost_s)
+        .sum();
+    // the estimator's expert-dispatch cost, via the same shared helpers
+    // `estimate_step` and `build_schedule` both call
+    let alltoall_analytic_s = if e > 1 {
+        let tok_bytes = crate::perfmodel::comms::expert_tok_bytes(
+            model.global_batch,
+            model.seq_len,
+            strat.data * strat.fsdp,
+            shape.model_dim,
+        );
+        let layers_resident = shape.num_layers as f64 / p as f64;
+        crate::perfmodel::comms::expert_alltoall_cost(
+            tok_bytes,
+            layers_resident,
+            e,
+            &model.chip.interconnect,
+        )
+    } else {
+        0.0
+    };
+    let spec = StepSpec {
+        shape: shape.clone(),
+        strategy: strat.clone(),
+        global_batch: model.global_batch,
+        seq_len: model.seq_len,
+        quantization: model.quantization.clone(),
+        remat_policy: remat_policy.to_string(),
+    };
+    let mesh = format!("{d}x{p}x{f}x{m}x{e}");
+    let (fits, oom, compute_s, step_s, remat_resolved, hbm_used_bytes) =
+        match estimate_step(&spec, model.chip, model.profile) {
+            Ok(est) => {
+                // overlap-aware composition: compute hides the
+                // overlappable entries, exposed entries stack on top, and
+                // the pipeline bubble stretches the whole step
+                let step_s = sched.step_time_s(est.compute_s) / (1.0 - bubble);
+                (true, None, est.compute_s, step_s, est.remat_policy, est.hbm_used_bytes)
+            }
+            Err(err) => {
+                let msg = format!("{err:#}");
+                if !msg.contains("OOM") {
+                    return Err(err);
+                }
+                (false, Some(msg), 0.0, 0.0, String::new(), 0.0)
+            }
+        };
+    Ok(CandidateEval {
+        cost: CandidateCost {
+            mesh,
+            data: d,
+            pipeline: p,
+            fsdp: f,
+            model: m,
+            expert: e,
+            microbatches: pipe.microbatches,
+            moe: shape.num_experts > 1,
+            fits,
+            oom,
+            remat_request: remat_policy.to_string(),
+            remat_resolved,
+            bubble,
+            compute_s,
+            comm_s: sched.total_comm_s(),
+            exposed_comm_s: sched.exposed_comm_s(),
+            alltoall_s,
+            alltoall_analytic_s,
+            step_s,
+            hbm_used_bytes,
+            schedule_entries: sched.entries.len(),
+        },
+        schedule: sched,
+        pipeline: pipe,
+    })
+}
+
+/// The shared total order over candidates: feasible before infeasible,
+/// then analytic `step_s`, then a deterministic axis preference for the
+/// exact ties (more data parallelism, fewer pipeline stages, less tensor
+/// and expert sharding, less fsdp, fewer microbatches, cheaper remat
+/// name).  Distinct candidates never compare `Equal`, so "the best
+/// plan" is unique and the planner-vs-exhaustive proof is bitwise.
+pub fn candidate_order(a: &CandidateCost, b: &CandidateCost) -> Ordering {
+    match (a.fits, b.fits) {
+        (true, false) => return Ordering::Less,
+        (false, true) => return Ordering::Greater,
+        _ => {}
+    }
+    a.step_s
+        .total_cmp(&b.step_s)
+        .then(b.data.cmp(&a.data))
+        .then(a.pipeline.cmp(&b.pipeline))
+        .then(a.model.cmp(&b.model))
+        .then(a.expert.cmp(&b.expert))
+        .then(a.fsdp.cmp(&b.fsdp))
+        .then(a.microbatches.cmp(&b.microbatches))
+        .then(a.remat_resolved.cmp(&b.remat_resolved))
+        .then(a.remat_request.cmp(&b.remat_request))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perfmodel::chips;
+
+    #[test]
+    fn comparator_is_a_total_order() {
+        let chip = chips::h100();
+        let profile = SystemProfile::axlearn();
+        let model = CostModel::new(&chip, &profile, 64, 4096);
+        let shape = TransformerShape::llama2_7b();
+        let mut costs = Vec::new();
+        for (d, f, m) in [(8, 1, 1), (4, 2, 1), (2, 4, 1), (1, 8, 1), (1, 4, 2), (1, 1, 8)] {
+            let strat = Strategy { data: d, fsdp: f, tensor: m, ..Default::default() };
+            costs.push(evaluate_candidate(&model, &shape, &strat, "auto").unwrap().cost);
+        }
+        for a in &costs {
+            assert_eq!(candidate_order(a, a), Ordering::Equal);
+            for b in &costs {
+                assert_eq!(candidate_order(a, b), candidate_order(b, a).reverse());
+                if a.mesh != b.mesh {
+                    assert_ne!(candidate_order(a, b), Ordering::Equal, "{} vs {}", a.mesh, b.mesh);
+                }
+            }
+        }
+        // feasible always sorts before infeasible
+        let mut oom = costs[0].clone();
+        oom.fits = false;
+        oom.step_s = 0.0;
+        assert_eq!(candidate_order(&costs[0], &oom), Ordering::Less);
+    }
+
+    #[test]
+    fn non_oom_estimator_errors_propagate() {
+        let chip = chips::h100();
+        let profile = SystemProfile::axlearn();
+        let model = CostModel::new(&chip, &profile, 64, 4096);
+        let shape = TransformerShape::llama2_7b();
+        let strat = Strategy { data: 8, ..Default::default() };
+        // an explicit policy the profile does not allow is a hard error,
+        // not an OOM row
+        let err = evaluate_candidate(&model, &shape, &strat, "no_such_policy").unwrap_err();
+        assert!(!format!("{err:#}").contains("OOM"), "{err:#}");
+    }
+}

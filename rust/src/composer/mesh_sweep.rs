@@ -21,12 +21,11 @@
 //! model changes, never noise.
 
 use crate::perfmodel::chips;
-use crate::perfmodel::comms::Collective;
-use crate::perfmodel::estimator::{estimate_step, StepSpec, SystemProfile};
+use crate::perfmodel::estimator::SystemProfile;
 use crate::perfmodel::{Strategy, TransformerShape};
 use crate::util::json::Json;
 
-use super::schedule::{build_schedule, PipelineSchedule};
+use super::cost::{evaluate_candidate, CostModel};
 
 /// Chip budget every factorization must use exactly.
 pub const SWEEP_CHIPS: usize = 256;
@@ -119,10 +118,15 @@ pub fn sweep_shape_moe() -> TransformerShape {
 
 /// Compute the full sweep.  Panics on an estimator error that is not an
 /// OOM row — in this table only OOM is a legitimate infeasibility.
+///
+/// The per-row cost arithmetic is [`super::cost::evaluate_candidate`] —
+/// the *same* function the planner's branch-and-bound leaves call, so
+/// the sweep's columns and the planner's columns cannot drift apart
+/// (`rust/tests/planner_suite.rs` pins them bit-equal).
 pub fn mesh_sweep_points() -> Vec<MeshSweepPoint> {
     let chip = chips::h100();
     let profile = SystemProfile::axlearn();
-    let shard_axes = vec!["fsdp".to_string(), "model".to_string()];
+    let model = CostModel::new(&chip, &profile, SWEEP_GLOBAL_BATCH, SWEEP_SEQ);
     // the topology-aware re-ranker: the same schedule, executed by the
     // flow simulator over an explicit two-tier pod/spine fabric
     let topo = crate::netsim::Topology::two_tier(SWEEP_CHIPS, &chip.interconnect);
@@ -138,69 +142,14 @@ pub fn mesh_sweep_points() -> Vec<MeshSweepPoint> {
             expert: e,
             microbatches: if p > 1 { SWEEP_MICROBATCHES } else { 1 },
         };
-        let sched = build_schedule(
-            &strat,
-            &shape,
-            &shard_axes,
-            SWEEP_GLOBAL_BATCH,
-            SWEEP_SEQ,
-            &chip.interconnect,
-        );
-        let pipe = PipelineSchedule::one_f_one_b(strat.pipeline, strat.microbatches.max(1))
-            .expect("pipelined sweep shapes are feasible");
-        let bubble = pipe.bubble_fraction();
-        let alltoall_s: f64 = sched
-            .entries
-            .iter()
-            .filter(|en| en.collective == Collective::AllToAll)
-            .map(|en| en.cost_s)
-            .sum();
-        // the estimator's expert-dispatch cost, via the same shared
-        // helpers `estimate_step` and `build_schedule` both call — the
-        // schedule's AllToAll entries must sum to this bit-for-bit
-        let alltoall_analytic_s = if e > 1 {
-            let tok_bytes = crate::perfmodel::comms::expert_tok_bytes(
-                SWEEP_GLOBAL_BATCH,
-                SWEEP_SEQ,
-                strat.data * strat.fsdp,
-                shape.model_dim,
-            );
-            let layers_resident = shape.num_layers as f64 / p as f64;
-            crate::perfmodel::comms::expert_alltoall_cost(
-                tok_bytes,
-                layers_resident,
-                e,
-                &chip.interconnect,
-            )
-        } else {
-            0.0
-        };
-        let spec = StepSpec {
-            shape: shape.clone(),
-            strategy: strat,
-            global_batch: SWEEP_GLOBAL_BATCH,
-            seq_len: SWEEP_SEQ,
-            quantization: "none".into(),
-            remat_policy: "auto".into(),
-        };
         let mesh = format!("{d}x{p}x{f}x{m}x{e}");
-        let sim = sched
+        let eval = evaluate_candidate(&model, &shape, &strat, "auto")
+            .unwrap_or_else(|err| panic!("only OOM is acceptable here ({mesh}): {err:#}"));
+        let sim = eval
+            .schedule
             .simulate(&topo, crate::netsim::AlgoChoice::Auto)
             .unwrap_or_else(|err| panic!("netsim failed for mesh {mesh}: {err:#}"));
-        let (fits, compute_s, step_s) = match estimate_step(&spec, &chip, &profile) {
-            Ok(est) => {
-                // overlap-aware composition: compute hides the
-                // overlappable entries, exposed entries stack on top,
-                // and the pipeline bubble stretches the whole step
-                let step_s = sched.step_time_s(est.compute_s) / (1.0 - bubble);
-                (true, est.compute_s, step_s)
-            }
-            Err(err) => {
-                let msg = format!("{err:#}");
-                assert!(msg.contains("OOM"), "only OOM is acceptable here ({mesh}): {msg}");
-                (false, 0.0, 0.0)
-            }
-        };
+        let c = eval.cost;
         points.push(MeshSweepPoint {
             mesh,
             data: d,
@@ -208,17 +157,17 @@ pub fn mesh_sweep_points() -> Vec<MeshSweepPoint> {
             fsdp: f,
             model: m,
             expert: e,
-            microbatches: pipe.microbatches,
+            microbatches: c.microbatches,
             moe: e > 1,
-            fits,
-            bubble,
-            compute_s,
-            comm_s: sched.total_comm_s(),
-            exposed_comm_s: sched.exposed_comm_s(),
-            alltoall_s,
-            alltoall_analytic_s,
-            step_s,
-            schedule_entries: sched.entries.len(),
+            fits: c.fits,
+            bubble: c.bubble,
+            compute_s: c.compute_s,
+            comm_s: c.comm_s,
+            exposed_comm_s: c.exposed_comm_s,
+            alltoall_s: c.alltoall_s,
+            alltoall_analytic_s: c.alltoall_analytic_s,
+            step_s: c.step_s,
+            schedule_entries: c.schedule_entries,
             netsim_tiered_s: sim.total_sim_s(),
             netsim_exposed_s: sim.exposed_sim_s(),
         });
@@ -294,7 +243,7 @@ pub fn mesh_sweep_doc(points: &[MeshSweepPoint]) -> Json {
 /// `bench_check --write` and reviewed in the diff.
 pub const BASELINE_DEFAULT_TOL: f64 = 1e-3;
 
-fn rel_close(a: f64, b: f64, tol: f64) -> bool {
+pub(crate) fn rel_close(a: f64, b: f64, tol: f64) -> bool {
     let scale = a.abs().max(b.abs());
     (a - b).abs() <= tol * scale.max(1e-12)
 }

@@ -27,17 +27,26 @@
 //! [`crate::distributed::mesh::MeshTrainer`].
 
 pub mod aot_check;
+pub mod cost;
 pub mod mesh_sweep;
 pub mod plan;
+pub mod planner;
 pub mod schedule;
 pub mod sharding;
 pub mod verify;
 
 pub use aot_check::{aot_compile_check, AotReport};
+pub use cost::{candidate_order, evaluate_candidate, CandidateCost, CandidateEval, CostModel};
 pub use mesh_sweep::{
     compare_to_baseline, mesh_sweep_doc, mesh_sweep_points, MeshSweepPoint, BASELINE_DEFAULT_TOL,
 };
 pub use plan::{materialize, Plan};
+pub use planner::{
+    compare_planner_to_baseline, exhaustive, plan as plan_mesh, planner_bench_cases,
+    planner_bench_points, planner_bench_points_scaled, planner_doc, planner_rules, PlanError,
+    PlannedMesh, PlannerBenchPoint, PlannerRequest, PlannerStats, PrunedBranch, SearchSpace,
+    PLANNER_LATENCY_BUDGET_S, PLANNER_NETSIM_HOSTS_CAP,
+};
 pub use schedule::{
     build_schedule, local_interconnect, resolve_microbatches, shard_degrees, stage_partition,
     CollectiveSchedule, PipelineKind, PipelineSchedule, PipelineSlot, ScheduleEntry, SchedulePhase,

@@ -213,6 +213,8 @@ pub fn materialize(
 /// Trainium, SplashAttention-Pallas on TPU.
 pub fn default_backend(instance_type: &str) -> String {
     let t = instance_type.to_ascii_lowercase();
+    // `planner-gpu-H100-…` dispatches like `gpu-H100-…`
+    let t = t.strip_prefix("planner-").unwrap_or(&t).to_string();
     if t.starts_with("gpu-") {
         "cudnn".into()
     } else if t.starts_with("trn") {

@@ -1,0 +1,977 @@
+//! Branch-and-bound auto-sharding planner for 4k–32k-chip clusters.
+//!
+//! The search space is the full 6-axis product the paper's composer can
+//! express: `data × pipeline × fsdp × model × expert` power-of-two
+//! factorizations of the chip budget, × microbatch count, × remat
+//! policy.  At 16k chips that space holds millions of candidates; the
+//! planner visits it with:
+//!
+//! * **feasibility pruning** from the estimator's memory model — a
+//!   subtree whose optimizer state cannot fit even fully sharded over
+//!   every remaining axis is cut before any leaf is priced
+//!   (the same `14 bytes/param` AOT arithmetic as
+//!   [`super::aot_check`] / [`crate::perfmodel::estimator`]);
+//! * **admissible analytic lower bounds** from
+//!   [`crate::perfmodel::comms`] — the roofline compute floor, the FSDP
+//!   gather/scatter floor at the largest remaining tensor degree, the
+//!   exact exposed tensor-parallel reduction, and the exact 1F1B bubble
+//!   inflation.  A branch is cut only when its bound *strictly* exceeds
+//!   the worst member of a **full top-K** (not a single incumbent: the
+//!   flow-simulator re-rank below may promote any of the K survivors,
+//!   so single-incumbent pruning would be unsound);
+//! * a **contention-aware re-rank** of the top-K survivors: each
+//!   surviving schedule is executed by the flow-level network simulator
+//!   ([`crate::netsim`]) over a two-tier pod/spine fabric
+//!   ([`crate::netsim::Topology::two_tier`]) — a bounded slice of at
+//!   most [`PLANNER_NETSIM_HOSTS_CAP`] hosts, see
+//!   [`PlannedMesh::netsim_hosts`] — and the survivors are re-ordered
+//!   by simulated step time.
+//!
+//! Every lower bound under-estimates the true leaf cost (each omitted
+//! term is nonnegative, each retained term uses the cheapest value an
+//! unfixed axis could take), so pruning can never discard a candidate
+//! that would have entered the top-K: [`plan`] and [`exhaustive`]
+//! return bit-identical winners (`rust/tests/planner_suite.rs` proves
+//! this over randomized shapes, and against the committed sweep).
+//!
+//! Because the leaf cost is [`super::cost::evaluate_candidate`] — the
+//! same function `mesh_sweep_points` calls — adding a sixth axis is one
+//! more nested divisor loop plus one more bound: the complexity class
+//! (divisor-lattice enumeration with admissible pruning) does not
+//! change.  That is the "10 lines for RoPE" spirit applied to search.
+//!
+//! The winning plan re-enters the normal composer path as a dynamic
+//! mesh rule ([`planner_rules`]): instance types like
+//! `planner-gpu-H100-4096` are planned on the fly, written into the
+//! trainer config (mesh shape, axis names, microbatches, remat), and
+//! materialized/verified exactly like a hand-written preset.  Every
+//! winner is run through [`super::verify`] before it is returned.
+
+use std::time::Instant;
+
+use thiserror::Error;
+
+use crate::config::mesh_rules::paper_appendix_a_rules;
+use crate::config::{ConfigNode, MeshRule, MeshRules, Value};
+use crate::netsim::{AlgoChoice, Topology};
+use crate::perfmodel::chips::{self, ChipSpec};
+use crate::perfmodel::comms::{hierarchical, Collective};
+use crate::perfmodel::estimator::{base_efficiency, SystemProfile};
+use crate::perfmodel::{Strategy, TransformerShape};
+use crate::util::json::Json;
+
+use super::cost::{candidate_order, evaluate_candidate, CandidateCost, CandidateEval, CostModel};
+use super::mesh_sweep::rel_close;
+use super::schedule::{CollectiveSchedule, PipelineSchedule};
+use super::verify::{verify_pipeline, verify_schedule, VerifyContext};
+
+/// Largest two-tier fabric the re-ranker simulates.  Ring/hierarchical
+/// lowerings expand to O(hosts²) flows, so simulating a 16k-host fabric
+/// per candidate would dwarf the search itself; a pod/spine slice of
+/// this many hosts preserves the contention structure (intra-pod links,
+/// oversubscribed spine) at fixed cost.  For clusters at or below the
+/// cap the slice *is* the full fabric and the scores match the sweep's
+/// `netsim_*` columns exactly.
+pub const PLANNER_NETSIM_HOSTS_CAP: usize = 256;
+
+/// Wall-clock budget for one [`plan`] call, gated (release builds) by
+/// `bench_planner` / `bench_check` — the ISSUE's 16384-chip acceptance
+/// bar.
+pub const PLANNER_LATENCY_BUDGET_S: f64 = 5.0;
+
+/// The non-mesh axes of the search: microbatch counts to try for
+/// pipelined shapes, and remat policies to request.
+#[derive(Clone, Debug)]
+pub struct SearchSpace {
+    /// Candidate microbatch counts for `pipeline > 1` shapes (a
+    /// non-pipelined shape always uses 1).  Entries below the stage
+    /// count are skipped per shape; if none remain, the stage count
+    /// itself is used.
+    pub microbatches: Vec<usize>,
+    /// Remat policies to request; `"auto"` lets the estimator pick the
+    /// best-fitting policy.  Policies the profile cannot express are
+    /// filtered out.
+    pub remat: Vec<String>,
+}
+
+impl SearchSpace {
+    /// The full production space: the planner's sixth and seventh axes.
+    pub fn full() -> Self {
+        SearchSpace {
+            microbatches: vec![8, 16, 32, 64],
+            remat: vec![
+                "auto".into(),
+                "none".into(),
+                "save_linear".into(),
+                "save_qkvo".into(),
+                "offload_dots".into(),
+                "full".into(),
+            ],
+        }
+    }
+
+    /// Exactly the sweep's per-row choices (`SWEEP_MICROBATCHES`,
+    /// `remat="auto"`) — the space the planner-vs-sweep equivalence
+    /// tests run in, so every sweep row is a planner leaf.
+    pub fn sweep_compat() -> Self {
+        SearchSpace {
+            microbatches: vec![super::mesh_sweep::SWEEP_MICROBATCHES],
+            remat: vec!["auto".into()],
+        }
+    }
+}
+
+/// One planning problem.
+#[derive(Clone, Debug)]
+pub struct PlannerRequest {
+    pub shape: TransformerShape,
+    pub chip: ChipSpec,
+    /// Power-of-two chip budget every factorization must use exactly.
+    pub total_chips: usize,
+    pub global_batch: usize,
+    pub seq_len: usize,
+    /// "none" | "int8" | "fp8"
+    pub quantization: String,
+    pub profile: SystemProfile,
+    pub space: SearchSpace,
+    /// Survivors kept for the flow-simulator re-rank.
+    pub topk: usize,
+    /// Cap on the simulated fabric slice (see
+    /// [`PLANNER_NETSIM_HOSTS_CAP`]).
+    pub netsim_hosts_cap: usize,
+    /// Multiplier on every pruning lower bound.  1.0 (the default) keeps
+    /// the bounds admissible; tests inject >1.0 to prove the CI gate
+    /// catches an unsound bound (`rust/tests/bench_gate.rs`).
+    pub bound_scale: f64,
+}
+
+impl PlannerRequest {
+    pub fn new(
+        shape: TransformerShape,
+        chip: ChipSpec,
+        total_chips: usize,
+        global_batch: usize,
+        seq_len: usize,
+    ) -> Self {
+        PlannerRequest {
+            shape,
+            chip,
+            total_chips,
+            global_batch,
+            seq_len,
+            quantization: "none".into(),
+            profile: SystemProfile::axlearn(),
+            space: SearchSpace::full(),
+            topk: 4,
+            netsim_hosts_cap: PLANNER_NETSIM_HOSTS_CAP,
+            bound_scale: 1.0,
+        }
+    }
+}
+
+/// Structured planning failure — never a panic.
+#[derive(Debug, Error)]
+pub enum PlanError {
+    #[error("planner: total_chips must be a nonzero power of two (got {0})")]
+    NotPowerOfTwo(usize),
+    #[error(
+        "planner: no feasible plan for {model} on {chips} x {chip}: \
+         binding constraint `{binding}`: {detail}"
+    )]
+    NoFeasiblePlan {
+        model: String,
+        chip: String,
+        chips: usize,
+        /// The constraint that bound the search: `hbm-state` (optimizer
+        /// state cannot fit at any sharding), `hbm` (every priced leaf
+        /// OOMed), or `search-space` (no valid factorization).
+        binding: String,
+        detail: String,
+    },
+    #[error("planner: cost model error for mesh {mesh}: {detail}")]
+    Cost { mesh: String, detail: String },
+    #[error("planner: flow-simulator re-rank failed for mesh {mesh}: {detail}")]
+    Netsim { mesh: String, detail: String },
+    #[error("planner: winning mesh {mesh} failed static verification:\n{report}")]
+    Verify { mesh: String, report: String },
+}
+
+/// One cost-pruned branch, recorded for the admissibility property
+/// tests: `lower_bound` (already `bound_scale`-scaled) strictly
+/// exceeded `incumbent` (the worst step time in the then-full top-K).
+#[derive(Clone, Debug)]
+pub struct PrunedBranch {
+    /// Human-readable fixed-axis prefix, e.g. `"d=32 p=2 f=8"`.
+    pub prefix: String,
+    pub lower_bound: f64,
+    pub incumbent: f64,
+}
+
+/// Search counters; `evaluated` vs `factorizations` is the planner's
+/// complexity story, exact-gated against the committed baseline.
+#[derive(Clone, Debug, Default)]
+pub struct PlannerStats {
+    /// Valid 5-axis factorizations reached (before microbatch/remat
+    /// expansion).
+    pub factorizations: usize,
+    /// Leaf cost evaluations performed.
+    pub evaluated: usize,
+    /// Leaves that priced as OOM rows.
+    pub oom: usize,
+    /// Axis tuples skipped by structural validity (layer divisibility,
+    /// expert-bank divisibility, strategy validation).
+    pub skipped_invalid: usize,
+    /// Subtrees cut by the state-memory feasibility bound.
+    pub memory_pruned: usize,
+    /// Subtrees cut by a cost lower bound (`pruned.len()`).
+    pub cost_pruned: usize,
+    pub pruned: Vec<PrunedBranch>,
+}
+
+/// The planner's answer: the winning candidate with its schedules, the
+/// re-ranked survivor list, and the search trace.
+#[derive(Clone, Debug)]
+pub struct PlannedMesh {
+    pub cost: CandidateCost,
+    pub schedule: CollectiveSchedule,
+    pub pipeline: PipelineSchedule,
+    /// The winner's contention-aware score:
+    /// `sim.step_time_s(compute_s) / (1 − bubble)` on the simulated
+    /// slice.
+    pub sim_step_s: f64,
+    /// Hosts in the simulated two-tier slice
+    /// (`total_chips.min(netsim_hosts_cap)`).
+    pub netsim_hosts: usize,
+    /// All re-ranked survivors, best first: `(cost, sim_step_s)`.
+    pub topk: Vec<(CandidateCost, f64)>,
+    pub stats: PlannerStats,
+}
+
+impl PlannedMesh {
+    /// The winner as a [`Strategy`] (what `materialize` resolves from
+    /// the emitted mesh config).
+    pub fn strategy(&self) -> Strategy {
+        Strategy {
+            data: self.cost.data,
+            fsdp: self.cost.fsdp,
+            tensor: self.cost.model,
+            pipeline: self.cost.pipeline,
+            expert: self.cost.expert,
+            microbatches: self.cost.microbatches,
+        }
+    }
+}
+
+/// Plan with branch-and-bound pruning — the production entry point.
+pub fn plan(req: &PlannerRequest) -> Result<PlannedMesh, PlanError> {
+    search(req, true)
+}
+
+/// Exhaustively price every candidate (no cost pruning; the memory
+/// bound still applies because it is a *feasibility* fact, not a cost
+/// estimate).  Same enumeration, same comparator, same re-rank — the
+/// equivalence oracle for [`plan`].
+pub fn exhaustive(req: &PlannerRequest) -> Result<PlannedMesh, PlanError> {
+    search(req, false)
+}
+
+fn pow2_divisors(n: usize) -> Vec<usize> {
+    (0..=n.trailing_zeros()).map(|k| 1usize << k).collect()
+}
+
+fn microbatch_choices(pipeline: usize, space: &SearchSpace) -> Vec<usize> {
+    if pipeline <= 1 {
+        return vec![1];
+    }
+    let mut v: Vec<usize> =
+        space.microbatches.iter().copied().filter(|&mb| mb >= pipeline).collect();
+    if v.is_empty() {
+        v.push(pipeline);
+    }
+    v.sort_unstable();
+    v.dedup();
+    // largest first: smallest bubble, so the incumbent tightens early
+    v.reverse();
+    v
+}
+
+fn remat_choices(space: &SearchSpace, profile: &SystemProfile, chip: &ChipSpec) -> Vec<String> {
+    let mut v: Vec<String> = Vec::new();
+    for r in &space.remat {
+        let expressible = r == "auto"
+            || (profile.allowed_remat.contains(&r.as_str())
+                && (r != "offload_dots" || (profile.supports_offload && chip.host_bw > 0.0)));
+        if expressible && !v.contains(r) {
+            v.push(r.clone());
+        }
+    }
+    if v.is_empty() {
+        v.push("auto".into());
+    }
+    v
+}
+
+struct Search<'a> {
+    req: &'a PlannerRequest,
+    model: CostModel<'a>,
+    prune: bool,
+    topk_n: usize,
+    /// Roofline compute floor shared by every candidate (recompute
+    /// factor 1 — every real leaf is at least this).
+    compute_lb: f64,
+    topk: Vec<CandidateEval>,
+    stats: PlannerStats,
+    sample_oom: Option<String>,
+}
+
+impl<'a> Search<'a> {
+    /// Cut a branch iff its (scaled) lower bound strictly exceeds the
+    /// worst member of a *full* top-K — any candidate below the bound
+    /// would sort strictly after that member and could never enter.
+    fn pruned(&mut self, lb: f64, prefix: String) -> bool {
+        if !self.prune || self.topk.len() < self.topk_n {
+            return false;
+        }
+        let incumbent = self.topk[self.topk.len() - 1].cost.step_s;
+        let lb = lb * self.req.bound_scale;
+        if lb > incumbent {
+            self.stats.cost_pruned += 1;
+            self.stats.pruned.push(PrunedBranch { prefix, lower_bound: lb, incumbent });
+            true
+        } else {
+            false
+        }
+    }
+
+    fn offer(&mut self, eval: CandidateEval) {
+        self.stats.evaluated += 1;
+        if !eval.cost.fits {
+            self.stats.oom += 1;
+            if self.sample_oom.is_none() {
+                self.sample_oom = eval.cost.oom.clone();
+            }
+            return;
+        }
+        let pos = match self
+            .topk
+            .binary_search_by(|probe| candidate_order(&probe.cost, &eval.cost))
+        {
+            Ok(pos) | Err(pos) => pos,
+        };
+        if pos < self.topk_n {
+            self.topk.insert(pos, eval);
+            self.topk.truncate(self.topk_n);
+        }
+    }
+
+    fn run(&mut self) -> Result<(), PlanError> {
+        let req = self.req;
+        let shape = &req.shape;
+        let total = req.total_chips;
+        let layers = shape.num_layers as usize;
+        let n_params = shape.params() as f64;
+        let overhead = 2e9;
+        let budget = req.chip.hbm_bytes * 0.92;
+        let ic = &req.chip.interconnect;
+        let remats = remat_choices(&req.space, &req.profile, &req.chip);
+
+        let mut ds = pow2_divisors(total);
+        ds.reverse(); // data-heavy first: the usual winners, found early
+        for d in ds {
+            let rem_d = total / d;
+            // Feasibility: optimizer state (14 bytes/param) sharded over
+            // every non-data axis, plus framework overhead.  Activations
+            // and transients only add to this, so the cut is exact.
+            if n_params * 14.0 / rem_d as f64 + overhead > budget {
+                self.stats.memory_pruned += 1;
+                continue;
+            }
+            if self.pruned(self.compute_lb, format!("d={d}")) {
+                continue;
+            }
+            for p in pow2_divisors(rem_d) {
+                if p > 1 && layers % p != 0 {
+                    self.stats.skipped_invalid += 1;
+                    continue;
+                }
+                let mbs = microbatch_choices(p, &req.space);
+                let mb_max = mbs[0];
+                // exact 1F1B inflation 1/(1−bubble) = (p−1+m)/m at the
+                // largest available microbatch count: the smallest
+                // inflation any leaf below can achieve
+                let infl_min = (p - 1 + mb_max) as f64 / mb_max as f64;
+                if self.pruned(self.compute_lb * infl_min, format!("d={d} p={p}")) {
+                    continue;
+                }
+                let rem_p = rem_d / p;
+                let param_bytes = n_params * 2.0 / p as f64;
+                let mut fss = pow2_divisors(rem_p);
+                fss.reverse();
+                for f in fss {
+                    let rem_f = rem_p / f;
+                    // FSDP gather/scatter floor at the *largest* tensor
+                    // degree the remaining axes allow (payload is
+                    // params/tensor, so that is the cheapest case)
+                    let ov_lb_f = if f > 1 {
+                        let bytes_min = param_bytes / rem_f as f64;
+                        hierarchical(Collective::AllGather, bytes_min, f, ic)
+                            + hierarchical(Collective::ReduceScatter, bytes_min, f, ic)
+                    } else {
+                        0.0
+                    };
+                    if self.pruned(
+                        self.compute_lb.max(ov_lb_f) * infl_min,
+                        format!("d={d} p={p} f={f}"),
+                    ) {
+                        continue;
+                    }
+                    for m in pow2_divisors(rem_f) {
+                        let e = rem_f / m;
+                        if e > 1
+                            && (shape.num_experts <= 1
+                                || e as u64 > shape.num_experts
+                                || shape.num_experts % (e as u64) != 0)
+                        {
+                            self.stats.skipped_invalid += 1;
+                            continue;
+                        }
+                        self.stats.factorizations += 1;
+                        // exact FSDP payload and exact exposed TP
+                        // reduction at this depth — the same formulas
+                        // `build_schedule` prices
+                        let ov_lb_m = if f > 1 {
+                            let bytes = param_bytes / m as f64;
+                            hierarchical(Collective::AllGather, bytes, f, ic)
+                                + hierarchical(Collective::ReduceScatter, bytes, f, ic)
+                        } else {
+                            0.0
+                        };
+                        let dp = (d * f).max(1);
+                        let exposed = if m > 1 {
+                            let act_bytes = (req.global_batch.max(dp) / dp) as f64
+                                * req.seq_len as f64
+                                * shape.model_dim as f64
+                                * 2.0
+                                * (shape.num_layers as f64 / p as f64)
+                                * 2.0;
+                            hierarchical(Collective::AllReduce, act_bytes, m, ic)
+                        } else {
+                            0.0
+                        };
+                        let numer_lb = self.compute_lb.max(ov_lb_m) + exposed;
+                        if self.pruned(numer_lb * infl_min, format!("d={d} p={p} f={f} m={m} e={e}"))
+                        {
+                            continue;
+                        }
+                        for &mb in &mbs {
+                            let infl = (p - 1 + mb) as f64 / mb as f64;
+                            if self.pruned(
+                                numer_lb * infl,
+                                format!("d={d} p={p} f={f} m={m} e={e} mb={mb}"),
+                            ) {
+                                continue;
+                            }
+                            for r in &remats {
+                                let strat = Strategy {
+                                    data: d,
+                                    fsdp: f,
+                                    tensor: m,
+                                    pipeline: p,
+                                    expert: e,
+                                    microbatches: mb,
+                                };
+                                if strat.validate(req.global_batch, layers).is_err() {
+                                    self.stats.skipped_invalid += 1;
+                                    continue;
+                                }
+                                let eval = evaluate_candidate(&self.model, shape, &strat, r)
+                                    .map_err(|err| PlanError::Cost {
+                                        mesh: format!("{d}x{p}x{f}x{m}x{e}"),
+                                        detail: format!("{err:#}"),
+                                    })?;
+                                self.offer(eval);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute every survivor's schedule on the two-tier slice and
+    /// order by simulated step time (ties broken by the shared
+    /// candidate order, so the result is still unique).
+    fn rerank(&self) -> Result<(Vec<(CandidateEval, f64)>, usize), PlanError> {
+        let hosts = self.req.total_chips.min(self.req.netsim_hosts_cap.max(2));
+        let topo = Topology::two_tier(hosts, &self.req.chip.interconnect);
+        let mut ranked = Vec::with_capacity(self.topk.len());
+        for eval in &self.topk {
+            let sliced = slice_schedule(&eval.schedule, hosts);
+            let sim = sliced.simulate(&topo, AlgoChoice::Auto).map_err(|err| {
+                PlanError::Netsim { mesh: eval.cost.mesh.clone(), detail: format!("{err:#}") }
+            })?;
+            let sim_step = sim.step_time_s(eval.cost.compute_s) / (1.0 - eval.cost.bubble);
+            ranked.push((eval.clone(), sim_step));
+        }
+        ranked.sort_by(|a, b| {
+            a.1.total_cmp(&b.1).then_with(|| candidate_order(&a.0.cost, &b.0.cost))
+        });
+        Ok((ranked, hosts))
+    }
+}
+
+/// Clamp a schedule's subgroup layout onto a fabric slice of `hosts`
+/// hosts, preserving entry order and per-instance payloads: the flow
+/// simulator requires `group × count ≤ hosts`.  For clusters at or
+/// below the cap this is the identity.
+fn slice_schedule(sched: &CollectiveSchedule, hosts: usize) -> CollectiveSchedule {
+    let entries = sched
+        .entries
+        .iter()
+        .map(|entry| {
+            let mut entry = entry.clone();
+            entry.group = entry.group.min(hosts).max(1);
+            entry.count = entry.count.min((hosts / entry.group).max(1)).max(1);
+            entry
+        })
+        .collect();
+    CollectiveSchedule { entries }
+}
+
+fn search(req: &PlannerRequest, prune: bool) -> Result<PlannedMesh, PlanError> {
+    let total = req.total_chips;
+    if total == 0 || !total.is_power_of_two() {
+        return Err(PlanError::NotPowerOfTwo(total));
+    }
+    let shape = &req.shape;
+    let chip = &req.chip;
+    let n_params = shape.params() as f64;
+    let overhead = 2e9;
+    let budget = chip.hbm_bytes * 0.92;
+    // Structured infeasibility before searching: if even sharding the
+    // optimizer state over *every* chip cannot fit, no factorization can.
+    let state_floor = n_params * 14.0 / total as f64 + overhead;
+    if state_floor > budget {
+        return Err(PlanError::NoFeasiblePlan {
+            model: shape.name.clone(),
+            chip: chip.name.to_string(),
+            chips: total,
+            binding: "hbm-state".into(),
+            detail: format!(
+                "optimizer state needs {:.1} GB/chip even fully sharded over all {} chips, \
+                 but the HBM budget is {:.1} GB",
+                state_floor / 1e9,
+                total,
+                budget / 1e9
+            ),
+        });
+    }
+
+    // roofline compute floor (recompute factor 1, the cheapest policy)
+    let total_tokens = (req.global_batch * req.seq_len) as f64;
+    let model_flops = total_tokens * shape.train_flops_per_token(req.seq_len as u64);
+    let quant_speedup = match req.quantization.as_str() {
+        "int8" | "fp8" if req.profile.supports_quant => {
+            let ratio = chip.peak_flops_8bit / chip.peak_flops_bf16;
+            1.0 / (0.95 / ratio + 0.05)
+        }
+        _ => 1.0,
+    };
+    let sys_eff = if chip.name.starts_with("TPU") || chip.name == "Trainium2" {
+        req.profile.kernel_efficiency_tpu
+    } else {
+        req.profile.kernel_efficiency
+    };
+    let eff = base_efficiency(chip) * sys_eff;
+    let compute_lb = model_flops / total as f64 / (chip.peak_flops_bf16 * eff * quant_speedup);
+
+    let mut model = CostModel::new(chip, &req.profile, req.global_batch, req.seq_len);
+    model.quantization = req.quantization.clone();
+    let mut s = Search {
+        req,
+        model,
+        prune,
+        topk_n: req.topk.max(1),
+        compute_lb,
+        topk: Vec::new(),
+        stats: PlannerStats::default(),
+        sample_oom: None,
+    };
+    s.run()?;
+
+    if s.topk.is_empty() {
+        let (binding, detail) = match &s.sample_oom {
+            Some(oom) => ("hbm".to_string(), format!("every priced candidate OOMed, e.g. {oom}")),
+            None => (
+                "search-space".to_string(),
+                format!(
+                    "no valid 5-axis factorization of {} chips for {} layers / {} experts",
+                    total, shape.num_layers, shape.num_experts
+                ),
+            ),
+        };
+        return Err(PlanError::NoFeasiblePlan {
+            model: shape.name.clone(),
+            chip: chip.name.to_string(),
+            chips: total,
+            binding,
+            detail,
+        });
+    }
+
+    let (ranked, hosts) = s.rerank()?;
+    let (winner, sim_step_s) = (&ranked[0].0, ranked[0].1);
+
+    // every emitted plan passes the static verifier before it is
+    // returned — the same checks `lint_sweep` runs over the sweep
+    let strategy = Strategy {
+        data: winner.cost.data,
+        fsdp: winner.cost.fsdp,
+        tensor: winner.cost.model,
+        pipeline: winner.cost.pipeline,
+        expert: winner.cost.expert,
+        microbatches: winner.cost.microbatches,
+    };
+    let ctx = VerifyContext {
+        strategy,
+        shard_axes: s.model.shard_axes.clone(),
+        exact_payloads: false,
+        hbm_capacity: Some(chip.hbm_bytes),
+        aot_fits: Some(true),
+    };
+    let mut report = verify_schedule(&winner.schedule, Some(&winner.pipeline), &ctx);
+    report.diagnostics.extend(verify_pipeline(&winner.pipeline));
+    if !report.is_clean() {
+        return Err(PlanError::Verify {
+            mesh: winner.cost.mesh.clone(),
+            report: report.render(),
+        });
+    }
+
+    Ok(PlannedMesh {
+        cost: winner.cost.clone(),
+        schedule: winner.schedule.clone(),
+        pipeline: winner.pipeline.clone(),
+        sim_step_s,
+        netsim_hosts: hosts,
+        topk: ranked.into_iter().map(|(e, sim)| (e.cost, sim)).collect(),
+        stats: s.stats,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// The `planner` mesh-rule kind: plans emitted through the existing
+// `mesh_rules` / registry / `materialize` path.
+// ---------------------------------------------------------------------------
+
+/// The paper's Appendix-A rules plus a dynamic `planner-*` rule: an
+/// instance type like `planner-gpu-H100-4096` (chip family + chip
+/// count) is planned on the fly and the winning mesh written into the
+/// trainer config, after which `materialize` treats it exactly like a
+/// hand-written preset (`chips::by_instance_type` resolves the real
+/// chip through the `planner-` prefix, so the interconnect and the AOT
+/// check stay chip-accurate).
+pub fn planner_rules() -> MeshRules {
+    let mut rules = paper_appendix_a_rules();
+    let rule = MeshRule::dynamic("planner-*", apply_planner_rule)
+        .expect("static planner pattern compiles");
+    rules.rules.insert(0, rule);
+    rules
+}
+
+fn apply_planner_rule(instance_type: &str, cfg: &mut ConfigNode) -> anyhow::Result<()> {
+    let rest = instance_type.strip_prefix("planner-").unwrap_or(instance_type);
+    let chip = chips::by_instance_type(rest).ok_or_else(|| {
+        anyhow::anyhow!("planner rule: unknown chip family in {instance_type:?}")
+    })?;
+    let total: usize = rest.rsplit('-').next().and_then(|s| s.parse().ok()).ok_or_else(|| {
+        anyhow::anyhow!(
+            "planner rule: {instance_type:?} must end in a chip count \
+             (e.g. planner-gpu-H100-4096)"
+        )
+    })?;
+    let shape = super::plan::shape_from_config(cfg)?;
+    let input = cfg.at_path("input")?;
+    let global_batch = input.get_int("batch_size")?.max(1) as usize;
+    let seq_len = input.get_int("seq_len")?.max(1) as usize;
+    let mut req = PlannerRequest::new(shape, chip, total, global_batch.max(total), seq_len);
+    req.quantization = cfg.get_str("quantization").unwrap_or_else(|_| "none".into());
+    let planned = plan(&req)?;
+    let c = &planned.cost;
+    cfg.set(
+        "mesh_shape",
+        Value::IntList(vec![
+            c.data as i64,
+            c.pipeline as i64,
+            c.fsdp as i64,
+            c.model as i64,
+            c.expert as i64,
+        ]),
+    )?;
+    cfg.set(
+        "mesh_axis_names",
+        Value::StrList(vec![
+            "data".into(),
+            "pipeline".into(),
+            "fsdp".into(),
+            "model".into(),
+            "expert".into(),
+        ]),
+    )?;
+    cfg.set("microbatches", Value::Int(c.microbatches as i64))?;
+    cfg.set("pipeline_schedule", Value::Str("1f1b".into()))?;
+    // both the trainer-wide policy and the tagged layer spec, so the
+    // materialized plan carries the planner's resolution either way
+    cfg.set("remat_policy", Value::Str(c.remat_resolved.clone()))?;
+    cfg.at_path_mut("model.decoder.layer")?
+        .set("remat_spec", Value::Str(c.remat_resolved.clone()))?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Bench points: planner latency + plan quality, gated in CI by
+// `bench_check` against `benches/baseline.json` (`planner_points`).
+// ---------------------------------------------------------------------------
+
+/// One planned benchmark case.
+#[derive(Clone, Debug)]
+pub struct PlannerBenchPoint {
+    /// Join key, e.g. `"dense-70b-16384"`.
+    pub case: String,
+    pub chips: usize,
+    pub moe: bool,
+    pub mesh: String,
+    pub microbatches: usize,
+    /// The resolved remat policy of the winning plan.
+    pub remat: String,
+    pub step_s: f64,
+    pub sim_step_s: f64,
+    pub netsim_hosts: usize,
+    pub factorizations: usize,
+    pub evaluated: usize,
+    pub memory_pruned: usize,
+    pub cost_pruned: usize,
+    /// Measured wall-clock of the `plan` call (reported and gated
+    /// against [`PLANNER_LATENCY_BUDGET_S`] in release benches; not
+    /// compared against the baseline — it is machine-dependent).
+    pub plan_wall_s: f64,
+}
+
+/// The canonical planning cases: 256 chips (the sweep's scale) up to a
+/// 32k-chip dense 150B cluster, including the ISSUE's 16384-chip
+/// acceptance case and a 16k-chip MoE.
+pub fn planner_bench_cases() -> Vec<(&'static str, TransformerShape, usize)> {
+    vec![
+        ("dense-7b-256", TransformerShape::llama2_7b(), 256),
+        ("dense-70b-4096", TransformerShape::llama2_70b(), 4096),
+        ("dense-70b-16384", TransformerShape::llama2_70b(), 16384),
+        ("moe-7b8e-16384", super::mesh_sweep::sweep_shape_moe(), 16384),
+        ("dense-150b-32768", TransformerShape::model_b_150b(), 32768),
+    ]
+}
+
+/// Compute the bench table with an injected bound scale (1.0 = the real
+/// planner; tests inject >1.0 to prove the gate catches an inadmissible
+/// bound).
+pub fn planner_bench_points_scaled(bound_scale: f64) -> Vec<PlannerBenchPoint> {
+    let chip = chips::h100();
+    let mut out = Vec::new();
+    for (case, shape, chips_n) in planner_bench_cases() {
+        // one sequence per chip, floored at the sweep's global batch
+        let global_batch = chips_n.max(1024);
+        let mut req = PlannerRequest::new(shape, chip.clone(), chips_n, global_batch, 4096);
+        req.bound_scale = bound_scale;
+        let t0 = Instant::now();
+        let planned =
+            plan(&req).unwrap_or_else(|err| panic!("planner failed for case {case}: {err}"));
+        let plan_wall_s = t0.elapsed().as_secs_f64();
+        out.push(PlannerBenchPoint {
+            case: case.to_string(),
+            chips: chips_n,
+            moe: planned.cost.moe,
+            mesh: planned.cost.mesh.clone(),
+            microbatches: planned.cost.microbatches,
+            remat: planned.cost.remat_resolved.clone(),
+            step_s: planned.cost.step_s,
+            sim_step_s: planned.sim_step_s,
+            netsim_hosts: planned.netsim_hosts,
+            factorizations: planned.stats.factorizations,
+            evaluated: planned.stats.evaluated,
+            memory_pruned: planned.stats.memory_pruned,
+            cost_pruned: planned.stats.cost_pruned,
+            plan_wall_s,
+        });
+    }
+    out
+}
+
+/// The canonical bench table (admissible bounds).
+pub fn planner_bench_points() -> Vec<PlannerBenchPoint> {
+    planner_bench_points_scaled(1.0)
+}
+
+/// The `planner_points` JSON section committed in
+/// `benches/baseline.json` and emitted by `bench_planner`.
+pub fn planner_doc(points: &[PlannerBenchPoint]) -> Json {
+    Json::obj(vec![
+        ("bench", Json::str("planner")),
+        ("chip", Json::str("H100")),
+        ("seq_len", Json::num(4096.0)),
+        ("budget_s", Json::num(PLANNER_LATENCY_BUDGET_S)),
+        (
+            "planner_points",
+            Json::Arr(
+                points
+                    .iter()
+                    .map(|p| {
+                        Json::obj(vec![
+                            ("case", Json::str(p.case.clone())),
+                            ("chips", Json::num(p.chips as f64)),
+                            ("moe", Json::Bool(p.moe)),
+                            ("mesh", Json::str(p.mesh.clone())),
+                            ("microbatches", Json::num(p.microbatches as f64)),
+                            ("remat", Json::str(p.remat.clone())),
+                            ("step_s", Json::num(p.step_s)),
+                            ("sim_step_s", Json::num(p.sim_step_s)),
+                            ("netsim_hosts", Json::num(p.netsim_hosts as f64)),
+                            ("factorizations", Json::num(p.factorizations as f64)),
+                            ("evaluated", Json::num(p.evaluated as f64)),
+                            ("memory_pruned", Json::num(p.memory_pruned as f64)),
+                            ("cost_pruned", Json::num(p.cost_pruned as f64)),
+                            ("plan_wall_s", Json::num(p.plan_wall_s)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Compare computed planner points against a baseline document.  The
+/// chosen plan (mesh, microbatches, remat) is compared exactly; the
+/// cost columns within `tol`; the search counters exactly (they are
+/// deterministic, and a drift there is a complexity-class change).
+/// `plan_wall_s` is machine-dependent and not compared — latency is
+/// gated against [`PLANNER_LATENCY_BUDGET_S`] by the release benches.
+pub fn compare_planner_to_baseline(
+    points: &[PlannerBenchPoint],
+    baseline: &Json,
+    tol: f64,
+) -> Vec<String> {
+    let mut drifts = Vec::new();
+    let Some(base_points) = baseline.get("planner_points").and_then(|p| p.as_arr()) else {
+        return vec!["baseline has no \"planner_points\" array".into()];
+    };
+    for p in points {
+        let Some(b) = base_points
+            .iter()
+            .find(|b| b.get("case").and_then(|c| c.as_str()) == Some(p.case.as_str()))
+        else {
+            drifts.push(format!("planner case {} missing from baseline", p.case));
+            continue;
+        };
+        let base_mesh = b.get("mesh").and_then(|m| m.as_str()).unwrap_or("<none>");
+        if base_mesh != p.mesh {
+            drifts.push(format!(
+                "planner case {}: chosen mesh changed {base_mesh} -> {} \
+                 (the planner picked a different plan)",
+                p.case, p.mesh
+            ));
+            continue;
+        }
+        let base_remat = b.get("remat").and_then(|m| m.as_str()).unwrap_or("<none>");
+        if base_remat != p.remat {
+            drifts.push(format!(
+                "planner case {}: remat changed {base_remat} -> {}",
+                p.case, p.remat
+            ));
+        }
+        for (metric, current, exact) in [
+            ("microbatches", p.microbatches as f64, true),
+            ("step_s", p.step_s, false),
+            ("sim_step_s", p.sim_step_s, false),
+            ("factorizations", p.factorizations as f64, true),
+            ("evaluated", p.evaluated as f64, true),
+            ("memory_pruned", p.memory_pruned as f64, true),
+            ("cost_pruned", p.cost_pruned as f64, true),
+        ] {
+            match b.get(metric).and_then(|v| v.as_f64()) {
+                None => drifts.push(format!("planner case {}: baseline lacks {metric}", p.case)),
+                Some(base) if (exact && base != current) || !rel_close(current, base, tol) => {
+                    drifts.push(format!(
+                        "planner case {}: {metric} drifted {base:.6e} -> {current:.6e} \
+                         ({:+.3}% > {:.3}% tolerance)",
+                        p.case,
+                        (current - base) / base.abs().max(1e-12) * 100.0,
+                        tol * 100.0,
+                    ))
+                }
+                Some(_) => {}
+            }
+        }
+    }
+    for b in base_points {
+        let name = b.get("case").and_then(|c| c.as_str()).unwrap_or("<unnamed>");
+        if !points.iter().any(|p| p.case == name) {
+            drifts.push(format!("baseline planner case {name} no longer planned"));
+        }
+    }
+    drifts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pow2_divisors_cover_the_lattice() {
+        assert_eq!(pow2_divisors(1), vec![1]);
+        assert_eq!(pow2_divisors(8), vec![1, 2, 4, 8]);
+        assert_eq!(pow2_divisors(16384).len(), 15);
+    }
+
+    #[test]
+    fn non_power_of_two_is_a_structured_error() {
+        let req = PlannerRequest::new(
+            TransformerShape::llama2_7b(),
+            chips::h100(),
+            12,
+            64,
+            4096,
+        );
+        match plan(&req) {
+            Err(PlanError::NotPowerOfTwo(12)) => {}
+            other => panic!("expected NotPowerOfTwo, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn microbatch_choices_respect_the_stage_floor() {
+        let space = SearchSpace::full();
+        assert_eq!(microbatch_choices(1, &space), vec![1]);
+        // descending, all >= stages
+        assert_eq!(microbatch_choices(16, &space), vec![64, 32, 16]);
+        // nothing in the space fits 128 stages: fall back to the floor
+        assert_eq!(microbatch_choices(128, &space), vec![128]);
+    }
+
+    #[test]
+    fn planner_matches_exhaustive_on_a_small_grid() {
+        let mut req = PlannerRequest::new(
+            TransformerShape::llama2_7b(),
+            chips::h100(),
+            8,
+            64,
+            4096,
+        );
+        req.space = SearchSpace::sweep_compat();
+        let fast = plan(&req).unwrap();
+        let slow = exhaustive(&req).unwrap();
+        assert_eq!(fast.cost.mesh, slow.cost.mesh);
+        assert_eq!(fast.cost.step_s.to_bits(), slow.cost.step_s.to_bits());
+        assert_eq!(fast.sim_step_s.to_bits(), slow.sim_step_s.to_bits());
+        // pruning did real work but never changed the answer
+        assert!(fast.stats.evaluated <= slow.stats.evaluated);
+    }
+}

@@ -12,6 +12,11 @@ use regex::Regex;
 use super::modifier::{ConfigModifier, ModifierList};
 use super::node::ConfigNode;
 
+/// A rule body computed from the matched instance-type string itself —
+/// the `planner` rule kind, where the mesh is searched for at apply
+/// time rather than written down in the rule table.
+pub type DynamicRule = Box<dyn Fn(&str, &mut ConfigNode) -> Result<()> + Send + Sync>;
+
 /// One rule: pattern over instance-type strings + ordered modifiers.
 pub struct MeshRule {
     /// The glob-flavored source pattern (e.g. `"tpu-v5e-256-*"`).
@@ -19,6 +24,9 @@ pub struct MeshRule {
     regex: Regex,
     /// Config modifiers applied, in order, when the pattern matches.
     pub modifiers: ModifierList,
+    /// Optional dynamic body, run after `modifiers` with the full
+    /// instance-type string (see [`MeshRule::dynamic`]).
+    dynamic: Option<DynamicRule>,
 }
 
 impl MeshRule {
@@ -33,7 +41,22 @@ impl MeshRule {
             pattern: pattern.to_string(),
             regex,
             modifiers: ModifierList(modifiers),
+            dynamic: None,
         })
+    }
+
+    /// Compile a rule whose body is computed from the matched instance
+    /// type (e.g. the auto-sharding planner deriving a mesh from the
+    /// chip family and count encoded in `planner-gpu-H100-4096`).
+    /// Static rules can't express this: the right-hand side depends on
+    /// what the wildcard matched.
+    pub fn dynamic(
+        pattern: &str,
+        body: impl Fn(&str, &mut ConfigNode) -> Result<()> + Send + Sync + 'static,
+    ) -> Result<Self> {
+        let mut rule = MeshRule::new(pattern, vec![])?;
+        rule.dynamic = Some(Box::new(body));
+        Ok(rule)
     }
 
     /// Whether this rule's pattern matches `instance_type`.
@@ -103,6 +126,9 @@ impl MeshRules {
         match self.find(instance_type) {
             Some(rule) => {
                 rule.modifiers.apply(cfg)?;
+                if let Some(body) = &rule.dynamic {
+                    body(instance_type, cfg)?;
+                }
                 Ok(Some(rule.pattern.clone()))
             }
             None => Ok(None),
@@ -214,6 +240,21 @@ mod tests {
             MeshRule::new("tpu-v5e-*", vec![]).unwrap(),
         ]);
         assert_eq!(rules.find("tpu-v5e-256-4").unwrap().pattern, "tpu-*");
+    }
+
+    #[test]
+    fn dynamic_rule_sees_the_matched_instance_string() {
+        use super::super::node::Value;
+        let rules = MeshRules::new(vec![MeshRule::dynamic("planner-*", |inst, cfg| {
+            let chips: i64 = inst.rsplit('-').next().unwrap().parse()?;
+            cfg.set("max_steps", Value::Int(chips))?;
+            Ok(())
+        })
+        .unwrap()]);
+        let mut t = trainer_for_preset("tiny").unwrap();
+        let matched = rules.apply("planner-gpu-H100-4096", &mut t).unwrap();
+        assert_eq!(matched.as_deref(), Some("planner-*"));
+        assert_eq!(t.get_int("max_steps").unwrap(), 4096);
     }
 
     #[test]

@@ -138,9 +138,13 @@ pub fn trainium2() -> ChipSpec {
     }
 }
 
-/// Lookup by the instance-type prefixes used in mesh rules.
+/// Lookup by the instance-type prefixes used in mesh rules.  A
+/// `planner-` prefix (the auto-sharding planner's dynamic rule kind,
+/// e.g. `planner-gpu-H100-4096`) is transparent: the planned instance
+/// resolves to the same chip as the hand-written preset would.
 pub fn by_instance_type(instance_type: &str) -> Option<ChipSpec> {
     let t = instance_type.to_ascii_lowercase();
+    let t = t.strip_prefix("planner-").unwrap_or(&t);
     if t.starts_with("gpu-h100") {
         Some(h100())
     } else if t.starts_with("tpu-v5p") {

@@ -8,11 +8,24 @@
 //! review signal; here we prove the mechanism and the structure so the
 //! gate can never rot into a no-op.
 
+use std::sync::OnceLock;
+
+use axlearn::composer::planner::{
+    compare_planner_to_baseline, planner_bench_points, planner_bench_points_scaled, planner_doc,
+    PlannerBenchPoint,
+};
 use axlearn::composer::{
     compare_to_baseline, mesh_sweep_doc, mesh_sweep_points, BASELINE_DEFAULT_TOL,
 };
 use axlearn::distributed::sim_bench::{compare_sim_to_baseline, sim_counter_points, sim_doc};
 use axlearn::util::json::Json;
+
+/// The planner bench cases replan 4k–32k-chip clusters; compute them
+/// once per test binary.
+fn planner_points_cached() -> &'static [PlannerBenchPoint] {
+    static POINTS: OnceLock<Vec<PlannerBenchPoint>> = OnceLock::new();
+    POINTS.get_or_init(planner_bench_points)
+}
 
 fn committed_baseline() -> Json {
     let path = axlearn::repo_root().join("benches/baseline.json");
@@ -89,6 +102,9 @@ fn committed_baseline_is_structurally_current() {
         let mut doc = mesh_sweep_doc(&points);
         if let (Json::Obj(map), Some(sp)) = (&mut doc, baseline.get("sim_points")) {
             map.insert("sim_points".into(), sp.clone());
+        }
+        if let (Json::Obj(map), Some(pp)) = (&mut doc, baseline.get("planner_points")) {
+            map.insert("planner_points".into(), pp.clone());
         }
         // write-then-rename: sibling tests read the file concurrently
         let tmp = path.with_extension("json.points.tmp");
@@ -212,6 +228,102 @@ fn committed_baseline_gates_the_sim_counters() {
     assert!(
         drifts.is_empty(),
         "committed sim counters drifted (regenerate with bench_check --write):\n{drifts:#?}"
+    );
+}
+
+#[test]
+fn injected_planner_regressions_fail_the_gate() {
+    // the planner gate must catch each failure class on exactly the
+    // tampered case: a worse chosen plan, a cost drift at an unchanged
+    // plan, and a pruning-behavior change (counters are exact-gated)
+    let points = planner_points_cached();
+    let baseline = Json::parse(&planner_doc(points).to_string()).unwrap();
+    // unperturbed: drift-free against its own serialization, or the CI
+    // gate would flap
+    let drifts = compare_planner_to_baseline(points, &baseline, BASELINE_DEFAULT_TOL);
+    assert!(drifts.is_empty(), "{drifts:?}");
+    // the planner picking a different (worse) plan
+    let mut tampered = points.to_vec();
+    tampered[0].mesh = "1x1x1x1x1".into();
+    let drifts = compare_planner_to_baseline(&tampered, &baseline, BASELINE_DEFAULT_TOL);
+    assert_eq!(drifts.len(), 1, "{drifts:?}");
+    assert!(
+        drifts[0].contains("mesh") && drifts[0].contains(&tampered[0].case),
+        "{drifts:?}"
+    );
+    // the same plan costed 10% worse
+    let mut tampered = points.to_vec();
+    tampered[1].step_s *= 1.10;
+    let drifts = compare_planner_to_baseline(&tampered, &baseline, BASELINE_DEFAULT_TOL);
+    assert_eq!(drifts.len(), 1, "{drifts:?}");
+    assert!(
+        drifts[0].contains("step_s") && drifts[0].contains(&tampered[1].case),
+        "{drifts:?}"
+    );
+    // a search-complexity change (e.g. a bound that stopped pruning)
+    let mut tampered = points.to_vec();
+    tampered[2].cost_pruned += 1;
+    let drifts = compare_planner_to_baseline(&tampered, &baseline, BASELINE_DEFAULT_TOL);
+    assert_eq!(drifts.len(), 1, "{drifts:?}");
+    assert!(
+        drifts[0].contains("cost_pruned") && drifts[0].contains(&tampered[2].case),
+        "{drifts:?}"
+    );
+}
+
+#[test]
+fn injected_pruning_bound_regression_is_caught() {
+    // the satellite acceptance check, end to end: break the pruning
+    // bounds for real (scale every lower bound by 1e6, making them
+    // wildly inadmissible — the search discards almost everything once
+    // the top-K first fills) and the gate must flag the damage against
+    // the admissible baseline: a worse chosen plan and/or the collapsed
+    // exact-gated search counters.
+    let good = planner_points_cached();
+    let baseline = Json::parse(&planner_doc(good).to_string()).unwrap();
+    let broken = planner_bench_points_scaled(1e6);
+    let evaluated_good: usize = good.iter().map(|p| p.evaluated).sum();
+    let evaluated_broken: usize = broken.iter().map(|p| p.evaluated).sum();
+    assert!(
+        evaluated_broken < evaluated_good,
+        "inadmissible bounds must visibly over-prune ({evaluated_broken} vs {evaluated_good})"
+    );
+    let drifts = compare_planner_to_baseline(&broken, &baseline, BASELINE_DEFAULT_TOL);
+    assert!(
+        !drifts.is_empty(),
+        "an inadmissible pruning bound must fail the planner gate"
+    );
+}
+
+#[test]
+fn committed_baseline_gates_the_planner() {
+    // the committed baseline must carry a planner_points section the CI
+    // gate compares (plans exactly, costs within tolerance, counters
+    // exactly).  Like the sim_points section, it is materialized on
+    // first run (or with UPDATE_GOLDEN=1) and committed; after that a
+    // drift here means planner behavior changed and the baseline must
+    // be regenerated *deliberately* with `bench_check --write`.
+    let path = axlearn::repo_root().join("benches/baseline.json");
+    let mut baseline = committed_baseline();
+    let points = planner_points_cached();
+    let missing = baseline.get("planner_points").is_none();
+    if std::env::var("UPDATE_GOLDEN").is_ok() || missing {
+        let doc = planner_doc(points);
+        if let (Json::Obj(map), Some(pp)) = (&mut baseline, doc.get("planner_points")) {
+            map.insert("planner_points".into(), pp.clone());
+        }
+        // write-then-rename: sibling tests read the file concurrently
+        let tmp = path.with_extension("json.planner.tmp");
+        std::fs::write(&tmp, baseline.to_string() + "\n")
+            .unwrap_or_else(|e| panic!("writing {}: {e}", tmp.display()));
+        std::fs::rename(&tmp, &path)
+            .unwrap_or_else(|e| panic!("renaming {}: {e}", tmp.display()));
+        return;
+    }
+    let drifts = compare_planner_to_baseline(points, &baseline, BASELINE_DEFAULT_TOL);
+    assert!(
+        drifts.is_empty(),
+        "committed planner points drifted (regenerate with bench_check --write):\n{drifts:#?}"
     );
 }
 

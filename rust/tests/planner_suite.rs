@@ -1,0 +1,377 @@
+//! Tier-1 suite for the auto-sharding planner (`composer/planner.rs`):
+//!
+//! * **equivalence** — on every grid the exhaustive sweep covers (8-,
+//!   16-, and 256-device shapes, dense + MoE) the planner and its own
+//!   exhaustive enumeration return bit-identical winners, and the
+//!   shared cost evaluator reproduces every committed sweep row
+//!   bit-for-bit (the anti-drift regression the ISSUE calls out);
+//! * **properties** — over randomized shapes, pruning never discards
+//!   the true optimum and every recorded pruned branch's lower bound
+//!   strictly exceeded its incumbent;
+//! * **negative paths** — infeasible clusters return a structured
+//!   [`PlanError`] naming the binding constraint, never a panic, and
+//!   every planner winner passes the static verifier.
+//!
+//! Exact `step_s` ties are real (every dense non-TP mesh whose state
+//! and activations fit under `remat=none` costs exactly `compute_s`),
+//! so "recovers the sweep optimum bit-for-bit" is asserted the only
+//! sound way: the winner's cost columns equal the sweep optimum's
+//! bit-for-bit, and the winner is unique under the shared total order
+//! [`axlearn::composer::candidate_order`].
+
+use std::sync::OnceLock;
+
+use axlearn::composer::cost::{evaluate_candidate, CostModel};
+use axlearn::composer::mesh_sweep::{
+    mesh_sweep_points, sweep_shape_dense, sweep_shape_moe, MeshSweepPoint, SWEEP_CHIPS,
+    SWEEP_GLOBAL_BATCH, SWEEP_MESHES, SWEEP_MICROBATCHES, SWEEP_SEQ,
+};
+use axlearn::composer::plan::shape_from_config;
+use axlearn::composer::planner::{
+    exhaustive, plan, planner_rules, PlanError, PlannedMesh, PlannerRequest, SearchSpace,
+};
+use axlearn::composer::{materialize, verify_pipeline, verify_plan, verify_schedule, VerifyContext};
+use axlearn::config::registry::trainer_for_preset;
+use axlearn::perfmodel::chips;
+use axlearn::perfmodel::estimator::SystemProfile;
+use axlearn::perfmodel::{Strategy, TransformerShape};
+
+fn sweep() -> &'static [MeshSweepPoint] {
+    static POINTS: OnceLock<Vec<MeshSweepPoint>> = OnceLock::new();
+    POINTS.get_or_init(mesh_sweep_points)
+}
+
+/// Deterministic LCG so the "randomized" property shapes are stable
+/// across runs and machines.
+fn lcg(state: &mut u64, n: usize) -> usize {
+    *state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+    ((*state >> 33) as usize) % n.max(1)
+}
+
+fn assert_same_plan(fast: &PlannedMesh, slow: &PlannedMesh, label: &str) {
+    assert_eq!(fast.cost.mesh, slow.cost.mesh, "{label}: winning mesh");
+    assert_eq!(fast.cost.microbatches, slow.cost.microbatches, "{label}: microbatches");
+    assert_eq!(fast.cost.remat_request, slow.cost.remat_request, "{label}: remat request");
+    assert_eq!(fast.cost.remat_resolved, slow.cost.remat_resolved, "{label}: remat resolved");
+    assert_eq!(
+        fast.cost.step_s.to_bits(),
+        slow.cost.step_s.to_bits(),
+        "{label}: analytic step"
+    );
+    assert_eq!(
+        fast.sim_step_s.to_bits(),
+        slow.sim_step_s.to_bits(),
+        "{label}: simulated step"
+    );
+    // pruning may only *skip* candidates that provably cannot enter the
+    // top-K, so the full re-ranked survivor list is identical too
+    assert_eq!(fast.topk.len(), slow.topk.len(), "{label}: top-K size");
+    for (i, ((ca, sa), (cb, sb))) in fast.topk.iter().zip(slow.topk.iter()).enumerate() {
+        assert_eq!(ca.mesh, cb.mesh, "{label}: top-K[{i}] mesh");
+        assert_eq!(ca.microbatches, cb.microbatches, "{label}: top-K[{i}] microbatches");
+        assert_eq!(ca.step_s.to_bits(), cb.step_s.to_bits(), "{label}: top-K[{i}] step");
+        assert_eq!(sa.to_bits(), sb.to_bits(), "{label}: top-K[{i}] sim step");
+    }
+}
+
+/// The anti-drift satellite: the one shared evaluator reproduces every
+/// committed sweep row bit-for-bit, so the planner's cost column and
+/// the sweep's cost column *cannot* diverge — they are the same code.
+#[test]
+fn shared_evaluator_reproduces_every_sweep_row_bit_for_bit() {
+    let chip = chips::h100();
+    let profile = SystemProfile::axlearn();
+    let model = CostModel::new(&chip, &profile, SWEEP_GLOBAL_BATCH, SWEEP_SEQ);
+    let points = sweep();
+    assert_eq!(points.len(), SWEEP_MESHES.len());
+    for (point, &(d, p, f, m, e)) in points.iter().zip(SWEEP_MESHES.iter()) {
+        let shape = if e > 1 { sweep_shape_moe() } else { sweep_shape_dense() };
+        let strat = Strategy {
+            data: d,
+            fsdp: f,
+            tensor: m,
+            pipeline: p,
+            expert: e,
+            microbatches: if p > 1 { SWEEP_MICROBATCHES } else { 1 },
+        };
+        let c = evaluate_candidate(&model, &shape, &strat, "auto").unwrap().cost;
+        assert_eq!(c.mesh, point.mesh);
+        assert_eq!(c.fits, point.fits, "{}", c.mesh);
+        assert_eq!(c.microbatches, point.microbatches, "{}", c.mesh);
+        assert_eq!(c.moe, point.moe, "{}", c.mesh);
+        assert_eq!(c.schedule_entries, point.schedule_entries, "{}", c.mesh);
+        for (name, got, want) in [
+            ("bubble", c.bubble, point.bubble),
+            ("compute_s", c.compute_s, point.compute_s),
+            ("comm_s", c.comm_s, point.comm_s),
+            ("exposed_comm_s", c.exposed_comm_s, point.exposed_comm_s),
+            ("alltoall_s", c.alltoall_s, point.alltoall_s),
+            ("alltoall_analytic_s", c.alltoall_analytic_s, point.alltoall_analytic_s),
+            ("step_s", c.step_s, point.step_s),
+        ] {
+            assert_eq!(got.to_bits(), want.to_bits(), "{}: {name} {got} vs {want}", c.mesh);
+        }
+    }
+}
+
+/// Equivalence on every grid size the sweep's story covers, dense and
+/// MoE: branch-and-bound returns exactly what pricing every candidate
+/// returns.
+#[test]
+fn planner_matches_exhaustive_on_swept_grids() {
+    for chips_n in [8usize, 16, 256] {
+        for moe in [false, true] {
+            let shape = if moe { sweep_shape_moe() } else { sweep_shape_dense() };
+            let mut req =
+                PlannerRequest::new(shape, chips::h100(), chips_n, SWEEP_GLOBAL_BATCH, SWEEP_SEQ);
+            req.space = SearchSpace::sweep_compat();
+            let label = format!("{chips_n} chips, moe={moe}");
+            let fast = plan(&req).unwrap_or_else(|e| panic!("{label}: {e}"));
+            let slow = exhaustive(&req).unwrap_or_else(|e| panic!("{label}: {e}"));
+            assert_same_plan(&fast, &slow, &label);
+            assert!(fast.stats.evaluated <= slow.stats.evaluated, "{label}");
+            assert_eq!(slow.stats.cost_pruned, 0, "{label}: exhaustive must not prune");
+        }
+    }
+}
+
+/// The planner beats-or-ties every swept point, and on the dense grid
+/// it recovers the sweep optimum's step time *bit-for-bit*: the best
+/// dense sweep row costs exactly `compute_s` (no bubble, no exposed
+/// comm, gather/scatter fully hidden), which is also the planner's
+/// global compute floor, so the two must agree to the last bit.
+#[test]
+fn planner_recovers_the_swept_optimum() {
+    let best_dense = sweep()
+        .iter()
+        .filter(|p| p.fits && !p.moe)
+        .map(|p| p.step_s)
+        .min_by(f64::total_cmp)
+        .unwrap();
+    let mut req = PlannerRequest::new(
+        sweep_shape_dense(),
+        chips::h100(),
+        SWEEP_CHIPS,
+        SWEEP_GLOBAL_BATCH,
+        SWEEP_SEQ,
+    );
+    req.space = SearchSpace::sweep_compat();
+    let planned = plan(&req).unwrap();
+    assert_eq!(
+        planned.cost.step_s.to_bits(),
+        best_dense.to_bits(),
+        "planner {} at {} vs sweep optimum {}",
+        planned.cost.mesh,
+        planned.cost.step_s,
+        best_dense
+    );
+
+    // MoE: the best swept MoE row is one of the planner's candidates,
+    // so the planner's winner can only tie or beat it.
+    let best_moe = sweep()
+        .iter()
+        .filter(|p| p.fits && p.moe)
+        .map(|p| p.step_s)
+        .min_by(f64::total_cmp)
+        .unwrap();
+    let mut req = PlannerRequest::new(
+        sweep_shape_moe(),
+        chips::h100(),
+        SWEEP_CHIPS,
+        SWEEP_GLOBAL_BATCH,
+        SWEEP_SEQ,
+    );
+    req.space = SearchSpace::sweep_compat();
+    let planned = plan(&req).unwrap();
+    assert!(
+        planned.cost.step_s <= best_moe,
+        "planner {} at {} worse than swept MoE optimum {}",
+        planned.cost.mesh,
+        planned.cost.step_s,
+        best_moe
+    );
+}
+
+/// ~64 randomized shapes: the planner equals its exhaustive oracle
+/// bit-for-bit, its cost never exceeds the exhaustive cost, and every
+/// branch it pruned had a (scaled) lower bound strictly above the
+/// incumbent at prune time — pruning is sound, not lucky.
+#[test]
+fn property_randomized_shapes_planner_equals_exhaustive() {
+    let mut state: u64 = 0x243F_6A88_85A3_08D3;
+    for i in 0..64 {
+        let moe = lcg(&mut state, 2) == 1;
+        let mut shape = if moe { sweep_shape_moe() } else { TransformerShape::llama2_7b() };
+        shape.num_layers = [8, 12, 16, 24][lcg(&mut state, 4)];
+        shape.model_dim = [1024, 2048][lcg(&mut state, 2)];
+        if moe {
+            shape.num_experts = [4, 8][lcg(&mut state, 2)];
+        }
+        shape.name = format!("prop-{i}");
+        let chips_n = [8usize, 16, 32, 64][lcg(&mut state, 4)];
+        let global_batch = [64, 128][lcg(&mut state, 2)];
+        let seq_len = [2048, 4096][lcg(&mut state, 2)];
+        let mut req = PlannerRequest::new(shape, chips::h100(), chips_n, global_batch, seq_len);
+        req.space = SearchSpace {
+            microbatches: vec![4, 8],
+            remat: vec!["auto".into(), "none".into(), "full".into()],
+        };
+        req.topk = 1 + lcg(&mut state, 4);
+        let label = format!("shape {i}: {chips_n} chips, moe={moe}");
+        let fast = plan(&req).unwrap_or_else(|e| panic!("{label}: {e}"));
+        let slow = exhaustive(&req).unwrap_or_else(|e| panic!("{label}: {e}"));
+        assert_same_plan(&fast, &slow, &label);
+        assert!(fast.cost.step_s <= slow.cost.step_s, "{label}: planner cost regressed");
+        assert!(fast.stats.evaluated <= slow.stats.evaluated, "{label}");
+        for branch in &fast.stats.pruned {
+            assert!(
+                branch.lower_bound > branch.incumbent,
+                "{label}: pruned branch {} with bound {} <= incumbent {}",
+                branch.prefix,
+                branch.lower_bound,
+                branch.incumbent
+            );
+        }
+    }
+}
+
+/// A cluster whose HBM cannot hold the optimizer state at any sharding
+/// is a structured error naming the binding constraint — not a panic.
+#[test]
+fn infeasible_cluster_names_the_binding_constraint() {
+    // Llama2-70B on 8 H100s: 14 bytes/param fully sharded is ~120
+    // GB/chip against an ~74 GB budget.
+    let req =
+        PlannerRequest::new(TransformerShape::llama2_70b(), chips::h100(), 8, 1024, 4096);
+    match plan(&req) {
+        Err(PlanError::NoFeasiblePlan { binding, chips, detail, .. }) => {
+            assert_eq!(binding, "hbm-state");
+            assert_eq!(chips, 8);
+            assert!(detail.contains("GB"), "{detail}");
+        }
+        other => panic!("expected NoFeasiblePlan, got {other:?}"),
+    }
+}
+
+/// When the state floor fits but every priced leaf OOMs (a batch too
+/// large for an explicit `remat=none`), the error names `hbm` and
+/// carries a sample OOM message.
+#[test]
+fn all_leaves_oom_names_hbm() {
+    let mut req =
+        PlannerRequest::new(TransformerShape::llama2_7b(), chips::h100(), 8, 65536, 4096);
+    req.space = SearchSpace { microbatches: vec![8], remat: vec!["none".into()] };
+    match plan(&req) {
+        Err(PlanError::NoFeasiblePlan { binding, detail, .. }) => {
+            assert_eq!(binding, "hbm");
+            assert!(detail.contains("OOM"), "{detail}");
+        }
+        other => panic!("expected NoFeasiblePlan, got {other:?}"),
+    }
+}
+
+#[test]
+fn non_power_of_two_cluster_is_rejected() {
+    let req = PlannerRequest::new(TransformerShape::llama2_7b(), chips::h100(), 12, 64, 4096);
+    assert!(matches!(plan(&req), Err(PlanError::NotPowerOfTwo(12))));
+    let req = PlannerRequest::new(TransformerShape::llama2_7b(), chips::h100(), 0, 64, 4096);
+    assert!(matches!(plan(&req), Err(PlanError::NotPowerOfTwo(0))));
+}
+
+/// Fuzz: every planner winner passes the static verifier (the planner
+/// verifies internally; this re-checks from the outside so a future
+/// refactor cannot quietly drop the verification step).
+#[test]
+fn fuzz_planner_output_always_verifies() {
+    let chip = chips::h100();
+    let mut state: u64 = 0x1319_8A2E_0370_7344;
+    for i in 0..32 {
+        let moe = lcg(&mut state, 2) == 1;
+        let mut shape = if moe { sweep_shape_moe() } else { TransformerShape::llama2_7b() };
+        shape.num_layers = [8, 16, 32][lcg(&mut state, 3)];
+        shape.model_dim = [1024, 2048, 4096][lcg(&mut state, 3)];
+        shape.name = format!("fuzz-{i}");
+        let chips_n = [8usize, 16, 32, 64, 128][lcg(&mut state, 5)];
+        let global_batch = [128, 256][lcg(&mut state, 2)];
+        let mut req = PlannerRequest::new(shape, chip.clone(), chips_n, global_batch, 4096);
+        req.space = SearchSpace { microbatches: vec![8], remat: vec!["auto".into()] };
+        let label = format!("fuzz {i}: {chips_n} chips, moe={moe}");
+        let planned = plan(&req).unwrap_or_else(|e| panic!("{label}: {e}"));
+        let ctx = VerifyContext {
+            strategy: planned.strategy(),
+            shard_axes: vec!["fsdp".into(), "model".into()],
+            exact_payloads: false,
+            hbm_capacity: Some(chip.hbm_bytes),
+            aot_fits: Some(true),
+        };
+        let mut report = verify_schedule(&planned.schedule, Some(&planned.pipeline), &ctx);
+        report.diagnostics.extend(verify_pipeline(&planned.pipeline));
+        assert!(report.is_clean(), "{label}:\n{}", report.render());
+    }
+}
+
+/// The `planner` rule kind: a `planner-*` instance type plans on the
+/// fly and flows through the normal `mesh_rules` → `materialize` →
+/// `verify_plan` path like any hand-written preset, and what
+/// `materialize` resolves matches an independent `plan()` call.
+#[test]
+fn planner_rule_materializes_a_verified_plan() {
+    let rules = planner_rules();
+    let trainer = trainer_for_preset("small").unwrap();
+    let plan_obj = materialize(&trainer, "planner-gpu-H100-256", 256, &rules).unwrap();
+    assert_eq!(plan_obj.strategy.total_chips(), 256);
+    let report = verify_plan(&plan_obj).unwrap();
+    assert!(report.is_clean(), "{}", report.render());
+
+    // independent re-plan from the same inputs agrees with what the
+    // rule wrote into the config
+    let shape = shape_from_config(&trainer).unwrap();
+    let input = trainer.at_path("input").unwrap();
+    let global_batch = input.get_int("batch_size").unwrap().max(1) as usize;
+    let seq_len = input.get_int("seq_len").unwrap().max(1) as usize;
+    let req = PlannerRequest::new(
+        shape,
+        chips::h100(),
+        256,
+        global_batch.max(256),
+        seq_len,
+    );
+    let planned = plan(&req).unwrap();
+    assert_eq!(plan_obj.strategy, planned.strategy());
+    assert_eq!(plan_obj.remat_policy, planned.cost.remat_resolved);
+
+    // non-planner instance strings still resolve through the static
+    // Appendix-A table
+    let mut cfg = trainer_for_preset("small").unwrap();
+    let matched = rules.apply("gpu-H100-64", &mut cfg).unwrap();
+    assert_eq!(matched.as_deref(), Some("gpu-H100-*"));
+}
+
+/// The ISSUE's acceptance scale, in tier-1 form: a 16384-chip cluster
+/// plans a verified 5-axis mesh with the full search space.  (The <5 s
+/// latency bar is measured and gated by `bench_planner` in release
+/// builds, where it belongs; a debug-build wall-clock assert would gate
+/// compiler flags, not the planner.)
+#[test]
+fn sixteen_thousand_chip_cluster_plans_and_verifies() {
+    let req = PlannerRequest::new(
+        TransformerShape::llama2_70b(),
+        chips::h100(),
+        16384,
+        16384,
+        4096,
+    );
+    let planned = plan(&req).unwrap();
+    assert_eq!(planned.strategy().total_chips(), 16384);
+    assert!(planned.cost.fits);
+    assert_eq!(planned.netsim_hosts, 256, "re-rank simulates the bounded fabric slice");
+    assert!(
+        planned.stats.cost_pruned + planned.stats.memory_pruned > 0,
+        "at 16k chips the bounds must be doing real work"
+    );
+    // MoE at the same scale: the sixth axis rides the same search
+    let req = PlannerRequest::new(sweep_shape_moe(), chips::h100(), 16384, 16384, 4096);
+    let planned = plan(&req).unwrap();
+    assert_eq!(planned.strategy().total_chips(), 16384);
+    assert!(planned.cost.fits);
+}
