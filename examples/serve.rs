@@ -70,6 +70,7 @@ fn main() -> anyhow::Result<()> {
             slots: 8,
             kv_pages: 2048,
             page_tokens: 16,
+            ..Default::default()
         },
     )?;
     let ax = engine.run(&workload)?;

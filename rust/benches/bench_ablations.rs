@@ -90,6 +90,7 @@ fn main() {
             slots,
             kv_pages: 4096,
             page_tokens: 16,
+            ..Default::default()
         });
         for r in &w.requests {
             b.enqueue(r.clone());

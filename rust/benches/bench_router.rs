@@ -1,12 +1,20 @@
-//! Bench: fleet throughput vs replica count (1/2/4/8) under Poisson
-//! arrivals on the mock backend — the router's scaling trajectory.
-//! Pure virtual time (no artifacts needed); emits JSON for tracking.
+//! Bench: the serving curve — p50/p99 TTFT, tokens/s, and
+//! goodput-under-SLO vs offered load, comparing the whole-replica
+//! single-pool router against the disaggregated prefill/decode fleet
+//! at an equal chip budget (see `axlearn::serving::router_bench`),
+//! plus the original fleet-scaling table.  Pure virtual time (no
+//! artifacts needed); writes the `router_points` document to
+//! `$BENCH_JSON_DIR/bench_router.json` when that variable is set so
+//! `bench_check --router-json` can gate it against
+//! `benches/baseline.json`.
 
 use axlearn::runtime::backend::{ComputeBackend, MockBackend};
-use axlearn::serving::{BatcherOptions, ReplicaRouter, RouterOptions, Workload, WorkloadOptions};
-use axlearn::util::json::Json;
+use axlearn::serving::{
+    dominance_violations, router_bench_points, router_doc, BatcherOptions, ReplicaRouter,
+    RouterOptions, Workload, WorkloadOptions, ROUTER_SLO_TTFT_S,
+};
 
-fn main() {
+fn fleet_scaling() {
     let w = Workload::sharegpt_like(WorkloadOptions {
         num_requests: 512,
         request_rate: 2000.0, // saturating Poisson arrivals
@@ -20,7 +28,6 @@ fn main() {
         "{:>9} {:>14} {:>12} {:>12}",
         "Replicas", "Tokens/s", "TTFT(ms)", "Makespan(s)"
     );
-    let mut points = Vec::new();
     let mut prev = 0.0f64;
     for replicas in [1usize, 2, 4, 8] {
         let backends: Vec<Box<dyn ComputeBackend>> = (0..replicas)
@@ -49,19 +56,46 @@ fn main() {
             report.stats.mean_ttft_s * 1e3,
             report.stats.makespan_s
         );
-        points.push(Json::obj(vec![
-            ("replicas", Json::num(replicas as f64)),
-            ("throughput_tok_s", Json::num(report.stats.throughput_tok_s)),
-            ("mean_ttft_s", Json::num(report.stats.mean_ttft_s)),
-            ("p99_ttft_s", Json::num(report.stats.p99_ttft_s)),
-            ("makespan_s", Json::num(report.stats.makespan_s)),
-        ]));
     }
-    let doc = Json::obj(vec![
-        ("bench", Json::str("router_fleet")),
-        ("backend", Json::str("mock")),
-        ("num_requests", Json::num(512.0)),
-        ("points", Json::Arr(points)),
-    ]);
-    println!("\nJSON: {}", doc.to_string());
+}
+
+fn main() {
+    fleet_scaling();
+
+    println!(
+        "\n=== Serving curve: single pool vs disaggregated at equal chips \
+         (TTFT SLO {:.0} ms) ===\n",
+        ROUTER_SLO_TTFT_S * 1e3
+    );
+    println!(
+        "{:>12} {:>12} {:>12} {:>12} {:>12} {:>12} {:>9}",
+        "Config", "Load(r/s)", "p50TTFT(ms)", "p99TTFT(ms)", "Tok/s", "Goodput", "SLO%"
+    );
+    let points = router_bench_points().expect("router bench curve");
+    for p in &points {
+        println!(
+            "{:>12} {:>12.0} {:>12.2} {:>12.2} {:>12.0} {:>12.0} {:>8.1}%",
+            p.config,
+            p.offered_req_s,
+            p.p50_ttft_s * 1e3,
+            p.p99_ttft_s * 1e3,
+            p.throughput_tok_s,
+            p.goodput_tok_s,
+            p.slo_frac * 100.0
+        );
+    }
+    // the headline claim: once the single pool saturates, disaggregation
+    // strictly wins on goodput-under-SLO
+    let violations = dominance_violations(&points, 2);
+    assert!(violations.is_empty(), "{violations:?}");
+
+    let doc = router_doc(&points);
+    let text = doc.to_string();
+    println!("\nJSON: {text}");
+    if let Ok(dir) = std::env::var("BENCH_JSON_DIR") {
+        let path = std::path::Path::new(&dir).join("bench_router.json");
+        std::fs::create_dir_all(&dir).expect("create BENCH_JSON_DIR");
+        std::fs::write(&path, &text).expect("write bench_router.json");
+        println!("wrote {}", path.display());
+    }
 }

@@ -1,0 +1,265 @@
+//! The shared backend core: one home for what the serving and training
+//! compute boundaries have in common.
+//!
+//! [`crate::runtime::backend::ComputeBackend`] (serving) and
+//! [`crate::trainer::backend::TrainBackend`] (training) grew as mirror
+//! images — each with a deterministic mock, a PJRT substrate, and a
+//! config constructor that dispatched only its own family.  This module
+//! hosts the shared substance so the mirrors stay in lockstep:
+//!
+//! * the deterministic mixers every simulated substrate derives its
+//!   token streams and parameter noise from (bit-exactness here is a
+//!   crate-wide invariant — golden benches, determinism suites, and the
+//!   disaggregated-serving bit-identity tests all pin these outputs);
+//! * one registry path: [`any_backend_from_config`] accepts any
+//!   registered backend klass — serve or train, mock, analytic, PJRT,
+//!   or a whole `MeshTrainer` composition — and returns an
+//!   [`AnyBackend`].  The per-family constructors
+//!   ([`serve_backend_from_config`], [`train_backend_from_config`])
+//!   live here too; `runtime::backend` and `trainer::backend` re-export
+//!   thin delegates for source compatibility.
+//!
+//! See `docs/serving.md` for how the serving engine composes over this
+//! boundary.
+
+use anyhow::{Context, Result};
+
+use crate::config::ConfigNode;
+use crate::perfmodel::chips;
+use crate::perfmodel::model_shapes::TransformerShape;
+use crate::runtime::backend::{
+    AnalyticBackend, AnalyticBackendOptions, ComputeBackend, MockBackend, MockBackendOptions,
+};
+use crate::trainer::backend::{MockTrainBackend, MockTrainBackendOptions, TrainBackend};
+
+// ---------------------------------------------------------------------------
+// Deterministic mixers (shared by every simulated substrate)
+// ---------------------------------------------------------------------------
+//
+// Two related-but-distinct mixing families live here on purpose.  The
+// serving mixer (`synth_token` / `prompt_digest`) is a two-round
+// SplitMix64 variant over signed digests; the training mixer (`mix` /
+// `unit` / `digest`) is the full three-round SplitMix64 over unsigned
+// digests.  They were born independently and their outputs are pinned by
+// golden files and bit-identity suites — do NOT "unify" the arithmetic.
+
+/// Deterministic pseudo-token shared by the simulated serving backends:
+/// mock and analytic emit identical streams, which makes their
+/// scheduling traces comparable in tests (on burst workloads, where the
+/// differing per-call costs cannot shift admission timing).  The
+/// mesh-sharded and disaggregated serving paths reuse it so pool
+/// topology can never change the emitted tokens.
+pub fn synth_token(a: i64, b: i64, vocab: usize) -> i32 {
+    let mut z = (a as u64)
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add((b as u64).wrapping_mul(0xBF58_476D_1CE4_E5B9));
+    z ^= z >> 29;
+    (z % vocab.max(1) as u64) as i32
+}
+
+/// Order-sensitive fold of a prompt into the seed for its first token.
+pub fn prompt_digest(prompt: &[i32]) -> i64 {
+    prompt
+        .iter()
+        .fold(0i64, |acc, t| acc.wrapping_mul(31).wrapping_add(*t as i64))
+}
+
+/// SplitMix64-style mixer shared by the mock train backend's init and
+/// gradient noise.
+pub fn mix(a: u64, b: u64) -> u64 {
+    let mut z = a
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add(b.wrapping_mul(0xBF58_476D_1CE4_E5B9));
+    z ^= z >> 30;
+    z = z.wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Deterministic value in [-1, 1).
+pub fn unit(h: u64) -> f32 {
+    ((h % 2048) as f32 / 1024.0) - 1.0
+}
+
+/// Order-sensitive fold of a token batch into a mixing seed.
+pub fn digest(tokens: &[i32]) -> u64 {
+    tokens
+        .iter()
+        .fold(0u64, |acc, t| acc.wrapping_mul(31).wrapping_add(*t as u32 as u64))
+}
+
+// ---------------------------------------------------------------------------
+// One registry path
+// ---------------------------------------------------------------------------
+
+/// A constructed backend of either family.  What [`any_backend_from_config`]
+/// returns: callers that genuinely serve or train match on the variant;
+/// callers that only introspect use [`AnyBackend::name`].
+pub enum AnyBackend {
+    Serve(Box<dyn ComputeBackend>),
+    Train(Box<dyn TrainBackend>),
+}
+
+impl AnyBackend {
+    /// The backend's self-reported name (capabilities / descriptor).
+    pub fn name(&self) -> &str {
+        match self {
+            AnyBackend::Serve(b) => &b.capabilities().name,
+            AnyBackend::Train(b) => &b.descriptor().name,
+        }
+    }
+
+    pub fn is_serve(&self) -> bool {
+        matches!(self, AnyBackend::Serve(_))
+    }
+
+    pub fn is_train(&self) -> bool {
+        matches!(self, AnyBackend::Train(_))
+    }
+}
+
+fn shape_by_name(name: &str) -> Option<TransformerShape> {
+    match name {
+        "llama2_7b" => Some(TransformerShape::llama2_7b()),
+        "llama2_70b" => Some(TransformerShape::llama2_70b()),
+        other => TransformerShape::preset(other),
+    }
+}
+
+/// Build a serving backend from its registered config (`MockBackend` /
+/// `AnalyticBackend`). `PjrtBackend` configs carry only the preset name —
+/// the session needs a live PJRT client, so construct those with
+/// [`crate::runtime::backend::PjrtBackend::new`] and an opened
+/// [`crate::runtime::ServeSession`].
+pub fn serve_backend_from_config(cfg: &ConfigNode) -> Result<Box<dyn ComputeBackend>> {
+    match cfg.klass.as_str() {
+        "MockBackend" => {
+            let opts = MockBackendOptions {
+                prefill_base_s: cfg.get_float("prefill_base_s")?,
+                prefill_per_token_s: cfg.get_float("prefill_per_token_s")?,
+                decode_round_s: cfg.get_float("decode_round_s")?,
+                vocab: cfg.get_int("vocab")? as usize,
+                ..Default::default()
+            };
+            Ok(Box::new(MockBackend::new(opts)))
+        }
+        "AnalyticBackend" => {
+            let chip_name = cfg.get_str("chip")?;
+            let chip = chips::by_instance_type(&chip_name)
+                .with_context(|| format!("AnalyticBackend: unknown chip {chip_name:?}"))?;
+            let model = cfg.get_str("model")?;
+            let shape = shape_by_name(&model)
+                .with_context(|| format!("AnalyticBackend: unknown model {model:?}"))?;
+            let opts = AnalyticBackendOptions {
+                shape,
+                chip,
+                chips: cfg.get_int("chips")? as usize,
+                weight_bytes_per_param: cfg.get_float("weight_bytes_per_param")?,
+                ..Default::default()
+            };
+            Ok(Box::new(AnalyticBackend::new(opts)))
+        }
+        "PjrtBackend" => anyhow::bail!(
+            "PjrtBackend config (preset {:?}) needs a live runtime: open a ServeSession and use PjrtBackend::new",
+            cfg.get_str("preset").unwrap_or_default()
+        ),
+        other => anyhow::bail!("not a ComputeBackend config: {other:?}"),
+    }
+}
+
+/// Build a train backend from its registered config (`MockTrainBackend`).
+/// `PjrtTrainBackend` configs carry only the artifact family — the
+/// session needs a live PJRT client, so construct those with
+/// [`crate::trainer::backend::PjrtTrainBackend::open`].
+pub fn train_backend_from_config(cfg: &ConfigNode) -> Result<Box<dyn TrainBackend>> {
+    match cfg.klass.as_str() {
+        "MockTrainBackend" => {
+            let opts = MockTrainBackendOptions {
+                dim: cfg.get_int("dim")? as usize,
+                batch: cfg.get_int("batch")? as usize,
+                seq: cfg.get_int("seq")? as usize,
+                vocab: cfg.get_int("vocab")? as usize,
+                lr: cfg.get_float("lr")? as f32,
+            };
+            Ok(Box::new(MockTrainBackend::new(opts)))
+        }
+        "PjrtTrainBackend" => anyhow::bail!(
+            "PjrtTrainBackend config (artifact {:?}) needs a live runtime: use PjrtTrainBackend::open",
+            cfg.get_str("artifact").unwrap_or_default()
+        ),
+        other => anyhow::bail!("not a TrainBackend config: {other:?}"),
+    }
+}
+
+/// The one registry path: construct *any* registered backend config —
+/// serving or training, including mesh-sharded `MeshTrainer`
+/// compositions — and say which family it belongs to.
+pub fn any_backend_from_config(cfg: &ConfigNode) -> Result<AnyBackend> {
+    match cfg.klass.as_str() {
+        "MockBackend" | "AnalyticBackend" | "PjrtBackend" => {
+            Ok(AnyBackend::Serve(serve_backend_from_config(cfg)?))
+        }
+        "MockTrainBackend" | "PjrtTrainBackend" => {
+            Ok(AnyBackend::Train(train_backend_from_config(cfg)?))
+        }
+        "MeshTrainer" => Ok(AnyBackend::Train(
+            crate::distributed::mesh::mesh_backend_from_config(cfg)?,
+        )),
+        other => anyhow::bail!(
+            "not a backend config: {other:?} (expected a ComputeBackend, TrainBackend, or MeshTrainer klass)"
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::registry::default_config;
+
+    #[test]
+    fn serving_mixer_matches_pinned_vectors() {
+        // pinned outputs: the serving token function is load-bearing for
+        // golden benches and the disagg bit-identity suite
+        assert_eq!(synth_token(0, 0, 2048), 0);
+        assert_eq!(synth_token(12345, 6789, 2048), 1438);
+        assert_eq!(prompt_digest(&[1, 2, 3]), (1 * 31 + 2) * 31 + 3);
+        assert_eq!(prompt_digest(&[]), 0);
+    }
+
+    #[test]
+    fn training_mixer_matches_pinned_vectors() {
+        let h = mix(7, 9);
+        assert_eq!(h, mix(7, 9));
+        assert_ne!(mix(7, 9), mix(9, 7), "mix must be order-sensitive");
+        let u = unit(h);
+        assert!((-1.0..1.0).contains(&u));
+        assert_eq!(digest(&[1, 2, 3]), (31u64 + 2) * 31 + 3);
+    }
+
+    #[test]
+    fn the_two_mixer_families_differ() {
+        // same magic constants up front, different finalization — a
+        // regression guard against an accidental "unification" that
+        // would silently retune every golden file
+        let vocab = 1usize << 31;
+        assert_eq!(synth_token(42, 43, vocab), 2_076_528_528);
+        assert_eq!(mix(42, 43) % vocab as u64, 2_035_559_971);
+    }
+
+    #[test]
+    fn any_backend_dispatches_both_families() {
+        let s = any_backend_from_config(&default_config("MockBackend").unwrap()).unwrap();
+        assert!(s.is_serve());
+        assert_eq!(s.name(), "mock");
+        let t = any_backend_from_config(&default_config("MockTrainBackend").unwrap()).unwrap();
+        assert!(t.is_train());
+        assert_eq!(t.name(), "mock-train");
+        let m = any_backend_from_config(&default_config("MeshTrainer").unwrap()).unwrap();
+        assert!(m.is_train());
+        // live-runtime configs compose but cannot be constructed headless
+        assert!(any_backend_from_config(&default_config("PjrtBackend").unwrap()).is_err());
+        assert!(any_backend_from_config(&default_config("PjrtTrainBackend").unwrap()).is_err());
+        // non-backend klasses are rejected with the family hint
+        let err = any_backend_from_config(&ConfigNode::new("ServeRouter")).unwrap_err();
+        assert!(err.to_string().contains("not a backend config"));
+    }
+}

@@ -20,10 +20,16 @@
 //! enforces the per-case planning latency budget
 //! ([`axlearn::composer::planner::PLANNER_LATENCY_BUDGET_S`]).
 //!
+//! The serving curve is gated the same way: the deterministic router
+//! bench (`axlearn::serving::router_bench`) is recomputed, its
+//! goodput-under-SLO dominance claim re-checked, and its
+//! `router_points` section compared against the baseline.
+//!
 //! ```text
 //! bench_check [--baseline <path>] [--json <bench_mesh.json>]
 //!             [--sim-json <bench_sim.json>]
-//!             [--planner-json <bench_planner.json>] [--tol <rel>] [--write]
+//!             [--planner-json <bench_planner.json>]
+//!             [--router-json <bench_router.json>] [--tol <rel>] [--write]
 //! ```
 //!
 //! * `--baseline` — baseline document (default `benches/baseline.json`
@@ -35,6 +41,8 @@
 //!   section (its wall-clock series is reported, never gated).
 //! * `--planner-json` — likewise for the `bench_planner` artifact's
 //!   `planner_points` section.
+//! * `--router-json` — likewise for the `bench_router` artifact's
+//!   `router_points` section.
 //! * `--tol` — relative drift tolerance for the step-time sweep
 //!   (default [`axlearn::composer::BASELINE_DEFAULT_TOL`]); the counter
 //!   sweep is always compared exactly.
@@ -56,12 +64,15 @@ use axlearn::composer::{
     compare_to_baseline, lint_sweep, mesh_sweep_doc, mesh_sweep_points, BASELINE_DEFAULT_TOL,
 };
 use axlearn::distributed::sim_bench::{compare_sim_to_baseline, sim_counter_points, sim_doc};
+use axlearn::serving::{
+    compare_router_to_baseline, dominance_violations, router_bench_points, router_doc,
+};
 use axlearn::util::json::Json;
 
 fn usage() -> ExitCode {
     eprintln!(
         "usage: bench_check [--baseline <path>] [--json <path>] [--sim-json <path>] \
-         [--planner-json <path>] [--tol <rel>] [--write]"
+         [--planner-json <path>] [--router-json <path>] [--tol <rel>] [--write]"
     );
     ExitCode::from(2)
 }
@@ -71,6 +82,7 @@ fn main() -> ExitCode {
     let mut bench_json: Option<PathBuf> = None;
     let mut sim_json: Option<PathBuf> = None;
     let mut planner_json: Option<PathBuf> = None;
+    let mut router_json: Option<PathBuf> = None;
     let mut tol = BASELINE_DEFAULT_TOL;
     let mut write = false;
     let mut args = std::env::args().skip(1);
@@ -90,6 +102,10 @@ fn main() -> ExitCode {
             },
             "--planner-json" => match args.next() {
                 Some(p) => planner_json = Some(PathBuf::from(p)),
+                None => return usage(),
+            },
+            "--router-json" => match args.next() {
+                Some(p) => router_json = Some(PathBuf::from(p)),
                 None => return usage(),
             },
             "--tol" => match args.next().and_then(|t| t.parse::<f64>().ok()) {
@@ -123,6 +139,13 @@ fn main() -> ExitCode {
     let points = mesh_sweep_points();
     let sim_points = sim_counter_points();
     let planner_points = planner_bench_points();
+    let router_points = match router_bench_points() {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("bench_check: running the router bench: {e:#}");
+            return ExitCode::FAILURE;
+        }
+    };
     if write {
         let mut doc = mesh_sweep_doc(&points);
         let sim = sim_doc(&sim_points);
@@ -133,6 +156,10 @@ fn main() -> ExitCode {
         if let (Json::Obj(map), Some(pp)) = (&mut doc, planner.get("planner_points")) {
             map.insert("planner_points".into(), pp.clone());
         }
+        let router = router_doc(&router_points);
+        if let (Json::Obj(map), Some(rp)) = (&mut doc, router.get("router_points")) {
+            map.insert("router_points".into(), rp.clone());
+        }
         let text = doc.to_string();
         if let Err(e) = std::fs::write(&baseline_path, text + "\n") {
             eprintln!("bench_check: writing {}: {e}", baseline_path.display());
@@ -140,11 +167,13 @@ fn main() -> ExitCode {
         }
         println!(
             "bench_check: wrote {} ({} step-time points, {} counter points, \
-             {} planner points) — commit it with the change that moved the numbers",
+             {} planner points, {} router points) — commit it with the change \
+             that moved the numbers",
             baseline_path.display(),
             points.len(),
             sim_points.len(),
-            planner_points.len()
+            planner_points.len(),
+            router_points.len()
         );
         return ExitCode::SUCCESS;
     }
@@ -177,13 +206,40 @@ fn main() -> ExitCode {
         }
     }
 
-    // (label, path, gate step-time sweep?, gate counter sweep?, gate planner?)
-    for (label, path, mesh_gate, sim_gate, planner_gate) in
-        std::iter::once(("baseline", baseline_path.clone(), true, true, true))
-            .chain(bench_json.into_iter().map(|p| ("bench artifact", p, true, false, false)))
-            .chain(sim_json.into_iter().map(|p| ("sim artifact", p, false, true, false)))
+    // The serving curve's headline claim must hold before its numbers
+    // are worth comparing: at the top offered loads the disaggregated
+    // fleet strictly beats the single pool on goodput-under-SLO.
+    let violations = dominance_violations(&router_points, 2);
+    if violations.is_empty() {
+        println!(
+            "bench_check: router curve OK ({} points; disagg dominates goodput at the \
+             top 2 loads)",
+            router_points.len()
+        );
+    } else {
+        eprintln!("bench_check: router goodput dominance violated:");
+        for v in &violations {
+            eprintln!("  {v}");
+        }
+        failed = true;
+    }
+
+    // (label, path, gate step-time sweep?, counter sweep?, planner?, router?)
+    for (label, path, mesh_gate, sim_gate, planner_gate, router_gate) in
+        std::iter::once(("baseline", baseline_path.clone(), true, true, true, true))
             .chain(
-                planner_json.into_iter().map(|p| ("planner artifact", p, false, false, true)),
+                bench_json.into_iter().map(|p| ("bench artifact", p, true, false, false, false)),
+            )
+            .chain(sim_json.into_iter().map(|p| ("sim artifact", p, false, true, false, false)))
+            .chain(
+                planner_json
+                    .into_iter()
+                    .map(|p| ("planner artifact", p, false, false, true, false)),
+            )
+            .chain(
+                router_json
+                    .into_iter()
+                    .map(|p| ("router artifact", p, false, false, false, true)),
             )
     {
         let text = match std::fs::read_to_string(&path) {
@@ -213,15 +269,19 @@ fn main() -> ExitCode {
         if planner_gate {
             drifts.extend(compare_planner_to_baseline(&planner_points, &doc, tol));
         }
+        if router_gate {
+            drifts.extend(compare_router_to_baseline(&router_points, &doc, tol));
+        }
         if drifts.is_empty() {
             println!(
                 "bench_check: {label} {} OK ({} points within {:.3}% relative; \
-                 {} counter points exact; {} planner points)",
+                 {} counter points exact; {} planner points; {} router points)",
                 path.display(),
                 if mesh_gate { points.len() } else { 0 },
                 tol * 100.0,
                 if sim_gate { sim_points.len() } else { 0 },
-                if planner_gate { planner_points.len() } else { 0 }
+                if planner_gate { planner_points.len() } else { 0 },
+                if router_gate { router_points.len() } else { 0 }
             );
         } else {
             eprintln!(

@@ -48,6 +48,16 @@ fn main() -> ExitCode {
         }
     };
     rows.extend(lint_sweep());
+    // serving targets lint through the same gate: every serve-* preset's
+    // lowered schedule (TP all-reduce, MoE all-to-all pair, KV-handoff
+    // P2P) must satisfy the same static checks as the trainer plans
+    match axlearn::serving::lint_serve_presets() {
+        Ok(serve_rows) => rows.extend(serve_rows),
+        Err(e) => {
+            eprintln!("verify: lowering serve presets: {e:#}");
+            return ExitCode::FAILURE;
+        }
+    }
 
     let mut diagnostics = 0usize;
     for (label, report) in &rows {

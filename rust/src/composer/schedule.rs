@@ -624,6 +624,131 @@ pub fn build_schedule(
     CollectiveSchedule::new(entries)
 }
 
+// ---------------------------------------------------------------------------
+// Serving lowering (disaggregated prefill/decode, TP×EP replicas)
+// ---------------------------------------------------------------------------
+
+/// How a serving replica group lowers to the composer layer.
+///
+/// Disaggregated serving reuses the training mesh vocabulary: a replica
+/// is a TP×EP-sharded subgroup, the prefill→decode pools are the two
+/// stages of a `pipeline = 2` axis, and the KV-cache handoff between
+/// them is a [`Collective::P2P`] entry sized from the paged allocator's
+/// block geometry.  Lowering through [`ScheduleEntry`] means the static
+/// verifier ([`crate::composer::verify`]) and the flow simulator
+/// ([`crate::netsim`]) apply to serving schedules unchanged.
+#[derive(Clone, Debug)]
+pub struct ServeLowering {
+    /// The training-strategy view of the serve replica group:
+    /// `tensor = tp`, `expert = ep`, `pipeline = 2` (prefill stage,
+    /// decode stage), everything else 1 — so
+    /// [`crate::composer::verify::VerifyContext::for_strategy`] applies
+    /// directly.
+    pub strategy: Strategy,
+    /// The lowered communication plan of one served request.
+    pub schedule: CollectiveSchedule,
+    /// KV-cache handoff payload, rounded up to whole pages (the unit
+    /// the paged allocator actually transfers).
+    pub kv_handoff_bytes: f64,
+}
+
+/// Lower a serve replica group into its collective schedule.
+///
+/// Three entry families, mirroring what a disaggregated request pays:
+///
+/// * `tp ≥ 2`: the tensor-parallel activation all-reduce on the
+///   `model` axis — the per-layer sync every prefill/decode step runs
+///   (exposed: it sits on the token critical path).
+/// * `ep ≥ 2`: the MoE dispatch/combine all-to-all pair on the
+///   `expert` axis — the same entries the training lowering emits, so
+///   the verifier's bucket-conservation check applies.
+/// * always: the prefill→decode KV-cache handoff as a 2-party
+///   [`Collective::P2P`] on the `pipeline` axis, sized in whole KV
+///   pages (`ceil(max_seq / page_tokens) · page_tokens ·
+///   kv_bytes_per_token`); exposed, because the decode pool cannot
+///   start before the cache lands.
+pub fn build_serve_schedule(
+    tp: usize,
+    ep: usize,
+    hidden_dim: usize,
+    max_seq: usize,
+    page_tokens: usize,
+    kv_bytes_per_token: f64,
+    ic: &Interconnect,
+) -> Result<ServeLowering> {
+    anyhow::ensure!(tp >= 1 && ep >= 1, "tp and ep must be >= 1 (got tp={tp}, ep={ep})");
+    anyhow::ensure!(hidden_dim >= 1, "hidden_dim must be >= 1");
+    anyhow::ensure!(max_seq >= 1, "max_seq must be >= 1");
+    anyhow::ensure!(page_tokens >= 1, "page_tokens must be >= 1");
+    anyhow::ensure!(
+        kv_bytes_per_token > 0.0 && kv_bytes_per_token.is_finite(),
+        "kv_bytes_per_token must be positive and finite"
+    );
+    let strategy = Strategy {
+        data: 1,
+        fsdp: 1,
+        tensor: tp,
+        pipeline: 2,
+        expert: ep,
+        microbatches: 2,
+    };
+    let chips = strategy.total_chips().max(1);
+
+    // bf16 activations for one full-length sequence
+    let act_bytes = max_seq as f64 * hidden_dim as f64 * 2.0;
+    let pages = max_seq.div_ceil(page_tokens);
+    let kv_handoff_bytes = (pages * page_tokens) as f64 * kv_bytes_per_token;
+
+    let mut entries = Vec::new();
+    if tp > 1 {
+        entries.push(ScheduleEntry {
+            phase: SchedulePhase::Compute,
+            collective: Collective::AllReduce,
+            axis: "model".into(),
+            group: tp,
+            count: chips / tp,
+            tensor: "activations".into(),
+            bytes: act_bytes,
+            cost_s: hierarchical(Collective::AllReduce, act_bytes, tp, ic),
+            rounds: 1,
+            overlappable: false,
+        });
+    }
+    if ep > 1 {
+        for tensor in ["moe-dispatch", "moe-combine"] {
+            entries.push(ScheduleEntry {
+                phase: SchedulePhase::Compute,
+                collective: Collective::AllToAll,
+                axis: "expert".into(),
+                group: ep,
+                count: chips / ep,
+                tensor: tensor.into(),
+                bytes: act_bytes,
+                cost_s: hierarchical(Collective::AllToAll, act_bytes, ep, ic),
+                rounds: 1,
+                overlappable: true,
+            });
+        }
+    }
+    entries.push(ScheduleEntry {
+        phase: SchedulePhase::Update,
+        collective: Collective::P2P,
+        axis: "pipeline".into(),
+        group: 2,
+        count: chips / 2,
+        tensor: "kv-handoff".into(),
+        bytes: kv_handoff_bytes,
+        cost_s: hierarchical(Collective::P2P, kv_handoff_bytes, 2, ic),
+        rounds: 1,
+        overlappable: false,
+    });
+    Ok(ServeLowering {
+        strategy,
+        schedule: CollectiveSchedule::new(entries),
+        kv_handoff_bytes,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -961,5 +1086,56 @@ mod tests {
         for e in &s.entries {
             assert!(table.contains(&e.tensor), "{table}");
         }
+    }
+
+    #[test]
+    fn serve_schedule_verifies_clean_across_tp_ep() {
+        use crate::composer::verify::{verify_schedule, VerifyContext};
+        for (tp, ep) in [(1, 1), (2, 1), (4, 1), (2, 2), (4, 2), (1, 4)] {
+            let low = build_serve_schedule(tp, ep, 512, 1024, 16, 64.0, &local_interconnect())
+                .unwrap();
+            assert_eq!(low.strategy.total_chips(), 2 * tp * ep);
+            let ctx = VerifyContext::for_strategy(&low.strategy);
+            let report = verify_schedule(&low.schedule, None, &ctx);
+            assert!(report.is_clean(), "tp={tp} ep={ep}: {}", report.render());
+            // the KV handoff is always present and exposed
+            let handoff: Vec<_> = low
+                .schedule
+                .entries
+                .iter()
+                .filter(|e| e.tensor == "kv-handoff")
+                .collect();
+            assert_eq!(handoff.len(), 1);
+            assert_eq!(handoff[0].collective, Collective::P2P);
+            assert!(!handoff[0].overlappable);
+            // TP and EP entries appear exactly when the axis is sharded
+            let has_tp = low.schedule.entries.iter().any(|e| e.axis == "model");
+            let has_ep = low.schedule.entries.iter().any(|e| e.axis == "expert");
+            assert_eq!(has_tp, tp > 1);
+            assert_eq!(has_ep, ep > 1);
+        }
+    }
+
+    #[test]
+    fn serve_kv_handoff_rounds_up_to_whole_pages() {
+        let low =
+            build_serve_schedule(1, 1, 128, 100, 16, 8.0, &local_interconnect()).unwrap();
+        // 100 tokens over 16-token pages -> 7 pages -> 112 tokens moved
+        assert_eq!(low.kv_handoff_bytes, 112.0 * 8.0);
+        let entry = &low.schedule.entries[0];
+        assert_eq!(entry.bytes, low.kv_handoff_bytes);
+        assert!(entry.cost_s > 0.0);
+    }
+
+    #[test]
+    fn serve_schedule_simulates_on_two_tier_fabric() {
+        let ic = local_interconnect();
+        let low = build_serve_schedule(4, 2, 512, 2048, 16, 64.0, &ic).unwrap();
+        let topo = crate::netsim::topo::Topology::two_tier(low.strategy.total_chips(), &ic);
+        let sim = low
+            .schedule
+            .simulate(&topo, crate::netsim::AlgoChoice::Auto)
+            .unwrap();
+        assert!(sim.total_sim_s().is_finite() && sim.total_sim_s() > 0.0);
     }
 }

@@ -218,6 +218,23 @@ pub fn paper_appendix_a_rules() -> MeshRules {
             ],
         )
         .unwrap(),
+        // Serving presets live in the same rule table as the trainer
+        // rules: a `serve-tp4-ep2-p2-d4-s1` instance string rewrites a
+        // `ServeSpec` config node's pool membership and shard layout
+        // (crate::serving::spec parses the string; the spec's lowering
+        // then derives the schedule).
+        MeshRule::dynamic("serve-*", |inst, cfg| {
+            let spec = crate::serving::spec::ServeSpec::parse_rule(inst)?;
+            cfg.set("tp", Value::Int(spec.tp as i64))?;
+            cfg.set("ep", Value::Int(spec.ep as i64))?;
+            cfg.set("prefill_replicas", Value::Int(spec.prefill_replicas as i64))?;
+            cfg.set("decode_replicas", Value::Int(spec.decode_replicas as i64))?;
+            cfg.set("spares", Value::Int(spec.spares as i64))?;
+            cfg.set("num_experts", Value::Int(spec.num_experts as i64))?;
+            cfg.set("active_experts", Value::Int(spec.active_experts as i64))?;
+            Ok(())
+        })
+        .unwrap(),
     ])
 }
 
@@ -255,6 +272,28 @@ mod tests {
         let matched = rules.apply("planner-gpu-H100-4096", &mut t).unwrap();
         assert_eq!(matched.as_deref(), Some("planner-*"));
         assert_eq!(t.get_int("max_steps").unwrap(), 4096);
+    }
+
+    #[test]
+    fn serve_rule_rewrites_the_spec_from_the_instance_string() {
+        use crate::config::registry::default_config;
+        let rules = paper_appendix_a_rules();
+        let mut s = default_config("ServeSpec").unwrap();
+        let matched = rules.apply("serve-tp4-ep2-p2-d4-s1", &mut s).unwrap();
+        assert_eq!(matched.as_deref(), Some("serve-*"));
+        assert_eq!(s.get_int("tp").unwrap(), 4);
+        assert_eq!(s.get_int("ep").unwrap(), 2);
+        assert_eq!(s.get_int("prefill_replicas").unwrap(), 2);
+        assert_eq!(s.get_int("decode_replicas").unwrap(), 4);
+        assert_eq!(s.get_int("spares").unwrap(), 1);
+        assert_eq!(s.get_int("num_experts").unwrap(), 8);
+        // the rewritten node round-trips into a lowerable spec
+        let spec = crate::serving::ServeSpec::from_config(&s).unwrap();
+        assert_eq!(spec.name(), "serve-tp4-ep2-p2-d4-s1");
+        assert!(spec.lower().unwrap().kv_handoff_bytes > 0.0);
+        // malformed serve instances fail loudly, not silently
+        let mut bad = default_config("ServeSpec").unwrap();
+        assert!(rules.apply("serve-q4", &mut bad).is_err());
     }
 
     #[test]

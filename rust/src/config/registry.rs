@@ -218,6 +218,9 @@ pub fn register_defaults() -> BTreeMap<&'static str, Ctor> {
             .field("slots", Value::Int(8))
             .field("kv_pages", Value::Int(1024))
             .field("page_tokens", Value::Int(16))
+            // seconds of queue wait per priority-class promotion; 0.0 is
+            // strict FCFS (see serving::batcher)
+            .field("aging_s", Value::Float(0.25))
     });
     m.insert("StaticBatchingPolicy", || {
         ConfigNode::new("StaticBatchingPolicy")
@@ -231,6 +234,32 @@ pub fn register_defaults() -> BTreeMap<&'static str, Ctor> {
             .field("replicas", Value::Int(2))
             .field("spares", Value::Int(1))
             .field("backend", Value::Config(builtin("MockBackend")))
+            .field("policy", Value::Config(builtin("ContinuousBatchingPolicy")))
+    });
+
+    // ---- serving: the unified disaggregated-serving spec ----
+    // One spec drives pool membership, shard layout, and the lowered
+    // collective schedule (serving::spec) — the serving counterpart of
+    // MeshTrainer's plan.  The serve-* mesh rules rewrite the pool and
+    // shard fields from the instance-type string.
+    m.insert("ServeSpec", || {
+        ConfigNode::new("ServeSpec")
+            .field("tp", Value::Int(1))
+            .field("ep", Value::Int(1))
+            .field("prefill_replicas", Value::Int(1))
+            .field("decode_replicas", Value::Int(2))
+            .field("spares", Value::Int(0))
+            .field("num_experts", Value::Int(1))
+            .field("active_experts", Value::Int(1))
+            .field("capacity_factor", Value::Float(1.25))
+            .field("max_seq", Value::Int(1024))
+            .field("hidden_dim", Value::Int(512))
+            // KV-cache bytes per token across all layers (K and V)
+            .field("kv_bytes_per_token", Value::Float(64.0))
+            // instance type selects the interconnect cost model
+            .field("instance_type", Value::Str("cpu-local".into()))
+            // static schedule verifier gate at lowering time
+            .field("verify", Value::Bool(true))
             .field("policy", Value::Config(builtin("ContinuousBatchingPolicy")))
     });
 

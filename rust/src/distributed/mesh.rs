@@ -184,17 +184,173 @@ pub struct MeshOptions {
     pub verify: bool,
 }
 
+/// The single named-axis builder for mesh execution options, shared by
+/// [`MeshTrainer`] and the mesh-backed serving engine
+/// ([`crate::serving::spec::ServeSpec`] lowers through the same axis
+/// vocabulary).  It replaces the accumulated positional constructor
+/// sprawl (`for_mesh` / `for_mesh4` / `for_mesh5` + `with_*` chains):
+/// axes are set by name — `"data"`, `"pipeline"`, `"fsdp"`,
+/// `"model"`/`"tensor"`, `"expert"` — unnamed axes default to degree 1,
+/// and every knob is one chainable setter.
+///
+/// ```
+/// use axlearn::distributed::mesh::MeshSpec;
+/// let opts = MeshSpec::axes(&[("data", 2), ("fsdp", 2), ("model", 2)])
+///     .sim_threads(4)
+///     .build();
+/// assert_eq!(opts.strategy.total_chips(), 8);
+/// ```
+#[derive(Clone, Debug)]
+pub struct MeshSpec {
+    strategy: Strategy,
+    microbatches: Option<usize>,
+    shard_axes: Vec<String>,
+    interconnect: Interconnect,
+    activation_bytes: f64,
+    pipeline_schedule: PipelineKind,
+    moe: Option<(usize, usize, f64)>,
+    sim_threads: usize,
+    verify: bool,
+}
+
+impl Default for MeshSpec {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MeshSpec {
+    /// A trivial 1-device mesh with the default parameter sharding
+    /// (fsdp + model), the local cost model, and the verifier on.
+    pub fn new() -> Self {
+        MeshSpec {
+            strategy: Strategy::default(),
+            microbatches: None,
+            shard_axes: vec!["fsdp".into(), "model".into()],
+            interconnect: local_interconnect(),
+            activation_bytes: 0.0,
+            pipeline_schedule: PipelineKind::OneFOneB,
+            moe: None,
+            sim_threads: 1,
+            verify: true,
+        }
+    }
+
+    /// Start from a list of named axes:
+    /// `MeshSpec::axes(&[("data", 2), ("model", 4)])`.
+    pub fn axes(list: &[(&str, usize)]) -> Self {
+        list.iter().fold(Self::new(), |s, (n, d)| s.axis(n, *d))
+    }
+
+    /// Set one named axis degree (degree 0 clamps to 1).  Axis names
+    /// match the mesh-rule / sharding-spec vocabulary; an unknown name
+    /// is a programmer error and panics with the accepted set.
+    pub fn axis(mut self, name: &str, degree: usize) -> Self {
+        let d = degree.max(1);
+        match name {
+            "data" => self.strategy.data = d,
+            "pipeline" => self.strategy.pipeline = d,
+            "fsdp" => self.strategy.fsdp = d,
+            "model" | "tensor" => self.strategy.tensor = d,
+            "expert" => self.strategy.expert = d,
+            other => panic!(
+                "MeshSpec: unknown mesh axis {other:?} \
+                 (expected data / pipeline / fsdp / model|tensor / expert)"
+            ),
+        }
+        self
+    }
+
+    /// Microbatches per step (defaults to the pipeline degree).
+    pub fn microbatches(mut self, m: usize) -> Self {
+        self.microbatches = Some(m.max(1));
+        self
+    }
+
+    /// Mesh axes that shard parameters (default: fsdp + model).
+    pub fn shard_axes(mut self, axes: &[&str]) -> Self {
+        self.shard_axes = axes.iter().map(|s| s.to_string()).collect();
+        self
+    }
+
+    /// Interconnect for the schedule's cost annotations.
+    pub fn interconnect(mut self, ic: Interconnect) -> Self {
+        self.interconnect = ic;
+        self
+    }
+
+    /// Payload of the per-step activation reduction / pipeline boundary
+    /// traffic (0.0 derives a proxy from the backend descriptor).
+    pub fn activation_bytes(mut self, bytes: f64) -> Self {
+        self.activation_bytes = bytes;
+        self
+    }
+
+    /// Select the microbatch schedule (GPipe or 1F1B; default 1F1B).
+    pub fn schedule(mut self, kind: PipelineKind) -> Self {
+        self.pipeline_schedule = kind;
+        self
+    }
+
+    /// Configure the MoE bank the expert axis partitions.  Without this,
+    /// an expert axis defaults to a two-experts-per-rank bank with top-2
+    /// routing and 1.25× capacity headroom (the common switch-style
+    /// configuration).
+    pub fn moe(mut self, num_experts: usize, active_experts: usize, capacity_factor: f64) -> Self {
+        self.moe = Some((num_experts, active_experts, capacity_factor));
+        self
+    }
+
+    /// Simulator worker-thread count (bit-identical output at any value;
+    /// see [`MeshOptions::sim_threads`]).
+    pub fn sim_threads(mut self, n: usize) -> Self {
+        self.sim_threads = n;
+        self
+    }
+
+    /// Enable/disable the static schedule verifier (on by default).
+    pub fn verify(mut self, on: bool) -> Self {
+        self.verify = on;
+        self
+    }
+
+    /// Resolve into [`MeshOptions`].
+    pub fn build(self) -> MeshOptions {
+        let mut strategy = self.strategy;
+        strategy.microbatches = self.microbatches.unwrap_or(strategy.pipeline.max(1));
+        let e = strategy.expert;
+        let (num_experts, active_experts, capacity_factor) = self.moe.unwrap_or((
+            if e > 1 { 2 * e } else { 1 },
+            if e > 1 { 2 } else { 1 },
+            1.25,
+        ));
+        MeshOptions {
+            strategy,
+            shard_axes: self.shard_axes,
+            interconnect: self.interconnect,
+            activation_bytes: self.activation_bytes,
+            pipeline_schedule: self.pipeline_schedule,
+            num_experts,
+            active_experts,
+            capacity_factor,
+            sim_threads: self.sim_threads,
+            verify: self.verify,
+        }
+    }
+}
+
 impl MeshOptions {
     /// Options for a plain `data × fsdp × model` mesh (no pipeline) with
     /// the default parameter sharding (over both fsdp and model axes)
     /// and the local cost model.
+    #[deprecated(note = "use MeshSpec::axes(&[(\"data\", d), (\"fsdp\", f), (\"model\", m)]).build()")]
     pub fn for_mesh(data: usize, fsdp: usize, tensor: usize) -> Self {
-        Self::for_mesh4(data, 1, fsdp, tensor, 1)
+        MeshSpec::axes(&[("data", data), ("fsdp", fsdp), ("model", tensor)]).build()
     }
 
     /// Options for a 4-axis `data × pipeline × fsdp × model` mesh
-    /// running `microbatches` microbatches per step (1F1B by default;
-    /// see [`MeshOptions::with_schedule`]).
+    /// running `microbatches` microbatches per step.
+    #[deprecated(note = "use MeshSpec::axes(...).microbatches(m).build()")]
     pub fn for_mesh4(
         data: usize,
         pipeline: usize,
@@ -202,14 +358,19 @@ impl MeshOptions {
         tensor: usize,
         microbatches: usize,
     ) -> Self {
-        Self::for_mesh5(data, pipeline, fsdp, tensor, 1, microbatches)
+        MeshSpec::axes(&[
+            ("data", data),
+            ("pipeline", pipeline),
+            ("fsdp", fsdp),
+            ("model", tensor),
+        ])
+        .microbatches(microbatches)
+        .build()
     }
 
     /// Options for the full 5-axis `data × pipeline × fsdp × model ×
-    /// expert` mesh.  An expert axis defaults to a two-experts-per-rank
-    /// bank with top-2 routing and 1.25× capacity headroom (the common
-    /// switch-style configuration) — override with
-    /// [`MeshOptions::with_moe`].
+    /// expert` mesh.
+    #[deprecated(note = "use MeshSpec::axes(...).microbatches(m).build()")]
     pub fn for_mesh5(
         data: usize,
         pipeline: usize,
@@ -218,34 +379,26 @@ impl MeshOptions {
         expert: usize,
         microbatches: usize,
     ) -> Self {
-        MeshOptions {
-            strategy: Strategy {
-                data,
-                fsdp,
-                tensor,
-                pipeline,
-                expert,
-                microbatches,
-            },
-            shard_axes: vec!["fsdp".into(), "model".into()],
-            interconnect: local_interconnect(),
-            activation_bytes: 0.0,
-            pipeline_schedule: PipelineKind::OneFOneB,
-            num_experts: if expert > 1 { 2 * expert } else { 1 },
-            active_experts: if expert > 1 { 2 } else { 1 },
-            capacity_factor: 1.25,
-            sim_threads: 1,
-            verify: true,
-        }
+        MeshSpec::axes(&[
+            ("data", data),
+            ("pipeline", pipeline),
+            ("fsdp", fsdp),
+            ("model", tensor),
+            ("expert", expert),
+        ])
+        .microbatches(microbatches)
+        .build()
     }
 
     /// Select the microbatch schedule (GPipe or 1F1B).
+    #[deprecated(note = "use MeshSpec::schedule(kind)")]
     pub fn with_schedule(mut self, kind: PipelineKind) -> Self {
         self.pipeline_schedule = kind;
         self
     }
 
     /// Configure the MoE bank the expert axis partitions.
+    #[deprecated(note = "use MeshSpec::moe(num, active, capacity)")]
     pub fn with_moe(
         mut self,
         num_experts: usize,
@@ -260,6 +413,7 @@ impl MeshOptions {
 
     /// Set the simulator worker-thread count (bit-identical output at
     /// any value; see [`MeshOptions::sim_threads`]).
+    #[deprecated(note = "use MeshSpec::sim_threads(n)")]
     pub fn with_sim_threads(mut self, n: usize) -> Self {
         self.sim_threads = n;
         self
@@ -267,6 +421,7 @@ impl MeshOptions {
 
     /// Enable/disable the static schedule verifier (see
     /// [`MeshOptions::verify`]; on by default).
+    #[deprecated(note = "use MeshSpec::verify(on)")]
     pub fn with_verify(mut self, on: bool) -> Self {
         self.verify = on;
         self
@@ -1622,7 +1777,7 @@ mod tests {
         let mut single = mock();
         single.init(3).unwrap();
         let ls = run_steps(&mut *single, 5, 6);
-        let mut mesh = MeshTrainer::new(mock(), MeshOptions::for_mesh(1, 1, 1)).unwrap();
+        let mut mesh = MeshTrainer::new(mock(), MeshSpec::axes(&[("data", 1), ("fsdp", 1), ("model", 1)]).build()).unwrap();
         mesh.init(3).unwrap();
         let lm = run_steps(&mut mesh, 5, 6);
         assert_eq!(ls, lm);
@@ -1636,7 +1791,7 @@ mod tests {
         let mut single = mock();
         single.init(7).unwrap();
         let ls = run_steps(&mut *single, 9, 8);
-        let mut mesh = MeshTrainer::new(mock(), MeshOptions::for_mesh(2, 2, 2)).unwrap();
+        let mut mesh = MeshTrainer::new(mock(), MeshSpec::axes(&[("data", 2), ("fsdp", 2), ("model", 2)]).build()).unwrap();
         mesh.init(7).unwrap();
         assert_eq!(mesh.num_devices(), 8);
         let lm = run_steps(&mut mesh, 9, 8);
@@ -1648,7 +1803,7 @@ mod tests {
 
     #[test]
     fn restore_reshards_and_replays_bit_identically() {
-        let mut full = MeshTrainer::new(mock(), MeshOptions::for_mesh(1, 4, 1)).unwrap();
+        let mut full = MeshTrainer::new(mock(), MeshSpec::axes(&[("data", 1), ("fsdp", 4), ("model", 1)]).build()).unwrap();
         full.init(2).unwrap();
         let mut c = corpus(4);
         let mut snapshot = None;
@@ -1659,7 +1814,7 @@ mod tests {
                 snapshot = Some(full.state_to_host().unwrap());
             }
         }
-        let mut resumed = MeshTrainer::new(mock(), MeshOptions::for_mesh(1, 4, 1)).unwrap();
+        let mut resumed = MeshTrainer::new(mock(), MeshSpec::axes(&[("data", 1), ("fsdp", 4), ("model", 1)]).build()).unwrap();
         resumed.restore_from_host(&snapshot.unwrap(), 5).unwrap();
         assert_eq!(resumed.steps_done(), 5);
         let mut c2 = corpus(4);
@@ -1675,7 +1830,7 @@ mod tests {
 
     #[test]
     fn eval_is_pure_on_the_mesh() {
-        let mut mesh = MeshTrainer::new(mock(), MeshOptions::for_mesh(1, 2, 2)).unwrap();
+        let mut mesh = MeshTrainer::new(mock(), MeshSpec::axes(&[("data", 1), ("fsdp", 2), ("model", 2)]).build()).unwrap();
         mesh.init(1).unwrap();
         run_steps(&mut mesh, 2, 3);
         let mut c = corpus(8);
@@ -1694,7 +1849,7 @@ mod tests {
             dim: 60,
             ..Default::default()
         }));
-        let mut mesh = MeshTrainer::new(inner, MeshOptions::for_mesh(1, 4, 2)).unwrap();
+        let mut mesh = MeshTrainer::new(inner, MeshSpec::axes(&[("data", 1), ("fsdp", 4), ("model", 2)]).build()).unwrap();
         let err = mesh.init(0).unwrap_err();
         let msg = format!("{err:#}");
         assert!(msg.contains("does not divide"), "{msg}");
@@ -1705,17 +1860,17 @@ mod tests {
     fn expert_and_pipeline_axes_are_both_lowered() {
         // the expert axis is a real fifth axis …
         let mesh =
-            MeshTrainer::new(mock(), MeshOptions::for_mesh5(1, 1, 1, 1, 2, 1)).unwrap();
+            MeshTrainer::new(mock(), MeshSpec::axes(&[("data", 1), ("pipeline", 1), ("fsdp", 1), ("model", 1), ("expert", 2)]).microbatches(1).build()).unwrap();
         assert_eq!(mesh.num_devices(), 2);
         assert_eq!(mesh.strategy().expert, 2);
         assert!(mesh.descriptor().name.starts_with("mesh[1x1x1x1x2]:"));
         // … alongside the pipeline axis
-        let mesh = MeshTrainer::new(mock(), MeshOptions::for_mesh4(1, 2, 1, 1, 4)).unwrap();
+        let mesh = MeshTrainer::new(mock(), MeshSpec::axes(&[("data", 1), ("pipeline", 2), ("fsdp", 1), ("model", 1)]).microbatches(4).build()).unwrap();
         assert_eq!(mesh.num_devices(), 2);
         assert_eq!(mesh.pipeline_schedule().stages, 2);
         // … and the two compose
         let mesh =
-            MeshTrainer::new(mock(), MeshOptions::for_mesh5(1, 2, 1, 1, 2, 4)).unwrap();
+            MeshTrainer::new(mock(), MeshSpec::axes(&[("data", 1), ("pipeline", 2), ("fsdp", 1), ("model", 1), ("expert", 2)]).microbatches(4).build()).unwrap();
         assert_eq!(mesh.num_devices(), 4);
     }
 
@@ -1723,29 +1878,29 @@ mod tests {
     fn infeasible_pipeline_shapes_are_rejected_up_front() {
         // fewer microbatches than stages
         let err =
-            MeshTrainer::new(mock(), MeshOptions::for_mesh4(1, 4, 1, 1, 2)).unwrap_err();
+            MeshTrainer::new(mock(), MeshSpec::axes(&[("data", 1), ("pipeline", 4), ("fsdp", 1), ("model", 1)]).microbatches(2).build()).unwrap_err();
         assert!(format!("{err:#}").contains("microbatches"), "{err:#}");
         // batch does not split into the microbatches (2×32 tokens, m=7)
         let err =
-            MeshTrainer::new(mock(), MeshOptions::for_mesh4(1, 2, 1, 1, 7)).unwrap_err();
+            MeshTrainer::new(mock(), MeshSpec::axes(&[("data", 1), ("pipeline", 2), ("fsdp", 1), ("model", 1)]).microbatches(7).build()).unwrap_err();
         assert!(format!("{err:#}").contains("does not divide"), "{err:#}");
     }
 
     #[test]
     fn infeasible_expert_shapes_are_rejected_up_front() {
         // expert bank does not partition over the axis
-        let opts = MeshOptions::for_mesh5(1, 1, 1, 1, 4, 1).with_moe(6, 2, 1.25);
+        let opts = MeshSpec::axes(&[("data", 1), ("pipeline", 1), ("fsdp", 1), ("model", 1), ("expert", 4)]).microbatches(1).moe(6, 2, 1.25).build();
         let err = MeshTrainer::new(mock(), opts).unwrap_err();
         assert!(format!("{err:#}").contains("expert"), "{err:#}");
         // more expert ranks than experts
-        let opts = MeshOptions::for_mesh5(1, 1, 1, 1, 8, 1).with_moe(4, 2, 1.25);
+        let opts = MeshSpec::axes(&[("data", 1), ("pipeline", 1), ("fsdp", 1), ("model", 1), ("expert", 8)]).microbatches(1).moe(4, 2, 1.25).build();
         assert!(MeshTrainer::new(mock(), opts).is_err());
         // active_experts out of range
-        let opts = MeshOptions::for_mesh5(1, 1, 1, 1, 2, 1).with_moe(4, 5, 1.25);
+        let opts = MeshSpec::axes(&[("data", 1), ("pipeline", 1), ("fsdp", 1), ("model", 1), ("expert", 2)]).microbatches(1).moe(4, 5, 1.25).build();
         let err = MeshTrainer::new(mock(), opts).unwrap_err();
         assert!(format!("{err:#}").contains("active_experts"), "{err:#}");
         // nonsense capacity factor
-        let opts = MeshOptions::for_mesh5(1, 1, 1, 1, 2, 1).with_moe(4, 2, 0.0);
+        let opts = MeshSpec::axes(&[("data", 1), ("pipeline", 1), ("fsdp", 1), ("model", 1), ("expert", 2)]).microbatches(1).moe(4, 2, 0.0).build();
         assert!(MeshTrainer::new(mock(), opts).is_err());
         // batch does not divide across the expert ranks (2×32 tokens)
         let inner = Box::new(MockTrainBackend::new(MockTrainBackendOptions {
@@ -1753,7 +1908,7 @@ mod tests {
             ..Default::default()
         }));
         let err =
-            MeshTrainer::new(inner, MeshOptions::for_mesh5(1, 1, 1, 1, 4, 1)).unwrap_err();
+            MeshTrainer::new(inner, MeshSpec::axes(&[("data", 1), ("pipeline", 1), ("fsdp", 1), ("model", 1), ("expert", 4)]).microbatches(1).build()).unwrap_err();
         assert!(format!("{err:#}").contains("expert ranks"), "{err:#}");
     }
 
@@ -1765,9 +1920,9 @@ mod tests {
         let ref_state = state_bits(&*single);
         // expert-only, and expert × everything else
         for opts in [
-            MeshOptions::for_mesh5(1, 1, 1, 1, 4, 1),
-            MeshOptions::for_mesh5(2, 1, 2, 1, 2, 1),
-            MeshOptions::for_mesh5(1, 2, 2, 2, 2, 4),
+            MeshSpec::axes(&[("data", 1), ("pipeline", 1), ("fsdp", 1), ("model", 1), ("expert", 4)]).microbatches(1).build(),
+            MeshSpec::axes(&[("data", 2), ("pipeline", 1), ("fsdp", 2), ("model", 1), ("expert", 2)]).microbatches(1).build(),
+            MeshSpec::axes(&[("data", 1), ("pipeline", 2), ("fsdp", 2), ("model", 2), ("expert", 2)]).microbatches(4).build(),
         ] {
             let devices = opts.strategy.total_chips();
             let mut mesh = MeshTrainer::new(mock(), opts).unwrap();
@@ -1801,11 +1956,11 @@ mod tests {
         // hit the same element again on the combine pass and XOR itself
         // away for rank-0-to-rank-0 buckets.)
         let mut clean =
-            MeshTrainer::new(mock(), MeshOptions::for_mesh5(1, 1, 1, 1, 2, 1)).unwrap();
+            MeshTrainer::new(mock(), MeshSpec::axes(&[("data", 1), ("pipeline", 1), ("fsdp", 1), ("model", 1), ("expert", 2)]).microbatches(1).build()).unwrap();
         clean.init(0).unwrap();
         let clean_losses = run_steps(&mut clean, 3, 4);
         let hit = std::sync::atomic::AtomicBool::new(false);
-        let mut faulty = MeshTrainer::new(mock(), MeshOptions::for_mesh5(1, 1, 1, 1, 2, 1))
+        let mut faulty = MeshTrainer::new(mock(), MeshSpec::axes(&[("data", 1), ("pipeline", 1), ("fsdp", 1), ("model", 1), ("expert", 2)]).microbatches(1).build())
             .unwrap()
             .with_fault(Box::new(move |r, _i, x| {
                 if r == 0 && !hit.swap(true, std::sync::atomic::Ordering::SeqCst) {
@@ -1823,7 +1978,7 @@ mod tests {
     fn expert_lower_step_emits_dispatch_and_combine_all_to_alls() {
         use crate::perfmodel::comms::Collective;
         let mut mesh =
-            MeshTrainer::new(mock(), MeshOptions::for_mesh5(2, 1, 2, 1, 2, 1)).unwrap();
+            MeshTrainer::new(mock(), MeshSpec::axes(&[("data", 2), ("pipeline", 1), ("fsdp", 2), ("model", 1), ("expert", 2)]).microbatches(1).build()).unwrap();
         mesh.init(0).unwrap();
         let sched = mesh.lower_step().unwrap();
         let a2a: Vec<&ScheduleEntry> = sched
@@ -1886,7 +2041,7 @@ mod tests {
         let ref_state = state_bits(&*single);
         for kind in [PipelineKind::GPipe, PipelineKind::OneFOneB] {
             // pipeline-only …
-            let opts = MeshOptions::for_mesh4(1, 4, 1, 1, 8).with_schedule(kind);
+            let opts = MeshSpec::axes(&[("data", 1), ("pipeline", 4), ("fsdp", 1), ("model", 1)]).microbatches(8).schedule(kind).build();
             let mut mesh = MeshTrainer::new(mock(), opts).unwrap();
             mesh.init(5).unwrap();
             assert_eq!(mesh.num_devices(), 4);
@@ -1895,7 +2050,7 @@ mod tests {
             assert_eq!(ref_state, state_bits(&mesh), "{kind:?}: state diverged");
             assert!(mesh.collective_ops() > 0, "{kind:?}: the pipeline must communicate");
             // … and pipeline × everything else
-            let opts = MeshOptions::for_mesh4(2, 2, 2, 2, 4).with_schedule(kind);
+            let opts = MeshSpec::axes(&[("data", 2), ("pipeline", 2), ("fsdp", 2), ("model", 2)]).microbatches(4).schedule(kind).build();
             let mut mesh = MeshTrainer::new(mock(), opts).unwrap();
             mesh.init(5).unwrap();
             assert_eq!(mesh.num_devices(), 16);
@@ -1910,10 +2065,10 @@ mod tests {
         // a bit flip on a stage-boundary link must change the numerics:
         // the microbatch payloads genuinely travel the chain
         let mut clean =
-            MeshTrainer::new(mock(), MeshOptions::for_mesh4(1, 2, 1, 1, 2)).unwrap();
+            MeshTrainer::new(mock(), MeshSpec::axes(&[("data", 1), ("pipeline", 2), ("fsdp", 1), ("model", 1)]).microbatches(2).build()).unwrap();
         clean.init(0).unwrap();
         let clean_losses = run_steps(&mut clean, 3, 4);
-        let mut faulty = MeshTrainer::new(mock(), MeshOptions::for_mesh4(1, 2, 1, 1, 2))
+        let mut faulty = MeshTrainer::new(mock(), MeshSpec::axes(&[("data", 1), ("pipeline", 2), ("fsdp", 1), ("model", 1)]).microbatches(2).build())
             .unwrap()
             .with_fault(Box::new(|r, i, x| if r == 0 && i == 0 { x + 1.0 } else { x }));
         faulty.init(0).unwrap();
@@ -1924,7 +2079,7 @@ mod tests {
     #[test]
     fn pipelined_lower_step_emits_stage_boundary_p2p() {
         let mut mesh =
-            MeshTrainer::new(mock(), MeshOptions::for_mesh4(2, 2, 2, 1, 4)).unwrap();
+            MeshTrainer::new(mock(), MeshSpec::axes(&[("data", 2), ("pipeline", 2), ("fsdp", 2), ("model", 1)]).microbatches(4).build()).unwrap();
         mesh.init(0).unwrap();
         let sched = mesh.lower_step().unwrap();
         let p2p: Vec<&ScheduleEntry> = sched
@@ -1991,7 +2146,7 @@ mod tests {
 
     #[test]
     fn lower_step_matches_the_layout() {
-        let mut mesh = MeshTrainer::new(mock(), MeshOptions::for_mesh(2, 2, 2)).unwrap();
+        let mut mesh = MeshTrainer::new(mock(), MeshSpec::axes(&[("data", 2), ("fsdp", 2), ("model", 2)]).build()).unwrap();
         mesh.init(0).unwrap();
         let sched = mesh.lower_step().unwrap();
         // params + opt_m + opt_v shard; the step counter does not
@@ -2014,7 +2169,7 @@ mod tests {
 
     #[test]
     fn pure_dp_mesh_emits_gradient_sync_only() {
-        let mut mesh = MeshTrainer::new(mock(), MeshOptions::for_mesh(4, 1, 1)).unwrap();
+        let mut mesh = MeshTrainer::new(mock(), MeshSpec::axes(&[("data", 4), ("fsdp", 1), ("model", 1)]).build()).unwrap();
         mesh.init(0).unwrap();
         let sched = mesh.lower_step().unwrap();
         assert!(!sched.entries.is_empty());
@@ -2029,10 +2184,10 @@ mod tests {
     fn interconnect_fault_corrupts_the_trajectory() {
         // an SDC inside a mesh collective must change the numerics (it
         // flows through gathers/reductions like a real bit flip)
-        let mut clean = MeshTrainer::new(mock(), MeshOptions::for_mesh(1, 2, 1)).unwrap();
+        let mut clean = MeshTrainer::new(mock(), MeshSpec::axes(&[("data", 1), ("fsdp", 2), ("model", 1)]).build()).unwrap();
         clean.init(0).unwrap();
         let clean_losses = run_steps(&mut clean, 3, 4);
-        let mut faulty = MeshTrainer::new(mock(), MeshOptions::for_mesh(1, 2, 1))
+        let mut faulty = MeshTrainer::new(mock(), MeshSpec::axes(&[("data", 1), ("fsdp", 2), ("model", 1)]).build())
             .unwrap()
             .with_fault(Box::new(|r, i, x| if r == 0 && i == 0 { x + 0.25 } else { x }));
         faulty.init(0).unwrap();
@@ -2046,7 +2201,7 @@ mod tests {
         // degree folds into the DP sync group
         let opts = MeshOptions {
             shard_axes: vec!["fsdp".into()],
-            ..MeshOptions::for_mesh(2, 2, 2)
+            ..MeshSpec::axes(&[("data", 2), ("fsdp", 2), ("model", 2)]).build()
         };
         let mut mesh = MeshTrainer::new(mock(), opts).unwrap();
         mesh.init(11).unwrap();
@@ -2145,7 +2300,7 @@ mod tests {
         let mut deltas = Vec::new();
         for rep in [2usize, 4, 8] {
             let mut mesh =
-                MeshTrainer::new(mock(), MeshOptions::for_mesh(rep, 1, 1)).unwrap();
+                MeshTrainer::new(mock(), MeshSpec::axes(&[("data", rep), ("fsdp", 1), ("model", 1)]).build()).unwrap();
             mesh.init(1).unwrap();
             run_steps(&mut mesh, 2, 3); // warm the scratch arenas
             let before = mesh.counters();
@@ -2165,7 +2320,7 @@ mod tests {
 
     #[test]
     fn steady_state_steps_allocate_nothing() {
-        let mut mesh = MeshTrainer::new(mock(), MeshOptions::for_mesh(2, 2, 2)).unwrap();
+        let mut mesh = MeshTrainer::new(mock(), MeshSpec::axes(&[("data", 2), ("fsdp", 2), ("model", 2)]).build()).unwrap();
         mesh.init(5).unwrap();
         run_steps(&mut mesh, 7, 3); // warm the scratch arenas
         let before = mesh.counters();
@@ -2178,7 +2333,7 @@ mod tests {
     #[test]
     fn sim_threads_change_nothing_but_wall_clock() {
         let run = |threads: usize| {
-            let opts = MeshOptions::for_mesh(2, 2, 2).with_sim_threads(threads);
+            let opts = MeshSpec::axes(&[("data", 2), ("fsdp", 2), ("model", 2)]).sim_threads(threads).build();
             let mut mesh = MeshTrainer::new(mock(), opts).unwrap();
             assert_eq!(mesh.sim_threads(), threads.max(1));
             mesh.init(3).unwrap();

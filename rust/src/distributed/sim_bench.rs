@@ -30,7 +30,7 @@ use crate::trainer::input::{CorpusKind, SyntheticCorpus};
 use crate::trainer::{InputPipeline, TrainBackend};
 use crate::util::json::Json;
 
-use super::mesh::{MeshOptions, MeshTrainer};
+use super::mesh::{MeshSpec, MeshTrainer};
 
 /// Mock parameter-vector length of the swept workload (divisible by
 /// every shard span below).
@@ -100,11 +100,13 @@ pub fn sim_bench_trainer(
         ..Default::default()
     }));
     let micro = if p > 1 { SIM_BENCH_MICROBATCHES } else { 1 };
-    let mut opts = MeshOptions::for_mesh5(d, p, f, m, e, micro).with_sim_threads(sim_threads);
+    let mut spec = MeshSpec::axes(&[("data", d), ("pipeline", p), ("fsdp", f), ("model", m), ("expert", e)])
+        .microbatches(micro)
+        .sim_threads(sim_threads);
     if e > 1 {
-        opts = opts.with_moe(8, 2, 1.25);
+        spec = spec.moe(8, 2, 1.25);
     }
-    MeshTrainer::new(inner, opts)
+    MeshTrainer::new(inner, spec.build())
 }
 
 fn run_steps(mesh: &mut MeshTrainer, corpus: &mut SyntheticCorpus, steps: usize) {

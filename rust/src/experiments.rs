@@ -268,6 +268,7 @@ pub fn table4_local(
             slots: 8,
             kv_pages: 2048,
             page_tokens: 16,
+            ..Default::default()
         },
     )?;
     let ax = engine.run(&workload)?;
@@ -367,6 +368,7 @@ pub fn fig5_local(
                 slots: 8,
                 kv_pages: 2048,
                 page_tokens: 16,
+                ..Default::default()
             },
         )?
         .run(&workload)?;

@@ -57,6 +57,7 @@
 //! `examples/serve.rs` (the serving stack), and the `repro` binary
 //! (`rust/src/main.rs`) for the paper's tables and figures.
 
+pub mod backend;
 pub mod baselines;
 pub mod checkpoint;
 pub mod composer;

@@ -103,23 +103,9 @@ pub trait ComputeBackend {
     }
 }
 
-/// Deterministic pseudo-token shared by the simulated backends: mock and
-/// analytic emit identical streams, which makes their scheduling traces
-/// comparable in tests (on burst workloads, where the differing per-call
-/// costs cannot shift admission timing).
-fn synth_token(a: i64, b: i64, vocab: usize) -> i32 {
-    let mut z = (a as u64)
-        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
-        .wrapping_add((b as u64).wrapping_mul(0xBF58_476D_1CE4_E5B9));
-    z ^= z >> 29;
-    (z % vocab.max(1) as u64) as i32
-}
-
-fn prompt_digest(prompt: &[i32]) -> i64 {
-    prompt
-        .iter()
-        .fold(0i64, |acc, t| acc.wrapping_mul(31).wrapping_add(*t as i64))
-}
+// The deterministic token mixer lives in the shared backend core so the
+// mesh-sharded and disaggregated serving paths pin the same streams.
+use crate::backend::{prompt_digest, synth_token};
 
 // ---------------------------------------------------------------------------
 // PJRT (the real substrate)
@@ -451,52 +437,17 @@ impl ComputeBackend for MockBackend {
 // Config-driven construction
 // ---------------------------------------------------------------------------
 
-fn shape_by_name(name: &str) -> Option<TransformerShape> {
-    match name {
-        "llama2_7b" => Some(TransformerShape::llama2_7b()),
-        "llama2_70b" => Some(TransformerShape::llama2_70b()),
-        other => TransformerShape::preset(other),
-    }
-}
-
 /// Build a backend from its registered config (`MockBackend` /
 /// `AnalyticBackend`). `PjrtBackend` configs carry only the preset name —
 /// the session needs a live PJRT client, so construct those with
 /// [`PjrtBackend::new`] and an opened [`ServeSession`].
+///
+/// Thin delegate: the construction logic lives in the shared registry
+/// path ([`crate::backend::serve_backend_from_config`]), alongside its
+/// training mirror and the family-agnostic
+/// [`crate::backend::any_backend_from_config`].
 pub fn backend_from_config(cfg: &ConfigNode) -> Result<Box<dyn ComputeBackend>> {
-    match cfg.klass.as_str() {
-        "MockBackend" => {
-            let opts = MockBackendOptions {
-                prefill_base_s: cfg.get_float("prefill_base_s")?,
-                prefill_per_token_s: cfg.get_float("prefill_per_token_s")?,
-                decode_round_s: cfg.get_float("decode_round_s")?,
-                vocab: cfg.get_int("vocab")? as usize,
-                ..Default::default()
-            };
-            Ok(Box::new(MockBackend::new(opts)))
-        }
-        "AnalyticBackend" => {
-            let chip_name = cfg.get_str("chip")?;
-            let chip = chips::by_instance_type(&chip_name)
-                .with_context(|| format!("AnalyticBackend: unknown chip {chip_name:?}"))?;
-            let model = cfg.get_str("model")?;
-            let shape = shape_by_name(&model)
-                .with_context(|| format!("AnalyticBackend: unknown model {model:?}"))?;
-            let opts = AnalyticBackendOptions {
-                shape,
-                chip,
-                chips: cfg.get_int("chips")? as usize,
-                weight_bytes_per_param: cfg.get_float("weight_bytes_per_param")?,
-                ..Default::default()
-            };
-            Ok(Box::new(AnalyticBackend::new(opts)))
-        }
-        "PjrtBackend" => anyhow::bail!(
-            "PjrtBackend config (preset {:?}) needs a live runtime: open a ServeSession and use PjrtBackend::new",
-            cfg.get_str("preset").unwrap_or_default()
-        ),
-        other => anyhow::bail!("not a ComputeBackend config: {other:?}"),
-    }
+    crate::backend::serve_backend_from_config(cfg)
 }
 
 #[cfg(test)]

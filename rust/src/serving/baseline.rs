@@ -178,6 +178,9 @@ impl StaticBatchEngine {
                         * (rounds as f64 / decode_tokens as f64).max(1.0),
                     output_tokens: out_toks,
                     finish_s: clock,
+                    // the static baseline does not track per-request
+                    // token streams (its rows decode past completion)
+                    tokens: Vec::new(),
                 });
             }
         }
@@ -264,6 +267,7 @@ mod tests {
                 slots: 8,
                 kv_pages: 2048,
                 page_tokens: 16,
+                ..Default::default()
             },
         )
         .unwrap()

@@ -5,6 +5,16 @@
 //! free slots when the paged allocator accepts them; each decode round
 //! produces one token per active slot; slots free as requests finish —
 //! other rows never stall (the continuous-batching property).
+//!
+//! Admission order: candidates rank by (aged priority class, arrival,
+//! id).  A candidate whose KV demand does not fit may be *skipped* while
+//! it is young — short requests keep the pool busy — but once it has
+//! waited [`BatcherOptions::aging_s`], it **gates** admission: nothing
+//! skips past it, the pool drains, and the long request admits in
+//! bounded steps.  `aging_s = 0` degenerates to strict FCFS (the old
+//! break-on-blocked-head rule); without the gate, a steady stream of
+//! short decode requests starves a long-context prefill forever (the
+//! regression test below demonstrates both halves).
 
 use anyhow::Result;
 
@@ -16,6 +26,12 @@ pub struct BatcherOptions {
     pub slots: usize,
     pub kv_pages: usize,
     pub page_tokens: usize,
+    /// Seconds of queue wait per one priority-class promotion, and the
+    /// wait threshold past which a KV-blocked candidate stops being
+    /// skippable.  `0.0` = strict FCFS (never skip a blocked head);
+    /// `f64::INFINITY` = pure priority order with unbounded skipping
+    /// (the starvation-prone policy the default guards against).
+    pub aging_s: f64,
 }
 
 impl Default for BatcherOptions {
@@ -24,6 +40,7 @@ impl Default for BatcherOptions {
             slots: 8,
             kv_pages: 1024,
             page_tokens: 16,
+            aging_s: 0.25,
         }
     }
 }
@@ -41,6 +58,8 @@ pub struct SlotState {
     pub first_token_s: f64,
     /// Last token the model emitted (fed back on the next decode).
     pub last_token: i32,
+    /// Every token emitted for this request, in order (prefill first).
+    pub tokens: Vec<i32>,
 }
 
 /// The continuous batcher.
@@ -48,6 +67,7 @@ pub struct ContinuousBatcher {
     pub slots: Vec<Option<SlotState>>,
     pub alloc: PagedKvAllocator,
     queue: std::collections::VecDeque<Request>,
+    aging_s: f64,
     pub admitted: u64,
     pub rejected_admissions: u64,
 }
@@ -58,6 +78,7 @@ impl ContinuousBatcher {
             slots: vec![None; opts.slots],
             alloc: PagedKvAllocator::new(opts.kv_pages, opts.page_tokens),
             queue: Default::default(),
+            aging_s: opts.aging_s.max(0.0),
             admitted: 0,
             rejected_admissions: 0,
         }
@@ -86,6 +107,25 @@ impl ContinuousBatcher {
         })
     }
 
+    /// Effective priority class of a queued request: its tenant class,
+    /// promoted one class per [`BatcherOptions::aging_s`] of queue wait.
+    fn effective_class(&self, r: &Request, now: f64) -> i64 {
+        let wait = (now - r.arrival_s).max(0.0);
+        let promo = if self.aging_s > 0.0 && self.aging_s.is_finite() {
+            (wait / self.aging_s) as i64
+        } else {
+            0
+        };
+        r.priority as i64 - promo
+    }
+
+    /// A blocked candidate gates admission (no skipping past it) once it
+    /// has waited at least `aging_s`.  With `aging_s = 0` every blocked
+    /// candidate gates immediately — strict FCFS.
+    fn gates(&self, r: &Request, now: f64) -> bool {
+        now - r.arrival_s >= self.aging_s
+    }
+
     /// Admit as many arrived requests as slots + KV pages allow.
     /// Returns the (slot, request) pairs for the engine to prefill.
     pub fn admit(&mut self, now: f64) -> Vec<(usize, Request)> {
@@ -95,14 +135,37 @@ impl ContinuousBatcher {
                 Some(i) => i,
                 None => break,
             };
-            // find the first arrived request that fits
-            let idx = self.queue.iter().position(|r| r.arrival_s <= now);
-            let Some(idx) = idx else { break };
-            let r = &self.queue[idx];
-            if !self.alloc.can_admit(r.prompt.len(), r.max_new_tokens) {
-                self.rejected_admissions += 1;
-                break; // FCFS: do not skip ahead past a blocked head
+            // arrived candidates in (aged class, arrival, id) order
+            let mut cands: Vec<usize> = (0..self.queue.len())
+                .filter(|&i| self.queue[i].arrival_s <= now)
+                .collect();
+            if cands.is_empty() {
+                break;
             }
+            cands.sort_by(|&a, &b| {
+                let (ra, rb) = (&self.queue[a], &self.queue[b]);
+                self.effective_class(ra, now)
+                    .cmp(&self.effective_class(rb, now))
+                    .then(ra.arrival_s.total_cmp(&rb.arrival_s))
+                    .then(ra.id.cmp(&rb.id))
+            });
+            // walk in order; admit the first fit.  A blocked candidate
+            // may be skipped only while young — an aged one gates.
+            let mut chosen = None;
+            for &i in &cands {
+                let r = &self.queue[i];
+                if self.alloc.can_admit(r.prompt.len(), r.max_new_tokens) {
+                    chosen = Some(i);
+                    break;
+                }
+                if self.gates(r, now) {
+                    break;
+                }
+            }
+            let Some(idx) = chosen else {
+                self.rejected_admissions += 1;
+                break;
+            };
             let r = self.queue.remove(idx).unwrap();
             self.alloc.admit(r.id, r.prompt.len(), r.max_new_tokens).expect("checked");
             self.admitted += 1;
@@ -114,6 +177,7 @@ impl ContinuousBatcher {
                 max_new: r.max_new_tokens,
                 first_token_s: f64::NAN,
                 last_token: 0,
+                tokens: Vec::new(),
             });
             out.push((free_slot, r));
         }
@@ -126,6 +190,7 @@ impl ContinuousBatcher {
         s.first_token_s = now;
         s.generated = 1;
         s.last_token = token;
+        s.tokens.push(token);
     }
 
     /// Positions/tokens for the decode call, over all slots (inactive
@@ -174,6 +239,7 @@ impl ContinuousBatcher {
                 s.pos += 1;
                 s.generated += 1;
                 s.last_token = *token;
+                s.tokens.push(*token);
                 if s.generated >= s.max_new {
                     let done = s.clone();
                     self.alloc.release(done.request_id)?;
@@ -197,6 +263,8 @@ mod tests {
             arrival_s: arrival,
             prompt: vec![1; prompt_len],
             max_new_tokens: max_new,
+            priority: 0,
+            tenant: 0,
         }
     }
 
@@ -205,6 +273,7 @@ mod tests {
             slots,
             kv_pages: 64,
             page_tokens: 16,
+            ..Default::default()
         })
     }
 
@@ -252,6 +321,7 @@ mod tests {
             slots: 4,
             kv_pages: 4,
             page_tokens: 16,
+            aging_s: 0.0, // strict FCFS: a blocked head gates immediately
         });
         b.enqueue(req(0, 0.0, 48, 16)); // 4 pages: takes the whole pool
         b.enqueue(req(1, 0.0, 16, 4));
@@ -312,6 +382,94 @@ mod tests {
         assert_eq!(b.alloc.used_pages(), 0);
         assert_eq!(b.drain_queue().len(), 2);
         assert!(!b.has_work());
+    }
+
+    /// Drive a 2-slot / 4-page pool with one long request (needs the
+    /// whole pool) against a steady stream of 2-page shorts, one new
+    /// short per round. Returns the round the long request admitted.
+    fn run_short_stream(aging_s: f64, rounds: usize) -> Option<usize> {
+        let mut b = ContinuousBatcher::new(BatcherOptions {
+            slots: 2,
+            kv_pages: 4,
+            page_tokens: 16,
+            aging_s,
+        });
+        b.enqueue(req(100, 0.0, 48, 16)); // pages_for(64) = 4: whole pool
+        let mut admitted_round = None;
+        for round in 0..rounds {
+            let now = round as f64 * 0.1;
+            b.enqueue(req(1 + round as u64, now, 16, 4)); // 2 pages
+            for (slot, r) in b.admit(now) {
+                b.on_prefill(slot, 1, now);
+                if r.id == 100 {
+                    admitted_round.get_or_insert(round);
+                }
+            }
+            b.on_decode(&[2, 2], now).unwrap();
+        }
+        admitted_round
+    }
+
+    #[test]
+    fn aging_bounds_long_request_wait_under_short_stream() {
+        // Unbounded skipping (aging_s = inf): the staggered short stream
+        // keeps the pool half-full forever and the long request starves.
+        assert_eq!(run_short_stream(f64::INFINITY, 40), None);
+        // Finite aging: once the long request has waited aging_s it
+        // gates admission, the active shorts drain, and it admits in
+        // bounded steps.
+        let round = run_short_stream(0.25, 40).expect("long request admitted");
+        assert!(round <= 8, "admitted at round {round}, expected bounded drain");
+    }
+
+    #[test]
+    fn young_blocked_candidate_is_skipped_under_default_aging() {
+        let mut b = ContinuousBatcher::new(BatcherOptions {
+            slots: 3,
+            kv_pages: 4,
+            page_tokens: 16,
+            ..Default::default()
+        });
+        // Occupy half the pool so the long head below is blocked.
+        b.enqueue(req(0, 0.0, 16, 4)); // 2 pages
+        assert_eq!(b.admit(0.0).len(), 1);
+        b.enqueue(req(1, 0.0, 48, 16)); // 4 pages: blocked (2 free)
+        b.enqueue(req(2, 0.0, 16, 4)); // 2 pages: fits
+        let a = b.admit(0.0);
+        // The blocked head is young (wait 0 < aging_s), so the short
+        // behind it admits; the head itself stays queued and counts one
+        // rejected admission for the round it could not be placed.
+        assert_eq!(a.len(), 1);
+        assert_eq!(a[0].1.id, 2);
+        assert_eq!(b.queue_len(), 1);
+        assert_eq!(b.rejected_admissions, 1);
+    }
+
+    #[test]
+    fn priority_classes_admit_ahead_of_earlier_arrivals() {
+        let mut b = batcher(1);
+        let mut batch_req = req(0, 0.0, 16, 4);
+        batch_req.priority = 2;
+        let mut interactive = req(1, 0.0, 16, 4);
+        interactive.priority = 0;
+        b.enqueue(batch_req);
+        b.enqueue(interactive);
+        let a = b.admit(0.0);
+        // one slot: the lower priority class wins despite the higher id
+        assert_eq!(a.len(), 1);
+        assert_eq!(a[0].1.id, 1);
+    }
+
+    #[test]
+    fn tokens_accumulate_in_emission_order() {
+        let mut b = batcher(1);
+        b.enqueue(req(0, 0.0, 8, 3));
+        let a = b.admit(0.0);
+        b.on_prefill(a[0].0, 11, 0.0);
+        b.on_decode(&[12], 0.1).unwrap();
+        let done = b.on_decode(&[13], 0.2).unwrap();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].1.tokens, vec![11, 12, 13]);
     }
 
     #[test]

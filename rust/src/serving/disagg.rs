@@ -1,0 +1,584 @@
+//! Disaggregated prefill/decode serving (the tentpole of the serving
+//! API redesign): one [`ServeSpec`] drives two pools the way `Plan`
+//! drives `MeshTrainer`.
+//!
+//! Topology: arrivals land on a **prefill pool** of
+//! [`EngineCore::new_prefill_only`] replicas — each request is admitted,
+//! prefilled, and finished at its first token, so prefill TTFT never
+//! queues behind decode rounds.  The finished request's KV pages then
+//! hand off to a **decode pool** replica as a continuation whose
+//! admission pays the lowered schedule's `kv-handoff` [`Collective::P2P`]
+//! cost (sized in whole paged-allocator pages) instead of re-running
+//! prefill FLOPs.  Both pools are mesh-sharded: every replica backend is
+//! wrapped in [`MeshServeBackend`], so TP all-gathers and MoE
+//! dispatch/combine all-to-alls run as real [`SimCollective`] traffic
+//! and the token stream is checked bit-identical in flight.
+//!
+//! Resilience mirrors [`super::router::ReplicaRouter`]: the decode pool
+//! is `decode_replicas` active + `spares` under a [`HotSwapScheduler`].
+//! A decode failure drains the replica, promotes a spare (clock advanced
+//! to the failure), and re-routes the drained continuations — restart
+//! semantics, so the re-served stream is bit-identical (the handoff is
+//! re-paid, the tokens are not re-rolled).
+//!
+//! Merged outcomes splice the two pools: TTFT from the prefill pool
+//! (that is the point of disaggregation), decode cadence / finish time /
+//! token stream from the decode pool, with the first token asserted
+//! equal across the handoff.
+//!
+//! [`ServeSpec`]: super::spec::ServeSpec
+//! [`MeshServeBackend`]: super::spec::MeshServeBackend
+//! [`Collective::P2P`]: crate::perfmodel::comms::Collective::P2P
+//! [`SimCollective`]: crate::distributed::SimCollective
+//! [`HotSwapScheduler`]: crate::distributed::scheduler::HotSwapScheduler
+
+use std::collections::HashMap;
+
+use anyhow::{Context, Result};
+
+use crate::distributed::scheduler::{HotSwapScheduler, SliceState};
+use crate::runtime::backend::{
+    BackendCapabilities, ComputeBackend, DecodeResult, PrefillResult,
+};
+
+use super::engine::EngineCore;
+use super::router::{FailureEvent, ReplicaStats};
+use super::spec::{MeshServeBackend, ServeSpec};
+use super::workload::{aggregate, LatencyStats, Request, RequestOutcome, Workload};
+
+/// Decode-pool backend wrapper: "prefill" is a KV-cache *receive*, not a
+/// recompute.  The inner prefill still runs to reproduce the slot state
+/// (and the deterministic first token) but its compute cost is replaced
+/// by the lowered schedule's P2P handoff cost — the decode replica's
+/// clock is occupied by the transfer, exactly as a real disaggregated
+/// receive would occupy it.
+struct HandoffBackend {
+    inner: Box<dyn ComputeBackend>,
+    caps: BackendCapabilities,
+    handoff_s: f64,
+}
+
+impl HandoffBackend {
+    fn new(inner: Box<dyn ComputeBackend>, handoff_s: f64) -> Self {
+        let mut caps = inner.capabilities().clone();
+        caps.name = format!("{}+handoff", caps.name);
+        HandoffBackend {
+            inner,
+            caps,
+            handoff_s,
+        }
+    }
+}
+
+impl ComputeBackend for HandoffBackend {
+    fn capabilities(&self) -> &BackendCapabilities {
+        &self.caps
+    }
+
+    fn reset(&mut self, slots: usize) -> Result<()> {
+        self.inner.reset(slots)
+    }
+
+    fn prefill(&mut self, slot: usize, prompt: &[i32], bucket: usize) -> Result<PrefillResult> {
+        let pr = self.inner.prefill(slot, prompt, bucket)?;
+        Ok(PrefillResult {
+            token: pr.token,
+            cost_s: self.handoff_s,
+            bucket: pr.bucket,
+        })
+    }
+
+    fn decode(&mut self, pos: &[i32], tokens: &[i32]) -> Result<DecodeResult> {
+        self.inner.decode(pos, tokens)
+    }
+}
+
+#[derive(Debug)]
+pub struct DisaggReport {
+    /// Merged per-request outcomes (prefill TTFT × decode stream).
+    pub outcomes: Vec<RequestOutcome>,
+    pub stats: LatencyStats,
+    pub prefill_replicas: Vec<ReplicaStats>,
+    pub decode_replicas: Vec<ReplicaStats>,
+    /// Prefill→decode KV handoffs performed (including re-handoffs
+    /// after a decode-replica failure).
+    pub handoffs: u64,
+    /// Total KV bytes moved by those handoffs.
+    pub handoff_bytes: f64,
+    /// Continuations pulled out of a failed decode replica.
+    pub reroutes: u64,
+    /// Spare promotions in the decode pool.
+    pub swaps: u64,
+}
+
+/// The two-pool router.  Decode-pool replica ids (for
+/// [`FailureEvent::replica`]) index the decode pool: `0..decode_replicas`
+/// are active, the rest are spares.
+pub struct DisaggRouter {
+    spec: ServeSpec,
+    prefill: Vec<EngineCore>,
+    decode: Vec<EngineCore>,
+    /// Per-prefill-core cursor into its cumulative outcome list.
+    prefill_seen: Vec<usize>,
+    routed_prefill: Vec<u64>,
+    routed_decode: Vec<u64>,
+    scheduler: HotSwapScheduler,
+    /// Originals by id, for building handoff continuations.
+    originals: HashMap<u64, Request>,
+    /// Prefill-pool outcome by id (TTFT source for the merge).
+    prefill_records: HashMap<u64, RequestOutcome>,
+    handoff_s: f64,
+    kv_handoff_bytes: f64,
+    handoffs: u64,
+    reroutes: u64,
+}
+
+impl DisaggRouter {
+    /// One raw backend per replica, `prefill_replicas` first, then
+    /// `decode_replicas + spares` for the decode pool.  Every backend is
+    /// wrapped in [`MeshServeBackend`] (shard layout) here, and the
+    /// decode pool additionally in the handoff wrapper — callers supply
+    /// plain compute.
+    pub fn new(spec: ServeSpec, backends: Vec<Box<dyn ComputeBackend>>) -> Result<Self> {
+        let want = spec.prefill_replicas + spec.decode_replicas + spec.spares;
+        anyhow::ensure!(
+            backends.len() == want,
+            "{} needs {want} backends (prefill + decode + spares), got {}",
+            spec.name(),
+            backends.len()
+        );
+        let low = spec.lower()?;
+        let handoff_s: f64 = low
+            .schedule
+            .entries
+            .iter()
+            .filter(|e| e.tensor == "kv-handoff")
+            .map(|e| e.cost_s)
+            .sum();
+        let mut prefill = Vec::new();
+        let mut decode = Vec::new();
+        for (i, b) in backends.into_iter().enumerate() {
+            let mesh = MeshServeBackend::new(b, &spec)?;
+            if i < spec.prefill_replicas {
+                prefill.push(EngineCore::new_prefill_only(
+                    Box::new(mesh),
+                    spec.batcher.clone(),
+                )?);
+            } else {
+                decode.push(EngineCore::new(
+                    Box::new(HandoffBackend::new(Box::new(mesh), handoff_s)),
+                    spec.batcher.clone(),
+                )?);
+            }
+        }
+        let prefill_seen = vec![0; prefill.len()];
+        let routed_prefill = vec![0; prefill.len()];
+        let routed_decode = vec![0; decode.len()];
+        Ok(DisaggRouter {
+            scheduler: HotSwapScheduler::new(spec.decode_replicas, spec.spares),
+            kv_handoff_bytes: low.kv_handoff_bytes,
+            spec,
+            prefill,
+            decode,
+            prefill_seen,
+            routed_prefill,
+            routed_decode,
+            originals: HashMap::new(),
+            prefill_records: HashMap::new(),
+            handoff_s,
+            handoffs: 0,
+            reroutes: 0,
+        })
+    }
+
+    /// Convenience fleet over deterministic mock backends.
+    pub fn mock(spec: ServeSpec) -> Result<Self> {
+        let n = spec.prefill_replicas + spec.decode_replicas + spec.spares;
+        let backends: Vec<Box<dyn ComputeBackend>> = (0..n)
+            .map(|_| {
+                Box::new(crate::runtime::backend::MockBackend::default())
+                    as Box<dyn ComputeBackend>
+            })
+            .collect();
+        DisaggRouter::new(spec, backends)
+    }
+
+    pub fn spec(&self) -> &ServeSpec {
+        &self.spec
+    }
+
+    /// One-way KV handoff cost per continuation (seconds).
+    pub fn handoff_cost_s(&self) -> f64 {
+        self.handoff_s
+    }
+
+    fn decode_active(&self, id: usize) -> bool {
+        self.scheduler.state(id) == Some(SliceState::Active)
+    }
+
+    /// Least-loaded admission into the prefill pool.
+    fn route_prefill(&mut self, r: Request) -> Result<()> {
+        let target = (0..self.prefill.len())
+            .min_by_key(|i| (self.prefill[*i].outstanding(), *i))
+            .context("spec has no prefill replicas")?;
+        self.originals.insert(r.id, r.clone());
+        self.routed_prefill[target] += 1;
+        self.prefill[target].enqueue(r);
+        Ok(())
+    }
+
+    /// Least-loaded admission into the active decode set.
+    fn route_decode(&mut self, r: Request) -> Result<()> {
+        let target = (0..self.decode.len())
+            .filter(|i| self.decode_active(*i))
+            .min_by_key(|i| (self.decode[*i].outstanding(), *i))
+            .context("no active decode replicas left to route to")?;
+        self.routed_decode[target] += 1;
+        self.decode[target].enqueue(r);
+        Ok(())
+    }
+
+    /// Turn newly finished prefills on core `i` into decode-pool
+    /// continuations: the KV cache ships at the prefill finish time and
+    /// the decode replica pays the transfer as the continuation's
+    /// "prefill" cost.
+    fn collect_handoffs(&mut self, i: usize) -> Result<()> {
+        let fresh: Vec<RequestOutcome> =
+            self.prefill[i].outcomes()[self.prefill_seen[i]..].to_vec();
+        self.prefill_seen[i] = self.prefill[i].outcomes().len();
+        for o in fresh {
+            let orig = self
+                .originals
+                .get(&o.id)
+                .with_context(|| format!("prefilled request {} was never routed", o.id))?
+                .clone();
+            let cont = Request {
+                id: orig.id,
+                arrival_s: o.finish_s,
+                prompt: orig.prompt,
+                max_new_tokens: orig.max_new_tokens,
+                priority: orig.priority,
+                tenant: orig.tenant,
+            };
+            self.prefill_records.insert(o.id, o);
+            self.handoffs += 1;
+            self.route_decode(cont)?;
+        }
+        Ok(())
+    }
+
+    /// Fail a decode replica at fleet time `at_s` (same contract as
+    /// [`super::router::ReplicaRouter`]): drain, promote a spare, jump
+    /// survivor clocks to the failure instant, re-route — each re-routed
+    /// continuation pays the KV handoff again (the cache on the dead
+    /// replica is gone).
+    fn fail_decode_replica(&mut self, id: usize, at_s: f64) -> Result<()> {
+        if id >= self.decode.len() || !self.decode_active(id) {
+            return Ok(());
+        }
+        let drained = self.decode[id].drain()?;
+        let _promoted = self.scheduler.handle_failure(id);
+        for i in 0..self.decode.len() {
+            if self.decode_active(i) {
+                self.decode[i].advance_clock_to(at_s);
+            }
+        }
+        self.reroutes += drained.len() as u64;
+        for mut r in drained {
+            // the re-handoff cannot start before the failure
+            r.arrival_s = r.arrival_s.max(at_s);
+            self.handoffs += 1;
+            self.route_decode(r)?;
+        }
+        Ok(())
+    }
+
+    /// Serve a workload through both pools, injecting decode-pool
+    /// failures at their scheduled fleet times.  Runs to completion.
+    pub fn run(&mut self, workload: &Workload, failures: &[FailureEvent]) -> Result<DisaggReport> {
+        let mut arrivals: Vec<Request> = workload.requests.clone();
+        arrivals.sort_by(|a, b| {
+            a.arrival_s
+                .partial_cmp(&b.arrival_s)
+                .unwrap()
+                .then(a.id.cmp(&b.id))
+        });
+        let mut fails: Vec<FailureEvent> = failures.to_vec();
+        fails.sort_by(|a, b| a.at_s.partial_cmp(&b.at_s).unwrap());
+        let mut ai = 0usize;
+        let mut fi = 0usize;
+
+        loop {
+            // the laggard worker with work, across BOTH pools: (pool, id)
+            let step_prefill = (0..self.prefill.len())
+                .filter(|i| self.prefill[*i].has_work())
+                .min_by(|a, b| {
+                    self.prefill[*a]
+                        .clock()
+                        .partial_cmp(&self.prefill[*b].clock())
+                        .unwrap()
+                });
+            let step_decode = (0..self.decode.len())
+                .filter(|i| self.decode_active(*i) && self.decode[*i].has_work())
+                .min_by(|a, b| {
+                    self.decode[*a]
+                        .clock()
+                        .partial_cmp(&self.decode[*b].clock())
+                        .unwrap()
+                });
+            let tp = step_prefill
+                .map(|i| self.prefill[i].clock())
+                .unwrap_or(f64::INFINITY);
+            let td = step_decode
+                .map(|i| self.decode[i].clock())
+                .unwrap_or(f64::INFINITY);
+            let t_step = tp.min(td);
+            let t_arr = arrivals
+                .get(ai)
+                .map(|r| r.arrival_s)
+                .unwrap_or(f64::INFINITY);
+            let t_fail = fails.get(fi).map(|f| f.at_s).unwrap_or(f64::INFINITY);
+
+            if t_step.is_infinite() && t_arr.is_infinite() && t_fail.is_infinite() {
+                break;
+            }
+            if t_fail <= t_arr && t_fail <= t_step {
+                let ev = fails[fi];
+                fi += 1;
+                self.fail_decode_replica(ev.replica, ev.at_s)?;
+            } else if t_arr <= t_step {
+                let r = arrivals[ai].clone();
+                ai += 1;
+                self.route_prefill(r)?;
+            } else if tp <= td {
+                let i = step_prefill.unwrap();
+                self.prefill[i].step()?;
+                self.collect_handoffs(i)?;
+            } else {
+                self.decode[step_decode.unwrap()].step()?;
+            }
+        }
+        self.report()
+    }
+
+    /// Merge the two pools' outcomes: TTFT from the prefill pool, the
+    /// decode cadence / finish / token stream from the decode pool, with
+    /// the first token checked identical across the handoff.
+    pub fn report(&self) -> Result<DisaggReport> {
+        let mut outcomes = Vec::new();
+        for w in &self.decode {
+            for o in w.outcomes() {
+                let pr = self
+                    .prefill_records
+                    .get(&o.id)
+                    .with_context(|| format!("decode outcome {} has no prefill record", o.id))?;
+                anyhow::ensure!(
+                    o.tokens.first() == pr.tokens.first(),
+                    "KV handoff broke request {}'s token stream: prefill emitted {:?}, \
+                     decode restarted with {:?}",
+                    o.id,
+                    pr.tokens.first(),
+                    o.tokens.first()
+                );
+                outcomes.push(RequestOutcome {
+                    id: o.id,
+                    arrival_s: pr.arrival_s,
+                    ttft_s: pr.ttft_s,
+                    tpot_s: o.tpot_s,
+                    output_tokens: o.output_tokens,
+                    finish_s: o.finish_s,
+                    tokens: o.tokens.clone(),
+                });
+            }
+        }
+        outcomes.sort_by_key(|o| o.id);
+        let stats = aggregate(&outcomes);
+        let prefill_replicas = self
+            .prefill
+            .iter()
+            .enumerate()
+            .map(|(i, w)| ReplicaStats {
+                id: i,
+                backend: w.backend_name(),
+                state: SliceState::Active,
+                served: w.outcomes().len(),
+                routed: self.routed_prefill[i],
+                decode_rounds: w.decode_rounds(),
+                finish_clock_s: w.clock(),
+            })
+            .collect();
+        let decode_replicas = self
+            .decode
+            .iter()
+            .enumerate()
+            .map(|(i, w)| ReplicaStats {
+                id: i,
+                backend: w.backend_name(),
+                state: self.scheduler.state(i).unwrap_or(SliceState::Failed),
+                served: w.outcomes().len(),
+                routed: self.routed_decode[i],
+                decode_rounds: w.decode_rounds(),
+                finish_clock_s: w.clock(),
+            })
+            .collect();
+        Ok(DisaggReport {
+            outcomes,
+            stats,
+            prefill_replicas,
+            decode_replicas,
+            handoffs: self.handoffs,
+            handoff_bytes: self.handoffs as f64 * self.kv_handoff_bytes,
+            reroutes: self.reroutes,
+            swaps: self.scheduler.swaps,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::backend::MockBackend;
+    use crate::serving::batcher::BatcherOptions;
+    use crate::serving::workload::WorkloadOptions;
+    use crate::serving::Engine;
+
+    fn spec(p: usize, d: usize, s: usize) -> ServeSpec {
+        ServeSpec {
+            prefill_replicas: p,
+            decode_replicas: d,
+            spares: s,
+            batcher: BatcherOptions {
+                slots: 4,
+                kv_pages: 1024,
+                page_tokens: 16,
+                ..Default::default()
+            },
+            ..ServeSpec::default()
+        }
+    }
+
+    fn workload(n: usize, rate: f64, seed: u64) -> Workload {
+        Workload::sharegpt_like(WorkloadOptions {
+            num_requests: n,
+            request_rate: rate,
+            max_input_len: 64,
+            max_output_len: 10,
+            vocab: 2048,
+            seed,
+        })
+    }
+
+    #[test]
+    fn disagg_serves_every_request_once_with_handoffs() {
+        let mut router = DisaggRouter::mock(spec(1, 2, 0)).unwrap();
+        let w = workload(20, 40.0, 1);
+        let report = router.run(&w, &[]).unwrap();
+        assert_eq!(report.outcomes.len(), 20);
+        let ids: Vec<u64> = report.outcomes.iter().map(|o| o.id).collect();
+        assert_eq!(ids, (0..20).collect::<Vec<u64>>());
+        assert_eq!(report.handoffs, 20);
+        assert!(report.handoff_bytes > 0.0);
+        assert_eq!(report.reroutes, 0);
+        // the prefill pool never decodes; the decode pool does all of it
+        assert!(report.prefill_replicas.iter().all(|r| r.decode_rounds == 0));
+        assert!(report.decode_replicas.iter().any(|r| r.decode_rounds > 0));
+    }
+
+    #[test]
+    fn disagg_token_streams_match_the_single_pool_engine() {
+        let w = workload(16, 30.0, 3);
+        let mut router = DisaggRouter::mock(spec(1, 1, 0)).unwrap();
+        let disagg = router.run(&w, &[]).unwrap();
+        let single = Engine::new(
+            Box::new(MockBackend::default()),
+            BatcherOptions {
+                slots: 4,
+                kv_pages: 1024,
+                page_tokens: 16,
+                ..Default::default()
+            },
+        )
+        .unwrap()
+        .run(&w)
+        .unwrap();
+        assert_eq!(disagg.outcomes.len(), single.outcomes.len());
+        for (a, b) in disagg.outcomes.iter().zip(&single.outcomes) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.tokens, b.tokens, "request {} token stream diverged", a.id);
+            assert_eq!(a.output_tokens, b.output_tokens);
+        }
+    }
+
+    #[test]
+    fn decode_failure_hot_swaps_and_preserves_the_stream() {
+        let baseline = {
+            let mut r = DisaggRouter::mock(spec(1, 2, 1)).unwrap();
+            r.run(&workload(24, f64::INFINITY, 7), &[]).unwrap()
+        };
+        let mut router = DisaggRouter::mock(spec(1, 2, 1)).unwrap();
+        let report = router
+            .run(
+                &workload(24, f64::INFINITY, 7),
+                &[FailureEvent { replica: 0, at_s: 0.05 }],
+            )
+            .unwrap();
+        assert_eq!(report.outcomes.len(), 24);
+        assert_eq!(report.swaps, 1);
+        assert!(report.reroutes > 0, "burst at t=0 should have in-flight work at 0.05");
+        // re-handoffs are paid for every rerouted continuation
+        assert_eq!(report.handoffs, 24 + report.reroutes);
+        assert_eq!(report.decode_replicas[0].state, SliceState::Failed);
+        assert_eq!(report.decode_replicas[2].state, SliceState::Active);
+        assert!(report.decode_replicas[2].served > 0);
+        // bit-identical restart: same streams as the undisturbed run
+        for (a, b) in report.outcomes.iter().zip(&baseline.outcomes) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.tokens, b.tokens, "request {} re-rolled after the crash", a.id);
+        }
+        // causality: nothing rerouted finishes before the failure
+        for o in &report.outcomes {
+            assert!(o.finish_s >= o.arrival_s);
+        }
+    }
+
+    #[test]
+    fn prefill_pool_ttft_dodges_decode_queueing() {
+        // saturating burst: single-pool TTFT queues behind decode
+        // rounds, the disaggregated prefill pool does not
+        let w = workload(32, f64::INFINITY, 5);
+        let disagg = DisaggRouter::mock(spec(1, 1, 0)).unwrap().run(&w, &[]).unwrap();
+        let single = Engine::new(
+            Box::new(MockBackend::default()),
+            BatcherOptions {
+                slots: 4,
+                kv_pages: 1024,
+                page_tokens: 16,
+                ..Default::default()
+            },
+        )
+        .unwrap()
+        .run(&w)
+        .unwrap();
+        assert!(
+            disagg.stats.p99_ttft_s < single.stats.p99_ttft_s,
+            "disagg p99 TTFT {} should beat single-pool {}",
+            disagg.stats.p99_ttft_s,
+            single.stats.p99_ttft_s
+        );
+    }
+
+    #[test]
+    fn sharded_disagg_still_matches_plain_streams() {
+        // tp=2: mesh collectives run under both pools, tokens unchanged
+        let w = workload(10, 25.0, 9);
+        let sharded = ServeSpec {
+            tp: 2,
+            ..spec(1, 1, 0)
+        };
+        let report = DisaggRouter::mock(sharded).unwrap().run(&w, &[]).unwrap();
+        let plain = DisaggRouter::mock(spec(1, 1, 0)).unwrap().run(&w, &[]).unwrap();
+        for (a, b) in report.outcomes.iter().zip(&plain.outcomes) {
+            assert_eq!(a.tokens, b.tokens, "request {} diverged across TP widths", a.id);
+        }
+    }
+}

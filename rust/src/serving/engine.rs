@@ -55,6 +55,9 @@ pub struct EngineCore {
     prefills: u64,
     occupancy_sum: usize,
     slot_decode_time: Vec<f64>,
+    /// Prefill-pool mode: requests finish at prefill (one token), slots
+    /// and KV pages release immediately, no decode round ever runs.
+    prefill_only: bool,
 }
 
 impl EngineCore {
@@ -80,7 +83,23 @@ impl EngineCore {
             decode_rounds: 0,
             prefills: 0,
             occupancy_sum: 0,
+            prefill_only: false,
         })
+    }
+
+    /// A prefill-pool core for disaggregated serving: each request
+    /// finishes at prefill with its first token, the slot and its KV
+    /// pages release immediately, and no decode round runs. The
+    /// disaggregated router hands the KV cache off to a decode pool
+    /// (see `serving::disagg`).
+    pub fn new_prefill_only(backend: Box<dyn ComputeBackend>, opts: BatcherOptions) -> Result<Self> {
+        let mut core = EngineCore::new(backend, opts)?;
+        core.prefill_only = true;
+        Ok(core)
+    }
+
+    pub fn is_prefill_only(&self) -> bool {
+        self.prefill_only
     }
 
     pub fn backend_name(&self) -> String {
@@ -144,7 +163,37 @@ impl EngineCore {
             self.batcher.on_prefill(slot, pr.token, self.clock);
             self.slot_decode_time[slot] = 0.0;
             ev.admitted.push((slot, req.id));
-            self.slot_requests[slot] = Some(req);
+            if self.prefill_only {
+                // prefill pool: the request is done here — decode
+                // continues on the decode pool after the KV handoff
+                self.outcomes.push(RequestOutcome {
+                    id: req.id,
+                    arrival_s: req.arrival_s,
+                    ttft_s: self.clock - req.arrival_s,
+                    tpot_s: 0.0,
+                    output_tokens: 1,
+                    finish_s: self.clock,
+                    tokens: vec![pr.token],
+                });
+                ev.finished.push(req.id);
+                self.batcher.evict(slot)?;
+            } else {
+                self.slot_requests[slot] = Some(req);
+            }
+        }
+        if self.prefill_only {
+            // the pool is empty again after eviction, so the only fatal
+            // state is: nothing admitted while an arrived request waits
+            // (it can never fit)
+            if ev.admitted.is_empty() {
+                if let Some(t) = self.batcher.next_arrival() {
+                    anyhow::ensure!(
+                        t > self.clock,
+                        "head-of-line request cannot be admitted: demand exceeds the KV page pool"
+                    );
+                }
+            }
+            return Ok(ev);
         }
         if self.batcher.active_slots() == 0 {
             // nothing admitted: either future arrivals (fine) or a head
@@ -180,6 +229,7 @@ impl EngineCore {
                 tpot_s: self.slot_decode_time[slot] / decode_tokens as f64,
                 output_tokens: done.generated,
                 finish_s: self.clock,
+                tokens: done.tokens,
             });
             ev.finished.push(done.request_id);
             self.slot_requests[slot] = None;
@@ -267,6 +317,7 @@ mod tests {
                 slots,
                 kv_pages: 1024,
                 page_tokens: 16,
+                ..Default::default()
             },
         )
         .unwrap()
@@ -339,6 +390,7 @@ mod tests {
                 slots: 2,
                 kv_pages: 2,
                 page_tokens: 16,
+                ..Default::default()
             },
         )
         .unwrap();
@@ -348,10 +400,50 @@ mod tests {
                 arrival_s: 0.0,
                 prompt: vec![1; 100], // 100+8 tokens > 2 pages * 16
                 max_new_tokens: 8,
+                priority: 0,
+                tenant: 0,
             }],
             opts: WorkloadOptions::default(),
         };
         assert!(e.run(&w).is_err());
+    }
+
+    #[test]
+    fn prefill_only_core_finishes_at_first_token() {
+        let mut core = EngineCore::new_prefill_only(
+            Box::new(MockBackend::default()),
+            BatcherOptions {
+                slots: 4,
+                kv_pages: 64,
+                page_tokens: 16,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let w = Workload::sharegpt_like(WorkloadOptions {
+            num_requests: 10,
+            request_rate: 50.0,
+            max_input_len: 64,
+            max_output_len: 8,
+            vocab: 2048,
+            seed: 3,
+        });
+        for r in &w.requests {
+            core.enqueue(r.clone());
+        }
+        while core.has_work() {
+            core.step().unwrap();
+        }
+        let report = core.report();
+        assert_eq!(report.outcomes.len(), 10);
+        assert_eq!(report.decode_rounds, 0);
+        for o in &report.outcomes {
+            assert_eq!(o.output_tokens, 1);
+            assert_eq!(o.tokens.len(), 1);
+            assert!(o.ttft_s > 0.0);
+        }
+        // every slot and KV page released
+        assert_eq!(core.outstanding(), 0);
     }
 
     #[test]
@@ -362,6 +454,7 @@ mod tests {
                 slots: 2,
                 kv_pages: 1024,
                 page_tokens: 16,
+                ..Default::default()
             },
         )
         .unwrap();
@@ -371,6 +464,8 @@ mod tests {
                 arrival_s: 0.0,
                 prompt: vec![3; 16],
                 max_new_tokens: 10,
+                priority: 0,
+                tenant: 0,
             });
         }
         // admit 2 into slots, decode once; 3 remain queued

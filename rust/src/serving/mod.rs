@@ -19,19 +19,39 @@
 //!   scheduling-policy variant over the *same* backend.
 //! * [`router`] — multi-replica router: least-loaded admission over N
 //!   per-replica batchers, hot-swap spare promotion on replica failure.
+//! * [`spec`] — [`spec::ServeSpec`], the unified serving spec: pool
+//!   membership × shard layout × collective schedule, one artifact the
+//!   way `Plan` drives `MeshTrainer`; plus [`spec::MeshServeBackend`],
+//!   the TP×EP mesh-sharded replica decorator running real
+//!   `SimCollective` traffic.
+//! * [`disagg`] — disaggregated prefill/decode serving: a prefill pool
+//!   of first-token engines, a hot-swappable decode pool, and the KV
+//!   handoff costed as the lowered schedule's P2P entry.
+//! * [`router_bench`] — the deterministic latency/throughput/goodput
+//!   curve (single pool vs disaggregated at equal chips) gated by
+//!   `bench_check` against `benches/baseline.json`.
 //! * [`analytic`] — Table-4-scale analytic latency formulas (shared by
 //!   the analytic backend, so simulation and estimation stay one model).
 
 pub mod analytic;
 pub mod baseline;
 pub mod batcher;
+pub mod disagg;
 pub mod engine;
 pub mod paged;
 pub mod router;
+pub mod router_bench;
+pub mod spec;
 pub mod workload;
 
 pub use batcher::{BatcherOptions, ContinuousBatcher};
+pub use disagg::{DisaggReport, DisaggRouter};
 pub use engine::{Engine, EngineCore, EngineReport, StepEvents};
 pub use paged::PagedKvAllocator;
 pub use router::{router_from_config, FailureEvent, ReplicaRouter, RouterOptions, RouterReport};
-pub use workload::{Request, RequestOutcome, Workload, WorkloadOptions};
+pub use router_bench::{
+    compare_router_to_baseline, dominance_violations, router_bench_points, router_doc,
+    RouterBenchPoint, ROUTER_SLO_TTFT_S,
+};
+pub use spec::{lint_serve_presets, MeshServeBackend, ServeSpec};
+pub use workload::{Request, RequestOutcome, TenantSpec, TrafficOptions, Workload, WorkloadOptions};

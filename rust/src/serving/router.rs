@@ -260,6 +260,7 @@ pub fn router_from_config(cfg: &ConfigNode) -> Result<ReplicaRouter> {
         slots: policy.get_int("slots")? as usize,
         kv_pages: policy.get_int("kv_pages")? as usize,
         page_tokens: policy.get_int("page_tokens")? as usize,
+        aging_s: policy.get_float("aging_s")?,
     };
     let backend_cfg = cfg.child("backend")?;
     let backends = (0..replicas + spares)
@@ -294,6 +295,7 @@ mod tests {
                     slots: 4,
                     kv_pages: 1024,
                     page_tokens: 16,
+                    ..Default::default()
                 },
             },
         )
@@ -338,6 +340,7 @@ mod tests {
                 slots: 4,
                 kv_pages: 1024,
                 page_tokens: 16,
+                ..Default::default()
             },
         )
         .unwrap()
@@ -415,12 +418,16 @@ mod tests {
                     arrival_s: 0.0,
                     prompt: vec![1; 16],
                     max_new_tokens: 2, // replica 0 goes idle almost immediately
+                    priority: 0,
+                    tenant: 0,
                 },
                 Request {
                     id: 1,
                     arrival_s: 0.0,
                     prompt: vec![2; 16],
                     max_new_tokens: 200, // still in flight on replica 1 at t=0.5
+                    priority: 0,
+                    tenant: 0,
                 },
             ],
             opts: WorkloadOptions::default(),

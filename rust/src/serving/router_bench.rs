@@ -1,0 +1,361 @@
+//! Deterministic router bench: the latency / throughput /
+//! goodput-under-SLO curve comparing the whole-replica single-pool
+//! router against the disaggregated prefill/decode router at an equal
+//! chip budget.
+//!
+//! Both fleets get [`FLEET_REPLICAS`] mock replicas.  The single pool
+//! runs them all as interchangeable continuous-batching engines behind
+//! the least-loaded [`ReplicaRouter`]; the disaggregated fleet splits
+//! them into a prefill pool and a decode pool driven by one
+//! [`ServeSpec`].  Every request has a fixed shape (prompt and output
+//! length) and arrivals sit on a uniform grid, so the whole curve is a
+//! pure function of the code — the mock backend runs on a virtual
+//! clock and the numbers are bit-stable across runs and machines.
+//! That is what lets `bench_check` gate the `router_points` section of
+//! `benches/baseline.json` at a tight relative tolerance.
+//!
+//! The headline claim (the reason prefill/decode disaggregation exists)
+//! is mechanical here: a single-pool replica's admission slots are held
+//! for the *entire* decode of each resident request, so under load a
+//! new arrival's TTFT queues behind whole decode tails.  The prefill
+//! pool holds a slot only for the prefill itself, so disaggregated
+//! TTFT stays near the prefill cost until the prefill pool itself
+//! saturates.  With a TTFT SLO between the two regimes, goodput —
+//! tokens/s counting only SLO-met requests — strictly favors the
+//! disaggregated fleet once the offered load saturates the single
+//! pool.  [`dominance_violations`] checks exactly that at the top
+//! offered loads.
+
+use anyhow::Result;
+
+use crate::composer::mesh_sweep::rel_close;
+use crate::runtime::backend::{ComputeBackend, MockBackend};
+use crate::util::json::Json;
+use crate::util::stats::percentile;
+
+use super::batcher::BatcherOptions;
+use super::disagg::DisaggRouter;
+use super::router::{ReplicaRouter, RouterOptions};
+use super::spec::ServeSpec;
+use super::workload::{aggregate, Request, RequestOutcome, Workload, WorkloadOptions};
+
+/// TTFT service-level objective for the goodput column: between the
+/// prefill cost (~3 ms on the mock backend) and a single decode tail
+/// (~124 ms), so it separates the two queueing regimes.
+pub const ROUTER_SLO_TTFT_S: f64 = 0.05;
+
+/// Offered-load ladder (requests/second).  The single pool's capacity
+/// with the bench shape is ~130 req/s, so the top two points run it at
+/// roughly 2x and 4x saturation while the disaggregated prefill pool
+/// (service time ~2.6 ms/request/replica) still keeps up.
+pub const ROUTER_BENCH_LOADS: [f64; 5] = [16.0, 64.0, 128.0, 256.0, 512.0];
+
+/// Requests per load point.
+pub const ROUTER_BENCH_REQUESTS: usize = 96;
+
+/// Equal chip budget for both fleets: the single pool runs this many
+/// whole replicas; the disaggregated fleet splits them 2 prefill +
+/// 2 decode.
+pub const FLEET_REPLICAS: usize = 4;
+
+const PREFILL_REPLICAS: usize = 2;
+const DECODE_REPLICAS: usize = 2;
+const PROMPT_TOKENS: usize = 64;
+const OUTPUT_TOKENS: usize = 32;
+
+/// One measured (config, offered load) cell of the curve.
+#[derive(Clone, Debug)]
+pub struct RouterBenchPoint {
+    /// `"single-pool"` or `"disagg"`.
+    pub config: String,
+    /// Offered load (requests/second).
+    pub offered_req_s: f64,
+    pub p50_ttft_s: f64,
+    pub p99_ttft_s: f64,
+    /// All generated tokens over the makespan.
+    pub throughput_tok_s: f64,
+    /// Tokens of SLO-met requests (TTFT <= [`ROUTER_SLO_TTFT_S`]) over
+    /// the makespan.
+    pub goodput_tok_s: f64,
+    /// Fraction of requests meeting the TTFT SLO.
+    pub slo_frac: f64,
+}
+
+fn bench_batcher() -> BatcherOptions {
+    BatcherOptions {
+        slots: 4,
+        kv_pages: 1024,
+        page_tokens: 16,
+        ..Default::default()
+    }
+}
+
+/// Fixed-shape workload on a uniform arrival grid: request `i` arrives
+/// at `i / rate` with a 64-token prompt and exactly 32 output tokens.
+/// No sampling anywhere, so every queueing number downstream is exact.
+fn bench_workload(rate: f64) -> Workload {
+    let requests = (0..ROUTER_BENCH_REQUESTS)
+        .map(|i| Request {
+            id: i as u64,
+            arrival_s: i as f64 / rate,
+            prompt: (0..PROMPT_TOKENS)
+                .map(|t| ((i * 131 + t * 17) % 2048) as i32)
+                .collect(),
+            max_new_tokens: OUTPUT_TOKENS,
+            priority: 0,
+            tenant: 0,
+        })
+        .collect();
+    Workload {
+        requests,
+        opts: WorkloadOptions {
+            num_requests: ROUTER_BENCH_REQUESTS,
+            request_rate: rate,
+            max_input_len: PROMPT_TOKENS,
+            max_output_len: OUTPUT_TOKENS,
+            vocab: 2048,
+            seed: 0,
+        },
+    }
+}
+
+fn bench_spec() -> ServeSpec {
+    ServeSpec {
+        prefill_replicas: PREFILL_REPLICAS,
+        decode_replicas: DECODE_REPLICAS,
+        spares: 0,
+        batcher: bench_batcher(),
+        ..ServeSpec::default()
+    }
+}
+
+fn point_from(config: &str, rate: f64, outcomes: &[RequestOutcome]) -> RouterBenchPoint {
+    let stats = aggregate(outcomes);
+    let ttfts: Vec<f64> = outcomes.iter().map(|o| o.ttft_s).collect();
+    let met: Vec<&RequestOutcome> =
+        outcomes.iter().filter(|o| o.ttft_s <= ROUTER_SLO_TTFT_S).collect();
+    let good_tokens: usize = met.iter().map(|o| o.output_tokens).sum();
+    RouterBenchPoint {
+        config: config.to_string(),
+        offered_req_s: rate,
+        p50_ttft_s: percentile(&ttfts, 0.50),
+        p99_ttft_s: percentile(&ttfts, 0.99),
+        throughput_tok_s: stats.throughput_tok_s,
+        goodput_tok_s: good_tokens as f64 / stats.makespan_s.max(1e-9),
+        slo_frac: met.len() as f64 / outcomes.len().max(1) as f64,
+    }
+}
+
+/// Run the full curve: for each offered load, the single-pool router
+/// and the disaggregated router over the same workload and chip budget.
+pub fn router_bench_points() -> Result<Vec<RouterBenchPoint>> {
+    let mut points = Vec::new();
+    for rate in ROUTER_BENCH_LOADS {
+        let w = bench_workload(rate);
+
+        let backends: Vec<Box<dyn ComputeBackend>> = (0..FLEET_REPLICAS)
+            .map(|_| Box::new(MockBackend::default()) as Box<dyn ComputeBackend>)
+            .collect();
+        let single = ReplicaRouter::new(
+            backends,
+            RouterOptions {
+                replicas: FLEET_REPLICAS,
+                spares: 0,
+                batcher: bench_batcher(),
+            },
+        )?
+        .run(&w, &[])?;
+        points.push(point_from("single-pool", rate, &single.outcomes));
+
+        let disagg = DisaggRouter::mock(bench_spec())?.run(&w, &[])?;
+        points.push(point_from("disagg", rate, &disagg.outcomes));
+    }
+    Ok(points)
+}
+
+/// Render the curve as the `router_points` JSON section consumed by
+/// `bench_check` and committed in `benches/baseline.json`.
+pub fn router_doc(points: &[RouterBenchPoint]) -> Json {
+    Json::obj(vec![
+        ("bench", Json::str("router")),
+        ("requests", Json::num(ROUTER_BENCH_REQUESTS as f64)),
+        ("fleet_replicas", Json::num(FLEET_REPLICAS as f64)),
+        ("slo_ttft_s", Json::num(ROUTER_SLO_TTFT_S)),
+        (
+            "router_points",
+            Json::Arr(
+                points
+                    .iter()
+                    .map(|p| {
+                        Json::obj(vec![
+                            ("config", Json::str(p.config.clone())),
+                            ("offered_req_s", Json::num(p.offered_req_s)),
+                            ("p50_ttft_s", Json::num(p.p50_ttft_s)),
+                            ("p99_ttft_s", Json::num(p.p99_ttft_s)),
+                            ("throughput_tok_s", Json::num(p.throughput_tok_s)),
+                            ("goodput_tok_s", Json::num(p.goodput_tok_s)),
+                            ("slo_frac", Json::num(p.slo_frac)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Compare a computed curve against a baseline document.  Points are
+/// keyed by `(config, offered_req_s)`; every latency/throughput column
+/// is compared within `tol` relative tolerance.  Returns one message
+/// per drifted, missing, or extra point; empty means the gate passes.
+pub fn compare_router_to_baseline(
+    points: &[RouterBenchPoint],
+    baseline: &Json,
+    tol: f64,
+) -> Vec<String> {
+    let mut drifts = Vec::new();
+    let Some(base_points) = baseline.get("router_points").and_then(|p| p.as_arr()) else {
+        return vec!["baseline has no \"router_points\" array".into()];
+    };
+    for p in points {
+        let Some(b) = base_points.iter().find(|b| {
+            b.get("config").and_then(|c| c.as_str()) == Some(p.config.as_str())
+                && b.get("offered_req_s").and_then(|v| v.as_f64()) == Some(p.offered_req_s)
+        }) else {
+            drifts.push(format!(
+                "router point {}@{} req/s missing from baseline",
+                p.config, p.offered_req_s
+            ));
+            continue;
+        };
+        for (metric, current) in [
+            ("p50_ttft_s", p.p50_ttft_s),
+            ("p99_ttft_s", p.p99_ttft_s),
+            ("throughput_tok_s", p.throughput_tok_s),
+            ("goodput_tok_s", p.goodput_tok_s),
+            ("slo_frac", p.slo_frac),
+        ] {
+            match b.get(metric).and_then(|v| v.as_f64()) {
+                None => drifts.push(format!(
+                    "router point {}@{} req/s: baseline lacks {metric}",
+                    p.config, p.offered_req_s
+                )),
+                Some(base) if !rel_close(current, base, tol) => drifts.push(format!(
+                    "router point {}@{} req/s: {metric} drifted {base:.6e} -> {current:.6e} \
+                     ({:+.3}% > {:.3}% tolerance)",
+                    p.config,
+                    p.offered_req_s,
+                    (current - base) / base.abs().max(1e-12) * 100.0,
+                    tol * 100.0,
+                )),
+                Some(_) => {}
+            }
+        }
+    }
+    for b in base_points {
+        let cfg = b.get("config").and_then(|c| c.as_str()).unwrap_or("<unnamed>");
+        let rate = b.get("offered_req_s").and_then(|v| v.as_f64()).unwrap_or(f64::NAN);
+        if !points
+            .iter()
+            .any(|p| p.config == cfg && p.offered_req_s == rate)
+        {
+            drifts.push(format!(
+                "baseline router point {cfg}@{rate} req/s no longer measured"
+            ));
+        }
+    }
+    drifts
+}
+
+/// Check the headline claim: at the `top_n` highest offered loads the
+/// disaggregated fleet's goodput-under-SLO must *strictly* beat the
+/// whole-replica single pool.  Returns one message per violation.
+pub fn dominance_violations(points: &[RouterBenchPoint], top_n: usize) -> Vec<String> {
+    let mut loads: Vec<f64> = points.iter().map(|p| p.offered_req_s).collect();
+    loads.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    loads.dedup();
+    let mut violations = Vec::new();
+    for rate in loads.into_iter().rev().take(top_n) {
+        let goodput = |cfg: &str| {
+            points
+                .iter()
+                .find(|p| p.config == cfg && p.offered_req_s == rate)
+                .map(|p| p.goodput_tok_s)
+        };
+        match (goodput("disagg"), goodput("single-pool")) {
+            (Some(d), Some(s)) if d > s => {}
+            (Some(d), Some(s)) => violations.push(format!(
+                "offered {rate} req/s: disagg goodput {d:.1} tok/s does not strictly beat \
+                 single-pool {s:.1} tok/s"
+            )),
+            _ => violations.push(format!("offered {rate} req/s: missing a config row")),
+        }
+    }
+    violations
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn curve_is_complete_and_deterministic() {
+        let points = router_bench_points().unwrap();
+        assert_eq!(points.len(), 2 * ROUTER_BENCH_LOADS.len());
+        for rate in ROUTER_BENCH_LOADS {
+            for cfg in ["single-pool", "disagg"] {
+                let p = points
+                    .iter()
+                    .find(|p| p.config == cfg && p.offered_req_s == rate)
+                    .unwrap_or_else(|| panic!("missing {cfg}@{rate}"));
+                assert!(p.throughput_tok_s > 0.0, "{cfg}@{rate}");
+                assert!(p.p50_ttft_s > 0.0 && p.p99_ttft_s >= p.p50_ttft_s, "{cfg}@{rate}");
+                assert!(p.goodput_tok_s <= p.throughput_tok_s + 1e-9, "{cfg}@{rate}");
+                assert!((0.0..=1.0).contains(&p.slo_frac), "{cfg}@{rate}");
+            }
+        }
+        // virtual-clock determinism: the whole curve is bit-stable
+        let again = router_bench_points().unwrap();
+        assert_eq!(router_doc(&points).to_string(), router_doc(&again).to_string());
+    }
+
+    #[test]
+    fn disagg_dominates_goodput_at_saturating_loads() {
+        let points = router_bench_points().unwrap();
+        let violations = dominance_violations(&points, 2);
+        assert!(violations.is_empty(), "{violations:?}");
+        // and the mechanism: at the top load the single pool's tail TTFT
+        // queues behind whole decode tails while the prefill pool does not
+        let top = ROUTER_BENCH_LOADS[ROUTER_BENCH_LOADS.len() - 1];
+        let ttft = |cfg: &str| {
+            points
+                .iter()
+                .find(|p| p.config == cfg && p.offered_req_s == top)
+                .unwrap()
+                .p99_ttft_s
+        };
+        assert!(
+            ttft("disagg") < ttft("single-pool"),
+            "disagg p99 {} vs single-pool p99 {}",
+            ttft("disagg"),
+            ttft("single-pool")
+        );
+    }
+
+    #[test]
+    fn self_comparison_is_drift_free_and_tampering_is_one_drift() {
+        let points = router_bench_points().unwrap();
+        let doc = router_doc(&points);
+        assert_eq!(compare_router_to_baseline(&points, &doc, 1e-9), Vec::<String>::new());
+        // a baseline without the section is a single loud failure
+        let empty = Json::obj(vec![("bench", Json::str("router"))]);
+        let drifts = compare_router_to_baseline(&points, &empty, 1e-9);
+        assert_eq!(drifts.len(), 1);
+        assert!(drifts[0].contains("router_points"), "{}", drifts[0]);
+        // tampering one metric of one point yields exactly one drift
+        let mut tampered = points.clone();
+        tampered[0].goodput_tok_s *= 1.5;
+        let drifts = compare_router_to_baseline(&tampered, &doc, 1e-3);
+        assert_eq!(drifts.len(), 1, "{drifts:?}");
+        assert!(drifts[0].contains("goodput_tok_s"), "{}", drifts[0]);
+    }
+}

@@ -1,0 +1,571 @@
+//! `ServeSpec` — one spec that drives serving the way `Plan` drives
+//! [`crate::distributed::mesh::MeshTrainer`].
+//!
+//! A spec names everything a disaggregated deployment needs:
+//!
+//! * **pool membership** — `prefill_replicas` + `decode_replicas` +
+//!   `spares` (hot-swap pool, reusing §5's slice machinery);
+//! * **shard layout** — each replica is a `tp × ep` mesh subgroup
+//!   served through [`MeshServeBackend`], which runs the real
+//!   [`SimCollective`] traffic (TP all-gather, MoE dispatch/combine
+//!   all-to-all) around the wrapped compute backend;
+//! * **the schedule** — [`ServeSpec::lower`] emits the
+//!   [`CollectiveSchedule`](crate::composer::schedule::CollectiveSchedule)
+//!   of one served request through
+//!   [`build_serve_schedule`], so the static verifier and the netsim
+//!   flow simulator apply to serving exactly as they do to training.
+//!
+//! Specs round-trip through instance-type strings
+//! (`serve-tp4-ep2-p2-d4-s1`), which is what the `serve-*` mesh rule
+//! in [`crate::config::mesh_rules`] parses — serving presets live in
+//! the same rule table as the paper's Appendix-A trainer rules.
+
+use anyhow::{Context, Result};
+
+use crate::composer::schedule::{build_serve_schedule, local_interconnect, ServeLowering};
+use crate::composer::verify::{verify_schedule, VerifyContext, VerifyReport};
+use crate::config::ConfigNode;
+use crate::distributed::moe::{plan_dispatch, reassemble};
+use crate::distributed::SimCollective;
+use crate::perfmodel::chips::{self, Interconnect};
+use crate::runtime::backend::{
+    BackendCapabilities, ComputeBackend, DecodeResult, PrefillResult,
+};
+
+use super::batcher::BatcherOptions;
+
+/// The unified serving spec: pool membership × shard layout × schedule.
+#[derive(Clone, Debug)]
+pub struct ServeSpec {
+    /// Tensor-parallel width of one replica (the `model` axis).
+    pub tp: usize,
+    /// Expert-parallel width of one replica (the `expert` axis).
+    pub ep: usize,
+    /// Replicas in the prefill pool.
+    pub prefill_replicas: usize,
+    /// Replicas in the decode pool.
+    pub decode_replicas: usize,
+    /// Over-provisioned decode spares for hot swap.
+    pub spares: usize,
+    /// Expert bank size (must partition over `ep`).
+    pub num_experts: usize,
+    /// Top-k routing width.
+    pub active_experts: usize,
+    /// MoE capacity factor (accounting only; no tokens are dropped in
+    /// transit — see [`crate::distributed::moe`]).
+    pub capacity_factor: f64,
+    /// Per-replica continuous-batcher options (slots, paged-KV pool).
+    pub batcher: BatcherOptions,
+    /// Fabric the schedule is costed on.
+    pub interconnect: Interconnect,
+    /// Longest servable sequence (KV handoff is sized for it).
+    pub max_seq: usize,
+    pub hidden_dim: usize,
+    /// KV-cache bytes per token across all layers (both K and V).
+    pub kv_bytes_per_token: f64,
+    /// Run the static schedule verifier at lowering time.
+    pub verify: bool,
+}
+
+impl Default for ServeSpec {
+    fn default() -> Self {
+        ServeSpec {
+            tp: 1,
+            ep: 1,
+            prefill_replicas: 1,
+            decode_replicas: 1,
+            spares: 0,
+            num_experts: 1,
+            active_experts: 1,
+            capacity_factor: 1.25,
+            batcher: BatcherOptions::default(),
+            interconnect: local_interconnect(),
+            max_seq: 1024,
+            hidden_dim: 512,
+            kv_bytes_per_token: 64.0,
+            verify: true,
+        }
+    }
+}
+
+impl ServeSpec {
+    /// Canonical instance-type string, parseable by [`Self::parse_rule`]
+    /// and matched by the `serve-*` mesh rule.
+    pub fn name(&self) -> String {
+        format!(
+            "serve-tp{}-ep{}-p{}-d{}-s{}",
+            self.tp, self.ep, self.prefill_replicas, self.decode_replicas, self.spares
+        )
+    }
+
+    /// Parse a `serve-tp4-ep2-p2-d4-s1` instance-type string.  Tokens
+    /// may appear in any order and any subset; omitted ones keep their
+    /// defaults.  `ep > 1` scales the expert bank to `4·ep` experts
+    /// (top-2 routed) so the bank always partitions over the ranks.
+    pub fn parse_rule(instance: &str) -> Result<ServeSpec> {
+        let rest = instance
+            .strip_prefix("serve-")
+            .with_context(|| format!("{instance:?} is not a serve-* instance type"))?;
+        let mut spec = ServeSpec::default();
+        for tok in rest.split('-') {
+            // longest prefixes first: `tp4` must not parse as `p…`
+            let (field, digits) = if let Some(v) = tok.strip_prefix("tp") {
+                ("tp", v)
+            } else if let Some(v) = tok.strip_prefix("ep") {
+                ("ep", v)
+            } else if let Some(v) = tok.strip_prefix('p') {
+                ("p", v)
+            } else if let Some(v) = tok.strip_prefix('d') {
+                ("d", v)
+            } else if let Some(v) = tok.strip_prefix('s') {
+                ("s", v)
+            } else {
+                anyhow::bail!("unknown token {tok:?} in serve instance {instance:?}");
+            };
+            let n: usize = digits
+                .parse()
+                .with_context(|| format!("bad count in token {tok:?} of {instance:?}"))?;
+            match field {
+                "tp" => spec.tp = n,
+                "ep" => spec.ep = n,
+                "p" => spec.prefill_replicas = n,
+                "d" => spec.decode_replicas = n,
+                _ => spec.spares = n,
+            }
+        }
+        anyhow::ensure!(
+            spec.tp >= 1 && spec.ep >= 1,
+            "{instance:?}: tp and ep must be >= 1"
+        );
+        anyhow::ensure!(
+            spec.prefill_replicas >= 1 && spec.decode_replicas >= 1,
+            "{instance:?}: both pools need at least one replica"
+        );
+        if spec.ep > 1 {
+            spec.num_experts = 4 * spec.ep;
+            spec.active_experts = 2;
+        }
+        Ok(spec)
+    }
+
+    /// Chips one replica occupies.
+    pub fn chips_per_replica(&self) -> usize {
+        self.tp * self.ep
+    }
+
+    /// Total chip budget of the deployment (both pools + spares).
+    pub fn fleet_chips(&self) -> usize {
+        (self.prefill_replicas + self.decode_replicas + self.spares) * self.chips_per_replica()
+    }
+
+    fn check_experts(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.num_experts >= self.ep && self.num_experts % self.ep == 0,
+            "{} experts do not partition over ep={}",
+            self.num_experts,
+            self.ep
+        );
+        anyhow::ensure!(
+            (1..=self.num_experts).contains(&self.active_experts),
+            "active_experts={} out of range for {} experts",
+            self.active_experts,
+            self.num_experts
+        );
+        anyhow::ensure!(
+            self.capacity_factor > 0.0 && self.capacity_factor.is_finite(),
+            "capacity_factor must be positive and finite"
+        );
+        Ok(())
+    }
+
+    /// Lower the spec to its collective schedule.  With `verify` set the
+    /// static verifier must pass (the same gate `materialize` applies to
+    /// trainer plans) or lowering fails with the rendered diagnostics.
+    pub fn lower(&self) -> Result<ServeLowering> {
+        self.check_experts()?;
+        let low = build_serve_schedule(
+            self.tp,
+            self.ep,
+            self.hidden_dim,
+            self.max_seq,
+            self.batcher.page_tokens,
+            self.kv_bytes_per_token,
+            &self.interconnect,
+        )?;
+        if self.verify {
+            let report = self.report_for(&low)?;
+            anyhow::ensure!(
+                report.is_clean(),
+                "static schedule verifier rejected {}:\n{}",
+                self.name(),
+                report.render()
+            );
+        }
+        Ok(low)
+    }
+
+    fn report_for(&self, low: &ServeLowering) -> Result<VerifyReport> {
+        let ctx = VerifyContext::for_strategy(&low.strategy);
+        verify_schedule(&low.schedule, None, &ctx)
+    }
+
+    /// The verifier's report on this spec's schedule (lint entry point;
+    /// runs regardless of the `verify` flag).
+    pub fn verify_report(&self) -> Result<VerifyReport> {
+        self.check_experts()?;
+        let low = build_serve_schedule(
+            self.tp,
+            self.ep,
+            self.hidden_dim,
+            self.max_seq,
+            self.batcher.page_tokens,
+            self.kv_bytes_per_token,
+            &self.interconnect,
+        )?;
+        self.report_for(&low)
+    }
+
+    /// One-way prefill→decode KV handoff cost (seconds) from the
+    /// lowered schedule's P2P entry.
+    pub fn handoff_cost_s(&self) -> Result<f64> {
+        let low = self.lower()?;
+        Ok(low
+            .schedule
+            .entries
+            .iter()
+            .filter(|e| e.tensor == "kv-handoff")
+            .map(|e| e.cost_s)
+            .sum())
+    }
+
+    /// Flow-simulated time of one request's schedule on a two-tier
+    /// fabric of this replica group's chips.
+    pub fn netsim_cost_s(&self) -> Result<f64> {
+        let low = self.lower()?;
+        let topo = crate::netsim::Topology::two_tier(
+            low.strategy.total_chips().max(2),
+            &self.interconnect,
+        );
+        let sim = low
+            .schedule
+            .simulate(&topo, crate::netsim::AlgoChoice::Auto)?;
+        Ok(sim.total_sim_s())
+    }
+
+    /// Build from a registered `ServeSpec` config node.  The fabric
+    /// comes from `instance_type` through the chip table (unknown types
+    /// fall back to the local-interconnect model), the batcher from the
+    /// nested `ContinuousBatchingPolicy` — the same composition rules as
+    /// `router_from_config`.
+    pub fn from_config(cfg: &ConfigNode) -> Result<ServeSpec> {
+        anyhow::ensure!(
+            cfg.klass == "ServeSpec",
+            "expected a ServeSpec config, got {:?}",
+            cfg.klass
+        );
+        let policy = cfg.child("policy")?;
+        anyhow::ensure!(
+            policy.klass == "ContinuousBatchingPolicy",
+            "ServeSpec policy must be ContinuousBatchingPolicy, got {:?}",
+            policy.klass
+        );
+        let instance = cfg.get_str("instance_type")?;
+        let interconnect = chips::by_instance_type(&instance)
+            .map(|c| c.interconnect)
+            .unwrap_or_else(local_interconnect);
+        Ok(ServeSpec {
+            tp: cfg.get_int("tp")? as usize,
+            ep: cfg.get_int("ep")? as usize,
+            prefill_replicas: cfg.get_int("prefill_replicas")? as usize,
+            decode_replicas: cfg.get_int("decode_replicas")? as usize,
+            spares: cfg.get_int("spares")? as usize,
+            num_experts: cfg.get_int("num_experts")? as usize,
+            active_experts: cfg.get_int("active_experts")? as usize,
+            capacity_factor: cfg.get_float("capacity_factor")?,
+            batcher: BatcherOptions {
+                slots: policy.get_int("slots")? as usize,
+                kv_pages: policy.get_int("kv_pages")? as usize,
+                page_tokens: policy.get_int("page_tokens")? as usize,
+                aging_s: policy.get_float("aging_s")?,
+            },
+            interconnect,
+            max_seq: cfg.get_int("max_seq")? as usize,
+            hidden_dim: cfg.get_int("hidden_dim")? as usize,
+            kv_bytes_per_token: cfg.get_float("kv_bytes_per_token")?,
+            verify: cfg.get_bool("verify")?,
+        })
+    }
+}
+
+/// Canonical serve presets, each lowered and run through the static
+/// verifier — the serving rows of `bin/verify`'s lint table.
+pub fn lint_serve_presets() -> Result<Vec<(String, VerifyReport)>> {
+    let mut out = Vec::new();
+    for name in [
+        "serve-tp1-ep1-p1-d1-s0",
+        "serve-tp2-ep1-p1-d2-s1",
+        "serve-tp4-ep1-p2-d4-s1",
+        "serve-tp2-ep2-p2-d2-s1",
+        "serve-tp4-ep2-p2-d4-s1",
+    ] {
+        let spec = ServeSpec::parse_rule(name)?;
+        let report = spec.verify_report()?;
+        out.push((name.to_string(), report));
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// The mesh-sharded backend decorator
+// ---------------------------------------------------------------------------
+
+// Token ids ride the f32 collective wire bit-cast, never value-cast
+// (same lossless encoding as the MoE dispatch layer).
+fn pack(x: i32) -> f32 {
+    f32::from_bits(x as u32)
+}
+
+fn unpack(x: f32) -> i32 {
+    x.to_bits() as i32
+}
+
+/// A [`ComputeBackend`] whose replica is a `tp × ep` mesh subgroup.
+///
+/// Every prefill/decode call shuttles the live token stream through the
+/// real [`SimCollective`] machinery — the TP activation all-gather on
+/// the `model` axis, and for `ep > 1` the full MoE dispatch/combine
+/// all-to-all round trip (with the reassembled stream checked
+/// bit-identical, the training-side invariant) — then delegates compute
+/// to the wrapped backend.  Tokens pass through unchanged, so a
+/// mesh-sharded replica is bit-identical to its inner backend at any
+/// width; only the *cost* changes: compute divides by `tp`, and the
+/// lowered schedule's communication entries are added on top.
+pub struct MeshServeBackend {
+    inner: Box<dyn ComputeBackend>,
+    tp: usize,
+    ep: usize,
+    num_experts: usize,
+    active_experts: usize,
+    capacity_factor: f64,
+    collective: SimCollective,
+    caps: BackendCapabilities,
+    /// Per-call TP all-reduce cost from the lowered schedule.
+    tp_comm_s: f64,
+    /// Per-call MoE dispatch+combine cost from the lowered schedule.
+    moe_comm_s: f64,
+}
+
+impl MeshServeBackend {
+    pub fn new(inner: Box<dyn ComputeBackend>, spec: &ServeSpec) -> Result<Self> {
+        let low = spec.lower()?;
+        let cost_on = |axis: &str| -> f64 {
+            low.schedule
+                .entries
+                .iter()
+                .filter(|e| e.axis == axis)
+                .map(|e| e.cost_s)
+                .sum()
+        };
+        let mut caps = inner.capabilities().clone();
+        caps.name = format!("{}@tp{}ep{}", caps.name, spec.tp, spec.ep);
+        Ok(MeshServeBackend {
+            inner,
+            tp: spec.tp,
+            ep: spec.ep,
+            num_experts: spec.num_experts,
+            active_experts: spec.active_experts,
+            capacity_factor: spec.capacity_factor,
+            collective: SimCollective::new(),
+            caps,
+            tp_comm_s: cost_on("model"),
+            moe_comm_s: cost_on("expert"),
+        })
+    }
+
+    /// Bytes the replica's collectives have actually moved.
+    pub fn bytes_moved(&self) -> u64 {
+        self.collective.counters().bytes_moved
+    }
+
+    fn comm_s(&self) -> f64 {
+        self.tp_comm_s + self.moe_comm_s
+    }
+
+    /// Run the sharded communication pattern over a live token stream.
+    fn shuttle(&mut self, toks: &[i32]) -> Result<()> {
+        if toks.is_empty() {
+            return Ok(());
+        }
+        if self.tp > 1 {
+            let shard: Vec<f32> = toks.iter().map(|&t| pack(t)).collect();
+            let shards = vec![shard.clone(); self.tp];
+            let gathered = self.collective.all_gather(&shards)?;
+            anyhow::ensure!(gathered.len() == self.tp, "all-gather lost a TP rank");
+            let got: Vec<i32> = gathered[0][..shard.len()].iter().map(|&f| unpack(f)).collect();
+            anyhow::ensure!(
+                got == toks,
+                "tensor-parallel all-gather corrupted the token stream"
+            );
+        }
+        if self.ep > 1 {
+            let mut padded = toks.to_vec();
+            while padded.len() % self.ep != 0 {
+                padded.push(0); // capacity accounting only; reassembly is exact
+            }
+            let targets: Vec<i32> = (0..padded.len() as i32).collect();
+            let plan = plan_dispatch(
+                &padded,
+                &targets,
+                self.ep,
+                self.num_experts,
+                self.active_experts,
+                self.capacity_factor,
+            )?;
+            let dispatched = self.collective.all_to_all(&plan.buckets)?;
+            let returned = self.collective.all_to_all(&dispatched)?;
+            let (toks2, tgts2) = reassemble(&plan.dest_of, &returned)?;
+            anyhow::ensure!(
+                toks2 == padded && tgts2 == targets,
+                "MoE dispatch/combine round trip corrupted the token stream"
+            );
+        }
+        Ok(())
+    }
+}
+
+impl ComputeBackend for MeshServeBackend {
+    fn capabilities(&self) -> &BackendCapabilities {
+        &self.caps
+    }
+
+    fn reset(&mut self, slots: usize) -> Result<()> {
+        self.inner.reset(slots)
+    }
+
+    fn prefill(&mut self, slot: usize, prompt: &[i32], bucket: usize) -> Result<PrefillResult> {
+        self.shuttle(prompt)?;
+        let pr = self.inner.prefill(slot, prompt, bucket)?;
+        Ok(PrefillResult {
+            token: pr.token,
+            cost_s: pr.cost_s / self.tp as f64 + self.comm_s(),
+            bucket: pr.bucket,
+        })
+    }
+
+    fn decode(&mut self, pos: &[i32], tokens: &[i32]) -> Result<DecodeResult> {
+        self.shuttle(tokens)?;
+        let dr = self.inner.decode(pos, tokens)?;
+        Ok(DecodeResult {
+            tokens: dr.tokens,
+            cost_s: dr.cost_s / self.tp as f64 + self.comm_s(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::backend::MockBackend;
+
+    fn sharded(tp: usize, ep: usize) -> ServeSpec {
+        ServeSpec {
+            tp,
+            ep,
+            num_experts: if ep > 1 { 4 * ep } else { 1 },
+            active_experts: if ep > 1 { 2 } else { 1 },
+            ..ServeSpec::default()
+        }
+    }
+
+    #[test]
+    fn name_and_parse_round_trip() {
+        let spec = ServeSpec::parse_rule("serve-tp4-ep2-p2-d4-s1").unwrap();
+        assert_eq!(spec.tp, 4);
+        assert_eq!(spec.ep, 2);
+        assert_eq!(spec.prefill_replicas, 2);
+        assert_eq!(spec.decode_replicas, 4);
+        assert_eq!(spec.spares, 1);
+        assert_eq!(spec.num_experts, 8); // ep>1 scales the bank
+        assert_eq!(spec.name(), "serve-tp4-ep2-p2-d4-s1");
+        // partial strings keep defaults
+        let spec = ServeSpec::parse_rule("serve-tp2").unwrap();
+        assert_eq!(spec.tp, 2);
+        assert_eq!(spec.decode_replicas, 1);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_instances() {
+        assert!(ServeSpec::parse_rule("gpu-H100-8").is_err());
+        assert!(ServeSpec::parse_rule("serve-tpx").is_err());
+        assert!(ServeSpec::parse_rule("serve-q4").is_err());
+        assert!(ServeSpec::parse_rule("serve-tp0").is_err());
+        assert!(ServeSpec::parse_rule("serve-d0").is_err());
+    }
+
+    #[test]
+    fn default_spec_lowers_clean_and_costs_the_handoff() {
+        let spec = ServeSpec::default();
+        let low = spec.lower().unwrap();
+        assert_eq!(low.strategy.total_chips(), 2); // pipeline=2, tp=ep=1
+        // a 1024-token sequence at 64 B/token: exactly 64 KV pages
+        assert!((low.kv_handoff_bytes - 1024.0 * 64.0).abs() < 1e-9);
+        assert!(spec.handoff_cost_s().unwrap() > 0.0);
+        assert_eq!(spec.fleet_chips(), 2);
+    }
+
+    #[test]
+    fn lint_covers_every_canonical_preset_clean() {
+        let rows = lint_serve_presets().unwrap();
+        assert_eq!(rows.len(), 5);
+        for (name, report) in &rows {
+            assert!(report.is_clean(), "{name} failed verify:\n{}", report.render());
+        }
+    }
+
+    #[test]
+    fn netsim_costs_the_sharded_spec() {
+        let spec = sharded(4, 2);
+        let t = spec.netsim_cost_s().unwrap();
+        assert!(t.is_finite() && t > 0.0, "netsim cost {t}");
+    }
+
+    #[test]
+    fn mesh_backend_is_bit_identical_to_inner_at_any_width() {
+        let prompt: Vec<i32> = (1..40).collect();
+        let mut plain = MockBackend::default();
+        plain.reset(4).unwrap();
+        let base_pr = plain.prefill(0, &prompt, 64).unwrap();
+        let base_dr = plain.decode(&[40, 0, 0, 0], &[base_pr.token, 0, 0, 0]).unwrap();
+
+        for (tp, ep) in [(1usize, 1usize), (2, 1), (4, 1), (2, 2), (4, 2)] {
+            let spec = sharded(tp, ep);
+            let mut mesh =
+                MeshServeBackend::new(Box::new(MockBackend::default()), &spec).unwrap();
+            mesh.reset(4).unwrap();
+            let pr = mesh.prefill(0, &prompt, 64).unwrap();
+            assert_eq!(pr.token, base_pr.token, "tp={tp} ep={ep} prefill diverged");
+            let dr = mesh.decode(&[40, 0, 0, 0], &[pr.token, 0, 0, 0]).unwrap();
+            assert_eq!(dr.tokens, base_dr.tokens, "tp={tp} ep={ep} decode diverged");
+            if tp > 1 || ep > 1 {
+                assert!(mesh.bytes_moved() > 0, "tp={tp} ep={ep} moved no bytes");
+                assert!(pr.cost_s != base_pr.cost_s);
+            }
+            assert!(
+                mesh.capabilities().name.contains(&format!("tp{tp}ep{ep}")),
+                "{}",
+                mesh.capabilities().name
+            );
+        }
+    }
+
+    #[test]
+    fn spec_composes_from_config() {
+        use crate::config::registry::default_config;
+        let cfg = default_config("ServeSpec").unwrap();
+        let spec = ServeSpec::from_config(&cfg).unwrap();
+        assert!(spec.lower().unwrap().kv_handoff_bytes > 0.0);
+        // a router config node is rejected, not misread
+        let wrong = default_config("ServeRouter").unwrap();
+        assert!(ServeSpec::from_config(&wrong).is_err());
+    }
+}

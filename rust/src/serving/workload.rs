@@ -1,9 +1,13 @@
-//! ShareGPT-like serving workload (Table 4 / Figure 5 setup).
+//! Serving workloads: ShareGPT-like (Table 4 / Figure 5 setup) and a
+//! multi-tenant traffic generator for the disaggregated router.
 //!
 //! The paper uses ShareGPT prompts with max input 1024 (7B) / 1800 (70B)
 //! and max output 256.  ShareGPT's published length statistics are
 //! roughly lognormal; we match that shape, clipped to the paper's maxima,
 //! with Poisson arrivals at a configurable request rate.
+//! [`Workload::traffic`] layers production texture on top: a diurnal
+//! load curve, burst episodes, and weighted multi-tenant sampling with
+//! per-tenant priorities and length profiles (see `docs/serving.md`).
 
 use crate::util::rng::Rng;
 
@@ -15,6 +19,12 @@ pub struct Request {
     pub arrival_s: f64,
     pub prompt: Vec<i32>,
     pub max_new_tokens: usize,
+    /// Admission priority class: lower is more urgent (0 = highest).
+    /// The batcher's aging term promotes a waiting request across
+    /// classes so low-priority work cannot starve.
+    pub priority: u8,
+    /// Originating tenant (multi-tenant accounting; 0 = default tenant).
+    pub tenant: u32,
 }
 
 /// Completion record with the latency metrics of Table 4.
@@ -27,6 +37,10 @@ pub struct RequestOutcome {
     /// Mean time per output token after the first (seconds).
     pub tpot_s: f64,
     pub output_tokens: usize,
+    /// Every token the engine emitted for this request, in order (the
+    /// prefill token first).  The disaggregated-serving suite asserts
+    /// these are bit-identical across pool and TP configurations.
+    pub tokens: Vec<i32>,
     pub finish_s: f64,
 }
 
@@ -83,10 +97,149 @@ impl Workload {
                     arrival_s: if opts.request_rate.is_finite() { t } else { 0.0 },
                     prompt,
                     max_new_tokens: out,
+                    priority: 0,
+                    tenant: 0,
                 }
             })
             .collect();
         Workload { requests, opts }
+    }
+
+    /// Multi-tenant traffic with production texture, driving the
+    /// disaggregated router benches: a diurnal sinusoid modulates the
+    /// base arrival rate, seeded burst episodes multiply it further, and
+    /// each request samples a tenant (weighted) whose priority and
+    /// length profile it inherits.  Deterministic for a given options
+    /// value: the same seed replays the same trace.
+    pub fn traffic(opts: TrafficOptions) -> Self {
+        assert!(!opts.tenants.is_empty(), "traffic generator needs at least one tenant");
+        let mut rng = Rng::new(opts.seed ^ 0x7AFF_1C);
+        let total_weight: f64 = opts.tenants.iter().map(|t| t.weight.max(0.0)).sum();
+        assert!(total_weight > 0.0, "tenant weights must not all be zero");
+        let mut t = 0.0f64;
+        let mut burst_left = 0usize;
+        let mut max_input = 0usize;
+        let mut max_output = 0usize;
+        let requests = (0..opts.num_requests)
+            .map(|i| {
+                // instantaneous rate: diurnal sinusoid × optional burst
+                let phase = 2.0 * std::f64::consts::PI * t / opts.diurnal_period_s.max(1e-9);
+                let mut rate = opts.base_rate * (1.0 + opts.diurnal_amplitude * phase.sin());
+                if burst_left == 0 && rng.gen_bool(opts.burst_prob) {
+                    burst_left = opts.burst_len;
+                }
+                if burst_left > 0 {
+                    burst_left -= 1;
+                    rate *= opts.burst_rate_multiplier.max(1.0);
+                }
+                t += rng.exponential(rate.max(opts.base_rate * 0.05).max(1e-9));
+                // weighted tenant draw
+                let mut pick = rng.next_f64() * total_weight;
+                let mut tenant_ix = 0usize;
+                for (ix, ten) in opts.tenants.iter().enumerate() {
+                    pick -= ten.weight.max(0.0);
+                    if pick <= 0.0 {
+                        tenant_ix = ix;
+                        break;
+                    }
+                }
+                let ten = &opts.tenants[tenant_ix];
+                let mu = (ten.max_input_len as f64 * 0.25).max(1.0).ln();
+                let len = (rng.lognormal(mu, 0.8) as usize).clamp(4, ten.max_input_len.max(4));
+                let out_mu = (ten.max_output_len as f64 * 0.5).max(1.0).ln();
+                let out = (rng.lognormal(out_mu, 0.6) as usize).clamp(1, ten.max_output_len.max(1));
+                max_input = max_input.max(len);
+                max_output = max_output.max(out);
+                let prompt = (0..len)
+                    .map(|_| rng.gen_range(0, opts.vocab as u64) as i32)
+                    .collect();
+                Request {
+                    id: i as u64,
+                    arrival_s: t,
+                    prompt,
+                    max_new_tokens: out,
+                    priority: ten.priority,
+                    tenant: tenant_ix as u32,
+                }
+            })
+            .collect();
+        Workload {
+            requests,
+            opts: WorkloadOptions {
+                num_requests: opts.num_requests,
+                request_rate: opts.base_rate,
+                max_input_len: max_input.max(4),
+                max_output_len: max_output.max(1),
+                vocab: opts.vocab,
+                seed: opts.seed,
+            },
+        }
+    }
+}
+
+/// One tenant of the [`Workload::traffic`] generator.
+#[derive(Clone, Debug)]
+pub struct TenantSpec {
+    pub name: String,
+    /// Sampling weight (share of traffic; normalized across tenants).
+    pub weight: f64,
+    /// Priority class requests of this tenant carry (lower = higher).
+    pub priority: u8,
+    pub max_input_len: usize,
+    pub max_output_len: usize,
+}
+
+/// Options for [`Workload::traffic`].
+#[derive(Clone, Debug)]
+pub struct TrafficOptions {
+    pub num_requests: usize,
+    /// Mean requests/second before diurnal/burst modulation.
+    pub base_rate: f64,
+    /// Relative swing of the diurnal sinusoid in [0, 1): 0.5 means the
+    /// rate oscillates between 0.5× and 1.5× the base.
+    pub diurnal_amplitude: f64,
+    /// Period of the diurnal curve in virtual seconds.
+    pub diurnal_period_s: f64,
+    /// Rate multiplier during a burst episode (≥ 1).
+    pub burst_rate_multiplier: f64,
+    /// Per-arrival probability of starting a burst episode.
+    pub burst_prob: f64,
+    /// Arrivals per burst episode.
+    pub burst_len: usize,
+    pub tenants: Vec<TenantSpec>,
+    pub vocab: usize,
+    pub seed: u64,
+}
+
+impl Default for TrafficOptions {
+    fn default() -> Self {
+        TrafficOptions {
+            num_requests: 64,
+            base_rate: 8.0,
+            diurnal_amplitude: 0.5,
+            diurnal_period_s: 60.0,
+            burst_rate_multiplier: 4.0,
+            burst_prob: 0.05,
+            burst_len: 8,
+            tenants: vec![
+                TenantSpec {
+                    name: "interactive".into(),
+                    weight: 0.7,
+                    priority: 0,
+                    max_input_len: 96,
+                    max_output_len: 24,
+                },
+                TenantSpec {
+                    name: "batch".into(),
+                    weight: 0.3,
+                    priority: 2,
+                    max_input_len: 512,
+                    max_output_len: 64,
+                },
+            ],
+            vocab: 2048,
+            seed: 0,
+        }
     }
 }
 
@@ -198,6 +351,7 @@ mod tests {
                 ttft_s: 0.1,
                 tpot_s: 0.01,
                 output_tokens: 10,
+                tokens: Vec::new(),
                 finish_s: 1.0,
             },
             RequestOutcome {
@@ -206,6 +360,7 @@ mod tests {
                 ttft_s: 0.3,
                 tpot_s: 0.02,
                 output_tokens: 10,
+                tokens: Vec::new(),
                 finish_s: 2.0,
             },
         ];
@@ -213,5 +368,68 @@ mod tests {
         assert_eq!(s.n, 2);
         assert!((s.mean_ttft_s - 0.2).abs() < 1e-9);
         assert!((s.throughput_tok_s - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn traffic_is_deterministic_and_multi_tenant() {
+        let opts = TrafficOptions {
+            num_requests: 400,
+            ..Default::default()
+        };
+        let a = Workload::traffic(opts.clone());
+        let b = Workload::traffic(opts);
+        assert_eq!(a.requests.len(), 400);
+        for (x, y) in a.requests.iter().zip(&b.requests) {
+            assert_eq!(x.arrival_s, y.arrival_s);
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.priority, y.priority);
+            assert_eq!(x.tenant, y.tenant);
+        }
+        // both tenants actually sampled, with their priorities attached
+        let tenants: std::collections::BTreeSet<u32> =
+            a.requests.iter().map(|r| r.tenant).collect();
+        assert_eq!(tenants.len(), 2, "{tenants:?}");
+        assert!(a.requests.iter().any(|r| r.priority == 0));
+        assert!(a.requests.iter().any(|r| r.priority == 2));
+        // arrivals are monotone (the clock never runs backwards)
+        for pair in a.requests.windows(2) {
+            assert!(pair[0].arrival_s <= pair[1].arrival_s);
+        }
+    }
+
+    #[test]
+    fn traffic_bursts_compress_interarrival_gaps() {
+        // with aggressive bursts the minimum gap must be far below the
+        // mean gap — the clumping a disaggregated prefill pool absorbs
+        let w = Workload::traffic(TrafficOptions {
+            num_requests: 600,
+            base_rate: 10.0,
+            burst_rate_multiplier: 20.0,
+            burst_prob: 0.08,
+            burst_len: 12,
+            ..Default::default()
+        });
+        let gaps: Vec<f64> = w
+            .requests
+            .windows(2)
+            .map(|p| p[1].arrival_s - p[0].arrival_s)
+            .collect();
+        let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+        let min = gaps.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(min < mean / 5.0, "min gap {min} vs mean {mean}");
+    }
+
+    #[test]
+    fn traffic_respects_tenant_length_profiles() {
+        let w = Workload::traffic(TrafficOptions {
+            num_requests: 500,
+            ..Default::default()
+        });
+        for r in &w.requests {
+            let cap = if r.tenant == 0 { 96 } else { 512 };
+            assert!(r.prompt.len() <= cap, "tenant {} prompt {}", r.tenant, r.prompt.len());
+        }
+        // the batch tenant's long-context tail actually shows up
+        assert!(w.requests.iter().any(|r| r.prompt.len() > 96));
     }
 }

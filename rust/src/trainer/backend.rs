@@ -200,26 +200,9 @@ pub struct MockTrainBackend {
     initialized: bool,
 }
 
-/// SplitMix64-style mixer shared by the mock's init and gradient noise.
-fn mix(a: u64, b: u64) -> u64 {
-    let mut z = a
-        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
-        .wrapping_add(b.wrapping_mul(0xBF58_476D_1CE4_E5B9));
-    z ^= z >> 30;
-    z = z.wrapping_mul(0x94D0_49BB_1331_11EB);
-    z ^ (z >> 31)
-}
-
-/// Deterministic value in [-1, 1).
-fn unit(h: u64) -> f32 {
-    ((h % 2048) as f32 / 1024.0) - 1.0
-}
-
-fn digest(tokens: &[i32]) -> u64 {
-    tokens
-        .iter()
-        .fold(0u64, |acc, t| acc.wrapping_mul(31).wrapping_add(*t as u32 as u64))
-}
+// The SplitMix64 mixer family (init noise, gradient noise, batch
+// digests) lives in the shared backend core next to its serving mirror.
+use crate::backend::{digest, mix, unit};
 
 impl MockTrainBackend {
     pub fn new(opts: MockTrainBackendOptions) -> Self {
@@ -361,24 +344,13 @@ impl TrainBackend for MockTrainBackend {
 /// `PjrtTrainBackend` configs carry only the artifact family — the
 /// session needs a live PJRT client, so construct those with
 /// [`PjrtTrainBackend::open`].
+///
+/// Thin delegate: the construction logic lives in the shared registry
+/// path ([`crate::backend::train_backend_from_config`]), alongside its
+/// serving mirror and the family-agnostic
+/// [`crate::backend::any_backend_from_config`].
 pub fn train_backend_from_config(cfg: &ConfigNode) -> Result<Box<dyn TrainBackend>> {
-    match cfg.klass.as_str() {
-        "MockTrainBackend" => {
-            let opts = MockTrainBackendOptions {
-                dim: cfg.get_int("dim")? as usize,
-                batch: cfg.get_int("batch")? as usize,
-                seq: cfg.get_int("seq")? as usize,
-                vocab: cfg.get_int("vocab")? as usize,
-                lr: cfg.get_float("lr")? as f32,
-            };
-            Ok(Box::new(MockTrainBackend::new(opts)))
-        }
-        "PjrtTrainBackend" => anyhow::bail!(
-            "PjrtTrainBackend config (artifact {:?}) needs a live runtime: use PjrtTrainBackend::open",
-            cfg.get_str("artifact").unwrap_or_default()
-        ),
-        other => anyhow::bail!("not a TrainBackend config: {other:?}"),
-    }
+    crate::backend::train_backend_from_config(cfg)
 }
 
 #[cfg(test)]

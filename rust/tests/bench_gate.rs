@@ -18,6 +18,9 @@ use axlearn::composer::{
     compare_to_baseline, mesh_sweep_doc, mesh_sweep_points, BASELINE_DEFAULT_TOL,
 };
 use axlearn::distributed::sim_bench::{compare_sim_to_baseline, sim_counter_points, sim_doc};
+use axlearn::serving::{
+    compare_router_to_baseline, dominance_violations, router_bench_points, router_doc,
+};
 use axlearn::util::json::Json;
 
 /// The planner bench cases replan 4k–32k-chip clusters; compute them
@@ -324,6 +327,77 @@ fn committed_baseline_gates_the_planner() {
     assert!(
         drifts.is_empty(),
         "committed planner points drifted (regenerate with bench_check --write):\n{drifts:#?}"
+    );
+}
+
+#[test]
+fn injected_router_regressions_fail_the_gate() {
+    // the serving-curve gate must catch each failure class on exactly
+    // the tampered point
+    let points = router_bench_points().unwrap();
+    let baseline = Json::parse(&router_doc(&points).to_string()).unwrap();
+    let drifts = compare_router_to_baseline(&points, &baseline, BASELINE_DEFAULT_TOL);
+    assert!(drifts.is_empty(), "{drifts:?}");
+
+    // a goodput collapse on one point is exactly one drift naming it
+    let mut tampered = points.clone();
+    let idx = tampered.iter().position(|p| p.config == "disagg").unwrap();
+    tampered[idx].goodput_tok_s *= 0.5;
+    let drifts = compare_router_to_baseline(&tampered, &baseline, BASELINE_DEFAULT_TOL);
+    assert_eq!(drifts.len(), 1, "{drifts:?}");
+    assert!(
+        drifts[0].contains("goodput_tok_s") && drifts[0].contains("disagg"),
+        "{}",
+        drifts[0]
+    );
+
+    // a dropped point is reported from the baseline side
+    let mut short = points.clone();
+    short.remove(idx);
+    let drifts = compare_router_to_baseline(&short, &baseline, BASELINE_DEFAULT_TOL);
+    assert_eq!(drifts.len(), 1, "{drifts:?}");
+    assert!(drifts[0].contains("no longer measured"), "{}", drifts[0]);
+
+    // a goodput-dominance inversion is caught before any baseline exists
+    let mut inverted = points.clone();
+    for p in &mut inverted {
+        if p.config == "disagg" {
+            p.goodput_tok_s = 0.0;
+        }
+    }
+    assert_eq!(dominance_violations(&inverted, 2).len(), 2);
+    assert!(dominance_violations(&points, 2).is_empty());
+}
+
+#[test]
+fn committed_baseline_gates_the_router() {
+    // the committed baseline must carry the serving curve's
+    // router_points section the CI gate compares.  Like the sim_points
+    // and planner_points sections, it is materialized on first run (or
+    // with UPDATE_GOLDEN=1) and committed; after that a drift here means
+    // serving behavior changed and the baseline must be regenerated
+    // *deliberately* with `bench_check --write`.
+    let path = axlearn::repo_root().join("benches/baseline.json");
+    let mut baseline = committed_baseline();
+    let points = router_bench_points().unwrap();
+    let missing = baseline.get("router_points").is_none();
+    if std::env::var("UPDATE_GOLDEN").is_ok() || missing {
+        let doc = router_doc(&points);
+        if let (Json::Obj(map), Some(rp)) = (&mut baseline, doc.get("router_points")) {
+            map.insert("router_points".into(), rp.clone());
+        }
+        // write-then-rename: sibling tests read the file concurrently
+        let tmp = path.with_extension("json.router.tmp");
+        std::fs::write(&tmp, baseline.to_string() + "\n")
+            .unwrap_or_else(|e| panic!("writing {}: {e}", tmp.display()));
+        std::fs::rename(&tmp, &path)
+            .unwrap_or_else(|e| panic!("renaming {}: {e}", tmp.display()));
+        return;
+    }
+    let drifts = compare_router_to_baseline(&points, &baseline, BASELINE_DEFAULT_TOL);
+    assert!(
+        drifts.is_empty(),
+        "committed router points drifted (regenerate with bench_check --write):\n{drifts:#?}"
     );
 }
 

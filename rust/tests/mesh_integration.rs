@@ -23,7 +23,7 @@ use axlearn::checkpoint::multi_tier::Tier;
 use axlearn::composer::PipelineKind;
 use axlearn::distributed::failure::FailureKind;
 use axlearn::distributed::fleet::{FleetOptions, FleetTrainer, InjectedFailure};
-use axlearn::distributed::mesh::{MeshOptions, MeshTrainer};
+use axlearn::distributed::mesh::{MeshSpec, MeshTrainer};
 use axlearn::trainer::backend::{MockTrainBackend, MockTrainBackendOptions, TrainBackend};
 use axlearn::trainer::input::{CorpusKind, SyntheticCorpus};
 use axlearn::trainer::InputPipeline;
@@ -113,7 +113,7 @@ fn every_8_device_factorization_is_bit_identical_to_single_device() {
     let meshes = factorizations(8);
     assert_eq!(meshes.len(), 10, "{meshes:?}"); // 8=2^3: 10 ordered factorizations
     for (d, f, m) in meshes {
-        let mut mesh = MeshTrainer::new(mock(), MeshOptions::for_mesh(d, f, m)).unwrap();
+        let mut mesh = MeshTrainer::new(mock(), MeshSpec::axes(&[("data", d), ("fsdp", f), ("model", m)]).build()).unwrap();
         mesh.init(SEED).unwrap();
         assert_eq!(mesh.num_devices(), 8);
         let losses = run(&mut mesh, CORPUS, STEPS);
@@ -153,7 +153,7 @@ fn every_4_axis_factorization_is_bit_identical_under_both_pipeline_schedules() {
     assert_eq!(meshes.len(), 20, "{meshes:?}"); // 8=2^3 into 4 ordered factors
     for (d, p, f, m) in meshes {
         for kind in [PipelineKind::GPipe, PipelineKind::OneFOneB] {
-            let opts = MeshOptions::for_mesh4(d, p, f, m, MICRO).with_schedule(kind);
+            let opts = MeshSpec::axes(&[("data", d), ("pipeline", p), ("fsdp", f), ("model", m)]).microbatches(MICRO).schedule(kind).build();
             let mut mesh = MeshTrainer::new(mock(), opts).unwrap();
             mesh.init(SEED).unwrap();
             assert_eq!(mesh.num_devices(), 8);
@@ -220,10 +220,12 @@ fn every_5_axis_factorization_of_16_devices_is_bit_identical() {
             // every thread count; here the spread keeps the 70-point
             // sweep's runtime flat while still proving the claim)
             let threads = [1, 2, 8][(d * 31 + p * 7 + f * 3 + m + e) % 3];
-            let opts = MeshOptions::for_mesh5(d, p, f, m, e, MICRO)
-                .with_schedule(kind)
-                .with_moe(EXPERTS.max(e), 2, 1.25)
-                .with_sim_threads(threads);
+            let opts = MeshSpec::axes(&[("data", d), ("pipeline", p), ("fsdp", f), ("model", m), ("expert", e)])
+                .microbatches(MICRO)
+                .schedule(kind)
+                .moe(EXPERTS.max(e), 2, 1.25)
+                .sim_threads(threads)
+                .build();
             let mut mesh = MeshTrainer::new(mock(), opts).unwrap();
             mesh.init(SEED).unwrap();
             assert_eq!(mesh.num_devices(), 16);
@@ -262,8 +264,8 @@ fn every_5_axis_factorization_of_16_devices_is_bit_identical() {
 fn mesh_schedules_differ_by_factorization_but_numerics_do_not() {
     // two factorizations of the same budget: different communication
     // plans (that is the point of mesh rules), identical numerics
-    let mut a = MeshTrainer::new(mock(), MeshOptions::for_mesh(1, 8, 1)).unwrap();
-    let mut b = MeshTrainer::new(mock(), MeshOptions::for_mesh(1, 2, 4)).unwrap();
+    let mut a = MeshTrainer::new(mock(), MeshSpec::axes(&[("data", 1), ("fsdp", 8), ("model", 1)]).build()).unwrap();
+    let mut b = MeshTrainer::new(mock(), MeshSpec::axes(&[("data", 1), ("fsdp", 2), ("model", 4)]).build()).unwrap();
     a.init(1).unwrap();
     b.init(1).unwrap();
     let la = run(&mut a, 3, 6);
@@ -309,7 +311,7 @@ fn mesh_workers(n: usize) -> Vec<Box<dyn TrainBackend>> {
     // fleet provides the data axis; each replica is FSDP×TP inside
     (0..n)
         .map(|_| {
-            Box::new(MeshTrainer::new(mock(), MeshOptions::for_mesh(1, 2, 2)).unwrap())
+            Box::new(MeshTrainer::new(mock(), MeshSpec::axes(&[("data", 1), ("fsdp", 2), ("model", 2)]).build()).unwrap())
                 as Box<dyn TrainBackend>
         })
         .collect()
@@ -377,8 +379,7 @@ fn pipelined_mesh_workers(n: usize) -> Vec<Box<dyn TrainBackend>> {
             Box::new(
                 MeshTrainer::new(
                     mock(),
-                    MeshOptions::for_mesh4(1, 2, 2, 1, 4)
-                        .with_schedule(PipelineKind::OneFOneB),
+                    MeshSpec::axes(&[("data", 1), ("pipeline", 2), ("fsdp", 2), ("model", 1)]).microbatches(4).schedule(PipelineKind::OneFOneB).build(),
                 )
                 .unwrap(),
             ) as Box<dyn TrainBackend>
@@ -442,9 +443,7 @@ fn pipelined_expert_mesh_workers(n: usize) -> Vec<Box<dyn TrainBackend>> {
             Box::new(
                 MeshTrainer::new(
                     mock(),
-                    MeshOptions::for_mesh5(1, 2, 2, 1, 2, 4)
-                        .with_schedule(PipelineKind::OneFOneB)
-                        .with_moe(4, 2, 1.25),
+                    MeshSpec::axes(&[("data", 1), ("pipeline", 2), ("fsdp", 2), ("model", 1), ("expert", 2)]).microbatches(4).schedule(PipelineKind::OneFOneB).moe(4, 2, 1.25).build(),
                 )
                 .unwrap(),
             ) as Box<dyn TrainBackend>

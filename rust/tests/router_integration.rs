@@ -34,6 +34,7 @@ fn scheduling_trace(backend: Box<dyn ComputeBackend>, w: &Workload) -> Vec<StepE
             slots: 8,
             kv_pages: 2048,
             page_tokens: 16,
+            ..Default::default()
         },
     )
     .unwrap();
@@ -89,6 +90,7 @@ fn mock_fleet(replicas: usize, spares: usize) -> ReplicaRouter {
                 slots: 8,
                 kv_pages: 2048,
                 page_tokens: 16,
+                ..Default::default()
             },
         },
     )

@@ -1,11 +1,17 @@
 //! Serving integration: the continuous-batching engine vs the static
-//! baseline over real artifacts — the Table-4/Figure-5 mechanism checks.
+//! baseline over real artifacts — the Table-4/Figure-5 mechanism checks —
+//! plus the disaggregated prefill/decode bit-identity matrix over the
+//! deterministic mock backend.
 
+use std::collections::HashMap;
 use std::sync::Arc;
 
+use axlearn::runtime::backend::MockBackend;
 use axlearn::runtime::{Manifest, RuntimeClient, ServeSession};
 use axlearn::serving::baseline::{StaticBatchEngine, StaticBatchOptions};
-use axlearn::serving::{BatcherOptions, Engine, Workload, WorkloadOptions};
+use axlearn::serving::{
+    BatcherOptions, DisaggRouter, Engine, FailureEvent, ServeSpec, Workload, WorkloadOptions,
+};
 
 fn setup() -> (Arc<RuntimeClient>, Manifest) {
     let client = Arc::new(RuntimeClient::cpu().unwrap());
@@ -68,6 +74,7 @@ fn continuous_beats_static_on_ttft() {
             slots: 8,
             kv_pages: 2048,
             page_tokens: 16,
+            ..Default::default()
         },
     )
     .unwrap()
@@ -96,4 +103,97 @@ fn prefill_bucket_selection() {
     let buckets = s.prefill_buckets(1);
     assert!(buckets.contains(&128) && buckets.contains(&256));
     assert_eq!(s.decode_batches(), vec![1, 8]);
+}
+
+// ---------------------------------------------------------------------------
+// Disaggregated serving: token bit-identity across pool and TP configs
+// ---------------------------------------------------------------------------
+
+fn mock_batcher() -> BatcherOptions {
+    BatcherOptions {
+        slots: 4,
+        kv_pages: 1024,
+        page_tokens: 16,
+        ..Default::default()
+    }
+}
+
+fn disagg_spec(tp: usize) -> ServeSpec {
+    ServeSpec {
+        tp,
+        prefill_replicas: 1,
+        decode_replicas: 2,
+        spares: 1,
+        batcher: mock_batcher(),
+        ..ServeSpec::default()
+    }
+}
+
+fn mock_workload(n: usize, rate: f64, seed: u64) -> Workload {
+    Workload::sharegpt_like(WorkloadOptions {
+        num_requests: n,
+        request_rate: rate,
+        max_input_len: 64,
+        max_output_len: 8,
+        vocab: 2048,
+        seed,
+    })
+}
+
+/// Per-request token streams of the single-pool continuous engine —
+/// the reference every disaggregated configuration must reproduce
+/// bit-exactly.
+fn single_pool_streams(w: &Workload) -> HashMap<u64, Vec<i32>> {
+    let report = Engine::new(Box::new(MockBackend::default()), mock_batcher())
+        .unwrap()
+        .run(w)
+        .unwrap();
+    report.outcomes.into_iter().map(|o| (o.id, o.tokens)).collect()
+}
+
+#[test]
+fn disagg_tokens_bit_identical_to_single_pool_across_tp_widths() {
+    let w = mock_workload(20, 30.0, 11);
+    let reference = single_pool_streams(&w);
+    for tp in [1usize, 2, 4] {
+        let report = DisaggRouter::mock(disagg_spec(tp)).unwrap().run(&w, &[]).unwrap();
+        assert_eq!(report.outcomes.len(), reference.len(), "tp={tp}");
+        for o in &report.outcomes {
+            assert_eq!(
+                Some(&o.tokens),
+                reference.get(&o.id),
+                "tp={tp}: request {} token stream diverged from the single-pool engine",
+                o.id
+            );
+        }
+        assert_eq!(report.handoffs, reference.len() as u64, "tp={tp}");
+    }
+}
+
+#[test]
+fn disagg_tokens_survive_decode_crash_and_promotion_bit_identical() {
+    // burst traffic so the decode pool has in-flight work when replica 0
+    // dies; the promoted hot spare restarts the drained continuations
+    let w = mock_workload(24, f64::INFINITY, 13);
+    let reference = single_pool_streams(&w);
+    for tp in [1usize, 2, 4] {
+        let report = DisaggRouter::mock(disagg_spec(tp))
+            .unwrap()
+            .run(&w, &[FailureEvent { replica: 0, at_s: 0.05 }])
+            .unwrap();
+        assert_eq!(report.swaps, 1, "tp={tp}: spare was not promoted");
+        assert!(report.reroutes > 0, "tp={tp}: crash caught no in-flight work");
+        assert_eq!(report.outcomes.len(), reference.len(), "tp={tp}");
+        for o in &report.outcomes {
+            assert_eq!(
+                Some(&o.tokens),
+                reference.get(&o.id),
+                "tp={tp}: request {} re-rolled its stream across the crash",
+                o.id
+            );
+            assert!(o.finish_s >= o.arrival_s);
+        }
+        // every reroute re-pays the KV handoff
+        assert_eq!(report.handoffs, reference.len() as u64 + report.reroutes, "tp={tp}");
+    }
 }

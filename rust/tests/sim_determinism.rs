@@ -23,7 +23,7 @@
 
 use axlearn::composer::mesh_sweep::SWEEP_MESHES;
 use axlearn::composer::PipelineKind;
-use axlearn::distributed::mesh::{MeshOptions, MeshTrainer};
+use axlearn::distributed::mesh::{MeshOptions, MeshSpec, MeshTrainer};
 use axlearn::trainer::backend::{MockTrainBackend, MockTrainBackendOptions, TrainBackend};
 use axlearn::trainer::input::{CorpusKind, SyntheticCorpus};
 use axlearn::trainer::InputPipeline;
@@ -52,13 +52,14 @@ fn opts(
     threads: usize,
 ) -> MeshOptions {
     let (d, p, f, m, e) = shape;
-    let mut o = MeshOptions::for_mesh5(d, p, f, m, e, if p > 1 { MICRO } else { 1 })
-        .with_schedule(kind)
-        .with_sim_threads(threads);
+    let mut spec = MeshSpec::axes(&[("data", d), ("pipeline", p), ("fsdp", f), ("model", m), ("expert", e)])
+        .microbatches(if p > 1 { MICRO } else { 1 })
+        .schedule(kind)
+        .sim_threads(threads);
     if e > 1 {
-        o = o.with_moe(8, 2, 1.25);
+        spec = spec.moe(8, 2, 1.25);
     }
-    o
+    spec.build()
 }
 
 /// Everything a run can observably produce: per-step loss bits, final

@@ -17,7 +17,7 @@ use axlearn::composer::{
 };
 use axlearn::config::mesh_rules::paper_appendix_a_rules;
 use axlearn::config::registry::trainer_for_preset;
-use axlearn::distributed::mesh::{mesh_trainer_from_plan, MeshOptions, MeshTrainer};
+use axlearn::distributed::mesh::{mesh_trainer_from_plan, MeshSpec, MeshTrainer};
 use axlearn::perfmodel::comms::Collective;
 use axlearn::perfmodel::Strategy;
 use axlearn::trainer::backend::{MockTrainBackend, MockTrainBackendOptions, TrainBackend};
@@ -337,7 +337,7 @@ fn the_verify_knob_gates_plan_construction() {
 #[test]
 fn mesh_trainer_verifies_its_lowered_schedule_at_init() {
     let mut mesh =
-        MeshTrainer::new(mock(), MeshOptions::for_mesh5(2, 2, 2, 1, 2, 4)).unwrap();
+        MeshTrainer::new(mock(), MeshSpec::axes(&[("data", 2), ("pipeline", 2), ("fsdp", 2), ("model", 1), ("expert", 2)]).microbatches(4).build()).unwrap();
     // init runs verify_lowered under the default-on knob; a diagnostic
     // would surface here as an error before any step executes
     mesh.init(7).unwrap();
